@@ -1,0 +1,99 @@
+//! Policy sweep: the full cross-product of thief policy × victim policy
+//! × waiting-time gate on the headline Cholesky workload — the
+//! design-space exploration behind Figs. 2, 5 and 6, in one table.
+//!
+//!     cargo run --release --example policy_sweep [seeds]
+
+use std::sync::Arc;
+
+use parsteal::comm::LinkModel;
+use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::stats::Summary;
+use parsteal::workloads::{CholeskyGraph, CholeskyParams};
+
+fn main() {
+    let seeds: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let nodes = 8;
+    let graph = || {
+        Arc::new(CholeskyGraph::new(CholeskyParams {
+            tiles: 40,
+            tile_size: 50,
+            nodes,
+            dense_fraction: 0.5,
+            seed: 0xC404,
+            all_dense: false,
+        }))
+    };
+    let run = |migrate: MigrateConfig, seed: u64| {
+        Simulator::new(
+            graph(),
+            SimConfig {
+                workers_per_node: 8,
+                link: LinkModel::cluster(),
+                seed,
+                max_events: u64::MAX,
+                record_polls: false,
+            },
+            CostModel::default_calibrated(),
+            migrate,
+            50,
+        )
+        .run()
+    };
+
+    // baseline
+    let base: Vec<f64> = (0..seeds)
+        .map(|s| run(MigrateConfig::disabled(), 100 + s).makespan_us / 1e6)
+        .collect();
+    let base_mean = Summary::of(&base).mean;
+    println!(
+        "No-Steal baseline: {:.3}s mean over {} seeds ({} nodes x 8 workers, 40² tiles of 50²)\n",
+        base_mean, seeds, nodes
+    );
+    println!(
+        "{:<18} {:<10} {:<8} {:>9} {:>9} {:>9} {:>8}",
+        "thief", "victim", "gate", "mean(s)", "sd", "speedup", "steal%"
+    );
+
+    for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
+        for victim in [
+            VictimPolicy::Single,
+            VictimPolicy::Chunk(4),
+            VictimPolicy::Half,
+        ] {
+            for gate in [false, true] {
+                let mc = MigrateConfig {
+                    enabled: true,
+                    thief,
+                    victim,
+                    use_waiting_time: gate,
+                    poll_interval_us: 100.0,
+                    max_inflight: 1,
+            migrate_overhead_us: 150.0,
+                };
+                let mut times = Vec::new();
+                let mut pct = 0.0;
+                for s in 0..seeds {
+                    let r = run(mc, 100 + s);
+                    times.push(r.makespan_us / 1e6);
+                    pct += r.total_steals().success_pct();
+                }
+                let su = Summary::of(&times);
+                println!(
+                    "{:<18} {:<10} {:<8} {:>9.3} {:>9.3} {:>9.3} {:>7.1}%",
+                    format!("{thief:?}"),
+                    victim.label(),
+                    if gate { "wait" } else { "-" },
+                    su.mean,
+                    su.std,
+                    base_mean / su.mean,
+                    pct / seeds as f64
+                );
+            }
+        }
+    }
+}

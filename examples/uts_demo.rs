@@ -1,0 +1,98 @@
+//! UTS demo: the paper's second benchmark under every victim policy.
+//! Without stealing the entire tree executes on node 0 (child-follows-
+//! parent placement); each policy is then compared on makespan and steal
+//! traffic.
+//!
+//!     cargo run --release --example uts_demo
+
+use std::sync::Arc;
+
+use parsteal::comm::LinkModel;
+use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::workloads::{UtsGraph, UtsParams};
+
+fn main() {
+    let params = UtsParams {
+        b0: 120,
+        m: 5,
+        q: 0.200014,
+        g: 500_000.0, // 0.5 ms per tree node under the default cost model
+        seed: 0x075,
+        nodes: 4,
+        max_depth: 20,
+    };
+    let graph = Arc::new(UtsGraph::new(params));
+    println!(
+        "UTS b0={} m={} q={} g={:.0}: tree of {} nodes, 4 runtime nodes x 8 workers\n",
+        params.b0,
+        params.m,
+        params.q,
+        params.g,
+        graph.tree_size(100_000_000)
+    );
+
+    let cells: Vec<(&str, MigrateConfig)> = vec![
+        ("No-Steal", MigrateConfig::disabled()),
+        (
+            "Chunk(4)",
+            MigrateConfig {
+                victim: VictimPolicy::Chunk(4),
+                ..Default::default()
+            },
+        ),
+        (
+            "Half",
+            MigrateConfig {
+                victim: VictimPolicy::Half,
+                ..Default::default()
+            },
+        ),
+        (
+            "Single",
+            MigrateConfig {
+                victim: VictimPolicy::Single,
+                ..Default::default()
+            },
+        ),
+        (
+            "Single/ready-only",
+            MigrateConfig {
+                victim: VictimPolicy::Single,
+                thief: ThiefPolicy::ReadyOnly,
+                ..Default::default()
+            },
+        ),
+    ];
+
+    for (label, migrate) in cells {
+        let report = Simulator::new(
+            graph.clone(),
+            SimConfig {
+                workers_per_node: 8,
+                link: LinkModel::cluster(),
+                seed: 11,
+                max_events: u64::MAX,
+                record_polls: false,
+            },
+            CostModel::default_calibrated(),
+            migrate,
+            0,
+        )
+        .run();
+        let s = report.total_steals();
+        println!(
+            "{label:<18} makespan {:>8.2}s  per-node {:?}  steals {}/{} ({} tasks)",
+            report.makespan_us / 1e6,
+            report
+                .nodes
+                .iter()
+                .map(|n| n.tasks_executed)
+                .collect::<Vec<_>>(),
+            s.successful_steals,
+            s.requests_sent,
+            s.tasks_migrated
+        );
+    }
+    println!("\n(Half ≈ Single ≫ No-Steal: with child-follows-parent placement no new\n work ever appears on a starving node, so stealing is the only balancer)");
+}

@@ -1,0 +1,4 @@
+"""Build-time compile package: L1 Pallas kernels + L2 model + AOT lowering.
+
+Runs once under `make artifacts`; never imported on the request path.
+"""

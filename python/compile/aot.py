@@ -1,0 +1,96 @@
+"""AOT pipeline: lower every (op, tile-size) pair to HLO *text*.
+
+HLO text — NOT `lowered.compiler_ir(...).serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage (invoked by `make artifacts`, from python/):
+
+    python -m compile.aot --outdir ../artifacts [--sizes 8,16,32,...]
+
+Emits artifacts/<op>_n<size>_f64.hlo.txt per entry plus manifest.json
+describing every artifact (op, tile size, dtype, input/output arity) for
+the Rust runtime loader.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import OPS
+
+# Tile sizes the Rust side needs: {8,16,24,32} for tests + the end-to-end
+# example, {10,20,30,40,50} for the Table 1 granularity sweep and the DES
+# cost-model calibration.
+DEFAULT_SIZES = (8, 10, 16, 20, 24, 30, 32, 40, 50)
+DTYPE = jnp.float64
+DTYPE_TAG = "f64"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_op(op: str, n: int) -> str:
+    fn, arity, _ = OPS[op]
+    spec = jax.ShapeDtypeStruct((n, n), DTYPE)
+    return to_hlo_text(jax.jit(fn).lower(*([spec] * arity)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in DEFAULT_SIZES))
+    ap.add_argument("--ops", default=",".join(OPS))
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    ops = [o for o in args.ops.split(",") if o]
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"dtype": DTYPE_TAG, "entries": []}
+    for op in ops:
+        _, arity, n_out = OPS[op]
+        for n in sizes:
+            name = f"{op}_n{n}_{DTYPE_TAG}"
+            path = os.path.join(args.outdir, name + ".hlo.txt")
+            text = lower_op(op, n)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "name": name,
+                    "op": op,
+                    "tile": n,
+                    "dtype": DTYPE_TAG,
+                    "inputs": arity,
+                    "outputs": n_out,
+                    "file": os.path.basename(path),
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+            print(f"  lowered {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"wrote {len(manifest['entries'])} artifacts + manifest.json to {args.outdir}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

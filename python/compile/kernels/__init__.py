@@ -1,0 +1,19 @@
+"""L1: Pallas tile kernels for the sparse Cholesky workload.
+
+Every kernel here is authored for TPU structure but lowered with
+`interpret=True` so the emitted HLO runs on any PJRT backend (the Rust
+coordinator uses the CPU plugin). Correctness oracles live in `ref.py`.
+"""
+
+import jax
+
+# The paper's workload uses 64-bit elements throughout; keep f64 enabled
+# for every consumer of this package (kernels, model, aot, tests).
+jax.config.update("jax_enable_x64", True)
+
+from .gemm import gemm  # noqa: E402
+from .potrf import potrf  # noqa: E402
+from .syrk import syrk  # noqa: E402
+from .trsm import trsm  # noqa: E402
+
+__all__ = ["gemm", "syrk", "trsm", "potrf"]

@@ -1,0 +1,79 @@
+"""Pallas GEMM trailing-update kernel: C <- C - A @ B^T.
+
+This is the compute hot-spot of the paper's sparse Cholesky workload —
+GEMM tasks dominate the DAG (O(T^3) of them vs O(T^2) TRSM/SYRK and O(T)
+POTRF for a T x T tile matrix), so this kernel is the one the performance
+pass cares about.
+
+Structure (TPU idiom, see DESIGN.md §Hardware-Adaptation):
+  * grid over the K dimension; each step streams one (m, bk) panel of A
+    and one (n, bk) panel of B from HBM into VMEM while the MXU consumes
+    the previous one (double-buffered by the Pallas pipeline machinery);
+  * the output block stays resident in VMEM across the whole K loop and
+    is initialized from C at k == 0 (accumulator-in-VMEM pattern);
+  * `interpret=True` everywhere — the CPU PJRT plugin cannot execute
+    Mosaic custom-calls; real-TPU numbers are estimated analytically in
+    DESIGN.md §Perf from the BlockSpec footprint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget per operand block (f32 elements). 128 x 128 x 4 B = 64 KiB
+# per block; three resident operand blocks + accumulator stay well under
+# the ~16 MiB VMEM of a TPU core even at f64.
+MAX_BLOCK_K = 128
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One K-step: o += (k==0 ? c : 0) - a @ b^T."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = o_ref[...] - jax.lax.dot_general(
+        a,
+        b,
+        # contract A's K axis (1) with B's K axis (1): (m, bk) x (n, bk) -> (m, n)
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def gemm(c: jax.Array, a: jax.Array, b: jax.Array, *, block_k: int | None = None) -> jax.Array:
+    """Tile update C - A @ B^T as a K-blocked Pallas kernel.
+
+    Shapes: c (m, n), a (m, k), b (n, k). Returns (m, n).
+    """
+    m, n = c.shape
+    kk = a.shape[1]
+    if block_k is None:
+        block_k = min(kk, MAX_BLOCK_K)
+    # Pad K so the grid divides evenly; zero panels contribute nothing.
+    pad = (-kk) % block_k
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad)))
+        kk += pad
+    nk = kk // block_k
+
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda k: (0, k)),
+            pl.BlockSpec((n, block_k), lambda k: (0, k)),
+            pl.BlockSpec((m, n), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(a, b, c)

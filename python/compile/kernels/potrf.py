@@ -1,0 +1,50 @@
+"""Pallas POTRF kernel: L = chol(A) for one SPD diagonal tile.
+
+Right-looking unblocked Cholesky with *masked full-width updates*: at
+column j the trailing submatrix update is expressed as a rank-1 outer
+product over the full (n, n) tile with an iota mask selecting rows > j
+and cols > j. All shapes are static, so the loop body is a fixed VPU/MXU
+pattern; the tile stays resident in VMEM for the whole factorization.
+
+There is exactly one POTRF per panel in the Cholesky DAG (O(T) of them),
+so this kernel is latency- not throughput-critical; the masked-update
+form is chosen for lowering simplicity over asymptotic efficiency.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _potrf_kernel(a_ref, o_ref):
+    a = a_ref[...]
+    n = a.shape[0]
+    rows = jax.lax.iota(jnp.int32, n)  # row indices
+
+    def body(j, m):
+        djj = jax.lax.dynamic_slice(m, (j, j), (1, 1))[0, 0]
+        d = jnp.sqrt(djj)
+        colj = jax.lax.dynamic_slice_in_dim(m, j, 1, axis=1)[:, 0]
+        below = jnp.where(rows > j, colj / d, jnp.zeros_like(colj))
+        # Final column j: diagonal = d, below-diagonal = scaled column.
+        newcol = below + jnp.where(rows == j, d, jnp.zeros_like(colj))
+        m = jax.lax.dynamic_update_slice_in_dim(m, newcol[:, None], j, axis=1)
+        # Trailing update: m[i, k] -= l[i, j] * l[k, j] for i, k > j.
+        # `below` is already zero for rows <= j; mask columns <= j too so
+        # the freshly written column j is untouched.
+        colmask = (rows > j)[None, :]
+        return m - jnp.where(colmask, jnp.outer(below, below), jnp.zeros_like(m))
+
+    m = jax.lax.fori_loop(0, n, body, a)
+    o_ref[...] = jnp.tril(m)
+
+
+@jax.jit
+def potrf(a: jax.Array) -> jax.Array:
+    """Lower Cholesky factor of an SPD tile. Shape: (n, n) -> (n, n)."""
+    n = a.shape[0]
+    return pl.pallas_call(
+        _potrf_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,
+    )(a)

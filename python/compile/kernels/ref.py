@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas tile kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match the corresponding function here (pytest enforces it).
+All operate on a single tile (the unit of work in the sparse tiled
+Cholesky workload of the paper) and mirror the BLAS/LAPACK calls PaRSEC's
+DPLASMA Cholesky issues per task type:
+
+  POTRF:  L = chol(A)                (diagonal tile factorization)
+  TRSM:   X = B @ inv(L)^T           (panel solve against the diag tile)
+  SYRK:   C = C - A @ A^T            (symmetric rank-k trailing update)
+  GEMM:   C = C - A @ B^T            (general trailing update)
+"""
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def ref_potrf(a: jax.Array) -> jax.Array:
+    """Lower-triangular Cholesky factor of an SPD tile."""
+    return jnp.linalg.cholesky(a)
+
+
+def ref_trsm(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve X * L^T = B for X (L lower triangular, non-unit diagonal)."""
+    # X = B @ inv(L)^T  <=>  L X^T = B^T (forward substitution)
+    return jsl.solve_triangular(l, b.T, lower=True).T
+
+
+def ref_syrk(c: jax.Array, a: jax.Array) -> jax.Array:
+    """Symmetric rank-k update C - A @ A^T (full matrix; symmetry implicit)."""
+    return c - a @ a.T
+
+
+def ref_gemm(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Trailing-matrix update C - A @ B^T."""
+    return c - a @ b.T
+
+
+def ref_potrf_trsm(a: jax.Array, b: jax.Array):
+    """Fused diagonal factorization + one panel solve.
+
+    Returns (L, X) with L = chol(A) and X = B inv(L)^T. Used by the fused
+    artifact that collapses the POTRF->TRSM dependency chain into one
+    executable when both tiles live on the same node.
+    """
+    l = ref_potrf(a)
+    return l, ref_trsm(l, b)
+
+
+def spd(n: int, key: jax.Array, dtype=jnp.float64) -> jax.Array:
+    """Random symmetric positive-definite tile (test helper)."""
+    m = jax.random.normal(key, (n, n), dtype=dtype)
+    return m @ m.T + n * jnp.eye(n, dtype=dtype)

@@ -1,0 +1,58 @@
+"""Pallas SYRK kernel: C <- C - A @ A^T (symmetric rank-k trailing update).
+
+Same K-streaming / VMEM-resident-accumulator structure as `gemm.py`; A is
+passed once and indexed twice by the BlockSpecs, so HBM traffic per K-step
+is a single (n, bk) panel. The full (n, n) result is produced — the
+Cholesky DAG only ever reads the lower triangle, and keeping the write
+dense avoids a masked store on the MXU path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import MAX_BLOCK_K
+
+
+def _syrk_kernel(a_ref, c_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    a = a_ref[...]
+    o_ref[...] = o_ref[...] - jax.lax.dot_general(
+        a,
+        a,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def syrk(c: jax.Array, a: jax.Array, *, block_k: int | None = None) -> jax.Array:
+    """Tile update C - A @ A^T. Shapes: c (n, n), a (n, k)."""
+    n = c.shape[0]
+    kk = a.shape[1]
+    if block_k is None:
+        block_k = min(kk, MAX_BLOCK_K)
+    pad = (-kk) % block_k
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        kk += pad
+    nk = kk // block_k
+
+    return pl.pallas_call(
+        _syrk_kernel,
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((n, block_k), lambda k: (0, k)),
+            pl.BlockSpec((n, n), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, n), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), c.dtype),
+        interpret=True,
+    )(a, c)

@@ -1,0 +1,50 @@
+"""Pallas TRSM kernel: solve X * L^T = B (right-side, lower-triangular,
+transposed — the DPLASMA Cholesky panel solve).
+
+The solve is a forward substitution over the columns of X:
+
+    X[:, j] = (B[:, j] - X[:, :j] @ L[j, :j]) / L[j, j]
+
+The sequential j-loop is inherent to the operation, so the kernel holds
+the whole (m, n) X in VMEM (tiles are <= 128^2, comfortably resident) and
+expresses each step as a full-width masked matvec — a static-shape MXU
+op — rather than growing dynamic slices. On TPU this trades O(n) small
+matvecs for MXU-friendly fixed shapes; on the interpret path it keeps
+everything traceable.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trsm_kernel(l_ref, b_ref, o_ref):
+    l = l_ref[...]
+    b = b_ref[...]
+    n = l.shape[0]
+    cols = jax.lax.iota(jnp.int32, n)
+
+    def body(j, x):
+        lrow = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=0)[0]  # L[j, :]
+        # Mask to the strictly-lower part L[j, :j]; the rest of the row is
+        # junk above the diagonal and must not contribute.
+        lrow_masked = jnp.where(cols < j, lrow, jnp.zeros_like(lrow))
+        acc = x @ lrow_masked  # (m,) = X[:, :j] @ L[j, :j]
+        bj = jax.lax.dynamic_slice_in_dim(b, j, 1, axis=1)[:, 0]
+        diag = jax.lax.dynamic_slice_in_dim(lrow, j, 1, axis=0)[0]
+        xj = (bj - acc) / diag
+        return jax.lax.dynamic_update_slice_in_dim(x, xj[:, None], j, axis=1)
+
+    x0 = jnp.zeros_like(b)
+    o_ref[...] = jax.lax.fori_loop(0, n, body, x0)
+
+
+@jax.jit
+def trsm(l: jax.Array, b: jax.Array) -> jax.Array:
+    """X = B @ inv(L)^T. Shapes: l (n, n) lower-triangular, b (m, n)."""
+    m, n = b.shape
+    return pl.pallas_call(
+        _trsm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), b.dtype),
+        interpret=True,
+    )(l, b)

@@ -1,0 +1,83 @@
+"""L2: the JAX compute graph for the paper's workload tasks.
+
+The sparse tiled Cholesky DAG has four task classes (POTRF, TRSM, SYRK,
+GEMM — §4.1 of the paper). Each task body is one of the functions below,
+built on the L1 Pallas kernels, plus a fused POTRF+TRSM variant that
+collapses the panel-head dependency chain when both tiles are resident on
+the same node.
+
+These functions are lowered ONCE by `aot.py` into per-(op, tile-size) HLO
+text artifacts; the Rust coordinator loads and executes them via PJRT and
+Python never appears on the request path.
+"""
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as _gemm
+from .kernels import potrf as _potrf
+from .kernels import syrk as _syrk
+from .kernels import trsm as _trsm
+
+
+def potrf_step(a: jax.Array) -> Tuple[jax.Array]:
+    """POTRF task body: factorize a diagonal tile."""
+    return (_potrf(a),)
+
+
+def trsm_step(l: jax.Array, b: jax.Array) -> Tuple[jax.Array]:
+    """TRSM task body: panel solve B <- B inv(L)^T."""
+    return (_trsm(l, b),)
+
+
+def syrk_step(c: jax.Array, a: jax.Array) -> Tuple[jax.Array]:
+    """SYRK task body: diagonal trailing update C <- C - A A^T."""
+    return (_syrk(c, a),)
+
+
+def gemm_step(c: jax.Array, a: jax.Array, b: jax.Array) -> Tuple[jax.Array]:
+    """GEMM task body: off-diagonal trailing update C <- C - A B^T."""
+    return (_gemm(c, a, b),)
+
+
+def potrf_trsm_step(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fused POTRF + one TRSM (ablation artifact; see DESIGN.md)."""
+    l = _potrf(a)
+    return (l, _trsm(l, b))
+
+
+#: op name -> (fn, number of tile inputs, number of tile outputs)
+OPS = {
+    "potrf": (potrf_step, 1, 1),
+    "trsm": (trsm_step, 2, 1),
+    "syrk": (syrk_step, 2, 1),
+    "gemm": (gemm_step, 3, 1),
+    "potrf_trsm": (potrf_trsm_step, 2, 2),
+}
+
+
+def dense_block_cholesky(tiles: jax.Array) -> jax.Array:
+    """Blocked right-looking Cholesky over a (T, T, n, n) tile array.
+
+    Pure L2 composition of the task bodies in DAG order — the same
+    schedule the Rust coordinator executes distributed. Used by tests to
+    validate that the per-tile kernels compose into a correct global
+    factorization, and as the oracle for the end-to-end example.
+    Returns the (T, T, n, n) lower-triangular tile factor.
+    """
+    t = tiles.shape[0]
+    tiles = [[tiles[i, j] for j in range(t)] for i in range(t)]
+    for k in range(t):
+        (tiles[k][k],) = potrf_step(tiles[k][k])
+        for i in range(k + 1, t):
+            (tiles[i][k],) = trsm_step(tiles[k][k], tiles[i][k])
+        for i in range(k + 1, t):
+            (tiles[i][i],) = syrk_step(tiles[i][i], tiles[i][k])
+            for j in range(k + 1, i):
+                (tiles[i][j],) = gemm_step(tiles[i][j], tiles[i][k], tiles[j][k])
+    z = jnp.zeros_like(tiles[0][0])
+    return jnp.stack(
+        [jnp.stack([tiles[i][j] if j <= i else z for j in range(t)]) for i in range(t)]
+    )

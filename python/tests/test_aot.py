@@ -1,0 +1,51 @@
+"""AOT pipeline tests: lowering produces parseable HLO text with the
+layout the Rust loader expects (f64 params, tuple return)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile.aot import lower_op, to_hlo_text
+from compile.model import OPS
+
+
+@pytest.mark.parametrize("op", list(OPS))
+def test_lower_op_emits_hlo_text(op):
+    text = lower_op(op, 8)
+    assert text.startswith("HloModule")
+    assert "f64[8,8]" in text
+    # return_tuple=True: root must be a tuple for rust's to_tuple().
+    assert "->(" in text.replace(" ", "")
+
+
+def test_lowered_gemm_param_count():
+    text = lower_op("gemm", 8)
+    # entry computation signature has exactly 3 f64[8,8] params
+    header = text.splitlines()[0]
+    assert header.count("f64[8,8]") == 4  # 3 inputs + 1 tuple output
+
+
+def test_manifest_written(tmp_path):
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(tmp_path),
+         "--sizes", "8", "--ops", "gemm,potrf"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["dtype"] == "f64"
+    assert {e["op"] for e in manifest["entries"]} == {"gemm", "potrf"}
+    for e in manifest["entries"]:
+        assert (tmp_path / e["file"]).exists()
+        assert e["inputs"] == OPS[e["op"]][1]
+
+
+def test_hlo_text_is_deterministic():
+    """Two lowerings of the same op must hash identically (cache key)."""
+    assert lower_op("syrk", 8) == lower_op("syrk", 8)

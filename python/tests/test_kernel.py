@@ -1,0 +1,191 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle in `ref.py` across a
+hypothesis sweep of shapes and dtypes, plus fixed cases at the exact tile
+sizes the AOT pipeline emits (8..50).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, potrf, syrk, trsm
+from compile.kernels.ref import (
+    ref_gemm,
+    ref_potrf,
+    ref_potrf_trsm,
+    ref_syrk,
+    ref_trsm,
+    spd,
+)
+
+AOT_SIZES = (8, 10, 16, 20, 24, 30, 32, 40, 50)
+DTYPES = (jnp.float32, jnp.float64)
+
+
+def tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == jnp.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------- GEMM
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    k=st.integers(1, 40),
+    dti=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_matches_ref(m, n, k, dti, seed):
+    dtype = DTYPES[dti]
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    c, a, b = rand(k1, (m, n), dtype), rand(k2, (m, k), dtype), rand(k3, (n, k), dtype)
+    np.testing.assert_allclose(gemm(c, a, b), ref_gemm(c, a, b), **tol(dtype))
+
+
+@pytest.mark.parametrize("n", AOT_SIZES)
+def test_gemm_aot_sizes(n):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n), 3)
+    c, a, b = (rand(k, (n, n), jnp.float64) for k in (k1, k2, k3))
+    np.testing.assert_allclose(gemm(c, a, b), ref_gemm(c, a, b), rtol=1e-11)
+
+
+@pytest.mark.parametrize("block_k", [1, 3, 8, 128])
+def test_gemm_block_k_invariance(block_k):
+    """K-blocking (incl. padding path) must not change the result."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    c = rand(k1, (17, 13), jnp.float64)
+    a = rand(k2, (17, 29), jnp.float64)
+    b = rand(k3, (13, 29), jnp.float64)
+    np.testing.assert_allclose(
+        gemm(c, a, b, block_k=block_k), ref_gemm(c, a, b), rtol=1e-11
+    )
+
+
+def test_gemm_zero_update():
+    """A == 0 must leave C unchanged (sparse-tile no-op path)."""
+    c = rand(jax.random.PRNGKey(2), (16, 16), jnp.float64)
+    z = jnp.zeros((16, 8), jnp.float64)
+    np.testing.assert_allclose(gemm(c, z, jnp.ones((16, 8))), c, rtol=1e-12)
+
+
+# ---------------------------------------------------------------- SYRK
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    k=st.integers(1, 40),
+    dti=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_syrk_matches_ref(n, k, dti, seed):
+    dtype = DTYPES[dti]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    c, a = rand(k1, (n, n), dtype), rand(k2, (n, k), dtype)
+    np.testing.assert_allclose(syrk(c, a), ref_syrk(c, a), **tol(dtype))
+
+
+def test_syrk_preserves_symmetry():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    c0 = rand(k1, (24, 24), jnp.float64)
+    c = c0 + c0.T
+    out = syrk(c, rand(k2, (24, 12), jnp.float64))
+    np.testing.assert_allclose(out, out.T, rtol=1e-11)
+
+
+# ---------------------------------------------------------------- TRSM
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    n=st.integers(1, 32),
+    dti=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_trsm_matches_ref(m, n, dti, seed):
+    dtype = DTYPES[dti]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    l = ref_potrf(spd(n, k1, dtype))
+    b = rand(k2, (m, n), dtype)
+    np.testing.assert_allclose(trsm(l, b), ref_trsm(l, b), **tol(dtype))
+
+
+@pytest.mark.parametrize("n", AOT_SIZES)
+def test_trsm_roundtrip(n):
+    """(B inv(L)^T) L^T == B — the algebraic contract the DAG relies on."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n))
+    l = ref_potrf(spd(n, k1))
+    b = rand(k2, (n, n), jnp.float64)
+    x = trsm(l, b)
+    np.testing.assert_allclose(x @ l.T, b, rtol=1e-8, atol=1e-8)
+
+
+def test_trsm_identity():
+    b = rand(jax.random.PRNGKey(4), (8, 8), jnp.float64)
+    np.testing.assert_allclose(trsm(jnp.eye(8), b), b, rtol=1e-12)
+
+
+def test_trsm_ignores_upper_junk():
+    """Entries above L's diagonal must not affect the solve."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    l = ref_potrf(spd(12, k1))
+    junk = l + jnp.triu(jnp.full((12, 12), 7.0), k=1)
+    b = rand(k2, (9, 12), jnp.float64)
+    np.testing.assert_allclose(trsm(junk, b), trsm(l, b), rtol=1e-12)
+
+
+# --------------------------------------------------------------- POTRF
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 40), dti=st.integers(0, 1), seed=st.integers(0, 2**31 - 1))
+def test_potrf_matches_ref(n, dti, seed):
+    dtype = DTYPES[dti]
+    a = spd(n, jax.random.PRNGKey(seed), dtype)
+    np.testing.assert_allclose(potrf(a), ref_potrf(a), **tol(dtype))
+
+
+@pytest.mark.parametrize("n", AOT_SIZES)
+def test_potrf_reconstructs(n):
+    """L L^T == A at every AOT tile size."""
+    a = spd(n, jax.random.PRNGKey(n * 7 + 1))
+    l = potrf(a)
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-9, atol=1e-9)
+    # strictly lower-triangular output
+    np.testing.assert_allclose(l, jnp.tril(l), rtol=0, atol=0)
+
+
+def test_potrf_diagonal_matrix():
+    d = jnp.diag(jnp.arange(1.0, 9.0))
+    np.testing.assert_allclose(potrf(d), jnp.diag(jnp.sqrt(jnp.arange(1.0, 9.0))), rtol=1e-12)
+
+
+def test_potrf_1x1():
+    np.testing.assert_allclose(potrf(jnp.array([[4.0]])), jnp.array([[2.0]]), rtol=1e-12)
+
+
+# ------------------------------------------------------ fused POTRF+TRSM
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 24), m=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+def test_fused_potrf_trsm(n, m, seed):
+    from compile.model import potrf_trsm_step
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = spd(n, k1)
+    b = rand(k2, (m, n), jnp.float64)
+    l, x = potrf_trsm_step(a, b)
+    rl, rx = ref_potrf_trsm(a, b)
+    np.testing.assert_allclose(l, rl, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(x, rx, rtol=1e-8, atol=1e-8)

@@ -1,0 +1,64 @@
+"""L2 composition tests: task bodies compose into a correct global
+factorization in DAG order, exactly as the Rust coordinator executes them."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import spd
+from compile.model import OPS, dense_block_cholesky
+
+
+def tiled_spd(t, n, seed):
+    big = spd(t * n, jax.random.PRNGKey(seed))
+    return big, big.reshape(t, n, t, n).transpose(0, 2, 1, 3)
+
+
+def assemble(tiles):
+    t, _, n, _ = tiles.shape
+    return np.array(tiles.transpose(0, 2, 1, 3).reshape(t * n, t * n))
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(1, 4), n=st.integers(1, 12), seed=st.integers(0, 10_000))
+def test_block_cholesky_matches_lapack(t, n, seed):
+    big, tiles = tiled_spd(t, n, seed)
+    lt = dense_block_cholesky(tiles)
+    np.testing.assert_allclose(
+        assemble(lt), np.linalg.cholesky(np.array(big)), rtol=1e-8, atol=1e-8
+    )
+
+
+@pytest.mark.parametrize("t,n", [(2, 8), (3, 8), (4, 4), (5, 10)])
+def test_block_cholesky_reconstructs(t, n):
+    big, tiles = tiled_spd(t, n, seed=t * 100 + n)
+    l = assemble(dense_block_cholesky(tiles))
+    np.testing.assert_allclose(l @ l.T, np.array(big), rtol=1e-8, atol=1e-8)
+
+
+def test_ops_registry_arity():
+    """The manifest arities the Rust loader trusts must match the fns."""
+    import inspect
+
+    for name, (fn, arity, n_out) in OPS.items():
+        assert len(inspect.signature(fn).parameters) == arity, name
+        spec = jax.ShapeDtypeStruct((4, 4), jnp.float64)
+        a = spd(4, jax.random.PRNGKey(0))
+        args = [a if i == 0 else jnp.eye(4) * 2 + 1e-3 for i in range(arity)]
+        out = fn(*args)
+        assert isinstance(out, tuple) and len(out) == n_out, name
+
+
+def test_task_bodies_are_pure():
+    """Same inputs -> same outputs (needed for task recreation on steal)."""
+    from compile.model import gemm_step
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    c = jax.random.normal(k1, (16, 16), jnp.float64)
+    a = jax.random.normal(k2, (16, 16), jnp.float64)
+    b = jax.random.normal(k3, (16, 16), jnp.float64)
+    (o1,) = gemm_step(c, a, b)
+    (o2,) = gemm_step(c, a, b)
+    np.testing.assert_array_equal(np.array(o1), np.array(o2))

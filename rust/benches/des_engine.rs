@@ -1,0 +1,61 @@
+//! DES throughput: events/second on the headline Cholesky workload.
+//! §Perf target: ≥ ~1M events/s so `figure all` stays in minutes.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use parsteal::comm::LinkModel;
+use parsteal::migrate::MigrateConfig;
+use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::util::bench::fmt_ns;
+use parsteal::workloads::{CholeskyGraph, CholeskyParams};
+
+fn run_once(tiles: u32, steal: bool, record_polls: bool) -> (u64, f64) {
+    let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+        tiles,
+        tile_size: 50,
+        nodes: 4,
+        ..Default::default()
+    }));
+    let migrate = if steal {
+        MigrateConfig::default()
+    } else {
+        MigrateConfig::disabled()
+    };
+    let t0 = Instant::now();
+    let report = Simulator::new(
+        graph,
+        SimConfig {
+            workers_per_node: 8,
+            link: LinkModel::cluster(),
+            seed: 1,
+            max_events: u64::MAX,
+            record_polls,
+        },
+        CostModel::default_calibrated(),
+        migrate,
+        50,
+    )
+    .run();
+    (report.events, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("== DES engine ==");
+    for (tiles, steal, polls) in [
+        (32u32, false, false),
+        (32, true, false),
+        (32, true, true),
+        (64, true, false),
+    ] {
+        // a couple of warm runs then measure
+        run_once(tiles, steal, polls);
+        let (events, secs) = run_once(tiles, steal, polls);
+        let rate = events as f64 / secs;
+        println!(
+            "tiles={tiles:<3} steal={steal:<5} polls={polls:<5}  {events:>9} events in {}  ({:.2}M events/s)",
+            fmt_ns(secs * 1e9),
+            rate / 1e6
+        );
+    }
+}

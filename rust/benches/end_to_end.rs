@@ -1,0 +1,91 @@
+//! End-to-end benches mirroring the paper's Table 1 rows: sparse
+//! Cholesky makespan per tile size, No-Steal vs Single, on the DES with
+//! the calibrated cost model — plus one real-mode (threaded) run to
+//! check the coordinator itself is not the bottleneck.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use parsteal::comm::LinkModel;
+use parsteal::migrate::MigrateConfig;
+use parsteal::node::{Cluster, ClusterConfig, NullExecutor};
+use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::workloads::{CholeskyGraph, CholeskyParams};
+
+fn sim_run(tiles: u32, tile_size: u32, steal: bool) -> (f64, f64) {
+    let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+        tiles,
+        tile_size,
+        nodes: 4,
+        ..Default::default()
+    }));
+    let migrate = if steal {
+        MigrateConfig::default()
+    } else {
+        MigrateConfig::disabled()
+    };
+    let cost = CostModel::load_or_default(std::path::Path::new("artifacts/costmodel.json"));
+    let t0 = Instant::now();
+    let report = Simulator::new(
+        graph,
+        SimConfig {
+            workers_per_node: 8,
+            link: LinkModel::cluster(),
+            seed: 3,
+            max_events: u64::MAX,
+            record_polls: false,
+        },
+        cost,
+        migrate,
+        tile_size,
+    )
+    .run();
+    (report.makespan_us / 1e6, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("== end to end (Table 1 shape: virtual makespan per tile size) ==");
+    println!(
+        "{:<10} {:>12} {:>12} {:>9} {:>10}",
+        "tile", "No-Steal(s)", "Single(s)", "speedup", "bench-wall"
+    );
+    for tile_size in [10u32, 20, 30, 40, 50] {
+        let (base, w1) = sim_run(48, tile_size, false);
+        let (single, w2) = sim_run(48, tile_size, true);
+        println!(
+            "{:<10} {:>12.3} {:>12.3} {:>9.3} {:>9.1}s",
+            format!("{tile_size}x{tile_size}"),
+            base,
+            single,
+            base / single,
+            w1 + w2
+        );
+    }
+
+    println!("\n== real-mode coordinator overhead (NullExecutor, protocol only) ==");
+    let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+        tiles: 24,
+        tile_size: 8,
+        nodes: 4,
+        ..Default::default()
+    }));
+    let t0 = Instant::now();
+    let report = Cluster::run(
+        graph,
+        ClusterConfig {
+            workers_per_node: 2,
+            link: LinkModel::ideal(),
+            migrate: MigrateConfig::default(),
+            seed: 1,
+            record_polls: false,
+        },
+        Arc::new(NullExecutor),
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} tasks through the full runtime in {:.3}s ({:.0} tasks/s incl. termination detection)",
+        report.tasks_total_executed(),
+        wall,
+        report.tasks_total_executed() as f64 / wall
+    );
+}

@@ -1,0 +1,58 @@
+//! PJRT execution benches: per-op tile-kernel latency across tile sizes
+//! (the numbers the DES cost model is calibrated from) plus the
+//! kernel-service dispatch overhead.
+
+use std::path::PathBuf;
+
+use parsteal::dataflow::data::Tile;
+use parsteal::runtime::{KernelService, TileEngine};
+use parsteal::util::bench::Bencher;
+use parsteal::util::rng::Rng;
+
+fn rand_tile(n: usize, seed: u64) -> Tile {
+    let mut rng = Rng::new(seed);
+    let mut t = Tile::zeros(n);
+    for v in &mut t.data {
+        *v = rng.normal() * 0.1;
+    }
+    for i in 0..n {
+        let d = t.at(i, i).abs() + n as f64;
+        t.set(i, i, d);
+    }
+    t
+}
+
+fn main() {
+    println!("== pjrt runtime ==");
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built; run `make artifacts` first — skipping");
+        return;
+    }
+    let sizes = vec![10u32, 30, 50];
+    let engine = TileEngine::load(&dir, Some(&sizes)).expect("load artifacts");
+    let mut b = Bencher::default();
+
+    for &n in &sizes {
+        let a = rand_tile(n as usize, 1);
+        let c = rand_tile(n as usize, 2);
+        let x = rand_tile(n as usize, 3);
+        b.bench(&format!("gemm n={n}"), || {
+            engine
+                .execute("gemm", n, &[c.clone(), a.clone(), x.clone()])
+                .unwrap()
+        });
+        b.bench(&format!("potrf n={n}"), || {
+            engine.execute("potrf", n, &[a.clone()]).unwrap()
+        });
+    }
+
+    // Service dispatch overhead vs direct engine call.
+    let svc = KernelService::start(dir, Some(vec![10]), 1).unwrap();
+    let a = rand_tile(10, 4);
+    let c = rand_tile(10, 5);
+    b.bench("service dispatch syrk n=10", || {
+        svc.execute("syrk", 10, vec![c.clone(), a.clone()]).unwrap()
+    });
+    svc.shutdown();
+}

@@ -1,0 +1,61 @@
+//! Scheduler hot-path benches: `insert`, `select`, and steal extraction
+//! under queue depths seen in the headline workload. L3 perf target:
+//! select < 1 µs so the scheduler is never the bottleneck (§Perf).
+
+use parsteal::dataflow::task::{TaskClass, TaskDesc};
+use parsteal::sched::SchedQueue;
+use parsteal::util::bench::Bencher;
+
+fn filled(n: u32) -> SchedQueue {
+    let mut q = SchedQueue::new();
+    for i in 0..n {
+        q.insert(
+            TaskDesc::indexed(TaskClass::Gemm, i, i / 2, i / 4),
+            (i % 97) as i64,
+        );
+    }
+    q
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("== scheduler ==");
+
+    for depth in [100u32, 10_000] {
+        b.bench_with_setup(
+            &format!("insert+select depth={depth}"),
+            || filled(depth),
+            |mut q| {
+                q.insert(TaskDesc::indexed(TaskClass::Trsm, 1, 2, 3), 50);
+                let r = q.select();
+                (q, r) // return q so its Drop is outside the timed region
+            },
+        );
+    }
+
+    b.bench_with_setup(
+        "select drain 1k",
+        || filled(1_000),
+        |mut q| {
+            while q.select().is_some() {}
+            q
+        },
+    );
+
+    for depth in [100u32, 10_000] {
+        b.bench_with_setup(
+            &format!("steal extract 20 of depth={depth}"),
+            || filled(depth),
+            |mut q| {
+                let stolen = q.extract_for_steal(20, |t| t.i % 2 == 0);
+                (q, stolen)
+            },
+        );
+    }
+
+    b.bench_with_setup(
+        "count_matching depth=10k",
+        || filled(10_000),
+        |q| q.count_matching(|t| t.i % 2 == 0),
+    );
+}

@@ -1,0 +1,72 @@
+//! Steal-protocol benches: the victim-side decision (policy + waiting-
+//! time gate) and a full thief→victim→thief round trip over the
+//! in-process fabric.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use parsteal::comm::{LinkModel, Msg, Network};
+use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
+use parsteal::migrate::{protocol::decide_steal, MigrateConfig, VictimPolicy};
+use parsteal::sched::SchedQueue;
+use parsteal::util::bench::Bencher;
+use parsteal::workloads::{CholeskyGraph, CholeskyParams};
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("== steal protocol ==");
+
+    let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+        tiles: 64,
+        tile_size: 50,
+        nodes: 4,
+        ..Default::default()
+    }));
+
+    let fill = || {
+        let mut q = SchedQueue::new();
+        for i in 1..64u32 {
+            for j in 0..i.min(8) {
+                q.insert(CholeskyGraph::gemm(i, j, 0), (i + j) as i64);
+            }
+        }
+        q
+    };
+
+    for (label, victim) in [
+        ("single", VictimPolicy::Single),
+        ("chunk20", VictimPolicy::Chunk(20)),
+        ("half", VictimPolicy::Half),
+    ] {
+        let mc = MigrateConfig {
+            victim,
+            ..Default::default()
+        };
+        let g = graph.clone();
+        b.bench_with_setup(
+            &format!("decide_steal {label} (gated)"),
+            fill,
+            move |mut q| {
+                let d = decide_steal(&mc, g.as_ref(), &mut q, 8, 100.0, 5.0, 1e4);
+                (q, d)
+            },
+        );
+    }
+
+    // Full message round trip through the fabric (ideal link).
+    let (net, mb) = Network::new(2, LinkModel::ideal());
+    b.bench("steal request/reply round trip (ideal link)", || {
+        net.send(NodeId(0), NodeId(1), Msg::StealRequest { thief: NodeId(0) });
+        let _req = mb[1].recv_timeout(Duration::from_secs(1)).unwrap();
+        net.send(
+            NodeId(1),
+            NodeId(0),
+            Msg::StealReply {
+                tasks: vec![TaskDesc::indexed(TaskClass::Gemm, 5, 3, 1)],
+                payload_bytes: 20_000,
+            },
+        );
+        mb[0].recv_timeout(Duration::from_secs(1)).unwrap()
+    });
+    net.shutdown();
+}

@@ -1,0 +1,84 @@
+//! Wire messages between runtime domains.
+
+use crate::dataflow::task::{NodeId, TaskDesc};
+use crate::term::SafraToken;
+
+/// Everything that crosses a node boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// One input dependency of `task` (owned by the destination) has been
+    /// satisfied by a task completion at the source.
+    Activate { task: TaskDesc },
+    /// Thief -> victim: the thief detected starvation and asks for work.
+    StealRequest { thief: NodeId },
+    /// Victim -> thief: migrated tasks (empty = steal failed). Each task
+    /// is *recreated* at the thief with the same uid; `payload_bytes` is
+    /// the size of the input data copied along (drives the link model).
+    StealReply {
+        tasks: Vec<TaskDesc>,
+        payload_bytes: u64,
+    },
+    /// Safra termination-detection token, traveling the ring.
+    Token(SafraToken),
+    /// Leader -> all: distributed termination detected, shut down.
+    Shutdown,
+}
+
+impl Msg {
+    /// Approximate wire size (drives the latency/bandwidth model).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Msg::Activate { .. } => 32,
+            Msg::StealRequest { .. } => 16,
+            Msg::StealReply {
+                tasks,
+                payload_bytes,
+            } => 16 + 32 * tasks.len() as u64 + payload_bytes,
+            Msg::Token(_) => 24,
+            Msg::Shutdown => 8,
+        }
+    }
+
+    /// Safra counts "basic" messages (application traffic); control
+    /// messages (token, shutdown) are excluded from the message deficit.
+    pub fn is_basic(&self) -> bool {
+        !matches!(self, Msg::Token(_) | Msg::Shutdown)
+    }
+}
+
+/// A routed message.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub msg: Msg,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::TaskClass;
+
+    #[test]
+    fn wire_bytes_scale_with_payload() {
+        let t = TaskDesc::indexed(TaskClass::Gemm, 1, 2, 3);
+        let small = Msg::StealReply {
+            tasks: vec![t],
+            payload_bytes: 0,
+        };
+        let big = Msg::StealReply {
+            tasks: vec![t],
+            payload_bytes: 20_000,
+        };
+        assert!(big.wire_bytes() > small.wire_bytes() + 19_000);
+    }
+
+    #[test]
+    fn control_messages_are_not_basic() {
+        assert!(Msg::Activate {
+            task: TaskDesc::indexed(TaskClass::Potrf, 0, 0, 0)
+        }
+        .is_basic());
+        assert!(!Msg::Shutdown.is_basic());
+    }
+}

@@ -1,0 +1,14 @@
+//! Inter-node communication.
+//!
+//! All cross-node traffic — dependency activations, the steal protocol,
+//! termination tokens — is message passing through a [`Network`] of
+//! per-node mailboxes. There are no shared data structures between
+//! protocol domains (distinguishing this, per §2 of the paper, from PGAS
+//! work stealing): the in-process transport stands in for MPI, with a
+//! configurable latency/bandwidth model applied on the wire.
+
+pub mod message;
+pub mod network;
+
+pub use message::{Envelope, Msg};
+pub use network::{LinkModel, Network, NodeMailbox};

@@ -1,0 +1,308 @@
+//! In-process transport with a wire model.
+//!
+//! Each node owns a [`NodeMailbox`] (an mpsc receiver). Sends go either
+//! directly (zero-latency) or through a delay-line thread that holds each
+//! envelope until its modeled arrival time — `latency + bytes/bandwidth`
+//! — preserving per-link FIFO order like an MPI point-to-point channel.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::message::{Envelope, Msg};
+use crate::dataflow::task::NodeId;
+
+/// Wire model: time on the wire = `latency_us + bytes / bw_bytes_per_us`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    pub latency_us: f64,
+    pub bw_bytes_per_us: f64,
+}
+
+impl LinkModel {
+    /// Instant delivery (unit tests, pure-throughput benches).
+    pub fn ideal() -> Self {
+        LinkModel {
+            latency_us: 0.0,
+            bw_bytes_per_us: f64::INFINITY,
+        }
+    }
+
+    /// A cluster-interconnect-ish default: ~5 µs latency, ~10 GB/s.
+    pub fn cluster() -> Self {
+        LinkModel {
+            latency_us: 5.0,
+            bw_bytes_per_us: 10_000.0,
+        }
+    }
+
+    pub fn transfer_us(&self, bytes: u64) -> f64 {
+        self.latency_us + bytes as f64 / self.bw_bytes_per_us
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.latency_us <= 0.0 && self.bw_bytes_per_us.is_infinite()
+    }
+}
+
+/// Per-node receive side.
+pub struct NodeMailbox {
+    rx: Receiver<Envelope>,
+}
+
+impl NodeMailbox {
+    pub fn recv_timeout(&self, d: Duration) -> Option<Envelope> {
+        match self.rx.recv_timeout(d) {
+            Ok(e) => Some(e),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    pub fn try_recv(&self) -> Option<Envelope> {
+        self.rx.try_recv().ok()
+    }
+}
+
+struct Delayed {
+    deliver_at: Instant,
+    seq: u64,
+    env: Envelope,
+}
+
+impl PartialEq for Delayed {
+    fn eq(&self, other: &Self) -> bool {
+        self.deliver_at == other.deliver_at && self.seq == other.seq
+    }
+}
+impl Eq for Delayed {}
+impl PartialOrd for Delayed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Delayed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap by (deliver_at, seq)
+        other
+            .deliver_at
+            .cmp(&self.deliver_at)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct DelayLine {
+    heap: Mutex<BinaryHeap<Delayed>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// The cluster fabric.
+pub struct Network {
+    senders: Vec<Sender<Envelope>>,
+    link: LinkModel,
+    delay: Option<Arc<DelayLine>>,
+    delay_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    seq: AtomicU64,
+    pub sent_msgs: AtomicU64,
+    pub sent_bytes: AtomicU64,
+}
+
+impl Network {
+    /// Build a fabric for `n` nodes; returns the network plus each node's
+    /// mailbox (index = node id).
+    pub fn new(n: usize, link: LinkModel) -> (Arc<Network>, Vec<NodeMailbox>) {
+        let mut senders = Vec::with_capacity(n);
+        let mut mailboxes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            mailboxes.push(NodeMailbox { rx });
+        }
+        let delay = if link.is_ideal() {
+            None
+        } else {
+            Some(Arc::new(DelayLine {
+                heap: Mutex::new(BinaryHeap::new()),
+                cv: Condvar::new(),
+                shutdown: Mutex::new(false),
+            }))
+        };
+        let net = Arc::new(Network {
+            senders,
+            link,
+            delay,
+            delay_thread: Mutex::new(None),
+            seq: AtomicU64::new(0),
+            sent_msgs: AtomicU64::new(0),
+            sent_bytes: AtomicU64::new(0),
+        });
+        if net.delay.is_some() {
+            let line = net.delay.as_ref().unwrap().clone();
+            let senders = net.senders.clone();
+            let handle = std::thread::Builder::new()
+                .name("net-delay".into())
+                .spawn(move || delay_loop(line, senders))
+                .expect("spawn delay line");
+            *net.delay_thread.lock().unwrap() = Some(handle);
+        }
+        (net, mailboxes)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn link(&self) -> LinkModel {
+        self.link
+    }
+
+    /// Send `msg` from `src` to `dst` through the wire model.
+    pub fn send(&self, src: NodeId, dst: NodeId, msg: Msg) {
+        let bytes = msg.wire_bytes();
+        self.sent_msgs.fetch_add(1, Ordering::Relaxed);
+        self.sent_bytes.fetch_add(bytes, Ordering::Relaxed);
+        let env = Envelope { src, dst, msg };
+        match &self.delay {
+            None => {
+                // Ignore send errors during shutdown (receiver dropped).
+                let _ = self.senders[dst.idx()].send(env);
+            }
+            Some(line) => {
+                let delay_us = self.link.transfer_us(bytes);
+                let deliver_at = Instant::now() + Duration::from_nanos((delay_us * 1e3) as u64);
+                let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+                line.heap.lock().unwrap().push(Delayed {
+                    deliver_at,
+                    seq,
+                    env,
+                });
+                line.cv.notify_one();
+            }
+        }
+    }
+
+    /// Broadcast (used for Shutdown).
+    pub fn broadcast_from(&self, src: NodeId, msg: Msg) {
+        for i in 0..self.senders.len() {
+            if i != src.idx() {
+                self.send(src, NodeId(i as u32), msg.clone());
+            }
+        }
+    }
+
+    /// Stop the delay-line thread (idempotent).
+    pub fn shutdown(&self) {
+        if let Some(line) = &self.delay {
+            *line.shutdown.lock().unwrap() = true;
+            line.cv.notify_all();
+            if let Some(h) = self.delay_thread.lock().unwrap().take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Network {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn delay_loop(line: Arc<DelayLine>, senders: Vec<Sender<Envelope>>) {
+    loop {
+        let mut heap = line.heap.lock().unwrap();
+        loop {
+            if *line.shutdown.lock().unwrap() {
+                // Flush whatever is pending so no message is lost.
+                while let Some(d) = heap.pop() {
+                    let _ = senders[d.env.dst.idx()].send(d.env);
+                }
+                return;
+            }
+            let now = Instant::now();
+            match heap.peek() {
+                Some(d) if d.deliver_at <= now => {
+                    let d = heap.pop().unwrap();
+                    let _ = senders[d.env.dst.idx()].send(d.env);
+                }
+                Some(d) => {
+                    let wait = d.deliver_at - now;
+                    let (h, _timeout) = line.cv.wait_timeout(heap, wait).unwrap();
+                    heap = h;
+                }
+                None => {
+                    let (h, _timeout) = line
+                        .cv
+                        .wait_timeout(heap, Duration::from_millis(50))
+                        .unwrap();
+                    heap = h;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::{TaskClass, TaskDesc};
+
+    fn activate(i: u32) -> Msg {
+        Msg::Activate {
+            task: TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0),
+        }
+    }
+
+    #[test]
+    fn ideal_network_delivers_immediately() {
+        let (net, mb) = Network::new(2, LinkModel::ideal());
+        net.send(NodeId(0), NodeId(1), activate(7));
+        let env = mb[1].recv_timeout(Duration::from_millis(100)).unwrap();
+        assert_eq!(env.src, NodeId(0));
+        assert!(matches!(env.msg, Msg::Activate { task } if task.i == 7));
+    }
+
+    #[test]
+    fn delayed_network_preserves_order_and_delivers() {
+        let (net, mb) = Network::new(2, LinkModel {
+            latency_us: 200.0,
+            bw_bytes_per_us: 1_000.0,
+        });
+        let t0 = Instant::now();
+        for i in 0..5 {
+            net.send(NodeId(0), NodeId(1), activate(i));
+        }
+        for i in 0..5 {
+            let env = mb[1].recv_timeout(Duration::from_secs(1)).expect("delivery");
+            assert!(matches!(env.msg, Msg::Activate { task } if task.i == i));
+        }
+        assert!(t0.elapsed() >= Duration::from_micros(200), "latency applied");
+        net.shutdown();
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone_but_source() {
+        let (net, mb) = Network::new(4, LinkModel::ideal());
+        net.broadcast_from(NodeId(1), Msg::Shutdown);
+        for (i, m) in mb.iter().enumerate() {
+            let got = m.try_recv();
+            if i == 1 {
+                assert!(got.is_none());
+            } else {
+                assert!(matches!(got.unwrap().msg, Msg::Shutdown));
+            }
+        }
+    }
+
+    #[test]
+    fn counters_track_traffic() {
+        let (net, _mb) = Network::new(2, LinkModel::ideal());
+        net.send(NodeId(0), NodeId(1), activate(0));
+        net.send(NodeId(0), NodeId(1), Msg::StealRequest { thief: NodeId(0) });
+        assert_eq!(net.sent_msgs.load(Ordering::Relaxed), 2);
+        assert!(net.sent_bytes.load(Ordering::Relaxed) >= 48);
+    }
+}

@@ -1,0 +1,156 @@
+//! Run configuration: one struct covering both execution backends, with
+//! CLI-flag construction (used by the `repro` launcher, the figure
+//! harness and the examples).
+
+use anyhow::Result;
+
+use crate::comm::LinkModel;
+use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::sim::SimConfig;
+use crate::util::cli::Args;
+use crate::workloads::{CholeskyParams, UtsParams};
+
+/// Which workload a run executes.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    Cholesky(CholeskyParams),
+    Uts(UtsParams),
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub workload: Workload,
+    pub workers_per_node: usize,
+    pub link: LinkModel,
+    pub migrate: MigrateConfig,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// Construct from CLI flags. Flags (all optional):
+    /// `--workload cholesky|uts --nodes N --workers W --tiles T --tile-size S`
+    /// `--dense-fraction F --steal BOOL --victim half|chunk[K]|single`
+    /// `--thief ready-only|ready-successors --waiting-time BOOL`
+    /// `--latency-us L --bw B --seed X` and the UTS knobs
+    /// `--uts-b0/--uts-m/--uts-q/--uts-g`.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let nodes = args.u64_or("nodes", 4)? as u32;
+        let seed = args.u64_or("seed", 1)?;
+        let workload = match args.str_or("workload", "cholesky").as_str() {
+            "uts" => Workload::Uts(UtsParams {
+                b0: args.u64_or("uts-b0", 120)? as u32,
+                m: args.u64_or("uts-m", 5)? as u32,
+                q: args.f64_or("uts-q", 0.200014)?,
+                g: args.f64_or("uts-g", 12e6)?,
+                seed,
+                nodes,
+                max_depth: args.u64_or("uts-max-depth", 64)? as u32,
+            }),
+            _ => Workload::Cholesky(CholeskyParams {
+                tiles: args.u64_or("tiles", 200)? as u32,
+                tile_size: args.u64_or("tile-size", 50)? as u32,
+                nodes,
+                dense_fraction: args.f64_or("dense-fraction", 0.5)?,
+                seed,
+                all_dense: args.bool_or("all-dense", false)?,
+            }),
+        };
+        let migrate = MigrateConfig {
+            enabled: args.bool_or("steal", true)?,
+            thief: args
+                .str_or("thief", "ready-successors")
+                .parse::<ThiefPolicy>()
+                .map_err(anyhow::Error::msg)?,
+            victim: args
+                .str_or("victim", "single")
+                .parse::<VictimPolicy>()
+                .map_err(anyhow::Error::msg)?,
+            use_waiting_time: args.bool_or("waiting-time", true)?,
+            poll_interval_us: args.f64_or("poll-interval-us", 100.0)?,
+            max_inflight: args.u64_or("max-inflight", 1)? as usize,
+            migrate_overhead_us: args.f64_or("migrate-overhead-us", 150.0)?,
+        };
+        Ok(RunConfig {
+            workload,
+            workers_per_node: args.u64_or("workers", 40)? as usize,
+            link: LinkModel {
+                latency_us: args.f64_or("latency-us", 5.0)?,
+                bw_bytes_per_us: args.f64_or("bw", 10_000.0)?,
+            },
+            migrate,
+            seed,
+        })
+    }
+
+    pub fn nodes(&self) -> u32 {
+        match &self.workload {
+            Workload::Cholesky(p) => p.nodes,
+            Workload::Uts(p) => p.nodes,
+        }
+    }
+
+    pub fn tile_size(&self) -> u32 {
+        match &self.workload {
+            Workload::Cholesky(p) => p.tile_size,
+            Workload::Uts(_) => 0,
+        }
+    }
+
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            workers_per_node: self.workers_per_node,
+            link: self.link,
+            seed: self.seed,
+            max_events: u64::MAX,
+            record_polls: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn defaults_match_paper_headline() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        let Workload::Cholesky(p) = &c.workload else {
+            panic!()
+        };
+        assert_eq!((p.tiles, p.tile_size, p.nodes), (200, 50, 4));
+        assert_eq!(p.dense_fraction, 0.5);
+        assert_eq!(c.workers_per_node, 40);
+        assert!(c.migrate.enabled && c.migrate.use_waiting_time);
+        assert_eq!(c.migrate.victim, VictimPolicy::Single);
+    }
+
+    #[test]
+    fn uts_flags() {
+        let c = RunConfig::from_args(&args(
+            "--workload uts --uts-b0 64 --uts-q 0.3 --nodes 2 --steal false",
+        ))
+        .unwrap();
+        let Workload::Uts(p) = &c.workload else { panic!() };
+        assert_eq!(p.b0, 64);
+        assert_eq!(p.q, 0.3);
+        assert_eq!(p.nodes, 2);
+        assert!(!c.migrate.enabled);
+    }
+
+    #[test]
+    fn victim_policy_flag() {
+        let c = RunConfig::from_args(&args("--victim chunk8 --thief ready-only")).unwrap();
+        assert_eq!(c.migrate.victim, VictimPolicy::Chunk(8));
+        assert_eq!(c.migrate.thief, ThiefPolicy::ReadyOnly);
+    }
+
+    #[test]
+    fn bad_policy_errors() {
+        assert!(RunConfig::from_args(&args("--victim bogus")).is_err());
+    }
+}

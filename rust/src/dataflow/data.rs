@@ -1,0 +1,184 @@
+//! Tile data plane for real-mode execution.
+//!
+//! Tiles are square `f64` blocks (the paper's 64-bit elements). The
+//! [`TileStore`] is logically partitioned across nodes — each tile has a
+//! home node from the cyclic distribution — and physically shared inside
+//! this process (the transport cost of remote reads is modeled by the
+//! comm latency layer; see DESIGN.md substitution table). Per-tile locks
+//! serialize access; the DAG guarantees a single writer at a time.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::task::NodeId;
+
+/// A square f64 tile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tile {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Tile {
+    pub fn zeros(n: usize) -> Self {
+        Tile {
+            n,
+            data: vec![0.0; n * n],
+        }
+    }
+
+    pub fn identity(n: usize, scale: f64) -> Self {
+        let mut t = Tile::zeros(n);
+        for i in 0..n {
+            t.data[i * n + i] = scale;
+        }
+        t
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.n + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.n + c] = v;
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f64>()) as u64
+    }
+
+    /// Max-abs difference (verification helper).
+    pub fn max_abs_diff(&self, other: &Tile) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// `self - a @ b^T` in place (pure-Rust oracle for tests and the
+    /// no-PJRT fallback executor).
+    pub fn gemm_update(&mut self, a: &Tile, b: &Tile) {
+        let n = self.n;
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..a.n {
+                    acc += a.at(i, k) * b.at(j, k);
+                }
+                let v = self.at(i, j) - acc;
+                self.set(i, j, v);
+            }
+        }
+    }
+}
+
+/// Key identifying one tile of the global matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileKey {
+    pub row: u32,
+    pub col: u32,
+}
+
+/// The distributed tile repository.
+pub struct TileStore {
+    tiles: HashMap<TileKey, Mutex<Tile>>,
+    homes: HashMap<TileKey, NodeId>,
+    /// Bytes "transferred" between distinct home nodes (accounting only).
+    remote_reads: Mutex<u64>,
+}
+
+impl TileStore {
+    pub fn new() -> Self {
+        Self {
+            tiles: HashMap::new(),
+            homes: HashMap::new(),
+            remote_reads: Mutex::new(0),
+        }
+    }
+
+    pub fn insert(&mut self, key: TileKey, home: NodeId, tile: Tile) {
+        self.tiles.insert(key, Mutex::new(tile));
+        self.homes.insert(key, home);
+    }
+
+    pub fn home(&self, key: TileKey) -> Option<NodeId> {
+        self.homes.get(&key).copied()
+    }
+
+    /// Snapshot a tile's contents (a "receive" when reader != home).
+    pub fn read(&self, key: TileKey, reader: NodeId) -> Tile {
+        let tile = self.tiles[&key].lock().unwrap().clone();
+        if self.homes[&key] != reader {
+            *self.remote_reads.lock().unwrap() += tile.bytes();
+        }
+        tile
+    }
+
+    /// Replace a tile's contents.
+    pub fn write(&self, key: TileKey, tile: Tile) {
+        *self.tiles[&key].lock().unwrap() = tile;
+    }
+
+    pub fn contains(&self, key: TileKey) -> bool {
+        self.tiles.contains_key(&key)
+    }
+
+    pub fn remote_read_bytes(&self) -> u64 {
+        *self.remote_reads.lock().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty()
+    }
+}
+
+impl Default for TileStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_accessors() {
+        let mut t = Tile::zeros(3);
+        t.set(1, 2, 5.0);
+        assert_eq!(t.at(1, 2), 5.0);
+        assert_eq!(t.bytes(), 72);
+    }
+
+    #[test]
+    fn gemm_update_matches_manual() {
+        // c = I(2), a = [[1,2],[3,4]], b = [[1,0],[0,1]] => c - a@b^T = I - a
+        let mut c = Tile::identity(2, 1.0);
+        let a = Tile {
+            n: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let b = Tile::identity(2, 1.0);
+        c.gemm_update(&a, &b);
+        assert_eq!(c.data, vec![0.0, -2.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn store_tracks_remote_reads() {
+        let mut s = TileStore::new();
+        let k = TileKey { row: 0, col: 0 };
+        s.insert(k, NodeId(0), Tile::zeros(4));
+        let _ = s.read(k, NodeId(0));
+        assert_eq!(s.remote_read_bytes(), 0);
+        let _ = s.read(k, NodeId(1));
+        assert_eq!(s.remote_read_bytes(), 128);
+        assert_eq!(s.home(k), Some(NodeId(0)));
+    }
+}

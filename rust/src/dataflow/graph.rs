@@ -1,0 +1,132 @@
+//! Activation tracking: turning completed predecessors into ready tasks.
+//!
+//! Each node owns one `ActivationTracker` for the tasks that will run
+//! there. An `Activate(t)` (local or remote) decrements `t`'s remaining
+//! input count, lazily initialized from [`TaskGraph::in_degree`]; the
+//! transition to zero makes the task ready exactly once. This is the
+//! data-driven heart of the dataflow model — there is no global DAG
+//! materialization, everything is derived on the fly from the graph's
+//! algebraic description, PaRSEC-style.
+
+use std::collections::HashMap;
+
+use super::task::TaskDesc;
+use super::ttg::TaskGraph;
+
+/// Per-node dependency bookkeeping.
+#[derive(Default, Debug)]
+pub struct ActivationTracker {
+    remaining: HashMap<TaskDesc, u32>,
+    /// Tasks that reached zero and were handed out (debug double-fire check).
+    fired: HashMap<TaskDesc, ()>,
+    activations_received: u64,
+}
+
+impl ActivationTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one satisfied input dependency of `t`. Returns `true` when
+    /// this was the last missing input (the task is now ready).
+    pub fn activate(&mut self, graph: &dyn TaskGraph, t: TaskDesc) -> bool {
+        self.activations_received += 1;
+        debug_assert!(
+            !self.fired.contains_key(&t),
+            "activation for already-ready task {t}"
+        );
+        let entry = self
+            .remaining
+            .entry(t)
+            .or_insert_with(|| graph.in_degree(t).max(1));
+        debug_assert!(*entry > 0);
+        *entry -= 1;
+        if *entry == 0 {
+            self.remaining.remove(&t);
+            if cfg!(debug_assertions) {
+                self.fired.insert(t, ());
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Roots have no predecessors; mark them ready without activation.
+    pub fn mark_root(&mut self, t: TaskDesc) {
+        if cfg!(debug_assertions) {
+            self.fired.insert(t, ());
+        }
+    }
+
+    /// Number of tasks with partially-satisfied dependencies.
+    pub fn pending(&self) -> usize {
+        self.remaining.len()
+    }
+
+    pub fn activations_received(&self) -> u64 {
+        self.activations_received
+    }
+
+    /// True if no task is waiting on further activations (used by the
+    /// termination detector's local-quiescence check).
+    pub fn is_quiescent(&self) -> bool {
+        self.remaining.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::{NodeId, TaskClass};
+    use crate::dataflow::ttg::TtgBuilder;
+
+    fn diamond() -> impl TaskGraph {
+        // a -> b, a -> c, {b,c} -> d
+        let t = |i| TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+        TtgBuilder::new("diamond", 1)
+            .with_roots(vec![t(0)])
+            .wrap_g(
+                "n",
+                |_| true,
+                move |x| match x.i {
+                    0 => vec![t(1), t(2)],
+                    1 | 2 => vec![t(3)],
+                    _ => vec![],
+                },
+                |x| match x.i {
+                    0 => 0,
+                    1 | 2 => 1,
+                    _ => 2,
+                },
+                |_| NodeId(0),
+                |_| 1.0,
+            )
+            .build()
+    }
+
+    #[test]
+    fn diamond_activates_once() {
+        let g = diamond();
+        let t = |i| TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+        let mut tr = ActivationTracker::new();
+        assert!(tr.activate(&g, t(1)), "in-degree 1 fires immediately");
+        assert!(!tr.activate(&g, t(3)), "first of two activations");
+        assert_eq!(tr.pending(), 1);
+        assert!(tr.activate(&g, t(3)), "second fires");
+        assert_eq!(tr.pending(), 0);
+        assert!(tr.is_quiescent());
+        assert_eq!(tr.activations_received(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "already-ready")]
+    #[cfg(debug_assertions)]
+    fn double_fire_detected() {
+        let g = diamond();
+        let t = TaskDesc::indexed(TaskClass::Synthetic, 1, 0, 0);
+        let mut tr = ActivationTracker::new();
+        assert!(tr.activate(&g, t));
+        let _ = tr.activate(&g, t);
+    }
+}

@@ -1,0 +1,24 @@
+//! The task-based dataflow substrate (PaRSEC-like core).
+//!
+//! A program is a set of *task classes*; a *task* is an instance of a
+//! class identified by its index tuple. Dependencies are derived from the
+//! flow of data between tasks ([`TaskGraph::successors`]); a task becomes
+//! *ready* when all of its input dependencies have been satisfied
+//! ([`graph::ActivationTracker`]). Execution is fully distributed: every
+//! node tracks activations only for the tasks it will run, and
+//! cross-node dependencies travel as `Activate` messages through
+//! [`crate::comm`].
+//!
+//! The paper's TTG extension — a per-task-class `is_stealable` predicate
+//! supplied by the programmer (Listing 1.1) — is part of the graph
+//! contract here ([`TaskGraph::is_stealable`]) and of the dynamic
+//! builder ([`ttg::TtgBuilder::wrap_g`]).
+
+pub mod data;
+pub mod graph;
+pub mod task;
+pub mod ttg;
+
+pub use graph::ActivationTracker;
+pub use task::{NodeId, TaskClass, TaskDesc};
+pub use ttg::{TaskGraph, TtgBuilder};

@@ -1,0 +1,150 @@
+//! Task identity: classes and descriptors.
+
+use std::fmt;
+
+/// A compute node (one MPI rank in the paper's deployment; in this
+/// reproduction an in-process runtime domain with its own scheduler,
+/// workers and migrate thread).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Task classes across all built-in workloads. All tasks of a class share
+/// properties (body, cost shape, stealability rule) and differ only in
+/// their index tuple and input data — exactly PaRSEC's task-class model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TaskClass {
+    /// Cholesky: factorize diagonal tile `(k,k)`.
+    Potrf = 0,
+    /// Cholesky: panel solve of tile `(i,k)` against `POTRF(k)`.
+    Trsm = 1,
+    /// Cholesky: symmetric trailing update of `(i,i)` from `(i,k)`.
+    Syrk = 2,
+    /// Cholesky: trailing update of `(i,j)` from `(i,k)` and `(j,k)`.
+    Gemm = 3,
+    /// One UTS tree node expansion.
+    UtsNode = 4,
+    /// Synthetic/user-defined class (dynamic TTG graphs).
+    Synthetic = 5,
+}
+
+impl TaskClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskClass::Potrf => "POTRF",
+            TaskClass::Trsm => "TRSM",
+            TaskClass::Syrk => "SYRK",
+            TaskClass::Gemm => "GEMM",
+            TaskClass::UtsNode => "UTS",
+            TaskClass::Synthetic => "SYN",
+        }
+    }
+
+    pub const ALL: [TaskClass; 6] = [
+        TaskClass::Potrf,
+        TaskClass::Trsm,
+        TaskClass::Syrk,
+        TaskClass::Gemm,
+        TaskClass::UtsNode,
+        TaskClass::Synthetic,
+    ];
+}
+
+/// A task instance: class + index tuple + unique id.
+///
+/// For the Cholesky DAG the indices are `(i, j, k)` (tile row, tile col,
+/// panel); `uid` is a packing of those. For UTS, `uid` is the tree-node
+/// hash, `i` the depth and `j` the child index. A stolen task is
+/// *recreated* on the thief **with the same uid** (§3 of the paper), so
+/// uid equality is task identity across the whole cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskDesc {
+    pub class: TaskClass,
+    pub i: u32,
+    pub j: u32,
+    pub k: u32,
+    pub uid: u64,
+}
+
+impl TaskDesc {
+    /// Canonical constructor for statically-indexed (Cholesky-like) tasks:
+    /// uid packs (class, i, j, k) so it is unique and deterministic.
+    pub fn indexed(class: TaskClass, i: u32, j: u32, k: u32) -> Self {
+        let uid = ((class as u64) << 60)
+            | ((i as u64 & 0xFFFFF) << 40)
+            | ((j as u64 & 0xFFFFF) << 20)
+            | (k as u64 & 0xFFFFF);
+        TaskDesc { class, i, j, k, uid }
+    }
+
+    /// Constructor for dynamically-derived (UTS-like) tasks.
+    pub fn dynamic(class: TaskClass, uid: u64, depth: u32, child: u32) -> Self {
+        TaskDesc {
+            class,
+            i: depth,
+            j: child,
+            k: 0,
+            uid,
+        }
+    }
+}
+
+impl fmt::Display for TaskDesc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.class {
+            TaskClass::Potrf => write!(f, "POTRF({})", self.k),
+            TaskClass::Trsm => write!(f, "TRSM({},{})", self.i, self.k),
+            TaskClass::Syrk => write!(f, "SYRK({},{})", self.i, self.k),
+            TaskClass::Gemm => write!(f, "GEMM({},{},{})", self.i, self.j, self.k),
+            TaskClass::UtsNode => write!(f, "UTS(d{},#{:x})", self.i, self.uid),
+            TaskClass::Synthetic => write!(f, "SYN({},{},{})", self.i, self.j, self.k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexed_uid_unique_across_classes_and_indices() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for class in [TaskClass::Potrf, TaskClass::Trsm, TaskClass::Syrk, TaskClass::Gemm] {
+            for i in 0..12 {
+                for j in 0..12 {
+                    for k in 0..12 {
+                        assert!(seen.insert(TaskDesc::indexed(class, i, j, k).uid));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(TaskDesc::indexed(TaskClass::Gemm, 3, 2, 1).to_string(), "GEMM(3,2,1)");
+        assert_eq!(TaskDesc::indexed(TaskClass::Potrf, 0, 0, 5).to_string(), "POTRF(5)");
+    }
+
+    #[test]
+    fn desc_is_copy_and_ord() {
+        let a = TaskDesc::indexed(TaskClass::Trsm, 1, 0, 0);
+        let b = a;
+        assert_eq!(a, b);
+        assert!(TaskDesc::indexed(TaskClass::Potrf, 0, 0, 0) < TaskDesc::indexed(TaskClass::Trsm, 0, 0, 0));
+    }
+}

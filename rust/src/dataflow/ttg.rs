@@ -1,0 +1,313 @@
+//! The task-graph contract and a TTG-style dynamic builder.
+//!
+//! [`TaskGraph`] is what every workload implements: it describes tasks,
+//! their dependency structure, their initial placement, and — the
+//! paper's TTG extension — whether a given task may be stolen.
+//!
+//! [`TtgBuilder`] mirrors the paper's Listing 1.1 (`ttg::wrapG`): a user
+//! registers task classes from closures, including the `is_stealable`
+//! predicate that has access to the same task description as the body.
+
+use std::sync::Arc;
+
+use super::task::{NodeId, TaskClass, TaskDesc};
+
+/// A dataflow task graph: the program, from the runtime's point of view.
+///
+/// All methods must be pure functions of the task descriptor (plus the
+/// graph's own immutable parameters): the runtime recreates stolen tasks
+/// on the thief node from the descriptor alone, and both the thief and
+/// the victim must agree on the task's successors, cost and stealability.
+pub trait TaskGraph: Send + Sync {
+    /// Human-readable workload name (reports, traces).
+    fn name(&self) -> &str;
+
+    /// Number of runtime domains ("nodes" in the paper) the static
+    /// mapping targets.
+    fn num_nodes(&self) -> usize;
+
+    /// Tasks with zero input dependencies (DAG sources).
+    fn roots(&self) -> Vec<TaskDesc>;
+
+    /// Tasks activated by the completion of `t` (each exactly once; a
+    /// successor with in-degree d receives d activations from d distinct
+    /// predecessors).
+    fn successors(&self, t: TaskDesc) -> Vec<TaskDesc>;
+
+    /// Number of activations `t` must receive before becoming ready.
+    fn in_degree(&self, t: TaskDesc) -> u32;
+
+    /// Static owner mapping (the paper's cyclic tile distribution).
+    fn owner(&self, t: TaskDesc) -> NodeId;
+
+    /// If true, a successor runs on the node where its *activating
+    /// predecessor* ran rather than `owner()` — UTS's child-follows-parent
+    /// mapping. (With multiple predecessors the last activator wins, which
+    /// only applies to in-degree-1 graphs like UTS anyway.)
+    fn dynamic_placement(&self) -> bool {
+        false
+    }
+
+    /// The paper's TTG extension: may this task be migrated to a thief?
+    fn is_stealable(&self, t: TaskDesc) -> bool;
+
+    /// Scheduling priority (larger runs first; the paper's runs use a
+    /// critical-path heuristic for Cholesky).
+    fn priority(&self, t: TaskDesc) -> i64 {
+        let _ = t;
+        0
+    }
+
+    /// Abstract work in "tile-op units"; the [`crate::sim::CostModel`]
+    /// converts units to time. For Cholesky one unit is one dense tile
+    /// op of the task's class at the workload's tile size.
+    fn work_units(&self, t: TaskDesc) -> f64;
+
+    /// Bytes that must move to migrate this task's inputs to a thief.
+    fn payload_bytes(&self, t: TaskDesc) -> u64;
+
+    /// Total task count if statically known (None for UTS).
+    fn total_tasks(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// One dynamically-registered task class (TTG DSL style).
+pub struct TaskClassDef {
+    pub name: String,
+    /// Successor derivation for instances of this class.
+    pub successors: Arc<dyn Fn(TaskDesc) -> Vec<TaskDesc> + Send + Sync>,
+    pub in_degree: Arc<dyn Fn(TaskDesc) -> u32 + Send + Sync>,
+    pub owner: Arc<dyn Fn(TaskDesc) -> NodeId + Send + Sync>,
+    /// The paper's `is_stealable` hook: same signature family as the
+    /// body, full access to the task description (Listing 1.1).
+    pub is_stealable: Arc<dyn Fn(TaskDesc) -> bool + Send + Sync>,
+    pub priority: Arc<dyn Fn(TaskDesc) -> i64 + Send + Sync>,
+    pub work_units: Arc<dyn Fn(TaskDesc) -> f64 + Send + Sync>,
+    pub payload_bytes: Arc<dyn Fn(TaskDesc) -> u64 + Send + Sync>,
+}
+
+/// Builder mirroring `ttg::wrapG(task_body, is_stealable, edges, ...)`:
+/// assembles a [`TaskGraph`] out of per-class closures. Used by the
+/// quickstart example and by tests that need bespoke DAG shapes.
+pub struct TtgBuilder {
+    name: String,
+    num_nodes: usize,
+    roots: Vec<TaskDesc>,
+    classes: Vec<TaskClassDef>,
+    total: Option<u64>,
+}
+
+impl TtgBuilder {
+    pub fn new(name: &str, num_nodes: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            num_nodes,
+            roots: Vec::new(),
+            classes: Vec::new(),
+            total: None,
+        }
+    }
+
+    /// Register a task class. `class_slot` must equal the number of
+    /// classes registered so far; instances use `TaskDesc.k` *unchanged*
+    /// and select their class via `TaskDesc.class == Synthetic` plus the
+    /// high bits of `uid`. For simplicity every dynamic class shares
+    /// `TaskClass::Synthetic` and is distinguished by `desc.i` ranges the
+    /// user controls; the builder does not constrain that.
+    #[allow(clippy::too_many_arguments)]
+    pub fn wrap_g(
+        mut self,
+        name: &str,
+        is_stealable: impl Fn(TaskDesc) -> bool + Send + Sync + 'static,
+        successors: impl Fn(TaskDesc) -> Vec<TaskDesc> + Send + Sync + 'static,
+        in_degree: impl Fn(TaskDesc) -> u32 + Send + Sync + 'static,
+        owner: impl Fn(TaskDesc) -> NodeId + Send + Sync + 'static,
+        work_units: impl Fn(TaskDesc) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        self.classes.push(TaskClassDef {
+            name: name.to_string(),
+            successors: Arc::new(successors),
+            in_degree: Arc::new(in_degree),
+            owner: Arc::new(owner),
+            is_stealable: Arc::new(is_stealable),
+            priority: Arc::new(|_| 0),
+            work_units: Arc::new(work_units),
+            payload_bytes: Arc::new(|_| 0),
+        });
+        self
+    }
+
+    pub fn with_roots(mut self, roots: Vec<TaskDesc>) -> Self {
+        self.roots = roots;
+        self
+    }
+
+    pub fn with_total_tasks(mut self, n: u64) -> Self {
+        self.total = Some(n);
+        self
+    }
+
+    pub fn with_priority(
+        mut self,
+        f: impl Fn(TaskDesc) -> i64 + Send + Sync + 'static,
+    ) -> Self {
+        if let Some(c) = self.classes.last_mut() {
+            c.priority = Arc::new(f);
+        }
+        self
+    }
+
+    pub fn with_payload(
+        mut self,
+        f: impl Fn(TaskDesc) -> u64 + Send + Sync + 'static,
+    ) -> Self {
+        if let Some(c) = self.classes.last_mut() {
+            c.payload_bytes = Arc::new(f);
+        }
+        self
+    }
+
+    pub fn build(self) -> DynGraph {
+        assert!(
+            !self.classes.is_empty(),
+            "TtgBuilder: register at least one task class via wrap_g"
+        );
+        DynGraph {
+            name: self.name,
+            num_nodes: self.num_nodes,
+            roots: self.roots,
+            classes: self.classes,
+            total: self.total,
+        }
+    }
+}
+
+/// A [`TaskGraph`] assembled from closures. Dynamic classes all use
+/// `TaskDesc.class == Synthetic`; the class *slot* is `desc.j >> 16`
+/// when the user registers several (the built-in workloads use typed
+/// classes instead and don't go through this path).
+pub struct DynGraph {
+    name: String,
+    num_nodes: usize,
+    roots: Vec<TaskDesc>,
+    classes: Vec<TaskClassDef>,
+    total: Option<u64>,
+}
+
+impl DynGraph {
+    fn class_of(&self, t: TaskDesc) -> &TaskClassDef {
+        let slot = (t.j >> 16) as usize;
+        &self.classes[slot.min(self.classes.len() - 1)]
+    }
+
+    /// Encode a class slot into a task index `j` (upper half-word).
+    pub fn slot_j(slot: u32, j: u32) -> u32 {
+        (slot << 16) | (j & 0xFFFF)
+    }
+}
+
+impl TaskGraph for DynGraph {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    fn roots(&self) -> Vec<TaskDesc> {
+        self.roots.clone()
+    }
+
+    fn successors(&self, t: TaskDesc) -> Vec<TaskDesc> {
+        (self.class_of(t).successors)(t)
+    }
+
+    fn in_degree(&self, t: TaskDesc) -> u32 {
+        (self.class_of(t).in_degree)(t)
+    }
+
+    fn owner(&self, t: TaskDesc) -> NodeId {
+        (self.class_of(t).owner)(t)
+    }
+
+    fn is_stealable(&self, t: TaskDesc) -> bool {
+        (self.class_of(t).is_stealable)(t)
+    }
+
+    fn priority(&self, t: TaskDesc) -> i64 {
+        (self.class_of(t).priority)(t)
+    }
+
+    fn work_units(&self, t: TaskDesc) -> f64 {
+        (self.class_of(t).work_units)(t)
+    }
+
+    fn payload_bytes(&self, t: TaskDesc) -> u64 {
+        (self.class_of(t).payload_bytes)(t)
+    }
+
+    fn total_tasks(&self) -> Option<u64> {
+        self.total
+    }
+}
+
+/// A linear chain graph (for tests): task i activates task i+1.
+pub fn chain(len: u32, num_nodes: usize) -> DynGraph {
+    let nn = num_nodes as u32;
+    TtgBuilder::new("chain", num_nodes)
+        .with_roots(vec![TaskDesc::indexed(TaskClass::Synthetic, 0, 0, 0)])
+        .wrap_g(
+            "link",
+            |_| true,
+            move |t| {
+                if t.i + 1 < len {
+                    vec![TaskDesc::indexed(TaskClass::Synthetic, t.i + 1, 0, 0)]
+                } else {
+                    vec![]
+                }
+            },
+            |t| u32::from(t.i > 0),
+            move |t| NodeId(t.i % nn),
+            |_| 1.0,
+        )
+        .with_total_tasks(len as u64)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_graph_shape() {
+        let g = chain(5, 2);
+        assert_eq!(g.roots().len(), 1);
+        let r = g.roots()[0];
+        assert_eq!(g.in_degree(r), 0);
+        let s = g.successors(r);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].i, 1);
+        assert_eq!(g.owner(s[0]), NodeId(1));
+        let last = TaskDesc::indexed(TaskClass::Synthetic, 4, 0, 0);
+        assert!(g.successors(last).is_empty());
+        assert_eq!(g.total_tasks(), Some(5));
+    }
+
+    #[test]
+    fn wrap_g_stealable_hook() {
+        let g = TtgBuilder::new("t", 1)
+            .wrap_g(
+                "c",
+                |t| t.i % 2 == 0, // programmer-controlled stealability
+                |_| vec![],
+                |_| 0,
+                |_| NodeId(0),
+                |_| 1.0,
+            )
+            .build();
+        assert!(g.is_stealable(TaskDesc::indexed(TaskClass::Synthetic, 2, 0, 0)));
+        assert!(!g.is_stealable(TaskDesc::indexed(TaskClass::Synthetic, 3, 0, 0)));
+    }
+}

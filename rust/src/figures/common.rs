@@ -1,0 +1,229 @@
+//! Shared plumbing for the figure harness: scaled experiment configs,
+//! batched simulator runs, and output formatting.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::comm::LinkModel;
+use crate::metrics::RunReport;
+use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::sim::{CostModel, SimConfig, Simulator};
+use crate::stats::Summary;
+use crate::util::json::Json;
+use crate::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
+
+/// Experiment scale: `Small` finishes `figure all` in minutes on this
+/// container; `Paper` uses the paper's exact matrix geometry (much
+/// slower — millions of tasks per run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Scale {
+        if s.eq_ignore_ascii_case("paper") {
+            Scale::Paper
+        } else {
+            Scale::Small
+        }
+    }
+
+    /// Tiles per side for the headline matrix (paper: 200² tiles of 50²).
+    pub fn tiles(self) -> u32 {
+        match self {
+            Scale::Small => 48,
+            Scale::Paper => 200,
+        }
+    }
+
+    /// Workers per node (paper: 40).
+    pub fn workers(self) -> usize {
+        match self {
+            Scale::Small => 8,
+            Scale::Paper => 40,
+        }
+    }
+
+    /// Chunk size = half the worker threads (paper: 20).
+    pub fn chunk(self) -> usize {
+        self.workers() / 2
+    }
+}
+
+/// One experiment cell: a workload + policy + seed.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub label: String,
+    pub migrate: MigrateConfig,
+}
+
+/// Harness context threaded through every figure.
+pub struct Ctx {
+    pub scale: Scale,
+    pub seeds: u64,
+    pub cost: CostModel,
+    pub out_dir: std::path::PathBuf,
+}
+
+impl Ctx {
+    pub fn new(scale: Scale, seeds: u64, artifacts_dir: &Path, out_dir: &Path) -> Ctx {
+        std::fs::create_dir_all(out_dir).ok();
+        Ctx {
+            scale,
+            seeds,
+            cost: CostModel::load_or_default(&artifacts_dir.join("costmodel.json")),
+            out_dir: out_dir.to_path_buf(),
+        }
+    }
+
+    pub fn cholesky(&self, nodes: u32, seed: u64) -> Arc<CholeskyGraph> {
+        Arc::new(CholeskyGraph::new(CholeskyParams {
+            tiles: self.scale.tiles(),
+            tile_size: 50,
+            nodes,
+            dense_fraction: 0.5,
+            seed: 0xC404 ^ seed,
+            all_dense: false,
+        }))
+    }
+
+    pub fn cholesky_custom(
+        &self,
+        nodes: u32,
+        tiles: u32,
+        tile_size: u32,
+        seed: u64,
+    ) -> Arc<CholeskyGraph> {
+        Arc::new(CholeskyGraph::new(CholeskyParams {
+            tiles,
+            tile_size,
+            nodes,
+            dense_fraction: 0.5,
+            seed: 0xC404 ^ seed,
+            all_dense: false,
+        }))
+    }
+
+    pub fn uts(&self, nodes: u32, seed: u64) -> Arc<UtsGraph> {
+        // Paper's Fig.7 parameters, depth-capped to keep tree size sane;
+        // granularity g converts through the cost model.
+        let (b0, g) = match self.scale {
+            Scale::Small => (64, 200_000.0),
+            Scale::Paper => (120, 12e6),
+        };
+        Arc::new(UtsGraph::new(UtsParams {
+            b0,
+            m: 5,
+            q: 0.200014,
+            g,
+            seed: 0x075 ^ seed,
+            nodes,
+            max_depth: 24,
+        }))
+    }
+
+    pub fn run_cholesky(
+        &self,
+        nodes: u32,
+        migrate: MigrateConfig,
+        seed: u64,
+        record_polls: bool,
+    ) -> RunReport {
+        let graph = self.cholesky(nodes, 0); // same matrix across seeds
+        let cfg = SimConfig {
+            workers_per_node: self.scale.workers(),
+            link: LinkModel::cluster(),
+            seed,
+            max_events: u64::MAX,
+            record_polls,
+        };
+        Simulator::new(graph, cfg, self.cost.clone(), migrate, 50).run()
+    }
+
+    pub fn run_cholesky_graph(
+        &self,
+        graph: Arc<CholeskyGraph>,
+        migrate: MigrateConfig,
+        seed: u64,
+        record_polls: bool,
+    ) -> RunReport {
+        let tile = graph.params().tile_size;
+        let cfg = SimConfig {
+            workers_per_node: self.scale.workers(),
+            link: LinkModel::cluster(),
+            seed,
+            max_events: u64::MAX,
+            record_polls,
+        };
+        Simulator::new(graph, cfg, self.cost.clone(), migrate, tile).run()
+    }
+
+    pub fn run_uts(&self, nodes: u32, migrate: MigrateConfig, seed: u64) -> RunReport {
+        let graph = self.uts(nodes, 0);
+        let cfg = SimConfig {
+            workers_per_node: self.scale.workers(),
+            link: LinkModel::cluster(),
+            seed,
+            max_events: u64::MAX,
+            record_polls: false,
+        };
+        Simulator::new(graph, cfg, self.cost.clone(), migrate, 0).run()
+    }
+
+    /// Execution times (seconds of virtual time) across seeds.
+    pub fn exec_times_cholesky(&self, nodes: u32, migrate: MigrateConfig) -> Vec<f64> {
+        (0..self.seeds)
+            .map(|s| self.run_cholesky(nodes, migrate, 1000 + s, false).makespan_us / 1e6)
+            .collect()
+    }
+
+    pub fn write_json(&self, name: &str, j: &Json) -> Result<()> {
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, j.pretty())?;
+        Ok(())
+    }
+}
+
+/// Standard policy set for the victim-policy figures.
+pub fn victim_cells(scale: Scale, waiting_time: bool) -> Vec<Cell> {
+    let mk = |victim| MigrateConfig {
+        enabled: true,
+        thief: ThiefPolicy::ReadySuccessors,
+        victim,
+        use_waiting_time: waiting_time,
+        poll_interval_us: 100.0,
+        max_inflight: 1,
+            migrate_overhead_us: 150.0,
+    };
+    vec![
+        Cell {
+            label: "No-Steal".into(),
+            migrate: MigrateConfig::disabled(),
+        },
+        Cell {
+            label: "Chunk".into(),
+            migrate: mk(VictimPolicy::Chunk(scale.chunk())),
+        },
+        Cell {
+            label: "Half".into(),
+            migrate: mk(VictimPolicy::Half),
+        },
+        Cell {
+            label: "Single".into(),
+            migrate: mk(VictimPolicy::Single),
+        },
+    ]
+}
+
+/// Render a mean±sd table row.
+pub fn fmt_summary(label: &str, xs: &[f64]) -> String {
+    let s = Summary::of(xs);
+    format!(
+        "{label:<22} mean {:>9.4}s  sd {:>8.4}s  min {:>9.4}s  max {:>9.4}s  cv {:>6.3}",
+        s.mean, s.std, s.min, s.max, s.cv()
+    )
+}

@@ -1,0 +1,42 @@
+//! Fig. 1 — potential for work stealing `E^b` per interval, No-Steal
+//! runs on 2–16 nodes. Shape to reproduce: highest at the start of the
+//! run, decaying as execution progresses, with the 8-node curve staying
+//! highest late in execution.
+
+use anyhow::Result;
+
+use crate::migrate::MigrateConfig;
+use crate::util::json::Json;
+
+use super::common::Ctx;
+
+pub const INTERVALS: usize = 20;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Fig.1 — potential for work stealing E^b (No-Steal)\n");
+    out.push_str(&format!(
+        "matrix: {0}x{0} tiles of 50x50, 50% dense, cyclic; {1} intervals\n",
+        ctx.scale.tiles(),
+        INTERVALS
+    ));
+    let mut json_series = Vec::new();
+    for nodes in [2u32, 4, 8, 16] {
+        let report = ctx.run_cholesky(nodes, MigrateConfig::disabled(), 42, true);
+        let interval = report.makespan_us / INTERVALS as f64;
+        let series = report.potential_series(interval);
+        out.push_str(&format!("\nnodes={nodes} (makespan {:.2}s)\n  E^b:", report.makespan_us / 1e6));
+        for e in &series {
+            out.push_str(&format!(" {e:.2}"));
+        }
+        out.push('\n');
+        json_series.push(Json::obj(vec![
+            ("nodes", Json::from(nodes as u64)),
+            ("makespan_us", Json::Num(report.makespan_us)),
+            ("interval_us", Json::Num(interval)),
+            ("e_b", Json::Arr(series.iter().map(|e| Json::Num(*e)).collect())),
+        ]));
+    }
+    ctx.write_json("fig1", &Json::obj(vec![("series", Json::Arr(json_series))]))?;
+    Ok(out)
+}

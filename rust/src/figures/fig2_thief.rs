@@ -1,0 +1,43 @@
+//! Fig. 2 — thief policies: counting only ready tasks vs ready +
+//! successor tasks, 4 nodes, Single victim policy. Shape: the
+//! successor-aware policy beats both ReadyOnly and No-Steal; ReadyOnly
+//! over-steals and can be worse than not stealing at all.
+
+use anyhow::Result;
+
+use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::util::json::Json;
+
+use super::common::{fmt_summary, Ctx};
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let nodes = 4;
+    let mk = |thief| MigrateConfig {
+        enabled: true,
+        thief,
+        victim: VictimPolicy::Single,
+        use_waiting_time: true,
+        poll_interval_us: 100.0,
+        max_inflight: 1,
+            migrate_overhead_us: 150.0,
+    };
+    let cells = [
+        ("No-Steal", MigrateConfig::disabled()),
+        ("Ready-only", mk(ThiefPolicy::ReadyOnly)),
+        ("Ready+Successors", mk(ThiefPolicy::ReadySuccessors)),
+    ];
+    let mut out = String::new();
+    out.push_str("Fig.2 — thief policies (4 nodes, Single victim policy)\n");
+    let mut rows = Vec::new();
+    for (label, mc) in cells {
+        let times = ctx.exec_times_cholesky(nodes, mc);
+        out.push_str(&fmt_summary(label, &times));
+        out.push('\n');
+        rows.push(Json::obj(vec![
+            ("policy", Json::from(label)),
+            ("times_s", Json::Arr(times.iter().map(|t| Json::Num(*t)).collect())),
+        ]));
+    }
+    ctx.write_json("fig2", &Json::obj(vec![("rows", Json::Arr(rows))]))?;
+    Ok(out)
+}

@@ -1,0 +1,107 @@
+//! Fig. 4 — execution time per victim policy across node counts (multi-
+//! run distributions; stealing reduces run-to-run variance), and
+//! Fig. 5 — speedup vs No-Steal (peaks near 8 nodes, ~1.35×, declining
+//! at larger node counts as the potential for stealing shrinks).
+
+use anyhow::Result;
+
+use crate::stats::Summary;
+use crate::util::json::Json;
+
+use super::common::{fmt_summary, victim_cells, Ctx};
+
+pub const NODE_COUNTS: [u32; 4] = [2, 4, 8, 16];
+
+/// Shared sweep for fig4/fig5/fig8: every victim policy × node count ×
+/// seed, returning (policy label, nodes, times, success %).
+pub fn sweep(ctx: &Ctx) -> Vec<(String, u32, Vec<f64>, f64)> {
+    let mut rows = Vec::new();
+    for nodes in NODE_COUNTS {
+        for cell in victim_cells(ctx.scale, true) {
+            let mut times = Vec::new();
+            let mut success = 0.0;
+            for s in 0..ctx.seeds {
+                let r = ctx.run_cholesky(nodes, cell.migrate, 2000 + s, false);
+                times.push(r.makespan_us / 1e6);
+                success += r.total_steals().success_pct();
+            }
+            rows.push((
+                cell.label.clone(),
+                nodes,
+                times,
+                success / ctx.seeds as f64,
+            ));
+        }
+    }
+    rows
+}
+
+pub fn run_fig4(ctx: &Ctx, rows: &[(String, u32, Vec<f64>, f64)]) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Fig.4 — execution time per victim policy × nodes (multi-run)\n");
+    let mut json_rows = Vec::new();
+    for nodes in NODE_COUNTS {
+        out.push_str(&format!("\nnodes={nodes}\n"));
+        for (label, n, times, _) in rows.iter().filter(|(_, n, _, _)| *n == nodes) {
+            out.push_str(&format!("  {}\n", fmt_summary(label, times)));
+            json_rows.push(Json::obj(vec![
+                ("policy", Json::from(label.as_str())),
+                ("nodes", Json::from(*n as u64)),
+                ("times_s", Json::Arr(times.iter().map(|t| Json::Num(*t)).collect())),
+            ]));
+        }
+        // variance-reduction check (the paper's §4.4 observation)
+        let cv_of = |lbl: &str| {
+            rows.iter()
+                .find(|(l, n, _, _)| l == lbl && *n == nodes)
+                .map(|(_, _, t, _)| Summary::of(t).cv())
+                .unwrap_or(0.0)
+        };
+        out.push_str(&format!(
+            "  cv: No-Steal {:.3} vs best-steal {:.3}\n",
+            cv_of("No-Steal"),
+            ["Chunk", "Half", "Single"]
+                .iter()
+                .map(|l| cv_of(l))
+                .fold(f64::INFINITY, f64::min)
+        ));
+    }
+    ctx.write_json("fig4", &Json::obj(vec![("rows", Json::Arr(json_rows))]))?;
+    Ok(out)
+}
+
+pub fn run_fig5(ctx: &Ctx, rows: &[(String, u32, Vec<f64>, f64)]) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Fig.5 — speedup vs No-Steal per victim policy × nodes\n");
+    out.push_str(&format!(
+        "{:<8} {:>10} {:>10} {:>10}\n",
+        "nodes", "Chunk", "Half", "Single"
+    ));
+    let mut json_rows = Vec::new();
+    for nodes in NODE_COUNTS {
+        let base = rows
+            .iter()
+            .find(|(l, n, _, _)| l == "No-Steal" && *n == nodes)
+            .map(|(_, _, t, _)| Summary::of(t).mean)
+            .unwrap();
+        let mut line = format!("{nodes:<8}");
+        for policy in ["Chunk", "Half", "Single"] {
+            let mean = rows
+                .iter()
+                .find(|(l, n, _, _)| l == policy && *n == nodes)
+                .map(|(_, _, t, _)| Summary::of(t).mean)
+                .unwrap();
+            let speedup = base / mean;
+            line.push_str(&format!(" {speedup:>10.3}"));
+            json_rows.push(Json::obj(vec![
+                ("policy", Json::from(policy)),
+                ("nodes", Json::from(nodes as u64)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    ctx.write_json("fig5", &Json::obj(vec![("rows", Json::Arr(json_rows))]))?;
+    Ok(out)
+}

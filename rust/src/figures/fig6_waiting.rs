@@ -1,0 +1,37 @@
+//! Fig. 6 — victim policies with and without the waiting-time gate
+//! (4 nodes). Shape: the gate barely moves Chunk, significantly improves
+//! Half and Single; without the gate Half is worse than Chunk, with it
+//! Half edges ahead (by a small margin).
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::common::{fmt_summary, victim_cells, Ctx};
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let nodes = 4;
+    let mut out = String::new();
+    out.push_str("Fig.6 — waiting-time gate ablation (4 nodes)\n");
+    let mut rows = Vec::new();
+    for gate in [false, true] {
+        out.push_str(&format!(
+            "\nwaiting-time {}\n",
+            if gate { "CONSIDERED" } else { "ignored" }
+        ));
+        for cell in victim_cells(ctx.scale, gate) {
+            if cell.label == "No-Steal" {
+                continue;
+            }
+            let times = ctx.exec_times_cholesky(nodes, cell.migrate);
+            out.push_str(&format!("  {}\n", fmt_summary(&cell.label, &times)));
+            rows.push(Json::obj(vec![
+                ("policy", Json::from(cell.label.as_str())),
+                ("waiting_time", Json::Bool(gate)),
+                ("times_s", Json::Arr(times.iter().map(|t| Json::Num(*t)).collect())),
+            ]));
+        }
+    }
+    ctx.write_json("fig6", &Json::obj(vec![("rows", Json::Arr(rows))]))?;
+    Ok(out)
+}

@@ -1,0 +1,35 @@
+//! Fig. 7 — victim policies on the UTS benchmark
+//! (b0=120, m=5, q=0.200014, g=12e6; child-follows-parent placement).
+//! Shape (matching Perarnau & Sato and the paper): Half ≈ Single, both
+//! far better than small fixed chunks; everything beats No-Steal by an
+//! enormous factor because without stealing the whole tree runs on one
+//! node.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::common::{fmt_summary, victim_cells, Ctx};
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let nodes = 4;
+    let mut out = String::new();
+    out.push_str("Fig.7 — UTS victim policies (4 nodes)\n");
+    let tree = ctx.uts(nodes, 0);
+    out.push_str(&format!("tree size: {} nodes\n", tree.tree_size(100_000_000)));
+    let mut rows = Vec::new();
+    for cell in victim_cells(ctx.scale, true) {
+        let mut times = Vec::new();
+        for s in 0..ctx.seeds {
+            let r = ctx.run_uts(nodes, cell.migrate, 3000 + s);
+            times.push(r.makespan_us / 1e6);
+        }
+        out.push_str(&format!("  {}\n", fmt_summary(&cell.label, &times)));
+        rows.push(Json::obj(vec![
+            ("policy", Json::from(cell.label.as_str())),
+            ("times_s", Json::Arr(times.iter().map(|t| Json::Num(*t)).collect())),
+        ]));
+    }
+    ctx.write_json("fig7", &Json::obj(vec![("rows", Json::Arr(rows))]))?;
+    Ok(out)
+}

@@ -1,0 +1,41 @@
+//! Fig. 8 — steal success percentage per victim policy × nodes. Shape:
+//! Chunk has the highest success rate under high imbalance, yet Fig. 5
+//! shows Single gets the best speedup — stealing *more* does not mean
+//! stealing *better*.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::common::Ctx;
+use super::fig45_victim::NODE_COUNTS;
+
+pub fn run(ctx: &Ctx, rows: &[(String, u32, Vec<f64>, f64)]) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Fig.8 — steal success percentage per victim policy × nodes\n");
+    out.push_str(&format!(
+        "{:<8} {:>10} {:>10} {:>10}\n",
+        "nodes", "Chunk", "Half", "Single"
+    ));
+    let mut json_rows = Vec::new();
+    for nodes in NODE_COUNTS {
+        let mut line = format!("{nodes:<8}");
+        for policy in ["Chunk", "Half", "Single"] {
+            let pct = rows
+                .iter()
+                .find(|(l, n, _, _)| l == policy && *n == nodes)
+                .map(|(_, _, _, pct)| *pct)
+                .unwrap_or(0.0);
+            line.push_str(&format!(" {pct:>9.1}%"));
+            json_rows.push(Json::obj(vec![
+                ("policy", Json::from(policy)),
+                ("nodes", Json::from(nodes as u64)),
+                ("success_pct", Json::Num(pct)),
+            ]));
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    ctx.write_json("fig8", &Json::obj(vec![("rows", Json::Arr(json_rows))]))?;
+    Ok(out)
+}

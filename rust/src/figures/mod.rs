@@ -1,0 +1,85 @@
+//! Figure/table regeneration harness — one entry per table and figure in
+//! the paper's evaluation (§4). See DESIGN.md's experiment index for the
+//! workload, parameters and "shape that must hold" per experiment.
+//!
+//! Entry point: [`run`] with a figure id (`fig1`..`fig8`, `table1`,
+//! `stats`, or `all`). Output goes to stdout and `<out>/<id>.json`.
+
+pub mod common;
+pub mod fig1_potential;
+pub mod fig2_thief;
+pub mod fig3_arrival;
+pub mod fig45_victim;
+pub mod fig6_waiting;
+pub mod fig7_uts;
+pub mod fig8_success;
+pub mod stats_check;
+pub mod table1_granularity;
+
+use anyhow::{bail, Result};
+
+pub use common::{Ctx, Scale};
+
+pub const ALL_IDS: [&str; 10] = [
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "table1", "stats",
+];
+
+/// Run one figure (or `all`); returns the rendered report text.
+pub fn run(ctx: &Ctx, id: &str) -> Result<String> {
+    match id {
+        "fig1" => fig1_potential::run(ctx),
+        "fig2" => fig2_thief::run(ctx),
+        "fig3" => fig3_arrival::run(ctx),
+        "fig4" | "fig5" | "fig8" => {
+            // Shared sweep: compute once, render the requested view.
+            let rows = fig45_victim::sweep(ctx);
+            match id {
+                "fig4" => fig45_victim::run_fig4(ctx, &rows),
+                "fig5" => fig45_victim::run_fig5(ctx, &rows),
+                _ => fig8_success::run(ctx, &rows),
+            }
+        }
+        "fig6" => fig6_waiting::run(ctx),
+        "fig7" => fig7_uts::run(ctx),
+        "table1" => table1_granularity::run(ctx),
+        "stats" => stats_check::run(ctx),
+        "all" => {
+            let mut out = String::new();
+            out.push_str(&fig1_potential::run(ctx)?);
+            out.push('\n');
+            out.push_str(&fig2_thief::run(ctx)?);
+            out.push('\n');
+            out.push_str(&fig3_arrival::run(ctx)?);
+            out.push('\n');
+            let rows = fig45_victim::sweep(ctx);
+            out.push_str(&fig45_victim::run_fig4(ctx, &rows)?);
+            out.push('\n');
+            out.push_str(&fig45_victim::run_fig5(ctx, &rows)?);
+            out.push('\n');
+            out.push_str(&fig8_success::run(ctx, &rows)?);
+            out.push('\n');
+            out.push_str(&fig6_waiting::run(ctx)?);
+            out.push('\n');
+            out.push_str(&fig7_uts::run(ctx)?);
+            out.push('\n');
+            out.push_str(&table1_granularity::run(ctx)?);
+            out.push('\n');
+            out.push_str(&stats_check::run(ctx)?);
+            Ok(out)
+        }
+        other => bail!("unknown figure id '{other}' (try: {} or all)", ALL_IDS.join(", ")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn unknown_id_is_error() {
+        let dir = std::env::temp_dir().join("parsteal-figtest-err");
+        let ctx = Ctx::new(Scale::Small, 1, Path::new("artifacts"), &dir);
+        assert!(run(&ctx, "fig99").is_err());
+    }
+}

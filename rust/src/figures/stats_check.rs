@@ -1,0 +1,66 @@
+//! §4 methodology checks: normality of execution times
+//! (D'Agostino–Pearson + Shapiro–Wilk) and one-way ANOVA between the
+//! steal and no-steal populations.
+
+use anyhow::Result;
+
+use crate::migrate::MigrateConfig;
+use crate::stats::{anova_one_way, dagostino_pearson, shapiro_wilk};
+use crate::util::json::Json;
+
+use super::common::Ctx;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let nodes = 8; // where the paper's effect peaks
+    let reps = ctx.seeds.max(12); // normality tests want n >= 8
+    let mut no_steal = Vec::new();
+    let mut steal = Vec::new();
+    for s in 0..reps {
+        no_steal.push(
+            ctx.run_cholesky(nodes, MigrateConfig::disabled(), 5000 + s, false)
+                .makespan_us
+                / 1e6,
+        );
+        let half = crate::migrate::MigrateConfig {
+            victim: crate::migrate::VictimPolicy::Half,
+            ..MigrateConfig::default()
+        };
+        steal.push(ctx.run_cholesky(nodes, half, 6000 + s, false).makespan_us / 1e6);
+    }
+    let mut out = String::new();
+    out.push_str(&format!("§4 statistics ({} runs per group, {nodes} nodes)\n", reps));
+    for (label, xs) in [("No-Steal", &no_steal), ("Steal", &steal)] {
+        let dp = dagostino_pearson(xs);
+        let sw = shapiro_wilk(xs);
+        out.push_str(&format!(
+            "{label:<10} D'Agostino-Pearson K²={:.2} p={:.3}   Shapiro-Wilk W={:.4} p={:.3}\n",
+            dp.statistic, dp.p_value, sw.statistic, sw.p_value
+        ));
+    }
+    let an = anova_one_way(&[&no_steal, &steal]);
+    out.push_str(&format!(
+        "ANOVA steal vs no-steal: F({:.0},{:.0}) = {:.2}, p = {:.4} -> {}\n",
+        an.df_between,
+        an.df_within,
+        an.f_statistic,
+        an.p_value,
+        if an.significant(0.05) {
+            "different distributions (matches the paper)"
+        } else {
+            "NOT significant at this scale"
+        }
+    ));
+    ctx.write_json(
+        "stats",
+        &Json::obj(vec![
+            ("anova_f", Json::Num(an.f_statistic)),
+            ("anova_p", Json::Num(an.p_value)),
+            (
+                "no_steal_s",
+                Json::Arr(no_steal.iter().map(|t| Json::Num(*t)).collect()),
+            ),
+            ("steal_s", Json::Arr(steal.iter().map(|t| Json::Num(*t)).collect())),
+        ]),
+    )?;
+    Ok(out)
+}

@@ -1,0 +1,60 @@
+//! Table 1 — speedup per victim policy across tile sizes (granularity).
+//! Shape: work stealing gets more effective as granularity grows; at the
+//! smallest tiles Half drops below 1.0 (stealing *hurts*) and Chunk
+//! outperforms Half.
+
+use anyhow::Result;
+
+use crate::stats::Summary;
+use crate::util::json::Json;
+
+use super::common::{victim_cells, Ctx};
+
+pub const TILE_SIZES: [u32; 5] = [10, 20, 30, 40, 50];
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let nodes = 4;
+    let mut out = String::new();
+    out.push_str("Table 1 — execution time (s) and speedup vs tile size (4 nodes)\n");
+    out.push_str(&format!(
+        "{:<10} {:>9} {:>9} {:>9} {:>9} | {:>7} {:>7} {:>7}\n",
+        "tile", "No-Steal", "Chunk", "Half", "Single", "S.Chunk", "S.Half", "S.Single"
+    ));
+    let mut json_rows = Vec::new();
+    for tile in TILE_SIZES {
+        let mut means = std::collections::BTreeMap::new();
+        for cell in victim_cells(ctx.scale, true) {
+            let mut times = Vec::new();
+            for s in 0..ctx.seeds {
+                let graph = ctx.cholesky_custom(nodes, ctx.scale.tiles(), tile, 0);
+                let r = ctx.run_cholesky_graph(graph, cell.migrate, 4000 + s, false);
+                times.push(r.makespan_us / 1e6);
+            }
+            means.insert(cell.label.clone(), Summary::of(&times).mean);
+        }
+        let base = means["No-Steal"];
+        out.push_str(&format!(
+            "{:<10} {:>9.3} {:>9.3} {:>9.3} {:>9.3} | {:>7.3} {:>7.3} {:>7.3}\n",
+            format!("{tile}x{tile}"),
+            base,
+            means["Chunk"],
+            means["Half"],
+            means["Single"],
+            base / means["Chunk"],
+            base / means["Half"],
+            base / means["Single"],
+        ));
+        json_rows.push(Json::obj(vec![
+            ("tile", Json::from(tile as u64)),
+            ("no_steal_s", Json::Num(base)),
+            ("chunk_s", Json::Num(means["Chunk"])),
+            ("half_s", Json::Num(means["Half"])),
+            ("single_s", Json::Num(means["Single"])),
+            ("speedup_chunk", Json::Num(base / means["Chunk"])),
+            ("speedup_half", Json::Num(base / means["Half"])),
+            ("speedup_single", Json::Num(base / means["Single"])),
+        ]));
+    }
+    ctx.write_json("table1", &Json::obj(vec![("rows", Json::Arr(json_rows))]))?;
+    Ok(out)
+}

@@ -1,0 +1,38 @@
+//! # parsteal — distributed work stealing in a task-based dataflow runtime
+//!
+//! A from-scratch reproduction of *"Distributed Work Stealing in a
+//! Task-Based Dataflow Runtime"* (John, Milthorpe, Strazdins; CS.DC
+//! 2022): a PaRSEC-like dataflow runtime with a TTG-style task-graph API,
+//! extended with the paper's contribution — a per-node *migrate thread*
+//! implementing distributed work stealing with successor-aware thief
+//! policies and waiting-time-gated victim policies.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: dataflow engine, node-level
+//!   priority schedulers, message-passing fabric, Safra termination
+//!   detection, the `migrate` module, workloads, the discrete-event
+//!   simulator used for figure regeneration, and the launcher.
+//! * **L2/L1 (python/, build time only)** — JAX task bodies composed of
+//!   Pallas tile kernels, AOT-lowered to HLO text artifacts.
+//! * **runtime bridge** — [`runtime`] loads the artifacts through the
+//!   PJRT CPU client and executes them from worker threads; Python never
+//!   runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod comm;
+pub mod config;
+pub mod dataflow;
+pub mod figures;
+pub mod metrics;
+pub mod migrate;
+pub mod node;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stats;
+pub mod term;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,263 @@
+//! `repro` — the leader entrypoint / CLI launcher.
+//!
+//! Subcommands:
+//!
+//! * `run`       — one run (DES by default; `--backend real` for the
+//!   threaded runtime, `--backend pjrt` for real PJRT tile kernels).
+//! * `figure`    — regenerate a paper figure/table (`fig1..fig8`,
+//!   `table1`, `stats`, `all`).
+//! * `calibrate` — measure PJRT kernel timings, fit and store the DES
+//!   cost model.
+//! * `verify`    — end-to-end numerical check: distributed Cholesky via
+//!   PJRT artifacts, ‖L·Lᵀ − A‖∞.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use parsteal::config::{RunConfig, Workload};
+use parsteal::dataflow::ttg::TaskGraph;
+use parsteal::figures::{self, Ctx, Scale};
+use parsteal::node::{Cluster, ClusterConfig, SpinExecutor};
+use parsteal::runtime::executor::build_tile_store;
+use parsteal::runtime::{calibrate, KernelService, PjrtCholeskyExecutor};
+use parsteal::sim::{CostModel, Simulator};
+use parsteal::util::cli::Args;
+use parsteal::workloads::{CholeskyGraph, CholeskyParams, UtsGraph};
+
+fn usage() -> String {
+    "usage: repro <run|figure|calibrate|verify> [flags]\n\
+     \n\
+     repro run [--workload cholesky|uts] [--nodes 4] [--workers 40]\n\
+     \x20         [--tiles 200] [--tile-size 50] [--steal true] [--victim single]\n\
+     \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
+     \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
+     repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
+     \x20         [--figure-scale small|paper] [--artifacts artifacts]\n\
+     repro calibrate [--reps 50] [--out artifacts/costmodel.json]\n\
+     repro verify [--tiles 6] [--tile-size 16] [--nodes 2] [--workers 2]\n\
+     \x20         [--steal true] [--artifacts artifacts] [--pjrt-threads 2]\n"
+        .to_string()
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv)?;
+    let Some(cmd) = args.positional.first().cloned() else {
+        eprint!("{}", usage());
+        std::process::exit(2);
+    };
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "figure" => cmd_figure(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "verify" => cmd_verify(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let backend = args.str_or("backend", "sim");
+    let artifacts = artifacts_dir(args);
+    args.check_unknown()?;
+    let cost = CostModel::load_or_default(&artifacts.join("costmodel.json"));
+
+    let report = match (&cfg.workload, backend.as_str()) {
+        (Workload::Cholesky(p), "sim") => {
+            let graph = Arc::new(CholeskyGraph::new(p.clone()));
+            Simulator::new(graph, cfg.sim_config(), cost, cfg.migrate, p.tile_size).run()
+        }
+        (Workload::Uts(p), "sim") => {
+            let graph = Arc::new(UtsGraph::new(*p));
+            Simulator::new(graph, cfg.sim_config(), cost, cfg.migrate, 0).run()
+        }
+        (Workload::Cholesky(p), "real") => {
+            let graph = Arc::new(CholeskyGraph::new(p.clone()));
+            let g2 = graph.clone();
+            let tile = p.tile_size;
+            let ex = Arc::new(SpinExecutor::new(cost, tile, move |t| g2.work_units(t)));
+            Cluster::run(
+                graph,
+                ClusterConfig {
+                    workers_per_node: cfg.workers_per_node,
+                    link: cfg.link,
+                    migrate: cfg.migrate,
+                    seed: cfg.seed,
+                    record_polls: true,
+                },
+                ex,
+            )
+        }
+        (Workload::Cholesky(p), "pjrt") => {
+            let graph = Arc::new(CholeskyGraph::new(p.clone()));
+            let svc = KernelService::start(
+                artifacts,
+                Some(vec![p.tile_size]),
+                args.u64_or("pjrt-threads", 2)? as usize,
+            )?;
+            let ex = Arc::new(PjrtCholeskyExecutor::new(graph.clone(), svc));
+            Cluster::run(
+                graph,
+                ClusterConfig {
+                    workers_per_node: cfg.workers_per_node,
+                    link: cfg.link,
+                    migrate: cfg.migrate,
+                    seed: cfg.seed,
+                    record_polls: true,
+                },
+                ex,
+            )
+        }
+        (Workload::Uts(p), "real") => {
+            let graph = Arc::new(UtsGraph::new(*p));
+            let g2 = graph.clone();
+            let ex = Arc::new(SpinExecutor::new(cost, 0, move |t| g2.work_units(t)));
+            Cluster::run(
+                graph,
+                ClusterConfig {
+                    workers_per_node: cfg.workers_per_node,
+                    link: cfg.link,
+                    migrate: cfg.migrate,
+                    seed: cfg.seed,
+                    record_polls: true,
+                },
+                ex,
+            )
+        }
+        (_, other) => bail!("unsupported backend '{other}' for this workload"),
+    };
+
+    let steals = report.total_steals();
+    println!("workload:        {}", report.workload);
+    println!("backend:         {backend}");
+    println!(
+        "nodes x workers: {} x {}",
+        report.nodes.len(),
+        report.workers_per_node
+    );
+    println!("tasks executed:  {}", report.tasks_total_executed());
+    println!("makespan:        {:.3} s", report.makespan_us / 1e6);
+    println!(
+        "per-node tasks:  {:?}",
+        report
+            .nodes
+            .iter()
+            .map(|n| n.tasks_executed)
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "steals:          {} requests, {} successful ({:.1}%), {} tasks migrated, {} wt-denials",
+        steals.requests_sent,
+        steals.successful_steals,
+        steals.success_pct(),
+        steals.tasks_migrated,
+        steals.waiting_time_denials
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let scale = Scale::parse(&args.str_or("figure-scale", "small"));
+    let seeds = args.u64_or("seeds", 5)?;
+    let artifacts = artifacts_dir(args);
+    args.check_unknown()?;
+    let ctx = Ctx::new(scale, seeds, &artifacts, &out);
+    let text = figures::run(&ctx, &id)?;
+    println!("{text}");
+    eprintln!("(machine-readable output under {})", out.display());
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let artifacts = artifacts_dir(args);
+    let reps = args.u64_or("reps", 50)? as usize;
+    let out = PathBuf::from(args.str_opt("out").unwrap_or_else(|| {
+        artifacts
+            .join("costmodel.json")
+            .to_string_lossy()
+            .into_owned()
+    }));
+    args.check_unknown()?;
+    let model = calibrate(&artifacts, reps, Some(&out))?;
+    println!("calibrated cost model -> {}", out.display());
+    println!("{}", model.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let tiles = args.u64_or("tiles", 6)? as u32;
+    let tile_size = args.u64_or("tile-size", 16)? as u32;
+    let nodes = args.u64_or("nodes", 2)? as u32;
+    let workers = args.u64_or("workers", 2)? as usize;
+    let steal = args.bool_or("steal", true)?;
+    let threads = args.u64_or("pjrt-threads", 2)? as usize;
+    let artifacts = artifacts_dir(args);
+    args.check_unknown()?;
+
+    let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+        tiles,
+        tile_size,
+        nodes,
+        dense_fraction: 1.0,
+        seed: 0xE2E,
+        all_dense: true,
+    }));
+    let reference = build_tile_store(&graph);
+    let svc = KernelService::start(artifacts, Some(vec![tile_size]), threads)?;
+    let ex = Arc::new(PjrtCholeskyExecutor::new(graph.clone(), svc));
+    let t0 = std::time::Instant::now();
+    let report = Cluster::run(
+        graph.clone(),
+        ClusterConfig {
+            workers_per_node: workers,
+            link: parsteal::comm::LinkModel::ideal(),
+            migrate: if steal {
+                parsteal::migrate::MigrateConfig {
+                    poll_interval_us: 50.0,
+                    ..Default::default()
+                }
+            } else {
+                parsteal::migrate::MigrateConfig::disabled()
+            },
+            seed: 1,
+            record_polls: false,
+        },
+        ex.clone(),
+    );
+    let wall = t0.elapsed();
+    let err = ex.verify(&reference);
+    let steals = report.total_steals();
+    println!(
+        "verify: {}x{} tiles of {}x{} f64, {} nodes x {} workers, steal={}",
+        tiles, tiles, tile_size, tile_size, nodes, workers, steal
+    );
+    println!("tasks executed: {}", report.tasks_total_executed());
+    println!(
+        "steals: {} successful / {} requests, {} tasks migrated",
+        steals.successful_steals, steals.requests_sent, steals.tasks_migrated
+    );
+    println!("wall time: {:.3} s", wall.as_secs_f64());
+    println!("‖L·Lᵀ − A‖∞ = {err:.3e}");
+    if err < 1e-8 {
+        println!("VERIFY OK");
+        Ok(())
+    } else {
+        bail!("verification FAILED: error {err:.3e} above 1e-8")
+    }
+}

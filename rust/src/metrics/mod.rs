@@ -1,0 +1,235 @@
+//! Run reports and the paper's derived metrics.
+//!
+//! Both execution backends (the real threaded runtime and the DES)
+//! produce a [`RunReport`]; the figure harness post-processes reports
+//! into the quantities the paper plots: the work-stealing potential
+//! `E^b` (eq. 1–3), steal success percentages (Fig. 8), and the
+//! ready-at-arrival distribution (Fig. 3).
+
+use crate::comm::LinkModel;
+use crate::migrate::StealStats;
+use crate::util::json::Json;
+
+/// One ready-queue observation, taken whenever a worker completed a
+/// successful `select` (exactly the paper's §4.2 polling rule).
+#[derive(Clone, Copy, Debug)]
+pub struct PollSample {
+    pub t_us: f64,
+    pub ready: u32,
+}
+
+/// Per-node outcome of a run.
+#[derive(Clone, Debug, Default)]
+pub struct NodeReport {
+    pub tasks_executed: u64,
+    /// Total busy worker time (µs).
+    pub busy_us: f64,
+    /// Running mean execution time at end of run (µs).
+    pub avg_exec_us: f64,
+    pub steal: StealStats,
+    /// Select-time ready-queue polls (drives Fig. 1).
+    pub polls: Vec<PollSample>,
+    /// Ready-queue length observed when each stolen task arrived
+    /// (drives Fig. 3).
+    pub arrival_ready: Vec<PollSample>,
+}
+
+/// Outcome of one run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub workload: String,
+    pub makespan_us: f64,
+    pub nodes: Vec<NodeReport>,
+    pub total_tasks: u64,
+    pub workers_per_node: usize,
+    pub link: LinkModel,
+    /// DES only: events processed (engine throughput accounting).
+    pub events: u64,
+}
+
+impl RunReport {
+    pub fn total_steals(&self) -> StealStats {
+        let mut s = StealStats::default();
+        for n in &self.nodes {
+            s.merge(&n.steal);
+        }
+        s
+    }
+
+    pub fn tasks_total_executed(&self) -> u64 {
+        self.nodes.iter().map(|n| n.tasks_executed).sum()
+    }
+
+    /// Workload imbalance / potential-for-stealing series (§4.2).
+    ///
+    /// Splits `[0, makespan)` into intervals of `interval_us` and
+    /// computes, per interval `b`:
+    ///
+    /// ```text
+    /// w_i^b = mean_j(o_j^b) / max_j(o_j^b)      per-node normalized load
+    /// I^b   = max_i(w_i^b) − mean_i(w_i^b)      imbalance
+    /// E^b   = I^b · P                           potential
+    /// ```
+    ///
+    /// A node with no polls in an interval contributes `w_i = 0`
+    /// (no successful select ⇒ nothing to run ⇒ zero load).
+    pub fn potential_series(&self, interval_us: f64) -> Vec<f64> {
+        let p = self.nodes.len();
+        if p == 0 || self.makespan_us <= 0.0 {
+            return Vec::new();
+        }
+        let buckets = ((self.makespan_us / interval_us).ceil() as usize).max(1);
+        let mut series = Vec::with_capacity(buckets);
+        for b in 0..buckets {
+            let lo = b as f64 * interval_us;
+            let hi = lo + interval_us;
+            let mut w = Vec::with_capacity(p);
+            for node in &self.nodes {
+                let polled: Vec<f64> = node
+                    .polls
+                    .iter()
+                    .filter(|s| s.t_us >= lo && s.t_us < hi)
+                    .map(|s| s.ready as f64)
+                    .collect();
+                if polled.is_empty() {
+                    w.push(0.0);
+                    continue;
+                }
+                let max = polled.iter().cloned().fold(0.0, f64::max);
+                let mean = polled.iter().sum::<f64>() / polled.len() as f64;
+                w.push(if max > 0.0 { mean / max } else { 0.0 });
+            }
+            let wmax = w.iter().cloned().fold(0.0, f64::max);
+            let wmean = w.iter().sum::<f64>() / p as f64;
+            series.push((wmax - wmean) * p as f64);
+        }
+        series
+    }
+
+    /// All ready-at-arrival samples pooled across nodes (Fig. 3).
+    pub fn arrival_ready_all(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .nodes
+            .iter()
+            .flat_map(|n| n.arrival_ready.iter().map(|s| s.ready))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steals = self.total_steals();
+        Json::obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            ("makespan_us", Json::Num(self.makespan_us)),
+            ("total_tasks", Json::Num(self.total_tasks as f64)),
+            ("tasks_executed", Json::Num(self.tasks_total_executed() as f64)),
+            ("nodes", Json::Num(self.nodes.len() as f64)),
+            ("workers_per_node", Json::Num(self.workers_per_node as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("steal_requests", Json::Num(steals.requests_sent as f64)),
+            ("steal_successes", Json::Num(steals.successful_steals as f64)),
+            ("steal_success_pct", Json::Num(steals.success_pct())),
+            ("tasks_migrated", Json::Num(steals.tasks_migrated as f64)),
+            (
+                "waiting_time_denials",
+                Json::Num(steals.waiting_time_denials as f64),
+            ),
+            (
+                "per_node_tasks",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| Json::Num(n.tasks_executed as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node_with_polls(polls: &[(f64, u32)]) -> NodeReport {
+        NodeReport {
+            polls: polls
+                .iter()
+                .map(|&(t_us, ready)| PollSample { t_us, ready })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn balanced_load_has_zero_potential() {
+        let r = RunReport {
+            workload: "t".into(),
+            makespan_us: 100.0,
+            nodes: vec![
+                node_with_polls(&[(10.0, 4), (20.0, 4)]),
+                node_with_polls(&[(10.0, 7), (20.0, 7)]),
+            ],
+            total_tasks: 0,
+            workers_per_node: 1,
+            link: LinkModel::ideal(),
+            events: 0,
+        };
+        // each node's mean/max = 1 -> I = 0
+        let e = r.potential_series(100.0);
+        assert_eq!(e.len(), 1);
+        assert!(e[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn starving_node_raises_potential() {
+        let r = RunReport {
+            workload: "t".into(),
+            makespan_us: 100.0,
+            nodes: vec![
+                node_with_polls(&[(10.0, 4), (20.0, 4)]), // w=1
+                node_with_polls(&[]),                      // w=0 (starving)
+            ],
+            total_tasks: 0,
+            workers_per_node: 1,
+            link: LinkModel::ideal(),
+            events: 0,
+        };
+        let e = r.potential_series(100.0);
+        // w = [1, 0]: I = 1 - 0.5 = 0.5; E = I*P = 1.0
+        assert!((e[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interval_bucketing() {
+        let r = RunReport {
+            workload: "t".into(),
+            makespan_us: 30.0,
+            nodes: vec![node_with_polls(&[(5.0, 1), (15.0, 1), (25.0, 1)])],
+            total_tasks: 0,
+            workers_per_node: 1,
+            link: LinkModel::ideal(),
+            events: 0,
+        };
+        assert_eq!(r.potential_series(10.0).len(), 3);
+    }
+
+    #[test]
+    fn arrival_pool_sorted() {
+        let mut n1 = NodeReport::default();
+        n1.arrival_ready.push(PollSample { t_us: 1.0, ready: 9 });
+        let mut n2 = NodeReport::default();
+        n2.arrival_ready.push(PollSample { t_us: 2.0, ready: 3 });
+        let r = RunReport {
+            workload: "t".into(),
+            makespan_us: 1.0,
+            nodes: vec![n1, n2],
+            total_tasks: 0,
+            workers_per_node: 1,
+            link: LinkModel::ideal(),
+            events: 0,
+        };
+        assert_eq!(r.arrival_ready_all(), vec![3, 9]);
+    }
+}

@@ -1,0 +1,23 @@
+//! The `migrate` module: distributed work stealing (§3 of the paper).
+//!
+//! A dedicated migrate thread per node runs all stealing-related
+//! activity. The *thief* side watches for starvation and issues steal
+//! requests to randomly-selected victims; the *victim* side bounds how
+//! many tasks a request may take (victim policy) and — the paper's
+//! addition — permits a steal only when the migrated task would
+//! otherwise wait longer in the victim's queue than the migration takes
+//! (the waiting-time gate).
+//!
+//! Both the real runtime ([`crate::node`]) and the discrete-event
+//! simulator ([`crate::sim`]) drive the exact same policy code here, so
+//! figure regeneration exercises the same decision logic the live system
+//! runs.
+
+pub mod policy;
+pub mod protocol;
+
+pub use policy::{
+    is_starving, migrate_time_us, steal_allowance, waiting_time_us, MigrateConfig,
+    StarvationView, ThiefPolicy, VictimPolicy,
+};
+pub use protocol::{StealStats, VictimDecision};

@@ -1,0 +1,224 @@
+//! Thief and victim policies (§3, "Thief policy" / "Victim policy").
+
+use std::str::FromStr;
+
+/// When does a node decide it is starving and becomes a thief?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThiefPolicy {
+    /// Naive: steal when there are no ready tasks. The paper shows this
+    /// over-steals — by the time a stolen task arrives, successors of
+    /// tasks that were executing have refilled the queue (Fig. 3).
+    ReadyOnly,
+    /// The paper's contribution: steal only when there are no ready tasks
+    /// *and* no local successors of tasks currently in execution (the
+    /// "future tasks" that will be scheduled in the near term).
+    ReadySuccessors,
+}
+
+/// How many tasks may one steal request take?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// Up to half of the currently stealable tasks.
+    Half,
+    /// Up to a fixed chunk (the paper uses 20 = half the worker threads).
+    Chunk(usize),
+    /// Exactly one task per request (Chunk(1)).
+    Single,
+}
+
+impl VictimPolicy {
+    pub fn label(&self) -> String {
+        match self {
+            VictimPolicy::Half => "Half".into(),
+            VictimPolicy::Chunk(k) => format!("Chunk({k})"),
+            VictimPolicy::Single => "Single".into(),
+        }
+    }
+}
+
+impl FromStr for VictimPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let l = s.to_ascii_lowercase();
+        if l == "half" {
+            Ok(VictimPolicy::Half)
+        } else if l == "single" {
+            Ok(VictimPolicy::Single)
+        } else if l == "chunk" {
+            Ok(VictimPolicy::Chunk(20))
+        } else if let Some(k) = l.strip_prefix("chunk") {
+            let k = k.trim_matches(|c| c == '(' || c == ')' || c == '-' || c == '=');
+            k.parse::<usize>()
+                .map(VictimPolicy::Chunk)
+                .map_err(|_| format!("bad chunk size in '{s}'"))
+        } else {
+            Err(format!(
+                "unknown victim policy '{s}' (half | chunk[N] | single)"
+            ))
+        }
+    }
+}
+
+impl FromStr for ThiefPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "ready" | "ready-only" | "readyonly" => Ok(ThiefPolicy::ReadyOnly),
+            "successors" | "ready-successors" | "readysuccessors" | "future" => {
+                Ok(ThiefPolicy::ReadySuccessors)
+            }
+            _ => Err(format!(
+                "unknown thief policy '{s}' (ready-only | ready-successors)"
+            )),
+        }
+    }
+}
+
+/// Full work-stealing configuration for a run.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrateConfig {
+    /// Stealing enabled at all? (`No-Steal` baseline when false.)
+    pub enabled: bool,
+    pub thief: ThiefPolicy,
+    pub victim: VictimPolicy,
+    /// The waiting-time gate on the victim side (§3, "Waiting Time").
+    pub use_waiting_time: bool,
+    /// Migrate-thread starvation check interval (µs).
+    pub poll_interval_us: f64,
+    /// Outstanding steal requests allowed per thief (PaRSEC uses 1:
+    /// a thief waits for the reply before asking elsewhere).
+    pub max_inflight: usize,
+    /// Fixed per-steal protocol overhead (µs) counted by the waiting-
+    /// time gate on top of the wire transfer: victim-side input-data
+    /// copy-out, thief-side task recreation, and the MPI rendezvous
+    /// handshake. PaRSEC-scale default; the Fig. 6 ablation is sensitive
+    /// to this being non-trivial, exactly as the paper argues.
+    pub migrate_overhead_us: f64,
+}
+
+impl MigrateConfig {
+    pub fn disabled() -> Self {
+        MigrateConfig {
+            enabled: false,
+            ..Self::default()
+        }
+    }
+}
+
+impl Default for MigrateConfig {
+    fn default() -> Self {
+        MigrateConfig {
+            enabled: true,
+            thief: ThiefPolicy::ReadySuccessors,
+            victim: VictimPolicy::Single,
+            use_waiting_time: true,
+            poll_interval_us: 100.0,
+            max_inflight: 1,
+            migrate_overhead_us: 150.0,
+        }
+    }
+}
+
+/// A thief-side snapshot of the node state, fed to the starvation check.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StarvationView {
+    /// Ready tasks waiting in the scheduler queue.
+    pub ready: usize,
+    /// Local successors of tasks currently in execution — the "future
+    /// tasks" of the paper's improved thief policy.
+    pub executing_local_successors: usize,
+}
+
+/// Is this node starving under `policy`?
+pub fn is_starving(policy: ThiefPolicy, view: StarvationView) -> bool {
+    match policy {
+        ThiefPolicy::ReadyOnly => view.ready == 0,
+        ThiefPolicy::ReadySuccessors => view.ready == 0 && view.executing_local_successors == 0,
+    }
+}
+
+/// Victim-side upper bound on tasks allowed out per request, given the
+/// current count of stealable ready tasks.
+pub fn steal_allowance(policy: VictimPolicy, stealable: usize) -> usize {
+    match policy {
+        VictimPolicy::Half => stealable / 2,
+        VictimPolicy::Chunk(k) => stealable.min(k),
+        VictimPolicy::Single => stealable.min(1),
+    }
+}
+
+/// Expected waiting time before a queued task reaches a worker (§3):
+///
+/// ```text
+/// waiting = (#ready / #workers + 1) * average task execution time
+/// ```
+pub fn waiting_time_us(ready: usize, workers: usize, avg_exec_us: f64) -> f64 {
+    (ready as f64 / workers.max(1) as f64 + 1.0) * avg_exec_us
+}
+
+/// Time to migrate a task's inputs to the thief over the modeled link.
+pub fn migrate_time_us(latency_us: f64, payload_bytes: u64, bw_bytes_per_us: f64) -> f64 {
+    latency_us + payload_bytes as f64 / bw_bytes_per_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starvation_ready_only_ignores_future() {
+        let view = StarvationView {
+            ready: 0,
+            executing_local_successors: 12,
+        };
+        assert!(is_starving(ThiefPolicy::ReadyOnly, view));
+        assert!(!is_starving(ThiefPolicy::ReadySuccessors, view));
+    }
+
+    #[test]
+    fn starvation_requires_empty_queue() {
+        let view = StarvationView {
+            ready: 1,
+            executing_local_successors: 0,
+        };
+        assert!(!is_starving(ThiefPolicy::ReadyOnly, view));
+        assert!(!is_starving(ThiefPolicy::ReadySuccessors, view));
+    }
+
+    #[test]
+    fn allowances() {
+        assert_eq!(steal_allowance(VictimPolicy::Half, 40), 20);
+        assert_eq!(steal_allowance(VictimPolicy::Half, 1), 0);
+        assert_eq!(steal_allowance(VictimPolicy::Chunk(20), 7), 7);
+        assert_eq!(steal_allowance(VictimPolicy::Chunk(20), 100), 20);
+        assert_eq!(steal_allowance(VictimPolicy::Single, 9), 1);
+        assert_eq!(steal_allowance(VictimPolicy::Single, 0), 0);
+    }
+
+    #[test]
+    fn waiting_time_formula() {
+        // (#ready/#workers + 1) * avg: (40/40 + 1) * 10 = 20
+        assert_eq!(waiting_time_us(40, 40, 10.0), 20.0);
+        // empty queue still waits one average task
+        assert_eq!(waiting_time_us(0, 8, 5.0), 5.0);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!("half".parse::<VictimPolicy>().unwrap(), VictimPolicy::Half);
+        assert_eq!(
+            "chunk20".parse::<VictimPolicy>().unwrap(),
+            VictimPolicy::Chunk(20)
+        );
+        assert_eq!("chunk".parse::<VictimPolicy>().unwrap(), VictimPolicy::Chunk(20));
+        assert_eq!("single".parse::<VictimPolicy>().unwrap(), VictimPolicy::Single);
+        assert!("quarter".parse::<VictimPolicy>().is_err());
+        assert_eq!(
+            "ready-successors".parse::<ThiefPolicy>().unwrap(),
+            ThiefPolicy::ReadySuccessors
+        );
+        assert!("eager".parse::<ThiefPolicy>().is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Victim-side steal decision and shared steal accounting.
+
+use crate::dataflow::task::TaskDesc;
+use crate::dataflow::ttg::TaskGraph;
+use crate::sched::SchedQueue;
+
+use super::policy::{migrate_time_us, steal_allowance, waiting_time_us, MigrateConfig};
+
+/// Outcome of processing one steal request at the victim.
+#[derive(Debug, Default)]
+pub struct VictimDecision {
+    /// Tasks extracted for migration (may be empty — steal failed).
+    pub tasks: Vec<TaskDesc>,
+    /// Total input payload that must travel with them.
+    pub payload_bytes: u64,
+    /// Denied by the waiting-time gate (vs merely nothing stealable).
+    pub denied_by_waiting_time: bool,
+}
+
+/// Apply the victim policy + waiting-time gate to the node's queue.
+///
+/// `avg_exec_us` is the victim's running average task execution time
+/// ("execution time elapsed / tasks executed till now"), `workers` its
+/// worker-thread count, and the link parameters describe the path to the
+/// thief. The extraction *competes* with worker `select`s — the caller
+/// holds the queue lock only for the duration of this call, so the
+/// allowance is best-effort exactly as §3 describes.
+pub fn decide_steal(
+    cfg: &MigrateConfig,
+    graph: &dyn TaskGraph,
+    queue: &mut SchedQueue,
+    workers: usize,
+    avg_exec_us: f64,
+    link_latency_us: f64,
+    link_bw_bytes_per_us: f64,
+) -> VictimDecision {
+    let stealable = queue.count_matching(|t| graph.is_stealable(t));
+    let allowed = steal_allowance(cfg.victim, stealable);
+    if allowed == 0 {
+        return VictimDecision::default();
+    }
+
+    if cfg.use_waiting_time {
+        // Gate: allow the steal only if the task would wait longer for a
+        // local worker than the migration takes. The waiting time uses
+        // the *total* ready count (all queued tasks delay each other).
+        let waiting = waiting_time_us(queue.len(), workers, avg_exec_us);
+        // Extract first, then re-insert if the gate fails: the gate needs
+        // the concrete payload size of the tasks that would migrate.
+        let tasks = queue.extract_for_steal(allowed, |t| graph.is_stealable(t));
+        if tasks.is_empty() {
+            return VictimDecision::default();
+        }
+        let payload: u64 = tasks.iter().map(|t| graph.payload_bytes(*t)).sum();
+        // The gate compares the waiting time against the time to migrate
+        // the whole batch: a Half-policy steal of dozens of tasks moves
+        // dozens of input tile sets, and every one of them is delayed by
+        // the full transfer (§3 "time required to migrate the task").
+        let migrate = cfg.migrate_overhead_us
+            + migrate_time_us(link_latency_us, payload, link_bw_bytes_per_us);
+        if migrate < waiting {
+            return VictimDecision {
+                tasks,
+                payload_bytes: payload,
+                denied_by_waiting_time: false,
+            };
+        }
+        // Denied: put the tasks back.
+        for t in tasks {
+            queue.insert(t, graph.priority(t));
+        }
+        VictimDecision {
+            tasks: Vec::new(),
+            payload_bytes: 0,
+            denied_by_waiting_time: true,
+        }
+    } else {
+        let tasks = queue.extract_for_steal(allowed, |t| graph.is_stealable(t));
+        let payload = tasks.iter().map(|t| graph.payload_bytes(*t)).sum();
+        VictimDecision {
+            tasks,
+            payload_bytes: payload,
+            denied_by_waiting_time: false,
+        }
+    }
+}
+
+/// Per-node steal accounting (drives Fig. 8 and the §4 analyses).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StealStats {
+    /// Thief side: requests sent.
+    pub requests_sent: u64,
+    /// Thief side: replies that contained at least one task.
+    pub successful_steals: u64,
+    /// Thief side: tasks received.
+    pub tasks_received: u64,
+    /// Victim side: requests processed.
+    pub requests_served: u64,
+    /// Victim side: tasks given away.
+    pub tasks_migrated: u64,
+    /// Victim side: denials due to the waiting-time gate.
+    pub waiting_time_denials: u64,
+    /// Victim side: denials because nothing was stealable.
+    pub empty_denials: u64,
+    /// Payload bytes migrated (victim side).
+    pub payload_bytes: u64,
+}
+
+impl StealStats {
+    pub fn success_pct(&self) -> f64 {
+        if self.requests_sent == 0 {
+            return 0.0;
+        }
+        100.0 * self.successful_steals as f64 / self.requests_sent as f64
+    }
+
+    pub fn merge(&mut self, o: &StealStats) {
+        self.requests_sent += o.requests_sent;
+        self.successful_steals += o.successful_steals;
+        self.tasks_received += o.tasks_received;
+        self.requests_served += o.requests_served;
+        self.tasks_migrated += o.tasks_migrated;
+        self.waiting_time_denials += o.waiting_time_denials;
+        self.empty_denials += o.empty_denials;
+        self.payload_bytes += o.payload_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
+    use crate::dataflow::ttg::TtgBuilder;
+    use crate::migrate::policy::{ThiefPolicy, VictimPolicy};
+
+    fn graph(payload: u64) -> impl TaskGraph {
+        TtgBuilder::new("g", 2)
+            .wrap_g(
+                "c",
+                |t| t.i % 2 == 0, // even tasks stealable
+                |_| vec![],
+                |_| 1,
+                |_| NodeId(0),
+                |_| 1.0,
+            )
+            .with_payload(move |_| payload)
+            .build()
+    }
+
+    fn queue_with(n: u32) -> SchedQueue {
+        let mut q = SchedQueue::new();
+        for i in 0..n {
+            q.insert(TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0), i as i64);
+        }
+        q
+    }
+
+    fn cfg(victim: VictimPolicy, gate: bool) -> MigrateConfig {
+        MigrateConfig {
+            enabled: true,
+            thief: ThiefPolicy::ReadySuccessors,
+            victim,
+            use_waiting_time: gate,
+            poll_interval_us: 100.0,
+            max_inflight: 1,
+            migrate_overhead_us: 150.0,
+        }
+    }
+
+    #[test]
+    fn half_policy_without_gate_takes_half_of_stealable() {
+        let g = graph(0);
+        let mut q = queue_with(8); // 4 stealable (even i)
+        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &mut q, 4, 10.0, 1.0, 1e9);
+        assert_eq!(d.tasks.len(), 2);
+        assert!(d.tasks.iter().all(|t| t.i % 2 == 0));
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn gate_denies_when_migration_slower_than_wait() {
+        let g = graph(1_000_000_000); // 1 GB payload
+        let mut q = queue_with(4);
+        // wait = (4/4+1)*10 = 20µs; migrate = 5 + 1e9/1e3 = huge -> deny
+        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &mut q, 4, 10.0, 5.0, 1e3);
+        assert!(d.tasks.is_empty());
+        assert!(d.denied_by_waiting_time);
+        assert_eq!(q.len(), 4, "denied tasks returned to the queue");
+    }
+
+    #[test]
+    fn gate_allows_cheap_migration() {
+        let g = graph(100);
+        let mut q = queue_with(40);
+        // wait = (40/4+1)*100 = 1100µs; migrate = 5 + 100/1e3 ≈ 5.1µs
+        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &mut q, 4, 100.0, 5.0, 1e3);
+        assert_eq!(d.tasks.len(), 1);
+        assert!(!d.denied_by_waiting_time);
+    }
+
+    #[test]
+    fn nothing_stealable_is_empty_not_denied() {
+        let g = TtgBuilder::new("g", 2)
+            .wrap_g("c", |_| false, |_| vec![], |_| 1, |_| NodeId(0), |_| 1.0)
+            .build();
+        let mut q = queue_with(4);
+        let d = decide_steal(&cfg(VictimPolicy::Half, true), &g, &mut q, 4, 10.0, 1.0, 1e3);
+        assert!(d.tasks.is_empty());
+        assert!(!d.denied_by_waiting_time);
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn half_needs_at_least_two_stealable() {
+        let g = graph(0);
+        let mut q = SchedQueue::new();
+        q.insert(TaskDesc::indexed(TaskClass::Synthetic, 0, 0, 0), 0);
+        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &mut q, 4, 10.0, 1.0, 1e3);
+        assert!(d.tasks.is_empty(), "half of 1 stealable = 0");
+    }
+
+    #[test]
+    fn stats_merge_and_success_pct() {
+        let mut a = StealStats {
+            requests_sent: 10,
+            successful_steals: 4,
+            ..Default::default()
+        };
+        let b = StealStats {
+            requests_sent: 10,
+            successful_steals: 8,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.success_pct(), 60.0);
+    }
+}

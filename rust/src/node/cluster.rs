@@ -1,0 +1,563 @@
+//! Multi-node threaded runtime: workers + comm thread + migrate thread
+//! per node, Safra termination, steal protocol over the message fabric.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comm::{LinkModel, Msg, Network, NodeMailbox};
+use crate::dataflow::task::{NodeId, TaskDesc};
+use crate::dataflow::ttg::TaskGraph;
+use crate::dataflow::ActivationTracker;
+use crate::metrics::{NodeReport, PollSample, RunReport};
+use crate::migrate::{
+    is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
+};
+use crate::sched::SchedQueue;
+use crate::term::{SafraAction, SafraState};
+use crate::util::rng::Rng;
+
+/// Real-mode run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub workers_per_node: usize,
+    pub link: LinkModel,
+    pub migrate: MigrateConfig,
+    pub seed: u64,
+    /// Record Fig.1/Fig.3 poll samples.
+    pub record_polls: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            workers_per_node: 4,
+            link: LinkModel::ideal(),
+            migrate: MigrateConfig::default(),
+            seed: 1,
+            record_polls: true,
+        }
+    }
+}
+
+/// Shared state of one runtime domain.
+struct NodeState {
+    id: NodeId,
+    queue: Mutex<SchedQueue>,
+    queue_cv: Condvar,
+    tracker: Mutex<ActivationTracker>,
+    executing: Mutex<HashSet<TaskDesc>>,
+    executing_count: AtomicUsize,
+    tasks_done: AtomicU64,
+    exec_sum_ns: AtomicU64,
+    busy_ns: AtomicU64,
+    steal: Mutex<StealStats>,
+    inflight_steals: AtomicUsize,
+    safra: Mutex<SafraState>,
+    shutdown: AtomicBool,
+    polls: Mutex<Vec<PollSample>>,
+    arrival_ready: Mutex<Vec<PollSample>>,
+    /// ns-since-start of the last task completion (makespan).
+    last_finish_ns: AtomicU64,
+}
+
+impl NodeState {
+    fn passive(&self) -> bool {
+        self.executing_count.load(Ordering::SeqCst) == 0
+            && self.queue.lock().unwrap().is_empty()
+    }
+}
+
+/// The in-process cluster. Build with [`Cluster::run`] — it owns the
+/// whole lifecycle (spawn, execute, detect termination, join, report).
+pub struct Cluster;
+
+struct Shared {
+    graph: Arc<dyn TaskGraph>,
+    net: Arc<Network>,
+    nodes: Vec<Arc<NodeState>>,
+    cfg: ClusterConfig,
+    start: Instant,
+}
+
+impl Cluster {
+    /// Execute `graph` with `executor` task bodies; blocks until
+    /// distributed termination and returns the merged report.
+    pub fn run(
+        graph: Arc<dyn TaskGraph>,
+        cfg: ClusterConfig,
+        executor: Arc<dyn super::TaskExecutor>,
+    ) -> RunReport {
+        let n = graph.num_nodes();
+        let (net, mailboxes) = Network::new(n, cfg.link);
+        let nodes: Vec<Arc<NodeState>> = (0..n)
+            .map(|i| {
+                Arc::new(NodeState {
+                    id: NodeId(i as u32),
+                    queue: Mutex::new(SchedQueue::new()),
+                    queue_cv: Condvar::new(),
+                    tracker: Mutex::new(ActivationTracker::new()),
+                    executing: Mutex::new(HashSet::new()),
+                    executing_count: AtomicUsize::new(0),
+                    tasks_done: AtomicU64::new(0),
+                    exec_sum_ns: AtomicU64::new(0),
+                    busy_ns: AtomicU64::new(0),
+                    steal: Mutex::new(StealStats::default()),
+                    inflight_steals: AtomicUsize::new(0),
+                    safra: Mutex::new(SafraState::new(NodeId(i as u32), n)),
+                    shutdown: AtomicBool::new(false),
+                    polls: Mutex::new(Vec::new()),
+                    arrival_ready: Mutex::new(Vec::new()),
+                    last_finish_ns: AtomicU64::new(0),
+                })
+            })
+            .collect();
+
+        let shared = Arc::new(Shared {
+            graph: graph.clone(),
+            net: net.clone(),
+            nodes: nodes.clone(),
+            cfg,
+            start: Instant::now(),
+        });
+
+        // Seed roots at their owners.
+        for root in graph.roots() {
+            let owner = graph.owner(root);
+            let node = &nodes[owner.idx()];
+            node.tracker.lock().unwrap().mark_root(root);
+            node.queue.lock().unwrap().insert(root, graph.priority(root));
+            node.queue_cv.notify_one();
+        }
+
+        let mut handles = Vec::new();
+        let mut boxes = mailboxes;
+        // drain in reverse so indices stay valid
+        let mut mail: Vec<Option<NodeMailbox>> = boxes.drain(..).map(Some).collect();
+        for i in 0..n {
+            let node = nodes[i].clone();
+            let sh = shared.clone();
+            let mb = mail[i].take().unwrap();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("comm-{i}"))
+                    .spawn(move || comm_loop(sh, node, mb))
+                    .unwrap(),
+            );
+            for w in 0..cfg.workers_per_node {
+                let node = nodes[i].clone();
+                let sh = shared.clone();
+                let ex = executor.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("worker-{i}.{w}"))
+                        .spawn(move || worker_loop(sh, node, ex))
+                        .unwrap(),
+                );
+            }
+            if cfg.migrate.enabled && n > 1 {
+                let node = nodes[i].clone();
+                let sh = shared.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("migrate-{i}"))
+                        .spawn(move || migrate_loop(sh, node))
+                        .unwrap(),
+                );
+            }
+        }
+
+        for h in handles {
+            let _ = h.join();
+        }
+        net.shutdown();
+
+        let makespan_ns = nodes
+            .iter()
+            .map(|nd| nd.last_finish_ns.load(Ordering::SeqCst))
+            .max()
+            .unwrap_or(0);
+
+        let executed: u64 = nodes
+            .iter()
+            .map(|nd| nd.tasks_done.load(Ordering::SeqCst))
+            .sum();
+        if let Some(total) = graph.total_tasks() {
+            assert_eq!(executed, total, "cluster lost tasks");
+        }
+
+        RunReport {
+            workload: graph.name().to_string(),
+            makespan_us: makespan_ns as f64 / 1e3,
+            total_tasks: executed,
+            workers_per_node: cfg.workers_per_node,
+            link: cfg.link,
+            events: 0,
+            nodes: nodes
+                .iter()
+                .map(|nd| {
+                    let done = nd.tasks_done.load(Ordering::SeqCst);
+                    let sum_ns = nd.exec_sum_ns.load(Ordering::SeqCst);
+                    NodeReport {
+                        tasks_executed: done,
+                        busy_us: nd.busy_ns.load(Ordering::SeqCst) as f64 / 1e3,
+                        avg_exec_us: if done > 0 {
+                            sum_ns as f64 / done as f64 / 1e3
+                        } else {
+                            0.0
+                        },
+                        steal: *nd.steal.lock().unwrap(),
+                        polls: std::mem::take(&mut nd.polls.lock().unwrap()),
+                        arrival_ready: std::mem::take(&mut nd.arrival_ready.lock().unwrap()),
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Insert a ready task and wake a worker.
+fn enqueue(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
+    node.queue
+        .lock()
+        .unwrap()
+        .insert(task, graph.priority(task));
+    node.queue_cv.notify_one();
+}
+
+/// Deliver one local activation; enqueue if it completed the in-degree.
+fn activate_local(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
+    let ready = node.tracker.lock().unwrap().activate(graph, task);
+    if ready {
+        enqueue(node, graph, task);
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, node: Arc<NodeState>, ex: Arc<dyn super::TaskExecutor>) {
+    let graph = sh.graph.as_ref();
+    loop {
+        if node.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // select
+        let task = {
+            let mut q = node.queue.lock().unwrap();
+            match q.select() {
+                Some(t) => {
+                    if sh.cfg.record_polls {
+                        let sample = PollSample {
+                            t_us: sh.start.elapsed().as_nanos() as f64 / 1e3,
+                            ready: q.len() as u32,
+                        };
+                        drop(q);
+                        node.polls.lock().unwrap().push(sample);
+                    }
+                    Some(t)
+                }
+                None => {
+                    let _unused = node
+                        .queue_cv
+                        .wait_timeout(q, Duration::from_micros(200))
+                        .unwrap();
+                    None
+                }
+            }
+        };
+        let Some(task) = task else { continue };
+
+        node.executing_count.fetch_add(1, Ordering::SeqCst);
+        node.executing.lock().unwrap().insert(task);
+        let t0 = Instant::now();
+        ex.execute(node.id, task);
+        let dur_ns = t0.elapsed().as_nanos() as u64;
+
+        // Propagate activations BEFORE leaving the executing state so the
+        // node is never "passive" with un-sent messages (Safra safety).
+        let dynamic = graph.dynamic_placement();
+        for s in graph.successors(task) {
+            let dest = if dynamic { node.id } else { graph.owner(s) };
+            if dest == node.id {
+                activate_local(&node, graph, s);
+            } else {
+                node.safra.lock().unwrap().on_send();
+                sh.net.send(node.id, dest, Msg::Activate { task: s });
+            }
+        }
+
+        node.executing.lock().unwrap().remove(&task);
+        node.executing_count.fetch_sub(1, Ordering::SeqCst);
+        node.tasks_done.fetch_add(1, Ordering::SeqCst);
+        node.exec_sum_ns.fetch_add(dur_ns, Ordering::SeqCst);
+        node.busy_ns.fetch_add(dur_ns, Ordering::SeqCst);
+        node.last_finish_ns
+            .fetch_max(sh.start.elapsed().as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
+    let graph = sh.graph.as_ref();
+    let mut last_probe = Instant::now();
+    loop {
+        if node.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let env = mailbox.recv_timeout(Duration::from_micros(200));
+        if let Some(env) = env {
+            if env.msg.is_basic() {
+                node.safra.lock().unwrap().on_receive();
+            }
+            match env.msg {
+                Msg::Activate { task } => activate_local(&node, graph, task),
+                Msg::StealRequest { thief } => {
+                    let workers = sh.cfg.workers_per_node;
+                    let done = node.tasks_done.load(Ordering::SeqCst);
+                    let avg_us = if done > 0 {
+                        node.exec_sum_ns.load(Ordering::SeqCst) as f64 / done as f64 / 1e3
+                    } else {
+                        1.0
+                    };
+                    let decision = {
+                        let mut q = node.queue.lock().unwrap();
+                        decide_steal(
+                            &sh.cfg.migrate,
+                            graph,
+                            &mut q,
+                            workers,
+                            avg_us,
+                            sh.cfg.link.latency_us,
+                            sh.cfg.link.bw_bytes_per_us,
+                        )
+                    };
+                    {
+                        let mut st = node.steal.lock().unwrap();
+                        st.requests_served += 1;
+                        if decision.tasks.is_empty() {
+                            if decision.denied_by_waiting_time {
+                                st.waiting_time_denials += 1;
+                            } else {
+                                st.empty_denials += 1;
+                            }
+                        } else {
+                            st.tasks_migrated += decision.tasks.len() as u64;
+                            st.payload_bytes += decision.payload_bytes;
+                        }
+                    }
+                    node.safra.lock().unwrap().on_send();
+                    sh.net.send(
+                        node.id,
+                        thief,
+                        Msg::StealReply {
+                            tasks: decision.tasks,
+                            payload_bytes: decision.payload_bytes,
+                        },
+                    );
+                }
+                Msg::StealReply { tasks, .. } => {
+                    node.inflight_steals.fetch_sub(1, Ordering::SeqCst);
+                    {
+                        let mut st = node.steal.lock().unwrap();
+                        if !tasks.is_empty() {
+                            st.successful_steals += 1;
+                            st.tasks_received += tasks.len() as u64;
+                        }
+                    }
+                    for t in tasks {
+                        if sh.cfg.record_polls {
+                            let ready = node.queue.lock().unwrap().len() as u32;
+                            node.arrival_ready.lock().unwrap().push(PollSample {
+                                t_us: sh.start.elapsed().as_nanos() as f64 / 1e3,
+                                ready,
+                            });
+                        }
+                        // Recreate the stolen task locally (same uid).
+                        enqueue(&node, graph, t);
+                    }
+                }
+                Msg::Token(tok) => {
+                    let passive = node.passive();
+                    let action = node.safra.lock().unwrap().on_token(tok, passive);
+                    perform_safra_action(&sh, &node, action);
+                }
+                Msg::Shutdown => {
+                    node.shutdown.store(true, Ordering::SeqCst);
+                    node.queue_cv.notify_all();
+                    return;
+                }
+            }
+        }
+
+        // Parked token: retry forwarding whenever we might be passive.
+        let passive = node.passive();
+        if passive {
+            let action = node.safra.lock().unwrap().try_forward(true);
+            perform_safra_action(&sh, &node, action);
+        }
+
+        // Leader initiates probes while passive (rate-limited).
+        if node.id.idx() == 0 && passive && last_probe.elapsed() > Duration::from_micros(500) {
+            last_probe = Instant::now();
+            let action = node.safra.lock().unwrap().leader_start_probe(true);
+            perform_safra_action(&sh, &node, action);
+        }
+    }
+}
+
+fn perform_safra_action(sh: &Arc<Shared>, node: &Arc<NodeState>, action: SafraAction) {
+    match action {
+        SafraAction::None => {}
+        SafraAction::Forward(dst, tok) => {
+            sh.net.send(node.id, dst, Msg::Token(tok));
+        }
+        SafraAction::Terminate => {
+            // Leader announces shutdown to everyone, then stops itself.
+            sh.net.broadcast_from(node.id, Msg::Shutdown);
+            node.shutdown.store(true, Ordering::SeqCst);
+            node.queue_cv.notify_all();
+        }
+    }
+}
+
+fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
+    let graph = sh.graph.as_ref();
+    let mut rng = Rng::new(sh.cfg.seed ^ (0x5EA1 + node.id.idx() as u64));
+    let n = sh.nodes.len();
+    let poll = Duration::from_nanos((sh.cfg.migrate.poll_interval_us * 1e3) as u64);
+    loop {
+        if node.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        std::thread::sleep(poll);
+        let ready = node.queue.lock().unwrap().len();
+        let view = StarvationView {
+            ready,
+            executing_local_successors: match sh.cfg.migrate.thief {
+                crate::migrate::ThiefPolicy::ReadyOnly => 0,
+                crate::migrate::ThiefPolicy::ReadySuccessors => {
+                    let executing = node.executing.lock().unwrap();
+                    let dynamic = graph.dynamic_placement();
+                    executing
+                        .iter()
+                        .map(|t| {
+                            graph
+                                .successors(*t)
+                                .into_iter()
+                                .filter(|s| dynamic || graph.owner(*s) == node.id)
+                                .count()
+                        })
+                        .sum()
+                }
+            },
+        };
+        if is_starving(sh.cfg.migrate.thief, view)
+            && node.inflight_steals.load(Ordering::SeqCst) < sh.cfg.migrate.max_inflight
+        {
+            node.inflight_steals.fetch_add(1, Ordering::SeqCst);
+            node.steal.lock().unwrap().requests_sent += 1;
+            let victim = NodeId(rng.pick_other(n, node.id.idx()) as u32);
+            node.safra.lock().unwrap().on_send();
+            sh.net
+                .send(node.id, victim, Msg::StealRequest { thief: node.id });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::executor::{NullExecutor, SpinExecutor};
+    use crate::sim::CostModel;
+    use crate::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
+
+    fn chol(tiles: u32, nodes: u32) -> Arc<CholeskyGraph> {
+        Arc::new(CholeskyGraph::new(CholeskyParams {
+            tiles,
+            tile_size: 8,
+            nodes,
+            dense_fraction: 0.5,
+            seed: 3,
+            all_dense: false,
+        }))
+    }
+
+    #[test]
+    fn null_executor_cholesky_no_steal() {
+        let g = chol(8, 2);
+        let total = g.total_tasks().unwrap();
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig::disabled(),
+                ..Default::default()
+            },
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(r.tasks_total_executed(), total);
+    }
+
+    #[test]
+    fn null_executor_cholesky_with_steal() {
+        let g = chol(8, 3);
+        let total = g.total_tasks().unwrap();
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 50.0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(r.tasks_total_executed(), total);
+    }
+
+    #[test]
+    fn spin_executor_uts_spreads_work() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0, // 30 µs/task
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 30.0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
+                30_000.0
+            })),
+        );
+        assert_eq!(r.tasks_total_executed(), size);
+        let spread: u64 = r.nodes[1..].iter().map(|n| n.tasks_executed).sum();
+        assert!(spread > 0, "steals moved work off node 0");
+        assert!(r.total_steals().successful_steals > 0);
+    }
+
+    #[test]
+    fn single_node_terminates() {
+        let g = chol(5, 1);
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                ..Default::default()
+            },
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(r.tasks_total_executed(), 35);
+    }
+}

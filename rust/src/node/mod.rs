@@ -1,0 +1,19 @@
+//! The real (threaded) runtime: in-process multi-node execution.
+//!
+//! Each "node" (one MPI rank in the paper's deployment) is a runtime
+//! domain with its own scheduler queue, activation tracker, worker
+//! threads, a comm thread draining its mailbox, and — when stealing is
+//! enabled — the migrate thread of §3. Cross-node traffic goes through
+//! [`crate::comm::Network`] (activations, the steal protocol, Safra
+//! termination tokens, shutdown).
+//!
+//! Task bodies are supplied by a [`TaskExecutor`]: the PJRT-backed
+//! executor runs the AOT-compiled tile kernels (the production path);
+//! synthetic executors busy-spin per the cost model (protocol tests
+//! without XLA).
+
+pub mod cluster;
+pub mod executor;
+
+pub use cluster::{Cluster, ClusterConfig};
+pub use executor::{NullExecutor, SpinExecutor, TaskExecutor};

@@ -1,0 +1,167 @@
+//! Cost-model calibration: measure the real PJRT per-op timings at every
+//! artifact tile size and fit `t(n) = c3·n³ + c0` per task class by
+//! least squares. The result feeds the DES so virtual-time figures run
+//! on *measured* granularities (`repro calibrate`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::dataflow::data::Tile;
+use crate::sim::{ClassCost, CostModel};
+use crate::util::rng::Rng;
+
+use super::pjrt::TileEngine;
+
+/// Measured mean execution time for one (op, tile) pair.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub op: String,
+    pub tile: u32,
+    pub mean_us: f64,
+    pub reps: usize,
+}
+
+fn spd_tile(n: usize, seed: u64) -> Tile {
+    let mut rng = Rng::new(seed);
+    let mut t = Tile::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.normal() * 0.1;
+            t.set(i, j, v);
+            t.set(j, i, v);
+        }
+        let d = t.at(i, i).abs() + n as f64;
+        t.set(i, i, d);
+    }
+    t
+}
+
+fn rand_tile(n: usize, seed: u64) -> Tile {
+    let mut rng = Rng::new(seed);
+    let mut t = Tile::zeros(n);
+    for v in &mut t.data {
+        *v = rng.normal();
+    }
+    t
+}
+
+/// Time every (op, tile) artifact; `reps` executions after one warmup.
+pub fn measure(engine: &TileEngine, reps: usize) -> Result<Vec<Measurement>> {
+    let mut out = Vec::new();
+    let entries: Vec<_> = engine.manifest().entries.clone();
+    for e in entries {
+        if !engine.has(&e.op, e.tile) {
+            continue;
+        }
+        let n = e.tile as usize;
+        let inputs: Vec<Tile> = match e.op.as_str() {
+            "potrf" => vec![spd_tile(n, 1)],
+            "trsm" => vec![spd_tile(n, 2), rand_tile(n, 3)],
+            "syrk" => vec![rand_tile(n, 4), rand_tile(n, 5)],
+            "gemm" => vec![rand_tile(n, 6), rand_tile(n, 7), rand_tile(n, 8)],
+            "potrf_trsm" => vec![spd_tile(n, 9), rand_tile(n, 10)],
+            _ => continue,
+        };
+        // warmup
+        engine.execute(&e.op, e.tile, &inputs)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            engine.execute(&e.op, e.tile, &inputs)?;
+        }
+        let mean_us = t0.elapsed().as_nanos() as f64 / 1e3 / reps as f64;
+        out.push(Measurement {
+            op: e.op.clone(),
+            tile: e.tile,
+            mean_us,
+            reps,
+        });
+    }
+    Ok(out)
+}
+
+/// Least-squares fit of `t = c3·n³ + c0` from (n, t) samples.
+pub fn fit_cubic(samples: &[(u32, f64)]) -> ClassCost {
+    // Linear regression on x = n³: minimize Σ (c3 x + c0 − t)².
+    let m = samples.len() as f64;
+    if samples.is_empty() {
+        return ClassCost { c3: 0.0, c0: 0.0 };
+    }
+    if samples.len() == 1 {
+        return ClassCost {
+            c3: 0.0,
+            c0: samples[0].1,
+        };
+    }
+    let xs: Vec<f64> = samples.iter().map(|(n, _)| (*n as f64).powi(3)).collect();
+    let ts: Vec<f64> = samples.iter().map(|(_, t)| *t).collect();
+    let sx: f64 = xs.iter().sum();
+    let st: f64 = ts.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxt: f64 = xs.iter().zip(&ts).map(|(x, t)| x * t).sum();
+    let denom = m * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return ClassCost {
+            c3: 0.0,
+            c0: st / m,
+        };
+    }
+    let c3 = ((m * sxt - sx * st) / denom).max(0.0);
+    let c0 = ((st - c3 * sx) / m).max(0.0);
+    ClassCost { c3, c0 }
+}
+
+/// Full calibration: measure, fit, assemble a [`CostModel`] (keeping the
+/// default UTS and noise parameters), optionally writing it to `out`.
+pub fn calibrate(artifacts_dir: &Path, reps: usize, out: Option<&Path>) -> Result<CostModel> {
+    let engine = TileEngine::load(artifacts_dir, None)?;
+    let measurements = measure(&engine, reps)?;
+    let mut model = CostModel::default_calibrated();
+    for (idx, op) in ["potrf", "trsm", "syrk", "gemm"].iter().enumerate() {
+        let samples: Vec<(u32, f64)> = measurements
+            .iter()
+            .filter(|m| m.op == *op)
+            .map(|m| (m.tile, m.mean_us))
+            .collect();
+        if !samples.is_empty() {
+            model.dense[idx] = fit_cubic(&samples);
+        }
+    }
+    if let Some(path) = out {
+        std::fs::write(path, model.to_json().pretty())?;
+    }
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubic_fit_recovers_coefficients() {
+        let truth = ClassCost { c3: 3e-4, c0: 12.0 };
+        let samples: Vec<(u32, f64)> =
+            [8u32, 16, 24, 32, 50].iter().map(|&n| (n, truth.eval_us(n))).collect();
+        let fit = fit_cubic(&samples);
+        assert!((fit.c3 - truth.c3).abs() < 1e-8);
+        assert!((fit.c0 - truth.c0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fit_handles_degenerate_inputs() {
+        assert_eq!(fit_cubic(&[]).c0, 0.0);
+        let one = fit_cubic(&[(8, 42.0)]);
+        assert_eq!((one.c3, one.c0), (0.0, 42.0));
+        // same-n duplicates: average into c0
+        let dup = fit_cubic(&[(8, 10.0), (8, 20.0)]);
+        assert!(dup.c3 == 0.0 && (dup.c0 - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_clamps_negative() {
+        // decreasing times (nonsense input) must not yield negative cost
+        let fit = fit_cubic(&[(8, 100.0), (50, 1.0)]);
+        assert!(fit.c3 >= 0.0 && fit.c0 >= 0.0);
+    }
+}

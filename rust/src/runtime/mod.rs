@@ -1,0 +1,24 @@
+//! Runtime bridge to the AOT-compiled XLA artifacts (L2/L1 outputs).
+//!
+//! `make artifacts` lowers every (op, tile-size) pair to HLO *text* (see
+//! `python/compile/aot.py` for why text, not serialized protos). This
+//! module loads them through the PJRT CPU client, compiles once per
+//! entry, and exposes:
+//!
+//! * [`TileEngine`] — single-threaded load + execute (one PJRT client);
+//! * [`KernelService`] — a pool of engine-owning threads behind a
+//!   channel, because the `xla` crate's handles are `!Send`; worker
+//!   threads of the real runtime submit tile ops and block for results;
+//! * [`executor`] — [`crate::node::TaskExecutor`] impls with a real tile
+//!   data plane (PJRT-backed and pure-Rust);
+//! * [`calibrate`] — measures per-op timings and fits the DES cost model.
+
+pub mod calibrate;
+pub mod executor;
+pub mod pjrt;
+pub mod service;
+
+pub use calibrate::calibrate;
+pub use executor::{CpuCholeskyExecutor, PjrtCholeskyExecutor};
+pub use pjrt::{Manifest, ManifestEntry, TileEngine};
+pub use service::KernelService;

@@ -1,0 +1,290 @@
+//! PJRT loading and execution of the HLO-text artifacts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dataflow::data::Tile;
+use crate::util::json::Json;
+
+/// One artifact from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub op: String,
+    pub tile: u32,
+    pub inputs: usize,
+    pub outputs: usize,
+    pub file: String,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest has no entries"))?
+            .iter()
+            .map(|e| {
+                Ok(ManifestEntry {
+                    name: e.req_str("name")?.to_string(),
+                    op: e.req_str("op")?.to_string(),
+                    tile: e.req_u64("tile")? as u32,
+                    inputs: e.req_u64("inputs")? as usize,
+                    outputs: e.req_u64("outputs")? as usize,
+                    file: e.req_str("file")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dtype: j.req_str("dtype")?.to_string(),
+            entries,
+        })
+    }
+
+    pub fn tile_sizes(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.entries.iter().map(|e| e.tile).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn find(&self, op: &str, tile: u32) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.op == op && e.tile == tile)
+    }
+}
+
+/// A PJRT CPU client plus the compiled executables of every artifact.
+/// `!Send` (raw PJRT handles) — see [`super::service::KernelService`]
+/// for the multi-threaded wrapper.
+pub struct TileEngine {
+    client: xla::PjRtClient,
+    exes: HashMap<(String, u32), xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+}
+
+impl TileEngine {
+    /// Load and compile every artifact in `dir` (or only those whose tile
+    /// size is in `only_tiles`, to cut startup time).
+    pub fn load(dir: &Path, only_tiles: Option<&[u32]>) -> Result<TileEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for entry in &manifest.entries {
+            if let Some(filter) = only_tiles {
+                if !filter.contains(&entry.tile) {
+                    continue;
+                }
+            }
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            exes.insert((entry.op.clone(), entry.tile), exe);
+        }
+        Ok(TileEngine {
+            client,
+            exes,
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, op: &str, tile: u32) -> bool {
+        self.exes.contains_key(&(op.to_string(), tile))
+    }
+
+    /// Execute one tile op. Inputs/outputs are square `tile`-sized f64
+    /// tiles in the artifact's parameter order.
+    pub fn execute(&self, op: &str, tile: u32, inputs: &[Tile]) -> Result<Vec<Tile>> {
+        let entry = self
+            .manifest
+            .find(op, tile)
+            .ok_or_else(|| anyhow!("no artifact for {op} @ n={tile}"))?;
+        if inputs.len() != entry.inputs {
+            bail!(
+                "{op}@{tile} expects {} inputs, got {}",
+                entry.inputs,
+                inputs.len()
+            );
+        }
+        let n = tile as usize;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            if t.n != n {
+                bail!("input tile is {}x{}, artifact wants {n}x{n}", t.n, t.n);
+            }
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&[n as i64, n as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = &self.exes[&(op.to_string(), tile)];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {op}@{tile}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let outs = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if outs.len() != entry.outputs {
+            bail!("{op}@{tile}: expected {} outputs, got {}", entry.outputs, outs.len());
+        }
+        outs.into_iter()
+            .map(|lit| {
+                let data = lit
+                    .to_vec::<f64>()
+                    .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                if data.len() != n * n {
+                    bail!("output size {} != {}", data.len(), n * n);
+                }
+                Ok(Tile { n, data })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::kernels as cpu;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    fn spd_tile(n: usize, seed: u64) -> Tile {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut m = Tile::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                m.set(i, j, rng.normal());
+            }
+        }
+        let mut a = Tile::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = if i == j { n as f64 } else { 0.0 };
+                for k in 0..n {
+                    acc += m.at(i, k) * m.at(j, k);
+                }
+                a.set(i, j, acc);
+            }
+        }
+        a
+    }
+
+    fn rand_tile(n: usize, seed: u64) -> Tile {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut t = Tile::zeros(n);
+        for i in 0..n * n {
+            t.data[i] = rng.normal();
+        }
+        t
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.dtype, "f64");
+        assert!(m.find("gemm", 8).is_some());
+        assert!(m.find("potrf", 8).is_some());
+        assert!(m.find("gemm", 9999).is_none());
+    }
+
+    /// The PJRT path must match the pure-Rust oracle on every op —
+    /// the L1/L2/L3 numerical contract.
+    #[test]
+    fn pjrt_matches_cpu_oracle() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = TileEngine::load(&artifacts_dir(), Some(&[8, 16])).unwrap();
+        for n in [8usize, 16] {
+            let a = spd_tile(n, 1);
+            // POTRF
+            let l = &eng.execute("potrf", n as u32, &[a.clone()]).unwrap()[0];
+            let l_ref = cpu::potrf(&a);
+            assert!(l.max_abs_diff(&l_ref) < 1e-9, "potrf n={n}");
+            // TRSM
+            let b = rand_tile(n, 2);
+            let x = &eng.execute("trsm", n as u32, &[l.clone(), b.clone()]).unwrap()[0];
+            assert!(x.max_abs_diff(&cpu::trsm(&l_ref, &b)) < 1e-9, "trsm n={n}");
+            // SYRK
+            let mut c = rand_tile(n, 3);
+            let s = &eng.execute("syrk", n as u32, &[c.clone(), x.clone()]).unwrap()[0];
+            let mut c_ref = c.clone();
+            cpu::syrk(&mut c_ref, x);
+            assert!(s.max_abs_diff(&c_ref) < 1e-9, "syrk n={n}");
+            // GEMM
+            let d = rand_tile(n, 4);
+            let g = &eng
+                .execute("gemm", n as u32, &[c.clone(), x.clone(), d.clone()])
+                .unwrap()[0];
+            cpu::gemm(&mut c, x, &d);
+            assert!(g.max_abs_diff(&c) < 1e-9, "gemm n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_potrf_trsm_two_outputs() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = TileEngine::load(&artifacts_dir(), Some(&[8])).unwrap();
+        let a = spd_tile(8, 5);
+        let b = rand_tile(8, 6);
+        let outs = eng.execute("potrf_trsm", 8, &[a.clone(), b.clone()]).unwrap();
+        assert_eq!(outs.len(), 2);
+        let l_ref = cpu::potrf(&a);
+        assert!(outs[0].max_abs_diff(&l_ref) < 1e-9);
+        assert!(outs[1].max_abs_diff(&cpu::trsm(&l_ref, &b)) < 1e-9);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = TileEngine::load(&artifacts_dir(), Some(&[8])).unwrap();
+        assert!(eng.execute("gemm", 8, &[Tile::zeros(8)]).is_err());
+        assert!(eng.execute("nope", 8, &[]).is_err());
+    }
+}

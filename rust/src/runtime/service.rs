@@ -1,0 +1,174 @@
+//! Multi-threaded access to the PJRT engines.
+//!
+//! `xla` handles are `!Send`, so each service thread builds its *own*
+//! [`TileEngine`] (own PJRT client + compiled executables) and drains a
+//! shared request queue. Worker threads of the real runtime hold a
+//! cloneable [`KernelService`] handle and block per call — exactly the
+//! shape of a task body invoking a BLAS kernel.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::dataflow::data::Tile;
+
+use super::pjrt::TileEngine;
+
+struct Request {
+    op: String,
+    tile: u32,
+    inputs: Vec<Tile>,
+    reply: Sender<Result<Vec<Tile>>>,
+}
+
+/// Cloneable handle to the kernel thread pool.
+#[derive(Clone)]
+pub struct KernelService {
+    tx: Sender<Request>,
+    inner: Arc<ServiceInner>,
+}
+
+struct ServiceInner {
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Kept so the queue closes when the last handle drops.
+    _keep: (),
+}
+
+impl KernelService {
+    /// Spawn `threads` engine threads, each loading the artifacts in
+    /// `dir` (optionally restricted to `only_tiles`). Fails fast if the
+    /// first engine cannot load.
+    pub fn start(dir: PathBuf, only_tiles: Option<Vec<u32>>, threads: usize) -> Result<Self> {
+        assert!(threads >= 1);
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        // Probe-load one engine on the calling thread so configuration
+        // errors surface immediately rather than inside the pool.
+        {
+            let probe = TileEngine::load(&dir, only_tiles.as_deref())?;
+            drop(probe);
+        }
+        let mut handles = Vec::new();
+        for i in 0..threads {
+            let rx = rx.clone();
+            let dir = dir.clone();
+            let tiles = only_tiles.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-{i}"))
+                    .spawn(move || serve(rx, dir, tiles))
+                    .unwrap(),
+            );
+        }
+        Ok(KernelService {
+            tx,
+            inner: Arc::new(ServiceInner {
+                handles: Mutex::new(handles),
+                _keep: (),
+            }),
+        })
+    }
+
+    /// Execute a tile op on some engine thread; blocks for the result.
+    pub fn execute(&self, op: &str, tile: u32, inputs: Vec<Tile>) -> Result<Vec<Tile>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request {
+                op: op.to_string(),
+                tile,
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("kernel service stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("kernel service dropped request"))?
+    }
+
+    /// Join the pool (drop all handles first). Called implicitly on drop
+    /// of the last clone.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        if let Ok(mut hs) = self.inner.handles.lock() {
+            for h in hs.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn serve(rx: Arc<Mutex<Receiver<Request>>>, dir: PathBuf, tiles: Option<Vec<u32>>) {
+    let engine = match TileEngine::load(&dir, tiles.as_deref()) {
+        Ok(e) => e,
+        Err(err) => {
+            // Propagate by failing every request we can grab.
+            loop {
+                let req = { rx.lock().unwrap().recv() };
+                match req {
+                    Ok(r) => {
+                        let _ = r.reply.send(Err(anyhow!("engine failed to load: {err}")));
+                    }
+                    Err(_) => return,
+                }
+            }
+        }
+    };
+    loop {
+        // Hold the receiver lock only while pulling one request.
+        let req = { rx.lock().unwrap().recv() };
+        match req {
+            Ok(r) => {
+                let result = engine.execute(&r.op, r.tile, &r.inputs);
+                let _ = r.reply.send(result);
+            }
+            Err(_) => return, // all senders gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_threads() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let svc = KernelService::start(artifacts_dir(), Some(vec![8]), 2).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..6 {
+            let svc = svc.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut c = Tile::zeros(8);
+                let mut a = Tile::zeros(8);
+                for i in 0..8 {
+                    a.set(i, i, (t + 1) as f64);
+                    c.set(i, i, 1.0);
+                }
+                let out = svc.execute("syrk", 8, vec![c, a.clone()]).unwrap();
+                // c - a aᵀ diagonal: 1 - (t+1)^2
+                let want = 1.0 - ((t + 1) as f64).powi(2);
+                assert!((out[0].at(3, 3) - want).abs() < 1e-12);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn missing_dir_fails_fast() {
+        let r = KernelService::start(PathBuf::from("/nonexistent"), None, 1);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Node-level priority scheduler.
+//!
+//! PaRSEC's default distributed scheduler keeps *node-level* queues
+//! ordered by priority; worker threads `select` from the front, and the
+//! migrate thread competes with them extracting steal candidates from the
+//! *back* (lowest priority first — those tasks would wait longest
+//! locally, so they are the cheapest to give away). §4.4 of the paper
+//! attributes the run-to-run variance of No-Steal exactly to contention
+//! on these queues.
+//!
+//! Implementation: a `BTreeMap` keyed by `(priority, insertion-seq)` so
+//! both ends are O(log n) (`select` = pop-max, steal extraction =
+//! pop-min) and iteration order is deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::dataflow::task::TaskDesc;
+
+/// Key ordering: higher priority first; among equal priorities FIFO
+/// (earlier seq first). Stored as (priority, Reverse-ish seq) — we use
+/// `u64::MAX - seq` so `pop_last` yields highest-priority, oldest task.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct QKey {
+    prio: i64,
+    age: u64, // u64::MAX - seq: larger = older
+}
+
+/// Snapshot counters for the scheduler (feeds the E^b potential metric
+/// and the §4.4 contention analysis).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    pub inserts: u64,
+    pub selects: u64,
+    pub steal_extracted: u64,
+    /// Sum of queue length observed at each successful select
+    /// (mean = sum / selects).
+    pub select_len_sum: u64,
+}
+
+/// A node's ready-task queue.
+#[derive(Debug, Default)]
+pub struct SchedQueue {
+    map: BTreeMap<QKey, TaskDesc>,
+    seq: u64,
+    stats: SchedStats,
+}
+
+impl SchedQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn insert(&mut self, task: TaskDesc, priority: i64) {
+        self.seq += 1;
+        self.stats.inserts += 1;
+        self.map.insert(
+            QKey {
+                prio: priority,
+                age: u64::MAX - self.seq,
+            },
+            task,
+        );
+    }
+
+    /// Worker-side `select`: highest-priority ready task.
+    pub fn select(&mut self) -> Option<TaskDesc> {
+        let entry = self.map.pop_last();
+        if entry.is_some() {
+            self.stats.selects += 1;
+            self.stats.select_len_sum += self.map.len() as u64;
+        }
+        entry.map(|(_, t)| t)
+    }
+
+    /// Count tasks satisfying `filter` (victim-side stealable census).
+    pub fn count_matching(&self, filter: impl Fn(TaskDesc) -> bool) -> usize {
+        self.map.values().filter(|t| filter(**t)).count()
+    }
+
+    /// Migrate-thread extraction: up to `max` tasks satisfying `filter`,
+    /// lowest priority first. This *competes* with `select` — the caller
+    /// holds the same lock workers use, exactly the contention the paper
+    /// describes; the allowance is an upper bound, not a guarantee.
+    pub fn extract_for_steal(
+        &mut self,
+        max: usize,
+        filter: impl Fn(TaskDesc) -> bool,
+    ) -> Vec<TaskDesc> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let keys: Vec<QKey> = self
+            .map
+            .iter()
+            .filter(|(_, t)| filter(**t))
+            .take(max)
+            .map(|(k, _)| *k)
+            .collect();
+        let out: Vec<TaskDesc> = keys
+            .iter()
+            .map(|k| self.map.remove(k).expect("key vanished"))
+            .collect();
+        self.stats.steal_extracted += out.len() as u64;
+        out
+    }
+
+    /// Peek the highest priority value (scheduling diagnostics).
+    pub fn max_priority(&self) -> Option<i64> {
+        self.map.last_key_value().map(|(k, _)| k.prio)
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    /// Drain everything (shutdown paths in tests).
+    pub fn drain(&mut self) -> Vec<TaskDesc> {
+        let out = self.map.values().copied().collect();
+        self.map.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::{TaskClass, TaskDesc};
+
+    fn t(i: u32) -> TaskDesc {
+        TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0)
+    }
+
+    #[test]
+    fn select_is_priority_then_fifo() {
+        let mut q = SchedQueue::new();
+        q.insert(t(1), 5);
+        q.insert(t(2), 9);
+        q.insert(t(3), 5);
+        assert_eq!(q.select(), Some(t(2)));
+        assert_eq!(q.select(), Some(t(1)), "FIFO among equal priorities");
+        assert_eq!(q.select(), Some(t(3)));
+        assert_eq!(q.select(), None);
+    }
+
+    #[test]
+    fn steal_takes_lowest_priority_first() {
+        let mut q = SchedQueue::new();
+        for (i, p) in [(1, 10), (2, 1), (3, 5), (4, 2)] {
+            q.insert(t(i), p);
+        }
+        let stolen = q.extract_for_steal(2, |_| true);
+        assert_eq!(stolen, vec![t(2), t(4)], "two lowest priorities");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.select(), Some(t(1)), "high-priority work untouched");
+    }
+
+    #[test]
+    fn steal_respects_filter_and_max() {
+        let mut q = SchedQueue::new();
+        for i in 0..10 {
+            q.insert(t(i), i as i64);
+        }
+        let stolen = q.extract_for_steal(3, |task| task.i % 2 == 0);
+        assert_eq!(stolen.len(), 3);
+        assert!(stolen.iter().all(|s| s.i % 2 == 0));
+        assert_eq!(q.len(), 7);
+        assert_eq!(q.count_matching(|task| task.i % 2 == 0), 2);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut q = SchedQueue::new();
+        q.insert(t(0), 0);
+        q.insert(t(1), 1);
+        let _ = q.select();
+        let _ = q.extract_for_steal(1, |_| true);
+        let s = q.stats();
+        assert_eq!((s.inserts, s.selects, s.steal_extracted), (2, 1, 1));
+        assert_eq!(s.select_len_sum, 1);
+    }
+
+    #[test]
+    fn extract_zero_is_noop() {
+        let mut q = SchedQueue::new();
+        q.insert(t(0), 0);
+        assert!(q.extract_for_steal(0, |_| true).is_empty());
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Task-cost model for virtual-time execution.
+//!
+//! Dense tile ops follow a cubic-plus-constant fit `t(n) = c3·n³ + c0`
+//! per task class — the form BLAS-3 tile kernels follow — with
+//! coefficients measured on the real PJRT artifacts by `repro calibrate`
+//! and persisted to `artifacts/costmodel.json`. Sparse-tile tasks cost a
+//! small constant (queue pass, no compute, §4.4); UTS tasks cost
+//! `g × uts_us_per_unit`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::dataflow::task::TaskClass;
+use crate::util::json::Json;
+
+/// Cubic cost fit for one task class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassCost {
+    /// µs per element³.
+    pub c3: f64,
+    /// Fixed per-task overhead in µs (dispatch + PJRT call).
+    pub c0: f64,
+}
+
+impl ClassCost {
+    pub fn eval_us(&self, n: u32) -> f64 {
+        self.c3 * (n as f64).powi(3) + self.c0
+    }
+}
+
+/// The full cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// Indexed by POTRF/TRSM/SYRK/GEMM (TaskClass discriminants 0..4).
+    pub dense: [ClassCost; 4],
+    /// µs per UTS work unit (task cost = g · this).
+    pub uts_us_per_unit: f64,
+    /// Cost of a task whose tile is sparse: scheduler pass, no compute.
+    pub sparse_task_us: f64,
+    /// Log-normal sigma applied multiplicatively to every execution
+    /// (system noise; the paper's normality analysis motivates ~5–10%).
+    pub noise_sigma: f64,
+    /// Log-normal sigma of a *persistent per-node* slowness factor drawn
+    /// once per run — shared-cluster stragglers (OS jitter, neighbors on
+    /// the interconnect, NUMA placement). This is the imbalance a static
+    /// work division cannot absorb and work stealing exists to fix; the
+    /// paper's Fig. 4 run-to-run spread (~±20% on Gadi) calibrates the
+    /// default.
+    pub node_sigma: f64,
+}
+
+impl CostModel {
+    /// Defaults measured on this container's PJRT CPU backend (see
+    /// EXPERIMENTS.md §Calibration); used when costmodel.json is absent.
+    pub fn default_calibrated() -> Self {
+        CostModel {
+            dense: [
+                // POTRF: sequential column loop dominates -> large c0
+                ClassCost { c3: 2.4e-4, c0: 45.0 },
+                // TRSM: forward substitution, loop-carried
+                ClassCost { c3: 3.1e-4, c0: 40.0 },
+                // SYRK
+                ClassCost { c3: 2.0e-4, c0: 12.0 },
+                // GEMM
+                ClassCost { c3: 2.2e-4, c0: 12.0 },
+            ],
+            uts_us_per_unit: 1e-3,
+            sparse_task_us: 1.5,
+            noise_sigma: 0.08,
+            node_sigma: 0.18,
+        }
+    }
+
+    /// Execution time of one task in µs, before noise.
+    pub fn exec_us(&self, class: TaskClass, tile_size: u32, work_units: f64) -> f64 {
+        match class {
+            TaskClass::Potrf | TaskClass::Trsm | TaskClass::Syrk | TaskClass::Gemm => {
+                if work_units == 0.0 {
+                    self.sparse_task_us
+                } else {
+                    self.dense[class as usize].eval_us(tile_size)
+                }
+            }
+            TaskClass::UtsNode => work_units * self.uts_us_per_unit,
+            // Synthetic tasks carry their cost directly in µs.
+            TaskClass::Synthetic => work_units,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let class_obj = |c: &ClassCost| {
+            Json::obj(vec![("c3_us", Json::Num(c.c3)), ("c0_us", Json::Num(c.c0))])
+        };
+        Json::obj(vec![
+            ("potrf", class_obj(&self.dense[0])),
+            ("trsm", class_obj(&self.dense[1])),
+            ("syrk", class_obj(&self.dense[2])),
+            ("gemm", class_obj(&self.dense[3])),
+            ("uts_us_per_unit", Json::Num(self.uts_us_per_unit)),
+            ("sparse_task_us", Json::Num(self.sparse_task_us)),
+            ("noise_sigma", Json::Num(self.noise_sigma)),
+            ("node_sigma", Json::Num(self.node_sigma)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let class = |name: &str| -> Result<ClassCost> {
+            let o = j
+                .get(name)
+                .with_context(|| format!("costmodel: missing '{name}'"))?;
+            Ok(ClassCost {
+                c3: o.req_f64("c3_us")?,
+                c0: o.req_f64("c0_us")?,
+            })
+        };
+        Ok(CostModel {
+            dense: [class("potrf")?, class("trsm")?, class("syrk")?, class("gemm")?],
+            uts_us_per_unit: j.req_f64("uts_us_per_unit")?,
+            sparse_task_us: j.req_f64("sparse_task_us")?,
+            noise_sigma: j.req_f64("noise_sigma")?,
+            // Optional for older costmodel.json files.
+            node_sigma: j
+                .get("node_sigma")
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| Self::default_calibrated().node_sigma),
+        })
+    }
+
+    /// Load `artifacts/costmodel.json` if present, else defaults.
+    pub fn load_or_default(path: &Path) -> Self {
+        std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| Self::from_json(&j).ok())
+            .unwrap_or_else(Self::default_calibrated)
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::default_calibrated()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubic_fit_grows_with_tile() {
+        let cm = CostModel::default_calibrated();
+        let t10 = cm.exec_us(TaskClass::Gemm, 10, 2.0);
+        let t50 = cm.exec_us(TaskClass::Gemm, 50, 2.0);
+        assert!(t50 > t10, "{t50} vs {t10}");
+        // asymptotically ~125x for pure cubic; with c0 it's less
+        assert!(t50 / t10 > 2.0);
+    }
+
+    #[test]
+    fn sparse_tasks_are_cheap() {
+        let cm = CostModel::default_calibrated();
+        assert!(cm.exec_us(TaskClass::Gemm, 50, 0.0) < cm.exec_us(TaskClass::Gemm, 50, 2.0));
+        assert_eq!(cm.exec_us(TaskClass::Gemm, 50, 0.0), cm.sparse_task_us);
+    }
+
+    #[test]
+    fn uts_scales_with_g() {
+        let cm = CostModel::default_calibrated();
+        assert_eq!(
+            cm.exec_us(TaskClass::UtsNode, 0, 12e6),
+            12e6 * cm.uts_us_per_unit
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cm = CostModel::default_calibrated();
+        let j = cm.to_json();
+        let back = CostModel::from_json(&Json::parse(&j.pretty()).unwrap()).unwrap();
+        assert_eq!(cm, back);
+    }
+
+    #[test]
+    fn load_or_default_falls_back() {
+        let cm = CostModel::load_or_default(Path::new("/nonexistent/x.json"));
+        assert_eq!(cm, CostModel::default_calibrated());
+    }
+}

@@ -1,0 +1,715 @@
+//! The discrete-event engine.
+//!
+//! Virtual-time mirror of the threaded runtime in [`crate::node`]: the
+//! same `SchedQueue`, `ActivationTracker` and migrate-module policy code
+//! run under an event loop with per-node worker pools. Events:
+//!
+//! * `Finish`  — a worker completes a task (schedules successor
+//!   activations, local or remote);
+//! * `Deliver` — a message crosses the wire (activation or steal
+//!   protocol, delayed by the link model);
+//! * `Poll`    — a node's migrate thread wakes up and runs the thief-side
+//!   starvation check.
+//!
+//! Termination: the engine is done when no work remains anywhere
+//! (queues, executing sets, in-flight messages); `Poll` events alone
+//! never keep it alive. The real runtime must *detect* this state with
+//! Safra's algorithm; the simulator, being omniscient, just observes it
+//! — integration tests check both agree on task counts.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BinaryHeap, HashSet};
+use std::sync::Arc;
+
+use crate::comm::LinkModel;
+use crate::dataflow::task::{NodeId, TaskDesc};
+use crate::dataflow::ttg::TaskGraph;
+use crate::dataflow::ActivationTracker;
+use crate::metrics::{NodeReport, PollSample, RunReport};
+use crate::migrate::{
+    is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
+};
+use crate::sched::SchedQueue;
+use crate::util::rng::Rng;
+
+use super::cost::CostModel;
+
+/// Simulator knobs (cluster geometry and wire model).
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Worker threads per node (paper: 40).
+    pub workers_per_node: usize,
+    pub link: LinkModel,
+    /// Seed for cost noise and victim selection.
+    pub seed: u64,
+    /// Hard safety cap on processed events.
+    pub max_events: u64,
+    /// Record per-select poll samples (Fig. 1/Fig. 3 instrumentation;
+    /// costs memory on huge runs).
+    pub record_polls: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            workers_per_node: 40,
+            link: LinkModel::cluster(),
+            seed: 1,
+            max_events: u64::MAX,
+            record_polls: true,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum SimMsg {
+    Activate(TaskDesc),
+    StealRequest { thief: NodeId },
+    StealReply { tasks: Vec<TaskDesc> },
+}
+
+#[derive(Clone, Debug)]
+enum EventKind {
+    Finish {
+        node: NodeId,
+        task: TaskDesc,
+        started_us: f64,
+    },
+    Deliver {
+        dst: NodeId,
+        msg: SimMsg,
+    },
+    Poll {
+        node: NodeId,
+    },
+}
+
+struct Event {
+    t_us: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_us == other.t_us && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap: earliest time first, then insertion order
+        other
+            .t_us
+            .total_cmp(&self.t_us)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct SimNode {
+    /// Persistent slowness factor for this run (straggler model).
+    slow_factor: f64,
+    queue: SchedQueue,
+    tracker: ActivationTracker,
+    executing: HashSet<TaskDesc>,
+    idle_workers: usize,
+    tasks_done: u64,
+    exec_sum_us: f64,
+    busy_us: f64,
+    steal: StealStats,
+    inflight_steals: usize,
+    polls: Vec<PollSample>,
+    arrival_ready: Vec<PollSample>,
+    next_poll_scheduled: bool,
+}
+
+/// The simulator. Construct, then [`Simulator::run`].
+pub struct Simulator {
+    graph: Arc<dyn TaskGraph>,
+    cfg: SimConfig,
+    cost: CostModel,
+    migrate: MigrateConfig,
+    tile_size: u32,
+    nodes: Vec<SimNode>,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    now_us: f64,
+    rng: Rng,
+    events_processed: u64,
+    /// Activation messages currently on the wire.
+    activate_in_flight: u64,
+    /// Stolen tasks currently on the wire (inside StealReply messages).
+    tasks_in_transit: u64,
+}
+
+impl Simulator {
+    /// `tile_size` parameterizes the dense-op cost fit (Cholesky); pass
+    /// anything for workloads that ignore it (UTS, synthetic).
+    pub fn new(
+        graph: Arc<dyn TaskGraph>,
+        cfg: SimConfig,
+        cost: CostModel,
+        migrate: MigrateConfig,
+        tile_size: u32,
+    ) -> Self {
+        let n = graph.num_nodes();
+        let mut rng = Rng::new(cfg.seed);
+        let nodes = (0..n)
+            .map(|_| SimNode {
+                slow_factor: if cost.node_sigma > 0.0 {
+                    rng.lognormal_noise(cost.node_sigma)
+                } else {
+                    1.0
+                },
+                queue: SchedQueue::new(),
+                tracker: ActivationTracker::new(),
+                executing: HashSet::new(),
+                idle_workers: cfg.workers_per_node,
+                tasks_done: 0,
+                exec_sum_us: 0.0,
+                busy_us: 0.0,
+                steal: StealStats::default(),
+                inflight_steals: 0,
+                polls: Vec::new(),
+                arrival_ready: Vec::new(),
+                next_poll_scheduled: false,
+            })
+            .collect();
+        Simulator {
+            rng,
+            graph,
+            cfg,
+            cost,
+            migrate,
+            tile_size,
+            nodes,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now_us: 0.0,
+            events_processed: 0,
+            activate_in_flight: 0,
+            tasks_in_transit: 0,
+        }
+    }
+
+    fn push_event(&mut self, t_us: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Event {
+            t_us,
+            seq: self.seq,
+            kind,
+        });
+    }
+
+    /// No work left anywhere: every queue and executing set is empty and
+    /// no activation or stolen task is on the wire. (The real runtime has
+    /// to *detect* this with Safra's algorithm; the simulator is
+    /// omniscient.) Steal-protocol chatter is deliberately excluded —
+    /// otherwise thieves keep each other alive forever (the bug class the
+    /// termination-detection literature exists for).
+    fn work_done(&self) -> bool {
+        self.activate_in_flight == 0
+            && self.tasks_in_transit == 0
+            && self
+                .nodes
+                .iter()
+                .all(|n| n.queue.is_empty() && n.executing.is_empty())
+    }
+
+    fn avg_exec_us(node: &SimNode) -> f64 {
+        if node.tasks_done == 0 {
+            // No history yet: optimistic small value (PaRSEC starts the
+            // same way; converges after the first few tasks).
+            1.0
+        } else {
+            node.exec_sum_us / node.tasks_done as f64
+        }
+    }
+
+    /// Pull ready tasks onto idle workers.
+    fn dispatch(&mut self, node_id: NodeId) {
+        loop {
+            let node = &mut self.nodes[node_id.idx()];
+            if node.idle_workers == 0 {
+                break;
+            }
+            let Some(task) = node.queue.select() else {
+                break;
+            };
+            if self.cfg.record_polls {
+                node.polls.push(PollSample {
+                    t_us: self.now_us,
+                    ready: node.queue.len() as u32,
+                });
+            }
+            node.idle_workers -= 1;
+            node.executing.insert(task);
+            let base = self
+                .cost
+                .exec_us(task.class, self.tile_size, self.graph.work_units(task));
+            let noise = if self.cost.noise_sigma > 0.0 {
+                self.rng.lognormal_noise(self.cost.noise_sigma)
+            } else {
+                1.0
+            };
+            let dur = (base * noise * node.slow_factor).max(0.01);
+            self.push_event(
+                self.now_us + dur,
+                EventKind::Finish {
+                    node: node_id,
+                    task,
+                    started_us: self.now_us,
+                },
+            );
+        }
+    }
+
+    fn activate_at(&mut self, node_id: NodeId, task: TaskDesc) {
+        let graph = self.graph.clone();
+        let node = &mut self.nodes[node_id.idx()];
+        if node.tracker.activate(graph.as_ref(), task) {
+            node.queue.insert(task, graph.priority(task));
+            self.dispatch(node_id);
+        }
+    }
+
+    fn on_finish(&mut self, node_id: NodeId, task: TaskDesc, started_us: f64) {
+        let dur = self.now_us - started_us;
+        {
+            let node = &mut self.nodes[node_id.idx()];
+            node.executing.remove(&task);
+            node.idle_workers += 1;
+            node.tasks_done += 1;
+            node.exec_sum_us += dur;
+            node.busy_us += dur;
+        }
+        let succs = self.graph.successors(task);
+        let dynamic = self.graph.dynamic_placement();
+        for s in succs {
+            let dest = if dynamic { node_id } else { self.graph.owner(s) };
+            if dest == node_id {
+                self.activate_at(node_id, s);
+            } else {
+                let wire = self.cfg.link.transfer_us(32);
+                self.activate_in_flight += 1;
+                self.push_event(
+                    self.now_us + wire,
+                    EventKind::Deliver {
+                        dst: dest,
+                        msg: SimMsg::Activate(s),
+                    },
+                );
+            }
+        }
+        self.dispatch(node_id);
+        self.ensure_poll(node_id);
+    }
+
+    /// Make sure a starvation-check poll is pending for this node.
+    fn ensure_poll(&mut self, node_id: NodeId) {
+        if !self.migrate.enabled || self.nodes.len() < 2 || self.work_done() {
+            return;
+        }
+        let node = &mut self.nodes[node_id.idx()];
+        if node.next_poll_scheduled {
+            return;
+        }
+        node.next_poll_scheduled = true;
+        self.push_event(
+            self.now_us + self.migrate.poll_interval_us,
+            EventKind::Poll { node: node_id },
+        );
+    }
+
+    fn local_successors_of_executing(&self, node_id: NodeId) -> usize {
+        let node = &self.nodes[node_id.idx()];
+        let dynamic = self.graph.dynamic_placement();
+        node.executing
+            .iter()
+            .map(|t| {
+                self.graph
+                    .successors(*t)
+                    .into_iter()
+                    .filter(|s| dynamic || self.graph.owner(*s) == node_id)
+                    .count()
+            })
+            .sum()
+    }
+
+    fn on_poll(&mut self, node_id: NodeId) {
+        {
+            let node = &mut self.nodes[node_id.idx()];
+            node.next_poll_scheduled = false;
+        }
+        if !self.migrate.enabled || self.work_done() {
+            return;
+        }
+        let view = StarvationView {
+            ready: self.nodes[node_id.idx()].queue.len(),
+            executing_local_successors: match self.migrate.thief {
+                crate::migrate::ThiefPolicy::ReadyOnly => 0,
+                crate::migrate::ThiefPolicy::ReadySuccessors => {
+                    self.local_successors_of_executing(node_id)
+                }
+            },
+        };
+        let starving = is_starving(self.migrate.thief, view);
+        let (idle, can_request) = {
+            let node = &self.nodes[node_id.idx()];
+            (
+                node.executing.is_empty() && node.queue.is_empty(),
+                node.inflight_steals < self.migrate.max_inflight,
+            )
+        };
+        if starving && can_request {
+            let victim = NodeId(self.rng.pick_other(self.nodes.len(), node_id.idx()) as u32);
+            {
+                let node = &mut self.nodes[node_id.idx()];
+                node.inflight_steals += 1;
+                node.steal.requests_sent += 1;
+            }
+            let wire = self.cfg.link.transfer_us(16);
+            self.push_event(
+                self.now_us + wire,
+                EventKind::Deliver {
+                    dst: victim,
+                    msg: SimMsg::StealRequest { thief: node_id },
+                },
+            );
+        }
+        // Keep polling while the node still has any reason to act: the
+        // paper's migrate thread runs until distributed termination, but
+        // the simulator must not keep itself alive on polls alone — only
+        // reschedule if something is still happening somewhere.
+        let _ = idle;
+        self.ensure_poll(node_id);
+    }
+
+    fn on_steal_request(&mut self, victim_id: NodeId, thief: NodeId) {
+        let graph = self.graph.clone();
+        let workers = self.cfg.workers_per_node;
+        let avg = Self::avg_exec_us(&self.nodes[victim_id.idx()]);
+        let link = self.cfg.link;
+        let node = &mut self.nodes[victim_id.idx()];
+        node.steal.requests_served += 1;
+        let decision = decide_steal(
+            &self.migrate,
+            graph.as_ref(),
+            &mut node.queue,
+            workers,
+            avg,
+            link.latency_us,
+            link.bw_bytes_per_us,
+        );
+        if decision.tasks.is_empty() {
+            if decision.denied_by_waiting_time {
+                node.steal.waiting_time_denials += 1;
+            } else {
+                node.steal.empty_denials += 1;
+            }
+        } else {
+            node.steal.tasks_migrated += decision.tasks.len() as u64;
+            node.steal.payload_bytes += decision.payload_bytes;
+        }
+        // Reply (even when empty: the thief must learn the steal failed).
+        self.tasks_in_transit += decision.tasks.len() as u64;
+        let wire = self
+            .cfg
+            .link
+            .transfer_us(16 + 32 * decision.tasks.len() as u64 + decision.payload_bytes);
+        self.push_event(
+            self.now_us + wire,
+            EventKind::Deliver {
+                dst: thief,
+                msg: SimMsg::StealReply {
+                    tasks: decision.tasks,
+                },
+            },
+        );
+    }
+
+    fn on_steal_reply(&mut self, node_id: NodeId, tasks: Vec<TaskDesc>) {
+        let graph = self.graph.clone();
+        self.tasks_in_transit -= tasks.len() as u64;
+        {
+            let node = &mut self.nodes[node_id.idx()];
+            node.inflight_steals = node.inflight_steals.saturating_sub(1);
+            if !tasks.is_empty() {
+                node.steal.successful_steals += 1;
+                node.steal.tasks_received += tasks.len() as u64;
+            }
+            for t in &tasks {
+                // Fig. 3 instrumentation: queue length seen by the stolen
+                // task as it arrives (before insertion).
+                if self.cfg.record_polls {
+                    let ready = node.queue.len() as u32;
+                    node.arrival_ready.push(PollSample {
+                        t_us: self.now_us,
+                        ready,
+                    });
+                }
+                // Recreate the task (same uid) at the thief.
+                node.queue.insert(*t, graph.priority(*t));
+            }
+        }
+        if !tasks.is_empty() {
+            self.dispatch(node_id);
+        }
+        self.ensure_poll(node_id);
+    }
+
+    /// Run to completion and produce the report.
+    pub fn run(mut self) -> RunReport {
+        // Seed roots.
+        for root in self.graph.roots() {
+            let owner = self.graph.owner(root);
+            let node = &mut self.nodes[owner.idx()];
+            node.tracker.mark_root(root);
+            node.queue.insert(root, self.graph.priority(root));
+        }
+        let node_count = self.nodes.len();
+        for i in 0..node_count {
+            self.dispatch(NodeId(i as u32));
+            self.ensure_poll(NodeId(i as u32));
+        }
+
+        let mut makespan = 0.0f64;
+        while let Some(ev) = self.heap.pop() {
+            self.now_us = ev.t_us;
+            self.events_processed += 1;
+            if self.events_processed > self.cfg.max_events {
+                panic!(
+                    "simulator exceeded max_events={} (runaway?)",
+                    self.cfg.max_events
+                );
+            }
+            match ev.kind {
+                EventKind::Finish {
+                    node,
+                    task,
+                    started_us,
+                } => {
+                    makespan = makespan.max(self.now_us);
+                    self.on_finish(node, task, started_us);
+                }
+                EventKind::Deliver { dst, msg } => match msg {
+                    SimMsg::Activate(t) => {
+                        self.activate_in_flight -= 1;
+                        self.activate_at(dst, t)
+                    }
+                    SimMsg::StealRequest { thief } => self.on_steal_request(dst, thief),
+                    SimMsg::StealReply { tasks } => self.on_steal_reply(dst, tasks),
+                },
+                EventKind::Poll { node } => self.on_poll(node),
+            }
+        }
+
+        let executed: u64 = self.nodes.iter().map(|n| n.tasks_done).sum();
+        if let Some(total) = self.graph.total_tasks() {
+            assert_eq!(
+                executed, total,
+                "simulator finished without executing every task"
+            );
+        }
+        for node in &self.nodes {
+            assert!(node.queue.is_empty(), "ready task left behind");
+            assert!(node.executing.is_empty());
+            assert!(node.tracker.is_quiescent(), "activation left behind");
+        }
+
+        RunReport {
+            workload: self.graph.name().to_string(),
+            makespan_us: makespan,
+            total_tasks: executed,
+            workers_per_node: self.cfg.workers_per_node,
+            link: self.cfg.link,
+            events: self.events_processed,
+            nodes: self
+                .nodes
+                .into_iter()
+                .map(|n| NodeReport {
+                    tasks_executed: n.tasks_done,
+                    busy_us: n.busy_us,
+                    avg_exec_us: if n.tasks_done > 0 {
+                        n.exec_sum_us / n.tasks_done as f64
+                    } else {
+                        0.0
+                    },
+                    steal: n.steal,
+                    polls: n.polls,
+                    arrival_ready: n.arrival_ready,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
+
+    fn chol(tiles: u32, nodes: u32) -> Arc<CholeskyGraph> {
+        Arc::new(CholeskyGraph::new(CholeskyParams {
+            tiles,
+            tile_size: 20,
+            nodes,
+            dense_fraction: 0.5,
+            seed: 3,
+            all_dense: false,
+        }))
+    }
+
+    fn sim(
+        graph: Arc<dyn TaskGraph>,
+        migrate: MigrateConfig,
+        seed: u64,
+        workers: usize,
+    ) -> RunReport {
+        Simulator::new(
+            graph,
+            SimConfig {
+                workers_per_node: workers,
+                link: LinkModel::cluster(),
+                seed,
+                max_events: 50_000_000,
+                record_polls: true,
+            },
+            CostModel::default_calibrated(),
+            migrate,
+            20,
+        )
+        .run()
+    }
+
+    #[test]
+    fn cholesky_completes_without_stealing() {
+        let g = chol(10, 3);
+        let total = g.total_tasks().unwrap();
+        let r = sim(g, MigrateConfig::disabled(), 1, 4);
+        assert_eq!(r.tasks_total_executed(), total);
+        assert!(r.makespan_us > 0.0);
+        assert_eq!(r.total_steals().requests_sent, 0);
+    }
+
+    #[test]
+    fn cholesky_completes_with_stealing() {
+        let g = chol(12, 4);
+        let total = g.total_tasks().unwrap();
+        let r = sim(g, MigrateConfig::default(), 2, 4);
+        assert_eq!(r.tasks_total_executed(), total);
+        let s = r.total_steals();
+        assert!(s.requests_sent > 0, "imbalanced run should attempt steals");
+    }
+
+    #[test]
+    fn stealing_preserves_task_count_across_policies() {
+        use crate::migrate::{ThiefPolicy, VictimPolicy};
+        let total = chol(10, 4).total_tasks().unwrap();
+        for victim in [VictimPolicy::Half, VictimPolicy::Chunk(20), VictimPolicy::Single] {
+            for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
+                for gate in [false, true] {
+                    let mc = MigrateConfig {
+                        enabled: true,
+                        thief,
+                        victim,
+                        use_waiting_time: gate,
+                        poll_interval_us: 50.0,
+                        max_inflight: 1,
+            migrate_overhead_us: 150.0,
+                    };
+                    let r = sim(chol(10, 4), mc, 7, 2);
+                    assert_eq!(
+                        r.tasks_total_executed(),
+                        total,
+                        "policy {victim:?}/{thief:?}/gate={gate}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uts_completes_and_steals() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 32,
+            m: 4,
+            q: 0.3,
+            g: 50_000.0, // 50 µs/task: long enough for steals to land
+            seed: 5,
+            nodes: 4,
+            max_depth: 24,
+        }));
+        let size = g.tree_size(10_000_000);
+        let mc = MigrateConfig {
+            poll_interval_us: 20.0,
+            ..MigrateConfig::default()
+        };
+        let r = sim(g, mc, 3, 4);
+        assert_eq!(r.tasks_total_executed(), size);
+        // Everything starts at node 0: stealing is the only way any other
+        // node gets work.
+        let spread: u64 = r.nodes[1..].iter().map(|n| n.tasks_executed).sum();
+        assert!(spread > 0, "stealing spread work: {:?}",
+            r.nodes.iter().map(|n| n.tasks_executed).collect::<Vec<_>>());
+        assert!(r.total_steals().successful_steals > 0);
+    }
+
+    #[test]
+    fn uts_without_stealing_stays_on_node0() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 16,
+            m: 3,
+            q: 0.2,
+            g: 500.0,
+            seed: 6,
+            nodes: 3,
+            max_depth: 16,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = sim(g, MigrateConfig::disabled(), 4, 4);
+        assert_eq!(r.nodes[0].tasks_executed, size);
+        assert_eq!(r.nodes[1].tasks_executed, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sim(chol(8, 3), MigrateConfig::default(), 42, 4);
+        let b = sim(chol(8, 3), MigrateConfig::default(), 42, 4);
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.events, b.events);
+        assert_eq!(
+            a.total_steals().successful_steals,
+            b.total_steals().successful_steals
+        );
+    }
+
+    #[test]
+    fn seed_changes_outcome() {
+        let a = sim(chol(8, 3), MigrateConfig::default(), 1, 4);
+        let b = sim(chol(8, 3), MigrateConfig::default(), 2, 4);
+        // noise differs -> makespans differ (astronomically unlikely tie)
+        assert_ne!(a.makespan_us, b.makespan_us);
+    }
+
+    #[test]
+    fn single_node_never_steals() {
+        let g = chol(8, 1);
+        let r = sim(g, MigrateConfig::default(), 9, 4);
+        assert_eq!(r.total_steals().requests_sent, 0);
+    }
+
+    #[test]
+    fn polls_recorded_for_potential_metric() {
+        let r = sim(chol(10, 2), MigrateConfig::disabled(), 5, 2);
+        assert!(r.nodes.iter().any(|n| !n.polls.is_empty()));
+        let series = r.potential_series(r.makespan_us / 5.0);
+        assert!(!series.is_empty());
+        assert!(series.iter().all(|e| *e >= 0.0 && e.is_finite()));
+    }
+}

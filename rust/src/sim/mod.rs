@@ -1,0 +1,16 @@
+//! Discrete-event simulator of the distributed runtime.
+//!
+//! The paper's evaluation ran on 2–32 Gadi nodes with 40 worker threads
+//! each; this testbed is one container. The simulator executes the *same
+//! protocol code* (scheduler queues, activation tracking, migrate-module
+//! policies) under virtual time, with per-task costs drawn from a cost
+//! model calibrated against real PJRT kernel timings (`repro calibrate`).
+//! That preserves exactly what the figures measure — relative speedups,
+//! variance, steal success, imbalance — while letting us model 8×40
+//! workers faithfully. See DESIGN.md's substitution table.
+
+pub mod cost;
+pub mod engine;
+
+pub use cost::{ClassCost, CostModel};
+pub use engine::{SimConfig, Simulator};

@@ -1,0 +1,118 @@
+//! One-way ANOVA — the paper's §4 check that steal vs no-steal execution
+//! times come from different distributions.
+
+use super::special::f_sf;
+
+/// One-way ANOVA outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct AnovaResult {
+    pub f_statistic: f64,
+    pub p_value: f64,
+    pub df_between: f64,
+    pub df_within: f64,
+}
+
+impl AnovaResult {
+    pub fn significant(&self, alpha: f64) -> bool {
+        self.p_value < alpha
+    }
+}
+
+/// `groups`: two or more samples (e.g. execution times with and without
+/// work stealing).
+pub fn anova_one_way(groups: &[&[f64]]) -> AnovaResult {
+    let k = groups.len();
+    assert!(k >= 2, "anova needs >= 2 groups");
+    let n_total: usize = groups.iter().map(|g| g.len()).sum();
+    assert!(
+        groups.iter().all(|g| !g.is_empty()) && n_total > k,
+        "anova needs non-empty groups and residual dof"
+    );
+
+    let grand_mean =
+        groups.iter().flat_map(|g| g.iter()).sum::<f64>() / n_total as f64;
+
+    let mut ss_between = 0.0;
+    let mut ss_within = 0.0;
+    for g in groups {
+        let mean = g.iter().sum::<f64>() / g.len() as f64;
+        ss_between += g.len() as f64 * (mean - grand_mean).powi(2);
+        ss_within += g.iter().map(|x| (x - mean).powi(2)).sum::<f64>();
+    }
+    let df_between = (k - 1) as f64;
+    let df_within = (n_total - k) as f64;
+    let ms_between = ss_between / df_between;
+    let ms_within = ss_within / df_within;
+    let f = if ms_within > 0.0 {
+        ms_between / ms_within
+    } else if ms_between > 0.0 {
+        f64::INFINITY
+    } else {
+        0.0
+    };
+    let p = if f.is_finite() {
+        f_sf(f, df_between, df_within)
+    } else {
+        0.0
+    };
+    AnovaResult {
+        f_statistic: f,
+        p_value: p,
+        df_between,
+        df_within,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, mean: f64, sd: f64, seed: u64) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| mean + sd * r.normal()).collect()
+    }
+
+    #[test]
+    fn distinct_means_are_significant() {
+        let a = sample(30, 100.0, 3.0, 1);
+        let b = sample(30, 80.0, 3.0, 2);
+        let r = anova_one_way(&[&a, &b]);
+        assert!(r.significant(0.001), "p = {}", r.p_value);
+        assert!(r.f_statistic > 50.0);
+    }
+
+    #[test]
+    fn same_distribution_not_significant() {
+        let mut hits = 0;
+        for seed in 0..20 {
+            let a = sample(25, 50.0, 5.0, 100 + seed);
+            let b = sample(25, 50.0, 5.0, 200 + seed);
+            if anova_one_way(&[&a, &b]).significant(0.05) {
+                hits += 1;
+            }
+        }
+        // alpha = 0.05: expect about 1 false positive in 20
+        assert!(hits <= 4, "false positives: {hits}/20");
+    }
+
+    #[test]
+    fn three_groups() {
+        let a = sample(20, 10.0, 1.0, 5);
+        let b = sample(20, 10.1, 1.0, 6);
+        let c = sample(20, 18.0, 1.0, 7);
+        let r = anova_one_way(&[&a, &b, &c]);
+        assert_eq!(r.df_between, 2.0);
+        assert_eq!(r.df_within, 57.0);
+        assert!(r.significant(0.001));
+    }
+
+    #[test]
+    fn identical_groups_f_zero() {
+        let a = [5.0, 5.0, 5.0];
+        let b = [5.0, 5.0, 5.0];
+        let r = anova_one_way(&[&a, &b]);
+        assert_eq!(r.f_statistic, 0.0);
+        assert_eq!(r.p_value, 1.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Descriptive statistics.
+
+/// Summary of a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Sample variance (n−1 denominator).
+    pub var: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    /// Sample skewness (g1).
+    pub skewness: f64,
+    /// Excess kurtosis (g2).
+    pub kurtosis: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let n = xs.len();
+        let nf = n as f64;
+        let mean = xs.iter().sum::<f64>() / nf;
+        let mut m2 = 0.0;
+        let mut m3 = 0.0;
+        let mut m4 = 0.0;
+        for &x in xs {
+            let d = x - mean;
+            m2 += d * d;
+            m3 += d * d * d;
+            m4 += d * d * d * d;
+        }
+        m2 /= nf;
+        m3 /= nf;
+        m4 /= nf;
+        let var = if n > 1 {
+            m2 * nf / (nf - 1.0)
+        } else {
+            0.0
+        };
+        let skewness = if m2 > 0.0 { m3 / m2.powf(1.5) } else { 0.0 };
+        let kurtosis = if m2 > 0.0 { m4 / (m2 * m2) - 3.0 } else { 0.0 };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            var,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+            skewness,
+            kurtosis,
+        }
+    }
+
+    /// Coefficient of variation (σ/µ) — the paper's variability claim.
+    pub fn cv(&self) -> f64 {
+        if self.mean != 0.0 {
+            self.std / self.mean
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Empirical quantile (linear interpolation).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.var, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!(s.skewness.abs() < 1e-12, "symmetric sample");
+    }
+
+    #[test]
+    fn even_median_interpolates() {
+        assert_eq!(Summary::of(&[1.0, 2.0, 3.0, 4.0]).median, 2.5);
+    }
+
+    #[test]
+    fn skewness_sign() {
+        let right = Summary::of(&[1.0, 1.0, 1.0, 1.0, 10.0]);
+        assert!(right.skewness > 1.0);
+        let left = Summary::of(&[-10.0, 1.0, 1.0, 1.0, 1.0]);
+        assert!(left.skewness < -1.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn cv_scale_free() {
+        let a = Summary::of(&[9.0, 10.0, 11.0]);
+        let b = Summary::of(&[90.0, 100.0, 110.0]);
+        assert!((a.cv() - b.cv()).abs() < 1e-12);
+    }
+}

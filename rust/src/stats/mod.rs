@@ -1,0 +1,12 @@
+//! Statistics used by the paper's methodology (§4): descriptive
+//! summaries, normality tests (D'Agostino–Pearson and Shapiro–Wilk) and
+//! one-way ANOVA, plus the special functions their p-values need.
+
+pub mod anova;
+pub mod descriptive;
+pub mod normality;
+pub mod special;
+
+pub use anova::{anova_one_way, AnovaResult};
+pub use descriptive::Summary;
+pub use normality::{dagostino_pearson, shapiro_wilk, NormalityTest};

@@ -1,0 +1,229 @@
+//! Normality tests used in §4's methodology: D'Agostino–Pearson K² and
+//! Shapiro–Wilk (Royston's AS R94 approximation).
+
+use super::descriptive::Summary;
+use super::special::{chi2_sf, norm_cdf, norm_ppf};
+
+/// Result of a normality test.
+#[derive(Clone, Copy, Debug)]
+pub struct NormalityTest {
+    pub statistic: f64,
+    pub p_value: f64,
+}
+
+impl NormalityTest {
+    /// Fail to reject normality at `alpha`.
+    pub fn consistent_with_normal(&self, alpha: f64) -> bool {
+        self.p_value > alpha
+    }
+}
+
+/// D'Agostino–Pearson omnibus K² test (skewness + kurtosis).
+///
+/// Needs n ≥ 8 for the kurtosis transform to be defined.
+pub fn dagostino_pearson(xs: &[f64]) -> NormalityTest {
+    let n = xs.len();
+    assert!(n >= 8, "dagostino_pearson needs n >= 8, got {n}");
+    let s = Summary::of(xs);
+    let nf = n as f64;
+
+    // -- skewness transform (D'Agostino 1970)
+    let g1 = s.skewness;
+    let y = g1 * ((nf + 1.0) * (nf + 3.0) / (6.0 * (nf - 2.0))).sqrt();
+    let beta2 = 3.0 * (nf * nf + 27.0 * nf - 70.0) * (nf + 1.0) * (nf + 3.0)
+        / ((nf - 2.0) * (nf + 5.0) * (nf + 7.0) * (nf + 9.0));
+    let w2 = -1.0 + (2.0 * (beta2 - 1.0)).sqrt();
+    let w = w2.sqrt();
+    let delta = 1.0 / (w.ln()).sqrt();
+    let alpha = (2.0 / (w2 - 1.0)).sqrt();
+    let z1 = if y == 0.0 {
+        0.0
+    } else {
+        delta * ((y / alpha) + ((y / alpha).powi(2) + 1.0).sqrt()).ln()
+    };
+
+    // -- kurtosis transform (Anscombe & Glynn 1983)
+    let g2 = s.kurtosis; // excess
+    let eb2 = -6.0 / (nf + 1.0); // E[g2]
+    let vb2 = 24.0 * nf * (nf - 2.0) * (nf - 3.0) / ((nf + 1.0).powi(2) * (nf + 3.0) * (nf + 5.0));
+    let x = (g2 - eb2) / vb2.sqrt();
+    let sqrt_beta1 = 6.0 * (nf * nf - 5.0 * nf + 2.0) / ((nf + 7.0) * (nf + 9.0))
+        * (6.0 * (nf + 3.0) * (nf + 5.0) / (nf * (nf - 2.0) * (nf - 3.0))).sqrt();
+    let a = 6.0 + 8.0 / sqrt_beta1 * (2.0 / sqrt_beta1 + (1.0 + 4.0 / (sqrt_beta1 * sqrt_beta1)).sqrt());
+    let t1 = 1.0 - 2.0 / (9.0 * a);
+    let denom = 1.0 + x * (2.0 / (a - 4.0)).sqrt();
+    let t2 = if denom <= 0.0 {
+        // extreme tail; sign carries through
+        f64::NAN
+    } else {
+        ((1.0 - 2.0 / a) / denom).cbrt()
+    };
+    let z2 = if t2.is_nan() {
+        4.0 * x.signum()
+    } else {
+        (t1 - t2) / (2.0 / (9.0 * a)).sqrt()
+    };
+
+    let k2 = z1 * z1 + z2 * z2;
+    NormalityTest {
+        statistic: k2,
+        p_value: chi2_sf(k2, 2.0),
+    }
+}
+
+/// Shapiro–Wilk W test, Royston (1995) AS R94 approximation.
+/// Valid for 3 ≤ n ≤ 5000.
+pub fn shapiro_wilk(xs: &[f64]) -> NormalityTest {
+    let n = xs.len();
+    assert!((3..=5000).contains(&n), "shapiro_wilk needs 3 <= n <= 5000");
+    let mut x = xs.to_vec();
+    x.sort_by(|a, b| a.total_cmp(b));
+    let nf = n as f64;
+
+    // Weights m_i = Φ⁻¹((i − 3/8)/(n + 1/4))
+    let mut m: Vec<f64> = (1..=n)
+        .map(|i| norm_ppf((i as f64 - 0.375) / (nf + 0.25)))
+        .collect();
+    let m_sumsq: f64 = m.iter().map(|v| v * v).sum();
+    let rsn = 1.0 / nf.sqrt();
+
+    // Royston polynomial corrections for the last two weights
+    // (coefficients listed highest degree first; Horner forward fold).
+    let c = |coefs: &[f64], u: f64| -> f64 { coefs.iter().fold(0.0, |acc, &k| acc * u + k) };
+    let u = rsn;
+    let a_n = c(&[-2.706056, 4.434685, -2.071190, -0.147981, 0.221157, 0.0], u)
+        + m[n - 1] / m_sumsq.sqrt();
+    let mut a = vec![0.0; n];
+    if n > 5 {
+        let a_n1 = c(&[-3.582633, 5.682633, -1.752461, -0.293762, 0.042981, 0.0], u)
+            + m[n - 2] / m_sumsq.sqrt();
+        let phi = (m_sumsq - 2.0 * m[n - 1] * m[n - 1] - 2.0 * m[n - 2] * m[n - 2])
+            / (1.0 - 2.0 * a_n * a_n - 2.0 * a_n1 * a_n1);
+        a[n - 1] = a_n;
+        a[n - 2] = a_n1;
+        a[0] = -a_n;
+        a[1] = -a_n1;
+        for i in 2..n - 2 {
+            a[i] = m[i] / phi.sqrt();
+        }
+    } else {
+        let phi = (m_sumsq - 2.0 * m[n - 1] * m[n - 1]) / (1.0 - 2.0 * a_n * a_n);
+        a[n - 1] = a_n;
+        a[0] = -a_n;
+        for i in 1..n - 1 {
+            a[i] = m[i] / phi.sqrt();
+        }
+    }
+    let _ = &mut m;
+
+    let mean = x.iter().sum::<f64>() / nf;
+    let ssq: f64 = x.iter().map(|v| (v - mean) * (v - mean)).sum();
+    let wnum: f64 = a.iter().zip(&x).map(|(ai, xi)| ai * xi).sum::<f64>().powi(2);
+    let w = if ssq > 0.0 { wnum / ssq } else { 1.0 };
+
+    // p-value: Royston's normalizing transform of (1 - W).
+    let lw = (1.0 - w).max(1e-15).ln();
+    let (mu, sigma) = if n <= 11 {
+        let g = -2.273 + 0.459 * nf;
+        let mu = 0.5440 - 0.39978 * nf + 0.025054 * nf * nf - 0.0006714 * nf * nf * nf;
+        let sigma =
+            (1.3822 - 0.77857 * nf + 0.062767 * nf * nf - 0.0020322 * nf * nf * nf).exp();
+        // transform statistic: z = (-ln(g - lw) - mu)/sigma
+        let z = (-(g - lw).ln() - mu) / sigma;
+        return NormalityTest {
+            statistic: w,
+            p_value: (1.0 - norm_cdf(z)).clamp(0.0, 1.0),
+        };
+    } else {
+        let ln_n = nf.ln();
+        let mu = -1.5861 - 0.31082 * ln_n - 0.083751 * ln_n * ln_n + 0.0038915 * ln_n.powi(3);
+        let sigma = (-0.4803 - 0.082676 * ln_n + 0.0030302 * ln_n * ln_n).exp();
+        (mu, sigma)
+    };
+    let z = (lw - mu) / sigma;
+    NormalityTest {
+        statistic: w,
+        p_value: (1.0 - norm_cdf(z)).clamp(0.0, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn normal_sample(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| 10.0 + 2.0 * r.normal()).collect()
+    }
+
+    fn exponential_sample(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| -r.uniform().max(1e-12).ln()).collect()
+    }
+
+    #[test]
+    fn dagostino_accepts_normal() {
+        let mut accepted = 0;
+        for seed in 0..10 {
+            let t = dagostino_pearson(&normal_sample(200, seed));
+            if t.consistent_with_normal(0.01) {
+                accepted += 1;
+            }
+        }
+        assert!(accepted >= 8, "accepted {accepted}/10 normal samples");
+    }
+
+    #[test]
+    fn dagostino_rejects_exponential() {
+        let mut rejected = 0;
+        for seed in 0..10 {
+            let t = dagostino_pearson(&exponential_sample(200, seed));
+            if !t.consistent_with_normal(0.05) {
+                rejected += 1;
+            }
+        }
+        assert!(rejected >= 9, "rejected {rejected}/10 exponential samples");
+    }
+
+    #[test]
+    fn shapiro_accepts_normal() {
+        let mut accepted = 0;
+        for seed in 0..10 {
+            let t = shapiro_wilk(&normal_sample(50, 100 + seed));
+            assert!(t.statistic > 0.8 && t.statistic <= 1.0);
+            if t.consistent_with_normal(0.01) {
+                accepted += 1;
+            }
+        }
+        assert!(accepted >= 8, "accepted {accepted}/10");
+    }
+
+    #[test]
+    fn shapiro_rejects_exponential() {
+        let mut rejected = 0;
+        for seed in 0..10 {
+            let t = shapiro_wilk(&exponential_sample(50, 200 + seed));
+            if !t.consistent_with_normal(0.05) {
+                rejected += 1;
+            }
+        }
+        assert!(rejected >= 9, "rejected {rejected}/10");
+    }
+
+    #[test]
+    fn shapiro_w_near_one_for_linear_data() {
+        // perfectly uniform spacing is very "straight" on the normal QQ
+        // plot's center; W should be high
+        let xs: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        let t = shapiro_wilk(&xs);
+        assert!(t.statistic > 0.9);
+    }
+
+    #[test]
+    fn small_n_paths() {
+        // exercise the n <= 11 branch
+        let t = shapiro_wilk(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert!(t.p_value > 0.0 && t.p_value <= 1.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Special functions backing the p-values: log-gamma (Lanczos),
+//! regularized incomplete gamma (series + continued fraction) and
+//! regularized incomplete beta (Lentz continued fraction), plus the
+//! standard-normal CDF.
+
+/// ln Γ(x) via the Lanczos approximation (g = 7, n = 9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        std::f64::consts::PI.ln() - (std::f64::consts::PI * x).sin().ln() - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = COEF[0];
+        let t = x + 7.5;
+        for (i, &c) in COEF.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Regularized lower incomplete gamma P(a, x).
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series expansion
+        let mut term = 1.0 / a;
+        let mut sum = term;
+        let mut ap = a;
+        for _ in 0..500 {
+            ap += 1.0;
+            term *= x / ap;
+            sum += term;
+            if term.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        (sum.ln() + a * x.ln() - x - ln_gamma(a)).exp()
+    } else {
+        1.0 - gamma_q_cf(a, x)
+    }
+}
+
+/// Regularized upper incomplete gamma Q(a, x) via continued fraction.
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    let mut b = x + 1.0 - a;
+    let mut c = 1e308;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < 1e-300 {
+            d = 1e-300;
+        }
+        c = b + an / c;
+        if c.abs() < 1e-300 {
+            c = 1e-300;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (a * x.ln() - x - ln_gamma(a)).exp() * h
+}
+
+/// Chi-squared upper-tail p-value with k degrees of freedom.
+pub fn chi2_sf(x: f64, k: f64) -> f64 {
+    (1.0 - gamma_p(k / 2.0, x / 2.0)).clamp(0.0, 1.0)
+}
+
+/// Regularized incomplete beta I_x(a, b) (Lentz's continued fraction).
+pub fn beta_inc(a: f64, b: f64, x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x));
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x == 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    // symmetry for faster convergence
+    if x > (a + 1.0) / (a + b + 2.0) {
+        return 1.0 - beta_inc(b, a, 1.0 - x);
+    }
+    let mut c = 1.0;
+    let mut d = 1.0 - (a + b) * x / (a + 1.0);
+    if d.abs() < 1e-300 {
+        d = 1e-300;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..300 {
+        let m = m as f64;
+        // even step
+        let num = m * (b - m) * x / ((a + 2.0 * m - 1.0) * (a + 2.0 * m));
+        d = 1.0 + num * d;
+        if d.abs() < 1e-300 {
+            d = 1e-300;
+        }
+        d = 1.0 / d;
+        c = 1.0 + num / c;
+        if c.abs() < 1e-300 {
+            c = 1e-300;
+        }
+        h *= d * c;
+        // odd step
+        let num = -(a + m) * (a + b + m) * x / ((a + 2.0 * m) * (a + 2.0 * m + 1.0));
+        d = 1.0 + num * d;
+        if d.abs() < 1e-300 {
+            d = 1e-300;
+        }
+        d = 1.0 / d;
+        c = 1.0 + num / c;
+        if c.abs() < 1e-300 {
+            c = 1e-300;
+        }
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-14 {
+            break;
+        }
+    }
+    (front * h / a).clamp(0.0, 1.0)
+}
+
+/// Upper-tail p-value of the F distribution.
+pub fn f_sf(f: f64, d1: f64, d2: f64) -> f64 {
+    if f <= 0.0 {
+        return 1.0;
+    }
+    beta_inc(d2 / 2.0, d1 / 2.0, d2 / (d2 + d1 * f)).clamp(0.0, 1.0)
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function (Numerical-Recipes rational Chebyshev).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Inverse standard normal CDF (Acklam's algorithm, |relerr| < 1.15e-9).
+pub fn norm_ppf(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -norm_ppf(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!(ln_gamma(1.0).abs() < 1e-12);
+        assert!(ln_gamma(2.0).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gamma_p_is_cdf_like() {
+        assert!(gamma_p(2.0, 0.0) == 0.0);
+        assert!(gamma_p(2.0, 100.0) > 0.999999);
+        // P(1, x) = 1 - e^-x
+        assert!((gamma_p(1.0, 1.0) - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi2_known() {
+        // chi2 sf at x=k has p around 0.3-0.5 for small k
+        let p = chi2_sf(2.0, 2.0);
+        assert!((p - (-1.0f64).exp()).abs() < 1e-10, "sf(2;2)=e^-1, got {p}");
+    }
+
+    #[test]
+    fn beta_inc_symmetry_and_known() {
+        // I_x(1,1) = x
+        for x in [0.1, 0.37, 0.9] {
+            assert!((beta_inc(1.0, 1.0, x) - x).abs() < 1e-12);
+        }
+        // symmetry: I_x(a,b) = 1 - I_{1-x}(b,a)
+        let v = beta_inc(2.5, 3.5, 0.4) + beta_inc(3.5, 2.5, 0.6);
+        assert!((v - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn f_sf_sanity() {
+        // F(1, d1, d2) is not tiny; F of huge value -> 0
+        assert!(f_sf(1.0, 3.0, 10.0) > 0.3);
+        assert!(f_sf(100.0, 3.0, 10.0) < 1e-5);
+        assert_eq!(f_sf(0.0, 3.0, 10.0), 1.0);
+    }
+
+    #[test]
+    fn norm_cdf_ppf_roundtrip() {
+        for p in [0.001, 0.025, 0.31, 0.5, 0.77, 0.975, 0.999] {
+            let z = norm_ppf(p);
+            // erfc rational approximation is good to ~1.2e-7 absolute
+            assert!((norm_cdf(z) - p).abs() < 3e-7, "p={p}");
+        }
+        assert!((norm_cdf(1.959964) - 0.975).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,202 @@
+//! Micro-benchmark harness used by `cargo bench` (criterion is not in the
+//! vendored crate set, so this provides the same core loop: warmup,
+//! calibrated iteration count, multiple samples, robust statistics).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+/// Result of one benchmark: per-iteration timings across samples.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// mean ns/iter per sample
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        let mut v = self.samples_ns.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v[v.len() / 2]
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        let m = self.mean_ns();
+        (self
+            .samples_ns
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples_ns.len().max(1) as f64)
+            .sqrt()
+    }
+
+    pub fn report(&self) -> String {
+        let med = self.median_ns();
+        format!(
+            "{:<44} {:>12}/iter  (mean {}, sd {}, {} samples)",
+            self.name,
+            fmt_ns(med),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.stddev_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with criterion-like calibration.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            sample_time: Duration::from_millis(200),
+            samples: 12,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            sample_time: Duration::from_millis(50),
+            samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, printing the result line immediately.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + estimate iteration cost.
+        let warm_start = Instant::now();
+        let mut iters_done = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            iters_done += 1;
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / iters_done as f64).max(0.5);
+        let iters_per_sample = ((self.sample_time.as_nanos() as f64 / est_ns) as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples_ns,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Benchmark where each iteration needs fresh input (setup excluded
+    /// from timing by batching: setup all inputs first, then time the run).
+    pub fn bench_with_setup<S, T>(
+        &mut self,
+        name: &str,
+        mut setup: impl FnMut() -> S,
+        mut f: impl FnMut(S) -> T,
+    ) -> &BenchResult {
+        // estimate
+        let warm_start = Instant::now();
+        let mut iters_done = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            let s = setup();
+            black_box(f(s));
+            iters_done += 1;
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / iters_done as f64).max(1.0);
+        let iters_per_sample = ((self.sample_time.as_nanos() as f64 / est_ns) as u64)
+            .clamp(1, 10_000);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let inputs: Vec<S> = (0..iters_per_sample).map(|_| setup()).collect();
+            // Collect outputs so their Drop (which can dwarf the measured
+            // operation, e.g. dropping a 10k-entry queue) runs after the
+            // clock stops.
+            let mut outputs = Vec::with_capacity(inputs.len());
+            let t0 = Instant::now();
+            for s in inputs {
+                outputs.push(black_box(f(s)));
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+            drop(outputs);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples_ns,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let mut b = Bencher::quick();
+        let r = b.bench("noop-ish", || 1u64.wrapping_add(2)).clone();
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.median_ns() < 1e6);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn setup_variant_runs() {
+        let mut b = Bencher::quick();
+        let r = b
+            .bench_with_setup("vec-sort", || vec![3u32, 1, 2], |mut v| {
+                v.sort();
+                v
+            })
+            .clone();
+        assert!(r.mean_ns() > 0.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Flag parsing for the `repro` launcher.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments, with typed accessors that report unknown or
+//! malformed flags with the offending text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: positionals + flag map.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// flags that were consumed by a typed accessor (unknown-flag check)
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    // boolean flag
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn u64_opt(&self, key: &str) -> Result<Option<u64>> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'"))
+            })
+            .transpose()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.u64_opt(key)?.unwrap_or(default))
+    }
+
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow!("--{key} expects a number, got '{v}'"))
+            })
+            .transpose()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.f64_opt(key)?.unwrap_or(default))
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.mark(key);
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+            Some(v) => bail!("--{key} expects a boolean, got '{v}'"),
+        }
+    }
+
+    /// Comma-separated u64 list, e.g. `--nodes 2,4,8`.
+    pub fn u64_list_or(&self, key: &str, default: &[u64]) -> Result<Vec<u64>> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<u64>()
+                        .map_err(|_| anyhow!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on any flag that no accessor asked about (catches typos).
+    pub fn check_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_positionals() {
+        let a = parse("figure fig5 --nodes 2,4,8 --seed=7 --verbose");
+        assert_eq!(a.positional, vec!["figure", "fig5"]);
+        assert_eq!(a.u64_list_or("nodes", &[]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.u64_or("workers", 4).unwrap(), 4);
+        assert_eq!(a.str_or("policy", "single"), "single");
+        assert!(!a.bool_or("steal", false).unwrap());
+    }
+
+    #[test]
+    fn rejects_bad_types() {
+        let a = parse("--seed abc");
+        assert!(a.u64_opt("seed").is_err());
+        let b = parse("--frac x");
+        assert!(b.f64_opt("frac").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("--sede 7");
+        let _ = a.u64_or("seed", 0);
+        assert!(a.check_unknown().is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("--bias -3.5");
+        assert_eq!(a.f64_or("bias", 0.0).unwrap(), -3.5);
+    }
+}

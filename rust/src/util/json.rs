@@ -1,0 +1,430 @@
+//! Minimal JSON: a value type, a recursive-descent parser and a writer.
+//!
+//! Used for the artifact `manifest.json` produced by the python AOT
+//! pipeline, the calibrated cost model (`artifacts/costmodel.json`) and
+//! the machine-readable figure outputs under `results/`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value. Object keys keep insertion-independent (sorted) order via
+/// `BTreeMap` so emitted files are deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing data at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Required-field accessors for manifest parsing.
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing string field '{key}'"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing numeric field '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing numeric field '{key}'"))
+    }
+
+    /// Serialize with 2-space indentation.
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                if v.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (idx, item) in v.iter().enumerate() {
+                    if idx > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    item.write(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (idx, (k, v)) in m.iter().enumerate() {
+                    if idx > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Self {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', got '{}' at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']', got '{}' at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            // Surrogate pairs are not needed for our files.
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // Re-assemble multi-byte UTF-8 sequences.
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c);
+                        let end = start + len;
+                        if end > self.b.len() {
+                            bail!("truncated utf-8");
+                        }
+                        s.push_str(std::str::from_utf8(&self.b[start..end])?);
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(text.parse::<f64>().map_err(|e| {
+            anyhow!("bad number '{text}' at byte {start}: {e}")
+        })?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for text in ["null", "true", "false", "3", "-2.5", "\"hi\""] {
+            let v = Json::parse(text).unwrap();
+            assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": "c\n"}], "d": null}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            v.get("a").unwrap().as_arr().unwrap()[2].req_str("b").unwrap(),
+            "c\n"
+        );
+    }
+
+    #[test]
+    fn parses_manifest_shape() {
+        let text = r#"{"dtype": "f64", "entries": [{"name": "gemm_n8_f64", "op": "gemm",
+                       "tile": 8, "inputs": 3, "outputs": 1, "file": "gemm_n8_f64.hlo.txt"}]}"#;
+        let v = Json::parse(text).unwrap();
+        let e = &v.get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(e.req_u64("tile").unwrap(), 8);
+        assert_eq!(e.req_str("op").unwrap(), "gemm");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("nope").is_err());
+        assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn roundtrip_unicode() {
+        let v = Json::parse("\"caf\u{e9} \\u00e9\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "café é");
+        assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn pretty_is_deterministic() {
+        let a = Json::obj(vec![("z", 1u64.into()), ("a", 2u64.into())]);
+        let b = Json::obj(vec![("a", 2u64.into()), ("z", 1u64.into())]);
+        assert_eq!(a.pretty(), b.pretty());
+    }
+}

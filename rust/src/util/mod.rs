@@ -1,0 +1,20 @@
+//! Small self-contained substrates the coordinator depends on.
+//!
+//! The build is fully offline against a minimal vendored crate set, so the
+//! usual ecosystem crates (serde, clap, rand, criterion, proptest) are
+//! implemented in-tree at the scale this project needs:
+//!
+//! * [`rng`] — deterministic SplitMix64 / xoshiro256** generators and
+//!   distributions (the whole system is seed-reproducible),
+//! * [`json`] — a JSON value type with parser and writer (artifact
+//!   manifests, cost models, figure outputs),
+//! * [`cli`] — flag parsing for the `repro` launcher,
+//! * [`bench`] — the micro-benchmark harness used by `cargo bench`,
+//! * [`prop`] — a tiny property-testing driver (random cases + shrinking
+//!   by case minimization) used by the invariant tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,114 @@
+//! A tiny property-testing driver (proptest is not in the vendored crate
+//! set). Runs a property over `n` seeded random cases; on failure it
+//! re-runs with a halving "size" parameter to report the smallest failing
+//! scale, then panics with the seed so the case is exactly reproducible.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint handed to the generator (e.g. matrix dim,
+    /// node count, task count). The driver sweeps sizes from small to
+    /// large so early failures are already small.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop(rng, size)`; the property indicates failure by returning
+/// `Err(message)`.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // sweep sizes up: size grows roughly linearly with case index
+        let size = 1 + (cfg.max_size.saturating_sub(1)) * case / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Attempt shrink: retry smaller sizes with the same seed.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 size {} after shrink from {size}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", Config::default(), |rng, _| {
+            let a = rng.next_u64() >> 1;
+            let b = rng.next_u64() >> 1;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", Config { cases: 3, ..Default::default() }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn sizes_sweep_up_to_max() {
+        let mut max_seen = 0;
+        check(
+            "size-sweep",
+            Config { cases: 50, max_size: 32, ..Default::default() },
+            |_, size| {
+                max_seen = max_seen.max(size);
+                Ok(())
+            },
+        );
+        assert!(max_seen >= 30, "max size seen {max_seen}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Pure-Rust tile kernels.
+//!
+//! Two jobs: (1) the fallback executor for real-mode runs that skip PJRT
+//! (fast tests, machines without the XLA extension), and (2) the
+//! numerical oracle the PJRT path is verified against — these mirror
+//! `python/compile/kernels/ref.py`.
+
+use crate::dataflow::data::Tile;
+
+/// L = chol(A), lower triangular (Cholesky–Banachiewicz).
+pub fn potrf(a: &Tile) -> Tile {
+    let n = a.n;
+    let mut l = Tile::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                assert!(sum > 0.0, "tile not positive definite at ({i},{i}): {sum}");
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.at(j, j));
+            }
+        }
+    }
+    l
+}
+
+/// X = B · inv(L)ᵀ  (solve X Lᵀ = B, forward substitution per row of X).
+pub fn trsm(l: &Tile, b: &Tile) -> Tile {
+    let n = l.n;
+    let m = b.n; // square tiles: m == n
+    let mut x = Tile::zeros(m);
+    for r in 0..m {
+        for j in 0..n {
+            let mut acc = b.at(r, j);
+            for k in 0..j {
+                acc -= x.at(r, k) * l.at(j, k);
+            }
+            x.set(r, j, acc / l.at(j, j));
+        }
+    }
+    x
+}
+
+/// C ← C − A·Aᵀ.
+pub fn syrk(c: &mut Tile, a: &Tile) {
+    let n = c.n;
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..a.n {
+                acc += a.at(i, k) * a.at(j, k);
+            }
+            let v = c.at(i, j) - acc;
+            c.set(i, j, v);
+        }
+    }
+}
+
+/// C ← C − A·Bᵀ.
+pub fn gemm(c: &mut Tile, a: &Tile, b: &Tile) {
+    c.gemm_update(a, b);
+}
+
+/// ‖L·Lᵀ − A‖∞ (verification).
+pub fn reconstruct_error(l: &Tile, a: &Tile) -> f64 {
+    let n = l.n;
+    let mut worst: f64 = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += l.at(i, k) * l.at(j, k);
+            }
+            worst = worst.max((acc - a.at(i, j)).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Tile {
+        let mut rng = Rng::new(seed);
+        let mut m = Tile::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                m.set(i, j, rng.normal());
+            }
+        }
+        // a = m mᵀ + n I
+        let mut a = Tile::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = if i == j { n as f64 } else { 0.0 };
+                for k in 0..n {
+                    acc += m.at(i, k) * m.at(j, k);
+                }
+                a.set(i, j, acc);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn potrf_reconstructs() {
+        for n in [1, 2, 5, 16, 32] {
+            let a = spd(n, n as u64);
+            let l = potrf(&a);
+            assert!(reconstruct_error(&l, &a) < 1e-9, "n={n}");
+            // strictly lower triangular
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_solves() {
+        let n = 12;
+        let a = spd(n, 3);
+        let l = potrf(&a);
+        let mut rng = Rng::new(5);
+        let mut b = Tile::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                b.set(i, j, rng.normal());
+            }
+        }
+        let x = trsm(&l, &b);
+        // x lᵀ == b
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += x.at(i, k) * l.at(j, k);
+                }
+                assert!((acc - b.at(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_gemm_agree_when_b_is_a() {
+        let n = 10;
+        let mut rng = Rng::new(7);
+        let mut a = Tile::zeros(n);
+        let mut c1 = Tile::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                a.set(i, j, rng.normal());
+                c1.set(i, j, rng.normal());
+            }
+        }
+        let mut c2 = c1.clone();
+        syrk(&mut c1, &a);
+        gemm(&mut c2, &a, &a);
+        assert!(c1.max_abs_diff(&c2) < 1e-12);
+    }
+
+    /// Full blocked factorization using only tile kernels equals the
+    /// monolithic factorization of the assembled matrix.
+    #[test]
+    fn blocked_cholesky_composes() {
+        let (t, n) = (3usize, 6usize);
+        let big = spd(t * n, 9);
+        // split into tiles
+        let mut tiles: Vec<Vec<Tile>> = (0..t)
+            .map(|bi| {
+                (0..t)
+                    .map(|bj| {
+                        let mut tile = Tile::zeros(n);
+                        for i in 0..n {
+                            for j in 0..n {
+                                tile.set(i, j, big.at(bi * n + i, bj * n + j));
+                            }
+                        }
+                        tile
+                    })
+                    .collect()
+            })
+            .collect();
+        // right-looking blocked factorization
+        for k in 0..t {
+            tiles[k][k] = potrf(&tiles[k][k].clone());
+            for i in k + 1..t {
+                tiles[i][k] = trsm(&tiles[k][k], &tiles[i][k].clone());
+            }
+            for i in k + 1..t {
+                let panel = tiles[i][k].clone();
+                syrk(&mut tiles[i][i], &panel);
+                for j in k + 1..i {
+                    let pj = tiles[j][k].clone();
+                    let (pi,) = (tiles[i][k].clone(),);
+                    gemm(&mut tiles[i][j], &pi, &pj);
+                }
+            }
+        }
+        // assemble and compare against monolithic potrf
+        let lref = potrf(&big);
+        for bi in 0..t {
+            for bj in 0..=bi {
+                for i in 0..n {
+                    for j in 0..n {
+                        let want = lref.at(bi * n + i, bj * n + j);
+                        let got = if bj < bi || j <= i {
+                            tiles[bi][bj].at(i, j)
+                        } else {
+                            0.0
+                        };
+                        assert!(
+                            (want - got).abs() < 1e-9,
+                            "tile ({bi},{bj}) entry ({i},{j}): {want} vs {got}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

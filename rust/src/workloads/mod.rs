@@ -1,0 +1,16 @@
+//! Built-in workloads: the paper's two benchmarks.
+//!
+//! * [`cholesky`] — tiled sparse Cholesky factorization (POTRF / TRSM /
+//!   SYRK / GEMM task classes, half the tiles dense, cyclic
+//!   distribution) — §4.1;
+//! * [`uts`] — the Unbalanced Tree Search benchmark with
+//!   child-follows-parent mapping — §4.1/§4.4;
+//! * [`kernels`] — pure-Rust tile kernels used as the no-PJRT fallback
+//!   executor and as the verification oracle for the PJRT path.
+
+pub mod cholesky;
+pub mod kernels;
+pub mod uts;
+
+pub use cholesky::{CholeskyGraph, CholeskyParams, TileKind};
+pub use uts::{UtsGraph, UtsParams};

@@ -1,0 +1,263 @@
+//! Unbalanced Tree Search (UTS) benchmark (Olivier et al., LCPC'06).
+//!
+//! Binomial variant, as used by the paper (§4.4, Fig. 7 caption
+//! `b=120, m=5, q=0.200014, g=12e6`): the root has `b0` children; every
+//! other node has `m` children with probability `q` and none otherwise.
+//! With `m·q` slightly above 1 the tree is near-critical — deeply
+//! unbalanced subtrees, the classic work-stealing stress test.
+//!
+//! The tree is derived *deterministically* from node hashes (standing in
+//! for UTS's SHA-1 stream): the children of a node are a pure function
+//! of its id, so thief and victim agree on the subtree under any
+//! migration, and a run is reproducible from the seed.
+//!
+//! Placement is **child-follows-parent** unless stolen (`dynamic_placement`),
+//! which is exactly the property the paper uses to explain why `Half`
+//! behaves so differently here than on Cholesky: a starving node never
+//! spawns new local work, while a busy node's subtree can grow
+//! exponentially.
+
+use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
+use crate::dataflow::ttg::TaskGraph;
+use crate::util::rng::{mix, mix2};
+
+/// UTS parameters (binomial variant).
+#[derive(Clone, Copy, Debug)]
+pub struct UtsParams {
+    /// Root branching factor (paper: 120).
+    pub b0: u32,
+    /// Non-root branching factor (paper: 5).
+    pub m: u32,
+    /// Probability a non-root node has children (paper: 0.200014).
+    pub q: f64,
+    /// Work units per node (paper: 12e6 — granularity knob).
+    pub g: f64,
+    /// Tree seed.
+    pub seed: u64,
+    /// Nodes in the cluster.
+    pub nodes: u32,
+    /// Safety cap on total tree size (near-critical trees can blow up);
+    /// nodes whose depth-first hash falls beyond the cap get no children.
+    pub max_depth: u32,
+}
+
+impl Default for UtsParams {
+    fn default() -> Self {
+        UtsParams {
+            b0: 120,
+            m: 5,
+            q: 0.200014,
+            g: 12e6,
+            seed: 0x075,
+            nodes: 4,
+            max_depth: 64,
+        }
+    }
+}
+
+/// The UTS task graph. One task = one tree-node expansion.
+pub struct UtsGraph {
+    p: UtsParams,
+}
+
+impl UtsGraph {
+    pub fn new(p: UtsParams) -> Self {
+        assert!(p.b0 >= 1 && p.nodes >= 1);
+        UtsGraph { p }
+    }
+
+    pub fn params(&self) -> &UtsParams {
+        &self.p
+    }
+
+    pub fn root() -> TaskDesc {
+        TaskDesc::dynamic(TaskClass::UtsNode, 1, 0, 0)
+    }
+
+    fn child(&self, parent: TaskDesc, idx: u32) -> TaskDesc {
+        let uid = mix2(self.p.seed ^ parent.uid, idx as u64 + 1);
+        TaskDesc::dynamic(TaskClass::UtsNode, uid | 1, parent.i + 1, idx)
+    }
+
+    /// Number of children of a node — a pure function of its uid.
+    pub fn num_children(&self, t: TaskDesc) -> u32 {
+        if t.uid == 1 {
+            return self.p.b0; // root
+        }
+        if t.i >= self.p.max_depth {
+            return 0;
+        }
+        // Bernoulli(q) drawn from the node hash.
+        let draw = mix(t.uid ^ self.p.seed) >> 11;
+        let thresh = (self.p.q * (1u64 << 53) as f64) as u64;
+        if draw < thresh {
+            self.p.m
+        } else {
+            0
+        }
+    }
+
+    /// Total tree size by sequential traversal (test/report helper; the
+    /// runtime never needs this).
+    pub fn tree_size(&self, cap: u64) -> u64 {
+        let mut stack = vec![Self::root()];
+        let mut count = 0u64;
+        while let Some(t) = stack.pop() {
+            count += 1;
+            if count >= cap {
+                return count;
+            }
+            for c in 0..self.num_children(t) {
+                stack.push(self.child(t, c));
+            }
+        }
+        count
+    }
+}
+
+impl TaskGraph for UtsGraph {
+    fn name(&self) -> &str {
+        "uts"
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.p.nodes as usize
+    }
+
+    fn roots(&self) -> Vec<TaskDesc> {
+        vec![Self::root()]
+    }
+
+    fn successors(&self, t: TaskDesc) -> Vec<TaskDesc> {
+        (0..self.num_children(t)).map(|c| self.child(t, c)).collect()
+    }
+
+    fn in_degree(&self, t: TaskDesc) -> u32 {
+        u32::from(t.uid != 1)
+    }
+
+    /// Static owner is only used for the root; all other placement is
+    /// dynamic (child-follows-parent).
+    fn owner(&self, _t: TaskDesc) -> NodeId {
+        NodeId(0)
+    }
+
+    fn dynamic_placement(&self) -> bool {
+        true
+    }
+
+    /// Every UTS task is stealable — there is no sparse-tile analogue.
+    fn is_stealable(&self, _t: TaskDesc) -> bool {
+        true
+    }
+
+    fn priority(&self, t: TaskDesc) -> i64 {
+        // Deeper nodes first (DFS-ish): keeps queues short and mirrors
+        // UTS implementations' LIFO local order.
+        t.i as i64
+    }
+
+    fn work_units(&self, _t: TaskDesc) -> f64 {
+        // Every UTS node performs `g` units of work (the granularity
+        // parameter); the cost model converts units to time.
+        self.p.g
+    }
+
+    fn payload_bytes(&self, _t: TaskDesc) -> u64 {
+        // A UTS node migrates only its descriptor (the paper's UTS runs
+        // steal "tasks", not data) — a few words on the wire.
+        64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> UtsGraph {
+        UtsGraph::new(UtsParams {
+            b0: 8,
+            m: 3,
+            q: 0.25,
+            g: 100.0,
+            seed: 11,
+            nodes: 2,
+            max_depth: 30,
+        })
+    }
+
+    #[test]
+    fn root_has_b0_children() {
+        let g = small();
+        assert_eq!(g.successors(UtsGraph::root()).len(), 8);
+    }
+
+    #[test]
+    fn children_are_deterministic_and_unique() {
+        let g = small();
+        let a = g.successors(UtsGraph::root());
+        let b = g.successors(UtsGraph::root());
+        assert_eq!(a, b);
+        let mut uids: Vec<u64> = a.iter().map(|t| t.uid).collect();
+        uids.sort();
+        uids.dedup();
+        assert_eq!(uids.len(), 8);
+    }
+
+    #[test]
+    fn depth_increases() {
+        let g = small();
+        let c = g.successors(UtsGraph::root())[0];
+        assert_eq!(c.i, 1);
+        for gc in g.successors(c) {
+            assert_eq!(gc.i, 2);
+        }
+    }
+
+    #[test]
+    fn tree_size_is_reproducible_and_finite() {
+        let g = small();
+        let s1 = g.tree_size(1_000_000);
+        let s2 = g.tree_size(1_000_000);
+        assert_eq!(s1, s2);
+        assert!(s1 >= 9, "at least root + b0 children, got {s1}");
+        assert!(s1 < 1_000_000, "capped tree should be finite");
+    }
+
+    #[test]
+    fn branch_probability_roughly_q() {
+        let g = UtsGraph::new(UtsParams {
+            b0: 10_000,
+            q: 0.2,
+            max_depth: 2,
+            ..UtsParams::default()
+        });
+        let children = g.successors(UtsGraph::root());
+        let with_kids = children
+            .iter()
+            .filter(|c| g.num_children(**c) > 0)
+            .count() as f64;
+        let frac = with_kids / children.len() as f64;
+        assert!((frac - 0.2).abs() < 0.02, "empirical q = {frac}");
+    }
+
+    #[test]
+    fn max_depth_prunes() {
+        let g = UtsGraph::new(UtsParams {
+            max_depth: 1,
+            ..UtsParams::default()
+        });
+        for c in g.successors(UtsGraph::root()) {
+            assert_eq!(g.num_children(c), 0);
+        }
+    }
+
+    #[test]
+    fn dynamic_placement_flags() {
+        let g = small();
+        assert!(g.dynamic_placement());
+        assert!(g.is_stealable(UtsGraph::root()));
+        assert_eq!(g.in_degree(UtsGraph::root()), 0);
+        assert_eq!(g.in_degree(g.successors(UtsGraph::root())[0]), 1);
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-module integration tests: DES ↔ real runtime agreement, steal
+//! protocol end to end, figure harness smoke, config plumbing.
+
+use std::sync::Arc;
+
+use parsteal::comm::LinkModel;
+use parsteal::dataflow::ttg::TaskGraph;
+use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::node::{Cluster, ClusterConfig, NullExecutor, SpinExecutor};
+use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
+
+fn chol(tiles: u32, nodes: u32) -> Arc<CholeskyGraph> {
+    Arc::new(CholeskyGraph::new(CholeskyParams {
+        tiles,
+        tile_size: 16,
+        nodes,
+        dense_fraction: 0.5,
+        seed: 9,
+        all_dense: false,
+    }))
+}
+
+/// The same graph executed by the DES and the threaded runtime must
+/// agree on the total task count and (with no stealing) on the exact
+/// per-node distribution — both follow the same static owner mapping.
+#[test]
+fn sim_and_real_agree_on_static_distribution() {
+    let g = chol(10, 3);
+    let sim = Simulator::new(
+        g.clone(),
+        SimConfig {
+            workers_per_node: 2,
+            link: LinkModel::cluster(),
+            seed: 4,
+            max_events: u64::MAX,
+            record_polls: false,
+        },
+        CostModel::default_calibrated(),
+        MigrateConfig::disabled(),
+        16,
+    )
+    .run();
+    let real = Cluster::run(
+        g.clone(),
+        ClusterConfig {
+            workers_per_node: 2,
+            link: LinkModel::ideal(),
+            migrate: MigrateConfig::disabled(),
+            seed: 4,
+            record_polls: false,
+        },
+        Arc::new(NullExecutor),
+    );
+    assert_eq!(sim.tasks_total_executed(), real.tasks_total_executed());
+    let sim_dist: Vec<u64> = sim.nodes.iter().map(|n| n.tasks_executed).collect();
+    let real_dist: Vec<u64> = real.nodes.iter().map(|n| n.tasks_executed).collect();
+    assert_eq!(sim_dist, real_dist, "static mapping must be identical");
+}
+
+/// With stealing enabled in the real runtime, every task still executes
+/// exactly once — across every policy combination.
+#[test]
+fn real_runtime_steals_preserve_exactly_once() {
+    for victim in [VictimPolicy::Half, VictimPolicy::Chunk(4), VictimPolicy::Single] {
+        for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
+            let g = chol(8, 3);
+            let total = g.total_tasks().unwrap();
+            let cost = CostModel::default_calibrated();
+            let g2 = g.clone();
+            let r = Cluster::run(
+                g.clone(),
+                ClusterConfig {
+                    workers_per_node: 2,
+                    link: LinkModel::ideal(),
+                    migrate: MigrateConfig {
+                        enabled: true,
+                        thief,
+                        victim,
+                        use_waiting_time: true,
+                        poll_interval_us: 20.0,
+                        max_inflight: 1,
+            migrate_overhead_us: 150.0,
+                    },
+                    seed: 5,
+                    record_polls: false,
+                },
+                Arc::new(SpinExecutor::new(cost, 16, move |t| g2.work_units(t)).with_time_scale(0.2)),
+            );
+            assert_eq!(
+                r.tasks_total_executed(),
+                total,
+                "victim={victim:?} thief={thief:?}"
+            );
+        }
+    }
+}
+
+/// UTS in the real runtime: dynamic task creation + stealing + Safra
+/// termination on a tree nobody knows the size of in advance.
+#[test]
+fn real_runtime_uts_dynamic_termination() {
+    let g = Arc::new(UtsGraph::new(UtsParams {
+        b0: 20,
+        m: 3,
+        q: 0.3,
+        g: 5_000.0,
+        seed: 2,
+        nodes: 3,
+        max_depth: 14,
+    }));
+    let size = g.tree_size(10_000_000);
+    let g2 = g.clone();
+    let r = Cluster::run(
+        g.clone(),
+        ClusterConfig {
+            workers_per_node: 2,
+            link: LinkModel::ideal(),
+            migrate: MigrateConfig {
+                poll_interval_us: 20.0,
+                ..Default::default()
+            },
+            seed: 6,
+            record_polls: false,
+        },
+        Arc::new(
+            SpinExecutor::new(CostModel::default_calibrated(), 0, move |t| g2.work_units(t))
+                .with_time_scale(0.01),
+        ),
+    );
+    assert_eq!(r.tasks_total_executed(), size);
+}
+
+/// The network's latency model must delay but never lose messages even
+/// under hundreds of concurrent senders.
+#[test]
+fn network_stress_no_loss() {
+    use parsteal::comm::{Msg, Network};
+    use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
+    let (net, mb) = Network::new(3, LinkModel {
+        latency_us: 50.0,
+        bw_bytes_per_us: 1000.0,
+    });
+    let net2 = net.clone();
+    let sender = std::thread::spawn(move || {
+        for i in 0..500u32 {
+            net2.send(
+                NodeId(0),
+                NodeId(1 + (i % 2)),
+                Msg::Activate {
+                    task: TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0),
+                },
+            );
+        }
+    });
+    sender.join().unwrap();
+    let mut got = 0;
+    for mbox in &mb[1..] {
+        while mbox
+            .recv_timeout(std::time::Duration::from_millis(200))
+            .is_some()
+        {
+            got += 1;
+        }
+    }
+    assert_eq!(got, 500);
+    net.shutdown();
+}
+
+/// Figure harness smoke test at miniature scale: fig2 text + JSON out.
+#[test]
+fn figure_harness_smoke() {
+    use parsteal::figures::{self, Ctx, Scale};
+    let out = std::env::temp_dir().join("parsteal-it-fig");
+    let ctx = Ctx::new(Scale::Small, 1, std::path::Path::new("artifacts"), &out);
+    // fig5-family sweep is the heaviest; run the lighter fig2 + stats
+    let text = figures::run(&ctx, "fig2").unwrap();
+    assert!(text.contains("No-Steal"));
+    assert!(out.join("fig2.json").exists());
+}
+
+/// Config flags round-trip into a working simulation.
+#[test]
+fn config_to_simulation() {
+    use parsteal::config::{RunConfig, Workload};
+    use parsteal::util::cli::Args;
+    let args = Args::parse(
+        "--tiles 8 --tile-size 16 --nodes 2 --workers 2 --victim half --seed 3"
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    let cfg = RunConfig::from_args(&args).unwrap();
+    let Workload::Cholesky(p) = &cfg.workload else {
+        panic!()
+    };
+    let graph = Arc::new(CholeskyGraph::new(p.clone()));
+    let total = graph.total_tasks().unwrap();
+    let r = Simulator::new(
+        graph,
+        cfg.sim_config(),
+        CostModel::default_calibrated(),
+        cfg.migrate,
+        p.tile_size,
+    )
+    .run();
+    assert_eq!(r.tasks_total_executed(), total);
+}

@@ -1,0 +1,296 @@
+//! Property-based invariant tests (in-tree `prop` driver): randomized
+//! DAGs, cluster geometries and policies must never violate the
+//! runtime's core guarantees.
+
+use std::sync::Arc;
+
+use parsteal::comm::LinkModel;
+use parsteal::dataflow::task::TaskDesc;
+use parsteal::dataflow::ttg::TaskGraph;
+use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::prop_assert;
+use parsteal::sched::SchedQueue;
+use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::util::prop::{check, Config};
+use parsteal::util::rng::Rng;
+use parsteal::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
+
+fn random_migrate(rng: &mut Rng) -> MigrateConfig {
+    MigrateConfig {
+        enabled: rng.uniform() < 0.8,
+        thief: if rng.uniform() < 0.5 {
+            ThiefPolicy::ReadyOnly
+        } else {
+            ThiefPolicy::ReadySuccessors
+        },
+        victim: match rng.below(3) {
+            0 => VictimPolicy::Half,
+            1 => VictimPolicy::Chunk(1 + rng.below(30) as usize),
+            _ => VictimPolicy::Single,
+        },
+        use_waiting_time: rng.uniform() < 0.5,
+        poll_interval_us: 10.0 + rng.uniform() * 200.0,
+        max_inflight: 1 + rng.below(3) as usize,
+        migrate_overhead_us: rng.uniform() * 300.0,
+    }
+}
+
+/// Exactly-once execution and full completion for random Cholesky
+/// geometries under random policies.
+#[test]
+fn prop_cholesky_sim_executes_every_task_once() {
+    check(
+        "cholesky-exactly-once",
+        Config {
+            cases: 30,
+            max_size: 16,
+            seed: 0xA11CE,
+        },
+        |rng, size| {
+            let tiles = 2 + size as u32;
+            let nodes = 1 + rng.below(5) as u32;
+            let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+                tiles,
+                tile_size: 8 + 8 * rng.below(4) as u32,
+                nodes,
+                dense_fraction: rng.uniform(),
+                seed: rng.next_u64(),
+                all_dense: false,
+            }));
+            let total = graph.total_tasks().unwrap();
+            let report = Simulator::new(
+                graph,
+                SimConfig {
+                    workers_per_node: 1 + rng.below(8) as usize,
+                    link: LinkModel {
+                        latency_us: rng.uniform() * 20.0,
+                        bw_bytes_per_us: 100.0 + rng.uniform() * 1e4,
+                    },
+                    seed: rng.next_u64(),
+                    max_events: 200_000_000,
+                    record_polls: false,
+                },
+                CostModel::default_calibrated(),
+                random_migrate(rng),
+                16,
+            )
+            .run();
+            prop_assert!(
+                report.tasks_total_executed() == total,
+                "executed {} of {total}",
+                report.tasks_total_executed()
+            );
+            prop_assert!(report.makespan_us > 0.0, "zero makespan");
+            Ok(())
+        },
+    );
+}
+
+/// UTS: the simulator must execute exactly the deterministic tree size,
+/// no matter how tasks migrate.
+#[test]
+fn prop_uts_sim_matches_tree_size() {
+    check(
+        "uts-tree-size",
+        Config {
+            cases: 20,
+            max_size: 24,
+            seed: 0xB0B,
+        },
+        |rng, size| {
+            let graph = Arc::new(UtsGraph::new(UtsParams {
+                b0: 2 + size as u32,
+                m: 2 + rng.below(4) as u32,
+                q: 0.1 + rng.uniform() * 0.25,
+                g: 100.0 + rng.uniform() * 5_000.0,
+                seed: rng.next_u64(),
+                nodes: 1 + rng.below(4) as u32,
+                max_depth: 10 + rng.below(8) as u32,
+            }));
+            let size = graph.tree_size(5_000_000);
+            if size >= 5_000_000 {
+                return Ok(()); // skip pathological trees
+            }
+            let report = Simulator::new(
+                graph,
+                SimConfig {
+                    workers_per_node: 1 + rng.below(4) as usize,
+                    link: LinkModel::cluster(),
+                    seed: rng.next_u64(),
+                    max_events: 200_000_000,
+                    record_polls: false,
+                },
+                CostModel::default_calibrated(),
+                random_migrate(rng),
+                0,
+            )
+            .run();
+            prop_assert!(
+                report.tasks_total_executed() == size,
+                "executed {} of tree {size}",
+                report.tasks_total_executed()
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Scheduler invariant: any interleaving of inserts, selects and steal
+/// extractions conserves tasks (nothing lost, nothing duplicated).
+#[test]
+fn prop_sched_queue_conserves_tasks() {
+    use parsteal::dataflow::task::TaskClass;
+    check(
+        "sched-conservation",
+        Config {
+            cases: 80,
+            max_size: 400,
+            seed: 0x5EED,
+        },
+        |rng, size| {
+            let mut q = SchedQueue::new();
+            let mut inserted = std::collections::HashSet::new();
+            let mut removed = std::collections::HashSet::new();
+            let mut next_id = 0u32;
+            for _ in 0..size {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let t = TaskDesc::indexed(TaskClass::Synthetic, next_id, 0, 0);
+                        next_id += 1;
+                        q.insert(t, rng.next_u64() as i64 % 1000);
+                        inserted.insert(t);
+                    }
+                    2 => {
+                        if let Some(t) = q.select() {
+                            prop_assert!(removed.insert(t), "duplicate select of {t}");
+                        }
+                    }
+                    _ => {
+                        for t in q.extract_for_steal(rng.below(5) as usize, |t| t.i % 3 != 0) {
+                            prop_assert!(t.i % 3 != 0, "filter violated");
+                            prop_assert!(removed.insert(t), "duplicate steal of {t}");
+                        }
+                    }
+                }
+            }
+            while let Some(t) = q.select() {
+                prop_assert!(removed.insert(t), "duplicate drain of {t}");
+            }
+            prop_assert!(
+                inserted == removed,
+                "conservation violated: {} in, {} out",
+                inserted.len(),
+                removed.len()
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Cholesky DAG structural invariant on random sizes: edge counts from
+/// `successors` equal declared `in_degree` for every reachable task.
+#[test]
+fn prop_cholesky_dag_consistent() {
+    use std::collections::{HashMap, HashSet};
+    check(
+        "cholesky-dag-consistency",
+        Config {
+            cases: 12,
+            max_size: 14,
+            seed: 0xDA6,
+        },
+        |rng, size| {
+            let graph = CholeskyGraph::new(CholeskyParams {
+                tiles: 1 + size as u32,
+                tile_size: 8,
+                nodes: 1 + rng.below(6) as u32,
+                dense_fraction: rng.uniform(),
+                seed: rng.next_u64(),
+                all_dense: false,
+            });
+            let mut incoming: HashMap<TaskDesc, u32> = HashMap::new();
+            let mut seen = HashSet::new();
+            let mut stack = graph.roots();
+            while let Some(t) = stack.pop() {
+                if !seen.insert(t) {
+                    continue;
+                }
+                for s in graph.successors(t) {
+                    *incoming.entry(s).or_insert(0) += 1;
+                    stack.push(s);
+                }
+            }
+            prop_assert!(
+                seen.len() as u64 == graph.total_tasks().unwrap(),
+                "reachable {} != total {}",
+                seen.len(),
+                graph.total_tasks().unwrap()
+            );
+            for t in &seen {
+                let want = graph.in_degree(*t);
+                let got = incoming.get(t).copied().unwrap_or(0);
+                prop_assert!(got == want, "{t}: in-degree {want} but {got} edges");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Victim-policy allowance bounds: extraction never exceeds the policy
+/// bound nor takes non-stealable tasks.
+#[test]
+fn prop_victim_allowance_bounds() {
+    use parsteal::migrate::protocol::decide_steal;
+    check(
+        "victim-allowance",
+        Config {
+            cases: 60,
+            max_size: 200,
+            seed: 0xFEE,
+        },
+        |rng, size| {
+            let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+                tiles: 24,
+                tile_size: 16,
+                nodes: 2,
+                dense_fraction: rng.uniform(),
+                seed: rng.next_u64(),
+                all_dense: false,
+            }));
+            let mut q = SchedQueue::new();
+            let mut stealable = 0usize;
+            for i in 1..=(size as u32) {
+                let t = CholeskyGraph::gemm(i % 23 + 1, i % (i % 23 + 1).max(1), 0);
+                if graph.is_stealable(t) {
+                    stealable += 1;
+                }
+                q.insert(t, i as i64);
+            }
+            let mc = random_migrate(rng);
+            if !mc.enabled {
+                return Ok(());
+            }
+            let before = q.len();
+            let d = decide_steal(&mc, graph.as_ref(), &mut q, 8, 50.0, 5.0, 1e4);
+            let bound = match mc.victim {
+                VictimPolicy::Half => stealable / 2,
+                VictimPolicy::Chunk(k) => k.min(stealable),
+                VictimPolicy::Single => 1.min(stealable),
+            };
+            prop_assert!(
+                d.tasks.len() <= bound,
+                "extracted {} > bound {bound} ({:?})",
+                d.tasks.len(),
+                mc.victim
+            );
+            for t in &d.tasks {
+                prop_assert!(graph.is_stealable(*t), "non-stealable task migrated");
+            }
+            prop_assert!(
+                q.len() + d.tasks.len() == before,
+                "queue conservation violated"
+            );
+            Ok(())
+        },
+    );
+}
