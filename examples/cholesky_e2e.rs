@@ -20,6 +20,7 @@ use parsteal::migrate::MigrateConfig;
 use parsteal::node::{Cluster, ClusterConfig};
 use parsteal::runtime::executor::build_tile_store;
 use parsteal::runtime::{KernelService, PjrtCholeskyExecutor};
+use parsteal::sched::SchedBackend;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
 
 fn main() -> anyhow::Result<()> {
@@ -64,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                 },
                 seed: 2,
                 record_polls: false,
+                sched: SchedBackend::Central,
             },
             ex.clone(),
         );

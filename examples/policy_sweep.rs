@@ -1,22 +1,44 @@
 //! Policy sweep: the full cross-product of thief policy × victim policy
 //! × waiting-time gate on the headline Cholesky workload — the
-//! design-space exploration behind Figs. 2, 5 and 6, in one table.
+//! design-space exploration behind Figs. 2, 5 and 6, in one table —
+//! now swept per scheduler backend. The ranking of policies must be
+//! stable across backends (the acceptance check for the sharded queue:
+//! same Steal-vs-No-Steal ordering as central).
 //!
-//!     cargo run --release --example policy_sweep [seeds]
+//!     cargo run --release --example policy_sweep [seeds] [--sched=central|sharded|both]
 
 use std::sync::Arc;
 
 use parsteal::comm::LinkModel;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::stats::Summary;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
 
 fn main() {
-    let seeds: u64 = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(3);
+    let mut seeds: u64 = 3;
+    let mut backends: Vec<SchedBackend> = SchedBackend::ALL.to_vec();
+    for arg in std::env::args().skip(1) {
+        if let Some(v) = arg.strip_prefix("--sched=") {
+            backends = match v {
+                "both" | "all" => SchedBackend::ALL.to_vec(),
+                one => match one.parse::<SchedBackend>() {
+                    Ok(b) => vec![b],
+                    Err(e) => {
+                        eprintln!("{e}");
+                        eprintln!("usage: policy_sweep [seeds] [--sched=central|sharded|both]");
+                        std::process::exit(2);
+                    }
+                },
+            };
+        } else if let Ok(n) = arg.parse::<u64>() {
+            seeds = n;
+        } else {
+            eprintln!("usage: policy_sweep [seeds] [--sched=central|sharded|both]");
+            std::process::exit(2);
+        }
+    }
     let nodes = 8;
     let graph = || {
         Arc::new(CholeskyGraph::new(CholeskyParams {
@@ -28,7 +50,7 @@ fn main() {
             all_dense: false,
         }))
     };
-    let run = |migrate: MigrateConfig, seed: u64| {
+    let run = |migrate: MigrateConfig, seed: u64, sched: SchedBackend| {
         Simulator::new(
             graph(),
             SimConfig {
@@ -37,6 +59,7 @@ fn main() {
                 seed,
                 max_events: u64::MAX,
                 record_polls: false,
+                sched,
             },
             CostModel::default_calibrated(),
             migrate,
@@ -45,55 +68,62 @@ fn main() {
         .run()
     };
 
-    // baseline
-    let base: Vec<f64> = (0..seeds)
-        .map(|s| run(MigrateConfig::disabled(), 100 + s).makespan_us / 1e6)
-        .collect();
-    let base_mean = Summary::of(&base).mean;
-    println!(
-        "No-Steal baseline: {:.3}s mean over {} seeds ({} nodes x 8 workers, 40² tiles of 50²)\n",
-        base_mean, seeds, nodes
-    );
-    println!(
-        "{:<18} {:<10} {:<8} {:>9} {:>9} {:>9} {:>8}",
-        "thief", "victim", "gate", "mean(s)", "sd", "speedup", "steal%"
-    );
+    for sched in backends {
+        // baseline
+        let base: Vec<f64> = (0..seeds)
+            .map(|s| run(MigrateConfig::disabled(), 100 + s, sched).makespan_us / 1e6)
+            .collect();
+        let base_mean = Summary::of(&base).mean;
+        println!(
+            "[{}] No-Steal baseline: {:.3}s mean over {} seeds \
+             ({} nodes x 8 workers, 40² tiles of 50²)\n",
+            sched.label(),
+            base_mean,
+            seeds,
+            nodes
+        );
+        println!(
+            "{:<18} {:<10} {:<8} {:>9} {:>9} {:>9} {:>8}",
+            "thief", "victim", "gate", "mean(s)", "sd", "speedup", "steal%"
+        );
 
-    for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
-        for victim in [
-            VictimPolicy::Single,
-            VictimPolicy::Chunk(4),
-            VictimPolicy::Half,
-        ] {
-            for gate in [false, true] {
-                let mc = MigrateConfig {
-                    enabled: true,
-                    thief,
-                    victim,
-                    use_waiting_time: gate,
-                    poll_interval_us: 100.0,
-                    max_inflight: 1,
-            migrate_overhead_us: 150.0,
-                };
-                let mut times = Vec::new();
-                let mut pct = 0.0;
-                for s in 0..seeds {
-                    let r = run(mc, 100 + s);
-                    times.push(r.makespan_us / 1e6);
-                    pct += r.total_steals().success_pct();
+        for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
+            for victim in [
+                VictimPolicy::Single,
+                VictimPolicy::Chunk(4),
+                VictimPolicy::Half,
+            ] {
+                for gate in [false, true] {
+                    let mc = MigrateConfig {
+                        enabled: true,
+                        thief,
+                        victim,
+                        use_waiting_time: gate,
+                        poll_interval_us: 100.0,
+                        max_inflight: 1,
+                        migrate_overhead_us: 150.0,
+                    };
+                    let mut times = Vec::new();
+                    let mut pct = 0.0;
+                    for s in 0..seeds {
+                        let r = run(mc, 100 + s, sched);
+                        times.push(r.makespan_us / 1e6);
+                        pct += r.total_steals().success_pct();
+                    }
+                    let su = Summary::of(&times);
+                    println!(
+                        "{:<18} {:<10} {:<8} {:>9.3} {:>9.3} {:>9.3} {:>7.1}%",
+                        format!("{thief:?}"),
+                        victim.label(),
+                        if gate { "wait" } else { "-" },
+                        su.mean,
+                        su.std,
+                        base_mean / su.mean,
+                        pct / seeds as f64
+                    );
                 }
-                let su = Summary::of(&times);
-                println!(
-                    "{:<18} {:<10} {:<8} {:>9.3} {:>9.3} {:>9.3} {:>7.1}%",
-                    format!("{thief:?}"),
-                    victim.label(),
-                    if gate { "wait" } else { "-" },
-                    su.mean,
-                    su.std,
-                    base_mean / su.mean,
-                    pct / seeds as f64
-                );
             }
         }
+        println!();
     }
 }

@@ -10,6 +10,7 @@ use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use parsteal::dataflow::ttg::TtgBuilder;
 use parsteal::migrate::MigrateConfig;
+use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 
 fn main() {
@@ -59,6 +60,7 @@ fn main() {
                 seed: 7,
                 max_events: u64::MAX,
                 record_polls: false,
+                sched: SchedBackend::Central,
             },
             CostModel::default_calibrated(),
             migrate,

@@ -9,6 +9,7 @@ use std::sync::Arc;
 
 use parsteal::comm::LinkModel;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::workloads::{UtsGraph, UtsParams};
 
@@ -74,6 +75,7 @@ fn main() {
                 seed: 11,
                 max_events: u64::MAX,
                 record_polls: false,
+                sched: SchedBackend::Central,
             },
             CostModel::default_calibrated(),
             migrate,

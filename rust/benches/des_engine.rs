@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use parsteal::comm::LinkModel;
 use parsteal::migrate::MigrateConfig;
+use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::util::bench::fmt_ns;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
@@ -31,6 +32,7 @@ fn run_once(tiles: u32, steal: bool, record_polls: bool) -> (u64, f64) {
             seed: 1,
             max_events: u64::MAX,
             record_polls,
+            sched: SchedBackend::Central,
         },
         CostModel::default_calibrated(),
         migrate,

@@ -9,6 +9,7 @@ use std::time::Instant;
 use parsteal::comm::LinkModel;
 use parsteal::migrate::MigrateConfig;
 use parsteal::node::{Cluster, ClusterConfig, NullExecutor};
+use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
 
@@ -34,6 +35,7 @@ fn sim_run(tiles: u32, tile_size: u32, steal: bool) -> (f64, f64) {
             seed: 3,
             max_events: u64::MAX,
             record_polls: false,
+            sched: SchedBackend::Central,
         },
         cost,
         migrate,
@@ -78,6 +80,7 @@ fn main() {
             migrate: MigrateConfig::default(),
             seed: 1,
             record_polls: false,
+            sched: SchedBackend::Central,
         },
         Arc::new(NullExecutor),
     );

@@ -1,13 +1,28 @@
-//! Scheduler hot-path benches: `insert`, `select`, and steal extraction
-//! under queue depths seen in the headline workload. L3 perf target:
+//! Scheduler benches.
+//!
+//! Part 1 — hot-path microbenches (`insert`, `select`, steal extraction)
+//! at queue depths seen in the headline workload. L3 perf target:
 //! select < 1 µs so the scheduler is never the bottleneck (§Perf).
+//!
+//! Part 2 — the §4.4 contention benchmark: N worker threads hammer one
+//! node queue (select+insert pairs) for a fixed window, with and without
+//! a concurrent migrate thread extracting steal candidates, across both
+//! backends. This is the experiment the sharded backend exists for: at
+//! 40 workers with concurrent steal extraction it should beat the
+//! central single-lock queue by ≥ 2× aggregate throughput.
+//!
+//!     cargo bench --bench scheduler
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use parsteal::dataflow::task::{TaskClass, TaskDesc};
-use parsteal::sched::SchedQueue;
+use parsteal::sched::{SchedBackend, SchedQueue, Scheduler};
 use parsteal::util::bench::Bencher;
 
 fn filled(n: u32) -> SchedQueue {
-    let mut q = SchedQueue::new();
+    let q = SchedQueue::new();
     for i in 0..n {
         q.insert(
             TaskDesc::indexed(TaskClass::Gemm, i, i / 2, i / 4),
@@ -17,15 +32,15 @@ fn filled(n: u32) -> SchedQueue {
     q
 }
 
-fn main() {
+fn hot_path_benches() {
     let mut b = Bencher::default();
-    println!("== scheduler ==");
+    println!("== scheduler hot paths (central) ==");
 
     for depth in [100u32, 10_000] {
         b.bench_with_setup(
             &format!("insert+select depth={depth}"),
             || filled(depth),
-            |mut q| {
+            |q| {
                 q.insert(TaskDesc::indexed(TaskClass::Trsm, 1, 2, 3), 50);
                 let r = q.select();
                 (q, r) // return q so its Drop is outside the timed region
@@ -36,7 +51,7 @@ fn main() {
     b.bench_with_setup(
         "select drain 1k",
         || filled(1_000),
-        |mut q| {
+        |q| {
             while q.select().is_some() {}
             q
         },
@@ -46,7 +61,7 @@ fn main() {
         b.bench_with_setup(
             &format!("steal extract 20 of depth={depth}"),
             || filled(depth),
-            |mut q| {
+            |q| {
                 let stolen = q.extract_for_steal(20, |t| t.i % 2 == 0);
                 (q, stolen)
             },
@@ -58,4 +73,116 @@ fn main() {
         || filled(10_000),
         |q| q.count_matching(|t| t.i % 2 == 0),
     );
+}
+
+/// One contention cell: `workers` threads doing select+insert pairs on a
+/// shared queue for `window`, optionally with a migrate thread running
+/// steal extraction against the same queue. Returns aggregate worker
+/// ops/second.
+fn contention_run(
+    backend: SchedBackend,
+    workers: usize,
+    with_steal: bool,
+    window: Duration,
+) -> f64 {
+    let queue: Arc<dyn Scheduler> = Arc::from(backend.build(workers));
+    // Steady-state depth comparable to the headline workload's queues.
+    for i in 0..(workers as u32 * 256) {
+        queue.insert(
+            TaskDesc::indexed(TaskClass::Gemm, i, 0, 0),
+            (i % 97) as i64,
+        );
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let ops = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let queue = queue.clone();
+        let stop = stop.clone();
+        let ops = ops.clone();
+        handles.push(std::thread::spawn(move || {
+            // Distinct index streams per worker; uid collisions are fine
+            // (the queue keys on priority+seq, not uid).
+            let mut i = w as u32;
+            let mut local = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let got = queue.select(w);
+                queue.insert(
+                    TaskDesc::indexed(TaskClass::Gemm, i, 0, 0),
+                    (i % 97) as i64,
+                );
+                i = i.wrapping_add(workers as u32);
+                local += 1 + got.is_some() as u64;
+            }
+            ops.fetch_add(local, Ordering::Relaxed);
+        }));
+    }
+    let stealer = with_steal.then(|| {
+        let queue = queue.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut extracted = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // The migrate thread's census + extraction, as in
+                // decide_steal: count stealables, then take a batch of
+                // the lowest-priority ones and hand them back (a remote
+                // thief would requeue them after the wire hop anyway).
+                let _census = queue.count_matching(&|t| t.i % 2 == 0);
+                let batch = queue.extract_for_steal(20, &|t| t.i % 2 == 0);
+                extracted += batch.len() as u64;
+                for t in batch {
+                    queue.insert(t, (t.i % 97) as i64);
+                }
+            }
+            extracted
+        })
+    });
+    let t0 = Instant::now();
+    std::thread::sleep(window);
+    stop.store(true, Ordering::Relaxed);
+    let elapsed = t0.elapsed().as_secs_f64();
+    for h in handles {
+        h.join().unwrap();
+    }
+    if let Some(s) = stealer {
+        let _ = s.join().unwrap();
+    }
+    ops.load(Ordering::Relaxed) as f64 / elapsed
+}
+
+fn contention_benches() {
+    println!();
+    println!("== contention: N workers × (select+insert), ± concurrent steal extraction ==");
+    println!(
+        "{:<9} {:>7} {:>7}   {:>14} {:>14} {:>9}",
+        "steal", "workers", "", "central", "sharded", "speedup"
+    );
+    let window = Duration::from_millis(400);
+    for with_steal in [false, true] {
+        for workers in [1usize, 8, 40] {
+            // One warm run to stabilize allocator state, then measure.
+            for backend in SchedBackend::ALL {
+                contention_run(backend, workers, with_steal, Duration::from_millis(50));
+            }
+            let central = contention_run(SchedBackend::Central, workers, with_steal, window);
+            let sharded = contention_run(SchedBackend::Sharded, workers, with_steal, window);
+            println!(
+                "{:<9} {:>7} {:>7}   {:>11.2}M/s {:>11.2}M/s {:>8.2}x",
+                if with_steal { "+steal" } else { "-" },
+                workers,
+                "",
+                central / 1e6,
+                sharded / 1e6,
+                sharded / central
+            );
+        }
+    }
+    println!(
+        "\n(acceptance: sharded ≥ 2x central at 40 workers with concurrent steal extraction)"
+    );
+}
+
+fn main() {
+    hot_path_benches();
+    contention_benches();
 }

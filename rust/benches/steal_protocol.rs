@@ -24,7 +24,7 @@ fn main() {
     }));
 
     let fill = || {
-        let mut q = SchedQueue::new();
+        let q = SchedQueue::new();
         for i in 1..64u32 {
             for j in 0..i.min(8) {
                 q.insert(CholeskyGraph::gemm(i, j, 0), (i + j) as i64);
@@ -46,8 +46,8 @@ fn main() {
         b.bench_with_setup(
             &format!("decide_steal {label} (gated)"),
             fill,
-            move |mut q| {
-                let d = decide_steal(&mc, g.as_ref(), &mut q, 8, 100.0, 5.0, 1e4);
+            move |q| {
+                let d = decide_steal(&mc, g.as_ref(), &q, 8, 100.0, 5.0, 1e4);
                 (q, d)
             },
         );

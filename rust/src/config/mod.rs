@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::comm::LinkModel;
 use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::sched::SchedBackend;
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
 use crate::workloads::{CholeskyParams, UtsParams};
@@ -25,6 +26,8 @@ pub struct RunConfig {
     pub link: LinkModel,
     pub migrate: MigrateConfig,
     pub seed: u64,
+    /// Scheduler backend (`--sched central|sharded`).
+    pub sched: SchedBackend,
 }
 
 impl RunConfig {
@@ -32,8 +35,8 @@ impl RunConfig {
     /// `--workload cholesky|uts --nodes N --workers W --tiles T --tile-size S`
     /// `--dense-fraction F --steal BOOL --victim half|chunk[K]|single`
     /// `--thief ready-only|ready-successors --waiting-time BOOL`
-    /// `--latency-us L --bw B --seed X` and the UTS knobs
-    /// `--uts-b0/--uts-m/--uts-q/--uts-g`.
+    /// `--sched central|sharded --latency-us L --bw B --seed X` and the
+    /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
     pub fn from_args(args: &Args) -> Result<RunConfig> {
         let nodes = args.u64_or("nodes", 4)? as u32;
         let seed = args.u64_or("seed", 1)?;
@@ -80,6 +83,10 @@ impl RunConfig {
             },
             migrate,
             seed,
+            sched: args
+                .str_or("sched", "central")
+                .parse::<SchedBackend>()
+                .map_err(anyhow::Error::msg)?,
         })
     }
 
@@ -104,6 +111,7 @@ impl RunConfig {
             seed: self.seed,
             max_events: u64::MAX,
             record_polls: true,
+            sched: self.sched,
         }
     }
 }
@@ -152,5 +160,15 @@ mod tests {
     #[test]
     fn bad_policy_errors() {
         assert!(RunConfig::from_args(&args("--victim bogus")).is_err());
+    }
+
+    #[test]
+    fn sched_backend_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert_eq!(c.sched, SchedBackend::Central, "central is the default");
+        let c = RunConfig::from_args(&args("--sched sharded")).unwrap();
+        assert_eq!(c.sched, SchedBackend::Sharded);
+        assert_eq!(c.sim_config().sched, SchedBackend::Sharded);
+        assert!(RunConfig::from_args(&args("--sched bogus")).is_err());
     }
 }

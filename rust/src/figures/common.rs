@@ -9,6 +9,7 @@ use anyhow::Result;
 use crate::comm::LinkModel;
 use crate::metrics::RunReport;
 use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::sched::SchedBackend;
 use crate::sim::{CostModel, SimConfig, Simulator};
 use crate::stats::Summary;
 use crate::util::json::Json;
@@ -140,6 +141,7 @@ impl Ctx {
             seed,
             max_events: u64::MAX,
             record_polls,
+            sched: SchedBackend::Central,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 50).run()
     }
@@ -158,6 +160,7 @@ impl Ctx {
             seed,
             max_events: u64::MAX,
             record_polls,
+            sched: SchedBackend::Central,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, tile).run()
     }
@@ -170,6 +173,7 @@ impl Ctx {
             seed,
             max_events: u64::MAX,
             record_polls: false,
+            sched: SchedBackend::Central,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 0).run()
     }
@@ -197,7 +201,7 @@ pub fn victim_cells(scale: Scale, waiting_time: bool) -> Vec<Cell> {
         use_waiting_time: waiting_time,
         poll_interval_us: 100.0,
         max_inflight: 1,
-            migrate_overhead_us: 150.0,
+        migrate_overhead_us: 150.0,
     };
     vec![
         Cell {

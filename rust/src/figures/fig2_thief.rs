@@ -19,7 +19,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         use_waiting_time: true,
         poll_interval_us: 100.0,
         max_inflight: 1,
-            migrate_overhead_us: 150.0,
+        migrate_overhead_us: 150.0,
     };
     let cells = [
         ("No-Steal", MigrateConfig::disabled()),

@@ -19,6 +19,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     // is long enough for executing tasks to finish and enqueue their
     // successors — the effect Fig. 3 demonstrates.
     use crate::comm::LinkModel;
+    use crate::sched::SchedBackend;
     use crate::sim::{SimConfig, Simulator};
     let tiles = ctx.scale.tiles() / 2;
     let graph = ctx.cholesky_custom(2, tiles, 100, 0);
@@ -29,7 +30,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         use_waiting_time: true,
         poll_interval_us: 100.0,
         max_inflight: 1,
-            migrate_overhead_us: 150.0,
+        migrate_overhead_us: 150.0,
     };
     let report = Simulator::new(
         graph,
@@ -42,6 +43,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             seed: 7,
             max_events: u64::MAX,
             record_polls: true,
+            sched: SchedBackend::Central,
         },
         ctx.cost.clone(),
         mc,

@@ -32,12 +32,14 @@ fn usage() -> String {
      repro run [--workload cholesky|uts] [--nodes 4] [--workers 40]\n\
      \x20         [--tiles 200] [--tile-size 50] [--steal true] [--victim single]\n\
      \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
-     \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
+     \x20         [--sched central|sharded] [--backend sim|real|pjrt]\n\
+     \x20         [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
      \x20         [--figure-scale small|paper] [--artifacts artifacts]\n\
      repro calibrate [--reps 50] [--out artifacts/costmodel.json]\n\
      repro verify [--tiles 6] [--tile-size 16] [--nodes 2] [--workers 2]\n\
-     \x20         [--steal true] [--artifacts artifacts] [--pjrt-threads 2]\n"
+     \x20         [--steal true] [--sched central|sharded]\n\
+     \x20         [--artifacts artifacts] [--pjrt-threads 2]\n"
         .to_string()
 }
 
@@ -94,6 +96,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     migrate: cfg.migrate,
                     seed: cfg.seed,
                     record_polls: true,
+                    sched: cfg.sched,
                 },
                 ex,
             )
@@ -114,6 +117,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     migrate: cfg.migrate,
                     seed: cfg.seed,
                     record_polls: true,
+                    sched: cfg.sched,
                 },
                 ex,
             )
@@ -130,6 +134,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     migrate: cfg.migrate,
                     seed: cfg.seed,
                     record_polls: true,
+                    sched: cfg.sched,
                 },
                 ex,
             )
@@ -206,6 +211,10 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let nodes = args.u64_or("nodes", 2)? as u32;
     let workers = args.u64_or("workers", 2)? as usize;
     let steal = args.bool_or("steal", true)?;
+    let sched = args
+        .str_or("sched", "central")
+        .parse::<parsteal::sched::SchedBackend>()
+        .map_err(anyhow::Error::msg)?;
     let threads = args.u64_or("pjrt-threads", 2)? as usize;
     let artifacts = artifacts_dir(args);
     args.check_unknown()?;
@@ -237,6 +246,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             },
             seed: 1,
             record_polls: false,
+            sched,
         },
         ex.clone(),
     );

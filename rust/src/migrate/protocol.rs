@@ -2,7 +2,7 @@
 
 use crate::dataflow::task::TaskDesc;
 use crate::dataflow::ttg::TaskGraph;
-use crate::sched::SchedQueue;
+use crate::sched::Scheduler;
 
 use super::policy::{migrate_time_us, steal_allowance, waiting_time_us, MigrateConfig};
 
@@ -22,19 +22,21 @@ pub struct VictimDecision {
 /// `avg_exec_us` is the victim's running average task execution time
 /// ("execution time elapsed / tasks executed till now"), `workers` its
 /// worker-thread count, and the link parameters describe the path to the
-/// thief. The extraction *competes* with worker `select`s — the caller
-/// holds the queue lock only for the duration of this call, so the
-/// allowance is best-effort exactly as §3 describes.
+/// thief. Works against any [`Scheduler`] backend: with the central
+/// queue the extraction *competes* with worker `select`s on one lock
+/// (the §4.4 contention); the sharded backend serves it from the steal
+/// pool. Either way the allowance is best-effort exactly as §3
+/// describes.
 pub fn decide_steal(
     cfg: &MigrateConfig,
     graph: &dyn TaskGraph,
-    queue: &mut SchedQueue,
+    queue: &dyn Scheduler,
     workers: usize,
     avg_exec_us: f64,
     link_latency_us: f64,
     link_bw_bytes_per_us: f64,
 ) -> VictimDecision {
-    let stealable = queue.count_matching(|t| graph.is_stealable(t));
+    let stealable = queue.count_matching(&|t: &TaskDesc| graph.is_stealable(*t));
     let allowed = steal_allowance(cfg.victim, stealable);
     if allowed == 0 {
         return VictimDecision::default();
@@ -47,7 +49,7 @@ pub fn decide_steal(
         let waiting = waiting_time_us(queue.len(), workers, avg_exec_us);
         // Extract first, then re-insert if the gate fails: the gate needs
         // the concrete payload size of the tasks that would migrate.
-        let tasks = queue.extract_for_steal(allowed, |t| graph.is_stealable(t));
+        let tasks = queue.extract_for_steal(allowed, &|t: &TaskDesc| graph.is_stealable(*t));
         if tasks.is_empty() {
             return VictimDecision::default();
         }
@@ -75,7 +77,7 @@ pub fn decide_steal(
             denied_by_waiting_time: true,
         }
     } else {
-        let tasks = queue.extract_for_steal(allowed, |t| graph.is_stealable(t));
+        let tasks = queue.extract_for_steal(allowed, &|t: &TaskDesc| graph.is_stealable(*t));
         let payload = tasks.iter().map(|t| graph.payload_bytes(*t)).sum();
         VictimDecision {
             tasks,
@@ -132,6 +134,7 @@ mod tests {
     use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
     use crate::dataflow::ttg::TtgBuilder;
     use crate::migrate::policy::{ThiefPolicy, VictimPolicy};
+    use crate::sched::{SchedBackend, SchedQueue};
 
     fn graph(payload: u64) -> impl TaskGraph {
         TtgBuilder::new("g", 2)
@@ -148,7 +151,7 @@ mod tests {
     }
 
     fn queue_with(n: u32) -> SchedQueue {
-        let mut q = SchedQueue::new();
+        let q = SchedQueue::new();
         for i in 0..n {
             q.insert(TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0), i as i64);
         }
@@ -170,8 +173,8 @@ mod tests {
     #[test]
     fn half_policy_without_gate_takes_half_of_stealable() {
         let g = graph(0);
-        let mut q = queue_with(8); // 4 stealable (even i)
-        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &mut q, 4, 10.0, 1.0, 1e9);
+        let q = queue_with(8); // 4 stealable (even i)
+        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, 10.0, 1.0, 1e9);
         assert_eq!(d.tasks.len(), 2);
         assert!(d.tasks.iter().all(|t| t.i % 2 == 0));
         assert_eq!(q.len(), 6);
@@ -180,9 +183,9 @@ mod tests {
     #[test]
     fn gate_denies_when_migration_slower_than_wait() {
         let g = graph(1_000_000_000); // 1 GB payload
-        let mut q = queue_with(4);
+        let q = queue_with(4);
         // wait = (4/4+1)*10 = 20µs; migrate = 5 + 1e9/1e3 = huge -> deny
-        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &mut q, 4, 10.0, 5.0, 1e3);
+        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 10.0, 5.0, 1e3);
         assert!(d.tasks.is_empty());
         assert!(d.denied_by_waiting_time);
         assert_eq!(q.len(), 4, "denied tasks returned to the queue");
@@ -191,9 +194,9 @@ mod tests {
     #[test]
     fn gate_allows_cheap_migration() {
         let g = graph(100);
-        let mut q = queue_with(40);
+        let q = queue_with(40);
         // wait = (40/4+1)*100 = 1100µs; migrate = 5 + 100/1e3 ≈ 5.1µs
-        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &mut q, 4, 100.0, 5.0, 1e3);
+        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 100.0, 5.0, 1e3);
         assert_eq!(d.tasks.len(), 1);
         assert!(!d.denied_by_waiting_time);
     }
@@ -203,8 +206,8 @@ mod tests {
         let g = TtgBuilder::new("g", 2)
             .wrap_g("c", |_| false, |_| vec![], |_| 1, |_| NodeId(0), |_| 1.0)
             .build();
-        let mut q = queue_with(4);
-        let d = decide_steal(&cfg(VictimPolicy::Half, true), &g, &mut q, 4, 10.0, 1.0, 1e3);
+        let q = queue_with(4);
+        let d = decide_steal(&cfg(VictimPolicy::Half, true), &g, &q, 4, 10.0, 1.0, 1e3);
         assert!(d.tasks.is_empty());
         assert!(!d.denied_by_waiting_time);
         assert_eq!(q.len(), 4);
@@ -213,10 +216,34 @@ mod tests {
     #[test]
     fn half_needs_at_least_two_stealable() {
         let g = graph(0);
-        let mut q = SchedQueue::new();
+        let q = SchedQueue::new();
         q.insert(TaskDesc::indexed(TaskClass::Synthetic, 0, 0, 0), 0);
-        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &mut q, 4, 10.0, 1.0, 1e3);
+        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, 10.0, 1.0, 1e3);
         assert!(d.tasks.is_empty(), "half of 1 stealable = 0");
+    }
+
+    #[test]
+    fn decide_steal_agrees_across_backends() {
+        let g = graph(100);
+        for backend in SchedBackend::ALL {
+            let q = backend.build(4);
+            for i in 0..40 {
+                q.insert(TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0), i as i64);
+            }
+            // wait = (40/4+1)*100 = 1100µs; migrate ≈ 155µs -> allowed
+            let d = decide_steal(
+                &cfg(VictimPolicy::Chunk(6), true),
+                &g,
+                q.as_ref(),
+                4,
+                100.0,
+                5.0,
+                1e3,
+            );
+            assert_eq!(d.tasks.len(), 6, "{backend:?}");
+            assert!(d.tasks.iter().all(|t| t.i % 2 == 0), "{backend:?}");
+            assert_eq!(q.len(), 34, "{backend:?}: conservation");
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
     is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
 };
-use crate::sched::SchedQueue;
+use crate::sched::{SchedBackend, Scheduler};
 use crate::term::{SafraAction, SafraState};
 use crate::util::rng::Rng;
 
@@ -27,6 +27,8 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// Record Fig.1/Fig.3 poll samples.
     pub record_polls: bool,
+    /// Scheduler backend per node (`--sched central|sharded`).
+    pub sched: SchedBackend,
 }
 
 impl Default for ClusterConfig {
@@ -37,6 +39,7 @@ impl Default for ClusterConfig {
             migrate: MigrateConfig::default(),
             seed: 1,
             record_polls: true,
+            sched: SchedBackend::Central,
         }
     }
 }
@@ -44,8 +47,17 @@ impl Default for ClusterConfig {
 /// Shared state of one runtime domain.
 struct NodeState {
     id: NodeId,
-    queue: Mutex<SchedQueue>,
+    /// The ready queue; backends do their own locking (the sharded one
+    /// is the whole point — see [`crate::sched`]).
+    queue: Box<dyn Scheduler>,
+    /// Pairs with `queue_cv` for idle-worker parking: the queue locks
+    /// internally now, so the wait needs its own mutex.
+    idle: Mutex<()>,
     queue_cv: Condvar,
+    /// Workers currently parked (or about to park) on `queue_cv`.
+    /// `enqueue` skips the lock+notify entirely while this is zero, so
+    /// the insert hot path stays lock-free node-wide under load.
+    parked: AtomicUsize,
     tracker: Mutex<ActivationTracker>,
     executing: Mutex<HashSet<TaskDesc>>,
     executing_count: AtomicUsize,
@@ -64,8 +76,7 @@ struct NodeState {
 
 impl NodeState {
     fn passive(&self) -> bool {
-        self.executing_count.load(Ordering::SeqCst) == 0
-            && self.queue.lock().unwrap().is_empty()
+        self.executing_count.load(Ordering::SeqCst) == 0 && self.queue.is_empty()
     }
 }
 
@@ -95,8 +106,10 @@ impl Cluster {
             .map(|i| {
                 Arc::new(NodeState {
                     id: NodeId(i as u32),
-                    queue: Mutex::new(SchedQueue::new()),
+                    queue: cfg.sched.build(cfg.workers_per_node),
+                    idle: Mutex::new(()),
                     queue_cv: Condvar::new(),
+                    parked: AtomicUsize::new(0),
                     tracker: Mutex::new(ActivationTracker::new()),
                     executing: Mutex::new(HashSet::new()),
                     executing_count: AtomicUsize::new(0),
@@ -127,8 +140,7 @@ impl Cluster {
             let owner = graph.owner(root);
             let node = &nodes[owner.idx()];
             node.tracker.lock().unwrap().mark_root(root);
-            node.queue.lock().unwrap().insert(root, graph.priority(root));
-            node.queue_cv.notify_one();
+            enqueue(node, graph.as_ref(), root);
         }
 
         let mut handles = Vec::new();
@@ -152,7 +164,7 @@ impl Cluster {
                 handles.push(
                     std::thread::Builder::new()
                         .name(format!("worker-{i}.{w}"))
-                        .spawn(move || worker_loop(sh, node, ex))
+                        .spawn(move || worker_loop(sh, node, w, ex))
                         .unwrap(),
                 );
             }
@@ -219,11 +231,17 @@ impl Cluster {
 
 /// Insert a ready task and wake a worker.
 fn enqueue(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
-    node.queue
-        .lock()
-        .unwrap()
-        .insert(task, graph.priority(task));
-    node.queue_cv.notify_one();
+    node.queue.insert(task, graph.priority(task));
+    // Only touch the idle lock when someone is (about to be) parked.
+    // SeqCst pairing with the worker makes this sound: the worker
+    // bumps `parked` before re-checking emptiness, we insert before
+    // reading `parked` — one of the two always observes the other.
+    if node.parked.load(Ordering::SeqCst) > 0 {
+        // The lock orders us against a worker between its emptiness
+        // re-check and its wait, so the notify cannot fall in the gap.
+        let _idle = node.idle.lock().unwrap();
+        node.queue_cv.notify_one();
+    }
 }
 
 /// Deliver one local activation; enqueue if it completed the in-degree.
@@ -234,39 +252,48 @@ fn activate_local(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
     }
 }
 
-fn worker_loop(sh: Arc<Shared>, node: Arc<NodeState>, ex: Arc<dyn super::TaskExecutor>) {
+fn worker_loop(
+    sh: Arc<Shared>,
+    node: Arc<NodeState>,
+    worker: usize,
+    ex: Arc<dyn super::TaskExecutor>,
+) {
     let graph = sh.graph.as_ref();
     loop {
         if node.shutdown.load(Ordering::SeqCst) {
             return;
         }
-        // select
-        let task = {
-            let mut q = node.queue.lock().unwrap();
-            match q.select() {
-                Some(t) => {
-                    if sh.cfg.record_polls {
-                        let sample = PollSample {
-                            t_us: sh.start.elapsed().as_nanos() as f64 / 1e3,
-                            ready: q.len() as u32,
-                        };
-                        drop(q);
-                        node.polls.lock().unwrap().push(sample);
-                    }
-                    Some(t)
-                }
-                None => {
-                    let _unused = node
-                        .queue_cv
-                        .wait_timeout(q, Duration::from_micros(200))
-                        .unwrap();
-                    None
-                }
-            }
-        };
-        let Some(task) = task else { continue };
-
+        // Claim execution intent BEFORE popping: from the instant a
+        // task leaves the queue until it is accounted as executing, the
+        // node must never look passive — otherwise a Safra token round
+        // could declare termination with the task in flight.
         node.executing_count.fetch_add(1, Ordering::SeqCst);
+        // select (worker index = shard hint for the sharded backend)
+        let Some(task) = node.queue.select(worker) else {
+            node.executing_count.fetch_sub(1, Ordering::SeqCst);
+            let idle = node.idle.lock().unwrap();
+            // Declare ourselves parked BEFORE re-checking emptiness:
+            // `enqueue` reads the counter after its insert, so either
+            // it sees us parked (and notifies) or we see its task
+            // (and skip the wait). The timeout is belt-and-braces.
+            node.parked.fetch_add(1, Ordering::SeqCst);
+            if node.queue.is_empty() && !node.shutdown.load(Ordering::SeqCst) {
+                let _unused = node
+                    .queue_cv
+                    .wait_timeout(idle, Duration::from_micros(200))
+                    .unwrap();
+            }
+            node.parked.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        };
+        if sh.cfg.record_polls {
+            let sample = PollSample {
+                t_us: sh.start.elapsed().as_nanos() as f64 / 1e3,
+                ready: node.queue.len() as u32,
+            };
+            node.polls.lock().unwrap().push(sample);
+        }
+
         node.executing.lock().unwrap().insert(task);
         let t0 = Instant::now();
         ex.execute(node.id, task);
@@ -317,18 +344,15 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                     } else {
                         1.0
                     };
-                    let decision = {
-                        let mut q = node.queue.lock().unwrap();
-                        decide_steal(
-                            &sh.cfg.migrate,
-                            graph,
-                            &mut q,
-                            workers,
-                            avg_us,
-                            sh.cfg.link.latency_us,
-                            sh.cfg.link.bw_bytes_per_us,
-                        )
-                    };
+                    let decision = decide_steal(
+                        &sh.cfg.migrate,
+                        graph,
+                        node.queue.as_ref(),
+                        workers,
+                        avg_us,
+                        sh.cfg.link.latency_us,
+                        sh.cfg.link.bw_bytes_per_us,
+                    );
                     {
                         let mut st = node.steal.lock().unwrap();
                         st.requests_served += 1;
@@ -364,7 +388,7 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                     }
                     for t in tasks {
                         if sh.cfg.record_polls {
-                            let ready = node.queue.lock().unwrap().len() as u32;
+                            let ready = node.queue.len() as u32;
                             node.arrival_ready.lock().unwrap().push(PollSample {
                                 t_us: sh.start.elapsed().as_nanos() as f64 / 1e3,
                                 ready,
@@ -428,7 +452,7 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
             return;
         }
         std::thread::sleep(poll);
-        let ready = node.queue.lock().unwrap().len();
+        let ready = node.queue.len();
         let view = StarvationView {
             ready,
             executing_local_successors: match sh.cfg.migrate.thief {
@@ -559,5 +583,33 @@ mod tests {
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), 35);
+    }
+
+    /// The sharded backend must run the full protocol — workers, comm,
+    /// migrate thread, Safra termination — to the same task counts.
+    #[test]
+    fn sharded_backend_executes_every_task() {
+        for steal in [false, true] {
+            let g = chol(8, 3);
+            let total = g.total_tasks().unwrap();
+            let r = Cluster::run(
+                g,
+                ClusterConfig {
+                    workers_per_node: 2,
+                    sched: SchedBackend::Sharded,
+                    migrate: if steal {
+                        MigrateConfig {
+                            poll_interval_us: 50.0,
+                            ..Default::default()
+                        }
+                    } else {
+                        MigrateConfig::disabled()
+                    },
+                    ..Default::default()
+                },
+                Arc::new(NullExecutor),
+            );
+            assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
+        }
     }
 }

@@ -229,6 +229,7 @@ mod tests {
     use crate::dataflow::ttg::TaskGraph;
     use crate::migrate::MigrateConfig;
     use crate::node::{Cluster, ClusterConfig};
+    use crate::sched::SchedBackend;
     use crate::workloads::CholeskyParams;
 
     fn dense_graph(tiles: u32, tile_size: u32, nodes: u32) -> Arc<CholeskyGraph> {
@@ -263,6 +264,7 @@ mod tests {
                 },
                 seed: 11,
                 record_polls: false,
+                sched: SchedBackend::Central,
             };
             let r = Cluster::run(g.clone(), cfg, ex.clone());
             assert_eq!(r.tasks_total_executed(), g.total_tasks().unwrap());

@@ -1,0 +1,224 @@
+//! The reference backend: one priority map behind one lock.
+//!
+//! This is the queue the paper's No-Steal variance analysis (§4.4) is
+//! about: every worker, the comm thread and the migrate thread serialize
+//! on the same mutex. It stays the default because it is deterministic
+//! (single global priority-then-FIFO order) and is the semantic oracle
+//! the sharded backend is property-tested against.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::dataflow::task::TaskDesc;
+
+use super::{QKey, SchedStats, Scheduler};
+
+#[derive(Debug, Default)]
+struct Central {
+    map: BTreeMap<QKey, TaskDesc>,
+    seq: u64,
+    stats: SchedStats,
+}
+
+/// A node's ready-task queue: `BTreeMap` keyed by `(priority,
+/// insertion-seq)` so both ends are O(log n) (`select` = pop-max, steal
+/// extraction = pop-min) and iteration order is deterministic.
+#[derive(Debug, Default)]
+pub struct CentralQueue {
+    inner: Mutex<Central>,
+}
+
+impl CentralQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn insert(&self, task: TaskDesc, priority: i64) {
+        let mut q = self.inner.lock().unwrap();
+        q.seq += 1;
+        q.stats.inserts += 1;
+        let key = QKey {
+            prio: priority,
+            age: u64::MAX - q.seq,
+        };
+        q.map.insert(key, task);
+    }
+
+    /// Worker-side `select`: highest-priority ready task.
+    pub fn select(&self) -> Option<TaskDesc> {
+        let mut q = self.inner.lock().unwrap();
+        let entry = q.map.pop_last();
+        if entry.is_some() {
+            q.stats.selects += 1;
+            q.stats.select_len_sum += q.map.len() as u64;
+        }
+        entry.map(|(_, t)| t)
+    }
+
+    /// Count tasks satisfying `filter` (victim-side stealable census).
+    pub fn count_matching(&self, filter: impl Fn(&TaskDesc) -> bool) -> usize {
+        let q = self.inner.lock().unwrap();
+        q.map.values().filter(|t| filter(t)).count()
+    }
+
+    /// Migrate-thread extraction: up to `max` tasks satisfying `filter`,
+    /// lowest priority first. This *competes* with `select` — the caller
+    /// path holds the same lock workers use, exactly the contention the
+    /// paper describes; the allowance is an upper bound, not a guarantee.
+    pub fn extract_for_steal(
+        &self,
+        max: usize,
+        filter: impl Fn(&TaskDesc) -> bool,
+    ) -> Vec<TaskDesc> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut q = self.inner.lock().unwrap();
+        // Collect keys only for matches: the scan itself allocates
+        // nothing per non-matching task and never copies a TaskDesc.
+        let keys: Vec<QKey> = q
+            .map
+            .iter()
+            .filter(|(_, t)| filter(t))
+            .take(max)
+            .map(|(k, _)| *k)
+            .collect();
+        let out: Vec<TaskDesc> = keys
+            .iter()
+            .map(|k| q.map.remove(k).expect("key vanished"))
+            .collect();
+        q.stats.steal_extracted += out.len() as u64;
+        out
+    }
+
+    /// Peek the highest priority value (scheduling diagnostics).
+    pub fn max_priority(&self) -> Option<i64> {
+        let q = self.inner.lock().unwrap();
+        q.map.last_key_value().map(|(k, _)| k.prio)
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Drain everything (shutdown paths in tests).
+    pub fn drain(&self) -> Vec<TaskDesc> {
+        let mut q = self.inner.lock().unwrap();
+        let out = q.map.values().copied().collect();
+        q.map.clear();
+        out
+    }
+}
+
+impl Scheduler for CentralQueue {
+    fn insert(&self, task: TaskDesc, priority: i64) {
+        CentralQueue::insert(self, task, priority)
+    }
+
+    fn select(&self, _worker: usize) -> Option<TaskDesc> {
+        CentralQueue::select(self)
+    }
+
+    fn len(&self) -> usize {
+        CentralQueue::len(self)
+    }
+
+    fn count_matching(&self, filter: &dyn Fn(&TaskDesc) -> bool) -> usize {
+        CentralQueue::count_matching(self, filter)
+    }
+
+    fn extract_for_steal(&self, max: usize, filter: &dyn Fn(&TaskDesc) -> bool) -> Vec<TaskDesc> {
+        CentralQueue::extract_for_steal(self, max, filter)
+    }
+
+    fn max_priority(&self) -> Option<i64> {
+        CentralQueue::max_priority(self)
+    }
+
+    fn stats(&self) -> SchedStats {
+        CentralQueue::stats(self)
+    }
+
+    fn drain(&self) -> Vec<TaskDesc> {
+        CentralQueue::drain(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "central"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::{TaskClass, TaskDesc};
+
+    fn t(i: u32) -> TaskDesc {
+        TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0)
+    }
+
+    #[test]
+    fn select_is_priority_then_fifo() {
+        let q = CentralQueue::new();
+        q.insert(t(1), 5);
+        q.insert(t(2), 9);
+        q.insert(t(3), 5);
+        assert_eq!(q.select(), Some(t(2)));
+        assert_eq!(q.select(), Some(t(1)), "FIFO among equal priorities");
+        assert_eq!(q.select(), Some(t(3)));
+        assert_eq!(q.select(), None);
+    }
+
+    #[test]
+    fn steal_takes_lowest_priority_first() {
+        let q = CentralQueue::new();
+        for (i, p) in [(1, 10), (2, 1), (3, 5), (4, 2)] {
+            q.insert(t(i), p);
+        }
+        let stolen = q.extract_for_steal(2, |_| true);
+        assert_eq!(stolen, vec![t(2), t(4)], "two lowest priorities");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.select(), Some(t(1)), "high-priority work untouched");
+    }
+
+    #[test]
+    fn steal_respects_filter_and_max() {
+        let q = CentralQueue::new();
+        for i in 0..10 {
+            q.insert(t(i), i as i64);
+        }
+        let stolen = q.extract_for_steal(3, |task| task.i % 2 == 0);
+        assert_eq!(stolen.len(), 3);
+        assert!(stolen.iter().all(|s| s.i % 2 == 0));
+        assert_eq!(q.len(), 7);
+        assert_eq!(q.count_matching(|task| task.i % 2 == 0), 2);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let q = CentralQueue::new();
+        q.insert(t(0), 0);
+        q.insert(t(1), 1);
+        let _ = q.select();
+        let _ = q.extract_for_steal(1, |_| true);
+        let s = q.stats();
+        assert_eq!((s.inserts, s.selects, s.steal_extracted), (2, 1, 1));
+        assert_eq!(s.select_len_sum, 1);
+    }
+
+    #[test]
+    fn extract_zero_is_noop() {
+        let q = CentralQueue::new();
+        q.insert(t(0), 0);
+        assert!(q.extract_for_steal(0, |_| true).is_empty());
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,4 +1,4 @@
-//! Node-level priority scheduler.
+//! Node-level schedulers: one trait, two backends.
 //!
 //! PaRSEC's default distributed scheduler keeps *node-level* queues
 //! ordered by priority; worker threads `select` from the front, and the
@@ -8,21 +8,52 @@
 //! attributes the run-to-run variance of No-Steal exactly to contention
 //! on these queues.
 //!
-//! Implementation: a `BTreeMap` keyed by `(priority, insertion-seq)` so
-//! both ends are O(log n) (`select` = pop-max, steal extraction =
-//! pop-min) and iteration order is deterministic.
+//! Everything that needs a ready queue — the threaded runtime
+//! ([`crate::node`]), the discrete-event simulator ([`crate::sim`]) and
+//! the victim-side steal protocol ([`crate::migrate::protocol`]) — goes
+//! through the [`Scheduler`] trait, so backends are swappable per run
+//! (`--sched central|sharded`):
+//!
+//! * [`CentralQueue`] — the reference backend: one `BTreeMap` keyed by
+//!   `(priority, insertion-seq)` behind one lock. Both ends are O(log n)
+//!   (`select` = pop-max, steal extraction = pop-min), iteration order is
+//!   deterministic, and every worker plus the migrate thread serialize on
+//!   the same lock — exactly the §4.4 contention structure.
+//! * [`ShardedQueue`] — per-worker priority shards plus a low-priority
+//!   *steal pool*. Workers pull from their own shard (falling back to the
+//!   pool, then to neighbor shards when empty), inserts are spread
+//!   round-robin, and overfull shards shed their lowest-priority tasks
+//!   into the pool. Victim-side `extract_for_steal` drains the pool, so
+//!   the steal path no longer competes with worker `select` on a single
+//!   lock.
+//!
+//! Both backends preserve the semantics the policies rely on: per shard,
+//! `select` is priority-then-FIFO; steal extraction takes lowest
+//! priority first; tasks are conserved under any interleaving of
+//! inserts, selects and extractions (property-tested in
+//! `tests/sched_backends.rs`).
 
-use std::collections::BTreeMap;
+use std::str::FromStr;
 
 use crate::dataflow::task::TaskDesc;
+
+mod central;
+mod sharded;
+
+pub use central::CentralQueue;
+pub use sharded::{SPILL_THRESHOLD, ShardedQueue};
+
+/// The historical name of the node queue; kept as an alias for the
+/// reference backend so existing call sites and tests read unchanged.
+pub type SchedQueue = CentralQueue;
 
 /// Key ordering: higher priority first; among equal priorities FIFO
 /// (earlier seq first). Stored as (priority, Reverse-ish seq) — we use
 /// `u64::MAX - seq` so `pop_last` yields highest-priority, oldest task.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
-struct QKey {
-    prio: i64,
-    age: u64, // u64::MAX - seq: larger = older
+pub(crate) struct QKey {
+    pub(crate) prio: i64,
+    pub(crate) age: u64, // u64::MAX - seq: larger = older
 }
 
 /// Snapshot counters for the scheduler (feeds the E^b potential metric
@@ -37,161 +68,139 @@ pub struct SchedStats {
     pub select_len_sum: u64,
 }
 
-/// A node's ready-task queue.
-#[derive(Debug, Default)]
-pub struct SchedQueue {
-    map: BTreeMap<QKey, TaskDesc>,
-    seq: u64,
-    stats: SchedStats,
-}
+/// A node's ready-task scheduler.
+///
+/// Implementations do their own internal locking (`&self` methods), so
+/// worker threads, the comm thread and the migrate thread can share one
+/// instance without an external mutex — the whole point of the sharded
+/// backend. Filters borrow the task (`&TaskDesc`), so the O(n) stealable
+/// census never copies task descriptors.
+pub trait Scheduler: Send + Sync + std::fmt::Debug {
+    /// Enqueue a ready task at `priority`.
+    fn insert(&self, task: TaskDesc, priority: i64);
 
-impl SchedQueue {
-    pub fn new() -> Self {
-        Self::default()
-    }
+    /// Worker-side `select`: the best ready task visible to `worker`
+    /// (a shard hint; the central backend ignores it).
+    fn select(&self, worker: usize) -> Option<TaskDesc>;
 
-    pub fn len(&self) -> usize {
-        self.map.len()
-    }
+    /// Tasks currently queued (including any steal pool).
+    fn len(&self) -> usize;
 
-    pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
-    }
-
-    pub fn insert(&mut self, task: TaskDesc, priority: i64) {
-        self.seq += 1;
-        self.stats.inserts += 1;
-        self.map.insert(
-            QKey {
-                prio: priority,
-                age: u64::MAX - self.seq,
-            },
-            task,
-        );
-    }
-
-    /// Worker-side `select`: highest-priority ready task.
-    pub fn select(&mut self) -> Option<TaskDesc> {
-        let entry = self.map.pop_last();
-        if entry.is_some() {
-            self.stats.selects += 1;
-            self.stats.select_len_sum += self.map.len() as u64;
-        }
-        entry.map(|(_, t)| t)
+    fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Count tasks satisfying `filter` (victim-side stealable census).
-    pub fn count_matching(&self, filter: impl Fn(TaskDesc) -> bool) -> usize {
-        self.map.values().filter(|t| filter(**t)).count()
-    }
+    fn count_matching(&self, filter: &dyn Fn(&TaskDesc) -> bool) -> usize;
 
     /// Migrate-thread extraction: up to `max` tasks satisfying `filter`,
-    /// lowest priority first. This *competes* with `select` — the caller
-    /// holds the same lock workers use, exactly the contention the paper
-    /// describes; the allowance is an upper bound, not a guarantee.
-    pub fn extract_for_steal(
-        &mut self,
-        max: usize,
-        filter: impl Fn(TaskDesc) -> bool,
-    ) -> Vec<TaskDesc> {
-        if max == 0 {
-            return Vec::new();
-        }
-        let keys: Vec<QKey> = self
-            .map
-            .iter()
-            .filter(|(_, t)| filter(**t))
-            .take(max)
-            .map(|(k, _)| *k)
-            .collect();
-        let out: Vec<TaskDesc> = keys
-            .iter()
-            .map(|k| self.map.remove(k).expect("key vanished"))
-            .collect();
-        self.stats.steal_extracted += out.len() as u64;
-        out
-    }
+    /// lowest priority first. The allowance is an upper bound, not a
+    /// guarantee — §3's best-effort extraction.
+    fn extract_for_steal(&self, max: usize, filter: &dyn Fn(&TaskDesc) -> bool) -> Vec<TaskDesc>;
 
     /// Peek the highest priority value (scheduling diagnostics).
-    pub fn max_priority(&self) -> Option<i64> {
-        self.map.last_key_value().map(|(k, _)| k.prio)
+    fn max_priority(&self) -> Option<i64>;
+
+    fn stats(&self) -> SchedStats;
+
+    /// Drain everything (shutdown paths in tests). Not guaranteed atomic
+    /// against concurrent inserts.
+    fn drain(&self) -> Vec<TaskDesc>;
+
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Which [`Scheduler`] backend a run uses (`--sched central|sharded`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedBackend {
+    /// One priority map behind one lock (reference / deterministic).
+    #[default]
+    Central,
+    /// Per-worker shards + low-priority steal pool.
+    Sharded,
+}
+
+impl SchedBackend {
+    /// Instantiate the backend for a node with `workers` worker threads.
+    pub fn build(self, workers: usize) -> Box<dyn Scheduler> {
+        match self {
+            SchedBackend::Central => Box::new(CentralQueue::new()),
+            SchedBackend::Sharded => Box::new(ShardedQueue::new(workers)),
+        }
     }
 
-    pub fn stats(&self) -> SchedStats {
-        self.stats
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedBackend::Central => "central",
+            SchedBackend::Sharded => "sharded",
+        }
     }
 
-    /// Drain everything (shutdown paths in tests).
-    pub fn drain(&mut self) -> Vec<TaskDesc> {
-        let out = self.map.values().copied().collect();
-        self.map.clear();
-        out
+    pub const ALL: [SchedBackend; 2] = [SchedBackend::Central, SchedBackend::Sharded];
+}
+
+impl FromStr for SchedBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "central" | "btree" | "locked" => Ok(SchedBackend::Central),
+            "sharded" | "shards" | "per-worker" => Ok(SchedBackend::Sharded),
+            _ => Err(format!(
+                "unknown scheduler backend '{s}' (central | sharded)"
+            )),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataflow::task::{TaskClass, TaskDesc};
+    use crate::dataflow::task::TaskClass;
 
     fn t(i: u32) -> TaskDesc {
         TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0)
     }
 
     #[test]
-    fn select_is_priority_then_fifo() {
-        let mut q = SchedQueue::new();
-        q.insert(t(1), 5);
-        q.insert(t(2), 9);
-        q.insert(t(3), 5);
-        assert_eq!(q.select(), Some(t(2)));
-        assert_eq!(q.select(), Some(t(1)), "FIFO among equal priorities");
-        assert_eq!(q.select(), Some(t(3)));
-        assert_eq!(q.select(), None);
+    fn backend_parses() {
+        assert_eq!("central".parse::<SchedBackend>().unwrap(), SchedBackend::Central);
+        assert_eq!("Sharded".parse::<SchedBackend>().unwrap(), SchedBackend::Sharded);
+        assert!("fancy".parse::<SchedBackend>().is_err());
+        assert_eq!(SchedBackend::default(), SchedBackend::Central);
     }
 
     #[test]
-    fn steal_takes_lowest_priority_first() {
-        let mut q = SchedQueue::new();
-        for (i, p) in [(1, 10), (2, 1), (3, 5), (4, 2)] {
-            q.insert(t(i), p);
+    fn build_produces_working_backends() {
+        for backend in SchedBackend::ALL {
+            // one worker: both backends promise global priority order
+            let q = backend.build(1);
+            assert_eq!(q.name(), backend.label());
+            assert!(q.is_empty());
+            q.insert(t(1), 5);
+            q.insert(t(2), 9);
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.max_priority(), Some(9), "{backend:?}");
+            let got = q.select(0).expect("a task");
+            assert_eq!(got, t(2), "{backend:?}: highest priority first");
+            assert_eq!(q.drain(), vec![t(1)]);
+            assert!(q.is_empty());
         }
-        let stolen = q.extract_for_steal(2, |_| true);
-        assert_eq!(stolen, vec![t(2), t(4)], "two lowest priorities");
-        assert_eq!(q.len(), 2);
-        assert_eq!(q.select(), Some(t(1)), "high-priority work untouched");
     }
 
     #[test]
-    fn steal_respects_filter_and_max() {
-        let mut q = SchedQueue::new();
-        for i in 0..10 {
-            q.insert(t(i), i as i64);
+    fn trait_object_steal_path_respects_filter() {
+        for backend in SchedBackend::ALL {
+            let q = backend.build(2);
+            for i in 0..10 {
+                q.insert(t(i), i as i64);
+            }
+            assert_eq!(q.count_matching(&|task| task.i % 2 == 0), 5);
+            let stolen = q.extract_for_steal(3, &|task| task.i % 2 == 0);
+            assert_eq!(stolen.len(), 3, "{backend:?}");
+            assert!(stolen.iter().all(|s| s.i % 2 == 0));
+            assert_eq!(q.len(), 7);
         }
-        let stolen = q.extract_for_steal(3, |task| task.i % 2 == 0);
-        assert_eq!(stolen.len(), 3);
-        assert!(stolen.iter().all(|s| s.i % 2 == 0));
-        assert_eq!(q.len(), 7);
-        assert_eq!(q.count_matching(|task| task.i % 2 == 0), 2);
-    }
-
-    #[test]
-    fn stats_accumulate() {
-        let mut q = SchedQueue::new();
-        q.insert(t(0), 0);
-        q.insert(t(1), 1);
-        let _ = q.select();
-        let _ = q.extract_for_steal(1, |_| true);
-        let s = q.stats();
-        assert_eq!((s.inserts, s.selects, s.steal_extracted), (2, 1, 1));
-        assert_eq!(s.select_len_sum, 1);
-    }
-
-    #[test]
-    fn extract_zero_is_noop() {
-        let mut q = SchedQueue::new();
-        q.insert(t(0), 0);
-        assert!(q.extract_for_steal(0, |_| true).is_empty());
-        assert_eq!(q.len(), 1);
     }
 }

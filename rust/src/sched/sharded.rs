@@ -1,0 +1,461 @@
+//! The sharded backend: per-worker priority shards + a low-priority
+//! steal pool.
+//!
+//! Khatiri et al. ("Work Stealing with latency") show steal-path latency
+//! dominates when victim-side extraction serializes with execution;
+//! Fernandes et al. ("Adaptive Asynchronous Work-Stealing") make the
+//! same point for distributed runtimes. This backend decouples the two
+//! paths:
+//!
+//! * **Inserts** spread round-robin across per-worker shards, each its
+//!   own `BTreeMap` behind its own mutex.
+//! * **Workers** `select` from their own shard (priority-then-FIFO),
+//!   fall back to the steal pool, and finally rebalance one task from a
+//!   neighbor shard — so the hot path touches one uncontended lock.
+//! * **Shards over the spill watermark** shed their lowest-priority task
+//!   into the steal pool on insert: the pool accumulates exactly the
+//!   tasks that would wait longest locally — §3's cheapest to give away.
+//! * **Victims** (`extract_for_steal`) drain the pool, only falling back
+//!   to scanning shards when the pool cannot satisfy the allowance, so a
+//!   steal request normally never blocks a worker `select`.
+//!
+//! At most one lock is ever held at a time (a spilled task is popped,
+//! the shard unlocked, then the pool locked), so the backend is
+//! deadlock-free by construction. The global task count lives in an
+//! atomic that is incremented *before* a task becomes visible and
+//! decremented only when one is handed out, so `is_empty()` never
+//! under-reports — the property Safra-style passivity checks rely on.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::dataflow::task::TaskDesc;
+
+use super::{QKey, SchedStats, Scheduler};
+
+/// A shard larger than this sheds its lowest-priority task into the
+/// steal pool on insert (20 ≈ half the paper's 40 workers, the same
+/// constant PaRSEC uses for chunked victim policies).
+pub const SPILL_THRESHOLD: usize = 20;
+
+type Shard = BTreeMap<QKey, TaskDesc>;
+
+/// Per-worker sharded ready queue with a low-priority steal pool.
+#[derive(Debug)]
+pub struct ShardedQueue {
+    shards: Vec<Mutex<Shard>>,
+    pool: Mutex<Shard>,
+    /// Global insertion sequence: FIFO tie-breaking is consistent across
+    /// shards and with the central backend.
+    seq: AtomicU64,
+    /// Round-robin insert cursor.
+    rr: AtomicU64,
+    /// Tasks currently queued (shards + pool). See module doc for the
+    /// visibility contract.
+    count: AtomicUsize,
+    inserts: AtomicU64,
+    selects: AtomicU64,
+    steal_extracted: AtomicU64,
+    select_len_sum: AtomicU64,
+}
+
+impl ShardedQueue {
+    /// One shard per worker thread of the owning node.
+    pub fn new(workers: usize) -> Self {
+        let n = workers.max(1);
+        ShardedQueue {
+            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
+            pool: Mutex::new(Shard::new()),
+            seq: AtomicU64::new(0),
+            rr: AtomicU64::new(0),
+            count: AtomicUsize::new(0),
+            inserts: AtomicU64::new(0),
+            selects: AtomicU64::new(0),
+            steal_extracted: AtomicU64::new(0),
+            select_len_sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Tasks currently waiting in the steal pool (diagnostics).
+    pub fn pool_len(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn insert(&self, task: TaskDesc, priority: i64) {
+        // `seq`/`rr`/stat counters only need uniqueness, not ordering
+        // guarantees (a thread's own RMWs on one atomic stay in program
+        // order), so Relaxed keeps them off the coherence hot path.
+        // `count` is the exception: it SeqCst-pairs with the threaded
+        // runtime's parked-worker protocol and Safra passivity checks.
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let key = QKey {
+            prio: priority,
+            age: u64::MAX - seq,
+        };
+        // Count up BEFORE the task becomes selectable: a concurrent
+        // passivity check must never see empty while a task exists.
+        self.count.fetch_add(1, Ordering::SeqCst);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        let shard_ix =
+            (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
+        let spilled = {
+            let mut shard = self.shards[shard_ix].lock().unwrap();
+            shard.insert(key, task);
+            if shard.len() > SPILL_THRESHOLD {
+                shard.pop_first()
+            } else {
+                None
+            }
+        };
+        if let Some((k, t)) = spilled {
+            self.pool.lock().unwrap().insert(k, t);
+        }
+    }
+
+    fn book_select(&self) {
+        self.selects.fetch_add(1, Ordering::Relaxed);
+        let remaining = self.count.fetch_sub(1, Ordering::SeqCst) - 1;
+        self.select_len_sum
+            .fetch_add(remaining as u64, Ordering::Relaxed);
+    }
+
+    /// Worker-side `select` for worker `worker`: own shard first
+    /// (priority-then-FIFO), then the steal pool, then one task
+    /// rebalanced from the first non-empty neighbor shard.
+    pub fn select(&self, worker: usize) -> Option<TaskDesc> {
+        let n = self.shards.len();
+        let own = worker % n;
+        if let Some((_, t)) = self.shards[own].lock().unwrap().pop_last() {
+            self.book_select();
+            return Some(t);
+        }
+        if let Some((_, t)) = self.pool.lock().unwrap().pop_last() {
+            self.book_select();
+            return Some(t);
+        }
+        for offset in 1..n {
+            let ix = (own + offset) % n;
+            if let Some((_, t)) = self.shards[ix].lock().unwrap().pop_last() {
+                self.book_select();
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    pub fn count_matching(&self, filter: impl Fn(&TaskDesc) -> bool) -> usize {
+        let mut n = self.pool.lock().unwrap().values().filter(|t| filter(t)).count();
+        for shard in &self.shards {
+            n += shard.lock().unwrap().values().filter(|t| filter(t)).count();
+        }
+        n
+    }
+
+    /// Remove up to `max` matching tasks from one locked map, lowest
+    /// priority first, appending to `out`.
+    fn extract_from(
+        map: &mut Shard,
+        max: usize,
+        filter: &dyn Fn(&TaskDesc) -> bool,
+        out: &mut Vec<TaskDesc>,
+    ) {
+        if out.len() >= max {
+            return;
+        }
+        let keys: Vec<QKey> = map
+            .iter()
+            .filter(|(_, t)| filter(t))
+            .take(max - out.len())
+            .map(|(k, _)| *k)
+            .collect();
+        for k in keys {
+            out.push(map.remove(&k).expect("key vanished"));
+        }
+    }
+
+    /// Victim-side extraction: drain the steal pool (lowest priority
+    /// first); only when the pool cannot satisfy the allowance does the
+    /// scan fall back to the shards — the contended path is the
+    /// exception, not the rule.
+    pub fn extract_for_steal(
+        &self,
+        max: usize,
+        filter: impl Fn(&TaskDesc) -> bool,
+    ) -> Vec<TaskDesc> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        Self::extract_from(&mut self.pool.lock().unwrap(), max, &filter, &mut out);
+        if out.len() < max {
+            // Fallback must honor the same contract as the central
+            // backend: globally lowest priority first, not shard order.
+            // Snapshot matching keys one lock at a time, sort, then
+            // remove smallest-first (best-effort: a worker may race a
+            // key away between snapshot and removal — skip it).
+            let mut candidates: Vec<(QKey, usize)> = Vec::new();
+            for (ix, shard) in self.shards.iter().enumerate() {
+                let guard = shard.lock().unwrap();
+                candidates.extend(guard.iter().filter(|(_, t)| filter(t)).map(|(k, _)| (*k, ix)));
+            }
+            candidates.sort_unstable();
+            for (key, ix) in candidates {
+                if out.len() >= max {
+                    break;
+                }
+                if let Some(task) = self.shards[ix].lock().unwrap().remove(&key) {
+                    out.push(task);
+                }
+            }
+        }
+        self.steal_extracted
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
+        self.count.fetch_sub(out.len(), Ordering::SeqCst);
+        out
+    }
+
+    pub fn max_priority(&self) -> Option<i64> {
+        let mut best: Option<i64> = self
+            .pool
+            .lock()
+            .unwrap()
+            .last_key_value()
+            .map(|(k, _)| k.prio);
+        for shard in &self.shards {
+            if let Some((k, _)) = shard.lock().unwrap().last_key_value() {
+                best = Some(best.map_or(k.prio, |b| b.max(k.prio)));
+            }
+        }
+        best
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        SchedStats {
+            inserts: self.inserts.load(Ordering::Relaxed),
+            selects: self.selects.load(Ordering::Relaxed),
+            steal_extracted: self.steal_extracted.load(Ordering::Relaxed),
+            select_len_sum: self.select_len_sum.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain everything (shutdown paths in tests). Not atomic against
+    /// concurrent inserts: a task mid-spill can be missed, so only call
+    /// once the node is quiescent.
+    pub fn drain(&self) -> Vec<TaskDesc> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            out.extend(s.values().copied());
+            s.clear();
+        }
+        let mut p = self.pool.lock().unwrap();
+        out.extend(p.values().copied());
+        p.clear();
+        self.count.fetch_sub(out.len(), Ordering::SeqCst);
+        out
+    }
+}
+
+impl Scheduler for ShardedQueue {
+    fn insert(&self, task: TaskDesc, priority: i64) {
+        ShardedQueue::insert(self, task, priority)
+    }
+
+    fn select(&self, worker: usize) -> Option<TaskDesc> {
+        ShardedQueue::select(self, worker)
+    }
+
+    fn len(&self) -> usize {
+        ShardedQueue::len(self)
+    }
+
+    fn count_matching(&self, filter: &dyn Fn(&TaskDesc) -> bool) -> usize {
+        ShardedQueue::count_matching(self, filter)
+    }
+
+    fn extract_for_steal(&self, max: usize, filter: &dyn Fn(&TaskDesc) -> bool) -> Vec<TaskDesc> {
+        ShardedQueue::extract_for_steal(self, max, filter)
+    }
+
+    fn max_priority(&self) -> Option<i64> {
+        ShardedQueue::max_priority(self)
+    }
+
+    fn stats(&self) -> SchedStats {
+        ShardedQueue::stats(self)
+    }
+
+    fn drain(&self) -> Vec<TaskDesc> {
+        ShardedQueue::drain(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::{TaskClass, TaskDesc};
+
+    fn t(i: u32) -> TaskDesc {
+        TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0)
+    }
+
+    #[test]
+    fn single_shard_is_priority_then_fifo() {
+        let q = ShardedQueue::new(1);
+        q.insert(t(1), 5);
+        q.insert(t(2), 9);
+        q.insert(t(3), 5);
+        assert_eq!(q.select(0), Some(t(2)));
+        assert_eq!(q.select(0), Some(t(1)), "FIFO among equal priorities");
+        assert_eq!(q.select(0), Some(t(3)));
+        assert_eq!(q.select(0), None);
+    }
+
+    #[test]
+    fn round_robin_spreads_and_rebalances() {
+        let q = ShardedQueue::new(4);
+        for i in 0..8 {
+            q.insert(t(i), 0);
+        }
+        // worker 0's shard got tasks 0 and 4 (round-robin), FIFO order.
+        assert_eq!(q.select(0), Some(t(0)));
+        assert_eq!(q.select(0), Some(t(4)));
+        // own shard empty, pool empty -> rebalance from neighbors.
+        assert!(q.select(0).is_some());
+        let mut drained = 3;
+        while q.select(0).is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, 8, "every task reachable from one worker");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn overfull_shard_spills_lowest_priority_to_pool() {
+        let q = ShardedQueue::new(1);
+        for i in 0..(SPILL_THRESHOLD as u32 + 5) {
+            q.insert(t(i), i as i64);
+        }
+        assert_eq!(q.pool_len(), 5, "5 inserts beyond the watermark");
+        assert_eq!(q.len(), SPILL_THRESHOLD + 5);
+        // Spilled tasks are the lowest priorities at spill time.
+        let stolen = q.extract_for_steal(5, |_| true);
+        assert_eq!(stolen.len(), 5);
+        assert!(stolen.iter().all(|s| (s.i as i64) < 5), "lowest prios pooled: {stolen:?}");
+        assert_eq!(q.pool_len(), 0);
+        assert_eq!(q.len(), SPILL_THRESHOLD);
+    }
+
+    #[test]
+    fn steal_falls_back_to_shards_when_pool_dry() {
+        let q = ShardedQueue::new(2);
+        for (i, p) in [(1, 10), (2, 1), (3, 5), (4, 2)] {
+            q.insert(t(i), p);
+        }
+        assert_eq!(q.pool_len(), 0, "under the watermark, nothing pooled");
+        let stolen = q.extract_for_steal(2, |_| true);
+        assert_eq!(
+            stolen,
+            vec![t(2), t(4)],
+            "globally lowest priorities, regardless of shard"
+        );
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pool_tasks_are_selectable_when_shards_empty() {
+        let q = ShardedQueue::new(1);
+        for i in 0..(SPILL_THRESHOLD as u32 + 3) {
+            q.insert(t(i), i as i64);
+        }
+        let mut seen = 0;
+        while q.select(0).is_some() {
+            seen += 1;
+        }
+        assert_eq!(seen, SPILL_THRESHOLD + 3, "pooled tasks not lost");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn stats_and_conservation() {
+        let q = ShardedQueue::new(3);
+        for i in 0..30 {
+            q.insert(t(i), (i % 7) as i64);
+        }
+        let stolen = q.extract_for_steal(4, |task| task.i % 2 == 0);
+        let mut selected = 0;
+        for w in 0..3 {
+            while q.select(w).is_some() {
+                selected += 1;
+            }
+        }
+        let s = q.stats();
+        assert_eq!(s.inserts, 30);
+        assert_eq!(s.steal_extracted, stolen.len() as u64);
+        assert_eq!(s.selects, selected);
+        assert_eq!(stolen.len() as u64 + selected, 30, "conservation");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn concurrent_workers_and_stealer_conserve_tasks() {
+        use std::sync::Arc;
+        let q = Arc::new(ShardedQueue::new(4));
+        let total = 4_000u32;
+        let taken = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for w in 0..4u32 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..total / 4 {
+                    q.insert(t(w * 10_000 + i), (i % 13) as i64);
+                }
+            }));
+        }
+        for h in handles.drain(..) {
+            h.join().unwrap();
+        }
+        for w in 0..4 {
+            let q = q.clone();
+            let taken = taken.clone();
+            handles.push(std::thread::spawn(move || {
+                while q.select(w).is_some() {
+                    taken.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        {
+            let q = q.clone();
+            let taken = taken.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let got = q.extract_for_steal(8, &|_| true);
+                if got.is_empty() {
+                    break;
+                }
+                taken.fetch_add(got.len(), Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(taken.load(Ordering::SeqCst), total as usize);
+        assert!(q.is_empty());
+    }
+}

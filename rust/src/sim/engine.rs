@@ -1,8 +1,9 @@
 //! The discrete-event engine.
 //!
 //! Virtual-time mirror of the threaded runtime in [`crate::node`]: the
-//! same `SchedQueue`, `ActivationTracker` and migrate-module policy code
-//! run under an event loop with per-node worker pools. Events:
+//! same [`Scheduler`] backends, `ActivationTracker` and migrate-module
+//! policy code run under an event loop with per-node worker pools.
+//! Events:
 //!
 //! * `Finish`  — a worker completes a task (schedules successor
 //!   activations, local or remote);
@@ -29,7 +30,7 @@ use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
     is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
 };
-use crate::sched::SchedQueue;
+use crate::sched::{SchedBackend, Scheduler};
 use crate::util::rng::Rng;
 
 use super::cost::CostModel;
@@ -47,6 +48,10 @@ pub struct SimConfig {
     /// Record per-select poll samples (Fig. 1/Fig. 3 instrumentation;
     /// costs memory on huge runs).
     pub record_polls: bool,
+    /// Scheduler backend per node (`--sched central|sharded`). The sim
+    /// is single-threaded, so both are deterministic given the seed;
+    /// sharded reproduces the sharded *ordering* semantics.
+    pub sched: SchedBackend,
 }
 
 impl Default for SimConfig {
@@ -57,6 +62,7 @@ impl Default for SimConfig {
             seed: 1,
             max_events: u64::MAX,
             record_polls: true,
+            sched: SchedBackend::Central,
         }
     }
 }
@@ -114,7 +120,10 @@ impl Ord for Event {
 struct SimNode {
     /// Persistent slowness factor for this run (straggler model).
     slow_factor: f64,
-    queue: SchedQueue,
+    queue: Box<dyn Scheduler>,
+    /// Round-robin worker cursor: which shard the next `select` hints
+    /// (the central backend ignores it).
+    next_worker: usize,
     tracker: ActivationTracker,
     executing: HashSet<TaskDesc>,
     idle_workers: usize,
@@ -166,7 +175,8 @@ impl Simulator {
                 } else {
                     1.0
                 },
-                queue: SchedQueue::new(),
+                queue: cfg.sched.build(cfg.workers_per_node),
+                next_worker: 0,
                 tracker: ActivationTracker::new(),
                 executing: HashSet::new(),
                 idle_workers: cfg.workers_per_node,
@@ -238,9 +248,11 @@ impl Simulator {
             if node.idle_workers == 0 {
                 break;
             }
-            let Some(task) = node.queue.select() else {
+            let worker = node.next_worker;
+            let Some(task) = node.queue.select(worker) else {
                 break;
             };
+            node.next_worker = (worker + 1) % self.cfg.workers_per_node.max(1);
             if self.cfg.record_polls {
                 node.polls.push(PollSample {
                     t_us: self.now_us,
@@ -400,7 +412,7 @@ impl Simulator {
         let decision = decide_steal(
             &self.migrate,
             graph.as_ref(),
-            &mut node.queue,
+            node.queue.as_ref(),
             workers,
             avg,
             link.latency_us,
@@ -571,6 +583,16 @@ mod tests {
         seed: u64,
         workers: usize,
     ) -> RunReport {
+        sim_with(graph, migrate, seed, workers, SchedBackend::Central)
+    }
+
+    fn sim_with(
+        graph: Arc<dyn TaskGraph>,
+        migrate: MigrateConfig,
+        seed: u64,
+        workers: usize,
+        sched: SchedBackend,
+    ) -> RunReport {
         Simulator::new(
             graph,
             SimConfig {
@@ -579,6 +601,7 @@ mod tests {
                 seed,
                 max_events: 50_000_000,
                 record_polls: true,
+                sched,
             },
             CostModel::default_calibrated(),
             migrate,
@@ -621,7 +644,7 @@ mod tests {
                         use_waiting_time: gate,
                         poll_interval_us: 50.0,
                         max_inflight: 1,
-            migrate_overhead_us: 150.0,
+                        migrate_overhead_us: 150.0,
                     };
                     let r = sim(chol(10, 4), mc, 7, 2);
                     assert_eq!(
@@ -679,14 +702,45 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let a = sim(chol(8, 3), MigrateConfig::default(), 42, 4);
-        let b = sim(chol(8, 3), MigrateConfig::default(), 42, 4);
-        assert_eq!(a.makespan_us, b.makespan_us);
-        assert_eq!(a.events, b.events);
-        assert_eq!(
-            a.total_steals().successful_steals,
-            b.total_steals().successful_steals
-        );
+        for sched in SchedBackend::ALL {
+            let a = sim_with(chol(8, 3), MigrateConfig::default(), 42, 4, sched);
+            let b = sim_with(chol(8, 3), MigrateConfig::default(), 42, 4, sched);
+            assert_eq!(a.makespan_us, b.makespan_us, "{sched:?}");
+            assert_eq!(a.events, b.events, "{sched:?}");
+            assert_eq!(
+                a.total_steals().successful_steals,
+                b.total_steals().successful_steals,
+                "{sched:?}"
+            );
+        }
+    }
+
+    /// The sharded backend completes every workload the central one does
+    /// — same task totals, full quiescence at exit.
+    #[test]
+    fn sharded_backend_completes_cholesky_and_uts() {
+        let g = chol(10, 3);
+        let total = g.total_tasks().unwrap();
+        let r = sim_with(g, MigrateConfig::default(), 2, 4, SchedBackend::Sharded);
+        assert_eq!(r.tasks_total_executed(), total);
+
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 20_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let mc = MigrateConfig {
+            poll_interval_us: 20.0,
+            ..MigrateConfig::default()
+        };
+        let r = sim_with(g, mc, 3, 4, SchedBackend::Sharded);
+        assert_eq!(r.tasks_total_executed(), size);
+        assert!(r.total_steals().successful_steals > 0);
     }
 
     #[test]

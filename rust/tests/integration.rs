@@ -7,6 +7,7 @@ use parsteal::comm::LinkModel;
 use parsteal::dataflow::ttg::TaskGraph;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
 use parsteal::node::{Cluster, ClusterConfig, NullExecutor, SpinExecutor};
+use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
 
@@ -35,6 +36,7 @@ fn sim_and_real_agree_on_static_distribution() {
             seed: 4,
             max_events: u64::MAX,
             record_polls: false,
+            sched: SchedBackend::Central,
         },
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
@@ -49,6 +51,7 @@ fn sim_and_real_agree_on_static_distribution() {
             migrate: MigrateConfig::disabled(),
             seed: 4,
             record_polls: false,
+            sched: SchedBackend::Central,
         },
         Arc::new(NullExecutor),
     );
@@ -80,10 +83,11 @@ fn real_runtime_steals_preserve_exactly_once() {
                         use_waiting_time: true,
                         poll_interval_us: 20.0,
                         max_inflight: 1,
-            migrate_overhead_us: 150.0,
+                        migrate_overhead_us: 150.0,
                     },
                     seed: 5,
                     record_polls: false,
+                    sched: SchedBackend::Central,
                 },
                 Arc::new(SpinExecutor::new(cost, 16, move |t| g2.work_units(t)).with_time_scale(0.2)),
             );
@@ -122,6 +126,7 @@ fn real_runtime_uts_dynamic_termination() {
             },
             seed: 6,
             record_polls: false,
+            sched: SchedBackend::Central,
         },
         Arc::new(
             SpinExecutor::new(CostModel::default_calibrated(), 0, move |t| g2.work_units(t))
@@ -129,6 +134,47 @@ fn real_runtime_uts_dynamic_termination() {
         ),
     );
     assert_eq!(r.tasks_total_executed(), size);
+}
+
+/// Backend sweep: the sharded scheduler must preserve the sim ↔ real
+/// agreement the central one gives — same totals in both runtimes, and
+/// with stealing disabled the same static distribution.
+#[test]
+fn sharded_backend_sim_and_real_agree() {
+    let g = chol(10, 3);
+    let total = g.total_tasks().unwrap();
+    let sim = Simulator::new(
+        g.clone(),
+        SimConfig {
+            workers_per_node: 2,
+            link: LinkModel::cluster(),
+            seed: 4,
+            max_events: u64::MAX,
+            record_polls: false,
+            sched: SchedBackend::Sharded,
+        },
+        CostModel::default_calibrated(),
+        MigrateConfig::disabled(),
+        16,
+    )
+    .run();
+    let real = Cluster::run(
+        g.clone(),
+        ClusterConfig {
+            workers_per_node: 2,
+            link: LinkModel::ideal(),
+            migrate: MigrateConfig::disabled(),
+            seed: 4,
+            record_polls: false,
+            sched: SchedBackend::Sharded,
+        },
+        Arc::new(NullExecutor),
+    );
+    assert_eq!(sim.tasks_total_executed(), total);
+    assert_eq!(real.tasks_total_executed(), total);
+    let sim_dist: Vec<u64> = sim.nodes.iter().map(|n| n.tasks_executed).collect();
+    let real_dist: Vec<u64> = real.nodes.iter().map(|n| n.tasks_executed).collect();
+    assert_eq!(sim_dist, real_dist, "static mapping must be identical");
 }
 
 /// The network's latency model must delay but never lose messages even

@@ -9,7 +9,7 @@ use parsteal::dataflow::task::TaskDesc;
 use parsteal::dataflow::ttg::TaskGraph;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
 use parsteal::prop_assert;
-use parsteal::sched::SchedQueue;
+use parsteal::sched::{SchedBackend, SchedQueue};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::util::prop::{check, Config};
 use parsteal::util::rng::Rng;
@@ -69,6 +69,11 @@ fn prop_cholesky_sim_executes_every_task_once() {
                     seed: rng.next_u64(),
                     max_events: 200_000_000,
                     record_polls: false,
+                    sched: if rng.uniform() < 0.5 {
+                        SchedBackend::Central
+                    } else {
+                        SchedBackend::Sharded
+                    },
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -119,6 +124,11 @@ fn prop_uts_sim_matches_tree_size() {
                     seed: rng.next_u64(),
                     max_events: 200_000_000,
                     record_polls: false,
+                    sched: if rng.uniform() < 0.5 {
+                        SchedBackend::Central
+                    } else {
+                        SchedBackend::Sharded
+                    },
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -148,7 +158,7 @@ fn prop_sched_queue_conserves_tasks() {
             seed: 0x5EED,
         },
         |rng, size| {
-            let mut q = SchedQueue::new();
+            let q = SchedQueue::new();
             let mut inserted = std::collections::HashSet::new();
             let mut removed = std::collections::HashSet::new();
             let mut next_id = 0u32;
@@ -257,7 +267,7 @@ fn prop_victim_allowance_bounds() {
                 seed: rng.next_u64(),
                 all_dense: false,
             }));
-            let mut q = SchedQueue::new();
+            let q = SchedQueue::new();
             let mut stealable = 0usize;
             for i in 1..=(size as u32) {
                 let t = CholeskyGraph::gemm(i % 23 + 1, i % (i % 23 + 1).max(1), 0);
@@ -271,7 +281,7 @@ fn prop_victim_allowance_bounds() {
                 return Ok(());
             }
             let before = q.len();
-            let d = decide_steal(&mc, graph.as_ref(), &mut q, 8, 50.0, 5.0, 1e4);
+            let d = decide_steal(&mc, graph.as_ref(), &q, 8, 50.0, 5.0, 1e4);
             let bound = match mc.victim {
                 VictimPolicy::Half => stealable / 2,
                 VictimPolicy::Chunk(k) => k.min(stealable),

@@ -1,0 +1,229 @@
+//! Backend-agreement property tests (in-tree `prop` driver): the
+//! sharded scheduler must be a semantic refinement of the central one —
+//! identical select order where the semantics promise it (single shard,
+//! no spill), priority-then-FIFO per shard in general, and identical
+//! task conservation under randomized interleavings of insert / select /
+//! steal extraction.
+
+use parsteal::dataflow::task::{TaskClass, TaskDesc};
+use parsteal::prop_assert;
+use parsteal::sched::{CentralQueue, SPILL_THRESHOLD, SchedBackend, Scheduler, ShardedQueue};
+use parsteal::util::prop::{check, Config};
+use parsteal::util::rng::Rng;
+
+fn t(i: u32) -> TaskDesc {
+    TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0)
+}
+
+/// With one shard and fewer tasks than the spill watermark the sharded
+/// backend is order-identical to the central one: same priority-then-
+/// FIFO select sequence.
+#[test]
+fn prop_single_shard_matches_central_order() {
+    check(
+        "single-shard-order",
+        Config {
+            cases: 64,
+            max_size: SPILL_THRESHOLD,
+            seed: 0x0DDE,
+        },
+        |rng, size| {
+            let central = CentralQueue::new();
+            let sharded = ShardedQueue::new(1);
+            for i in 0..size as u32 {
+                let prio = rng.next_u64() as i64 % 50;
+                central.insert(t(i), prio);
+                sharded.insert(t(i), prio);
+            }
+            for step in 0..size {
+                let a = central.select();
+                let b = sharded.select(0);
+                prop_assert!(a == b, "diverged at step {step}: {a:?} vs {b:?}");
+            }
+            prop_assert!(sharded.select(0).is_none(), "sharded had extra tasks");
+            Ok(())
+        },
+    );
+}
+
+/// Per-shard select order is priority-then-FIFO: a worker draining its
+/// own (round-robin-filled, unspilled) shard sees its tasks in exactly
+/// the order the central queue would emit them.
+#[test]
+fn prop_per_shard_priority_then_fifo() {
+    check(
+        "per-shard-order",
+        Config {
+            cases: 48,
+            max_size: 120,
+            seed: 0x54A2D,
+        },
+        |rng, size| {
+            let workers = 1 + rng.below(6) as usize;
+            // Cap so no shard crosses the spill watermark.
+            let n = size.min(workers * SPILL_THRESHOLD) as u32;
+            let sharded = ShardedQueue::new(workers);
+            let mut own: Vec<(i64, u32)> = Vec::new(); // (prio, insert index)
+            for i in 0..n {
+                let prio = rng.next_u64() as i64 % 10;
+                sharded.insert(t(i), prio);
+                if (i as usize) % workers == 0 {
+                    own.push((prio, i));
+                }
+            }
+            // Expected order for worker 0's shard: priority desc, then
+            // insertion order asc.
+            own.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            for (k, (prio, i)) in own.iter().enumerate() {
+                let got = sharded.select(0);
+                prop_assert!(
+                    got == Some(t(*i)),
+                    "worker 0 step {k}: expected {} (prio {prio}), got {got:?}",
+                    t(*i)
+                );
+            }
+            // Remaining tasks (other shards) are still all reachable.
+            let mut rest = 0;
+            while sharded.select(0).is_some() {
+                rest += 1;
+            }
+            prop_assert!(
+                rest as u32 == n - own.len() as u32,
+                "lost tasks: {rest} remained of {}",
+                n - own.len() as u32
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Randomized interleavings of insert / select / steal extraction keep
+/// both backends conserving tasks, with identical insert and removal
+/// totals (select+steal split may differ — that is scheduling policy,
+/// not conservation).
+#[test]
+fn prop_backends_conserve_under_interleaving() {
+    #[derive(Clone, Copy)]
+    enum Op {
+        Insert(u32, i64),
+        Select(usize),
+        Steal(usize),
+    }
+    check(
+        "backend-conservation",
+        Config {
+            cases: 60,
+            max_size: 300,
+            seed: 0xBAC0,
+        },
+        |rng, size| {
+            let workers = 1 + rng.below(8) as usize;
+            let mut ops = Vec::with_capacity(size);
+            let mut next_id = 0u32;
+            for _ in 0..size {
+                ops.push(match rng.below(4) {
+                    0 | 1 => {
+                        let op = Op::Insert(next_id, rng.next_u64() as i64 % 1000);
+                        next_id += 1;
+                        op
+                    }
+                    2 => Op::Select(rng.below(workers as u64) as usize),
+                    _ => Op::Steal(rng.below(5) as usize),
+                });
+            }
+            let backends: Vec<Box<dyn Scheduler>> = vec![
+                SchedBackend::Central.build(workers),
+                SchedBackend::Sharded.build(workers),
+            ];
+            let mut removed_totals = Vec::new();
+            for q in &backends {
+                let mut inserted = std::collections::HashSet::new();
+                let mut removed = std::collections::HashSet::new();
+                for op in &ops {
+                    match *op {
+                        Op::Insert(id, prio) => {
+                            q.insert(t(id), prio);
+                            inserted.insert(t(id));
+                        }
+                        Op::Select(w) => {
+                            if let Some(task) = q.select(w) {
+                                prop_assert!(removed.insert(task), "duplicate select of {task}");
+                            }
+                        }
+                        Op::Steal(max) => {
+                            for task in q.extract_for_steal(max, &|task| task.i % 3 != 0) {
+                                prop_assert!(task.i % 3 != 0, "filter violated");
+                                prop_assert!(removed.insert(task), "duplicate steal of {task}");
+                            }
+                        }
+                    }
+                }
+                while let Some(task) = q.select(0) {
+                    prop_assert!(removed.insert(task), "duplicate drain of {task}");
+                }
+                prop_assert!(q.is_empty(), "{}: queue not empty after drain", q.name());
+                prop_assert!(
+                    inserted == removed,
+                    "{}: conservation violated ({} in, {} out)",
+                    q.name(),
+                    inserted.len(),
+                    removed.len()
+                );
+                let stats = q.stats();
+                prop_assert!(
+                    stats.selects + stats.steal_extracted == removed.len() as u64,
+                    "{}: stats disagree with removal count",
+                    q.name()
+                );
+                removed_totals.push(removed.len());
+            }
+            prop_assert!(
+                removed_totals[0] == removed_totals[1],
+                "backends disagree on total throughput: {removed_totals:?}"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Diagnostics agree: after identical inserts, both backends report the
+/// same length and max priority.
+#[test]
+fn prop_len_and_max_priority_agree() {
+    check(
+        "len-maxprio-agree",
+        Config {
+            cases: 40,
+            max_size: 200,
+            seed: 0x11AB,
+        },
+        |rng, size| {
+            let workers = 1 + rng.below(8) as usize;
+            let central = SchedBackend::Central.build(workers);
+            let sharded = SchedBackend::Sharded.build(workers);
+            for i in 0..size as u32 {
+                let prio = rng.next_u64() as i64 % 100 - 50;
+                central.insert(t(i), prio);
+                sharded.insert(t(i), prio);
+            }
+            prop_assert!(
+                central.len() == sharded.len(),
+                "len: {} vs {}",
+                central.len(),
+                sharded.len()
+            );
+            prop_assert!(
+                central.max_priority() == sharded.max_priority(),
+                "max_priority: {:?} vs {:?}",
+                central.max_priority(),
+                sharded.max_priority()
+            );
+            let evens = &|task: &TaskDesc| task.i % 2 == 0;
+            prop_assert!(
+                central.count_matching(evens) == sharded.count_matching(evens),
+                "count_matching disagrees"
+            );
+            Ok(())
+        },
+    );
+}
