@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                 seed: 2,
                 record_polls: false,
                 sched: SchedBackend::Central,
+                batch_activations: true,
             },
             ex.clone(),
         );

@@ -60,6 +60,7 @@ fn main() {
                 max_events: u64::MAX,
                 record_polls: false,
                 sched,
+                batch_activations: true,
             },
             CostModel::default_calibrated(),
             migrate,

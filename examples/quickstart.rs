@@ -61,6 +61,7 @@ fn main() {
                 max_events: u64::MAX,
                 record_polls: false,
                 sched: SchedBackend::Central,
+                batch_activations: true,
             },
             CostModel::default_calibrated(),
             migrate,

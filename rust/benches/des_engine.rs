@@ -33,6 +33,7 @@ fn run_once(tiles: u32, steal: bool, record_polls: bool) -> (u64, f64) {
             max_events: u64::MAX,
             record_polls,
             sched: SchedBackend::Central,
+            batch_activations: true,
         },
         CostModel::default_calibrated(),
         migrate,

@@ -36,6 +36,7 @@ fn sim_run(tiles: u32, tile_size: u32, steal: bool) -> (f64, f64) {
             max_events: u64::MAX,
             record_polls: false,
             sched: SchedBackend::Central,
+            batch_activations: true,
         },
         cost,
         migrate,
@@ -81,6 +82,7 @@ fn main() {
             seed: 1,
             record_polls: false,
             sched: SchedBackend::Central,
+            batch_activations: true,
         },
         Arc::new(NullExecutor),
     );

@@ -11,15 +11,24 @@
 //! 40 workers with concurrent steal extraction it should beat the
 //! central single-lock queue by ≥ 2× aggregate throughput.
 //!
-//!     cargo bench --bench scheduler
+//! Part 3 — the steal-decision microbench: one full victim-side
+//! `decide_steal` poll (O(1) census + waiting-time gate + index-based
+//! extraction) at 1/8/40 workers on both backends. `--json PATH` writes
+//! the medians for CI (`BENCH_PR2.json`); `--steal-decision-only` skips
+//! the slower parts.
+//!
+//!     cargo bench --bench scheduler [-- [--steal-decision-only] [--json PATH]]
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use parsteal::dataflow::task::{TaskClass, TaskDesc};
-use parsteal::sched::{SchedBackend, SchedQueue, Scheduler};
+use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
+use parsteal::dataflow::ttg::TtgBuilder;
+use parsteal::migrate::{protocol::decide_steal, MigrateConfig, VictimPolicy};
+use parsteal::sched::{SchedBackend, SchedQueue, Scheduler, TaskMeta};
 use parsteal::util::bench::Bencher;
+use parsteal::util::json::Json;
 
 fn filled(n: u32) -> SchedQueue {
     let q = SchedQueue::new();
@@ -124,11 +133,11 @@ fn contention_run(
             let mut extracted = 0u64;
             while !stop.load(Ordering::Relaxed) {
                 // The migrate thread's census + extraction, as in
-                // decide_steal: count stealables, then take a batch of
-                // the lowest-priority ones and hand them back (a remote
-                // thief would requeue them after the wire hop anyway).
-                let _census = queue.count_matching(&|t| t.i % 2 == 0);
-                let batch = queue.extract_for_steal(20, &|t| t.i % 2 == 0);
+                // decide_steal: O(1) stealable count, then a batch of
+                // the lowest-priority stealable tasks, handed back (a
+                // remote thief would requeue them after the wire hop).
+                let _census = queue.stealable_count();
+                let batch = queue.extract_stealable(20);
                 extracted += batch.len() as u64;
                 for t in batch {
                     queue.insert(t, (t.i % 97) as i64);
@@ -182,7 +191,94 @@ fn contention_benches() {
     );
 }
 
+/// One full victim-side steal poll per iteration, in steady state: the
+/// graph's payloads are large enough that the waiting-time gate denies
+/// every request, so the extracted task is re-inserted and the queue
+/// depth never drifts. Measures exactly what a migrate thread pays per
+/// poll: O(1) census + gate + index extraction + re-insert.
+fn steal_decision_benches() -> Vec<(String, f64)> {
+    println!();
+    println!("== steal decision: one decide_steal poll (gated, steady-state) ==");
+    let mut b = Bencher::default();
+    let mut medians = Vec::new();
+    let graph = TtgBuilder::new("bench", 2)
+        .wrap_g(
+            "c",
+            |t| t.i % 2 == 0, // half the tasks stealable
+            |_| vec![],
+            |_| 1,
+            |_| NodeId(0),
+            |_| 1.0,
+        )
+        .with_payload(|_| 1 << 30) // 1 GiB -> gate always denies
+        .build();
+    let mc = MigrateConfig {
+        victim: VictimPolicy::Single,
+        use_waiting_time: true,
+        ..Default::default()
+    };
+    const DEPTH: u32 = 2048;
+    for backend in SchedBackend::ALL {
+        for workers in [1usize, 8, 40] {
+            let q = backend.build(workers);
+            for i in 0..DEPTH {
+                let t = TaskDesc::indexed(TaskClass::Gemm, i, 0, 0);
+                q.insert_meta(t, (i % 97) as i64, TaskMeta::of(&graph, t));
+            }
+            let name = format!(
+                "decide_steal {}  {workers:>2} workers  depth={DEPTH}",
+                backend.label()
+            );
+            let r = b.bench(&name, || {
+                decide_steal(&mc, &graph, q.as_ref(), workers, 10.0, 5.0, 1e3)
+            });
+            medians.push((name, r.median_ns()));
+            assert_eq!(q.len() as u32, DEPTH, "gate denial must restore the queue");
+            assert_eq!(
+                q.stats().scans,
+                0,
+                "steal polls must not scan ({})",
+                backend.label()
+            );
+        }
+    }
+    medians
+}
+
+fn write_json(path: &str, medians: &[(String, f64)]) {
+    let entries: Vec<Json> = medians
+        .iter()
+        .map(|(name, ns)| {
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("median_ns_per_poll", Json::Num(*ns)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("bench", Json::Str("steal_decision".into())),
+        ("results", Json::Arr(entries)),
+    ]);
+    match std::fs::write(path, j.pretty()) {
+        Ok(()) => println!("\n(steal-decision medians -> {path})"),
+        Err(e) => eprintln!("\n(could not write {path}: {e})"),
+    }
+}
+
 fn main() {
-    hot_path_benches();
-    contention_benches();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steal_only = args.iter().any(|a| a == "--steal-decision-only");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|ix| args.get(ix + 1))
+        .cloned();
+    if !steal_only {
+        hot_path_benches();
+        contention_benches();
+    }
+    let medians = steal_decision_benches();
+    if let Some(path) = json_path {
+        write_json(&path, &medians);
+    }
 }

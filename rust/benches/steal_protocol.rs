@@ -8,7 +8,7 @@ use std::time::Duration;
 use parsteal::comm::{LinkModel, Msg, Network};
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use parsteal::migrate::{protocol::decide_steal, MigrateConfig, VictimPolicy};
-use parsteal::sched::SchedQueue;
+use parsteal::sched::{SchedQueue, TaskMeta};
 use parsteal::util::bench::Bencher;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
 
@@ -23,11 +23,13 @@ fn main() {
         ..Default::default()
     }));
 
-    let fill = || {
+    let fill_graph = graph.clone();
+    let mut fill = move || {
         let q = SchedQueue::new();
         for i in 1..64u32 {
             for j in 0..i.min(8) {
-                q.insert(CholeskyGraph::gemm(i, j, 0), (i + j) as i64);
+                let t = CholeskyGraph::gemm(i, j, 0);
+                q.insert_meta(t, (i + j) as i64, TaskMeta::of(fill_graph.as_ref(), t));
             }
         }
         q
@@ -45,7 +47,7 @@ fn main() {
         let g = graph.clone();
         b.bench_with_setup(
             &format!("decide_steal {label} (gated)"),
-            fill,
+            &mut fill,
             move |q| {
                 let d = decide_steal(&mc, g.as_ref(), &q, 8, 100.0, 5.0, 1e4);
                 (q, d)

@@ -28,6 +28,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// Scheduler backend (`--sched central|sharded`).
     pub sched: SchedBackend,
+    /// Coalesce same-destination activations (`--batch-activations`).
+    pub batch_activations: bool,
 }
 
 impl RunConfig {
@@ -35,7 +37,8 @@ impl RunConfig {
     /// `--workload cholesky|uts --nodes N --workers W --tiles T --tile-size S`
     /// `--dense-fraction F --steal BOOL --victim half|chunk[K]|single`
     /// `--thief ready-only|ready-successors --waiting-time BOOL`
-    /// `--sched central|sharded --latency-us L --bw B --seed X` and the
+    /// `--sched central|sharded --batch-activations BOOL`
+    /// `--latency-us L --bw B --seed X` and the
     /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
     pub fn from_args(args: &Args) -> Result<RunConfig> {
         let nodes = args.u64_or("nodes", 4)? as u32;
@@ -87,6 +90,7 @@ impl RunConfig {
                 .str_or("sched", "central")
                 .parse::<SchedBackend>()
                 .map_err(anyhow::Error::msg)?,
+            batch_activations: args.bool_or("batch-activations", true)?,
         })
     }
 
@@ -112,6 +116,7 @@ impl RunConfig {
             max_events: u64::MAX,
             record_polls: true,
             sched: self.sched,
+            batch_activations: self.batch_activations,
         }
     }
 }
@@ -170,5 +175,15 @@ mod tests {
         assert_eq!(c.sched, SchedBackend::Sharded);
         assert_eq!(c.sim_config().sched, SchedBackend::Sharded);
         assert!(RunConfig::from_args(&args("--sched bogus")).is_err());
+    }
+
+    #[test]
+    fn batch_activations_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert!(c.batch_activations, "batching is the default");
+        assert!(c.sim_config().batch_activations);
+        let c = RunConfig::from_args(&args("--batch-activations false")).unwrap();
+        assert!(!c.batch_activations);
+        assert!(!c.sim_config().batch_activations);
     }
 }

@@ -7,8 +7,9 @@
 //! comm latency layer; see DESIGN.md substitution table). Per-tile locks
 //! serialize access; the DAG guarantees a single writer at a time.
 
-use std::collections::HashMap;
 use std::sync::Mutex;
+
+use crate::util::hash::FxHashMap;
 
 use super::task::NodeId;
 
@@ -82,10 +83,12 @@ pub struct TileKey {
     pub col: u32,
 }
 
-/// The distributed tile repository.
+/// The distributed tile repository. Tile lookups sit on the kernel
+/// dispatch path, so the maps use the FxHash hasher
+/// ([`crate::util::hash`]) rather than SipHash.
 pub struct TileStore {
-    tiles: HashMap<TileKey, Mutex<Tile>>,
-    homes: HashMap<TileKey, NodeId>,
+    tiles: FxHashMap<TileKey, Mutex<Tile>>,
+    homes: FxHashMap<TileKey, NodeId>,
     /// Bytes "transferred" between distinct home nodes (accounting only).
     remote_reads: Mutex<u64>,
 }
@@ -93,8 +96,8 @@ pub struct TileStore {
 impl TileStore {
     pub fn new() -> Self {
         Self {
-            tiles: HashMap::new(),
-            homes: HashMap::new(),
+            tiles: FxHashMap::default(),
+            homes: FxHashMap::default(),
             remote_reads: Mutex::new(0),
         }
     }

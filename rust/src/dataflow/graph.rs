@@ -8,17 +8,28 @@
 //! materialization, everything is derived on the fly from the graph's
 //! algebraic description, PaRSEC-style.
 
-use std::collections::HashMap;
+use crate::util::hash::FxHashMap;
+#[cfg(debug_assertions)]
+use crate::util::hash::FxHashSet;
 
 use super::task::TaskDesc;
 use super::ttg::TaskGraph;
 
 /// Per-node dependency bookkeeping.
+///
+/// The maps are FxHash-keyed ([`crate::util::hash`]): the tracker is
+/// touched once per dependency edge, making it the hottest `TaskDesc`
+/// map in the system, and the descriptors are runtime-generated (never
+/// attacker-controlled), so SipHash buys nothing. The double-fire set
+/// exists only in debug builds — release builds carry no bookkeeping
+/// beyond the remaining-count map.
 #[derive(Default, Debug)]
 pub struct ActivationTracker {
-    remaining: HashMap<TaskDesc, u32>,
-    /// Tasks that reached zero and were handed out (debug double-fire check).
-    fired: HashMap<TaskDesc, ()>,
+    remaining: FxHashMap<TaskDesc, u32>,
+    /// Tasks that reached zero and were handed out (debug-only
+    /// double-fire check).
+    #[cfg(debug_assertions)]
+    fired: FxHashSet<TaskDesc>,
     activations_received: u64,
 }
 
@@ -31,8 +42,9 @@ impl ActivationTracker {
     /// this was the last missing input (the task is now ready).
     pub fn activate(&mut self, graph: &dyn TaskGraph, t: TaskDesc) -> bool {
         self.activations_received += 1;
-        debug_assert!(
-            !self.fired.contains_key(&t),
+        #[cfg(debug_assertions)]
+        assert!(
+            !self.fired.contains(&t),
             "activation for already-ready task {t}"
         );
         let entry = self
@@ -43,9 +55,8 @@ impl ActivationTracker {
         *entry -= 1;
         if *entry == 0 {
             self.remaining.remove(&t);
-            if cfg!(debug_assertions) {
-                self.fired.insert(t, ());
-            }
+            #[cfg(debug_assertions)]
+            self.fired.insert(t);
             true
         } else {
             false
@@ -54,9 +65,10 @@ impl ActivationTracker {
 
     /// Roots have no predecessors; mark them ready without activation.
     pub fn mark_root(&mut self, t: TaskDesc) {
-        if cfg!(debug_assertions) {
-            self.fired.insert(t, ());
-        }
+        #[cfg(debug_assertions)]
+        self.fired.insert(t);
+        #[cfg(not(debug_assertions))]
+        let _ = t;
     }
 
     /// Number of tasks with partially-satisfied dependencies.

@@ -68,6 +68,9 @@ pub struct Ctx {
     pub seeds: u64,
     pub cost: CostModel,
     pub out_dir: std::path::PathBuf,
+    /// Scheduler backend every figure's simulations run on
+    /// (`repro figure --sched central|sharded`).
+    pub sched: SchedBackend,
 }
 
 impl Ctx {
@@ -78,7 +81,14 @@ impl Ctx {
             seeds,
             cost: CostModel::load_or_default(&artifacts_dir.join("costmodel.json")),
             out_dir: out_dir.to_path_buf(),
+            sched: SchedBackend::Central,
         }
+    }
+
+    /// Select the scheduler backend the figures sweep on.
+    pub fn with_sched(mut self, sched: SchedBackend) -> Ctx {
+        self.sched = sched;
+        self
     }
 
     pub fn cholesky(&self, nodes: u32, seed: u64) -> Arc<CholeskyGraph> {
@@ -141,7 +151,8 @@ impl Ctx {
             seed,
             max_events: u64::MAX,
             record_polls,
-            sched: SchedBackend::Central,
+            sched: self.sched,
+            batch_activations: true,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 50).run()
     }
@@ -160,7 +171,8 @@ impl Ctx {
             seed,
             max_events: u64::MAX,
             record_polls,
-            sched: SchedBackend::Central,
+            sched: self.sched,
+            batch_activations: true,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, tile).run()
     }
@@ -173,7 +185,8 @@ impl Ctx {
             seed,
             max_events: u64::MAX,
             record_polls: false,
-            sched: SchedBackend::Central,
+            sched: self.sched,
+            batch_activations: true,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 0).run()
     }

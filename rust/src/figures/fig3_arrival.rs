@@ -19,7 +19,6 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     // is long enough for executing tasks to finish and enqueue their
     // successors — the effect Fig. 3 demonstrates.
     use crate::comm::LinkModel;
-    use crate::sched::SchedBackend;
     use crate::sim::{SimConfig, Simulator};
     let tiles = ctx.scale.tiles() / 2;
     let graph = ctx.cholesky_custom(2, tiles, 100, 0);
@@ -43,7 +42,8 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             seed: 7,
             max_events: u64::MAX,
             record_polls: true,
-            sched: SchedBackend::Central,
+            sched: ctx.sched,
+            batch_activations: true,
         },
         ctx.cost.clone(),
         mc,

@@ -32,10 +32,11 @@ fn usage() -> String {
      repro run [--workload cholesky|uts] [--nodes 4] [--workers 40]\n\
      \x20         [--tiles 200] [--tile-size 50] [--steal true] [--victim single]\n\
      \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
-     \x20         [--sched central|sharded] [--backend sim|real|pjrt]\n\
-     \x20         [--artifacts artifacts]\n\
+     \x20         [--sched central|sharded] [--batch-activations true]\n\
+     \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
-     \x20         [--figure-scale small|paper] [--artifacts artifacts]\n\
+     \x20         [--figure-scale small|paper] [--sched central|sharded]\n\
+     \x20         [--artifacts artifacts]\n\
      repro calibrate [--reps 50] [--out artifacts/costmodel.json]\n\
      repro verify [--tiles 6] [--tile-size 16] [--nodes 2] [--workers 2]\n\
      \x20         [--steal true] [--sched central|sharded]\n\
@@ -97,6 +98,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     seed: cfg.seed,
                     record_polls: true,
                     sched: cfg.sched,
+                    batch_activations: cfg.batch_activations,
                 },
                 ex,
             )
@@ -118,6 +120,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     seed: cfg.seed,
                     record_polls: true,
                     sched: cfg.sched,
+                    batch_activations: cfg.batch_activations,
                 },
                 ex,
             )
@@ -135,6 +138,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     seed: cfg.seed,
                     record_polls: true,
                     sched: cfg.sched,
+                    batch_activations: cfg.batch_activations,
                 },
                 ex,
             )
@@ -180,9 +184,13 @@ fn cmd_figure(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.str_or("out", "results"));
     let scale = Scale::parse(&args.str_or("figure-scale", "small"));
     let seeds = args.u64_or("seeds", 5)?;
+    let sched = args
+        .str_or("sched", "central")
+        .parse::<parsteal::sched::SchedBackend>()
+        .map_err(anyhow::Error::msg)?;
     let artifacts = artifacts_dir(args);
     args.check_unknown()?;
-    let ctx = Ctx::new(scale, seeds, &artifacts, &out);
+    let ctx = Ctx::new(scale, seeds, &artifacts, &out).with_sched(sched);
     let text = figures::run(&ctx, &id)?;
     println!("{text}");
     eprintln!("(machine-readable output under {})", out.display());
@@ -247,6 +255,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             seed: 1,
             record_polls: false,
             sched,
+            batch_activations: true,
         },
         ex.clone(),
     );

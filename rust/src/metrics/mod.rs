@@ -45,6 +45,9 @@ pub struct RunReport {
     pub link: LinkModel,
     /// DES only: events processed (engine throughput accounting).
     pub events: u64,
+    /// DES only: Deliver (wire message) events — the quantity activation
+    /// batching shrinks.
+    pub deliver_events: u64,
 }
 
 impl RunReport {
@@ -127,6 +130,7 @@ impl RunReport {
             ("nodes", Json::Num(self.nodes.len() as f64)),
             ("workers_per_node", Json::Num(self.workers_per_node as f64)),
             ("events", Json::Num(self.events as f64)),
+            ("deliver_events", Json::Num(self.deliver_events as f64)),
             ("steal_requests", Json::Num(steals.requests_sent as f64)),
             ("steal_successes", Json::Num(steals.successful_steals as f64)),
             ("steal_success_pct", Json::Num(steals.success_pct())),
@@ -175,6 +179,7 @@ mod tests {
             workers_per_node: 1,
             link: LinkModel::ideal(),
             events: 0,
+            deliver_events: 0,
         };
         // each node's mean/max = 1 -> I = 0
         let e = r.potential_series(100.0);
@@ -195,6 +200,7 @@ mod tests {
             workers_per_node: 1,
             link: LinkModel::ideal(),
             events: 0,
+            deliver_events: 0,
         };
         let e = r.potential_series(100.0);
         // w = [1, 0]: I = 1 - 0.5 = 0.5; E = I*P = 1.0
@@ -211,6 +217,7 @@ mod tests {
             workers_per_node: 1,
             link: LinkModel::ideal(),
             events: 0,
+            deliver_events: 0,
         };
         assert_eq!(r.potential_series(10.0).len(), 3);
     }
@@ -229,6 +236,7 @@ mod tests {
             workers_per_node: 1,
             link: LinkModel::ideal(),
             events: 0,
+            deliver_events: 0,
         };
         assert_eq!(r.arrival_ready_all(), vec![3, 9]);
     }

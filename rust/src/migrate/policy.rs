@@ -122,6 +122,12 @@ impl Default for MigrateConfig {
 }
 
 /// A thief-side snapshot of the node state, fed to the starvation check.
+///
+/// Both fields are O(1) reads: `ready` is the scheduler's task counter
+/// and `executing_local_successors` is maintained incrementally by the
+/// runtimes (added when a task starts executing, subtracted when it
+/// finishes) — the starvation poll never walks the queue or the
+/// executing set.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StarvationView {
     /// Ready tasks waiting in the scheduler queue.

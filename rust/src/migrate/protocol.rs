@@ -1,8 +1,16 @@
 //! Victim-side steal decision and shared steal accounting.
+//!
+//! The decision is O(1) + O(tasks extracted): the stealable census comes
+//! from the scheduler's incrementally-maintained accounting
+//! ([`Scheduler::stealable_count`]) and extraction walks the stealable
+//! index ([`Scheduler::extract_stealable`]) — no queue scan per request
+//! (asserted by `steal_poll_performs_no_queue_scan` below). The contract
+//! is that every task was enqueued with [`TaskMeta::of`] so the stored
+//! stealable bit agrees with `graph.is_stealable`.
 
 use crate::dataflow::task::TaskDesc;
 use crate::dataflow::ttg::TaskGraph;
-use crate::sched::Scheduler;
+use crate::sched::{Scheduler, TaskMeta};
 
 use super::policy::{migrate_time_us, steal_allowance, waiting_time_us, MigrateConfig};
 
@@ -26,7 +34,8 @@ pub struct VictimDecision {
 /// queue the extraction *competes* with worker `select`s on one lock
 /// (the §4.4 contention); the sharded backend serves it from the steal
 /// pool. Either way the allowance is best-effort exactly as §3
-/// describes.
+/// describes. The stealable census is the scheduler's O(1) accounting —
+/// no per-request queue scan.
 pub fn decide_steal(
     cfg: &MigrateConfig,
     graph: &dyn TaskGraph,
@@ -36,7 +45,7 @@ pub fn decide_steal(
     link_latency_us: f64,
     link_bw_bytes_per_us: f64,
 ) -> VictimDecision {
-    let stealable = queue.count_matching(&|t: &TaskDesc| graph.is_stealable(*t));
+    let stealable = queue.stealable_count();
     let allowed = steal_allowance(cfg.victim, stealable);
     if allowed == 0 {
         return VictimDecision::default();
@@ -49,7 +58,7 @@ pub fn decide_steal(
         let waiting = waiting_time_us(queue.len(), workers, avg_exec_us);
         // Extract first, then re-insert if the gate fails: the gate needs
         // the concrete payload size of the tasks that would migrate.
-        let tasks = queue.extract_for_steal(allowed, &|t: &TaskDesc| graph.is_stealable(*t));
+        let tasks = queue.extract_stealable(allowed);
         if tasks.is_empty() {
             return VictimDecision::default();
         }
@@ -67,9 +76,9 @@ pub fn decide_steal(
                 denied_by_waiting_time: false,
             };
         }
-        // Denied: put the tasks back.
+        // Denied: put the tasks back (with their accounting meta).
         for t in tasks {
-            queue.insert(t, graph.priority(t));
+            queue.insert_meta(t, graph.priority(t), TaskMeta::of(graph, t));
         }
         VictimDecision {
             tasks: Vec::new(),
@@ -77,7 +86,7 @@ pub fn decide_steal(
             denied_by_waiting_time: true,
         }
     } else {
-        let tasks = queue.extract_for_steal(allowed, &|t: &TaskDesc| graph.is_stealable(*t));
+        let tasks = queue.extract_stealable(allowed);
         let payload = tasks.iter().map(|t| graph.payload_bytes(*t)).sum();
         VictimDecision {
             tasks,
@@ -150,10 +159,13 @@ mod tests {
             .build()
     }
 
-    fn queue_with(n: u32) -> SchedQueue {
+    /// Enqueue n tasks carrying the graph's steal meta — the contract
+    /// every runtime call site follows.
+    fn queue_with(graph: &dyn TaskGraph, n: u32) -> SchedQueue {
         let q = SchedQueue::new();
         for i in 0..n {
-            q.insert(TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0), i as i64);
+            let t = TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+            q.insert_meta(t, i as i64, TaskMeta::of(graph, t));
         }
         q
     }
@@ -173,7 +185,7 @@ mod tests {
     #[test]
     fn half_policy_without_gate_takes_half_of_stealable() {
         let g = graph(0);
-        let q = queue_with(8); // 4 stealable (even i)
+        let q = queue_with(&g, 8); // 4 stealable (even i)
         let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, 10.0, 1.0, 1e9);
         assert_eq!(d.tasks.len(), 2);
         assert!(d.tasks.iter().all(|t| t.i % 2 == 0));
@@ -183,7 +195,7 @@ mod tests {
     #[test]
     fn gate_denies_when_migration_slower_than_wait() {
         let g = graph(1_000_000_000); // 1 GB payload
-        let q = queue_with(4);
+        let q = queue_with(&g, 4);
         // wait = (4/4+1)*10 = 20µs; migrate = 5 + 1e9/1e3 = huge -> deny
         let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 10.0, 5.0, 1e3);
         assert!(d.tasks.is_empty());
@@ -194,7 +206,7 @@ mod tests {
     #[test]
     fn gate_allows_cheap_migration() {
         let g = graph(100);
-        let q = queue_with(40);
+        let q = queue_with(&g, 40);
         // wait = (40/4+1)*100 = 1100µs; migrate = 5 + 100/1e3 ≈ 5.1µs
         let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 100.0, 5.0, 1e3);
         assert_eq!(d.tasks.len(), 1);
@@ -206,7 +218,7 @@ mod tests {
         let g = TtgBuilder::new("g", 2)
             .wrap_g("c", |_| false, |_| vec![], |_| 1, |_| NodeId(0), |_| 1.0)
             .build();
-        let q = queue_with(4);
+        let q = queue_with(&g, 4);
         let d = decide_steal(&cfg(VictimPolicy::Half, true), &g, &q, 4, 10.0, 1.0, 1e3);
         assert!(d.tasks.is_empty());
         assert!(!d.denied_by_waiting_time);
@@ -217,7 +229,8 @@ mod tests {
     fn half_needs_at_least_two_stealable() {
         let g = graph(0);
         let q = SchedQueue::new();
-        q.insert(TaskDesc::indexed(TaskClass::Synthetic, 0, 0, 0), 0);
+        let t = TaskDesc::indexed(TaskClass::Synthetic, 0, 0, 0);
+        q.insert_meta(t, 0, TaskMeta::of(&g, t));
         let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, 10.0, 1.0, 1e3);
         assert!(d.tasks.is_empty(), "half of 1 stealable = 0");
     }
@@ -228,7 +241,8 @@ mod tests {
         for backend in SchedBackend::ALL {
             let q = backend.build(4);
             for i in 0..40 {
-                q.insert(TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0), i as i64);
+                let t = TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+                q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
             }
             // wait = (40/4+1)*100 = 1100µs; migrate ≈ 155µs -> allowed
             let d = decide_steal(
@@ -243,6 +257,46 @@ mod tests {
             assert_eq!(d.tasks.len(), 6, "{backend:?}");
             assert!(d.tasks.iter().all(|t| t.i % 2 == 0), "{backend:?}");
             assert_eq!(q.len(), 34, "{backend:?}: conservation");
+        }
+    }
+
+    /// The §Perf acceptance gate: a full victim-side steal poll —
+    /// census, waiting-time gate, extraction, even a gate denial with
+    /// re-insert — performs zero O(n) queue scans on either backend.
+    #[test]
+    fn steal_poll_performs_no_queue_scan() {
+        for backend in SchedBackend::ALL {
+            // Granted steal.
+            let g = graph(100);
+            let q = backend.build(4);
+            for i in 0..40 {
+                let t = TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+                q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
+            }
+            let d = decide_steal(
+                &cfg(VictimPolicy::Chunk(6), true),
+                &g,
+                q.as_ref(),
+                4,
+                100.0,
+                5.0,
+                1e3,
+            );
+            assert_eq!(d.tasks.len(), 6, "{backend:?}");
+            assert_eq!(q.stats().scans, 0, "{backend:?}: granted poll scanned");
+
+            // Denied steal (huge payload): extraction + re-insert path.
+            let g = graph(1_000_000_000);
+            let q = backend.build(4);
+            for i in 0..4 {
+                let t = TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+                q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
+            }
+            let d =
+                decide_steal(&cfg(VictimPolicy::Single, true), &g, q.as_ref(), 4, 10.0, 5.0, 1e3);
+            assert!(d.denied_by_waiting_time, "{backend:?}");
+            assert_eq!(q.len(), 4, "{backend:?}: denied tasks returned");
+            assert_eq!(q.stats().scans, 0, "{backend:?}: denied poll scanned");
         }
     }
 

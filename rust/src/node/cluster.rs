@@ -1,7 +1,6 @@
 //! Multi-node threaded runtime: workers + comm thread + migrate thread
 //! per node, Safra termination, steal protocol over the message fabric.
 
-use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -14,7 +13,7 @@ use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
     is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
 };
-use crate::sched::{SchedBackend, Scheduler};
+use crate::sched::{SchedBackend, Scheduler, TaskMeta};
 use crate::term::{SafraAction, SafraState};
 use crate::util::rng::Rng;
 
@@ -29,6 +28,10 @@ pub struct ClusterConfig {
     pub record_polls: bool,
     /// Scheduler backend per node (`--sched central|sharded`).
     pub sched: SchedBackend,
+    /// Coalesce same-destination successor activations into one
+    /// `ActivateBatch` message (`--batch-activations`; off reproduces
+    /// the per-edge protocol for ablations).
+    pub batch_activations: bool,
 }
 
 impl Default for ClusterConfig {
@@ -40,6 +43,7 @@ impl Default for ClusterConfig {
             seed: 1,
             record_polls: true,
             sched: SchedBackend::Central,
+            batch_activations: true,
         }
     }
 }
@@ -59,8 +63,12 @@ struct NodeState {
     /// the insert hot path stays lock-free node-wide under load.
     parked: AtomicUsize,
     tracker: Mutex<ActivationTracker>,
-    executing: Mutex<HashSet<TaskDesc>>,
     executing_count: AtomicUsize,
+    /// Local successors of tasks currently executing — the "future
+    /// tasks" of the thief policy, maintained incrementally (added at
+    /// execution start, subtracted at finish) so the starvation poll is
+    /// an O(1) read instead of a walk over the executing set.
+    executing_local_succ: AtomicUsize,
     tasks_done: AtomicU64,
     exec_sum_ns: AtomicU64,
     busy_ns: AtomicU64,
@@ -111,8 +119,8 @@ impl Cluster {
                     queue_cv: Condvar::new(),
                     parked: AtomicUsize::new(0),
                     tracker: Mutex::new(ActivationTracker::new()),
-                    executing: Mutex::new(HashSet::new()),
                     executing_count: AtomicUsize::new(0),
+                    executing_local_succ: AtomicUsize::new(0),
                     tasks_done: AtomicU64::new(0),
                     exec_sum_ns: AtomicU64::new(0),
                     busy_ns: AtomicU64::new(0),
@@ -206,6 +214,7 @@ impl Cluster {
             workers_per_node: cfg.workers_per_node,
             link: cfg.link,
             events: 0,
+            deliver_events: 0,
             nodes: nodes
                 .iter()
                 .map(|nd| {
@@ -229,9 +238,11 @@ impl Cluster {
     }
 }
 
-/// Insert a ready task and wake a worker.
+/// Insert a ready task (with its steal-accounting meta) and wake a
+/// worker.
 fn enqueue(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
-    node.queue.insert(task, graph.priority(task));
+    node.queue
+        .insert_meta(task, graph.priority(task), TaskMeta::of(graph, task));
     // Only touch the idle lock when someone is (about to be) parked.
     // SeqCst pairing with the worker makes this sound: the worker
     // bumps `parked` before re-checking emptiness, we insert before
@@ -249,6 +260,23 @@ fn activate_local(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
     let ready = node.tracker.lock().unwrap().activate(graph, task);
     if ready {
         enqueue(node, graph, task);
+    }
+}
+
+/// Deliver a coalesced activation batch under a single tracker lock,
+/// then enqueue whatever became ready.
+fn activate_local_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDesc]) {
+    let mut ready = Vec::new();
+    {
+        let mut tracker = node.tracker.lock().unwrap();
+        for &t in tasks {
+            if tracker.activate(graph, t) {
+                ready.push(t);
+            }
+        }
+    }
+    for t in ready {
+        enqueue(node, graph, t);
     }
 }
 
@@ -294,25 +322,55 @@ fn worker_loop(
             node.polls.lock().unwrap().push(sample);
         }
 
-        node.executing.lock().unwrap().insert(task);
+        // Successor derivation is a pure function of the descriptor, so
+        // it can run before the body: the count feeds the O(1)
+        // starvation view while the task executes, and the same vec
+        // drives the activation fan-out afterwards.
+        let succs = graph.successors(task);
+        let dynamic = graph.dynamic_placement();
+        let local_succ = succs
+            .iter()
+            .filter(|s| dynamic || graph.owner(**s) == node.id)
+            .count();
+        node.executing_local_succ
+            .fetch_add(local_succ, Ordering::SeqCst);
+
         let t0 = Instant::now();
         ex.execute(node.id, task);
         let dur_ns = t0.elapsed().as_nanos() as u64;
 
         // Propagate activations BEFORE leaving the executing state so the
         // node is never "passive" with un-sent messages (Safra safety).
-        let dynamic = graph.dynamic_placement();
-        for s in graph.successors(task) {
+        // Remote successors sharing a destination coalesce into one
+        // ActivateBatch message: one wire header, one Safra deficit
+        // entry, one tracker lock at the receiver.
+        let mut remote: Vec<(NodeId, Vec<TaskDesc>)> = Vec::new();
+        for s in succs {
             let dest = if dynamic { node.id } else { graph.owner(s) };
             if dest == node.id {
                 activate_local(&node, graph, s);
+            } else if sh.cfg.batch_activations {
+                match remote.iter_mut().find(|(d, _)| *d == dest) {
+                    Some((_, bucket)) => bucket.push(s),
+                    None => remote.push((dest, vec![s])),
+                }
             } else {
                 node.safra.lock().unwrap().on_send();
                 sh.net.send(node.id, dest, Msg::Activate { task: s });
             }
         }
+        for (dest, tasks) in remote {
+            node.safra.lock().unwrap().on_send();
+            let msg = if tasks.len() == 1 {
+                Msg::Activate { task: tasks[0] }
+            } else {
+                Msg::ActivateBatch { tasks }
+            };
+            sh.net.send(node.id, dest, msg);
+        }
 
-        node.executing.lock().unwrap().remove(&task);
+        node.executing_local_succ
+            .fetch_sub(local_succ, Ordering::SeqCst);
         node.executing_count.fetch_sub(1, Ordering::SeqCst);
         node.tasks_done.fetch_add(1, Ordering::SeqCst);
         node.exec_sum_ns.fetch_add(dur_ns, Ordering::SeqCst);
@@ -336,6 +394,7 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
             }
             match env.msg {
                 Msg::Activate { task } => activate_local(&node, graph, task),
+                Msg::ActivateBatch { tasks } => activate_local_batch(&node, graph, &tasks),
                 Msg::StealRequest { thief } => {
                     let workers = sh.cfg.workers_per_node;
                     let done = node.tasks_done.load(Ordering::SeqCst);
@@ -443,7 +502,6 @@ fn perform_safra_action(sh: &Arc<Shared>, node: &Arc<NodeState>, action: SafraAc
 }
 
 fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
-    let graph = sh.graph.as_ref();
     let mut rng = Rng::new(sh.cfg.seed ^ (0x5EA1 + node.id.idx() as u64));
     let n = sh.nodes.len();
     let poll = Duration::from_nanos((sh.cfg.migrate.poll_interval_us * 1e3) as u64);
@@ -452,24 +510,14 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
             return;
         }
         std::thread::sleep(poll);
-        let ready = node.queue.len();
+        // Both fields are O(1) counter reads — the starvation poll no
+        // longer walks the executing set calling successors() per task.
         let view = StarvationView {
-            ready,
+            ready: node.queue.len(),
             executing_local_successors: match sh.cfg.migrate.thief {
                 crate::migrate::ThiefPolicy::ReadyOnly => 0,
                 crate::migrate::ThiefPolicy::ReadySuccessors => {
-                    let executing = node.executing.lock().unwrap();
-                    let dynamic = graph.dynamic_placement();
-                    executing
-                        .iter()
-                        .map(|t| {
-                            graph
-                                .successors(*t)
-                                .into_iter()
-                                .filter(|s| dynamic || graph.owner(*s) == node.id)
-                                .count()
-                        })
-                        .sum()
+                    node.executing_local_succ.load(Ordering::SeqCst)
                 }
             },
         };
@@ -583,6 +631,34 @@ mod tests {
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), 35);
+    }
+
+    /// The unbatched (per-edge) activation path stays available as an
+    /// ablation and must complete every task, stealing or not.
+    #[test]
+    fn unbatched_activation_path_still_completes() {
+        for steal in [false, true] {
+            let g = chol(8, 3);
+            let total = g.total_tasks().unwrap();
+            let r = Cluster::run(
+                g,
+                ClusterConfig {
+                    workers_per_node: 2,
+                    batch_activations: false,
+                    migrate: if steal {
+                        MigrateConfig {
+                            poll_interval_us: 50.0,
+                            ..Default::default()
+                        }
+                    } else {
+                        MigrateConfig::disabled()
+                    },
+                    ..Default::default()
+                },
+                Arc::new(NullExecutor),
+            );
+            assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
+        }
     }
 
     /// The sharded backend must run the full protocol — workers, comm,

@@ -265,6 +265,7 @@ mod tests {
                 seed: 11,
                 record_polls: false,
                 sched: SchedBackend::Central,
+                batch_activations: true,
             };
             let r = Cluster::run(g.clone(), cfg, ex.clone());
             assert_eq!(r.tasks_total_executed(), g.total_tasks().unwrap());

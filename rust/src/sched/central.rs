@@ -5,19 +5,39 @@
 //! on the same mutex. It stays the default because it is deterministic
 //! (single global priority-then-FIFO order) and is the semantic oracle
 //! the sharded backend is property-tested against.
+//!
+//! Steal accounting is incremental: a `BTreeSet` of the stealable
+//! entries' keys rides alongside the map, kept in sync on every
+//! insert/select/extract, so the victim-side census
+//! (`stealable_count`/`stealable_payload_bytes`) is an O(1) read and
+//! `extract_stealable` removes lowest-priority stealable tasks without
+//! filtering the queue.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 
 use crate::dataflow::task::TaskDesc;
 
-use super::{QKey, SchedStats, Scheduler};
+use super::{QKey, SchedStats, Scheduler, TaskMeta};
 
 #[derive(Debug, Default)]
 struct Central {
-    map: BTreeMap<QKey, TaskDesc>,
+    map: BTreeMap<QKey, (TaskDesc, TaskMeta)>,
+    /// Keys of entries whose meta marks them stealable (same ordering as
+    /// `map`, so `iter().take(k)` is "k lowest-priority stealable").
+    steal_idx: BTreeSet<QKey>,
+    steal_payload: u64,
     seq: u64,
     stats: SchedStats,
+}
+
+impl Central {
+    fn unindex(&mut self, key: QKey, meta: TaskMeta) {
+        if meta.stealable {
+            self.steal_idx.remove(&key);
+            self.steal_payload -= meta.payload_bytes;
+        }
+    }
 }
 
 /// A node's ready-task queue: `BTreeMap` keyed by `(priority,
@@ -42,6 +62,10 @@ impl CentralQueue {
     }
 
     pub fn insert(&self, task: TaskDesc, priority: i64) {
+        self.insert_meta(task, priority, TaskMeta::default());
+    }
+
+    pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
         let mut q = self.inner.lock().unwrap();
         q.seq += 1;
         q.stats.inserts += 1;
@@ -49,30 +73,66 @@ impl CentralQueue {
             prio: priority,
             age: u64::MAX - q.seq,
         };
-        q.map.insert(key, task);
+        if meta.stealable {
+            q.steal_idx.insert(key);
+            q.steal_payload += meta.payload_bytes;
+        }
+        q.map.insert(key, (task, meta));
     }
 
     /// Worker-side `select`: highest-priority ready task.
     pub fn select(&self) -> Option<TaskDesc> {
         let mut q = self.inner.lock().unwrap();
         let entry = q.map.pop_last();
-        if entry.is_some() {
+        if let Some((key, (task, meta))) = entry {
             q.stats.selects += 1;
             q.stats.select_len_sum += q.map.len() as u64;
+            q.unindex(key, meta);
+            Some(task)
+        } else {
+            None
         }
-        entry.map(|(_, t)| t)
     }
 
-    /// Count tasks satisfying `filter` (victim-side stealable census).
+    /// Queued stealable tasks — O(1), no scan.
+    pub fn stealable_count(&self) -> usize {
+        self.inner.lock().unwrap().steal_idx.len()
+    }
+
+    /// Payload bytes of the queued stealable tasks — O(1), no scan.
+    pub fn stealable_payload_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().steal_payload
+    }
+
+    /// Migrate-thread extraction of up to `max` stealable tasks, lowest
+    /// priority first, via the stealable index — no filtering of the
+    /// queue. Still *competes* with `select` on the one lock: the §4.4
+    /// contention is the backend's structure, not the extraction's cost.
+    pub fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut q = self.inner.lock().unwrap();
+        let keys: Vec<QKey> = q.steal_idx.iter().take(max).copied().collect();
+        let mut out = Vec::with_capacity(keys.len());
+        for k in keys {
+            let (task, meta) = q.map.remove(&k).expect("indexed key vanished");
+            q.unindex(k, meta);
+            out.push(task);
+        }
+        q.stats.steal_extracted += out.len() as u64;
+        out
+    }
+
+    /// Count tasks satisfying `filter` (O(n) oracle; counted as a scan).
     pub fn count_matching(&self, filter: impl Fn(&TaskDesc) -> bool) -> usize {
-        let q = self.inner.lock().unwrap();
-        q.map.values().filter(|t| filter(t)).count()
+        let mut q = self.inner.lock().unwrap();
+        q.stats.scans += 1;
+        q.map.values().filter(|(t, _)| filter(t)).count()
     }
 
-    /// Migrate-thread extraction: up to `max` tasks satisfying `filter`,
-    /// lowest priority first. This *competes* with `select` — the caller
-    /// path holds the same lock workers use, exactly the contention the
-    /// paper describes; the allowance is an upper bound, not a guarantee.
+    /// Scan-based extraction: up to `max` tasks satisfying `filter`,
+    /// lowest priority first (O(n) oracle; counted as a scan).
     pub fn extract_for_steal(
         &self,
         max: usize,
@@ -82,19 +142,22 @@ impl CentralQueue {
             return Vec::new();
         }
         let mut q = self.inner.lock().unwrap();
+        q.stats.scans += 1;
         // Collect keys only for matches: the scan itself allocates
         // nothing per non-matching task and never copies a TaskDesc.
         let keys: Vec<QKey> = q
             .map
             .iter()
-            .filter(|(_, t)| filter(t))
+            .filter(|(_, (t, _))| filter(t))
             .take(max)
             .map(|(k, _)| *k)
             .collect();
-        let out: Vec<TaskDesc> = keys
-            .iter()
-            .map(|k| q.map.remove(k).expect("key vanished"))
-            .collect();
+        let mut out = Vec::with_capacity(keys.len());
+        for k in keys {
+            let (task, meta) = q.map.remove(&k).expect("key vanished");
+            q.unindex(k, meta);
+            out.push(task);
+        }
         q.stats.steal_extracted += out.len() as u64;
         out
     }
@@ -112,15 +175,17 @@ impl CentralQueue {
     /// Drain everything (shutdown paths in tests).
     pub fn drain(&self) -> Vec<TaskDesc> {
         let mut q = self.inner.lock().unwrap();
-        let out = q.map.values().copied().collect();
+        let out = q.map.values().map(|(t, _)| *t).collect();
         q.map.clear();
+        q.steal_idx.clear();
+        q.steal_payload = 0;
         out
     }
 }
 
 impl Scheduler for CentralQueue {
-    fn insert(&self, task: TaskDesc, priority: i64) {
-        CentralQueue::insert(self, task, priority)
+    fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
+        CentralQueue::insert_meta(self, task, priority, meta)
     }
 
     fn select(&self, _worker: usize) -> Option<TaskDesc> {
@@ -129,6 +194,18 @@ impl Scheduler for CentralQueue {
 
     fn len(&self) -> usize {
         CentralQueue::len(self)
+    }
+
+    fn stealable_count(&self) -> usize {
+        CentralQueue::stealable_count(self)
+    }
+
+    fn stealable_payload_bytes(&self) -> u64 {
+        CentralQueue::stealable_payload_bytes(self)
+    }
+
+    fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
+        CentralQueue::extract_stealable(self, max)
     }
 
     fn count_matching(&self, filter: &dyn Fn(&TaskDesc) -> bool) -> usize {
@@ -212,6 +289,7 @@ mod tests {
         let s = q.stats();
         assert_eq!((s.inserts, s.selects, s.steal_extracted), (2, 1, 1));
         assert_eq!(s.select_len_sum, 1);
+        assert_eq!(s.scans, 1, "filter-based extraction is a scan");
     }
 
     #[test]
@@ -219,6 +297,52 @@ mod tests {
         let q = CentralQueue::new();
         q.insert(t(0), 0);
         assert!(q.extract_for_steal(0, |_| true).is_empty());
+        assert!(q.extract_stealable(0).is_empty());
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn accounting_is_exact_under_mixed_ops() {
+        let q = CentralQueue::new();
+        for i in 0..12u32 {
+            q.insert_meta(
+                t(i),
+                i as i64,
+                TaskMeta {
+                    stealable: i % 3 != 0,
+                    payload_bytes: (i as u64) * 10,
+                },
+            );
+        }
+        // stealable: i = 1,2,4,5,7,8,10,11 -> 8 tasks, payload 480
+        assert_eq!(q.stealable_count(), 8);
+        assert_eq!(q.stealable_payload_bytes(), 480);
+        // select takes the highest priority (i=11, stealable)
+        assert_eq!(q.select(), Some(t(11)));
+        assert_eq!(q.stealable_count(), 7);
+        assert_eq!(q.stealable_payload_bytes(), 370);
+        // extraction takes the two lowest-priority stealable (i=1,2)
+        let stolen = q.extract_stealable(2);
+        assert_eq!(stolen, vec![t(1), t(2)]);
+        assert_eq!(q.stealable_count(), 5);
+        assert_eq!(q.stealable_payload_bytes(), 340);
+        assert_eq!(q.stats().scans, 0, "no scan on the accounting path");
+        // non-stealable tasks are invisible to extract_stealable
+        let rest = q.extract_stealable(100);
+        assert_eq!(rest.len(), 5);
+        assert!(rest.iter().all(|s| s.i % 3 != 0));
+        assert_eq!(q.stealable_count(), 0);
+        assert_eq!(q.stealable_payload_bytes(), 0);
+        assert_eq!(q.len(), 4, "non-stealable tasks remain queued");
+    }
+
+    #[test]
+    fn drain_resets_accounting() {
+        let q = CentralQueue::new();
+        q.insert_meta(t(0), 0, TaskMeta { stealable: true, payload_bytes: 64 });
+        q.insert_meta(t(1), 1, TaskMeta { stealable: false, payload_bytes: 64 });
+        assert_eq!(q.drain().len(), 2);
+        assert_eq!(q.stealable_count(), 0);
+        assert_eq!(q.stealable_payload_bytes(), 0);
     }
 }

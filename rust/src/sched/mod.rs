@@ -1,4 +1,4 @@
-//! Node-level schedulers: one trait, two backends.
+//! Node-level schedulers: one trait, two backends, O(1) steal accounting.
 //!
 //! PaRSEC's default distributed scheduler keeps *node-level* queues
 //! ordered by priority; worker threads `select` from the front, and the
@@ -21,11 +21,41 @@
 //!   the same lock — exactly the §4.4 contention structure.
 //! * [`ShardedQueue`] — per-worker priority shards plus a low-priority
 //!   *steal pool*. Workers pull from their own shard (falling back to the
-//!   pool, then to neighbor shards when empty), inserts are spread
-//!   round-robin, and overfull shards shed their lowest-priority tasks
-//!   into the pool. Victim-side `extract_for_steal` drains the pool, so
-//!   the steal path no longer competes with worker `select` on a single
-//!   lock.
+//!   pool, then to a half-shard batch rebalanced from the richest
+//!   neighbor), inserts are spread round-robin, and shards over the spill
+//!   watermark shed their lowest-priority tasks into the pool. Victim-side
+//!   extraction drains the pool, so a steal request normally never blocks
+//!   a worker `select`. The watermark is *adaptive*: steal requests the
+//!   pool cannot cover push it down (spill more toward thieves), workers
+//!   that have to fall back to the pool push it back up.
+//!
+//! # The accounting contract
+//!
+//! The paper's victim policy needs "future tasks and the expected waiting
+//! time" at every steal poll. Recomputing that view with an O(n) queue
+//! scan per request is exactly the contention §4.4 warns about, so both
+//! backends maintain it *incrementally*: every task enters the queue via
+//! [`Scheduler::insert_meta`] carrying a [`TaskMeta`] (stealable? payload
+//! bytes?), and the backend keeps
+//!
+//! * [`Scheduler::stealable_count`] — how many queued tasks are
+//!   stealable, and
+//! * [`Scheduler::stealable_payload_bytes`] — the input bytes that would
+//!   travel if all of them migrated,
+//!
+//! exact under any interleaving of insert / select / extract, each an
+//! O(1) read. [`Scheduler::extract_stealable`] serves the migrate thread
+//! from a per-queue index of stealable entries (lowest priority first)
+//! without filtering the whole map. Callers must keep the inserted meta
+//! consistent with the graph's `is_stealable`/`payload_bytes` (use
+//! [`TaskMeta::of`]); the plain [`Scheduler::insert`] marks the task
+//! stealable with zero payload, matching the pre-accounting behavior.
+//!
+//! The scan-based [`Scheduler::count_matching`] and
+//! [`Scheduler::extract_for_steal`] survive as the *oracle* the property
+//! tests compare the incremental accounting against; each bumps
+//! [`SchedStats::scans`], so a test (and the §Perf acceptance gate) can
+//! assert the steal hot path performs zero scans.
 //!
 //! Both backends preserve the semantics the policies rely on: per shard,
 //! `select` is priority-then-FIFO; steal extraction takes lowest
@@ -36,6 +66,7 @@
 use std::str::FromStr;
 
 use crate::dataflow::task::TaskDesc;
+use crate::dataflow::ttg::TaskGraph;
 
 mod central;
 mod sharded;
@@ -56,6 +87,41 @@ pub(crate) struct QKey {
     pub(crate) age: u64, // u64::MAX - seq: larger = older
 }
 
+/// Steal-accounting metadata carried by every queued task.
+///
+/// Snapshotted at insert time from the graph ([`TaskMeta::of`]); the
+/// graph's methods are pure functions of the descriptor, so the snapshot
+/// never goes stale while the task waits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskMeta {
+    /// May this task migrate to a thief? (The paper's TTG
+    /// `is_stealable` hook, evaluated once at enqueue.)
+    pub stealable: bool,
+    /// Input bytes that travel with the task if it migrates.
+    pub payload_bytes: u64,
+}
+
+impl Default for TaskMeta {
+    /// Plain inserts count as stealable with no payload — the behavior
+    /// filters gave before the accounting existed.
+    fn default() -> Self {
+        TaskMeta {
+            stealable: true,
+            payload_bytes: 0,
+        }
+    }
+}
+
+impl TaskMeta {
+    /// Snapshot the graph's steal view of `t`.
+    pub fn of(graph: &dyn TaskGraph, t: TaskDesc) -> TaskMeta {
+        TaskMeta {
+            stealable: graph.is_stealable(t),
+            payload_bytes: graph.payload_bytes(t),
+        }
+    }
+}
+
 /// Snapshot counters for the scheduler (feeds the E^b potential metric
 /// and the §4.4 contention analysis).
 #[derive(Clone, Copy, Debug, Default)]
@@ -66,6 +132,10 @@ pub struct SchedStats {
     /// Sum of queue length observed at each successful select
     /// (mean = sum / selects).
     pub select_len_sum: u64,
+    /// O(queue-length) scan operations performed (`count_matching` and
+    /// filter-based extraction). The steal hot path must keep this at
+    /// zero — asserted by `migrate::protocol` tests.
+    pub scans: u64,
 }
 
 /// A node's ready-task scheduler.
@@ -73,11 +143,17 @@ pub struct SchedStats {
 /// Implementations do their own internal locking (`&self` methods), so
 /// worker threads, the comm thread and the migrate thread can share one
 /// instance without an external mutex — the whole point of the sharded
-/// backend. Filters borrow the task (`&TaskDesc`), so the O(n) stealable
+/// backend. Filters borrow the task (`&TaskDesc`), so the O(n) oracle
 /// census never copies task descriptors.
 pub trait Scheduler: Send + Sync + std::fmt::Debug {
-    /// Enqueue a ready task at `priority`.
-    fn insert(&self, task: TaskDesc, priority: i64);
+    /// Enqueue a ready task at `priority` with its steal accounting
+    /// metadata (see the module docs for the consistency contract).
+    fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta);
+
+    /// Enqueue without explicit metadata: stealable, zero payload.
+    fn insert(&self, task: TaskDesc, priority: i64) {
+        self.insert_meta(task, priority, TaskMeta::default());
+    }
 
     /// Worker-side `select`: the best ready task visible to `worker`
     /// (a shard hint; the central backend ignores it).
@@ -90,12 +166,27 @@ pub trait Scheduler: Send + Sync + std::fmt::Debug {
         self.len() == 0
     }
 
-    /// Count tasks satisfying `filter` (victim-side stealable census).
+    /// Queued tasks whose meta marks them stealable. O(1): maintained
+    /// incrementally on insert/select/extract.
+    fn stealable_count(&self) -> usize;
+
+    /// Total payload bytes of the queued stealable tasks. O(1).
+    fn stealable_payload_bytes(&self) -> u64;
+
+    /// Migrate-thread extraction of up to `max` stealable tasks, lowest
+    /// priority first, via the incremental index — no queue scan. The
+    /// allowance is an upper bound, not a guarantee (§3's best-effort
+    /// extraction).
+    fn extract_stealable(&self, max: usize) -> Vec<TaskDesc>;
+
+    /// Count tasks satisfying `filter` — the O(n) oracle the property
+    /// tests check the incremental accounting against. Bumps
+    /// [`SchedStats::scans`].
     fn count_matching(&self, filter: &dyn Fn(&TaskDesc) -> bool) -> usize;
 
-    /// Migrate-thread extraction: up to `max` tasks satisfying `filter`,
-    /// lowest priority first. The allowance is an upper bound, not a
-    /// guarantee — §3's best-effort extraction.
+    /// Scan-based extraction of up to `max` tasks satisfying `filter`,
+    /// lowest priority first. The oracle twin of
+    /// [`Scheduler::extract_stealable`]; bumps [`SchedStats::scans`].
     fn extract_for_steal(&self, max: usize, filter: &dyn Fn(&TaskDesc) -> bool) -> Vec<TaskDesc>;
 
     /// Peek the highest priority value (scheduling diagnostics).
@@ -202,5 +293,40 @@ mod tests {
             assert!(stolen.iter().all(|s| s.i % 2 == 0));
             assert_eq!(q.len(), 7);
         }
+    }
+
+    #[test]
+    fn accounting_tracks_meta_through_the_trait() {
+        for backend in SchedBackend::ALL {
+            let q = backend.build(2);
+            for i in 0..10u32 {
+                q.insert_meta(
+                    t(i),
+                    i as i64,
+                    TaskMeta {
+                        stealable: i % 2 == 0,
+                        payload_bytes: 100 + i as u64,
+                    },
+                );
+            }
+            assert_eq!(q.stealable_count(), 5, "{backend:?}");
+            // i = 0,2,4,6,8 -> payloads 100,102,104,106,108
+            assert_eq!(q.stealable_payload_bytes(), 520, "{backend:?}");
+            let stolen = q.extract_stealable(3);
+            assert_eq!(stolen.len(), 3, "{backend:?}");
+            assert!(stolen.iter().all(|s| s.i % 2 == 0), "{backend:?}: {stolen:?}");
+            assert_eq!(q.stealable_count(), 2, "{backend:?}");
+            assert_eq!(q.stats().scans, 0, "{backend:?}: accounting path scanned");
+            // The oracle agrees — and is itself counted as a scan.
+            assert_eq!(q.count_matching(&|task| task.i % 2 == 0), 2);
+            assert_eq!(q.stats().scans, 1, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn default_meta_is_stealable_zero_payload() {
+        let m = TaskMeta::default();
+        assert!(m.stealable);
+        assert_eq!(m.payload_bytes, 0);
     }
 }

@@ -1,5 +1,5 @@
 //! The sharded backend: per-worker priority shards + a low-priority
-//! steal pool.
+//! steal pool, with an adaptive spill watermark.
 //!
 //! Khatiri et al. ("Work Stealing with latency") show steal-path latency
 //! dominates when victim-side extraction serializes with execution;
@@ -10,14 +10,30 @@
 //! * **Inserts** spread round-robin across per-worker shards, each its
 //!   own `BTreeMap` behind its own mutex.
 //! * **Workers** `select` from their own shard (priority-then-FIFO),
-//!   fall back to the steal pool, and finally rebalance one task from a
-//!   neighbor shard — so the hot path touches one uncontended lock.
+//!   fall back to the steal pool, and finally rebalance a *batch* — half
+//!   of the richest neighbor shard — into their own shard, so one empty
+//!   worker amortizes the neighbor-lock traffic over many tasks instead
+//!   of paying it once per task.
 //! * **Shards over the spill watermark** shed their lowest-priority task
 //!   into the steal pool on insert: the pool accumulates exactly the
 //!   tasks that would wait longest locally — §3's cheapest to give away.
-//! * **Victims** (`extract_for_steal`) drain the pool, only falling back
-//!   to scanning shards when the pool cannot satisfy the allowance, so a
-//!   steal request normally never blocks a worker `select`.
+//! * **Victims** (`extract_stealable`) drain the pool, only falling back
+//!   to the shards' stealable indices when the pool cannot satisfy the
+//!   allowance, so a steal request normally never blocks a worker
+//!   `select`.
+//!
+//! The spill watermark **adapts to the observed steal-success rate**
+//! (AIMD, clamped to `[WATERMARK_MIN, WATERMARK_MAX]`): an extraction
+//! the pool cannot cover is a steal near-miss, so the watermark drops
+//! multiplicatively (shards spill earlier, feeding thieves); a worker
+//! that has to take work *back* from the pool means spilling was too
+//! eager, so the watermark creeps up additively. [`SPILL_THRESHOLD`] is
+//! the initial value.
+//!
+//! Steal accounting (`stealable_count`/`stealable_payload_bytes`) lives
+//! in atomics maintained on insert/select/extract — an O(1) read for the
+//! victim policy — and each shard keeps a `BTreeSet` index of its
+//! stealable keys so `extract_stealable` never filters a map.
 //!
 //! At most one lock is ever held at a time (a spilled task is popped,
 //! the shard unlocked, then the pool locked), so the backend is
@@ -26,20 +42,70 @@
 //! decremented only when one is handed out, so `is_empty()` never
 //! under-reports — the property Safra-style passivity checks rely on.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::dataflow::task::TaskDesc;
 
-use super::{QKey, SchedStats, Scheduler};
+use super::{QKey, SchedStats, Scheduler, TaskMeta};
 
-/// A shard larger than this sheds its lowest-priority task into the
-/// steal pool on insert (20 ≈ half the paper's 40 workers, the same
-/// constant PaRSEC uses for chunked victim policies).
+/// Initial spill watermark (20 ≈ half the paper's 40 workers, the same
+/// constant PaRSEC uses for chunked victim policies). The live value
+/// adapts per queue — see [`ShardedQueue::watermark`].
 pub const SPILL_THRESHOLD: usize = 20;
 
-type Shard = BTreeMap<QKey, TaskDesc>;
+/// Adaptive watermark floor: below this, shards spill almost everything
+/// and local FIFO order degrades to pool order.
+const WATERMARK_MIN: usize = 4;
+
+/// Adaptive watermark ceiling (8× the initial value): above this a
+/// shard can starve the pool for the entire run.
+const WATERMARK_MAX: usize = 8 * SPILL_THRESHOLD;
+
+/// One priority map plus the index of its stealable keys.
+#[derive(Debug, Default)]
+struct Shard {
+    map: BTreeMap<QKey, (TaskDesc, TaskMeta)>,
+    steal_idx: BTreeSet<QKey>,
+}
+
+impl Shard {
+    fn insert(&mut self, key: QKey, task: TaskDesc, meta: TaskMeta) {
+        if meta.stealable {
+            self.steal_idx.insert(key);
+        }
+        self.map.insert(key, (task, meta));
+    }
+
+    fn pop_last(&mut self) -> Option<(QKey, (TaskDesc, TaskMeta))> {
+        let entry = self.map.pop_last();
+        if let Some((k, _)) = &entry {
+            self.steal_idx.remove(k);
+        }
+        entry
+    }
+
+    fn pop_first(&mut self) -> Option<(QKey, (TaskDesc, TaskMeta))> {
+        let entry = self.map.pop_first();
+        if let Some((k, _)) = &entry {
+            self.steal_idx.remove(k);
+        }
+        entry
+    }
+
+    fn remove(&mut self, key: QKey) -> Option<(TaskDesc, TaskMeta)> {
+        let entry = self.map.remove(&key);
+        if entry.is_some() {
+            self.steal_idx.remove(&key);
+        }
+        entry
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
 
 /// Per-worker sharded ready queue with a low-priority steal pool.
 #[derive(Debug)]
@@ -54,10 +120,19 @@ pub struct ShardedQueue {
     /// Tasks currently queued (shards + pool). See module doc for the
     /// visibility contract.
     count: AtomicUsize,
+    /// Queued stealable tasks (same visibility contract as `count`).
+    stealable_cnt: AtomicUsize,
+    /// Payload bytes of the queued stealable tasks.
+    stealable_bytes: AtomicU64,
+    /// Adaptive spill watermark (see module docs).
+    watermark: AtomicUsize,
     inserts: AtomicU64,
     selects: AtomicU64,
     steal_extracted: AtomicU64,
     select_len_sum: AtomicU64,
+    scans: AtomicU64,
+    /// Shard-empty batch rebalances performed (diagnostics).
+    rebalances: AtomicU64,
 }
 
 impl ShardedQueue {
@@ -65,15 +140,20 @@ impl ShardedQueue {
     pub fn new(workers: usize) -> Self {
         let n = workers.max(1);
         ShardedQueue {
-            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
-            pool: Mutex::new(Shard::new()),
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            pool: Mutex::new(Shard::default()),
             seq: AtomicU64::new(0),
             rr: AtomicU64::new(0),
             count: AtomicUsize::new(0),
+            stealable_cnt: AtomicUsize::new(0),
+            stealable_bytes: AtomicU64::new(0),
+            watermark: AtomicUsize::new(SPILL_THRESHOLD),
             inserts: AtomicU64::new(0),
             selects: AtomicU64::new(0),
             steal_extracted: AtomicU64::new(0),
             select_len_sum: AtomicU64::new(0),
+            scans: AtomicU64::new(0),
+            rebalances: AtomicU64::new(0),
         }
     }
 
@@ -86,6 +166,16 @@ impl ShardedQueue {
         self.pool.lock().unwrap().len()
     }
 
+    /// Current adaptive spill watermark.
+    pub fn watermark(&self) -> usize {
+        self.watermark.load(Ordering::Relaxed)
+    }
+
+    /// Batch rebalances performed by empty workers (diagnostics).
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances.load(Ordering::Relaxed)
+    }
+
     pub fn len(&self) -> usize {
         self.count.load(Ordering::SeqCst)
     }
@@ -94,12 +184,43 @@ impl ShardedQueue {
         self.len() == 0
     }
 
+    pub fn stealable_count(&self) -> usize {
+        self.stealable_cnt.load(Ordering::SeqCst)
+    }
+
+    pub fn stealable_payload_bytes(&self) -> u64 {
+        self.stealable_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Additive raise: a worker had to take work back from the pool, so
+    /// spilling was too eager.
+    fn raise_watermark(&self) {
+        let w = self.watermark.load(Ordering::Relaxed);
+        if w < WATERMARK_MAX {
+            self.watermark.store(w + 1, Ordering::Relaxed);
+        }
+    }
+
+    /// Multiplicative lower: a steal request found the pool short, so
+    /// shards should spill earlier (AIMD keeps the two pressures from
+    /// oscillating).
+    fn lower_watermark(&self) {
+        let w = self.watermark.load(Ordering::Relaxed);
+        let next = w.saturating_sub(1 + w / 8).max(WATERMARK_MIN);
+        self.watermark.store(next, Ordering::Relaxed);
+    }
+
     pub fn insert(&self, task: TaskDesc, priority: i64) {
+        self.insert_meta(task, priority, TaskMeta::default());
+    }
+
+    pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
         // `seq`/`rr`/stat counters only need uniqueness, not ordering
         // guarantees (a thread's own RMWs on one atomic stay in program
         // order), so Relaxed keeps them off the coherence hot path.
-        // `count` is the exception: it SeqCst-pairs with the threaded
-        // runtime's parked-worker protocol and Safra passivity checks.
+        // `count`/`stealable_cnt` are the exception: they SeqCst-pair
+        // with the threaded runtime's parked-worker protocol and Safra
+        // passivity checks.
         let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
         let key = QKey {
             prio: priority,
@@ -108,88 +229,224 @@ impl ShardedQueue {
         // Count up BEFORE the task becomes selectable: a concurrent
         // passivity check must never see empty while a task exists.
         self.count.fetch_add(1, Ordering::SeqCst);
+        if meta.stealable {
+            self.stealable_cnt.fetch_add(1, Ordering::SeqCst);
+            self.stealable_bytes
+                .fetch_add(meta.payload_bytes, Ordering::Relaxed);
+        }
         self.inserts.fetch_add(1, Ordering::Relaxed);
         let shard_ix =
             (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
+        let watermark = self.watermark.load(Ordering::Relaxed);
         let spilled = {
             let mut shard = self.shards[shard_ix].lock().unwrap();
-            shard.insert(key, task);
-            if shard.len() > SPILL_THRESHOLD {
+            shard.insert(key, task, meta);
+            if shard.len() > watermark {
                 shard.pop_first()
             } else {
                 None
             }
         };
-        if let Some((k, t)) = spilled {
-            self.pool.lock().unwrap().insert(k, t);
+        if let Some((k, (t, m))) = spilled {
+            self.pool.lock().unwrap().insert(k, t, m);
         }
     }
 
-    fn book_select(&self) {
+    /// Book the removal of one selected task (and its steal accounting).
+    fn book_select(&self, meta: TaskMeta) {
         self.selects.fetch_add(1, Ordering::Relaxed);
         let remaining = self.count.fetch_sub(1, Ordering::SeqCst) - 1;
         self.select_len_sum
             .fetch_add(remaining as u64, Ordering::Relaxed);
+        if meta.stealable {
+            self.stealable_cnt.fetch_sub(1, Ordering::SeqCst);
+            self.stealable_bytes
+                .fetch_sub(meta.payload_bytes, Ordering::Relaxed);
+        }
     }
 
     /// Worker-side `select` for worker `worker`: own shard first
-    /// (priority-then-FIFO), then the steal pool, then one task
-    /// rebalanced from the first non-empty neighbor shard.
+    /// (priority-then-FIFO), then the steal pool, then a half-shard
+    /// batch rebalanced from the richest neighbor.
     pub fn select(&self, worker: usize) -> Option<TaskDesc> {
         let n = self.shards.len();
         let own = worker % n;
-        if let Some((_, t)) = self.shards[own].lock().unwrap().pop_last() {
-            self.book_select();
+        if let Some((_, (t, m))) = self.shards[own].lock().unwrap().pop_last() {
+            self.book_select(m);
             return Some(t);
         }
-        if let Some((_, t)) = self.pool.lock().unwrap().pop_last() {
-            self.book_select();
+        if let Some((_, (t, m))) = self.pool.lock().unwrap().pop_last() {
+            // A local worker reclaiming pooled work: spill was too
+            // eager — nudge the watermark up.
+            self.raise_watermark();
+            self.book_select(m);
             return Some(t);
         }
+        // Own shard and pool empty: batch-rebalance half of the richest
+        // neighbor shard instead of one task per visit, so the next
+        // selects stay on the own-shard fast path.
+        let mut richest: Option<(usize, usize)> = None; // (len, ix)
         for offset in 1..n {
             let ix = (own + offset) % n;
-            if let Some((_, t)) = self.shards[ix].lock().unwrap().pop_last() {
-                self.book_select();
+            let len = self.shards[ix].lock().unwrap().len();
+            if len > richest.map_or(0, |(l, _)| l) {
+                richest = Some((len, ix));
+            }
+        }
+        if let Some((_, ix)) = richest {
+            let batch = {
+                let mut donor = self.shards[ix].lock().unwrap();
+                let take = donor.len().div_ceil(2);
+                let mut batch = Vec::with_capacity(take);
+                for _ in 0..take {
+                    match donor.pop_last() {
+                        Some(entry) => batch.push(entry),
+                        None => break,
+                    }
+                }
+                batch
+            };
+            // First popped = highest priority: hand it to the caller,
+            // keep the rest locally (keys preserved, so priority/FIFO
+            // order is unchanged).
+            let mut entries = batch.into_iter();
+            if let Some((_, (t, m))) = entries.next() {
+                {
+                    let mut own_shard = self.shards[own].lock().unwrap();
+                    for (k, (task, meta)) in entries {
+                        own_shard.insert(k, task, meta);
+                    }
+                }
+                self.rebalances.fetch_add(1, Ordering::Relaxed);
+                self.book_select(m);
+                return Some(t);
+            }
+        }
+        // Races can empty the richest shard between the census and the
+        // take; last resort is the old one-task neighbor walk.
+        for offset in 1..n {
+            let ix = (own + offset) % n;
+            if let Some((_, (t, m))) = self.shards[ix].lock().unwrap().pop_last() {
+                self.book_select(m);
                 return Some(t);
             }
         }
         None
     }
 
+    /// Book the removal of `taken` extracted tasks carrying `payload`
+    /// stealable bytes.
+    fn book_extract(&self, taken: usize, payload: u64) {
+        self.steal_extracted.fetch_add(taken as u64, Ordering::Relaxed);
+        self.count.fetch_sub(taken, Ordering::SeqCst);
+        self.stealable_cnt.fetch_sub(taken, Ordering::SeqCst);
+        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
+    }
+
+    /// Victim-side extraction via the stealable indices: drain the pool
+    /// (lowest priority first); only when the pool cannot satisfy the
+    /// allowance does the walk visit the shards' indices — and that
+    /// near-miss lowers the spill watermark so the next request finds a
+    /// fuller pool.
+    pub fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let had_stealable = self.stealable_cnt.load(Ordering::SeqCst) > 0;
+        let mut out = Vec::new();
+        let mut payload = 0u64;
+        {
+            let mut pool = self.pool.lock().unwrap();
+            let keys: Vec<QKey> = pool.steal_idx.iter().take(max).copied().collect();
+            for k in keys {
+                if let Some((t, m)) = pool.remove(k) {
+                    payload += m.payload_bytes;
+                    out.push(t);
+                }
+            }
+        }
+        if out.len() < max {
+            if had_stealable {
+                self.lower_watermark();
+            }
+            // Fallback honors the same contract as the central backend:
+            // globally lowest priority first, not shard order. Snapshot
+            // the stealable indices one lock at a time, sort, then
+            // remove smallest-first (best-effort: a worker may race a
+            // key away between snapshot and removal — skip it).
+            let mut candidates: Vec<(QKey, usize)> = Vec::new();
+            for (ix, shard) in self.shards.iter().enumerate() {
+                let guard = shard.lock().unwrap();
+                candidates.extend(guard.steal_idx.iter().map(|k| (*k, ix)));
+            }
+            candidates.sort_unstable();
+            for (key, ix) in candidates {
+                if out.len() >= max {
+                    break;
+                }
+                if let Some((t, m)) = self.shards[ix].lock().unwrap().remove(key) {
+                    payload += m.payload_bytes;
+                    out.push(t);
+                }
+            }
+        }
+        self.book_extract(out.len(), payload);
+        out
+    }
+
     pub fn count_matching(&self, filter: impl Fn(&TaskDesc) -> bool) -> usize {
-        let mut n = self.pool.lock().unwrap().values().filter(|t| filter(t)).count();
+        self.scans.fetch_add(1, Ordering::Relaxed);
+        let mut n = self
+            .pool
+            .lock()
+            .unwrap()
+            .map
+            .values()
+            .filter(|(t, _)| filter(t))
+            .count();
         for shard in &self.shards {
-            n += shard.lock().unwrap().values().filter(|t| filter(t)).count();
+            n += shard
+                .lock()
+                .unwrap()
+                .map
+                .values()
+                .filter(|(t, _)| filter(t))
+                .count();
         }
         n
     }
 
-    /// Remove up to `max` matching tasks from one locked map, lowest
+    /// Remove up to `max` matching tasks from one locked shard, lowest
     /// priority first, appending to `out`.
     fn extract_from(
-        map: &mut Shard,
+        shard: &mut Shard,
         max: usize,
         filter: &dyn Fn(&TaskDesc) -> bool,
         out: &mut Vec<TaskDesc>,
+        payload: &mut u64,
     ) {
         if out.len() >= max {
             return;
         }
-        let keys: Vec<QKey> = map
+        let keys: Vec<QKey> = shard
+            .map
             .iter()
-            .filter(|(_, t)| filter(t))
+            .filter(|(_, (t, _))| filter(t))
             .take(max - out.len())
             .map(|(k, _)| *k)
             .collect();
         for k in keys {
-            out.push(map.remove(&k).expect("key vanished"));
+            let (t, m) = shard.remove(k).expect("key vanished");
+            if m.stealable {
+                *payload += m.payload_bytes;
+            }
+            out.push(t);
         }
     }
 
-    /// Victim-side extraction: drain the steal pool (lowest priority
-    /// first); only when the pool cannot satisfy the allowance does the
-    /// scan fall back to the shards — the contended path is the
-    /// exception, not the rule.
+    /// Scan-based extraction (the O(n) oracle): up to `max` tasks
+    /// satisfying `filter`, pool first, then globally lowest priority
+    /// across the shards.
     pub fn extract_for_steal(
         &self,
         max: usize,
@@ -198,32 +455,49 @@ impl ShardedQueue {
         if max == 0 {
             return Vec::new();
         }
+        self.scans.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::new();
-        Self::extract_from(&mut self.pool.lock().unwrap(), max, &filter, &mut out);
+        let mut payload = 0u64;
+        let mut stealable_removed = 0usize;
+        let before_pool = {
+            let mut pool = self.pool.lock().unwrap();
+            let idx_before = pool.steal_idx.len();
+            Self::extract_from(&mut pool, max, &filter, &mut out, &mut payload);
+            idx_before - pool.steal_idx.len()
+        };
+        stealable_removed += before_pool;
         if out.len() < max {
-            // Fallback must honor the same contract as the central
-            // backend: globally lowest priority first, not shard order.
-            // Snapshot matching keys one lock at a time, sort, then
-            // remove smallest-first (best-effort: a worker may race a
-            // key away between snapshot and removal — skip it).
             let mut candidates: Vec<(QKey, usize)> = Vec::new();
             for (ix, shard) in self.shards.iter().enumerate() {
                 let guard = shard.lock().unwrap();
-                candidates.extend(guard.iter().filter(|(_, t)| filter(t)).map(|(k, _)| (*k, ix)));
+                candidates.extend(
+                    guard
+                        .map
+                        .iter()
+                        .filter(|(_, (t, _))| filter(t))
+                        .map(|(k, _)| (*k, ix)),
+                );
             }
             candidates.sort_unstable();
             for (key, ix) in candidates {
                 if out.len() >= max {
                     break;
                 }
-                if let Some(task) = self.shards[ix].lock().unwrap().remove(&key) {
-                    out.push(task);
+                if let Some((t, m)) = self.shards[ix].lock().unwrap().remove(key) {
+                    if m.stealable {
+                        payload += m.payload_bytes;
+                        stealable_removed += 1;
+                    }
+                    out.push(t);
                 }
             }
         }
         self.steal_extracted
             .fetch_add(out.len() as u64, Ordering::Relaxed);
         self.count.fetch_sub(out.len(), Ordering::SeqCst);
+        self.stealable_cnt
+            .fetch_sub(stealable_removed, Ordering::SeqCst);
+        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
         out
     }
 
@@ -232,10 +506,11 @@ impl ShardedQueue {
             .pool
             .lock()
             .unwrap()
+            .map
             .last_key_value()
             .map(|(k, _)| k.prio);
         for shard in &self.shards {
-            if let Some((k, _)) = shard.lock().unwrap().last_key_value() {
+            if let Some((k, _)) = shard.lock().unwrap().map.last_key_value() {
                 best = Some(best.map_or(k.prio, |b| b.max(k.prio)));
             }
         }
@@ -248,6 +523,7 @@ impl ShardedQueue {
             selects: self.selects.load(Ordering::Relaxed),
             steal_extracted: self.steal_extracted.load(Ordering::Relaxed),
             select_len_sum: self.select_len_sum.load(Ordering::Relaxed),
+            scans: self.scans.load(Ordering::Relaxed),
         }
     }
 
@@ -256,22 +532,34 @@ impl ShardedQueue {
     /// once the node is quiescent.
     pub fn drain(&self) -> Vec<TaskDesc> {
         let mut out = Vec::new();
+        let mut stealable_removed = 0usize;
+        let mut payload = 0u64;
+        let mut clear = |shard: &mut Shard| {
+            for (t, m) in shard.map.values() {
+                if m.stealable {
+                    stealable_removed += 1;
+                    payload += m.payload_bytes;
+                }
+                out.push(*t);
+            }
+            shard.map.clear();
+            shard.steal_idx.clear();
+        };
         for shard in &self.shards {
-            let mut s = shard.lock().unwrap();
-            out.extend(s.values().copied());
-            s.clear();
+            clear(&mut shard.lock().unwrap());
         }
-        let mut p = self.pool.lock().unwrap();
-        out.extend(p.values().copied());
-        p.clear();
+        clear(&mut self.pool.lock().unwrap());
         self.count.fetch_sub(out.len(), Ordering::SeqCst);
+        self.stealable_cnt
+            .fetch_sub(stealable_removed, Ordering::SeqCst);
+        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
         out
     }
 }
 
 impl Scheduler for ShardedQueue {
-    fn insert(&self, task: TaskDesc, priority: i64) {
-        ShardedQueue::insert(self, task, priority)
+    fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
+        ShardedQueue::insert_meta(self, task, priority, meta)
     }
 
     fn select(&self, worker: usize) -> Option<TaskDesc> {
@@ -280,6 +568,18 @@ impl Scheduler for ShardedQueue {
 
     fn len(&self) -> usize {
         ShardedQueue::len(self)
+    }
+
+    fn stealable_count(&self) -> usize {
+        ShardedQueue::stealable_count(self)
+    }
+
+    fn stealable_payload_bytes(&self) -> u64 {
+        ShardedQueue::stealable_payload_bytes(self)
+    }
+
+    fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
+        ShardedQueue::extract_stealable(self, max)
     }
 
     fn count_matching(&self, filter: &dyn Fn(&TaskDesc) -> bool) -> usize {
@@ -337,14 +637,38 @@ mod tests {
         // worker 0's shard got tasks 0 and 4 (round-robin), FIFO order.
         assert_eq!(q.select(0), Some(t(0)));
         assert_eq!(q.select(0), Some(t(4)));
-        // own shard empty, pool empty -> rebalance from neighbors.
+        // own shard empty, pool empty -> batch rebalance from neighbors.
         assert!(q.select(0).is_some());
+        assert!(q.rebalances() >= 1, "empty worker took a batch");
         let mut drained = 3;
         while q.select(0).is_some() {
             drained += 1;
         }
         assert_eq!(drained, 8, "every task reachable from one worker");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn rebalance_takes_half_the_richest_neighbor() {
+        let q = ShardedQueue::new(2);
+        // Round-robin: evens land in shard 0, odds in shard 1.
+        for i in 0..12 {
+            q.insert(t(i), i as i64);
+        }
+        // Drain worker 0's own shard (6 tasks).
+        for _ in 0..6 {
+            assert!(q.select(0).is_some());
+        }
+        // Next select: shard 1 has 6 tasks; worker 0 takes a batch of 3
+        // (half), returns the best, keeps 2 in its own shard.
+        assert_eq!(q.select(0), Some(t(11)), "highest-priority of the batch");
+        assert_eq!(q.rebalances(), 1);
+        // The two kept tasks now serve worker 0 without touching shard 1.
+        assert_eq!(q.select(0), Some(t(9)));
+        assert_eq!(q.select(0), Some(t(7)));
+        // Shard 1 still holds its un-rebalanced half for worker 1.
+        assert_eq!(q.select(1), Some(t(5)));
+        assert_eq!(q.rebalances(), 1, "no extra rebalance needed");
     }
 
     #[test]
@@ -380,6 +704,72 @@ mod tests {
     }
 
     #[test]
+    fn extract_stealable_matches_filter_path() {
+        let q = ShardedQueue::new(2);
+        for i in 0..10u32 {
+            q.insert_meta(
+                t(i),
+                i as i64,
+                TaskMeta {
+                    stealable: i % 2 == 0,
+                    payload_bytes: 8,
+                },
+            );
+        }
+        assert_eq!(q.stealable_count(), 5);
+        assert_eq!(q.stealable_payload_bytes(), 40);
+        let stolen = q.extract_stealable(3);
+        assert_eq!(stolen, vec![t(0), t(2), t(4)], "lowest-priority stealable");
+        assert_eq!(q.stealable_count(), 2);
+        assert_eq!(q.stealable_payload_bytes(), 16);
+        assert_eq!(q.stats().scans, 0, "index path never scans");
+        assert_eq!(q.len(), 7);
+    }
+
+    #[test]
+    fn watermark_adapts_both_ways() {
+        let q = ShardedQueue::new(1);
+        assert_eq!(q.watermark(), SPILL_THRESHOLD);
+        // Steal requests that the pool cannot cover drive it down...
+        q.insert(t(0), 0);
+        for _ in 0..50 {
+            let _ = q.extract_stealable(2); // pool always short
+            q.insert(t(0), 0); // keep one stealable task around
+        }
+        assert_eq!(q.watermark(), WATERMARK_MIN, "misses floor the watermark");
+        // ...and workers reclaiming pooled tasks push it back up: with
+        // the watermark at the floor, inserts beyond it spill, and a
+        // draining worker must take them back from the pool.
+        for i in 0..(WATERMARK_MIN as u32 + 40) {
+            q.insert(t(i), i as i64);
+        }
+        let mut taken = 0;
+        while q.select(0).is_some() {
+            taken += 1;
+        }
+        assert!(taken > 40, "drained everything");
+        assert!(
+            q.watermark() > WATERMARK_MIN,
+            "pool reclaims raised the watermark to {}",
+            q.watermark()
+        );
+        assert!(q.watermark() <= WATERMARK_MAX);
+    }
+
+    #[test]
+    fn empty_queue_steal_does_not_adapt() {
+        let q = ShardedQueue::new(2);
+        for _ in 0..20 {
+            assert!(q.extract_stealable(4).is_empty());
+        }
+        assert_eq!(
+            q.watermark(),
+            SPILL_THRESHOLD,
+            "nothing stealable -> no adaptation signal"
+        );
+    }
+
+    #[test]
     fn pool_tasks_are_selectable_when_shards_empty() {
         let q = ShardedQueue::new(1);
         for i in 0..(SPILL_THRESHOLD as u32 + 3) {
@@ -412,6 +802,8 @@ mod tests {
         assert_eq!(s.selects, selected);
         assert_eq!(stolen.len() as u64 + selected, 30, "conservation");
         assert!(q.is_empty());
+        assert_eq!(q.stealable_count(), 0);
+        assert_eq!(q.stealable_payload_bytes(), 0);
     }
 
     #[test]
@@ -445,7 +837,7 @@ mod tests {
             let q = q.clone();
             let taken = taken.clone();
             handles.push(std::thread::spawn(move || loop {
-                let got = q.extract_for_steal(8, &|_| true);
+                let got = q.extract_stealable(8);
                 if got.is_empty() {
                     break;
                 }
@@ -457,5 +849,7 @@ mod tests {
         }
         assert_eq!(taken.load(Ordering::SeqCst), total as usize);
         assert!(q.is_empty());
+        assert_eq!(q.stealable_count(), 0);
+        assert_eq!(q.stealable_payload_bytes(), 0);
     }
 }

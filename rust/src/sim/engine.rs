@@ -22,7 +22,7 @@ use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BinaryHeap, HashSet};
 use std::sync::Arc;
 
-use crate::comm::LinkModel;
+use crate::comm::{LinkModel, Msg};
 use crate::dataflow::task::{NodeId, TaskDesc};
 use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
@@ -30,10 +30,21 @@ use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
     is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
 };
-use crate::sched::{SchedBackend, Scheduler};
+use crate::sched::{SchedBackend, Scheduler, TaskMeta};
 use crate::util::rng::Rng;
 
 use super::cost::CostModel;
+
+/// Successors of `task` that will activate locally on `node_id` — the
+/// increment the incremental starvation view maintains per execution.
+fn local_successor_count(graph: &dyn TaskGraph, node_id: NodeId, task: TaskDesc) -> usize {
+    let dynamic = graph.dynamic_placement();
+    graph
+        .successors(task)
+        .into_iter()
+        .filter(|s| dynamic || graph.owner(*s) == node_id)
+        .count()
+}
 
 /// Simulator knobs (cluster geometry and wire model).
 #[derive(Clone, Copy, Debug)]
@@ -52,6 +63,10 @@ pub struct SimConfig {
     /// is single-threaded, so both are deterministic given the seed;
     /// sharded reproduces the sharded *ordering* semantics.
     pub sched: SchedBackend,
+    /// Coalesce same-destination successor activations into one
+    /// `Deliver` event (`--batch-activations`; off reproduces the
+    /// per-edge protocol for ablations).
+    pub batch_activations: bool,
 }
 
 impl Default for SimConfig {
@@ -63,6 +78,7 @@ impl Default for SimConfig {
             max_events: u64::MAX,
             record_polls: true,
             sched: SchedBackend::Central,
+            batch_activations: true,
         }
     }
 }
@@ -70,6 +86,9 @@ impl Default for SimConfig {
 #[derive(Clone, Debug)]
 enum SimMsg {
     Activate(TaskDesc),
+    /// Coalesced activations from one completion to one destination —
+    /// the DES mirror of `comm::Msg::ActivateBatch`.
+    ActivateBatch(Vec<TaskDesc>),
     StealRequest { thief: NodeId },
     StealReply { tasks: Vec<TaskDesc> },
 }
@@ -126,6 +145,10 @@ struct SimNode {
     next_worker: usize,
     tracker: ActivationTracker,
     executing: HashSet<TaskDesc>,
+    /// Local successors of currently-executing tasks, maintained
+    /// incrementally (see `node::cluster`): the thief-side poll reads a
+    /// counter instead of walking `executing`.
+    executing_local_succ: usize,
     idle_workers: usize,
     tasks_done: u64,
     exec_sum_us: f64,
@@ -150,6 +173,9 @@ pub struct Simulator {
     now_us: f64,
     rng: Rng,
     events_processed: u64,
+    /// Deliver (wire message) events processed — the quantity activation
+    /// batching exists to shrink.
+    deliver_events: u64,
     /// Activation messages currently on the wire.
     activate_in_flight: u64,
     /// Stolen tasks currently on the wire (inside StealReply messages).
@@ -179,6 +205,7 @@ impl Simulator {
                 next_worker: 0,
                 tracker: ActivationTracker::new(),
                 executing: HashSet::new(),
+                executing_local_succ: 0,
                 idle_workers: cfg.workers_per_node,
                 tasks_done: 0,
                 exec_sum_us: 0.0,
@@ -202,6 +229,7 @@ impl Simulator {
             seq: 0,
             now_us: 0.0,
             events_processed: 0,
+            deliver_events: 0,
             activate_in_flight: 0,
             tasks_in_transit: 0,
         }
@@ -261,6 +289,7 @@ impl Simulator {
             }
             node.idle_workers -= 1;
             node.executing.insert(task);
+            node.executing_local_succ += local_successor_count(self.graph.as_ref(), node_id, task);
             let base = self
                 .cost
                 .exec_us(task.class, self.tile_size, self.graph.work_units(task));
@@ -285,29 +314,45 @@ impl Simulator {
         let graph = self.graph.clone();
         let node = &mut self.nodes[node_id.idx()];
         if node.tracker.activate(graph.as_ref(), task) {
-            node.queue.insert(task, graph.priority(task));
+            node.queue
+                .insert_meta(task, graph.priority(task), TaskMeta::of(graph.as_ref(), task));
             self.dispatch(node_id);
         }
     }
 
     fn on_finish(&mut self, node_id: NodeId, task: TaskDesc, started_us: f64) {
         let dur = self.now_us - started_us;
+        let succs = self.graph.successors(task);
+        let dynamic = self.graph.dynamic_placement();
+        // Same filter as local_successor_count, over the vec we already
+        // hold — successors() (RNG work for UTS) runs once per finish.
+        let local_succ = succs
+            .iter()
+            .filter(|s| dynamic || self.graph.owner(**s) == node_id)
+            .count();
         {
             let node = &mut self.nodes[node_id.idx()];
             node.executing.remove(&task);
+            node.executing_local_succ -= local_succ;
             node.idle_workers += 1;
             node.tasks_done += 1;
             node.exec_sum_us += dur;
             node.busy_us += dur;
         }
-        let succs = self.graph.successors(task);
-        let dynamic = self.graph.dynamic_placement();
+        // Remote successors sharing a destination coalesce into one
+        // Deliver event — the DES mirror of the ActivateBatch message.
+        let mut remote: Vec<(NodeId, Vec<TaskDesc>)> = Vec::new();
         for s in succs {
             let dest = if dynamic { node_id } else { self.graph.owner(s) };
             if dest == node_id {
                 self.activate_at(node_id, s);
+            } else if self.cfg.batch_activations {
+                match remote.iter_mut().find(|(d, _)| *d == dest) {
+                    Some((_, bucket)) => bucket.push(s),
+                    None => remote.push((dest, vec![s])),
+                }
             } else {
-                let wire = self.cfg.link.transfer_us(32);
+                let wire = self.cfg.link.transfer_us(Msg::activation_wire_bytes(1));
                 self.activate_in_flight += 1;
                 self.push_event(
                     self.now_us + wire,
@@ -317,6 +362,19 @@ impl Simulator {
                     },
                 );
             }
+        }
+        for (dest, tasks) in remote {
+            let wire = self
+                .cfg
+                .link
+                .transfer_us(Msg::activation_wire_bytes(tasks.len()));
+            self.activate_in_flight += 1;
+            let msg = if tasks.len() == 1 {
+                SimMsg::Activate(tasks[0])
+            } else {
+                SimMsg::ActivateBatch(tasks)
+            };
+            self.push_event(self.now_us + wire, EventKind::Deliver { dst: dest, msg });
         }
         self.dispatch(node_id);
         self.ensure_poll(node_id);
@@ -338,21 +396,6 @@ impl Simulator {
         );
     }
 
-    fn local_successors_of_executing(&self, node_id: NodeId) -> usize {
-        let node = &self.nodes[node_id.idx()];
-        let dynamic = self.graph.dynamic_placement();
-        node.executing
-            .iter()
-            .map(|t| {
-                self.graph
-                    .successors(*t)
-                    .into_iter()
-                    .filter(|s| dynamic || self.graph.owner(*s) == node_id)
-                    .count()
-            })
-            .sum()
-    }
-
     fn on_poll(&mut self, node_id: NodeId) {
         {
             let node = &mut self.nodes[node_id.idx()];
@@ -361,12 +404,14 @@ impl Simulator {
         if !self.migrate.enabled || self.work_done() {
             return;
         }
+        // O(1) counter reads — the poll never walks the queue or the
+        // executing set (mirrors the threaded migrate thread).
         let view = StarvationView {
             ready: self.nodes[node_id.idx()].queue.len(),
             executing_local_successors: match self.migrate.thief {
                 crate::migrate::ThiefPolicy::ReadyOnly => 0,
                 crate::migrate::ThiefPolicy::ReadySuccessors => {
-                    self.local_successors_of_executing(node_id)
+                    self.nodes[node_id.idx()].executing_local_succ
                 }
             },
         };
@@ -466,7 +511,8 @@ impl Simulator {
                     });
                 }
                 // Recreate the task (same uid) at the thief.
-                node.queue.insert(*t, graph.priority(*t));
+                node.queue
+                    .insert_meta(*t, graph.priority(*t), TaskMeta::of(graph.as_ref(), *t));
             }
         }
         if !tasks.is_empty() {
@@ -480,9 +526,10 @@ impl Simulator {
         // Seed roots.
         for root in self.graph.roots() {
             let owner = self.graph.owner(root);
+            let meta = TaskMeta::of(self.graph.as_ref(), root);
             let node = &mut self.nodes[owner.idx()];
             node.tracker.mark_root(root);
-            node.queue.insert(root, self.graph.priority(root));
+            node.queue.insert_meta(root, self.graph.priority(root), meta);
         }
         let node_count = self.nodes.len();
         for i in 0..node_count {
@@ -509,14 +556,23 @@ impl Simulator {
                     makespan = makespan.max(self.now_us);
                     self.on_finish(node, task, started_us);
                 }
-                EventKind::Deliver { dst, msg } => match msg {
-                    SimMsg::Activate(t) => {
-                        self.activate_in_flight -= 1;
-                        self.activate_at(dst, t)
+                EventKind::Deliver { dst, msg } => {
+                    self.deliver_events += 1;
+                    match msg {
+                        SimMsg::Activate(t) => {
+                            self.activate_in_flight -= 1;
+                            self.activate_at(dst, t)
+                        }
+                        SimMsg::ActivateBatch(tasks) => {
+                            self.activate_in_flight -= 1;
+                            for t in tasks {
+                                self.activate_at(dst, t);
+                            }
+                        }
+                        SimMsg::StealRequest { thief } => self.on_steal_request(dst, thief),
+                        SimMsg::StealReply { tasks } => self.on_steal_reply(dst, tasks),
                     }
-                    SimMsg::StealRequest { thief } => self.on_steal_request(dst, thief),
-                    SimMsg::StealReply { tasks } => self.on_steal_reply(dst, tasks),
-                },
+                }
                 EventKind::Poll { node } => self.on_poll(node),
             }
         }
@@ -541,6 +597,7 @@ impl Simulator {
             workers_per_node: self.cfg.workers_per_node,
             link: self.cfg.link,
             events: self.events_processed,
+            deliver_events: self.deliver_events,
             nodes: self
                 .nodes
                 .into_iter()
@@ -602,6 +659,7 @@ mod tests {
                 max_events: 50_000_000,
                 record_polls: true,
                 sched,
+                batch_activations: true,
             },
             CostModel::default_calibrated(),
             migrate,

@@ -1,0 +1,136 @@
+//! A small multiply-rotate hasher for the `TaskDesc` hot paths.
+//!
+//! The std `HashMap` defaults to SipHash-1-3, which is DoS-resistant but
+//! costs ~1ns per word of keying and finalization — measurable on the
+//! activation path, where every task completion touches the tracker map
+//! once per successor edge. Task descriptors are small fixed-size keys
+//! produced by the runtime itself (never attacker-controlled), so the
+//! collision-resistance of a keyed hash buys nothing here. This is the
+//! FxHash construction Firefox and rustc use: fold each word into the
+//! state with a rotate + xor + odd-constant multiply.
+//!
+//! No new crate dependency: `anyhow` stays the only external dep.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Knuth-style odd multiplier (2^64 / golden ratio, forced odd).
+const SEED: u64 = 0x517c_c1b7_2722_0a95;
+const ROTATE: u32 = 5;
+
+/// Word-at-a-time multiplicative hasher (not keyed — do not expose to
+/// untrusted inputs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn fold(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(ROTATE) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.fold(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.fold(n as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.fold(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.fold(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.fold(n);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, n: u128) {
+        self.fold(n as u64);
+        self.fold((n >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.fold(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` keyed by [`FxHasher`] (drop-in via `FxHashMap::default()`).
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` keyed by [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::task::{TaskClass, TaskDesc};
+    use std::hash::{BuildHasher, Hash};
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        FxBuildHasher::default().hash_one(v)
+    }
+
+    #[test]
+    fn deterministic_and_discriminating() {
+        let a = TaskDesc::indexed(TaskClass::Gemm, 1, 2, 3);
+        let b = TaskDesc::indexed(TaskClass::Gemm, 1, 2, 4);
+        assert_eq!(hash_of(&a), hash_of(&a));
+        assert_ne!(hash_of(&a), hash_of(&b));
+        assert_ne!(hash_of(&0u64), hash_of(&1u64));
+    }
+
+    #[test]
+    fn map_and_set_round_trip() {
+        let mut m: FxHashMap<TaskDesc, u32> = FxHashMap::default();
+        let mut s: FxHashSet<TaskDesc> = FxHashSet::default();
+        for i in 0..500 {
+            let t = TaskDesc::indexed(TaskClass::Trsm, i, i / 3, 0);
+            m.insert(t, i);
+            s.insert(t);
+        }
+        assert_eq!(m.len(), 500);
+        for i in 0..500 {
+            let t = TaskDesc::indexed(TaskClass::Trsm, i, i / 3, 0);
+            assert_eq!(m.get(&t), Some(&i));
+            assert!(s.contains(&t));
+        }
+    }
+
+    #[test]
+    fn spreads_sequential_keys() {
+        // Sequential uids must not collapse into a few buckets: count
+        // distinct top-bytes across 4k sequential keys.
+        let mut tops: FxHashSet<u8> = FxHashSet::default();
+        for i in 0..4096u64 {
+            tops.insert((hash_of(&i) >> 56) as u8);
+        }
+        assert!(tops.len() > 200, "only {} distinct top bytes", tops.len());
+    }
+}

@@ -11,10 +11,13 @@
 //! * [`cli`] — flag parsing for the `repro` launcher,
 //! * [`bench`] — the micro-benchmark harness used by `cargo bench`,
 //! * [`prop`] — a tiny property-testing driver (random cases + shrinking
-//!   by case minimization) used by the invariant tests.
+//!   by case minimization) used by the invariant tests,
+//! * [`hash`] — a fast unkeyed hasher (FxHash construction) for the
+//!   `TaskDesc`-keyed maps on the activation hot path.
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

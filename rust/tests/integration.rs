@@ -37,6 +37,7 @@ fn sim_and_real_agree_on_static_distribution() {
             max_events: u64::MAX,
             record_polls: false,
             sched: SchedBackend::Central,
+            batch_activations: true,
         },
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
@@ -52,6 +53,7 @@ fn sim_and_real_agree_on_static_distribution() {
             seed: 4,
             record_polls: false,
             sched: SchedBackend::Central,
+            batch_activations: true,
         },
         Arc::new(NullExecutor),
     );
@@ -88,6 +90,7 @@ fn real_runtime_steals_preserve_exactly_once() {
                     seed: 5,
                     record_polls: false,
                     sched: SchedBackend::Central,
+                    batch_activations: true,
                 },
                 Arc::new(SpinExecutor::new(cost, 16, move |t| g2.work_units(t)).with_time_scale(0.2)),
             );
@@ -127,6 +130,7 @@ fn real_runtime_uts_dynamic_termination() {
             seed: 6,
             record_polls: false,
             sched: SchedBackend::Central,
+            batch_activations: true,
         },
         Arc::new(
             SpinExecutor::new(CostModel::default_calibrated(), 0, move |t| g2.work_units(t))
@@ -152,6 +156,7 @@ fn sharded_backend_sim_and_real_agree() {
             max_events: u64::MAX,
             record_polls: false,
             sched: SchedBackend::Sharded,
+            batch_activations: true,
         },
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
@@ -167,6 +172,7 @@ fn sharded_backend_sim_and_real_agree() {
             seed: 4,
             record_polls: false,
             sched: SchedBackend::Sharded,
+            batch_activations: true,
         },
         Arc::new(NullExecutor),
     );
@@ -175,6 +181,101 @@ fn sharded_backend_sim_and_real_agree() {
     let sim_dist: Vec<u64> = sim.nodes.iter().map(|n| n.tasks_executed).collect();
     let real_dist: Vec<u64> = real.nodes.iter().map(|n| n.tasks_executed).collect();
     assert_eq!(sim_dist, real_dist, "static mapping must be identical");
+}
+
+/// Activation batching must cut the DES wire-event count measurably on
+/// the 8-node Cholesky e2e while executing exactly the same tasks on
+/// exactly the same nodes (stealing disabled, so the static owner map
+/// pins the distribution and the comparison is exact).
+#[test]
+fn batched_activations_cut_deliver_events() {
+    let run = |batch: bool| {
+        let g = Arc::new(CholeskyGraph::new(CholeskyParams {
+            tiles: 16,
+            tile_size: 16,
+            nodes: 8,
+            dense_fraction: 1.0,
+            seed: 9,
+            all_dense: true,
+        }));
+        Simulator::new(
+            g,
+            SimConfig {
+                workers_per_node: 4,
+                link: LinkModel::cluster(),
+                seed: 4,
+                max_events: u64::MAX,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: batch,
+            },
+            CostModel::default_calibrated(),
+            MigrateConfig::disabled(),
+            16,
+        )
+        .run()
+    };
+    let batched = run(true);
+    let unbatched = run(false);
+    assert_eq!(
+        batched.tasks_total_executed(),
+        unbatched.tasks_total_executed()
+    );
+    let bd: Vec<u64> = batched.nodes.iter().map(|n| n.tasks_executed).collect();
+    let ud: Vec<u64> = unbatched.nodes.iter().map(|n| n.tasks_executed).collect();
+    assert_eq!(bd, ud, "identical per-node tasks_executed");
+    assert!(batched.deliver_events > 0, "remote edges exist");
+    let ratio = batched.deliver_events as f64 / unbatched.deliver_events as f64;
+    assert!(
+        ratio <= 0.85,
+        "batching saved too little: {} vs {} Deliver events (ratio {ratio:.3})",
+        batched.deliver_events,
+        unbatched.deliver_events
+    );
+}
+
+/// Batched and unbatched activation protocols agree between the DES and
+/// the threaded runtime: same totals, same static per-node distribution.
+#[test]
+fn batched_and_unbatched_agree_des_vs_threaded() {
+    for batch in [false, true] {
+        let g = chol(10, 3);
+        let total = g.total_tasks().unwrap();
+        let sim = Simulator::new(
+            g.clone(),
+            SimConfig {
+                workers_per_node: 2,
+                link: LinkModel::cluster(),
+                seed: 8,
+                max_events: u64::MAX,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: batch,
+            },
+            CostModel::default_calibrated(),
+            MigrateConfig::disabled(),
+            16,
+        )
+        .run();
+        let real = Cluster::run(
+            g.clone(),
+            ClusterConfig {
+                workers_per_node: 2,
+                link: LinkModel::ideal(),
+                migrate: MigrateConfig::disabled(),
+                seed: 8,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: batch,
+            },
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(sim.tasks_total_executed(), total, "batch={batch}");
+        assert_eq!(real.tasks_total_executed(), total, "batch={batch}");
+        let sim_dist: Vec<u64> = sim.nodes.iter().map(|n| n.tasks_executed).collect();
+        let real_dist: Vec<u64> = real.nodes.iter().map(|n| n.tasks_executed).collect();
+        assert_eq!(sim_dist, real_dist, "batch={batch}: same distribution");
+    }
 }
 
 /// The network's latency model must delay but never lose messages even

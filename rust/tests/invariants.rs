@@ -9,7 +9,7 @@ use parsteal::dataflow::task::TaskDesc;
 use parsteal::dataflow::ttg::TaskGraph;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
 use parsteal::prop_assert;
-use parsteal::sched::{SchedBackend, SchedQueue};
+use parsteal::sched::{SchedBackend, SchedQueue, TaskMeta};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::util::prop::{check, Config};
 use parsteal::util::rng::Rng;
@@ -74,6 +74,7 @@ fn prop_cholesky_sim_executes_every_task_once() {
                     } else {
                         SchedBackend::Sharded
                     },
+                    batch_activations: rng.uniform() < 0.5,
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -129,6 +130,7 @@ fn prop_uts_sim_matches_tree_size() {
                     } else {
                         SchedBackend::Sharded
                     },
+                    batch_activations: rng.uniform() < 0.5,
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -274,7 +276,9 @@ fn prop_victim_allowance_bounds() {
                 if graph.is_stealable(t) {
                     stealable += 1;
                 }
-                q.insert(t, i as i64);
+                // The runtime contract: enqueue with the graph's meta so
+                // the incremental accounting sees the stealable bit.
+                q.insert_meta(t, i as i64, TaskMeta::of(graph.as_ref(), t));
             }
             let mc = random_migrate(rng);
             if !mc.enabled {

@@ -7,7 +7,9 @@
 
 use parsteal::dataflow::task::{TaskClass, TaskDesc};
 use parsteal::prop_assert;
-use parsteal::sched::{CentralQueue, SPILL_THRESHOLD, SchedBackend, Scheduler, ShardedQueue};
+use parsteal::sched::{
+    CentralQueue, SPILL_THRESHOLD, SchedBackend, Scheduler, ShardedQueue, TaskMeta,
+};
 use parsteal::util::prop::{check, Config};
 use parsteal::util::rng::Rng;
 
@@ -181,6 +183,113 @@ fn prop_backends_conserve_under_interleaving() {
                 removed_totals[0] == removed_totals[1],
                 "backends disagree on total throughput: {removed_totals:?}"
             );
+            Ok(())
+        },
+    );
+}
+
+/// The incremental stealable-count/payload accounting must exactly
+/// match the `count_matching` scan oracle (and a hand-tracked payload
+/// sum) after every operation of a random insert / select /
+/// extract_stealable / extract_for_steal interleaving, on both backends.
+#[test]
+fn prop_incremental_accounting_matches_oracle() {
+    // Meta derived deterministically from the task id, so the oracle
+    // filter can recognize stealable tasks without sharing state.
+    fn meta_of(i: u32) -> TaskMeta {
+        TaskMeta {
+            stealable: i % 3 != 0,
+            payload_bytes: 8 + (i as u64 % 11) * 16,
+        }
+    }
+    let stealable_filter = |task: &TaskDesc| task.i % 3 != 0;
+
+    #[derive(Clone, Copy)]
+    enum Op {
+        Insert(u32, i64),
+        Select(usize),
+        ExtractStealable(usize),
+        ExtractFiltered(usize),
+    }
+    check(
+        "incremental-accounting-oracle",
+        Config {
+            cases: 40,
+            max_size: 200,
+            seed: 0xACC7,
+        },
+        |rng, size| {
+            let workers = 1 + rng.below(6) as usize;
+            let mut ops = Vec::with_capacity(size);
+            let mut next_id = 0u32;
+            for _ in 0..size {
+                ops.push(match rng.below(5) {
+                    0 | 1 => {
+                        let op = Op::Insert(next_id, rng.next_u64() as i64 % 100);
+                        next_id += 1;
+                        op
+                    }
+                    2 => Op::Select(rng.below(workers as u64) as usize),
+                    3 => Op::ExtractStealable(rng.below(6) as usize),
+                    _ => Op::ExtractFiltered(rng.below(6) as usize),
+                });
+            }
+            for backend in SchedBackend::ALL {
+                let q = backend.build(workers);
+                // Hand-tracked multiset of queued stealable payloads.
+                let mut in_queue_payload: u64 = 0;
+                let remove = |task: TaskDesc, payload: &mut u64| {
+                    if stealable_filter(&task) {
+                        *payload -= meta_of(task.i).payload_bytes;
+                    }
+                };
+                for op in &ops {
+                    match *op {
+                        Op::Insert(id, prio) => {
+                            q.insert_meta(t(id), prio, meta_of(id));
+                            if id % 3 != 0 {
+                                in_queue_payload += meta_of(id).payload_bytes;
+                            }
+                        }
+                        Op::Select(w) => {
+                            if let Some(task) = q.select(w) {
+                                remove(task, &mut in_queue_payload);
+                            }
+                        }
+                        Op::ExtractStealable(max) => {
+                            for task in q.extract_stealable(max) {
+                                prop_assert!(
+                                    stealable_filter(&task),
+                                    "{}: non-stealable task {task} extracted",
+                                    q.name()
+                                );
+                                remove(task, &mut in_queue_payload);
+                            }
+                        }
+                        Op::ExtractFiltered(max) => {
+                            // Oracle extraction over a *different* filter:
+                            // accounting must stay exact even when the
+                            // scan path removes stealable tasks.
+                            for task in q.extract_for_steal(max, &|task| task.i % 2 == 0) {
+                                remove(task, &mut in_queue_payload);
+                            }
+                        }
+                    }
+                    let oracle = q.count_matching(&stealable_filter);
+                    prop_assert!(
+                        q.stealable_count() == oracle,
+                        "{}: stealable_count {} != oracle {oracle}",
+                        q.name(),
+                        q.stealable_count()
+                    );
+                    prop_assert!(
+                        q.stealable_payload_bytes() == in_queue_payload,
+                        "{}: payload {} != tracked {in_queue_payload}",
+                        q.name(),
+                        q.stealable_payload_bytes()
+                    );
+                }
+            }
             Ok(())
         },
     );
