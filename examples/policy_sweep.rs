@@ -103,6 +103,7 @@ fn main() {
                         poll_interval_us: 100.0,
                         max_inflight: 1,
                         migrate_overhead_us: 150.0,
+                        exec_ewma: false,
                     };
                     let mut times = Vec::new();
                     let mut pct = 0.0;

@@ -13,9 +13,12 @@
 //!
 //! Part 3 — the steal-decision microbench: one full victim-side
 //! `decide_steal` poll (O(1) census + waiting-time gate + index-based
-//! extraction) at 1/8/40 workers on both backends. `--json PATH` writes
-//! the medians for CI (`BENCH_PR2.json`); `--steal-decision-only` skips
-//! the slower parts.
+//! extraction) at 1/8/40 workers on both backends. Steady state is
+//! denial-heavy (huge payloads), so the run also exercises the feedback
+//! loop: each cell reports the denials fed back and the sharded spill
+//! watermark after the run. `--json PATH` writes medians + telemetry
+//! for CI (`BENCH_PR3.json`); `--steal-decision-only` skips the slower
+//! parts.
 //!
 //!     cargo bench --bench scheduler [-- [--steal-decision-only] [--json PATH]]
 
@@ -26,7 +29,7 @@ use std::time::{Duration, Instant};
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use parsteal::dataflow::ttg::TtgBuilder;
 use parsteal::migrate::{protocol::decide_steal, MigrateConfig, VictimPolicy};
-use parsteal::sched::{SchedBackend, SchedQueue, Scheduler, TaskMeta};
+use parsteal::sched::{SPILL_THRESHOLD, SchedBackend, SchedQueue, SchedStats, Scheduler, TaskMeta};
 use parsteal::util::bench::Bencher;
 use parsteal::util::json::Json;
 
@@ -193,10 +196,13 @@ fn contention_benches() {
 
 /// One full victim-side steal poll per iteration, in steady state: the
 /// graph's payloads are large enough that the waiting-time gate denies
-/// every request, so the extracted task is re-inserted and the queue
-/// depth never drifts. Measures exactly what a migrate thread pays per
-/// poll: O(1) census + gate + index extraction + re-insert.
-fn steal_decision_benches() -> Vec<(String, f64)> {
+/// every request, so the extracted task is re-inserted (one batched
+/// insert per denial) and the queue depth never drifts. Measures
+/// exactly what a migrate thread pays per poll: O(1) census + gate +
+/// index extraction + batched re-insert + feedback. Each cell also
+/// reports the feedback telemetry: denials fed back and the sharded
+/// watermark after the run (denial-heavy -> it must have risen).
+fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
     println!();
     println!("== steal decision: one decide_steal poll (gated, steady-state) ==");
     let mut b = Bencher::default();
@@ -232,26 +238,49 @@ fn steal_decision_benches() -> Vec<(String, f64)> {
             let r = b.bench(&name, || {
                 decide_steal(&mc, &graph, q.as_ref(), workers, 10.0, 5.0, 1e3)
             });
-            medians.push((name, r.median_ns()));
+            let stats = q.stats();
+            medians.push((name, r.median_ns(), stats));
             assert_eq!(q.len() as u32, DEPTH, "gate denial must restore the queue");
             assert_eq!(
-                q.stats().scans,
+                stats.scans,
                 0,
                 "steal polls must not scan ({})",
                 backend.label()
             );
+            assert_eq!(
+                stats.batch_inserts, stats.feedback_wt_denials,
+                "one batched reinsert per denial ({})",
+                backend.label()
+            );
+            if backend == SchedBackend::Sharded {
+                assert!(
+                    stats.watermark as usize > SPILL_THRESHOLD,
+                    "denial-heavy steady state must raise the watermark ({} <= {SPILL_THRESHOLD})",
+                    stats.watermark
+                );
+            }
         }
     }
     medians
 }
 
-fn write_json(path: &str, medians: &[(String, f64)]) {
+fn write_json(path: &str, medians: &[(String, f64, SchedStats)]) {
     let entries: Vec<Json> = medians
         .iter()
-        .map(|(name, ns)| {
+        .map(|(name, ns, stats)| {
             Json::obj(vec![
                 ("name", Json::Str(name.clone())),
                 ("median_ns_per_poll", Json::Num(*ns)),
+                (
+                    "wt_denials_fed",
+                    Json::Num(stats.feedback_wt_denials as f64),
+                ),
+                ("batch_inserts", Json::Num(stats.batch_inserts as f64)),
+                (
+                    "batch_saved_locks",
+                    Json::Num(stats.batch_saved_locks as f64),
+                ),
+                ("watermark_after", Json::Num(stats.watermark as f64)),
             ])
         })
         .collect();

@@ -37,7 +37,7 @@ impl RunConfig {
     /// `--workload cholesky|uts --nodes N --workers W --tiles T --tile-size S`
     /// `--dense-fraction F --steal BOOL --victim half|chunk[K]|single`
     /// `--thief ready-only|ready-successors --waiting-time BOOL`
-    /// `--sched central|sharded --batch-activations BOOL`
+    /// `--exec-ewma BOOL --sched central|sharded --batch-activations BOOL`
     /// `--latency-us L --bw B --seed X` and the
     /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
     pub fn from_args(args: &Args) -> Result<RunConfig> {
@@ -76,6 +76,9 @@ impl RunConfig {
             poll_interval_us: args.f64_or("poll-interval-us", 100.0)?,
             max_inflight: args.u64_or("max-inflight", 1)? as usize,
             migrate_overhead_us: args.f64_or("migrate-overhead-us", 150.0)?,
+            // Off = the paper's running-mean estimator (§3); on = gate
+            // on an EWMA of observed execution times.
+            exec_ewma: args.bool_or("exec-ewma", false)?,
         };
         Ok(RunConfig {
             workload,
@@ -175,6 +178,14 @@ mod tests {
         assert_eq!(c.sched, SchedBackend::Sharded);
         assert_eq!(c.sim_config().sched, SchedBackend::Sharded);
         assert!(RunConfig::from_args(&args("--sched bogus")).is_err());
+    }
+
+    #[test]
+    fn exec_ewma_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert!(!c.migrate.exec_ewma, "paper-faithful running mean by default");
+        let c = RunConfig::from_args(&args("--exec-ewma true")).unwrap();
+        assert!(c.migrate.exec_ewma);
     }
 
     #[test]

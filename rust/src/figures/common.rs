@@ -215,6 +215,7 @@ pub fn victim_cells(scale: Scale, waiting_time: bool) -> Vec<Cell> {
         poll_interval_us: 100.0,
         max_inflight: 1,
         migrate_overhead_us: 150.0,
+        exec_ewma: false,
     };
     vec![
         Cell {

@@ -30,6 +30,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         poll_interval_us: 100.0,
         max_inflight: 1,
         migrate_overhead_us: 150.0,
+        exec_ewma: false,
     };
     let report = Simulator::new(
         graph,

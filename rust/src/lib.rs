@@ -19,8 +19,9 @@
 //!   PJRT CPU client and executes them from worker threads; Python never
 //!   runs on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See the top-level `README.md` for the CLI quickstart and
+//! `docs/ARCHITECTURE.md` for the layer map, the steal-accounting
+//! contract and the waiting-time feedback loop.
 
 pub mod comm;
 pub mod config;

@@ -32,7 +32,8 @@ fn usage() -> String {
      repro run [--workload cholesky|uts] [--nodes 4] [--workers 40]\n\
      \x20         [--tiles 200] [--tile-size 50] [--steal true] [--victim single]\n\
      \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
-     \x20         [--sched central|sharded] [--batch-activations true]\n\
+     \x20         [--exec-ewma false] [--sched central|sharded]\n\
+     \x20         [--batch-activations true]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
      \x20         [--figure-scale small|paper] [--sched central|sharded]\n\
@@ -171,6 +172,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         steals.success_pct(),
         steals.tasks_migrated,
         steals.waiting_time_denials
+    );
+    let batch_inserts: u64 = report.nodes.iter().map(|n| n.sched.batch_inserts).sum();
+    let saved: u64 = report.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
+    let wm = report.nodes.iter().map(|n| n.sched.watermark).max().unwrap_or(0);
+    println!(
+        "sched:           {batch_inserts} batched re-enqueues ({saved} locks saved), \
+         max watermark {wm}"
     );
     Ok(())
 }

@@ -8,6 +8,7 @@
 
 use crate::comm::LinkModel;
 use crate::migrate::StealStats;
+use crate::sched::SchedStats;
 use crate::util::json::Json;
 
 /// One ready-queue observation, taken whenever a worker completed a
@@ -27,6 +28,10 @@ pub struct NodeReport {
     /// Running mean execution time at end of run (µs).
     pub avg_exec_us: f64,
     pub steal: StealStats,
+    /// End-of-run scheduler counters for this node's queue: batched-
+    /// insert accounting, gate-feedback events and (sharded) the final
+    /// adaptive spill watermark.
+    pub sched: SchedStats,
     /// Select-time ready-queue polls (drives Fig. 1).
     pub polls: Vec<PollSample>,
     /// Ready-queue length observed when each stolen task arrived
@@ -122,6 +127,15 @@ impl RunReport {
 
     pub fn to_json(&self) -> Json {
         let steals = self.total_steals();
+        let batch_inserts: u64 = self.nodes.iter().map(|n| n.sched.batch_inserts).sum();
+        let saved_locks: u64 = self.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
+        let denials_fed: u64 = self.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
+        let watermark_max = self
+            .nodes
+            .iter()
+            .map(|n| n.sched.watermark)
+            .max()
+            .unwrap_or(0);
         Json::obj(vec![
             ("workload", Json::Str(self.workload.clone())),
             ("makespan_us", Json::Num(self.makespan_us)),
@@ -139,6 +153,10 @@ impl RunReport {
                 "waiting_time_denials",
                 Json::Num(steals.waiting_time_denials as f64),
             ),
+            ("sched_batch_inserts", Json::Num(batch_inserts as f64)),
+            ("sched_batch_saved_locks", Json::Num(saved_locks as f64)),
+            ("sched_gate_denials_fed", Json::Num(denials_fed as f64)),
+            ("sched_watermark_max", Json::Num(watermark_max as f64)),
             (
                 "per_node_tasks",
                 Json::Arr(

@@ -12,12 +12,20 @@
 //! simulator ([`crate::sim`]) drive the exact same policy code here, so
 //! figure regeneration exercises the same decision logic the live system
 //! runs.
+//!
+//! Since PR 3 the decision is a *closed loop*: every gate verdict flows
+//! back into the scheduler through
+//! [`crate::sched::Scheduler::feedback`], where the sharded backend
+//! turns it into spill-watermark pressure, and the execution-time
+//! estimate the gate runs on can track observed runtimes
+//! ([`MigrateConfig::exec_ewma`]). See `docs/ARCHITECTURE.md` for the
+//! loop diagram.
 
 pub mod policy;
 pub mod protocol;
 
 pub use policy::{
-    is_starving, migrate_time_us, steal_allowance, waiting_time_us, MigrateConfig,
-    StarvationView, ThiefPolicy, VictimPolicy,
+    ewma_update, exec_estimate_us, is_starving, migrate_time_us, steal_allowance,
+    waiting_time_us, EXEC_EWMA_ALPHA, MigrateConfig, StarvationView, ThiefPolicy, VictimPolicy,
 };
 pub use protocol::{StealStats, VictimDecision};

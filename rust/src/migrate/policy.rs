@@ -1,4 +1,12 @@
-//! Thief and victim policies (§3, "Thief policy" / "Victim policy").
+//! Thief and victim policies (§3, "Thief policy" / "Victim policy"),
+//! the waiting-time formula (§3, "Waiting Time") and the execution-time
+//! estimators that feed it.
+//!
+//! Everything here is pure policy arithmetic shared verbatim by the
+//! threaded runtime ([`crate::node`]) and the DES ([`crate::sim`]); the
+//! state it consumes (ready counts, successor counts, execution-time
+//! averages) is maintained incrementally by the runtimes so every
+//! evaluation is O(1).
 
 use std::str::FromStr;
 
@@ -15,6 +23,17 @@ pub enum ThiefPolicy {
     ReadySuccessors,
 }
 
+impl ThiefPolicy {
+    /// Canonical CLI spelling; accepted back by the [`FromStr`] parser
+    /// (round-trip property-tested in `tests/invariants.rs`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ThiefPolicy::ReadyOnly => "ready-only",
+            ThiefPolicy::ReadySuccessors => "ready-successors",
+        }
+    }
+}
+
 /// How many tasks may one steal request take?
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum VictimPolicy {
@@ -27,6 +46,9 @@ pub enum VictimPolicy {
 }
 
 impl VictimPolicy {
+    /// Display label; the [`FromStr`] parser accepts it back
+    /// (case-insensitively, including the `Chunk(8)` spelling — the
+    /// round trip is property-tested in `tests/invariants.rs`).
     pub fn label(&self) -> String {
         match self {
             VictimPolicy::Half => "Half".into(),
@@ -96,6 +118,16 @@ pub struct MigrateConfig {
     /// handshake. PaRSEC-scale default; the Fig. 6 ablation is sensitive
     /// to this being non-trivial, exactly as the paper argues.
     pub migrate_overhead_us: f64,
+    /// Feed [`waiting_time_us`] an EWMA of observed execution times
+    /// ([`ewma_update`]) instead of the whole-run running mean
+    /// (`--exec-ewma`). Off by default: the paper's §3 formula uses
+    /// "execution time elapsed / tasks executed till now", so `false`
+    /// is the paper-faithful estimator. On, the gate tracks the
+    /// *current* task granularity — Table 1 shows it varies by orders
+    /// of magnitude across kernels, so a run whose task mix shifts
+    /// (e.g. Cholesky's POTRF→GEMM front) gates on stale averages
+    /// without it.
+    pub exec_ewma: bool,
 }
 
 impl MigrateConfig {
@@ -117,6 +149,7 @@ impl Default for MigrateConfig {
             poll_interval_us: 100.0,
             max_inflight: 1,
             migrate_overhead_us: 150.0,
+            exec_ewma: false,
         }
     }
 }
@@ -146,7 +179,21 @@ pub fn is_starving(policy: ThiefPolicy, view: StarvationView) -> bool {
 }
 
 /// Victim-side upper bound on tasks allowed out per request, given the
-/// current count of stealable ready tasks.
+/// current count of stealable ready tasks (§3, "Victim policy"). The
+/// count is the scheduler's O(1) incremental census
+/// ([`crate::sched::Scheduler::stealable_count`]), not a queue scan.
+///
+/// ```
+/// use parsteal::migrate::{steal_allowance, VictimPolicy};
+///
+/// // Half gives away at most half of what is stealable…
+/// assert_eq!(steal_allowance(VictimPolicy::Half, 40), 20);
+/// // …so a single stealable task is never taken (half of 1 = 0).
+/// assert_eq!(steal_allowance(VictimPolicy::Half, 1), 0);
+/// // Chunk caps at the chunk size; Single at one.
+/// assert_eq!(steal_allowance(VictimPolicy::Chunk(20), 100), 20);
+/// assert_eq!(steal_allowance(VictimPolicy::Single, 9), 1);
+/// ```
 pub fn steal_allowance(policy: VictimPolicy, stealable: usize) -> usize {
     match policy {
         VictimPolicy::Half => stealable / 2,
@@ -155,18 +202,87 @@ pub fn steal_allowance(policy: VictimPolicy, stealable: usize) -> usize {
     }
 }
 
-/// Expected waiting time before a queued task reaches a worker (§3):
+/// Expected waiting time before a queued task reaches a worker (§3,
+/// "Waiting Time"):
 ///
 /// ```text
 /// waiting = (#ready / #workers + 1) * average task execution time
+/// ```
+///
+/// The `+ 1` is the task's own execution slot: even an empty queue
+/// waits one average task. `avg_exec_us` is either the running mean
+/// ("execution time elapsed / tasks executed till now", the paper's
+/// estimator) or, with [`MigrateConfig::exec_ewma`], the
+/// [`ewma_update`] average of recent executions.
+///
+/// ```
+/// use parsteal::migrate::waiting_time_us;
+///
+/// // 40 queued tasks over 40 workers, 10 µs average granularity:
+/// // one queue "round" ahead of us plus our own slot = 20 µs.
+/// assert_eq!(waiting_time_us(40, 40, 10.0), 20.0);
+/// // An empty queue still waits one average task.
+/// assert_eq!(waiting_time_us(0, 8, 5.0), 5.0);
 /// ```
 pub fn waiting_time_us(ready: usize, workers: usize, avg_exec_us: f64) -> f64 {
     (ready as f64 / workers.max(1) as f64 + 1.0) * avg_exec_us
 }
 
-/// Time to migrate a task's inputs to the thief over the modeled link.
+/// Time to migrate a task's inputs to the thief over the modeled link
+/// (§3, "time required to migrate the task"): one latency plus the
+/// payload serialized at link bandwidth. [`MigrateConfig`] adds the
+/// fixed protocol overhead on top.
 pub fn migrate_time_us(latency_us: f64, payload_bytes: u64, bw_bytes_per_us: f64) -> f64 {
     latency_us + payload_bytes as f64 / bw_bytes_per_us
+}
+
+/// Gain of the execution-time EWMA (`--exec-ewma`): 1/8, the classic
+/// TCP-SRTT smoothing factor — heavy enough that one outlier kernel
+/// cannot swing the waiting-time gate, light enough to track Table 1's
+/// per-kernel granularity shifts within a few dozen completions.
+pub const EXEC_EWMA_ALPHA: f64 = 0.125;
+
+/// One EWMA step over observed execution times. A non-positive `prev`
+/// means "no history yet", so the first sample seeds the average
+/// (mirroring how the running mean starts).
+///
+/// ```
+/// use parsteal::migrate::{ewma_update, EXEC_EWMA_ALPHA};
+///
+/// let first = ewma_update(0.0, 100.0); // first sample seeds
+/// assert_eq!(first, 100.0);
+/// let next = ewma_update(first, 200.0); // moves α of the way there
+/// assert_eq!(next, 100.0 + EXEC_EWMA_ALPHA * 100.0);
+/// ```
+pub fn ewma_update(prev_us: f64, sample_us: f64) -> f64 {
+    if prev_us <= 0.0 {
+        sample_us
+    } else {
+        prev_us + EXEC_EWMA_ALPHA * (sample_us - prev_us)
+    }
+}
+
+/// The execution-time estimate the waiting-time gate runs on — shared
+/// by the threaded runtime and the DES so the two cannot diverge: the
+/// EWMA when [`MigrateConfig::exec_ewma`] is on and at least one sample
+/// landed, else the running mean, else an optimistic 1 µs (PaRSEC
+/// starts the same way; converges after the first few tasks).
+///
+/// ```
+/// use parsteal::migrate::exec_estimate_us;
+///
+/// assert_eq!(exec_estimate_us(false, 0.0, 800.0, 4), 200.0); // mean
+/// assert_eq!(exec_estimate_us(true, 50.0, 800.0, 4), 50.0); // EWMA
+/// assert_eq!(exec_estimate_us(true, 0.0, 0.0, 0), 1.0); // no history
+/// ```
+pub fn exec_estimate_us(use_ewma: bool, ewma_us: f64, exec_sum_us: f64, tasks_done: u64) -> f64 {
+    if use_ewma && ewma_us > 0.0 {
+        ewma_us
+    } else if tasks_done > 0 {
+        exec_sum_us / tasks_done as f64
+    } else {
+        1.0
+    }
 }
 
 #[cfg(test)]
@@ -201,6 +317,17 @@ mod tests {
         assert_eq!(steal_allowance(VictimPolicy::Chunk(20), 100), 20);
         assert_eq!(steal_allowance(VictimPolicy::Single, 9), 1);
         assert_eq!(steal_allowance(VictimPolicy::Single, 0), 0);
+    }
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        assert_eq!(ewma_update(0.0, 40.0), 40.0);
+        assert_eq!(ewma_update(-1.0, 40.0), 40.0, "negative = no history");
+        let mut avg = 40.0;
+        for _ in 0..64 {
+            avg = ewma_update(avg, 10.0);
+        }
+        assert!((avg - 10.0).abs() < 1.0, "converges to the new regime: {avg}");
     }
 
     #[test]

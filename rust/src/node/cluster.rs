@@ -11,7 +11,8 @@ use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
+    ewma_update, exec_estimate_us, is_starving, protocol::decide_steal, MigrateConfig,
+    StarvationView, StealStats,
 };
 use crate::sched::{SchedBackend, Scheduler, TaskMeta};
 use crate::term::{SafraAction, SafraState};
@@ -71,6 +72,11 @@ struct NodeState {
     executing_local_succ: AtomicUsize,
     tasks_done: AtomicU64,
     exec_sum_ns: AtomicU64,
+    /// EWMA of observed execution times (µs), stored as `f64` bits —
+    /// updated at task finish when `MigrateConfig::exec_ewma` is on,
+    /// read by the victim-side waiting-time gate. 0 bits = 0.0 = no
+    /// history yet.
+    exec_ewma_us_bits: AtomicU64,
     busy_ns: AtomicU64,
     steal: Mutex<StealStats>,
     inflight_steals: AtomicUsize,
@@ -123,6 +129,7 @@ impl Cluster {
                     executing_local_succ: AtomicUsize::new(0),
                     tasks_done: AtomicU64::new(0),
                     exec_sum_ns: AtomicU64::new(0),
+                    exec_ewma_us_bits: AtomicU64::new(0),
                     busy_ns: AtomicU64::new(0),
                     steal: Mutex::new(StealStats::default()),
                     inflight_steals: AtomicUsize::new(0),
@@ -229,6 +236,7 @@ impl Cluster {
                             0.0
                         },
                         steal: *nd.steal.lock().unwrap(),
+                        sched: nd.queue.stats(),
                         polls: std::mem::take(&mut nd.polls.lock().unwrap()),
                         arrival_ready: std::mem::take(&mut nd.arrival_ready.lock().unwrap()),
                     }
@@ -252,6 +260,18 @@ fn enqueue(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
         // re-check and its wait, so the notify cannot fall in the gap.
         let _idle = node.idle.lock().unwrap();
         node.queue_cv.notify_one();
+    }
+}
+
+/// Insert a batch of ready tasks (steal-reply re-enqueue) under one
+/// queue-lock acquisition, then wake workers. Mirrors [`enqueue`],
+/// including the parked-worker SeqCst protocol; `notify_all` because a
+/// batch can feed several parked workers at once.
+fn enqueue_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDesc]) {
+    node.queue.insert_batch_meta(&TaskMeta::batch_of(graph, tasks));
+    if node.parked.load(Ordering::SeqCst) > 0 {
+        let _idle = node.idle.lock().unwrap();
+        node.queue_cv.notify_all();
     }
 }
 
@@ -374,6 +394,16 @@ fn worker_loop(
         node.executing_count.fetch_sub(1, Ordering::SeqCst);
         node.tasks_done.fetch_add(1, Ordering::SeqCst);
         node.exec_sum_ns.fetch_add(dur_ns, Ordering::SeqCst);
+        if sh.cfg.migrate.exec_ewma {
+            // CAS loop over the f64 bits: lock-free per-finish EWMA
+            // update (contended only by the other workers' finishes).
+            let dur_us = dur_ns as f64 / 1e3;
+            let _ = node
+                .exec_ewma_us_bits
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                    Some(ewma_update(f64::from_bits(bits), dur_us).to_bits())
+                });
+        }
         node.busy_ns.fetch_add(dur_ns, Ordering::SeqCst);
         node.last_finish_ns
             .fetch_max(sh.start.elapsed().as_nanos() as u64, Ordering::SeqCst);
@@ -397,12 +427,18 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                 Msg::ActivateBatch { tasks } => activate_local_batch(&node, graph, &tasks),
                 Msg::StealRequest { thief } => {
                     let workers = sh.cfg.workers_per_node;
+                    // The gate's execution-time estimate (shared policy
+                    // helper, so the DES cannot diverge): EWMA or
+                    // running mean, both O(1) reads of incrementally-
+                    // maintained state.
                     let done = node.tasks_done.load(Ordering::SeqCst);
-                    let avg_us = if done > 0 {
-                        node.exec_sum_ns.load(Ordering::SeqCst) as f64 / done as f64 / 1e3
-                    } else {
-                        1.0
-                    };
+                    let ewma = f64::from_bits(node.exec_ewma_us_bits.load(Ordering::Relaxed));
+                    let avg_us = exec_estimate_us(
+                        sh.cfg.migrate.exec_ewma,
+                        ewma,
+                        node.exec_sum_ns.load(Ordering::SeqCst) as f64 / 1e3,
+                        done,
+                    );
                     let decision = decide_steal(
                         &sh.cfg.migrate,
                         graph,
@@ -438,23 +474,31 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                 }
                 Msg::StealReply { tasks, .. } => {
                     node.inflight_steals.fetch_sub(1, Ordering::SeqCst);
-                    {
-                        let mut st = node.steal.lock().unwrap();
-                        if !tasks.is_empty() {
+                    if !tasks.is_empty() {
+                        {
+                            let mut st = node.steal.lock().unwrap();
                             st.successful_steals += 1;
                             st.tasks_received += tasks.len() as u64;
                         }
-                    }
-                    for t in tasks {
                         if sh.cfg.record_polls {
+                            // Fig. 3 instrumentation: queue length each
+                            // stolen task would have seen arriving
+                            // one-by-one (len, len+1, …), sampled before
+                            // the batch insert.
                             let ready = node.queue.len() as u32;
-                            node.arrival_ready.lock().unwrap().push(PollSample {
-                                t_us: sh.start.elapsed().as_nanos() as f64 / 1e3,
-                                ready,
-                            });
+                            let t_us = sh.start.elapsed().as_nanos() as f64 / 1e3;
+                            let mut ar = node.arrival_ready.lock().unwrap();
+                            for k in 0..tasks.len() as u32 {
+                                ar.push(PollSample {
+                                    t_us,
+                                    ready: ready + k,
+                                });
+                            }
                         }
-                        // Recreate the stolen task locally (same uid).
-                        enqueue(&node, graph, t);
+                        // Recreate the stolen tasks locally (same uids)
+                        // in one batched insert: one queue-lock
+                        // acquisition per reply, not one per task.
+                        enqueue_batch(&node, graph, &tasks);
                     }
                 }
                 Msg::Token(tok) => {
@@ -659,6 +703,124 @@ mod tests {
             );
             assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
         }
+    }
+
+    /// The closed loop end to end in the threaded runtime: an
+    /// all-on-node-0 UTS run whose migrate overhead makes every steal
+    /// lose the waiting-time comparison must deny heavily and raise
+    /// node 0's sharded spill watermark through the feedback hook
+    /// (central runs the same scenario and records the denials).
+    #[test]
+    fn denial_heavy_run_raises_sharded_watermark() {
+        use crate::sched::SPILL_THRESHOLD;
+        for sched in SchedBackend::ALL {
+            let g = Arc::new(UtsGraph::new(UtsParams {
+                b0: 24,
+                m: 4,
+                q: 0.3,
+                g: 30_000.0, // 30 µs/task
+                seed: 5,
+                nodes: 3,
+                max_depth: 18,
+            }));
+            let size = g.tree_size(10_000_000);
+            let r = Cluster::run(
+                g,
+                ClusterConfig {
+                    workers_per_node: 2,
+                    sched,
+                    migrate: MigrateConfig {
+                        poll_interval_us: 30.0,
+                        migrate_overhead_us: 1e9, // gate always denies
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+                Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
+                    30_000.0
+                })),
+            );
+            assert_eq!(r.tasks_total_executed(), size, "{sched:?}");
+            let steals = r.total_steals();
+            assert_eq!(steals.successful_steals, 0, "{sched:?}: gate denies all");
+            assert!(
+                steals.waiting_time_denials > 0,
+                "{sched:?}: wanted denials, got {steals:?}"
+            );
+            let fed: u64 = r.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
+            assert!(fed > 0, "{sched:?}: denials fed back");
+            if sched == SchedBackend::Sharded {
+                assert!(
+                    r.nodes[0].sched.watermark > SPILL_THRESHOLD as u64,
+                    "denials must raise the watermark, got {}",
+                    r.nodes[0].sched.watermark
+                );
+            }
+        }
+    }
+
+    /// Thief-side steal-reply re-enqueue is one batched insert per
+    /// non-empty reply (gate off, so nothing else batches).
+    #[test]
+    fn steal_reply_reenqueue_batches_once_per_reply() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 30.0,
+                    use_waiting_time: false,
+                    victim: crate::migrate::VictimPolicy::Chunk(4),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
+                30_000.0
+            })),
+        );
+        assert_eq!(r.tasks_total_executed(), size);
+        let steals = r.total_steals();
+        assert!(steals.successful_steals > 0);
+        let batches: u64 = r.nodes.iter().map(|n| n.sched.batch_inserts).sum();
+        let saved: u64 = r.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
+        assert_eq!(
+            batches, steals.successful_steals,
+            "exactly one batched insert per non-empty reply"
+        );
+        assert_eq!(saved, steals.tasks_received - steals.successful_steals);
+    }
+
+    /// `--exec-ewma` in the threaded runtime: the gate runs on the
+    /// observed-execution EWMA and every task still runs exactly once.
+    #[test]
+    fn exec_ewma_run_completes() {
+        let g = chol(8, 3);
+        let total = g.total_tasks().unwrap();
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 50.0,
+                    exec_ewma: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(r.tasks_total_executed(), total);
     }
 
     /// The sharded backend must run the full protocol — workers, comm,

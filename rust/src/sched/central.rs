@@ -14,11 +14,12 @@
 //! filtering the queue.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::dataflow::task::TaskDesc;
 
-use super::{QKey, SchedStats, Scheduler, TaskMeta};
+use super::{QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
 
 #[derive(Debug, Default)]
 struct Central {
@@ -46,6 +47,11 @@ impl Central {
 #[derive(Debug, Default)]
 pub struct CentralQueue {
     inner: Mutex<Central>,
+    /// Feedback counters live outside the mutex: `feedback` must not
+    /// add a third acquisition of the §4.4-contended lock to every
+    /// steal poll just to bump a counter.
+    feedback_grants: AtomicU64,
+    feedback_wt_denials: AtomicU64,
 }
 
 impl CentralQueue {
@@ -67,6 +73,10 @@ impl CentralQueue {
 
     pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
         let mut q = self.inner.lock().unwrap();
+        Self::insert_locked(&mut q, task, priority, meta);
+    }
+
+    fn insert_locked(q: &mut Central, task: TaskDesc, priority: i64, meta: TaskMeta) {
         q.seq += 1;
         q.stats.inserts += 1;
         let key = QKey {
@@ -78,6 +88,37 @@ impl CentralQueue {
             q.steal_payload += meta.payload_bytes;
         }
         q.map.insert(key, (task, meta));
+    }
+
+    /// Batched insert: the whole batch enters under one lock
+    /// acquisition (steal-reply re-enqueue, gate-denial reinsert).
+    pub fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut q = self.inner.lock().unwrap();
+        q.stats.batch_inserts += 1;
+        q.stats.batch_saved_locks += batch.len() as u64 - 1;
+        for &(task, priority, meta) in batch {
+            Self::insert_locked(&mut q, task, priority, meta);
+        }
+    }
+
+    /// Steal-decision feedback: the central backend has no watermark to
+    /// adapt, so the outcome is only recorded (keeps both backends
+    /// observable under the same protocol) — in lock-free atomics, so a
+    /// steal poll never takes the §4.4-contended queue lock just to
+    /// bump a counter.
+    pub fn feedback(&self, outcome: StealOutcome) {
+        match outcome {
+            StealOutcome::Granted => {
+                self.feedback_grants.fetch_add(1, Ordering::Relaxed);
+            }
+            StealOutcome::DeniedWaitingTime => {
+                self.feedback_wt_denials.fetch_add(1, Ordering::Relaxed);
+            }
+            StealOutcome::DeniedEmpty => {}
+        }
     }
 
     /// Worker-side `select`: highest-priority ready task.
@@ -169,7 +210,10 @@ impl CentralQueue {
     }
 
     pub fn stats(&self) -> SchedStats {
-        self.inner.lock().unwrap().stats
+        let mut stats = self.inner.lock().unwrap().stats;
+        stats.feedback_grants = self.feedback_grants.load(Ordering::Relaxed);
+        stats.feedback_wt_denials = self.feedback_wt_denials.load(Ordering::Relaxed);
+        stats
     }
 
     /// Drain everything (shutdown paths in tests).
@@ -186,6 +230,14 @@ impl CentralQueue {
 impl Scheduler for CentralQueue {
     fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
         CentralQueue::insert_meta(self, task, priority, meta)
+    }
+
+    fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        CentralQueue::insert_batch_meta(self, batch)
+    }
+
+    fn feedback(&self, outcome: StealOutcome) {
+        CentralQueue::feedback(self, outcome)
     }
 
     fn select(&self, _worker: usize) -> Option<TaskDesc> {

@@ -57,6 +57,26 @@
 //! [`SchedStats::scans`], so a test (and the §Perf acceptance gate) can
 //! assert the steal hot path performs zero scans.
 //!
+//! # The feedback loop
+//!
+//! The victim-side gate ([`crate::migrate::protocol::decide_steal`])
+//! does not just consume the accounting — it reports its verdict back
+//! through [`Scheduler::feedback`] as a [`StealOutcome`]. A waiting-time
+//! denial means queued tasks will reach a local worker sooner than they
+//! could migrate (§3), so the sharded backend raises its spill watermark
+//! (keep tasks in the shards); a granted steal means thieves are being
+//! fed, so it lowers the watermark (spill earlier toward the pool). The
+//! central backend records the outcomes in [`SchedStats`] so both
+//! backends are observable under the same protocol. See
+//! `docs/ARCHITECTURE.md` for the full loop diagram.
+//!
+//! Bulk arrivals — a steal reply re-creating stolen tasks at the thief,
+//! or a gate denial returning an extracted batch — go through
+//! [`Scheduler::insert_batch_meta`]: one lock acquisition per batch
+//! instead of one per task (the queue-side mirror of PR 2's
+//! `ActivateBatch`), with the saving counted in
+//! [`SchedStats::batch_saved_locks`].
+//!
 //! Both backends preserve the semantics the policies rely on: per shard,
 //! `select` is priority-then-FIFO; steal extraction takes lowest
 //! priority first; tasks are conserved under any interleaving of
@@ -120,6 +140,38 @@ impl TaskMeta {
             payload_bytes: graph.payload_bytes(t),
         }
     }
+
+    /// Build [`Scheduler::insert_batch_meta`] triples for `tasks`,
+    /// keeping the stored-meta-agrees-with-graph contract in one place
+    /// for every bulk-arrival call site (steal-reply re-enqueue in both
+    /// runtimes, gate-denial reinsert).
+    pub fn batch_of(graph: &dyn TaskGraph, tasks: &[TaskDesc]) -> Vec<(TaskDesc, i64, TaskMeta)> {
+        tasks
+            .iter()
+            .map(|&t| (t, graph.priority(t), TaskMeta::of(graph, t)))
+            .collect()
+    }
+}
+
+/// Outcome of one victim-side steal decision, fed back into the
+/// scheduler through [`Scheduler::feedback`].
+///
+/// This closes the loop the paper's §3 argues for: the waiting-time
+/// gate's verdict is a direct measurement of whether queued tasks are
+/// better off local or migrated, and the sharded backend turns it into
+/// spill-watermark pressure (see [`ShardedQueue`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealOutcome {
+    /// The request was granted and tasks migrated. Thieves are being
+    /// fed — spilling earlier helps the next request. (Task counts and
+    /// payload sizes live in `migrate::StealStats`, not here.)
+    Granted,
+    /// The waiting-time gate denied the request: queued tasks will
+    /// reach a local worker sooner than they could migrate, so they
+    /// should stay local.
+    DeniedWaitingTime,
+    /// Nothing stealable was queued — no locality signal either way.
+    DeniedEmpty,
 }
 
 /// Snapshot counters for the scheduler (feeds the E^b potential metric
@@ -136,6 +188,20 @@ pub struct SchedStats {
     /// filter-based extraction). The steal hot path must keep this at
     /// zero — asserted by `migrate::protocol` tests.
     pub scans: u64,
+    /// [`Scheduler::insert_batch_meta`] calls: exactly one per
+    /// non-empty steal reply (thief side) and one per gate-denial
+    /// reinsert (victim side) — asserted by protocol and e2e tests.
+    pub batch_inserts: u64,
+    /// Lock acquisitions avoided by batching inserts
+    /// (Σ per batch of `batch_len − 1`).
+    pub batch_saved_locks: u64,
+    /// [`StealOutcome::Granted`] feedback events received.
+    pub feedback_grants: u64,
+    /// [`StealOutcome::DeniedWaitingTime`] feedback events received.
+    pub feedback_wt_denials: u64,
+    /// Live adaptive spill watermark at snapshot time (sharded backend
+    /// only; the central backend has no watermark and reports 0).
+    pub watermark: u64,
 }
 
 /// A node's ready-task scheduler.
@@ -154,6 +220,22 @@ pub trait Scheduler: Send + Sync + std::fmt::Debug {
     fn insert(&self, task: TaskDesc, priority: i64) {
         self.insert_meta(task, priority, TaskMeta::default());
     }
+
+    /// Enqueue a batch of ready tasks under a single queue-lock
+    /// acquisition (`(task, priority, meta)` triples). The batched twin
+    /// of [`Scheduler::insert_meta`] for the two bulk-arrival paths —
+    /// the thief-side steal-reply re-enqueue and the victim-side gate-
+    /// denial reinsert. Empty batches are a no-op; non-empty batches
+    /// bump [`SchedStats::batch_inserts`] once and
+    /// [`SchedStats::batch_saved_locks`] by `len − 1`.
+    fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]);
+
+    /// Report a steal-decision outcome back to the scheduler (the
+    /// closed loop of the module docs). The sharded backend adapts its
+    /// spill watermark — denials raise it (tasks should stay local),
+    /// grants lower it (feed thieves); both backends count the
+    /// outcomes in [`SchedStats`].
+    fn feedback(&self, outcome: StealOutcome);
 
     /// Worker-side `select`: the best ready task visible to `worker`
     /// (a shard hint; the central backend ignores it).
@@ -328,5 +410,51 @@ mod tests {
         let m = TaskMeta::default();
         assert!(m.stealable);
         assert_eq!(m.payload_bytes, 0);
+    }
+
+    #[test]
+    fn batch_insert_counts_one_lock_acquisition() {
+        for backend in SchedBackend::ALL {
+            let q = backend.build(2);
+            let batch: Vec<(TaskDesc, i64, TaskMeta)> = (0..6u32)
+                .map(|i| {
+                    (
+                        t(i),
+                        i as i64,
+                        TaskMeta {
+                            stealable: true,
+                            payload_bytes: 10,
+                        },
+                    )
+                })
+                .collect();
+            q.insert_batch_meta(&batch);
+            let s = q.stats();
+            assert_eq!(s.batch_inserts, 1, "{backend:?}");
+            assert_eq!(s.batch_saved_locks, 5, "{backend:?}");
+            assert_eq!(s.inserts, 6, "{backend:?}: per-task insert count kept");
+            assert_eq!(q.len(), 6, "{backend:?}");
+            assert_eq!(q.stealable_count(), 6, "{backend:?}");
+            assert_eq!(q.stealable_payload_bytes(), 60, "{backend:?}");
+            // Empty batches are a no-op, not a zero-length batch insert.
+            q.insert_batch_meta(&[]);
+            assert_eq!(q.stats().batch_inserts, 1, "{backend:?}");
+            // Highest priority first, exactly as per-task inserts.
+            assert_eq!(q.select(0), Some(t(5)), "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn feedback_outcomes_are_counted_on_both_backends() {
+        for backend in SchedBackend::ALL {
+            let q = backend.build(2);
+            q.feedback(StealOutcome::Granted);
+            q.feedback(StealOutcome::DeniedWaitingTime);
+            q.feedback(StealOutcome::DeniedWaitingTime);
+            q.feedback(StealOutcome::DeniedEmpty);
+            let s = q.stats();
+            assert_eq!(s.feedback_grants, 1, "{backend:?}");
+            assert_eq!(s.feedback_wt_denials, 2, "{backend:?}");
+        }
     }
 }

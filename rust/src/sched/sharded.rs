@@ -22,13 +22,18 @@
 //!   allowance, so a steal request normally never blocks a worker
 //!   `select`.
 //!
-//! The spill watermark **adapts to the observed steal-success rate**
-//! (AIMD, clamped to `[WATERMARK_MIN, WATERMARK_MAX]`): an extraction
-//! the pool cannot cover is a steal near-miss, so the watermark drops
-//! multiplicatively (shards spill earlier, feeding thieves); a worker
-//! that has to take work *back* from the pool means spilling was too
-//! eager, so the watermark creeps up additively. [`SPILL_THRESHOLD`] is
-//! the initial value.
+//! The spill watermark **adapts to the gate's observed verdicts** (AIMD,
+//! clamped to `[WATERMARK_MIN, WATERMARK_MAX]`): the victim-side
+//! decision reports back through [`ShardedQueue::feedback`]
+//! ([`StealOutcome`]), closing the §3 waiting-time loop. A granted steal
+//! means thieves are being fed, so the watermark drops multiplicatively
+//! (shards spill earlier, filling the pool for the next request); a
+//! waiting-time denial means queued tasks will run locally sooner than
+//! they could migrate, so the watermark rises additively (keep tasks in
+//! the shards). A worker that has to take work *back* from the pool
+//! also raises it — spilling was too eager. [`SPILL_THRESHOLD`] is the
+//! initial value. (Before the feedback hook, only pool pressure fed the
+//! watermark and the gate's denial signal was thrown away.)
 //!
 //! Steal accounting (`stealable_count`/`stealable_payload_bytes`) lives
 //! in atomics maintained on insert/select/extract — an O(1) read for the
@@ -48,7 +53,7 @@ use std::sync::Mutex;
 
 use crate::dataflow::task::TaskDesc;
 
-use super::{QKey, SchedStats, Scheduler, TaskMeta};
+use super::{QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
 
 /// Initial spill watermark (20 ≈ half the paper's 40 workers, the same
 /// constant PaRSEC uses for chunked victim policies). The live value
@@ -131,6 +136,10 @@ pub struct ShardedQueue {
     steal_extracted: AtomicU64,
     select_len_sum: AtomicU64,
     scans: AtomicU64,
+    batch_inserts: AtomicU64,
+    batch_saved_locks: AtomicU64,
+    feedback_grants: AtomicU64,
+    feedback_wt_denials: AtomicU64,
     /// Shard-empty batch rebalances performed (diagnostics).
     rebalances: AtomicU64,
 }
@@ -153,6 +162,10 @@ impl ShardedQueue {
             steal_extracted: AtomicU64::new(0),
             select_len_sum: AtomicU64::new(0),
             scans: AtomicU64::new(0),
+            batch_inserts: AtomicU64::new(0),
+            batch_saved_locks: AtomicU64::new(0),
+            feedback_grants: AtomicU64::new(0),
+            feedback_wt_denials: AtomicU64::new(0),
             rebalances: AtomicU64::new(0),
         }
     }
@@ -192,8 +205,10 @@ impl ShardedQueue {
         self.stealable_bytes.load(Ordering::Relaxed)
     }
 
-    /// Additive raise: a worker had to take work back from the pool, so
-    /// spilling was too eager.
+    /// Additive raise, fired by both "keep tasks local" signals: a
+    /// waiting-time denial fed back through [`ShardedQueue::feedback`],
+    /// or a worker having to take work back from the pool (spilling was
+    /// too eager).
     fn raise_watermark(&self) {
         let w = self.watermark.load(Ordering::Relaxed);
         if w < WATERMARK_MAX {
@@ -201,33 +216,82 @@ impl ShardedQueue {
         }
     }
 
-    /// Multiplicative lower: a steal request found the pool short, so
-    /// shards should spill earlier (AIMD keeps the two pressures from
-    /// oscillating).
+    /// Multiplicative lower: a granted steal says thieves are being
+    /// fed, so shards should spill earlier (AIMD keeps the two
+    /// pressures from oscillating).
     fn lower_watermark(&self) {
         let w = self.watermark.load(Ordering::Relaxed);
         let next = w.saturating_sub(1 + w / 8).max(WATERMARK_MIN);
         self.watermark.store(next, Ordering::Relaxed);
     }
 
+    /// Gate-outcome feedback from the victim-side steal decision (the
+    /// closed loop of the module docs): waiting-time denials raise the
+    /// spill watermark — the gate just measured that queued tasks reach
+    /// a local worker faster than they migrate — and grants lower it so
+    /// the pool stays stocked for the next thief.
+    pub fn feedback(&self, outcome: StealOutcome) {
+        match outcome {
+            StealOutcome::Granted => {
+                self.feedback_grants.fetch_add(1, Ordering::Relaxed);
+                self.lower_watermark();
+            }
+            StealOutcome::DeniedWaitingTime => {
+                self.feedback_wt_denials.fetch_add(1, Ordering::Relaxed);
+                self.raise_watermark();
+            }
+            StealOutcome::DeniedEmpty => {}
+        }
+    }
+
     pub fn insert(&self, task: TaskDesc, priority: i64) {
         self.insert_meta(task, priority, TaskMeta::default());
     }
 
-    pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
-        // `seq`/`rr`/stat counters only need uniqueness, not ordering
-        // guarantees (a thread's own RMWs on one atomic stay in program
-        // order), so Relaxed keeps them off the coherence hot path.
-        // `count`/`stealable_cnt` are the exception: they SeqCst-pair
-        // with the threaded runtime's parked-worker protocol and Safra
-        // passivity checks.
+    /// Next queue key. `seq` only needs uniqueness, not ordering (a
+    /// thread's own RMWs on one atomic stay in program order), so
+    /// Relaxed keeps it off the coherence hot path; the global sequence
+    /// makes FIFO tie-breaking consistent across shards and with the
+    /// central backend.
+    fn key_for(&self, priority: i64) -> QKey {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
-        let key = QKey {
+        QKey {
             prio: priority,
             age: u64::MAX - seq,
-        };
-        // Count up BEFORE the task becomes selectable: a concurrent
-        // passivity check must never see empty while a task exists.
+        }
+    }
+
+    /// Shed everything over the watermark from a locked shard, lowest
+    /// priority first. The caller moves the result into the pool
+    /// *after* unlocking the shard — at most one lock is ever held.
+    fn drain_spill(shard: &mut Shard, watermark: usize) -> Vec<(QKey, (TaskDesc, TaskMeta))> {
+        let mut spilled = Vec::new();
+        while shard.len() > watermark {
+            match shard.pop_first() {
+                Some(entry) => spilled.push(entry),
+                None => break,
+            }
+        }
+        spilled
+    }
+
+    fn pool_insert(&self, spilled: Vec<(QKey, (TaskDesc, TaskMeta))>) {
+        if spilled.is_empty() {
+            return;
+        }
+        let mut pool = self.pool.lock().unwrap();
+        for (k, (t, m)) in spilled {
+            pool.insert(k, t, m);
+        }
+    }
+
+    pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
+        // `rr`/stat counters only need uniqueness, so Relaxed; `count`/
+        // `stealable_cnt` are the exception: they SeqCst-pair with the
+        // threaded runtime's parked-worker protocol and Safra passivity
+        // checks, and count up BEFORE the task becomes selectable — a
+        // concurrent passivity check must never see empty while a task
+        // exists.
         self.count.fetch_add(1, Ordering::SeqCst);
         if meta.stealable {
             self.stealable_cnt.fetch_add(1, Ordering::SeqCst);
@@ -240,16 +304,51 @@ impl ShardedQueue {
         let watermark = self.watermark.load(Ordering::Relaxed);
         let spilled = {
             let mut shard = self.shards[shard_ix].lock().unwrap();
-            shard.insert(key, task, meta);
-            if shard.len() > watermark {
-                shard.pop_first()
-            } else {
-                None
-            }
+            shard.insert(self.key_for(priority), task, meta);
+            Self::drain_spill(&mut shard, watermark)
         };
-        if let Some((k, (t, m))) = spilled {
-            self.pool.lock().unwrap().insert(k, t, m);
+        self.pool_insert(spilled);
+    }
+
+    /// Batched insert: the whole batch lands in one shard under one
+    /// shard-lock acquisition (plus at most one pool lock for spill),
+    /// instead of `len` round-robin single-lock inserts. Used by the
+    /// bulk-arrival paths — steal-reply re-enqueue and gate-denial
+    /// reinsert — where the tasks arrive together anyway; a thief was
+    /// starving when it asked, so concentrating the batch in one shard
+    /// costs nothing (neighbor rebalancing redistributes on demand).
+    pub fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        if batch.is_empty() {
+            return;
         }
+        // Same visibility contract as insert_meta (counts up BEFORE the
+        // tasks become selectable), aggregated into one RMW per counter.
+        self.count.fetch_add(batch.len(), Ordering::SeqCst);
+        let stealable = batch.iter().filter(|(_, _, m)| m.stealable).count();
+        if stealable > 0 {
+            self.stealable_cnt.fetch_add(stealable, Ordering::SeqCst);
+            let bytes: u64 = batch
+                .iter()
+                .filter(|(_, _, m)| m.stealable)
+                .map(|(_, _, m)| m.payload_bytes)
+                .sum();
+            self.stealable_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+        self.inserts.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        self.batch_inserts.fetch_add(1, Ordering::Relaxed);
+        self.batch_saved_locks
+            .fetch_add(batch.len() as u64 - 1, Ordering::Relaxed);
+        let shard_ix =
+            (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
+        let watermark = self.watermark.load(Ordering::Relaxed);
+        let spilled = {
+            let mut shard = self.shards[shard_ix].lock().unwrap();
+            for &(task, priority, meta) in batch {
+                shard.insert(self.key_for(priority), task, meta);
+            }
+            Self::drain_spill(&mut shard, watermark)
+        };
+        self.pool_insert(spilled);
     }
 
     /// Book the removal of one selected task (and its steal accounting).
@@ -345,14 +444,15 @@ impl ShardedQueue {
 
     /// Victim-side extraction via the stealable indices: drain the pool
     /// (lowest priority first); only when the pool cannot satisfy the
-    /// allowance does the walk visit the shards' indices — and that
-    /// near-miss lowers the spill watermark so the next request finds a
-    /// fuller pool.
+    /// allowance does the walk visit the shards' indices. Watermark
+    /// adaptation happens in [`ShardedQueue::feedback`], driven by the
+    /// gate's verdict on the extracted batch — a pool near-miss on a
+    /// request the gate was going to deny anyway is *not* a reason to
+    /// spill more.
     pub fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
         if max == 0 {
             return Vec::new();
         }
-        let had_stealable = self.stealable_cnt.load(Ordering::SeqCst) > 0;
         let mut out = Vec::new();
         let mut payload = 0u64;
         {
@@ -366,9 +466,6 @@ impl ShardedQueue {
             }
         }
         if out.len() < max {
-            if had_stealable {
-                self.lower_watermark();
-            }
             // Fallback honors the same contract as the central backend:
             // globally lowest priority first, not shard order. Snapshot
             // the stealable indices one lock at a time, sort, then
@@ -524,6 +621,11 @@ impl ShardedQueue {
             steal_extracted: self.steal_extracted.load(Ordering::Relaxed),
             select_len_sum: self.select_len_sum.load(Ordering::Relaxed),
             scans: self.scans.load(Ordering::Relaxed),
+            batch_inserts: self.batch_inserts.load(Ordering::Relaxed),
+            batch_saved_locks: self.batch_saved_locks.load(Ordering::Relaxed),
+            feedback_grants: self.feedback_grants.load(Ordering::Relaxed),
+            feedback_wt_denials: self.feedback_wt_denials.load(Ordering::Relaxed),
+            watermark: self.watermark.load(Ordering::Relaxed) as u64,
         }
     }
 
@@ -560,6 +662,14 @@ impl ShardedQueue {
 impl Scheduler for ShardedQueue {
     fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
         ShardedQueue::insert_meta(self, task, priority, meta)
+    }
+
+    fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        ShardedQueue::insert_batch_meta(self, batch)
+    }
+
+    fn feedback(&self, outcome: StealOutcome) {
+        ShardedQueue::feedback(self, outcome)
     }
 
     fn select(&self, worker: usize) -> Option<TaskDesc> {
@@ -730,13 +840,31 @@ mod tests {
     fn watermark_adapts_both_ways() {
         let q = ShardedQueue::new(1);
         assert_eq!(q.watermark(), SPILL_THRESHOLD);
-        // Steal requests that the pool cannot cover drive it down...
-        q.insert(t(0), 0);
+        // Granted steals (gate feedback) drive it down...
         for _ in 0..50 {
-            let _ = q.extract_stealable(2); // pool always short
-            q.insert(t(0), 0); // keep one stealable task around
+            q.insert(t(0), 0);
+            let got = q.extract_stealable(1);
+            assert_eq!(got.len(), 1);
+            q.feedback(StealOutcome::Granted);
         }
-        assert_eq!(q.watermark(), WATERMARK_MIN, "misses floor the watermark");
+        assert_eq!(q.watermark(), WATERMARK_MIN, "grants floor the watermark");
+        // ...waiting-time denials push it back up additively...
+        for _ in 0..10 {
+            q.feedback(StealOutcome::DeniedWaitingTime);
+        }
+        assert_eq!(q.watermark(), WATERMARK_MIN + 10, "denials raise it");
+        assert_eq!(q.stats().feedback_wt_denials, 10);
+        assert_eq!(q.stats().feedback_grants, 50);
+        // ...and saturate at the ceiling.
+        for _ in 0..(2 * WATERMARK_MAX) {
+            q.feedback(StealOutcome::DeniedWaitingTime);
+        }
+        assert_eq!(q.watermark(), WATERMARK_MAX);
+        // Reset down for the reclaim half of the test.
+        for _ in 0..100 {
+            q.feedback(StealOutcome::Granted);
+        }
+        assert_eq!(q.watermark(), WATERMARK_MIN);
         // ...and workers reclaiming pooled tasks push it back up: with
         // the watermark at the floor, inserts beyond it spill, and a
         // draining worker must take them back from the pool.
@@ -761,12 +889,36 @@ mod tests {
         let q = ShardedQueue::new(2);
         for _ in 0..20 {
             assert!(q.extract_stealable(4).is_empty());
+            q.feedback(StealOutcome::DeniedEmpty);
         }
         assert_eq!(
             q.watermark(),
             SPILL_THRESHOLD,
             "nothing stealable -> no adaptation signal"
         );
+    }
+
+    #[test]
+    fn batch_insert_spills_past_the_watermark() {
+        let q = ShardedQueue::new(1);
+        let batch: Vec<(TaskDesc, i64, TaskMeta)> = (0..(SPILL_THRESHOLD as u32 + 6))
+            .map(|i| (t(i), i as i64, TaskMeta::default()))
+            .collect();
+        q.insert_batch_meta(&batch);
+        assert_eq!(q.len(), SPILL_THRESHOLD + 6);
+        assert_eq!(q.pool_len(), 6, "overflow spilled to the pool");
+        assert_eq!(q.stats().batch_inserts, 1);
+        assert_eq!(q.stats().batch_saved_locks, SPILL_THRESHOLD as u64 + 5);
+        // Spilled tasks are the lowest priorities and stay stealable.
+        let stolen = q.extract_stealable(6);
+        assert_eq!(stolen.len(), 6);
+        assert!(stolen.iter().all(|s| (s.i as i64) < 6), "{stolen:?}");
+        // Everything still selectable; nothing lost.
+        let mut seen = 0;
+        while q.select(0).is_some() {
+            seen += 1;
+        }
+        assert_eq!(seen, SPILL_THRESHOLD);
     }
 
     #[test]

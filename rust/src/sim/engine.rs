@@ -28,7 +28,8 @@ use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    is_starving, protocol::decide_steal, MigrateConfig, StarvationView, StealStats,
+    ewma_update, exec_estimate_us, is_starving, protocol::decide_steal, MigrateConfig,
+    StarvationView, StealStats,
 };
 use crate::sched::{SchedBackend, Scheduler, TaskMeta};
 use crate::util::rng::Rng;
@@ -152,6 +153,10 @@ struct SimNode {
     idle_workers: usize,
     tasks_done: u64,
     exec_sum_us: f64,
+    /// EWMA of observed execution times (µs); 0.0 = no history. Feeds
+    /// the waiting-time gate under `MigrateConfig::exec_ewma` — the DES
+    /// mirror of the threaded runtime's atomic-bits EWMA.
+    exec_ewma_us: f64,
     busy_us: f64,
     steal: StealStats,
     inflight_steals: usize,
@@ -209,6 +214,7 @@ impl Simulator {
                 idle_workers: cfg.workers_per_node,
                 tasks_done: 0,
                 exec_sum_us: 0.0,
+                exec_ewma_us: 0.0,
                 busy_us: 0.0,
                 steal: StealStats::default(),
                 inflight_steals: 0,
@@ -259,14 +265,16 @@ impl Simulator {
                 .all(|n| n.queue.is_empty() && n.executing.is_empty())
     }
 
-    fn avg_exec_us(node: &SimNode) -> f64 {
-        if node.tasks_done == 0 {
-            // No history yet: optimistic small value (PaRSEC starts the
-            // same way; converges after the first few tasks).
-            1.0
-        } else {
-            node.exec_sum_us / node.tasks_done as f64
-        }
+    /// The victim's execution-time estimate for the waiting-time gate
+    /// (shared policy helper, so the threaded runtime cannot diverge).
+    fn victim_avg_exec_us(&self, node_ix: usize) -> f64 {
+        let node = &self.nodes[node_ix];
+        exec_estimate_us(
+            self.migrate.exec_ewma,
+            node.exec_ewma_us,
+            node.exec_sum_us,
+            node.tasks_done,
+        )
     }
 
     /// Pull ready tasks onto idle workers.
@@ -337,6 +345,9 @@ impl Simulator {
             node.idle_workers += 1;
             node.tasks_done += 1;
             node.exec_sum_us += dur;
+            if self.migrate.exec_ewma {
+                node.exec_ewma_us = ewma_update(node.exec_ewma_us, dur);
+            }
             node.busy_us += dur;
         }
         // Remote successors sharing a destination coalesce into one
@@ -450,7 +461,7 @@ impl Simulator {
     fn on_steal_request(&mut self, victim_id: NodeId, thief: NodeId) {
         let graph = self.graph.clone();
         let workers = self.cfg.workers_per_node;
-        let avg = Self::avg_exec_us(&self.nodes[victim_id.idx()]);
+        let avg = self.victim_avg_exec_us(victim_id.idx());
         let link = self.cfg.link;
         let node = &mut self.nodes[victim_id.idx()];
         node.steal.requests_served += 1;
@@ -499,20 +510,23 @@ impl Simulator {
             if !tasks.is_empty() {
                 node.steal.successful_steals += 1;
                 node.steal.tasks_received += tasks.len() as u64;
-            }
-            for t in &tasks {
-                // Fig. 3 instrumentation: queue length seen by the stolen
-                // task as it arrives (before insertion).
+                // Fig. 3 instrumentation: queue length each stolen task
+                // would have seen arriving one-by-one (len, len+1, …),
+                // sampled before the batch insert.
                 if self.cfg.record_polls {
                     let ready = node.queue.len() as u32;
-                    node.arrival_ready.push(PollSample {
-                        t_us: self.now_us,
-                        ready,
-                    });
+                    for k in 0..tasks.len() as u32 {
+                        node.arrival_ready.push(PollSample {
+                            t_us: self.now_us,
+                            ready: ready + k,
+                        });
+                    }
                 }
-                // Recreate the task (same uid) at the thief.
+                // Recreate the tasks (same uids) at the thief in one
+                // batched insert — the DES mirror of the threaded
+                // runtime's one-lock-per-reply re-enqueue.
                 node.queue
-                    .insert_meta(*t, graph.priority(*t), TaskMeta::of(graph.as_ref(), *t));
+                    .insert_batch_meta(&TaskMeta::batch_of(graph.as_ref(), &tasks));
             }
         }
         if !tasks.is_empty() {
@@ -610,6 +624,7 @@ impl Simulator {
                         0.0
                     },
                     steal: n.steal,
+                    sched: n.queue.stats(),
                     polls: n.polls,
                     arrival_ready: n.arrival_ready,
                 })
@@ -703,6 +718,7 @@ mod tests {
                         poll_interval_us: 50.0,
                         max_inflight: 1,
                         migrate_overhead_us: 150.0,
+                        exec_ewma: gate,
                     };
                     let r = sim(chol(10, 4), mc, 7, 2);
                     assert_eq!(
@@ -814,6 +830,115 @@ mod tests {
         let g = chol(8, 1);
         let r = sim(g, MigrateConfig::default(), 9, 4);
         assert_eq!(r.total_steals().requests_sent, 0);
+    }
+
+    /// The closed loop end to end in the DES: an all-on-node-0 UTS run
+    /// whose migrate overhead makes every steal lose the waiting-time
+    /// comparison must (a) deny heavily, (b) raise node 0's sharded
+    /// spill watermark through the feedback hook, and (c) still record
+    /// the denials on the central backend.
+    #[test]
+    fn denial_heavy_run_raises_sharded_watermark() {
+        let mk_graph = || {
+            Arc::new(UtsGraph::new(UtsParams {
+                b0: 32,
+                m: 4,
+                q: 0.3,
+                g: 50_000.0,
+                seed: 5,
+                nodes: 4,
+                max_depth: 24,
+            }))
+        };
+        let mc = MigrateConfig {
+            poll_interval_us: 20.0,
+            migrate_overhead_us: 1e9, // migration always loses the gate
+            ..MigrateConfig::default()
+        };
+        for sched in SchedBackend::ALL {
+            let g = mk_graph();
+            let size = g.tree_size(10_000_000);
+            let r = sim_with(g, mc, 3, 4, sched);
+            assert_eq!(r.tasks_total_executed(), size, "{sched:?}");
+            let steals = r.total_steals();
+            assert!(
+                steals.waiting_time_denials > 10,
+                "{sched:?}: wanted a denial-heavy run, got {steals:?}"
+            );
+            assert_eq!(steals.successful_steals, 0, "{sched:?}: gate denies all");
+            // Node 0 is the only victim with work; its queue heard
+            // every denial through the feedback hook.
+            let fed: u64 = r.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
+            assert!(fed > 10, "{sched:?}: denials fed back ({fed})");
+            match sched {
+                SchedBackend::Sharded => assert!(
+                    r.nodes[0].sched.watermark > crate::sched::SPILL_THRESHOLD as u64,
+                    "denials must raise the watermark, got {}",
+                    r.nodes[0].sched.watermark
+                ),
+                SchedBackend::Central => {
+                    assert_eq!(r.nodes[0].sched.watermark, 0, "central has no watermark")
+                }
+            }
+        }
+    }
+
+    /// The thief-side re-enqueue is exactly one batched insert per
+    /// non-empty steal reply: with the gate off nothing else batches,
+    /// so Σ batch_inserts == Σ successful_steals, and the lock saving
+    /// is Σ (tasks_received − replies).
+    #[test]
+    fn steal_reply_reenqueue_is_one_batch_per_reply() {
+        for sched in SchedBackend::ALL {
+            let g = Arc::new(UtsGraph::new(UtsParams {
+                b0: 32,
+                m: 4,
+                q: 0.3,
+                g: 50_000.0,
+                seed: 5,
+                nodes: 4,
+                max_depth: 24,
+            }));
+            let mc = MigrateConfig {
+                poll_interval_us: 20.0,
+                use_waiting_time: false, // no denial reinserts
+                victim: crate::migrate::VictimPolicy::Chunk(4),
+                ..MigrateConfig::default()
+            };
+            let r = sim_with(g, mc, 3, 4, sched);
+            let steals = r.total_steals();
+            assert!(steals.successful_steals > 0, "{sched:?}");
+            let batches: u64 = r.nodes.iter().map(|n| n.sched.batch_inserts).sum();
+            let saved: u64 = r.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
+            assert_eq!(
+                batches, steals.successful_steals,
+                "{sched:?}: exactly one batched insert per non-empty reply"
+            );
+            assert_eq!(
+                saved,
+                steals.tasks_received - steals.successful_steals,
+                "{sched:?}: lock saving = tasks − replies"
+            );
+        }
+    }
+
+    /// `--exec-ewma` changes only the gate's execution-time estimate:
+    /// every task still executes exactly once on both backends, and the
+    /// run remains deterministic given the seed.
+    #[test]
+    fn exec_ewma_gate_preserves_completion_and_determinism() {
+        for sched in SchedBackend::ALL {
+            let g = chol(10, 3);
+            let total = g.total_tasks().unwrap();
+            let mc = MigrateConfig {
+                exec_ewma: true,
+                ..MigrateConfig::default()
+            };
+            let a = sim_with(g.clone(), mc, 11, 4, sched);
+            assert_eq!(a.tasks_total_executed(), total, "{sched:?}");
+            let b = sim_with(chol(10, 3), mc, 11, 4, sched);
+            assert_eq!(a.makespan_us, b.makespan_us, "{sched:?}: deterministic");
+        }
     }
 
     #[test]

@@ -86,6 +86,7 @@ fn real_runtime_steals_preserve_exactly_once() {
                         poll_interval_us: 20.0,
                         max_inflight: 1,
                         migrate_overhead_us: 150.0,
+                        exec_ewma: false,
                     },
                     seed: 5,
                     record_polls: false,

@@ -32,6 +32,7 @@ fn random_migrate(rng: &mut Rng) -> MigrateConfig {
         poll_interval_us: 10.0 + rng.uniform() * 200.0,
         max_inflight: 1 + rng.below(3) as usize,
         migrate_overhead_us: rng.uniform() * 300.0,
+        exec_ewma: rng.uniform() < 0.5,
     }
 }
 
@@ -304,6 +305,70 @@ fn prop_victim_allowance_bounds() {
                 q.len() + d.tasks.len() == before,
                 "queue conservation violated"
             );
+            Ok(())
+        },
+    );
+}
+
+/// CLI-surface drift guard: every policy label the code can print must
+/// parse back to the same policy, across every accepted spelling of the
+/// chunk size (`chunk`, `chunk8`, `chunk(8)`, `chunk=8`, `chunk-8`) —
+/// so the README, `--help` text and the parser cannot diverge.
+#[test]
+fn prop_policy_label_fromstr_round_trip() {
+    check(
+        "policy-label-roundtrip",
+        Config {
+            cases: 96,
+            max_size: 4096,
+            seed: 0x1ABE1,
+        },
+        |rng, size| {
+            let k = 1 + rng.below(size as u64) as usize;
+            for victim in [
+                VictimPolicy::Half,
+                VictimPolicy::Single,
+                VictimPolicy::Chunk(k),
+            ] {
+                let label = victim.label();
+                let parsed = label
+                    .parse::<VictimPolicy>()
+                    .map_err(|e| format!("label '{label}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == victim,
+                    "label '{label}' round-tripped to {parsed:?}"
+                );
+            }
+            for spelling in [
+                format!("chunk{k}"),
+                format!("chunk({k})"),
+                format!("chunk={k}"),
+                format!("chunk-{k}"),
+                format!("Chunk({k})"),
+            ] {
+                let parsed = spelling
+                    .parse::<VictimPolicy>()
+                    .map_err(|e| format!("spelling '{spelling}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == VictimPolicy::Chunk(k),
+                    "'{spelling}' parsed to {parsed:?}, wanted Chunk({k})"
+                );
+            }
+            // Bare "chunk" is the paper's default chunk of 20.
+            prop_assert!(
+                "chunk".parse::<VictimPolicy>() == Ok(VictimPolicy::Chunk(20)),
+                "bare 'chunk' must mean Chunk(20)"
+            );
+            for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
+                let label = thief.label();
+                let parsed = label
+                    .parse::<ThiefPolicy>()
+                    .map_err(|e| format!("label '{label}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == thief,
+                    "label '{label}' round-tripped to {parsed:?}"
+                );
+            }
             Ok(())
         },
     );

@@ -295,6 +295,93 @@ fn prop_incremental_accounting_matches_oracle() {
     );
 }
 
+/// `insert_batch_meta` is observationally equivalent to the same
+/// sequence of `insert_meta` calls on the central backend (identical
+/// select order and accounting), and preserves the accounting +
+/// conservation contract on the sharded one (placement may differ — a
+/// batch lands in one shard — but nothing is lost and the incremental
+/// census stays exact).
+#[test]
+fn prop_batch_insert_matches_sequential_insert() {
+    fn meta_of(i: u32) -> TaskMeta {
+        TaskMeta {
+            stealable: i % 3 != 0,
+            payload_bytes: 8 + (i as u64 % 7) * 32,
+        }
+    }
+    check(
+        "batch-insert-equivalence",
+        Config {
+            cases: 48,
+            max_size: 160,
+            seed: 0xBA7C,
+        },
+        |rng, size| {
+            let workers = 1 + rng.below(6) as usize;
+            // Pre-fill both queues identically, then apply one batch vs
+            // the same triples one at a time.
+            let pre: Vec<(u32, i64)> = (0..rng.below(20) as u32)
+                .map(|i| (1000 + i, rng.next_u64() as i64 % 50))
+                .collect();
+            let batch: Vec<(TaskDesc, i64, TaskMeta)> = (0..size as u32)
+                .map(|i| (t(i), rng.next_u64() as i64 % 50, meta_of(i)))
+                .collect();
+
+            let a = CentralQueue::new();
+            let b = CentralQueue::new();
+            for &(i, prio) in &pre {
+                a.insert_meta(t(i), prio, meta_of(i));
+                b.insert_meta(t(i), prio, meta_of(i));
+            }
+            a.insert_batch_meta(&batch);
+            for &(task, prio, meta) in &batch {
+                b.insert_meta(task, prio, meta);
+            }
+            prop_assert!(
+                a.stealable_count() == b.stealable_count()
+                    && a.stealable_payload_bytes() == b.stealable_payload_bytes(),
+                "central: accounting diverged"
+            );
+            for step in 0..a.len() {
+                let (x, y) = (a.select(), b.select());
+                prop_assert!(x == y, "central: select diverged at {step}: {x:?} vs {y:?}");
+            }
+
+            // Sharded: conservation + exact census after a batch.
+            let q = ShardedQueue::new(workers);
+            for &(i, prio) in &pre {
+                q.insert_meta(t(i), prio, meta_of(i));
+            }
+            q.insert_batch_meta(&batch);
+            let pre_stealable = pre.iter().filter(|(i, _)| meta_of(*i).stealable).count();
+            let want_stealable =
+                pre_stealable + batch.iter().filter(|(_, _, m)| m.stealable).count();
+            prop_assert!(
+                q.stealable_count() == want_stealable,
+                "sharded: stealable {} != {want_stealable}",
+                q.stealable_count()
+            );
+            prop_assert!(
+                q.len() == pre.len() + batch.len(),
+                "sharded: len {} != {}",
+                q.len(),
+                pre.len() + batch.len()
+            );
+            let mut drained = 0;
+            for w in 0..workers {
+                while q.select(w).is_some() {
+                    drained += 1;
+                }
+            }
+            prop_assert!(
+                drained == pre.len() + batch.len(),
+                "sharded: conservation violated ({drained})"
+            );
+            Ok(())
+        },
+    );
+}
+
 /// Diagnostics agree: after identical inserts, both backends report the
 /// same length and max priority.
 #[test]
