@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
                 record_polls: false,
                 sched: SchedBackend::Central,
                 batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
             },
             ex.clone(),
         );

@@ -10,8 +10,9 @@
 use std::sync::Arc;
 
 use parsteal::comm::LinkModel;
+use parsteal::dataflow::task::TaskClass;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
-use parsteal::sched::SchedBackend;
+use parsteal::sched::{BatchSite, POOL_FLOOR, SchedBackend};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::stats::Summary;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
@@ -61,6 +62,7 @@ fn main() {
                 record_polls: false,
                 sched,
                 batch_activations: true,
+                pool_floor: POOL_FLOOR,
             },
             CostModel::default_calibrated(),
             migrate,
@@ -88,6 +90,7 @@ fn main() {
             "thief", "victim", "gate", "mean(s)", "sd", "speedup", "steal%"
         );
 
+        let mut site_batches = [0u64; BatchSite::COUNT];
         for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
             for victim in [
                 VictimPolicy::Single,
@@ -104,6 +107,7 @@ fn main() {
                         max_inflight: 1,
                         migrate_overhead_us: 150.0,
                         exec_ewma: false,
+                        exec_per_class: false,
                     };
                     let mut times = Vec::new();
                     let mut pct = 0.0;
@@ -111,6 +115,9 @@ fn main() {
                         let r = run(mc, 100 + s, sched);
                         times.push(r.makespan_us / 1e6);
                         pct += r.total_steals().success_pct();
+                        for (ix, (_, batches, _)) in r.batch_site_totals().iter().enumerate() {
+                            site_batches[ix] += batches;
+                        }
                     }
                     let su = Summary::of(&times);
                     println!(
@@ -126,6 +133,30 @@ fn main() {
                 }
             }
         }
+        // The split batch accounting, summed over the sweep: activation
+        // ready sets dominate, steal replies and gate denials follow the
+        // policy mix.
+        let batches = BatchSite::ALL
+            .iter()
+            .map(|s| format!("{} {}", s.label(), site_batches[s.idx()]))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("[{}] batched inserts: {batches}", sched.label());
+        // One composition-aware run: the per-class estimate snapshot the
+        // --exec-per-class gate runs on (POTRF vs GEMM should differ).
+        let mc = MigrateConfig {
+            exec_per_class: true,
+            ..MigrateConfig::default()
+        };
+        let r = run(mc, 100, sched);
+        let est = r.class_est_us_max();
+        let classes = TaskClass::ALL
+            .iter()
+            .filter(|c| est[c.idx()] > 0.0)
+            .map(|c| format!("{} {:.1}µs", c.name(), est[c.idx()]))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("[{}] --exec-per-class estimates: {classes}", sched.label());
         println!();
     }
 }

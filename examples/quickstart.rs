@@ -62,6 +62,7 @@ fn main() {
                 record_polls: false,
                 sched: SchedBackend::Central,
                 batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
             },
             CostModel::default_calibrated(),
             migrate,

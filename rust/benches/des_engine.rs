@@ -34,6 +34,7 @@ fn run_once(tiles: u32, steal: bool, record_polls: bool) -> (u64, f64) {
             record_polls,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         CostModel::default_calibrated(),
         migrate,

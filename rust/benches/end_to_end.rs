@@ -37,6 +37,7 @@ fn sim_run(tiles: u32, tile_size: u32, steal: bool) -> (f64, f64) {
             record_polls: false,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         cost,
         migrate,
@@ -83,6 +84,7 @@ fn main() {
             record_polls: false,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         Arc::new(NullExecutor),
     );

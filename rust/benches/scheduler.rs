@@ -13,12 +13,20 @@
 //!
 //! Part 3 — the steal-decision microbench: one full victim-side
 //! `decide_steal` poll (O(1) census + waiting-time gate + index-based
-//! extraction) at 1/8/40 workers on both backends. Steady state is
-//! denial-heavy (huge payloads), so the run also exercises the feedback
-//! loop: each cell reports the denials fed back and the sharded spill
-//! watermark after the run. `--json PATH` writes medians + telemetry
-//! for CI (`BENCH_PR3.json`); `--steal-decision-only` skips the slower
-//! parts.
+//! extraction) at 1/8/40 workers on both backends, in two denial
+//! regimes: *payload-certain* (the min-payload bound proves the denial
+//! without extracting — the poll is pure accounting reads) and
+//! *payload-weighing* (a light outlier forces extract-and-reinsert —
+//! the PR 3 steady state). Each cell reports the feedback telemetry.
+//!
+//! Part 4 — the activation-batching microbench: 1000 ready activations
+//! entering a queue per task vs as ready-set batches, with the
+//! queue-lock acquisition counts read back from the scheduler's own
+//! counters.
+//!
+//! `--json PATH` writes medians + telemetry for CI (`BENCH_PR4.json`,
+//! including the per-class gate's waiting-time comparison);
+//! `--steal-decision-only` skips the slower parts.
 //!
 //!     cargo bench --bench scheduler [-- [--steal-decision-only] [--json PATH]]
 
@@ -27,9 +35,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
-use parsteal::dataflow::ttg::TtgBuilder;
-use parsteal::migrate::{protocol::decide_steal, MigrateConfig, VictimPolicy};
-use parsteal::sched::{SPILL_THRESHOLD, SchedBackend, SchedQueue, SchedStats, Scheduler, TaskMeta};
+use parsteal::dataflow::ttg::{DynGraph, TtgBuilder};
+use parsteal::migrate::{
+    protocol::decide_steal, waiting_time_per_class_us, waiting_time_us, ExecSnapshot,
+    MigrateConfig, VictimPolicy,
+};
+use parsteal::sched::{
+    BatchSite, SPILL_THRESHOLD, SchedBackend, SchedQueue, SchedStats, Scheduler, TaskMeta,
+};
 use parsteal::util::bench::Bencher;
 use parsteal::util::json::Json;
 
@@ -194,20 +207,8 @@ fn contention_benches() {
     );
 }
 
-/// One full victim-side steal poll per iteration, in steady state: the
-/// graph's payloads are large enough that the waiting-time gate denies
-/// every request, so the extracted task is re-inserted (one batched
-/// insert per denial) and the queue depth never drifts. Measures
-/// exactly what a migrate thread pays per poll: O(1) census + gate +
-/// index extraction + batched re-insert + feedback. Each cell also
-/// reports the feedback telemetry: denials fed back and the sharded
-/// watermark after the run (denial-heavy -> it must have risen).
-fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
-    println!();
-    println!("== steal decision: one decide_steal poll (gated, steady-state) ==");
-    let mut b = Bencher::default();
-    let mut medians = Vec::new();
-    let graph = TtgBuilder::new("bench", 2)
+fn bench_graph(payload: impl Fn(TaskDesc) -> u64 + Send + Sync + 'static) -> DynGraph {
+    TtgBuilder::new("bench", 2)
         .wrap_g(
             "c",
             |t| t.i % 2 == 0, // half the tasks stealable
@@ -216,8 +217,26 @@ fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
             |_| NodeId(0),
             |_| 1.0,
         )
-        .with_payload(|_| 1 << 30) // 1 GiB -> gate always denies
-        .build();
+        .with_payload(payload)
+        .build()
+}
+
+/// One full victim-side steal poll per iteration, in steady state, in
+/// two denial regimes. *Certain*: uniform 1 GiB payloads, so the
+/// min-payload bound proves every denial from the O(1) accounting —
+/// the poll never extracts, never reinserts, never pays the sharded
+/// fallback walk. *Weighing*: one 64 B outlier keeps the bound low, so
+/// every poll extracts, weighs the concrete batch, and returns it in
+/// one gate-denial batch — the PR 3 steady state. Each cell reports
+/// the feedback telemetry: denials fed back and the sharded watermark
+/// after the run (denial-heavy -> it must have risen).
+fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
+    println!();
+    println!("== steal decision: one decide_steal poll (gated, steady-state) ==");
+    let mut b = Bencher::default();
+    let mut medians = Vec::new();
+    let certain = bench_graph(|_| 1 << 30);
+    let weighing = bench_graph(|t| if t.i == 2 { 64 } else { 1 << 30 });
     let mc = MigrateConfig {
         victim: VictimPolicy::Single,
         use_waiting_time: true,
@@ -226,46 +245,168 @@ fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
     const DEPTH: u32 = 2048;
     for backend in SchedBackend::ALL {
         for workers in [1usize, 8, 40] {
-            let q = backend.build(workers);
-            for i in 0..DEPTH {
-                let t = TaskDesc::indexed(TaskClass::Gemm, i, 0, 0);
-                q.insert_meta(t, (i % 97) as i64, TaskMeta::of(&graph, t));
-            }
-            let name = format!(
-                "decide_steal {}  {workers:>2} workers  depth={DEPTH}",
-                backend.label()
-            );
-            let r = b.bench(&name, || {
-                decide_steal(&mc, &graph, q.as_ref(), workers, 10.0, 5.0, 1e3)
-            });
-            let stats = q.stats();
-            medians.push((name, r.median_ns(), stats));
-            assert_eq!(q.len() as u32, DEPTH, "gate denial must restore the queue");
-            assert_eq!(
-                stats.scans,
-                0,
-                "steal polls must not scan ({})",
-                backend.label()
-            );
-            assert_eq!(
-                stats.batch_inserts, stats.feedback_wt_denials,
-                "one batched reinsert per denial ({})",
-                backend.label()
-            );
-            if backend == SchedBackend::Sharded {
-                assert!(
-                    stats.watermark as usize > SPILL_THRESHOLD,
-                    "denial-heavy steady state must raise the watermark ({} <= {SPILL_THRESHOLD})",
-                    stats.watermark
+            for (kind, graph) in [("certain", &certain), ("weighing", &weighing)] {
+                let q = backend.build(workers);
+                for i in 0..DEPTH {
+                    let t = TaskDesc::indexed(TaskClass::Gemm, i, 0, 0);
+                    q.insert_meta(t, (i % 97) as i64, TaskMeta::of(graph, t));
+                }
+                let est = ExecSnapshot::uniform(10.0);
+                let name = format!(
+                    "decide_steal {} {kind:<8} {workers:>2} workers depth={DEPTH}",
+                    backend.label()
                 );
+                let r = b.bench(&name, || {
+                    decide_steal(&mc, graph, q.as_ref(), workers, &est, 5.0, 1e3)
+                });
+                let stats = q.stats();
+                medians.push((name, r.median_ns(), stats));
+                assert_eq!(q.len() as u32, DEPTH, "gate denial must restore the queue");
+                assert_eq!(
+                    stats.scans,
+                    0,
+                    "steal polls must not scan ({})",
+                    backend.label()
+                );
+                if kind == "certain" {
+                    assert_eq!(
+                        stats.steal_extracted, 0,
+                        "payload-certain polls must not extract ({})",
+                        backend.label()
+                    );
+                    assert_eq!(
+                        stats.extract_fallback_walks, 0,
+                        "payload-certain polls must not walk the shards ({})",
+                        backend.label()
+                    );
+                    assert_eq!(stats.batch_inserts(), 0, "nothing to reinsert");
+                } else {
+                    assert!(stats.steal_extracted > 0, "weighing polls extract");
+                    assert_eq!(
+                        stats.site(BatchSite::GateDenial).batches,
+                        stats.feedback_wt_denials,
+                        "one batched reinsert per denial ({})",
+                        backend.label()
+                    );
+                }
+                if backend == SchedBackend::Sharded {
+                    assert!(
+                        stats.watermark as usize > SPILL_THRESHOLD,
+                        "denial-heavy steady state must raise the watermark \
+                         ({} <= {SPILL_THRESHOLD})",
+                        stats.watermark
+                    );
+                }
             }
         }
     }
     medians
 }
 
-fn write_json(path: &str, medians: &[(String, f64, SchedStats)]) {
-    let entries: Vec<Json> = medians
+/// Satellite microbench: the activation pipeline's lock traffic. 1000
+/// ready activations enter a queue either per task (one queue-lock
+/// acquisition each) or as ready-set batches of 8 through the
+/// activation-site batched insert. The lock counts are read back from
+/// the scheduler's own counters, not assumed.
+fn activation_batch_benches() -> Vec<(String, f64, u64)> {
+    println!();
+    println!("== activation batching: 1000 ready activations, per-task vs batched(8) ==");
+    let mut b = Bencher::default();
+    let mut out = Vec::new();
+    const TASKS: u32 = 1000;
+    const SET: usize = 8; // ready-set size (Cholesky-like fan-out)
+    let workers = 8;
+    let mk_batch = || -> Vec<(TaskDesc, i64, TaskMeta)> {
+        (0..TASKS)
+            .map(|i| {
+                let t = TaskDesc::indexed(TaskClass::Gemm, i, 0, 0);
+                let meta = TaskMeta {
+                    stealable: true,
+                    payload_bytes: 0,
+                    class: t.class,
+                };
+                (t, (i % 97) as i64, meta)
+            })
+            .collect()
+    };
+    let run = |q: &dyn Scheduler, tasks: &[(TaskDesc, i64, TaskMeta)], batched: bool| {
+        if batched {
+            for set in tasks.chunks(SET) {
+                q.insert_batch_at(BatchSite::Activation, set);
+            }
+        } else {
+            for &(t, p, m) in tasks {
+                q.insert_meta(t, p, m);
+            }
+        }
+    };
+    for backend in SchedBackend::ALL {
+        for batched in [false, true] {
+            // Lock count from the counter contract: per-task inserts
+            // acquire once per insert, batches once per batch.
+            let probe = backend.build(workers);
+            run(probe.as_ref(), &mk_batch(), batched);
+            let stats = probe.stats();
+            let locks = if batched {
+                stats.site(BatchSite::Activation).batches
+            } else {
+                stats.inserts
+            };
+            let name = format!(
+                "activations {} {}",
+                backend.label(),
+                if batched { "batched(8)" } else { "per-task " }
+            );
+            let r = b.bench_with_setup(
+                &name,
+                || (backend.build(workers), mk_batch()),
+                |(q, tasks)| {
+                    run(q.as_ref(), &tasks, batched);
+                    q
+                },
+            );
+            println!("    -> {locks} queue-lock acquisitions per {TASKS} activations");
+            out.push((name, r.median_ns(), locks));
+        }
+    }
+    out
+}
+
+/// The composition-aware gate's telemetry for `BENCH_PR4.json`: the
+/// same half-POTRF/half-GEMM queue seen by the node-wide formula and by
+/// the per-class one (`--exec-per-class`), whose estimates differ by
+/// Table 1's orders of magnitude.
+fn per_class_gate_telemetry() -> Json {
+    let mut counts = [0usize; TaskClass::COUNT];
+    counts[TaskClass::Potrf.idx()] = 512;
+    counts[TaskClass::Gemm.idx()] = 512;
+    let mut est = [0.0f64; TaskClass::COUNT];
+    est[TaskClass::Potrf.idx()] = 10.0;
+    est[TaskClass::Gemm.idx()] = 1000.0;
+    let avg = 505.0; // what a node-wide mean of the same history reads
+    let workers = 40;
+    Json::obj(vec![
+        ("queued_potrf", Json::Num(counts[TaskClass::Potrf.idx()] as f64)),
+        ("queued_gemm", Json::Num(counts[TaskClass::Gemm.idx()] as f64)),
+        ("est_potrf_us", Json::Num(est[TaskClass::Potrf.idx()])),
+        ("est_gemm_us", Json::Num(est[TaskClass::Gemm.idx()])),
+        (
+            "waiting_node_wide_us",
+            Json::Num(waiting_time_us(1024, workers, avg)),
+        ),
+        (
+            "waiting_per_class_us",
+            Json::Num(waiting_time_per_class_us(&counts, &est, workers, avg)),
+        ),
+    ])
+}
+
+fn write_json(
+    path: &str,
+    medians: &[(String, f64, SchedStats)],
+    activations: &[(String, f64, u64)],
+) {
+    let steal_entries: Vec<Json> = medians
         .iter()
         .map(|(name, ns, stats)| {
             Json::obj(vec![
@@ -275,21 +416,38 @@ fn write_json(path: &str, medians: &[(String, f64, SchedStats)]) {
                     "wt_denials_fed",
                     Json::Num(stats.feedback_wt_denials as f64),
                 ),
-                ("batch_inserts", Json::Num(stats.batch_inserts as f64)),
+                ("batch_inserts", Json::Num(stats.batch_inserts() as f64)),
                 (
                     "batch_saved_locks",
-                    Json::Num(stats.batch_saved_locks as f64),
+                    Json::Num(stats.batch_saved_locks() as f64),
+                ),
+                ("steal_extracted", Json::Num(stats.steal_extracted as f64)),
+                (
+                    "fallback_walks",
+                    Json::Num(stats.extract_fallback_walks as f64),
                 ),
                 ("watermark_after", Json::Num(stats.watermark as f64)),
             ])
         })
         .collect();
+    let activation_entries: Vec<Json> = activations
+        .iter()
+        .map(|(name, ns, locks)| {
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("median_ns_per_1k_activations", Json::Num(*ns)),
+                ("locks_per_1k_activations", Json::Num(*locks as f64)),
+            ])
+        })
+        .collect();
     let j = Json::obj(vec![
-        ("bench", Json::Str("steal_decision".into())),
-        ("results", Json::Arr(entries)),
+        ("bench", Json::Str("scheduler_pr4".into())),
+        ("steal_decision", Json::Arr(steal_entries)),
+        ("activation_batching", Json::Arr(activation_entries)),
+        ("per_class_gate", per_class_gate_telemetry()),
     ]);
     match std::fs::write(path, j.pretty()) {
-        Ok(()) => println!("\n(steal-decision medians -> {path})"),
+        Ok(()) => println!("\n(scheduler bench telemetry -> {path})"),
         Err(e) => eprintln!("\n(could not write {path}: {e})"),
     }
 }
@@ -307,7 +465,8 @@ fn main() {
         contention_benches();
     }
     let medians = steal_decision_benches();
+    let activations = activation_batch_benches();
     if let Some(path) = json_path {
-        write_json(&path, &medians);
+        write_json(&path, &medians, &activations);
     }
 }

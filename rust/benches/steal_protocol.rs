@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use parsteal::comm::{LinkModel, Msg, Network};
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
-use parsteal::migrate::{protocol::decide_steal, MigrateConfig, VictimPolicy};
+use parsteal::migrate::{protocol::decide_steal, ExecSnapshot, MigrateConfig, VictimPolicy};
 use parsteal::sched::{SchedQueue, TaskMeta};
 use parsteal::util::bench::Bencher;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
@@ -49,7 +49,8 @@ fn main() {
             &format!("decide_steal {label} (gated)"),
             &mut fill,
             move |q| {
-                let d = decide_steal(&mc, g.as_ref(), &q, 8, 100.0, 5.0, 1e4);
+                let est = ExecSnapshot::uniform(100.0);
+                let d = decide_steal(&mc, g.as_ref(), &q, 8, &est, 5.0, 1e4);
                 (q, d)
             },
         );

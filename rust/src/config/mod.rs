@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::comm::LinkModel;
 use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
-use crate::sched::SchedBackend;
+use crate::sched::{POOL_FLOOR, SchedBackend};
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
 use crate::workloads::{CholeskyParams, UtsParams};
@@ -30,6 +30,8 @@ pub struct RunConfig {
     pub sched: SchedBackend,
     /// Coalesce same-destination activations (`--batch-activations`).
     pub batch_activations: bool,
+    /// Sharded steal-pool floor (`--pool-floor`).
+    pub pool_floor: usize,
 }
 
 impl RunConfig {
@@ -37,7 +39,8 @@ impl RunConfig {
     /// `--workload cholesky|uts --nodes N --workers W --tiles T --tile-size S`
     /// `--dense-fraction F --steal BOOL --victim half|chunk[K]|single`
     /// `--thief ready-only|ready-successors --waiting-time BOOL`
-    /// `--exec-ewma BOOL --sched central|sharded --batch-activations BOOL`
+    /// `--exec-ewma BOOL --exec-per-class BOOL`
+    /// `--sched central|sharded --batch-activations BOOL --pool-floor N`
     /// `--latency-us L --bw B --seed X` and the
     /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
     pub fn from_args(args: &Args) -> Result<RunConfig> {
@@ -79,6 +82,9 @@ impl RunConfig {
             // Off = the paper's running-mean estimator (§3); on = gate
             // on an EWMA of observed execution times.
             exec_ewma: args.bool_or("exec-ewma", false)?,
+            // Off = one node-wide estimate; on = per-TaskClass table
+            // and a queue-composition-weighted waiting time.
+            exec_per_class: args.bool_or("exec-per-class", false)?,
         };
         Ok(RunConfig {
             workload,
@@ -94,6 +100,7 @@ impl RunConfig {
                 .parse::<SchedBackend>()
                 .map_err(anyhow::Error::msg)?,
             batch_activations: args.bool_or("batch-activations", true)?,
+            pool_floor: args.u64_or("pool-floor", POOL_FLOOR as u64)? as usize,
         })
     }
 
@@ -120,6 +127,7 @@ impl RunConfig {
             record_polls: true,
             sched: self.sched,
             batch_activations: self.batch_activations,
+            pool_floor: self.pool_floor,
         }
     }
 }
@@ -186,6 +194,26 @@ mod tests {
         assert!(!c.migrate.exec_ewma, "paper-faithful running mean by default");
         let c = RunConfig::from_args(&args("--exec-ewma true")).unwrap();
         assert!(c.migrate.exec_ewma);
+    }
+
+    #[test]
+    fn exec_per_class_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert!(!c.migrate.exec_per_class, "node-wide estimator by default");
+        let c = RunConfig::from_args(&args("--exec-per-class true")).unwrap();
+        assert!(c.migrate.exec_per_class);
+    }
+
+    #[test]
+    fn pool_floor_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert_eq!(c.pool_floor, POOL_FLOOR, "default pool floor");
+        assert_eq!(c.sim_config().pool_floor, POOL_FLOOR);
+        let c = RunConfig::from_args(&args("--pool-floor 7")).unwrap();
+        assert_eq!(c.pool_floor, 7);
+        assert_eq!(c.sim_config().pool_floor, 7);
+        let c = RunConfig::from_args(&args("--pool-floor 0")).unwrap();
+        assert_eq!(c.pool_floor, 0, "0 disables restocking");
     }
 
     #[test]

@@ -61,6 +61,16 @@ impl TaskClass {
         TaskClass::UtsNode,
         TaskClass::Synthetic,
     ];
+
+    /// Number of task classes — the size of every per-class table
+    /// (scheduler class counts, the per-class execution-time estimators).
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Discriminant as a table index (`0..TaskClass::COUNT`).
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
 }
 
 /// A task instance: class + index tuple + unique id.

@@ -9,7 +9,7 @@ use anyhow::Result;
 use crate::comm::LinkModel;
 use crate::metrics::RunReport;
 use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
-use crate::sched::SchedBackend;
+use crate::sched::{POOL_FLOOR, SchedBackend};
 use crate::sim::{CostModel, SimConfig, Simulator};
 use crate::stats::Summary;
 use crate::util::json::Json;
@@ -153,6 +153,7 @@ impl Ctx {
             record_polls,
             sched: self.sched,
             batch_activations: true,
+            pool_floor: POOL_FLOOR,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 50).run()
     }
@@ -173,6 +174,7 @@ impl Ctx {
             record_polls,
             sched: self.sched,
             batch_activations: true,
+            pool_floor: POOL_FLOOR,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, tile).run()
     }
@@ -187,6 +189,7 @@ impl Ctx {
             record_polls: false,
             sched: self.sched,
             batch_activations: true,
+            pool_floor: POOL_FLOOR,
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 0).run()
     }
@@ -216,6 +219,7 @@ pub fn victim_cells(scale: Scale, waiting_time: bool) -> Vec<Cell> {
         max_inflight: 1,
         migrate_overhead_us: 150.0,
         exec_ewma: false,
+        exec_per_class: false,
     };
     vec![
         Cell {

@@ -21,6 +21,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         max_inflight: 1,
         migrate_overhead_us: 150.0,
         exec_ewma: false,
+        exec_per_class: false,
     };
     let cells = [
         ("No-Steal", MigrateConfig::disabled()),

@@ -31,6 +31,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         max_inflight: 1,
         migrate_overhead_us: 150.0,
         exec_ewma: false,
+        exec_per_class: false,
     };
     let report = Simulator::new(
         graph,
@@ -45,6 +46,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             record_polls: true,
             sched: ctx.sched,
             batch_activations: true,
+            pool_floor: crate::sched::POOL_FLOOR,
         },
         ctx.cost.clone(),
         mc,

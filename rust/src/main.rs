@@ -32,7 +32,8 @@ fn usage() -> String {
      repro run [--workload cholesky|uts] [--nodes 4] [--workers 40]\n\
      \x20         [--tiles 200] [--tile-size 50] [--steal true] [--victim single]\n\
      \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
-     \x20         [--exec-ewma false] [--sched central|sharded]\n\
+     \x20         [--exec-ewma false] [--exec-per-class false]\n\
+     \x20         [--sched central|sharded] [--pool-floor 2]\n\
      \x20         [--batch-activations true]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
@@ -100,6 +101,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     record_polls: true,
                     sched: cfg.sched,
                     batch_activations: cfg.batch_activations,
+                    pool_floor: cfg.pool_floor,
                 },
                 ex,
             )
@@ -122,6 +124,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     record_polls: true,
                     sched: cfg.sched,
                     batch_activations: cfg.batch_activations,
+                    pool_floor: cfg.pool_floor,
                 },
                 ex,
             )
@@ -140,6 +143,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     record_polls: true,
                     sched: cfg.sched,
                     batch_activations: cfg.batch_activations,
+                    pool_floor: cfg.pool_floor,
                 },
                 ex,
             )
@@ -173,13 +177,29 @@ fn cmd_run(args: &Args) -> Result<()> {
         steals.tasks_migrated,
         steals.waiting_time_denials
     );
-    let batch_inserts: u64 = report.nodes.iter().map(|n| n.sched.batch_inserts).sum();
-    let saved: u64 = report.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
     let wm = report.nodes.iter().map(|n| n.sched.watermark).max().unwrap_or(0);
+    let walks: u64 = report.nodes.iter().map(|n| n.sched.extract_fallback_walks).sum();
+    let sites = report.batch_site_totals();
+    let site_text = sites
+        .iter()
+        .filter(|(_, batches, _)| *batches > 0)
+        .map(|(site, batches, saved)| format!("{} {batches} (+{saved} locks saved)", site.label()))
+        .collect::<Vec<_>>()
+        .join(", ");
     println!(
-        "sched:           {batch_inserts} batched re-enqueues ({saved} locks saved), \
-         max watermark {wm}"
+        "sched:           batches: {}; max watermark {wm}, {walks} fallback walks",
+        if site_text.is_empty() { "none".to_string() } else { site_text }
     );
+    if cfg.migrate.exec_per_class {
+        let est = report.class_est_us_max();
+        let classes = parsteal::dataflow::task::TaskClass::ALL
+            .iter()
+            .filter(|c| est[c.idx()] > 0.0)
+            .map(|c| format!("{} {:.1}µs", c.name(), est[c.idx()]))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("class est:       {classes}");
+    }
     Ok(())
 }
 
@@ -264,6 +284,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             record_polls: false,
             sched,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         ex.clone(),
     );

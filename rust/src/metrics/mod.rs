@@ -7,8 +7,9 @@
 //! ready-at-arrival distribution (Fig. 3).
 
 use crate::comm::LinkModel;
+use crate::dataflow::task::TaskClass;
 use crate::migrate::StealStats;
-use crate::sched::SchedStats;
+use crate::sched::{BatchSite, SchedStats};
 use crate::util::json::Json;
 
 /// One ready-queue observation, taken whenever a worker completed a
@@ -27,6 +28,14 @@ pub struct NodeReport {
     pub busy_us: f64,
     /// Running mean execution time at end of run (µs).
     pub avg_exec_us: f64,
+    /// Per-class execution-time estimates at end of run (µs, indexed by
+    /// [`TaskClass`] discriminant; 0 = the class never completed a task
+    /// or `--exec-per-class` was off).
+    pub class_est_us: [f64; TaskClass::COUNT],
+    /// Non-empty activation ready sets delivered through the batched
+    /// path — asserted equal to the scheduler's activation-site batch
+    /// counter (exactly one batched insert per ready set).
+    pub activation_ready_batches: u64,
     pub steal: StealStats,
     /// End-of-run scheduler counters for this node's queue: batched-
     /// insert accounting, gate-feedback events and (sharded) the final
@@ -125,17 +134,46 @@ impl RunReport {
         v
     }
 
+    /// Per-call-site batch totals across all nodes, ordered as
+    /// [`BatchSite::ALL`].
+    pub fn batch_site_totals(&self) -> [(BatchSite, u64, u64); BatchSite::COUNT] {
+        std::array::from_fn(|i| {
+            let site = BatchSite::ALL[i];
+            let batches: u64 = self.nodes.iter().map(|n| n.sched.site(site).batches).sum();
+            let saved: u64 = self
+                .nodes
+                .iter()
+                .map(|n| n.sched.site(site).saved_locks())
+                .sum();
+            (site, batches, saved)
+        })
+    }
+
+    /// End-of-run per-class execution estimates, pooled across nodes
+    /// (max over nodes — a snapshot, not a mean; 0 = no samples).
+    pub fn class_est_us_max(&self) -> [f64; TaskClass::COUNT] {
+        std::array::from_fn(|c| {
+            self.nodes
+                .iter()
+                .map(|n| n.class_est_us[c])
+                .fold(0.0, f64::max)
+        })
+    }
+
     pub fn to_json(&self) -> Json {
         let steals = self.total_steals();
-        let batch_inserts: u64 = self.nodes.iter().map(|n| n.sched.batch_inserts).sum();
-        let saved_locks: u64 = self.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
+        let batch_inserts: u64 = self.nodes.iter().map(|n| n.sched.batch_inserts()).sum();
+        let saved_locks: u64 = self.nodes.iter().map(|n| n.sched.batch_saved_locks()).sum();
         let denials_fed: u64 = self.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
+        let fallback_walks: u64 = self.nodes.iter().map(|n| n.sched.extract_fallback_walks).sum();
         let watermark_max = self
             .nodes
             .iter()
             .map(|n| n.sched.watermark)
             .max()
             .unwrap_or(0);
+        let site_totals = self.batch_site_totals();
+        let class_est = self.class_est_us_max();
         Json::obj(vec![
             ("workload", Json::Str(self.workload.clone())),
             ("makespan_us", Json::Num(self.makespan_us)),
@@ -155,8 +193,35 @@ impl RunReport {
             ),
             ("sched_batch_inserts", Json::Num(batch_inserts as f64)),
             ("sched_batch_saved_locks", Json::Num(saved_locks as f64)),
+            (
+                "sched_batches_by_site",
+                Json::obj(
+                    site_totals
+                        .iter()
+                        .map(|&(site, batches, saved)| {
+                            (
+                                site.label(),
+                                Json::obj(vec![
+                                    ("batches", Json::Num(batches as f64)),
+                                    ("saved_locks", Json::Num(saved as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             ("sched_gate_denials_fed", Json::Num(denials_fed as f64)),
+            ("sched_fallback_walks", Json::Num(fallback_walks as f64)),
             ("sched_watermark_max", Json::Num(watermark_max as f64)),
+            (
+                "class_est_us",
+                Json::obj(
+                    TaskClass::ALL
+                        .iter()
+                        .map(|c| (c.name(), Json::Num(class_est[c.idx()])))
+                        .collect(),
+                ),
+            ),
             (
                 "per_node_tasks",
                 Json::Arr(

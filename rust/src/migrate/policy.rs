@@ -10,6 +10,8 @@
 
 use std::str::FromStr;
 
+use crate::dataflow::task::TaskClass;
+
 /// When does a node decide it is starving and becomes a thief?
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ThiefPolicy {
@@ -128,6 +130,17 @@ pub struct MigrateConfig {
     /// (e.g. Cholesky's POTRF→GEMM front) gates on stale averages
     /// without it.
     pub exec_ewma: bool,
+    /// Gate on a per-[`TaskClass`] estimator table instead of one
+    /// node-wide average (`--exec-per-class`). Table 1 shows per-class
+    /// execution times spanning orders of magnitude, so a queue of
+    /// GEMMs and a queue of POTRFs with the same length have wildly
+    /// different expected waits: with this on, the expected wait is
+    /// computed from the *actual queue composition*
+    /// ([`waiting_time_per_class_us`]: Σ class_count × class_estimate
+    /// / workers) with the node-wide estimate as the fallback oracle
+    /// for classes that have not completed a task yet. Off by default —
+    /// the node-wide estimator is the paper-faithful configuration.
+    pub exec_per_class: bool,
 }
 
 impl MigrateConfig {
@@ -150,6 +163,7 @@ impl Default for MigrateConfig {
             max_inflight: 1,
             migrate_overhead_us: 150.0,
             exec_ewma: false,
+            exec_per_class: false,
         }
     }
 }
@@ -228,6 +242,54 @@ pub fn waiting_time_us(ready: usize, workers: usize, avg_exec_us: f64) -> f64 {
     (ready as f64 / workers.max(1) as f64 + 1.0) * avg_exec_us
 }
 
+/// Expected waiting time computed from the *actual queue composition*
+/// (`--exec-per-class`): instead of `queue_len × one node-wide mean`,
+/// each queued class contributes `count × its own estimate`, divided
+/// over the workers, plus one `fallback_us` slot for the task's own
+/// execution (the `+ 1` of [`waiting_time_us`]). Classes with no
+/// completed sample yet (estimate ≤ 0) fall back to `fallback_us` —
+/// the node-wide estimator stays the oracle until per-class history
+/// exists, so the gated formula degenerates to the paper's exactly
+/// when every class estimate equals the node-wide average.
+///
+/// ```
+/// use parsteal::dataflow::task::TaskClass;
+/// use parsteal::migrate::{waiting_time_per_class_us, waiting_time_us};
+///
+/// let mut counts = [0usize; TaskClass::COUNT];
+/// let mut est = [0.0f64; TaskClass::COUNT];
+/// counts[TaskClass::Potrf.idx()] = 4; // 4 queued POTRFs at 100 µs
+/// est[TaskClass::Potrf.idx()] = 100.0;
+/// counts[TaskClass::Gemm.idx()] = 4; // 4 queued GEMMs at 900 µs
+/// est[TaskClass::Gemm.idx()] = 900.0;
+/// // (4·100 + 4·900) / 4 workers + 500 own slot = 1500 µs …
+/// assert_eq!(waiting_time_per_class_us(&counts, &est, 4, 500.0), 1500.0);
+/// // …whereas the node-wide mean sees 8 × 500: (8/4 + 1) · 500.
+/// assert_eq!(waiting_time_us(8, 4, 500.0), 1500.0);
+/// // With uniform estimates the two formulas agree exactly.
+/// est[TaskClass::Gemm.idx()] = 500.0;
+/// est[TaskClass::Potrf.idx()] = 500.0;
+/// assert_eq!(waiting_time_per_class_us(&counts, &est, 4, 500.0), 1500.0);
+/// ```
+pub fn waiting_time_per_class_us(
+    class_counts: &[usize; TaskClass::COUNT],
+    class_est_us: &[f64; TaskClass::COUNT],
+    workers: usize,
+    fallback_us: f64,
+) -> f64 {
+    let mut queued = 0.0;
+    for class in TaskClass::ALL {
+        let count = class_counts[class.idx()];
+        if count == 0 {
+            continue;
+        }
+        let est = class_est_us[class.idx()];
+        let est = if est > 0.0 { est } else { fallback_us };
+        queued += count as f64 * est;
+    }
+    queued / workers.max(1) as f64 + fallback_us
+}
+
 /// Time to migrate a task's inputs to the thief over the modeled link
 /// (§3, "time required to migrate the task"): one latency plus the
 /// payload serialized at link bandwidth. [`MigrateConfig`] adds the
@@ -285,6 +347,46 @@ pub fn exec_estimate_us(use_ewma: bool, ewma_us: f64, exec_sum_us: f64, tasks_do
     }
 }
 
+/// One per-class estimator step (`--exec-per-class`), applied at every
+/// task finish to the finished task's class entry. This is the *shared*
+/// update rule — the threaded runtime applies it in a CAS loop over
+/// f64-bits atomics, the DES over plain fields, both through this one
+/// function so the two estimator tables cannot diverge. The rule itself
+/// is the [`ewma_update`] EWMA (first sample seeds), which tracks a
+/// class whose granularity drifts over the run (e.g. GEMM fronts
+/// widening as Cholesky proceeds) instead of averaging over history
+/// that Table 1 shows can span orders of magnitude.
+pub fn class_estimate_update(prev_us: f64, sample_us: f64) -> f64 {
+    ewma_update(prev_us, sample_us)
+}
+
+/// The victim's execution-time estimates at one steal decision — the
+/// node-wide estimate (running mean or EWMA, per
+/// [`MigrateConfig::exec_ewma`]) plus, under
+/// [`MigrateConfig::exec_per_class`], the per-class table. Both
+/// runtimes build this from incrementally-maintained state, so a
+/// decision is still O(1).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecSnapshot {
+    /// Node-wide execution-time estimate (µs); the per-class formula's
+    /// fallback for classes with no history.
+    pub avg_us: f64,
+    /// Per-class estimates (µs; ≤ 0 = no sample yet), indexed by class
+    /// discriminant. `None` when `--exec-per-class` is off.
+    pub per_class: Option<[f64; TaskClass::COUNT]>,
+}
+
+impl ExecSnapshot {
+    /// A snapshot with only the node-wide estimate — the paper-faithful
+    /// configuration, and the natural spelling in tests and benches.
+    pub fn uniform(avg_us: f64) -> ExecSnapshot {
+        ExecSnapshot {
+            avg_us,
+            per_class: None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +438,40 @@ mod tests {
         assert_eq!(waiting_time_us(40, 40, 10.0), 20.0);
         // empty queue still waits one average task
         assert_eq!(waiting_time_us(0, 8, 5.0), 5.0);
+    }
+
+    #[test]
+    fn per_class_waiting_time_weighs_composition() {
+        let mut counts = [0usize; TaskClass::COUNT];
+        let mut est = [0.0f64; TaskClass::COUNT];
+        counts[TaskClass::Potrf.idx()] = 2;
+        est[TaskClass::Potrf.idx()] = 10.0;
+        counts[TaskClass::Gemm.idx()] = 6;
+        est[TaskClass::Gemm.idx()] = 1000.0;
+        // (2·10 + 6·1000) / 2 + 50 = 3060
+        assert_eq!(waiting_time_per_class_us(&counts, &est, 2, 50.0), 3060.0);
+        // A class without history falls back to the node-wide estimate.
+        est[TaskClass::Gemm.idx()] = 0.0;
+        // (2·10 + 6·50) / 2 + 50 = 210
+        assert_eq!(waiting_time_per_class_us(&counts, &est, 2, 50.0), 210.0);
+        // An empty queue still waits one fallback slot.
+        assert_eq!(
+            waiting_time_per_class_us(&[0; TaskClass::COUNT], &est, 4, 7.0),
+            7.0
+        );
+        // Uniform estimates degenerate to the paper's formula.
+        let uniform = [5.0; TaskClass::COUNT];
+        assert_eq!(
+            waiting_time_per_class_us(&counts, &uniform, 2, 5.0),
+            waiting_time_us(8, 2, 5.0)
+        );
+    }
+
+    #[test]
+    fn class_estimate_update_is_the_shared_ewma() {
+        assert_eq!(class_estimate_update(0.0, 40.0), 40.0, "first sample seeds");
+        assert_eq!(class_estimate_update(40.0, 40.0), 40.0);
+        assert_eq!(class_estimate_update(100.0, 200.0), ewma_update(100.0, 200.0));
     }
 
     #[test]

@@ -14,14 +14,20 @@
 //! gate just measured that tasks run locally sooner than they migrate),
 //! a grant tells it to keep the steal pool stocked. The denial path
 //! returns the extracted batch through one
-//! [`Scheduler::insert_batch_meta`] call — one lock acquisition, meta
-//! preserved — instead of per-task reinserts.
+//! [`Scheduler::insert_batch_at`] call booked to the gate-denial site —
+//! one lock acquisition, meta preserved — instead of per-task
+//! reinserts. Denials that are *certain* from the O(1) accounting alone
+//! (the overhead + latency + minimum-stealable-payload floor already
+//! loses to the waiting time) skip extraction entirely.
 
 use crate::dataflow::task::TaskDesc;
 use crate::dataflow::ttg::TaskGraph;
-use crate::sched::{Scheduler, StealOutcome, TaskMeta};
+use crate::sched::{BatchSite, Scheduler, StealOutcome, TaskMeta};
 
-use super::policy::{migrate_time_us, steal_allowance, waiting_time_us, MigrateConfig};
+use super::policy::{
+    migrate_time_us, steal_allowance, waiting_time_per_class_us, waiting_time_us, ExecSnapshot,
+    MigrateConfig,
+};
 
 /// Outcome of processing one steal request at the victim.
 #[derive(Debug, Default)]
@@ -36,23 +42,27 @@ pub struct VictimDecision {
 
 /// Apply the victim policy + waiting-time gate to the node's queue.
 ///
-/// `avg_exec_us` is the victim's execution-time estimate — the running
-/// mean ("execution time elapsed / tasks executed till now") or, under
-/// [`MigrateConfig::exec_ewma`], the EWMA of recent executions
-/// ([`crate::migrate::ewma_update`]) — `workers` its worker-thread
-/// count, and the link parameters describe the path to the thief. Works
-/// against any [`Scheduler`] backend: with the central queue the
-/// extraction *competes* with worker `select`s on one lock (the §4.4
-/// contention); the sharded backend serves it from the steal pool.
-/// Either way the allowance is best-effort exactly as §3 describes. The
-/// stealable census is the scheduler's O(1) accounting — no per-request
-/// queue scan — and the verdict is fed back via [`Scheduler::feedback`].
+/// `est` carries the victim's execution-time estimates — the node-wide
+/// running mean ("execution time elapsed / tasks executed till now")
+/// or, under [`MigrateConfig::exec_ewma`], the EWMA of recent
+/// executions ([`crate::migrate::ewma_update`]); with
+/// [`MigrateConfig::exec_per_class`] also the per-class table, so the
+/// expected wait weighs the queue's actual class composition
+/// ([`waiting_time_per_class_us`] over [`Scheduler::class_counts`]).
+/// `workers` is the victim's worker-thread count, and the link
+/// parameters describe the path to the thief. Works against any
+/// [`Scheduler`] backend: with the central queue the extraction
+/// *competes* with worker `select`s on one lock (the §4.4 contention);
+/// the sharded backend serves it from the steal pool. Either way the
+/// allowance is best-effort exactly as §3 describes. The stealable
+/// census is the scheduler's O(1) accounting — no per-request queue
+/// scan — and the verdict is fed back via [`Scheduler::feedback`].
 pub fn decide_steal(
     cfg: &MigrateConfig,
     graph: &dyn TaskGraph,
     queue: &dyn Scheduler,
     workers: usize,
-    avg_exec_us: f64,
+    est: &ExecSnapshot,
     link_latency_us: f64,
     link_bw_bytes_per_us: f64,
 ) -> VictimDecision {
@@ -66,18 +76,31 @@ pub fn decide_steal(
     if cfg.use_waiting_time {
         // Gate: allow the steal only if the task would wait longer for a
         // local worker than the migration takes. The waiting time uses
-        // the *total* ready count (all queued tasks delay each other).
-        let waiting = waiting_time_us(queue.len(), workers, avg_exec_us);
-        // Denial-certain fast path: overhead + latency is a lower bound
-        // on the migration time before any payload travels. When even
-        // that bound loses to the waiting time, the verdict cannot
-        // depend on the payload — skip the extraction entirely and the
-        // poll is O(1). (Denials driven by the *payload* term still
-        // extract-and-reinsert to weigh the concrete batch; in that
-        // regime the raised watermark drains the sharded steal pool and
-        // extraction pays the shard-index fallback walk — see the
-        // ROADMAP follow-up on a payload-aware bound.)
-        if cfg.migrate_overhead_us + link_latency_us >= waiting {
+        // the *total* ready count (all queued tasks delay each other) —
+        // weighted per class when the per-class estimator is on.
+        let waiting = match (cfg.exec_per_class, est.per_class) {
+            (true, Some(table)) => {
+                waiting_time_per_class_us(&queue.class_counts(), &table, workers, est.avg_us)
+            }
+            _ => waiting_time_us(queue.len(), workers, est.avg_us),
+        };
+        // Denial-certain fast path: overhead + latency + the minimum
+        // stealable payload's transfer is a lower bound on the
+        // migration time of *any* non-empty batch (every extractable
+        // task carries at least the queue's minimum stealable payload).
+        // When even that bound loses to the waiting time, the verdict
+        // cannot depend on which tasks would be extracted — skip the
+        // extraction entirely and the poll is O(1). This covers both
+        // the overhead-bound regime (PR 3) and the payload-bound one:
+        // sustained payload-driven denial no longer extracts at all, so
+        // the sharded backend's all-shards fallback walk never runs.
+        let min_payload = queue.min_stealable_payload_bytes();
+        let payload_floor_us = if min_payload == u64::MAX {
+            0.0 // racing census; fall back to the overhead-only bound
+        } else {
+            min_payload as f64 / link_bw_bytes_per_us
+        };
+        if cfg.migrate_overhead_us + link_latency_us + payload_floor_us >= waiting {
             queue.feedback(StealOutcome::DeniedWaitingTime);
             return VictimDecision {
                 tasks: Vec::new(),
@@ -108,9 +131,10 @@ pub fn decide_steal(
             };
         }
         // Denied: return the batch under one lock acquisition (with its
-        // accounting meta), then close the loop — the denial is the
-        // signal that tasks should stay local.
-        queue.insert_batch_meta(&TaskMeta::batch_of(graph, &tasks));
+        // accounting meta, booked to the gate-denial site — the sharded
+        // backend sends it back to the steal pool), then close the loop
+        // — the denial is the signal that tasks should stay local.
+        queue.insert_batch_at(BatchSite::GateDenial, &TaskMeta::batch_of(graph, &tasks));
         queue.feedback(StealOutcome::DeniedWaitingTime);
         VictimDecision {
             tasks: Vec::new(),
@@ -196,6 +220,24 @@ mod tests {
             .build()
     }
 
+    /// Even tasks stealable (as [`graph`]), but task `i == 2` carries a
+    /// tiny payload while the rest carry `heavy`: the min-payload bound
+    /// stays at 64 bytes, so the gate cannot prove a denial from the
+    /// accounting alone and must extract-and-weigh the concrete batch.
+    fn mixed_graph(heavy: u64) -> impl TaskGraph {
+        TtgBuilder::new("g", 2)
+            .wrap_g(
+                "c",
+                |t| t.i % 2 == 0,
+                |_| vec![],
+                |_| 1,
+                |_| NodeId(0),
+                |_| 1.0,
+            )
+            .with_payload(move |t| if t.i == 2 { 64 } else { heavy })
+            .build()
+    }
+
     /// Enqueue n tasks carrying the graph's steal meta — the contract
     /// every runtime call site follows.
     fn queue_with(graph: &dyn TaskGraph, n: u32) -> SchedQueue {
@@ -217,6 +259,7 @@ mod tests {
             max_inflight: 1,
             migrate_overhead_us: 150.0,
             exec_ewma: false,
+            exec_per_class: false,
         }
     }
 
@@ -224,7 +267,8 @@ mod tests {
     fn half_policy_without_gate_takes_half_of_stealable() {
         let g = graph(0);
         let q = queue_with(&g, 8); // 4 stealable (even i)
-        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, 10.0, 1.0, 1e9);
+        let est = ExecSnapshot::uniform(10.0);
+        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, &est, 1.0, 1e9);
         assert_eq!(d.tasks.len(), 2);
         assert!(d.tasks.iter().all(|t| t.i % 2 == 0));
         assert_eq!(q.len(), 6);
@@ -232,15 +276,19 @@ mod tests {
 
     #[test]
     fn gate_denies_when_migration_slower_than_wait() {
-        let g = graph(1_000_000_000); // 1 GB payload
+        let g = mixed_graph(1_000_000_000); // 1 GB payloads, one 64 B outlier
         let q = queue_with(&g, 4);
-        // wait = (4/4+1)*100 = 200µs beats the 155µs overhead+latency
-        // floor, so the payload is actually extracted and weighed:
-        // migrate = 155 + 1e9/1e3 = huge -> deny, reinsert.
-        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 100.0, 5.0, 1e3);
+        // wait = (4/4+1)*100 = 200µs beats the ≈155.06µs floor
+        // (overhead + latency + 64 B min payload), so the batch is
+        // actually extracted and weighed: the lowest-priority stealable
+        // is the 1 GB task -> migrate = 155 + 1e9/1e3 = huge -> deny,
+        // reinsert.
+        let est = ExecSnapshot::uniform(100.0);
+        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, &est, 5.0, 1e3);
         assert!(d.tasks.is_empty());
         assert!(d.denied_by_waiting_time);
         assert_eq!(q.len(), 4, "denied tasks returned to the queue");
+        assert!(q.stats().steal_extracted > 0, "the batch was weighed");
     }
 
     #[test]
@@ -250,14 +298,80 @@ mod tests {
         // on the payload — no extraction, no reinsert, still a denial.
         let g = graph(100);
         let q = queue_with(&g, 4);
-        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 10.0, 5.0, 1e3);
+        let est = ExecSnapshot::uniform(10.0);
+        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, &est, 5.0, 1e3);
         assert!(d.tasks.is_empty());
         assert!(d.denied_by_waiting_time);
         assert_eq!(q.len(), 4);
         let s = q.stats();
         assert_eq!(s.steal_extracted, 0, "fast path never touched the queue");
-        assert_eq!(s.batch_inserts, 0, "nothing to reinsert");
+        assert_eq!(s.batch_inserts(), 0, "nothing to reinsert");
         assert_eq!(s.feedback_wt_denials, 1, "the denial still feeds back");
+    }
+
+    /// The payload-certain fast path: overhead + latency alone (155µs)
+    /// loses to the 200µs waiting time, but every stealable payload is
+    /// ≥ 1 GB, so the min-payload floor proves the denial without
+    /// extracting — on both backends, with zero sharded fallback walks.
+    #[test]
+    fn gate_denies_without_extraction_when_payload_floor_loses() {
+        let g = graph(1_000_000_000);
+        for backend in SchedBackend::ALL {
+            let q = backend.build(4);
+            for i in 0..4 {
+                let t = TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+                q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
+            }
+            let est = ExecSnapshot::uniform(100.0);
+            let mc = cfg(VictimPolicy::Single, true);
+            let d = decide_steal(&mc, &g, q.as_ref(), 4, &est, 5.0, 1e3);
+            assert!(d.denied_by_waiting_time, "{backend:?}");
+            assert_eq!(q.len(), 4, "{backend:?}");
+            let s = q.stats();
+            assert_eq!(s.steal_extracted, 0, "{backend:?}: no extraction");
+            assert_eq!(s.batch_inserts(), 0, "{backend:?}: no reinsert");
+            assert_eq!(s.feedback_wt_denials, 1, "{backend:?}");
+            assert_eq!(
+                s.extract_fallback_walks, 0,
+                "{backend:?}: payload-certain denial never walks the shards"
+            );
+        }
+    }
+
+    /// With `--exec-per-class` the same queue can flip the verdict: a
+    /// queue of heavy GEMMs has a long expected wait even when the
+    /// node-wide average is tiny (it was trained on cheap POTRFs), so
+    /// the composition-aware gate grants what the node-wide gate would
+    /// deny.
+    #[test]
+    fn per_class_gate_weighs_queue_composition() {
+        let g = graph(100);
+        let mut mc = cfg(VictimPolicy::Single, true);
+        let mut table = [0.0f64; TaskClass::COUNT];
+        table[TaskClass::Gemm.idx()] = 1000.0; // queued class: heavy
+        let est = ExecSnapshot {
+            avg_us: 10.0, // node-wide history: cheap
+            per_class: Some(table),
+        };
+        let fill = |q: &dyn Scheduler| {
+            for i in 0..8 {
+                let t = TaskDesc::indexed(TaskClass::Gemm, i, 0, 0);
+                q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
+            }
+        };
+        // Node-wide: waiting = (8/4+1)*10 = 30µs < 155µs floor -> deny.
+        let q = SchedQueue::new();
+        fill(&q);
+        let d = decide_steal(&mc, &g, &q, 4, &est, 5.0, 1e3);
+        assert!(d.denied_by_waiting_time, "node-wide gate denies");
+        // Per-class: waiting = 8·1000/4 + 10 = 2010µs -> grant.
+        mc.exec_per_class = true;
+        let q = SchedQueue::new();
+        fill(&q);
+        let d = decide_steal(&mc, &g, &q, 4, &est, 5.0, 1e3);
+        assert_eq!(d.tasks.len(), 1, "composition-aware gate grants");
+        assert!(!d.denied_by_waiting_time);
+        assert_eq!(q.stats().scans, 0, "class counts are O(1), not a scan");
     }
 
     #[test]
@@ -265,7 +379,8 @@ mod tests {
         let g = graph(100);
         let q = queue_with(&g, 40);
         // wait = (40/4+1)*100 = 1100µs; migrate = 5 + 100/1e3 ≈ 5.1µs
-        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 100.0, 5.0, 1e3);
+        let est = ExecSnapshot::uniform(100.0);
+        let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, &est, 5.0, 1e3);
         assert_eq!(d.tasks.len(), 1);
         assert!(!d.denied_by_waiting_time);
     }
@@ -276,7 +391,8 @@ mod tests {
             .wrap_g("c", |_| false, |_| vec![], |_| 1, |_| NodeId(0), |_| 1.0)
             .build();
         let q = queue_with(&g, 4);
-        let d = decide_steal(&cfg(VictimPolicy::Half, true), &g, &q, 4, 10.0, 1.0, 1e3);
+        let est = ExecSnapshot::uniform(10.0);
+        let d = decide_steal(&cfg(VictimPolicy::Half, true), &g, &q, 4, &est, 1.0, 1e3);
         assert!(d.tasks.is_empty());
         assert!(!d.denied_by_waiting_time);
         assert_eq!(q.len(), 4);
@@ -288,7 +404,8 @@ mod tests {
         let q = SchedQueue::new();
         let t = TaskDesc::indexed(TaskClass::Synthetic, 0, 0, 0);
         q.insert_meta(t, 0, TaskMeta::of(&g, t));
-        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, 10.0, 1.0, 1e3);
+        let est = ExecSnapshot::uniform(10.0);
+        let d = decide_steal(&cfg(VictimPolicy::Half, false), &g, &q, 4, &est, 1.0, 1e3);
         assert!(d.tasks.is_empty(), "half of 1 stealable = 0");
     }
 
@@ -307,7 +424,7 @@ mod tests {
                 &g,
                 q.as_ref(),
                 4,
-                100.0,
+                &ExecSnapshot::uniform(100.0),
                 5.0,
                 1e3,
             );
@@ -335,27 +452,33 @@ mod tests {
                 &g,
                 q.as_ref(),
                 4,
-                100.0,
+                &ExecSnapshot::uniform(100.0),
                 5.0,
                 1e3,
             );
             assert_eq!(d.tasks.len(), 6, "{backend:?}");
             assert_eq!(q.stats().scans, 0, "{backend:?}: granted poll scanned");
 
-            // Denied steal (huge payload, waiting above the overhead
-            // floor): extraction + batched re-insert path.
-            let g = graph(1_000_000_000);
+            // Denied steal (heavy payloads with one light outlier, so
+            // the denial is not payload-certain and the waiting time
+            // beats the overhead floor): extraction + batched re-insert.
+            let g = mixed_graph(1_000_000_000);
             let q = backend.build(4);
             for i in 0..4 {
                 let t = TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
                 q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
             }
-            let d =
-                decide_steal(&cfg(VictimPolicy::Single, true), &g, q.as_ref(), 4, 100.0, 5.0, 1e3);
+            let est = ExecSnapshot::uniform(100.0);
+            let mc = cfg(VictimPolicy::Single, true);
+            let d = decide_steal(&mc, &g, q.as_ref(), 4, &est, 5.0, 1e3);
             assert!(d.denied_by_waiting_time, "{backend:?}");
             assert_eq!(q.len(), 4, "{backend:?}: denied tasks returned");
             assert_eq!(q.stats().scans, 0, "{backend:?}: denied poll scanned");
-            assert_eq!(q.stats().batch_inserts, 1, "{backend:?}: reinsert batched");
+            assert_eq!(
+                q.stats().site(BatchSite::GateDenial).batches,
+                1,
+                "{backend:?}: reinsert batched at the gate-denial site"
+            );
         }
     }
 
@@ -366,7 +489,8 @@ mod tests {
     #[test]
     fn gate_denials_raise_sharded_watermark() {
         use crate::sched::{SPILL_THRESHOLD, ShardedQueue};
-        // Denial-heavy: 1 GB payloads make migration always lose.
+        // Denial-heavy: 1 GB payloads make migration always lose (the
+        // payload-certain fast path proves it without extracting).
         let g = graph(1_000_000_000);
         let q = ShardedQueue::new(4);
         for i in 0..8 {
@@ -374,8 +498,9 @@ mod tests {
             q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
         }
         assert_eq!(q.watermark(), SPILL_THRESHOLD);
+        let est = ExecSnapshot::uniform(10.0);
         for _ in 0..30 {
-            let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 10.0, 5.0, 1e3);
+            let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, &est, 5.0, 1e3);
             assert!(d.denied_by_waiting_time);
         }
         assert_eq!(q.len(), 8, "denied tasks all returned");
@@ -385,17 +510,19 @@ mod tests {
             q.watermark()
         );
         assert_eq!(q.stats().feedback_wt_denials, 30);
+        assert_eq!(q.fallback_walks(), 0, "certain denials never walk the shards");
 
         // Grant-heavy: tiny payloads, long local waits.
         let g = graph(100);
         let q = ShardedQueue::new(4);
+        let est = ExecSnapshot::uniform(100.0);
         let mut granted = 0;
         while granted < 30 {
             for i in 0..40 {
                 let t = TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
                 q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
             }
-            let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, 100.0, 5.0, 1e3);
+            let d = decide_steal(&cfg(VictimPolicy::Single, true), &g, &q, 4, &est, 5.0, 1e3);
             assert_eq!(d.tasks.len(), 1);
             granted += 1;
             let _ = q.drain();
@@ -407,12 +534,12 @@ mod tests {
         );
     }
 
-    /// The gate-denial reinsert is one `insert_batch_meta` per request
-    /// — one lock acquisition for the whole batch, counted in
-    /// `SchedStats` — on both backends.
+    /// The gate-denial reinsert is one batched insert per request — one
+    /// lock acquisition for the whole batch, counted under the
+    /// gate-denial site — on both backends.
     #[test]
     fn denial_reinsert_is_one_batched_insert() {
-        let g = graph(1_000_000_000);
+        let g = mixed_graph(1_000_000_000);
         for backend in SchedBackend::ALL {
             let q = backend.build(4);
             for i in 0..8 {
@@ -420,14 +547,17 @@ mod tests {
                 q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
             }
             // Chunk(3): the denial returns 3 tasks in one batch. avg =
-            // 100µs keeps the waiting time above the overhead floor so
-            // the payload-weighing (extract + reinsert) path runs.
+            // 100µs keeps the waiting time above the overhead floor and
+            // the 64 B min payload keeps the denial from being certain,
+            // so the payload-weighing (extract + reinsert) path runs.
             let mc = cfg(VictimPolicy::Chunk(3), true);
-            let d = decide_steal(&mc, &g, q.as_ref(), 4, 100.0, 5.0, 1e3);
+            let est = ExecSnapshot::uniform(100.0);
+            let d = decide_steal(&mc, &g, q.as_ref(), 4, &est, 5.0, 1e3);
             assert!(d.denied_by_waiting_time, "{backend:?}");
             let s = q.stats();
-            assert_eq!(s.batch_inserts, 1, "{backend:?}: one batch per denial");
-            assert_eq!(s.batch_saved_locks, 2, "{backend:?}: 3 tasks, 2 locks saved");
+            let denial = s.site(BatchSite::GateDenial);
+            assert_eq!(denial.batches, 1, "{backend:?}: one batch per denial");
+            assert_eq!(denial.saved_locks(), 2, "{backend:?}: 3 tasks, 2 locks saved");
             assert_eq!(s.feedback_wt_denials, 1, "{backend:?}");
             assert_eq!(q.len(), 8, "{backend:?}: conservation");
             assert_eq!(q.stealable_count(), 4, "{backend:?}: meta preserved");
@@ -445,11 +575,12 @@ mod tests {
                 q.insert_meta(t, i as i64, TaskMeta::of(&g, t));
             }
             let mc = cfg(VictimPolicy::Single, true);
-            let d = decide_steal(&mc, &g, q.as_ref(), 4, 100.0, 5.0, 1e3);
+            let est = ExecSnapshot::uniform(100.0);
+            let d = decide_steal(&mc, &g, q.as_ref(), 4, &est, 5.0, 1e3);
             assert_eq!(d.tasks.len(), 1, "{backend:?}");
             assert_eq!(q.stats().feedback_grants, 1, "{backend:?}");
             let _ = q.drain();
-            let d = decide_steal(&mc, &g, q.as_ref(), 4, 100.0, 5.0, 1e3);
+            let d = decide_steal(&mc, &g, q.as_ref(), 4, &est, 5.0, 1e3);
             assert!(d.tasks.is_empty(), "{backend:?}");
             assert_eq!(q.stats().feedback_grants, 1, "{backend:?}: empty is not a grant");
             assert_eq!(q.stats().feedback_wt_denials, 0, "{backend:?}");

@@ -6,15 +6,15 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::comm::{LinkModel, Msg, Network, NodeMailbox};
-use crate::dataflow::task::{NodeId, TaskDesc};
+use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    ewma_update, exec_estimate_us, is_starving, protocol::decide_steal, MigrateConfig,
-    StarvationView, StealStats,
+    class_estimate_update, ewma_update, exec_estimate_us, is_starving, protocol::decide_steal,
+    ExecSnapshot, MigrateConfig, StarvationView, StealStats,
 };
-use crate::sched::{SchedBackend, Scheduler, TaskMeta};
+use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
 use crate::term::{SafraAction, SafraState};
 use crate::util::rng::Rng;
 
@@ -31,8 +31,12 @@ pub struct ClusterConfig {
     pub sched: SchedBackend,
     /// Coalesce same-destination successor activations into one
     /// `ActivateBatch` message (`--batch-activations`; off reproduces
-    /// the per-edge protocol for ablations).
+    /// the per-edge protocol for ablations). Also routes each local
+    /// activation ready set through one batched queue insert.
     pub batch_activations: bool,
+    /// Sharded steal-pool floor (`--pool-floor`; see
+    /// [`crate::sched::POOL_FLOOR`]).
+    pub pool_floor: usize,
 }
 
 impl Default for ClusterConfig {
@@ -45,6 +49,7 @@ impl Default for ClusterConfig {
             record_polls: true,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: POOL_FLOOR,
         }
     }
 }
@@ -77,6 +82,16 @@ struct NodeState {
     /// read by the victim-side waiting-time gate. 0 bits = 0.0 = no
     /// history yet.
     exec_ewma_us_bits: AtomicU64,
+    /// Per-class execution-time estimates (µs as `f64` bits), updated
+    /// at task finish when `MigrateConfig::exec_per_class` is on via
+    /// the shared [`class_estimate_update`] rule — the threaded twin of
+    /// the DES's plain-field table. 0 bits = no history for the class.
+    class_est_us_bits: [AtomicU64; TaskClass::COUNT],
+    /// Non-empty activation ready sets delivered through the batched
+    /// path — the runtime-layer count the scheduler's activation-site
+    /// batch counter is asserted against (exactly one batched insert
+    /// per non-empty ready set).
+    activation_ready_batches: AtomicU64,
     busy_ns: AtomicU64,
     steal: Mutex<StealStats>,
     inflight_steals: AtomicUsize,
@@ -120,7 +135,7 @@ impl Cluster {
             .map(|i| {
                 Arc::new(NodeState {
                     id: NodeId(i as u32),
-                    queue: cfg.sched.build(cfg.workers_per_node),
+                    queue: cfg.sched.build_with(cfg.workers_per_node, cfg.pool_floor),
                     idle: Mutex::new(()),
                     queue_cv: Condvar::new(),
                     parked: AtomicUsize::new(0),
@@ -130,6 +145,8 @@ impl Cluster {
                     tasks_done: AtomicU64::new(0),
                     exec_sum_ns: AtomicU64::new(0),
                     exec_ewma_us_bits: AtomicU64::new(0),
+                    class_est_us_bits: std::array::from_fn(|_| AtomicU64::new(0)),
+                    activation_ready_batches: AtomicU64::new(0),
                     busy_ns: AtomicU64::new(0),
                     steal: Mutex::new(StealStats::default()),
                     inflight_steals: AtomicUsize::new(0),
@@ -235,6 +252,12 @@ impl Cluster {
                         } else {
                             0.0
                         },
+                        class_est_us: std::array::from_fn(|c| {
+                            f64::from_bits(nd.class_est_us_bits[c].load(Ordering::Relaxed))
+                        }),
+                        activation_ready_batches: nd
+                            .activation_ready_batches
+                            .load(Ordering::Relaxed),
                         steal: *nd.steal.lock().unwrap(),
                         sched: nd.queue.stats(),
                         polls: std::mem::take(&mut nd.polls.lock().unwrap()),
@@ -263,12 +286,14 @@ fn enqueue(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
     }
 }
 
-/// Insert a batch of ready tasks (steal-reply re-enqueue) under one
-/// queue-lock acquisition, then wake workers. Mirrors [`enqueue`],
-/// including the parked-worker SeqCst protocol; `notify_all` because a
-/// batch can feed several parked workers at once.
-fn enqueue_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDesc]) {
-    node.queue.insert_batch_meta(&TaskMeta::batch_of(graph, tasks));
+/// Insert a batch of ready tasks under one queue-lock acquisition
+/// (booked to `site` — steal-reply re-enqueue or activation ready set),
+/// then wake workers. Mirrors [`enqueue`], including the parked-worker
+/// SeqCst protocol; `notify_all` because a batch can feed several
+/// parked workers at once.
+fn enqueue_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDesc], site: BatchSite) {
+    node.queue
+        .insert_batch_at(site, &TaskMeta::batch_of(graph, tasks));
     if node.parked.load(Ordering::SeqCst) > 0 {
         let _idle = node.idle.lock().unwrap();
         node.queue_cv.notify_all();
@@ -284,7 +309,10 @@ fn activate_local(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
 }
 
 /// Deliver a coalesced activation batch under a single tracker lock,
-/// then enqueue whatever became ready.
+/// then enqueue the whole ready set through one batched queue insert —
+/// the batch-first activation pipeline: one tracker lock and one
+/// queue-lock acquisition per delivery, however many tasks became
+/// ready.
 fn activate_local_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDesc]) {
     let mut ready = Vec::new();
     {
@@ -295,8 +323,9 @@ fn activate_local_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDe
             }
         }
     }
-    for t in ready {
-        enqueue(node, graph, t);
+    if !ready.is_empty() {
+        node.activation_ready_batches.fetch_add(1, Ordering::Relaxed);
+        enqueue_batch(node, graph, &ready, BatchSite::Activation);
     }
 }
 
@@ -362,13 +391,21 @@ fn worker_loop(
         // Propagate activations BEFORE leaving the executing state so the
         // node is never "passive" with un-sent messages (Safra safety).
         // Remote successors sharing a destination coalesce into one
-        // ActivateBatch message: one wire header, one Safra deficit
-        // entry, one tracker lock at the receiver.
+        // ActivateBatch message (one wire header, one Safra deficit
+        // entry, one tracker lock at the receiver); local successors
+        // coalesce the same way into one tracker lock + one batched
+        // queue insert. `--batch-activations false` restores the
+        // per-edge protocol on both paths for ablations.
+        let mut local: Vec<TaskDesc> = Vec::new();
         let mut remote: Vec<(NodeId, Vec<TaskDesc>)> = Vec::new();
         for s in succs {
             let dest = if dynamic { node.id } else { graph.owner(s) };
             if dest == node.id {
-                activate_local(&node, graph, s);
+                if sh.cfg.batch_activations {
+                    local.push(s);
+                } else {
+                    activate_local(&node, graph, s);
+                }
             } else if sh.cfg.batch_activations {
                 match remote.iter_mut().find(|(d, _)| *d == dest) {
                     Some((_, bucket)) => bucket.push(s),
@@ -378,6 +415,9 @@ fn worker_loop(
                 node.safra.lock().unwrap().on_send();
                 sh.net.send(node.id, dest, Msg::Activate { task: s });
             }
+        }
+        if !local.is_empty() {
+            activate_local_batch(&node, graph, &local);
         }
         for (dest, tasks) in remote {
             node.safra.lock().unwrap().on_send();
@@ -404,6 +444,15 @@ fn worker_loop(
                     Some(ewma_update(f64::from_bits(bits), dur_us).to_bits())
                 });
         }
+        if sh.cfg.migrate.exec_per_class {
+            // Same CAS-over-bits scheme, one cell per class, through the
+            // shared update rule so the DES table cannot diverge.
+            let dur_us = dur_ns as f64 / 1e3;
+            let cell = &node.class_est_us_bits[task.class.idx()];
+            let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some(class_estimate_update(f64::from_bits(bits), dur_us).to_bits())
+            });
+        }
         node.busy_ns.fetch_add(dur_ns, Ordering::SeqCst);
         node.last_finish_ns
             .fetch_max(sh.start.elapsed().as_nanos() as u64, Ordering::SeqCst);
@@ -427,24 +476,32 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                 Msg::ActivateBatch { tasks } => activate_local_batch(&node, graph, &tasks),
                 Msg::StealRequest { thief } => {
                     let workers = sh.cfg.workers_per_node;
-                    // The gate's execution-time estimate (shared policy
-                    // helper, so the DES cannot diverge): EWMA or
-                    // running mean, both O(1) reads of incrementally-
-                    // maintained state.
+                    // The gate's execution-time estimates (shared policy
+                    // helpers, so the DES cannot diverge): EWMA or
+                    // running mean node-wide, plus the per-class table
+                    // under --exec-per-class — all O(1) reads of
+                    // incrementally-maintained state.
                     let done = node.tasks_done.load(Ordering::SeqCst);
                     let ewma = f64::from_bits(node.exec_ewma_us_bits.load(Ordering::Relaxed));
-                    let avg_us = exec_estimate_us(
-                        sh.cfg.migrate.exec_ewma,
-                        ewma,
-                        node.exec_sum_ns.load(Ordering::SeqCst) as f64 / 1e3,
-                        done,
-                    );
+                    let est = ExecSnapshot {
+                        avg_us: exec_estimate_us(
+                            sh.cfg.migrate.exec_ewma,
+                            ewma,
+                            node.exec_sum_ns.load(Ordering::SeqCst) as f64 / 1e3,
+                            done,
+                        ),
+                        per_class: sh.cfg.migrate.exec_per_class.then(|| {
+                            std::array::from_fn(|c| {
+                                f64::from_bits(node.class_est_us_bits[c].load(Ordering::Relaxed))
+                            })
+                        }),
+                    };
                     let decision = decide_steal(
                         &sh.cfg.migrate,
                         graph,
                         node.queue.as_ref(),
                         workers,
-                        avg_us,
+                        &est,
                         sh.cfg.link.latency_us,
                         sh.cfg.link.bw_bytes_per_us,
                     );
@@ -498,7 +555,7 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                         // Recreate the stolen tasks locally (same uids)
                         // in one batched insert: one queue-lock
                         // acquisition per reply, not one per task.
-                        enqueue_batch(&node, graph, &tasks);
+                        enqueue_batch(&node, graph, &tasks, BatchSite::StealReply);
                     }
                 }
                 Msg::Token(tok) => {
@@ -755,6 +812,11 @@ mod tests {
                     "denials must raise the watermark, got {}",
                     r.nodes[0].sched.watermark
                 );
+                // The overhead floor proves every denial from the O(1)
+                // accounting, so extraction never runs — and therefore
+                // never pays the all-shards fallback walk.
+                let walks: u64 = r.nodes.iter().map(|n| n.sched.extract_fallback_walks).sum();
+                assert_eq!(walks, 0, "certain denials must skip extraction");
             }
         }
     }
@@ -792,13 +854,107 @@ mod tests {
         assert_eq!(r.tasks_total_executed(), size);
         let steals = r.total_steals();
         assert!(steals.successful_steals > 0);
-        let batches: u64 = r.nodes.iter().map(|n| n.sched.batch_inserts).sum();
-        let saved: u64 = r.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
+        // Per-call-site accounting keeps the reply assertion exact even
+        // though activation ready sets batch on the same queues.
+        let reply: Vec<_> = r
+            .nodes
+            .iter()
+            .map(|n| n.sched.site(BatchSite::StealReply))
+            .collect();
+        let batches: u64 = reply.iter().map(|b| b.batches).sum();
+        let saved: u64 = reply.iter().map(|b| b.saved_locks()).sum();
         assert_eq!(
             batches, steals.successful_steals,
             "exactly one batched insert per non-empty reply"
         );
         assert_eq!(saved, steals.tasks_received - steals.successful_steals);
+    }
+
+    /// The batch-first activation pipeline e2e: every non-empty ready
+    /// set delivered through the batched path performs exactly one
+    /// activation-site batched insert — the runtime-layer ready-set
+    /// count and the scheduler-layer batch counter must agree per node
+    /// — and the ablation flag restores the per-edge protocol.
+    #[test]
+    fn activation_ready_sets_batch_exactly_once() {
+        let run = |batch: bool| {
+            let g = Arc::new(CholeskyGraph::new(CholeskyParams {
+                tiles: 10,
+                tile_size: 8,
+                nodes: 3,
+                dense_fraction: 1.0,
+                seed: 3,
+                all_dense: true,
+            }));
+            let total = g.total_tasks().unwrap();
+            let r = Cluster::run(
+                g,
+                ClusterConfig {
+                    workers_per_node: 2,
+                    batch_activations: batch,
+                    migrate: MigrateConfig::disabled(),
+                    ..Default::default()
+                },
+                Arc::new(NullExecutor),
+            );
+            assert_eq!(r.tasks_total_executed(), total, "batch={batch}");
+            r
+        };
+        let r = run(true);
+        let mut ready_sets = 0;
+        for (ix, n) in r.nodes.iter().enumerate() {
+            assert_eq!(
+                n.sched.site(BatchSite::Activation).batches,
+                n.activation_ready_batches,
+                "node {ix}: one batched insert per non-empty ready set"
+            );
+            ready_sets += n.activation_ready_batches;
+        }
+        assert!(ready_sets > 0, "dense Cholesky fan-out must batch");
+        // Nothing else books the activation site.
+        let unbatched = run(false);
+        for n in &unbatched.nodes {
+            assert_eq!(n.sched.site(BatchSite::Activation).batches, 0);
+            assert_eq!(n.activation_ready_batches, 0);
+        }
+    }
+
+    /// `--exec-per-class` in the threaded runtime: the gate runs on the
+    /// per-class estimator table, every task still executes exactly
+    /// once, and the finished classes have populated their estimates.
+    #[test]
+    fn exec_per_class_run_completes_and_populates_table() {
+        let g = chol(8, 3);
+        let total = g.total_tasks().unwrap();
+        let g2 = g.clone();
+        let ex = SpinExecutor::new(CostModel::default_calibrated(), 8, move |t| g2.work_units(t))
+            .with_time_scale(0.05);
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 50.0,
+                    exec_per_class: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(ex),
+        );
+        assert_eq!(r.tasks_total_executed(), total);
+        let gemm_est: f64 = r
+            .nodes
+            .iter()
+            .map(|n| n.class_est_us[TaskClass::Gemm.idx()])
+            .fold(0.0, f64::max);
+        assert!(gemm_est > 0.0, "GEMM completions seeded the class table");
+        let uts_est: f64 = r
+            .nodes
+            .iter()
+            .map(|n| n.class_est_us[TaskClass::UtsNode.idx()])
+            .fold(0.0, f64::max);
+        assert_eq!(uts_est, 0.0, "no UTS tasks ran, so no UTS estimate");
     }
 
     /// `--exec-ewma` in the threaded runtime: the gate runs on the

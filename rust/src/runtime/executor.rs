@@ -266,6 +266,7 @@ mod tests {
                 record_polls: false,
                 sched: SchedBackend::Central,
                 batch_activations: true,
+                pool_floor: crate::sched::POOL_FLOOR,
             };
             let r = Cluster::run(g.clone(), cfg, ex.clone());
             assert_eq!(r.tasks_total_executed(), g.total_tasks().unwrap());

@@ -17,27 +17,52 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::dataflow::task::TaskDesc;
+use crate::dataflow::task::{TaskClass, TaskDesc};
 
-use super::{QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
+use super::{BatchSite, QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct Central {
     map: BTreeMap<QKey, (TaskDesc, TaskMeta)>,
     /// Keys of entries whose meta marks them stealable (same ordering as
     /// `map`, so `iter().take(k)` is "k lowest-priority stealable").
     steal_idx: BTreeSet<QKey>,
     steal_payload: u64,
+    /// Lower bound on any queued stealable payload (`u64::MAX` = none):
+    /// monotone min over inserts, reset when `steal_idx` empties.
+    min_steal_payload: u64,
+    /// Queued tasks per class (keyed on `task.class`).
+    class_counts: [usize; TaskClass::COUNT],
     seq: u64,
     stats: SchedStats,
 }
 
+impl Default for Central {
+    fn default() -> Self {
+        Central {
+            map: BTreeMap::new(),
+            steal_idx: BTreeSet::new(),
+            steal_payload: 0,
+            min_steal_payload: u64::MAX,
+            class_counts: [0; TaskClass::COUNT],
+            seq: 0,
+            stats: SchedStats::default(),
+        }
+    }
+}
+
 impl Central {
-    fn unindex(&mut self, key: QKey, meta: TaskMeta) {
+    /// Bookkeeping for one removed entry: steal index/payload, the
+    /// per-class count, and the payload bound's empty-set reset.
+    fn forget(&mut self, key: QKey, task: &TaskDesc, meta: TaskMeta) {
         if meta.stealable {
             self.steal_idx.remove(&key);
             self.steal_payload -= meta.payload_bytes;
+            if self.steal_idx.is_empty() {
+                self.min_steal_payload = u64::MAX;
+            }
         }
+        self.class_counts[task.class.idx()] -= 1;
     }
 }
 
@@ -68,7 +93,7 @@ impl CentralQueue {
     }
 
     pub fn insert(&self, task: TaskDesc, priority: i64) {
-        self.insert_meta(task, priority, TaskMeta::default());
+        self.insert_meta(task, priority, TaskMeta::for_task(task));
     }
 
     pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
@@ -86,22 +111,30 @@ impl CentralQueue {
         if meta.stealable {
             q.steal_idx.insert(key);
             q.steal_payload += meta.payload_bytes;
+            q.min_steal_payload = q.min_steal_payload.min(meta.payload_bytes);
         }
+        q.class_counts[task.class.idx()] += 1;
         q.map.insert(key, (task, meta));
     }
 
     /// Batched insert: the whole batch enters under one lock
-    /// acquisition (steal-reply re-enqueue, gate-denial reinsert).
-    pub fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+    /// acquisition, booked against `site` (steal-reply re-enqueue,
+    /// gate-denial reinsert, activation ready set).
+    pub fn insert_batch_at(&self, site: BatchSite, batch: &[(TaskDesc, i64, TaskMeta)]) {
         if batch.is_empty() {
             return;
         }
         let mut q = self.inner.lock().unwrap();
-        q.stats.batch_inserts += 1;
-        q.stats.batch_saved_locks += batch.len() as u64 - 1;
+        q.stats.batches[site.idx()].batches += 1;
+        q.stats.batches[site.idx()].tasks += batch.len() as u64;
         for &(task, priority, meta) in batch {
             Self::insert_locked(&mut q, task, priority, meta);
         }
+    }
+
+    /// [`CentralQueue::insert_batch_at`] without a protocol role.
+    pub fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        self.insert_batch_at(BatchSite::Other, batch);
     }
 
     /// Steal-decision feedback: the central backend has no watermark to
@@ -128,7 +161,7 @@ impl CentralQueue {
         if let Some((key, (task, meta))) = entry {
             q.stats.selects += 1;
             q.stats.select_len_sum += q.map.len() as u64;
-            q.unindex(key, meta);
+            q.forget(key, &task, meta);
             Some(task)
         } else {
             None
@@ -145,6 +178,17 @@ impl CentralQueue {
         self.inner.lock().unwrap().steal_payload
     }
 
+    /// Lower bound on any queued stealable payload — O(1), no scan
+    /// (`u64::MAX` when nothing stealable is queued).
+    pub fn min_stealable_payload_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().min_steal_payload
+    }
+
+    /// Queued tasks per class — O(1) copy of the incremental counters.
+    pub fn class_counts(&self) -> [usize; TaskClass::COUNT] {
+        self.inner.lock().unwrap().class_counts
+    }
+
     /// Migrate-thread extraction of up to `max` stealable tasks, lowest
     /// priority first, via the stealable index — no filtering of the
     /// queue. Still *competes* with `select` on the one lock: the §4.4
@@ -158,7 +202,7 @@ impl CentralQueue {
         let mut out = Vec::with_capacity(keys.len());
         for k in keys {
             let (task, meta) = q.map.remove(&k).expect("indexed key vanished");
-            q.unindex(k, meta);
+            q.forget(k, &task, meta);
             out.push(task);
         }
         q.stats.steal_extracted += out.len() as u64;
@@ -196,7 +240,7 @@ impl CentralQueue {
         let mut out = Vec::with_capacity(keys.len());
         for k in keys {
             let (task, meta) = q.map.remove(&k).expect("key vanished");
-            q.unindex(k, meta);
+            q.forget(k, &task, meta);
             out.push(task);
         }
         q.stats.steal_extracted += out.len() as u64;
@@ -223,6 +267,8 @@ impl CentralQueue {
         q.map.clear();
         q.steal_idx.clear();
         q.steal_payload = 0;
+        q.min_steal_payload = u64::MAX;
+        q.class_counts = [0; TaskClass::COUNT];
         out
     }
 }
@@ -232,8 +278,8 @@ impl Scheduler for CentralQueue {
         CentralQueue::insert_meta(self, task, priority, meta)
     }
 
-    fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
-        CentralQueue::insert_batch_meta(self, batch)
+    fn insert_batch_at(&self, site: BatchSite, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        CentralQueue::insert_batch_at(self, site, batch)
     }
 
     fn feedback(&self, outcome: StealOutcome) {
@@ -254,6 +300,14 @@ impl Scheduler for CentralQueue {
 
     fn stealable_payload_bytes(&self) -> u64 {
         CentralQueue::stealable_payload_bytes(self)
+    }
+
+    fn min_stealable_payload_bytes(&self) -> u64 {
+        CentralQueue::min_stealable_payload_bytes(self)
+    }
+
+    fn class_counts(&self) -> [usize; TaskClass::COUNT] {
+        CentralQueue::class_counts(self)
     }
 
     fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
@@ -363,6 +417,7 @@ mod tests {
                 TaskMeta {
                     stealable: i % 3 != 0,
                     payload_bytes: (i as u64) * 10,
+                    class: TaskClass::Synthetic,
                 },
             );
         }
@@ -391,10 +446,60 @@ mod tests {
     #[test]
     fn drain_resets_accounting() {
         let q = CentralQueue::new();
-        q.insert_meta(t(0), 0, TaskMeta { stealable: true, payload_bytes: 64 });
-        q.insert_meta(t(1), 1, TaskMeta { stealable: false, payload_bytes: 64 });
+        let stealable = TaskMeta {
+            stealable: true,
+            payload_bytes: 64,
+            class: TaskClass::Synthetic,
+        };
+        q.insert_meta(t(0), 0, stealable);
+        q.insert_meta(
+            t(1),
+            1,
+            TaskMeta {
+                stealable: false,
+                ..stealable
+            },
+        );
         assert_eq!(q.drain().len(), 2);
         assert_eq!(q.stealable_count(), 0);
         assert_eq!(q.stealable_payload_bytes(), 0);
+        assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
+        assert_eq!(q.class_counts(), [0; TaskClass::COUNT]);
+    }
+
+    /// The payload bound: monotone min while stealable tasks remain,
+    /// reset to the sentinel when the stealable set empties.
+    #[test]
+    fn min_payload_bound_tracks_inserts_and_empties() {
+        let q = CentralQueue::new();
+        assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
+        for (i, payload) in [(0u32, 500u64), (1, 200), (2, 900)] {
+            q.insert_meta(
+                t(i),
+                i as i64,
+                TaskMeta {
+                    stealable: true,
+                    payload_bytes: payload,
+                    class: TaskClass::Synthetic,
+                },
+            );
+        }
+        // Non-stealable payloads never feed the bound.
+        q.insert_meta(
+            t(3),
+            3,
+            TaskMeta {
+                stealable: false,
+                payload_bytes: 1,
+                class: TaskClass::Synthetic,
+            },
+        );
+        assert_eq!(q.min_stealable_payload_bytes(), 200);
+        // Removing the smallest leaves the bound conservative (≤ 500).
+        let _ = q.extract_stealable(2); // takes i=0 (500) and i=1 (200)
+        assert!(q.min_stealable_payload_bytes() <= 500);
+        let _ = q.extract_stealable(1); // stealable set now empty
+        assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
+        assert_eq!(q.len(), 1, "non-stealable task remains");
     }
 }

@@ -39,11 +39,19 @@
 //! bytes?), and the backend keeps
 //!
 //! * [`Scheduler::stealable_count`] — how many queued tasks are
-//!   stealable, and
+//!   stealable,
 //! * [`Scheduler::stealable_payload_bytes`] — the input bytes that would
 //!   travel if all of them migrated,
+//! * [`Scheduler::min_stealable_payload_bytes`] — a lower bound on the
+//!   payload of any queued stealable task (monotone min, reset when the
+//!   stealable set empties), so a payload-certain waiting-time denial
+//!   needs no extraction at all, and
+//! * [`Scheduler::class_counts`] — queued tasks per [`TaskClass`], so
+//!   the per-class waiting-time estimator (`--exec-per-class`) can
+//!   weigh the actual queue composition,
 //!
-//! exact under any interleaving of insert / select / extract, each an
+//! exact under any interleaving of insert / select / extract (the
+//! payload minimum is a conservative bound, see its docs), each an
 //! O(1) read. [`Scheduler::extract_stealable`] serves the migrate thread
 //! from a per-queue index of stealable entries (lowest priority first)
 //! without filtering the whole map. Callers must keep the inserted meta
@@ -71,11 +79,13 @@
 //! `docs/ARCHITECTURE.md` for the full loop diagram.
 //!
 //! Bulk arrivals — a steal reply re-creating stolen tasks at the thief,
-//! or a gate denial returning an extracted batch — go through
-//! [`Scheduler::insert_batch_meta`]: one lock acquisition per batch
+//! a gate denial returning an extracted batch, or an activation ready
+//! set (the hottest insert path) — go through
+//! [`Scheduler::insert_batch_at`]: one lock acquisition per batch
 //! instead of one per task (the queue-side mirror of PR 2's
-//! `ActivateBatch`), with the saving counted in
-//! [`SchedStats::batch_saved_locks`].
+//! `ActivateBatch`), attributed per call site ([`BatchSite`]) so each
+//! path's one-batch-per-event contract stays individually assertable,
+//! with the saving counted in [`BatchCounter::saved_locks`].
 //!
 //! Both backends preserve the semantics the policies rely on: per shard,
 //! `select` is priority-then-FIFO; steal extraction takes lowest
@@ -85,14 +95,14 @@
 
 use std::str::FromStr;
 
-use crate::dataflow::task::TaskDesc;
+use crate::dataflow::task::{TaskClass, TaskDesc};
 use crate::dataflow::ttg::TaskGraph;
 
 mod central;
 mod sharded;
 
 pub use central::CentralQueue;
-pub use sharded::{SPILL_THRESHOLD, ShardedQueue};
+pub use sharded::{POOL_FLOOR, SPILL_THRESHOLD, ShardedQueue};
 
 /// The historical name of the node queue; kept as an alias for the
 /// reference backend so existing call sites and tests read unchanged.
@@ -119,6 +129,12 @@ pub struct TaskMeta {
     pub stealable: bool,
     /// Input bytes that travel with the task if it migrates.
     pub payload_bytes: u64,
+    /// The task's class, snapshotted for the per-class waiting-time
+    /// estimator (`--exec-per-class`). The backends key their per-class
+    /// queued counts on `task.class` directly (so a mismatched meta can
+    /// never make the counts drift), but the snapshot keeps the whole
+    /// steal view of a queued task in one place.
+    pub class: TaskClass,
 }
 
 impl Default for TaskMeta {
@@ -128,16 +144,28 @@ impl Default for TaskMeta {
         TaskMeta {
             stealable: true,
             payload_bytes: 0,
+            class: TaskClass::Synthetic,
         }
     }
 }
 
 impl TaskMeta {
+    /// Default metadata for a plain insert of `t`: stealable, zero
+    /// payload, the task's own class — shared by the trait-level and
+    /// both backends' `insert` so they cannot diverge.
+    pub fn for_task(t: TaskDesc) -> TaskMeta {
+        TaskMeta {
+            class: t.class,
+            ..TaskMeta::default()
+        }
+    }
+
     /// Snapshot the graph's steal view of `t`.
     pub fn of(graph: &dyn TaskGraph, t: TaskDesc) -> TaskMeta {
         TaskMeta {
             stealable: graph.is_stealable(t),
             payload_bytes: graph.payload_bytes(t),
+            class: t.class,
         }
     }
 
@@ -174,6 +202,65 @@ pub enum StealOutcome {
     DeniedEmpty,
 }
 
+/// Which bulk-arrival path a batched insert came from. The accounting
+/// is split per call site so the e2e assertions stay exact when more
+/// than one path batches: one batch per non-empty steal reply, one per
+/// gate denial, one per non-empty activation ready set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum BatchSite {
+    /// Thief-side steal-reply re-enqueue (stolen tasks recreated).
+    StealReply = 0,
+    /// Victim-side gate-denial reinsert (extracted batch returned).
+    GateDenial = 1,
+    /// Successor-activation ready set (local fan-out or a delivered
+    /// `ActivateBatch`), routed through one batched insert.
+    Activation = 2,
+    /// Direct callers without a protocol role (tests, tools).
+    Other = 3,
+}
+
+impl BatchSite {
+    pub const COUNT: usize = 4;
+
+    pub const ALL: [BatchSite; BatchSite::COUNT] = [
+        BatchSite::StealReply,
+        BatchSite::GateDenial,
+        BatchSite::Activation,
+        BatchSite::Other,
+    ];
+
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BatchSite::StealReply => "steal-reply",
+            BatchSite::GateDenial => "gate-denial",
+            BatchSite::Activation => "activation",
+            BatchSite::Other => "other",
+        }
+    }
+}
+
+/// Batched-insert accounting for one [`BatchSite`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchCounter {
+    /// Non-empty `insert_batch_at` calls.
+    pub batches: u64,
+    /// Tasks inserted across those batches.
+    pub tasks: u64,
+}
+
+impl BatchCounter {
+    /// Lock acquisitions avoided by batching (Σ per batch of `len − 1`).
+    pub fn saved_locks(&self) -> u64 {
+        self.tasks - self.batches
+    }
+}
+
 /// Snapshot counters for the scheduler (feeds the E^b potential metric
 /// and the §4.4 contention analysis).
 #[derive(Clone, Copy, Debug, Default)]
@@ -188,13 +275,12 @@ pub struct SchedStats {
     /// filter-based extraction). The steal hot path must keep this at
     /// zero — asserted by `migrate::protocol` tests.
     pub scans: u64,
-    /// [`Scheduler::insert_batch_meta`] calls: exactly one per
-    /// non-empty steal reply (thief side) and one per gate-denial
-    /// reinsert (victim side) — asserted by protocol and e2e tests.
-    pub batch_inserts: u64,
-    /// Lock acquisitions avoided by batching inserts
-    /// (Σ per batch of `batch_len − 1`).
-    pub batch_saved_locks: u64,
+    /// Per-call-site batched-insert accounting, indexed by
+    /// [`BatchSite`]: exactly one batch per non-empty steal reply
+    /// (thief side), one per gate-denial reinsert (victim side) and one
+    /// per non-empty activation ready set — each asserted e2e against
+    /// its own counter.
+    pub batches: [BatchCounter; BatchSite::COUNT],
     /// [`StealOutcome::Granted`] feedback events received.
     pub feedback_grants: u64,
     /// [`StealOutcome::DeniedWaitingTime`] feedback events received.
@@ -202,6 +288,28 @@ pub struct SchedStats {
     /// Live adaptive spill watermark at snapshot time (sharded backend
     /// only; the central backend has no watermark and reports 0).
     pub watermark: u64,
+    /// Sharded backend only: `extract_stealable` calls that missed the
+    /// steal pool and had to walk the shards' stealable indices. The
+    /// payload-certain denial fast path plus the pool floor exist to
+    /// keep this near zero under sustained denial.
+    pub extract_fallback_walks: u64,
+}
+
+impl SchedStats {
+    /// Batched-insert accounting for one call site.
+    pub fn site(&self, site: BatchSite) -> BatchCounter {
+        self.batches[site.idx()]
+    }
+
+    /// Total batched inserts across every call site.
+    pub fn batch_inserts(&self) -> u64 {
+        self.batches.iter().map(|b| b.batches).sum()
+    }
+
+    /// Total lock acquisitions avoided by batching, across every site.
+    pub fn batch_saved_locks(&self) -> u64 {
+        self.batches.iter().map(|b| b.saved_locks()).sum()
+    }
 }
 
 /// A node's ready-task scheduler.
@@ -216,19 +324,27 @@ pub trait Scheduler: Send + Sync + std::fmt::Debug {
     /// metadata (see the module docs for the consistency contract).
     fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta);
 
-    /// Enqueue without explicit metadata: stealable, zero payload.
+    /// Enqueue without explicit metadata: stealable, zero payload, the
+    /// task's own class ([`TaskMeta::for_task`]).
     fn insert(&self, task: TaskDesc, priority: i64) {
-        self.insert_meta(task, priority, TaskMeta::default());
+        self.insert_meta(task, priority, TaskMeta::for_task(task));
     }
 
     /// Enqueue a batch of ready tasks under a single queue-lock
-    /// acquisition (`(task, priority, meta)` triples). The batched twin
-    /// of [`Scheduler::insert_meta`] for the two bulk-arrival paths —
-    /// the thief-side steal-reply re-enqueue and the victim-side gate-
-    /// denial reinsert. Empty batches are a no-op; non-empty batches
-    /// bump [`SchedStats::batch_inserts`] once and
-    /// [`SchedStats::batch_saved_locks`] by `len − 1`.
-    fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]);
+    /// acquisition (`(task, priority, meta)` triples), attributed to
+    /// `site` in the per-call-site accounting. The batched twin of
+    /// [`Scheduler::insert_meta`] for the bulk-arrival paths — the
+    /// thief-side steal-reply re-enqueue, the victim-side gate-denial
+    /// reinsert, and the activation ready set. Empty batches are a
+    /// no-op; non-empty batches bump the site's
+    /// [`BatchCounter::batches`] once and its task count by `len`.
+    fn insert_batch_at(&self, site: BatchSite, batch: &[(TaskDesc, i64, TaskMeta)]);
+
+    /// [`Scheduler::insert_batch_at`] without a protocol role
+    /// ([`BatchSite::Other`]) — direct callers and tests.
+    fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        self.insert_batch_at(BatchSite::Other, batch);
+    }
 
     /// Report a steal-decision outcome back to the scheduler (the
     /// closed loop of the module docs). The sharded backend adapts its
@@ -254,6 +370,23 @@ pub trait Scheduler: Send + Sync + std::fmt::Debug {
 
     /// Total payload bytes of the queued stealable tasks. O(1).
     fn stealable_payload_bytes(&self) -> u64;
+
+    /// Lower bound on the payload of any queued stealable task, or
+    /// `u64::MAX` when nothing stealable is queued. O(1): maintained as
+    /// a monotone minimum over inserts, reset when the stealable set
+    /// empties — so it may under-report after removals (the bound gets
+    /// conservative, never wrong). `decide_steal` uses it for the
+    /// payload-certain denial fast path: any extractable batch carries
+    /// at least this much payload, so when even that floor loses the
+    /// waiting-time comparison the verdict is known without extracting.
+    fn min_stealable_payload_bytes(&self) -> u64;
+
+    /// Queued tasks per [`TaskClass`], indexed by class discriminant.
+    /// O(1) reads of incrementally-maintained counters (keyed on
+    /// `task.class`): the per-class waiting-time estimator
+    /// (`--exec-per-class`) weighs the *actual queue composition*
+    /// instead of `queue_len × one node-wide mean`.
+    fn class_counts(&self) -> [usize; TaskClass::COUNT];
 
     /// Migrate-thread extraction of up to `max` stealable tasks, lowest
     /// priority first, via the incremental index — no queue scan. The
@@ -295,11 +428,21 @@ pub enum SchedBackend {
 }
 
 impl SchedBackend {
-    /// Instantiate the backend for a node with `workers` worker threads.
+    /// Instantiate the backend for a node with `workers` worker threads
+    /// (sharded steal-pool floor at its [`POOL_FLOOR`] default).
     pub fn build(self, workers: usize) -> Box<dyn Scheduler> {
+        self.build_with(workers, POOL_FLOOR)
+    }
+
+    /// [`SchedBackend::build`] with an explicit sharded steal-pool
+    /// floor (`--pool-floor`; the central backend has no pool and
+    /// ignores it).
+    pub fn build_with(self, workers: usize, pool_floor: usize) -> Box<dyn Scheduler> {
         match self {
             SchedBackend::Central => Box::new(CentralQueue::new()),
-            SchedBackend::Sharded => Box::new(ShardedQueue::new(workers)),
+            SchedBackend::Sharded => {
+                Box::new(ShardedQueue::new(workers).with_pool_floor(pool_floor))
+            }
         }
     }
 
@@ -388,6 +531,7 @@ mod tests {
                     TaskMeta {
                         stealable: i % 2 == 0,
                         payload_bytes: 100 + i as u64,
+                        class: TaskClass::Synthetic,
                     },
                 );
             }
@@ -410,6 +554,7 @@ mod tests {
         let m = TaskMeta::default();
         assert!(m.stealable);
         assert_eq!(m.payload_bytes, 0);
+        assert_eq!(m.class, TaskClass::Synthetic);
     }
 
     #[test]
@@ -424,23 +569,91 @@ mod tests {
                         TaskMeta {
                             stealable: true,
                             payload_bytes: 10,
+                            class: TaskClass::Synthetic,
                         },
                     )
                 })
                 .collect();
             q.insert_batch_meta(&batch);
             let s = q.stats();
-            assert_eq!(s.batch_inserts, 1, "{backend:?}");
-            assert_eq!(s.batch_saved_locks, 5, "{backend:?}");
+            assert_eq!(s.batch_inserts(), 1, "{backend:?}");
+            assert_eq!(s.batch_saved_locks(), 5, "{backend:?}");
+            assert_eq!(s.site(BatchSite::Other).batches, 1, "{backend:?}");
+            assert_eq!(s.site(BatchSite::Other).tasks, 6, "{backend:?}");
             assert_eq!(s.inserts, 6, "{backend:?}: per-task insert count kept");
             assert_eq!(q.len(), 6, "{backend:?}");
             assert_eq!(q.stealable_count(), 6, "{backend:?}");
             assert_eq!(q.stealable_payload_bytes(), 60, "{backend:?}");
             // Empty batches are a no-op, not a zero-length batch insert.
             q.insert_batch_meta(&[]);
-            assert_eq!(q.stats().batch_inserts, 1, "{backend:?}");
+            assert_eq!(q.stats().batch_inserts(), 1, "{backend:?}");
             // Highest priority first, exactly as per-task inserts.
             assert_eq!(q.select(0), Some(t(5)), "{backend:?}");
+        }
+    }
+
+    /// Each bulk-arrival path books its batches under its own counter,
+    /// so one path batching cannot blur another's e2e assertion.
+    #[test]
+    fn batch_sites_are_accounted_separately() {
+        for backend in SchedBackend::ALL {
+            let q = backend.build(2);
+            let batch: Vec<(TaskDesc, i64, TaskMeta)> = (0..4u32)
+                .map(|i| (t(i), i as i64, TaskMeta::default()))
+                .collect();
+            q.insert_batch_at(BatchSite::StealReply, &batch);
+            q.insert_batch_at(BatchSite::Activation, &batch[..2]);
+            q.insert_batch_at(BatchSite::Activation, &batch[..3]);
+            q.insert_batch_at(BatchSite::GateDenial, &batch[..1]);
+            let s = q.stats();
+            assert_eq!(s.site(BatchSite::StealReply).batches, 1, "{backend:?}");
+            assert_eq!(s.site(BatchSite::StealReply).tasks, 4, "{backend:?}");
+            assert_eq!(s.site(BatchSite::Activation).batches, 2, "{backend:?}");
+            assert_eq!(s.site(BatchSite::Activation).tasks, 5, "{backend:?}");
+            assert_eq!(s.site(BatchSite::GateDenial).batches, 1, "{backend:?}");
+            assert_eq!(s.site(BatchSite::GateDenial).saved_locks(), 0, "{backend:?}");
+            assert_eq!(s.batch_inserts(), 4, "{backend:?}: total is the site sum");
+            assert_eq!(s.batch_saved_locks(), 3 + 1 + 2, "{backend:?}");
+            assert_eq!(q.len(), 10, "{backend:?}");
+        }
+    }
+
+    /// Per-class queued counts follow every insert/select/extract, and
+    /// the min-stealable-payload bound is a true lower bound that
+    /// resets when the stealable set empties.
+    #[test]
+    fn class_counts_and_min_payload_track_through_the_trait() {
+        for backend in SchedBackend::ALL {
+            let q = backend.build(2);
+            assert_eq!(q.min_stealable_payload_bytes(), u64::MAX, "{backend:?}");
+            let classes = [TaskClass::Potrf, TaskClass::Gemm, TaskClass::Gemm];
+            for (i, class) in classes.into_iter().enumerate() {
+                let task = TaskDesc::indexed(class, i as u32, 0, 0);
+                let meta = TaskMeta {
+                    stealable: true,
+                    payload_bytes: 100 * (i as u64 + 1),
+                    class,
+                };
+                q.insert_meta(task, i as i64, meta);
+            }
+            let counts = q.class_counts();
+            assert_eq!(counts[TaskClass::Potrf.idx()], 1, "{backend:?}");
+            assert_eq!(counts[TaskClass::Gemm.idx()], 2, "{backend:?}");
+            assert_eq!(counts.iter().sum::<usize>(), q.len(), "{backend:?}");
+            assert_eq!(q.min_stealable_payload_bytes(), 100, "{backend:?}");
+            // Removals keep the counts exact; the bound stays a lower
+            // bound (it may not rise when the smallest payload leaves).
+            let stolen = q.extract_stealable(1); // lowest priority = the POTRF
+            assert_eq!(stolen[0].class, TaskClass::Potrf, "{backend:?}");
+            assert_eq!(q.class_counts()[TaskClass::Potrf.idx()], 0, "{backend:?}");
+            assert!(q.min_stealable_payload_bytes() <= 200, "{backend:?}");
+            while q.select(0).is_some() {}
+            assert_eq!(q.class_counts(), [0; TaskClass::COUNT], "{backend:?}");
+            assert_eq!(
+                q.min_stealable_payload_bytes(),
+                u64::MAX,
+                "{backend:?}: bound resets when the stealable set empties"
+            );
         }
     }
 

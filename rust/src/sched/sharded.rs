@@ -35,10 +35,23 @@
 //! initial value. (Before the feedback hook, only pool pressure fed the
 //! watermark and the gate's denial signal was thrown away.)
 //!
-//! Steal accounting (`stealable_count`/`stealable_payload_bytes`) lives
-//! in atomics maintained on insert/select/extract — an O(1) read for the
-//! victim policy — and each shard keeps a `BTreeSet` index of its
-//! stealable keys so `extract_stealable` never filters a map.
+//! Steal accounting (`stealable_count`/`stealable_payload_bytes`, the
+//! per-class queued counts and the min-stealable-payload lower bound)
+//! lives in atomics maintained on insert/select/extract — an O(1) read
+//! for the victim policy — and each shard keeps a `BTreeSet` index of
+//! its stealable keys so `extract_stealable` never filters a map.
+//!
+//! Two mechanisms keep sustained denial off the all-shards fallback
+//! walk. First, a *pool floor* ([`POOL_FLOOR`], `--pool-floor`): when a
+//! pool-miss does force the walk, it extracts up to `floor` extra
+//! lowest-priority stealable tasks and banks them in the pool, so the
+//! next request is served from the pool again — one walk restocks,
+//! instead of one walk per request. Second, gate-denial reinserts
+//! ([`super::BatchSite::GateDenial`]) return their batch to the *pool*
+//! rather than a shard: the batch was extracted from the pool (or paid
+//! the walk already), and sending it back to a shard would drain the
+//! pool one task per denied poll at a maxed watermark. The walks that
+//! do happen are counted in [`SchedStats::extract_fallback_walks`].
 //!
 //! At most one lock is ever held at a time (a spilled task is popped,
 //! the shard unlocked, then the pool locked), so the backend is
@@ -51,14 +64,19 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::dataflow::task::TaskDesc;
+use crate::dataflow::task::{TaskClass, TaskDesc};
 
-use super::{QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
+use super::{BatchCounter, BatchSite, QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
 
 /// Initial spill watermark (20 ≈ half the paper's 40 workers, the same
 /// constant PaRSEC uses for chunked victim policies). The live value
 /// adapts per queue — see [`ShardedQueue::watermark`].
 pub const SPILL_THRESHOLD: usize = 20;
+
+/// Default steal-pool floor (`--pool-floor`): how many extra tasks a
+/// pool-miss fallback walk banks in the pool so the next extraction is
+/// served without another walk. 0 disables restocking.
+pub const POOL_FLOOR: usize = 2;
 
 /// Adaptive watermark floor: below this, shards spill almost everything
 /// and local FIFO order degrades to pool order.
@@ -129,6 +147,16 @@ pub struct ShardedQueue {
     stealable_cnt: AtomicUsize,
     /// Payload bytes of the queued stealable tasks.
     stealable_bytes: AtomicU64,
+    /// Lower bound on any queued stealable payload (`u64::MAX` = none):
+    /// `fetch_min` on insert, reset when the stealable count hits zero.
+    /// A reset racing a concurrent insert can leave the bound too high
+    /// for one poll — the fast path then denies a request it could have
+    /// weighed, which is a policy heuristic miss, never a safety issue.
+    min_steal_bytes: AtomicU64,
+    /// Queued tasks per class (keyed on `task.class`).
+    class_counts: [AtomicUsize; TaskClass::COUNT],
+    /// Pool floor: extra tasks a fallback walk banks into the pool.
+    pool_floor: usize,
     /// Adaptive spill watermark (see module docs).
     watermark: AtomicUsize,
     inserts: AtomicU64,
@@ -136,10 +164,13 @@ pub struct ShardedQueue {
     steal_extracted: AtomicU64,
     select_len_sum: AtomicU64,
     scans: AtomicU64,
-    batch_inserts: AtomicU64,
-    batch_saved_locks: AtomicU64,
+    /// Per-[`BatchSite`] batched-insert calls / tasks.
+    batch_batches: [AtomicU64; BatchSite::COUNT],
+    batch_tasks: [AtomicU64; BatchSite::COUNT],
     feedback_grants: AtomicU64,
     feedback_wt_denials: AtomicU64,
+    /// `extract_stealable` pool-misses that walked the shard indices.
+    fallback_walks: AtomicU64,
     /// Shard-empty batch rebalances performed (diagnostics).
     rebalances: AtomicU64,
 }
@@ -156,18 +187,28 @@ impl ShardedQueue {
             count: AtomicUsize::new(0),
             stealable_cnt: AtomicUsize::new(0),
             stealable_bytes: AtomicU64::new(0),
+            min_steal_bytes: AtomicU64::new(u64::MAX),
+            class_counts: std::array::from_fn(|_| AtomicUsize::new(0)),
+            pool_floor: POOL_FLOOR,
             watermark: AtomicUsize::new(SPILL_THRESHOLD),
             inserts: AtomicU64::new(0),
             selects: AtomicU64::new(0),
             steal_extracted: AtomicU64::new(0),
             select_len_sum: AtomicU64::new(0),
             scans: AtomicU64::new(0),
-            batch_inserts: AtomicU64::new(0),
-            batch_saved_locks: AtomicU64::new(0),
+            batch_batches: std::array::from_fn(|_| AtomicU64::new(0)),
+            batch_tasks: std::array::from_fn(|_| AtomicU64::new(0)),
             feedback_grants: AtomicU64::new(0),
             feedback_wt_denials: AtomicU64::new(0),
+            fallback_walks: AtomicU64::new(0),
             rebalances: AtomicU64::new(0),
         }
+    }
+
+    /// Set the steal-pool floor (`--pool-floor`; see [`POOL_FLOOR`]).
+    pub fn with_pool_floor(mut self, floor: usize) -> Self {
+        self.pool_floor = floor;
+        self
     }
 
     pub fn num_shards(&self) -> usize {
@@ -177,6 +218,12 @@ impl ShardedQueue {
     /// Tasks currently waiting in the steal pool (diagnostics).
     pub fn pool_len(&self) -> usize {
         self.pool.lock().unwrap().len()
+    }
+
+    /// `extract_stealable` calls that missed the pool and walked the
+    /// shard indices (diagnostics; also in [`SchedStats`]).
+    pub fn fallback_walks(&self) -> u64 {
+        self.fallback_walks.load(Ordering::Relaxed)
     }
 
     /// Current adaptive spill watermark.
@@ -203,6 +250,17 @@ impl ShardedQueue {
 
     pub fn stealable_payload_bytes(&self) -> u64 {
         self.stealable_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Lower bound on any queued stealable payload — O(1) atomic read
+    /// (`u64::MAX` when nothing stealable is queued).
+    pub fn min_stealable_payload_bytes(&self) -> u64 {
+        self.min_steal_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Queued tasks per class — O(1) copies of the incremental counters.
+    pub fn class_counts(&self) -> [usize; TaskClass::COUNT] {
+        std::array::from_fn(|i| self.class_counts[i].load(Ordering::Relaxed))
     }
 
     /// Additive raise, fired by both "keep tasks local" signals: a
@@ -245,7 +303,7 @@ impl ShardedQueue {
     }
 
     pub fn insert(&self, task: TaskDesc, priority: i64) {
-        self.insert_meta(task, priority, TaskMeta::default());
+        self.insert_meta(task, priority, TaskMeta::for_task(task));
     }
 
     /// Next queue key. `seq` only needs uniqueness, not ordering (a
@@ -285,6 +343,30 @@ impl ShardedQueue {
         }
     }
 
+    /// Book the arrival of `n` tasks carrying the given steal/class
+    /// accounting (shared by the single and batched insert paths).
+    /// `count`/`stealable_cnt` go up BEFORE the tasks become selectable
+    /// — the visibility contract of the module docs.
+    fn book_insert(&self, n: usize, stealable: usize, bytes: u64, min_bytes: u64) {
+        self.count.fetch_add(n, Ordering::SeqCst);
+        if stealable > 0 {
+            self.stealable_cnt.fetch_add(stealable, Ordering::SeqCst);
+            self.stealable_bytes.fetch_add(bytes, Ordering::Relaxed);
+            self.min_steal_bytes.fetch_min(min_bytes, Ordering::Relaxed);
+        }
+        self.inserts.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// O(1) per-class queued-count maintenance (keyed on the task's own
+    /// class, so a mismatched meta can never make the counts drift).
+    fn class_inc(&self, class: TaskClass) {
+        self.class_counts[class.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn class_dec(&self, class: TaskClass) {
+        self.class_counts[class.idx()].fetch_sub(1, Ordering::Relaxed);
+    }
+
     pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
         // `rr`/stat counters only need uniqueness, so Relaxed; `count`/
         // `stealable_cnt` are the exception: they SeqCst-pair with the
@@ -292,13 +374,13 @@ impl ShardedQueue {
         // checks, and count up BEFORE the task becomes selectable — a
         // concurrent passivity check must never see empty while a task
         // exists.
-        self.count.fetch_add(1, Ordering::SeqCst);
-        if meta.stealable {
-            self.stealable_cnt.fetch_add(1, Ordering::SeqCst);
-            self.stealable_bytes
-                .fetch_add(meta.payload_bytes, Ordering::Relaxed);
-        }
-        self.inserts.fetch_add(1, Ordering::Relaxed);
+        self.book_insert(
+            1,
+            meta.stealable as usize,
+            if meta.stealable { meta.payload_bytes } else { 0 },
+            meta.payload_bytes,
+        );
+        self.class_inc(task.class);
         let shard_ix =
             (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
         let watermark = self.watermark.load(Ordering::Relaxed);
@@ -312,32 +394,47 @@ impl ShardedQueue {
 
     /// Batched insert: the whole batch lands in one shard under one
     /// shard-lock acquisition (plus at most one pool lock for spill),
-    /// instead of `len` round-robin single-lock inserts. Used by the
-    /// bulk-arrival paths — steal-reply re-enqueue and gate-denial
-    /// reinsert — where the tasks arrive together anyway; a thief was
-    /// starving when it asked, so concentrating the batch in one shard
-    /// costs nothing (neighbor rebalancing redistributes on demand).
-    pub fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+    /// instead of `len` round-robin single-lock inserts, booked against
+    /// `site`. Used by the bulk-arrival paths — steal-reply re-enqueue,
+    /// gate-denial reinsert and the activation ready set — where the
+    /// tasks arrive together anyway; a thief was starving when it
+    /// asked, so concentrating the batch in one shard costs nothing
+    /// (neighbor rebalancing redistributes on demand). Gate-denial
+    /// batches return to the *pool* instead: they were extracted from
+    /// it, and a sustained denial stream must not drain the pool into
+    /// the all-shards fallback walk.
+    pub fn insert_batch_at(&self, site: BatchSite, batch: &[(TaskDesc, i64, TaskMeta)]) {
         if batch.is_empty() {
             return;
         }
         // Same visibility contract as insert_meta (counts up BEFORE the
         // tasks become selectable), aggregated into one RMW per counter.
-        self.count.fetch_add(batch.len(), Ordering::SeqCst);
         let stealable = batch.iter().filter(|(_, _, m)| m.stealable).count();
-        if stealable > 0 {
-            self.stealable_cnt.fetch_add(stealable, Ordering::SeqCst);
-            let bytes: u64 = batch
-                .iter()
-                .filter(|(_, _, m)| m.stealable)
-                .map(|(_, _, m)| m.payload_bytes)
-                .sum();
-            self.stealable_bytes.fetch_add(bytes, Ordering::Relaxed);
+        let bytes: u64 = batch
+            .iter()
+            .filter(|(_, _, m)| m.stealable)
+            .map(|(_, _, m)| m.payload_bytes)
+            .sum();
+        let min_bytes = batch
+            .iter()
+            .filter(|(_, _, m)| m.stealable)
+            .map(|(_, _, m)| m.payload_bytes)
+            .min()
+            .unwrap_or(u64::MAX);
+        self.book_insert(batch.len(), stealable, bytes, min_bytes);
+        for (task, _, _) in batch {
+            self.class_inc(task.class);
         }
-        self.inserts.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        self.batch_inserts.fetch_add(1, Ordering::Relaxed);
-        self.batch_saved_locks
-            .fetch_add(batch.len() as u64 - 1, Ordering::Relaxed);
+        self.batch_batches[site.idx()].fetch_add(1, Ordering::Relaxed);
+        self.batch_tasks[site.idx()]
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        if site == BatchSite::GateDenial {
+            let mut pool = self.pool.lock().unwrap();
+            for &(task, priority, meta) in batch {
+                pool.insert(self.key_for(priority), task, meta);
+            }
+            return;
+        }
         let shard_ix =
             (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
         let watermark = self.watermark.load(Ordering::Relaxed);
@@ -351,16 +448,34 @@ impl ShardedQueue {
         self.pool_insert(spilled);
     }
 
+    /// [`ShardedQueue::insert_batch_at`] without a protocol role.
+    pub fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        self.insert_batch_at(BatchSite::Other, batch);
+    }
+
+    /// Book the removal of `stealable` stealable tasks: the shared
+    /// stealable-count decrement plus the payload-bound reset when the
+    /// stealable set empties.
+    fn book_stealable_removed(&self, stealable: usize, payload: u64) {
+        if stealable == 0 {
+            return;
+        }
+        let before = self.stealable_cnt.fetch_sub(stealable, Ordering::SeqCst);
+        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
+        if before == stealable {
+            self.min_steal_bytes.store(u64::MAX, Ordering::Relaxed);
+        }
+    }
+
     /// Book the removal of one selected task (and its steal accounting).
-    fn book_select(&self, meta: TaskMeta) {
+    fn book_select(&self, task: &TaskDesc, meta: TaskMeta) {
         self.selects.fetch_add(1, Ordering::Relaxed);
         let remaining = self.count.fetch_sub(1, Ordering::SeqCst) - 1;
         self.select_len_sum
             .fetch_add(remaining as u64, Ordering::Relaxed);
+        self.class_dec(task.class);
         if meta.stealable {
-            self.stealable_cnt.fetch_sub(1, Ordering::SeqCst);
-            self.stealable_bytes
-                .fetch_sub(meta.payload_bytes, Ordering::Relaxed);
+            self.book_stealable_removed(1, meta.payload_bytes);
         }
     }
 
@@ -371,14 +486,14 @@ impl ShardedQueue {
         let n = self.shards.len();
         let own = worker % n;
         if let Some((_, (t, m))) = self.shards[own].lock().unwrap().pop_last() {
-            self.book_select(m);
+            self.book_select(&t, m);
             return Some(t);
         }
         if let Some((_, (t, m))) = self.pool.lock().unwrap().pop_last() {
             // A local worker reclaiming pooled work: spill was too
             // eager — nudge the watermark up.
             self.raise_watermark();
-            self.book_select(m);
+            self.book_select(&t, m);
             return Some(t);
         }
         // Own shard and pool empty: batch-rebalance half of the richest
@@ -417,7 +532,7 @@ impl ShardedQueue {
                     }
                 }
                 self.rebalances.fetch_add(1, Ordering::Relaxed);
-                self.book_select(m);
+                self.book_select(&t, m);
                 return Some(t);
             }
         }
@@ -426,25 +541,31 @@ impl ShardedQueue {
         for offset in 1..n {
             let ix = (own + offset) % n;
             if let Some((_, (t, m))) = self.shards[ix].lock().unwrap().pop_last() {
-                self.book_select(m);
+                self.book_select(&t, m);
                 return Some(t);
             }
         }
         None
     }
 
-    /// Book the removal of `taken` extracted tasks carrying `payload`
-    /// stealable bytes.
-    fn book_extract(&self, taken: usize, payload: u64) {
-        self.steal_extracted.fetch_add(taken as u64, Ordering::Relaxed);
-        self.count.fetch_sub(taken, Ordering::SeqCst);
-        self.stealable_cnt.fetch_sub(taken, Ordering::SeqCst);
-        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
+    /// Book the removal of the extracted tasks in `out` (all stealable)
+    /// carrying `payload` stealable bytes.
+    fn book_extract(&self, out: &[TaskDesc], payload: u64) {
+        self.steal_extracted
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
+        self.count.fetch_sub(out.len(), Ordering::SeqCst);
+        for task in out {
+            self.class_dec(task.class);
+        }
+        self.book_stealable_removed(out.len(), payload);
     }
 
     /// Victim-side extraction via the stealable indices: drain the pool
     /// (lowest priority first); only when the pool cannot satisfy the
-    /// allowance does the walk visit the shards' indices. Watermark
+    /// allowance does the walk visit the shards' indices — and that
+    /// walk extracts up to `pool_floor` *extra* lowest-priority
+    /// stealable tasks and banks them in the pool, so one walk restocks
+    /// instead of every subsequent request paying it again. Watermark
     /// adaptation happens in [`ShardedQueue::feedback`], driven by the
     /// gate's verdict on the extracted batch — a pool near-miss on a
     /// request the gate was going to deny anyway is *not* a reason to
@@ -471,23 +592,32 @@ impl ShardedQueue {
             // the stealable indices one lock at a time, sort, then
             // remove smallest-first (best-effort: a worker may race a
             // key away between snapshot and removal — skip it).
+            self.fallback_walks.fetch_add(1, Ordering::Relaxed);
             let mut candidates: Vec<(QKey, usize)> = Vec::new();
             for (ix, shard) in self.shards.iter().enumerate() {
                 let guard = shard.lock().unwrap();
                 candidates.extend(guard.steal_idx.iter().map(|k| (*k, ix)));
             }
             candidates.sort_unstable();
+            // The walk also banks `pool_floor` extra tasks in the pool
+            // (keys preserved — they stay queued, just pool-resident).
+            let mut restock: Vec<(QKey, (TaskDesc, TaskMeta))> = Vec::new();
             for (key, ix) in candidates {
-                if out.len() >= max {
+                if out.len() >= max && restock.len() >= self.pool_floor {
                     break;
                 }
                 if let Some((t, m)) = self.shards[ix].lock().unwrap().remove(key) {
-                    payload += m.payload_bytes;
-                    out.push(t);
+                    if out.len() < max {
+                        payload += m.payload_bytes;
+                        out.push(t);
+                    } else {
+                        restock.push((key, (t, m)));
+                    }
                 }
             }
+            self.pool_insert(restock);
         }
-        self.book_extract(out.len(), payload);
+        self.book_extract(&out, payload);
         out
     }
 
@@ -556,13 +686,12 @@ impl ShardedQueue {
         let mut out = Vec::new();
         let mut payload = 0u64;
         let mut stealable_removed = 0usize;
-        let before_pool = {
+        {
             let mut pool = self.pool.lock().unwrap();
             let idx_before = pool.steal_idx.len();
             Self::extract_from(&mut pool, max, &filter, &mut out, &mut payload);
-            idx_before - pool.steal_idx.len()
-        };
-        stealable_removed += before_pool;
+            stealable_removed += idx_before - pool.steal_idx.len();
+        }
         if out.len() < max {
             let mut candidates: Vec<(QKey, usize)> = Vec::new();
             for (ix, shard) in self.shards.iter().enumerate() {
@@ -592,9 +721,10 @@ impl ShardedQueue {
         self.steal_extracted
             .fetch_add(out.len() as u64, Ordering::Relaxed);
         self.count.fetch_sub(out.len(), Ordering::SeqCst);
-        self.stealable_cnt
-            .fetch_sub(stealable_removed, Ordering::SeqCst);
-        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
+        for task in &out {
+            self.class_dec(task.class);
+        }
+        self.book_stealable_removed(stealable_removed, payload);
         out
     }
 
@@ -615,17 +745,22 @@ impl ShardedQueue {
     }
 
     pub fn stats(&self) -> SchedStats {
+        let mut batches = [BatchCounter::default(); BatchSite::COUNT];
+        for (i, b) in batches.iter_mut().enumerate() {
+            b.batches = self.batch_batches[i].load(Ordering::Relaxed);
+            b.tasks = self.batch_tasks[i].load(Ordering::Relaxed);
+        }
         SchedStats {
             inserts: self.inserts.load(Ordering::Relaxed),
             selects: self.selects.load(Ordering::Relaxed),
             steal_extracted: self.steal_extracted.load(Ordering::Relaxed),
             select_len_sum: self.select_len_sum.load(Ordering::Relaxed),
             scans: self.scans.load(Ordering::Relaxed),
-            batch_inserts: self.batch_inserts.load(Ordering::Relaxed),
-            batch_saved_locks: self.batch_saved_locks.load(Ordering::Relaxed),
+            batches,
             feedback_grants: self.feedback_grants.load(Ordering::Relaxed),
             feedback_wt_denials: self.feedback_wt_denials.load(Ordering::Relaxed),
             watermark: self.watermark.load(Ordering::Relaxed) as u64,
+            extract_fallback_walks: self.fallback_walks.load(Ordering::Relaxed),
         }
     }
 
@@ -652,9 +787,10 @@ impl ShardedQueue {
         }
         clear(&mut self.pool.lock().unwrap());
         self.count.fetch_sub(out.len(), Ordering::SeqCst);
-        self.stealable_cnt
-            .fetch_sub(stealable_removed, Ordering::SeqCst);
-        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
+        for task in &out {
+            self.class_dec(task.class);
+        }
+        self.book_stealable_removed(stealable_removed, payload);
         out
     }
 }
@@ -664,8 +800,8 @@ impl Scheduler for ShardedQueue {
         ShardedQueue::insert_meta(self, task, priority, meta)
     }
 
-    fn insert_batch_meta(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
-        ShardedQueue::insert_batch_meta(self, batch)
+    fn insert_batch_at(&self, site: BatchSite, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        ShardedQueue::insert_batch_at(self, site, batch)
     }
 
     fn feedback(&self, outcome: StealOutcome) {
@@ -686,6 +822,14 @@ impl Scheduler for ShardedQueue {
 
     fn stealable_payload_bytes(&self) -> u64 {
         ShardedQueue::stealable_payload_bytes(self)
+    }
+
+    fn min_stealable_payload_bytes(&self) -> u64 {
+        ShardedQueue::min_stealable_payload_bytes(self)
+    }
+
+    fn class_counts(&self) -> [usize; TaskClass::COUNT] {
+        ShardedQueue::class_counts(self)
     }
 
     fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
@@ -823,6 +967,7 @@ mod tests {
                 TaskMeta {
                     stealable: i % 2 == 0,
                     payload_bytes: 8,
+                    class: TaskClass::Synthetic,
                 },
             );
         }
@@ -834,6 +979,57 @@ mod tests {
         assert_eq!(q.stealable_payload_bytes(), 16);
         assert_eq!(q.stats().scans, 0, "index path never scans");
         assert_eq!(q.len(), 7);
+        // The pool was dry, so this extraction paid the fallback walk —
+        // and banked the floor's worth of tasks in the pool for the
+        // next request.
+        assert_eq!(q.fallback_walks(), 1);
+        assert_eq!(q.pool_len(), POOL_FLOOR, "walk restocked the pool");
+        let again = q.extract_stealable(2);
+        assert_eq!(again, vec![t(6), t(8)], "served from the restocked pool");
+        assert_eq!(q.fallback_walks(), 1, "no second walk");
+    }
+
+    /// Gate-denial batches return to the pool (not a shard), so a
+    /// sustained extract→deny→reinsert cycle never drains the pool
+    /// into repeated fallback walks.
+    #[test]
+    fn gate_denial_reinsert_returns_to_the_pool() {
+        let q = ShardedQueue::new(2);
+        for i in 0..6u32 {
+            q.insert(t(i), i as i64);
+        }
+        // First extraction: pool dry -> one walk (+ floor restock).
+        let stolen = q.extract_stealable(2);
+        assert_eq!(stolen.len(), 2);
+        assert_eq!(q.fallback_walks(), 1);
+        let batch: Vec<(TaskDesc, i64, TaskMeta)> = stolen
+            .iter()
+            .map(|&task| (task, task.i as i64, TaskMeta::default()))
+            .collect();
+        q.insert_batch_at(BatchSite::GateDenial, &batch);
+        assert_eq!(q.len(), 6, "denied tasks returned");
+        assert_eq!(q.stats().site(BatchSite::GateDenial).batches, 1);
+        // Denied batch + restock live in the pool: repeat the cycle and
+        // the walk count must not move.
+        for _ in 0..10 {
+            let stolen = q.extract_stealable(2);
+            assert_eq!(stolen.len(), 2);
+            let batch: Vec<(TaskDesc, i64, TaskMeta)> = stolen
+                .iter()
+                .map(|&task| (task, task.i as i64, TaskMeta::default()))
+                .collect();
+            q.insert_batch_at(BatchSite::GateDenial, &batch);
+        }
+        assert_eq!(q.fallback_walks(), 1, "pool floor keeps extraction off the walk");
+        assert_eq!(q.len(), 6);
+        // Pooled tasks are still selectable work.
+        let mut seen = 0;
+        for w in 0..2 {
+            while q.select(w).is_some() {
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 6);
     }
 
     #[test]
@@ -907,8 +1103,8 @@ mod tests {
         q.insert_batch_meta(&batch);
         assert_eq!(q.len(), SPILL_THRESHOLD + 6);
         assert_eq!(q.pool_len(), 6, "overflow spilled to the pool");
-        assert_eq!(q.stats().batch_inserts, 1);
-        assert_eq!(q.stats().batch_saved_locks, SPILL_THRESHOLD as u64 + 5);
+        assert_eq!(q.stats().batch_inserts(), 1);
+        assert_eq!(q.stats().batch_saved_locks(), SPILL_THRESHOLD as u64 + 5);
         // Spilled tasks are the lowest priorities and stay stealable.
         let stolen = q.extract_stealable(6);
         assert_eq!(stolen.len(), 6);

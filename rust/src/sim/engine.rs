@@ -23,15 +23,15 @@ use std::collections::{BinaryHeap, HashSet};
 use std::sync::Arc;
 
 use crate::comm::{LinkModel, Msg};
-use crate::dataflow::task::{NodeId, TaskDesc};
+use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    ewma_update, exec_estimate_us, is_starving, protocol::decide_steal, MigrateConfig,
-    StarvationView, StealStats,
+    class_estimate_update, ewma_update, exec_estimate_us, is_starving, protocol::decide_steal,
+    ExecSnapshot, MigrateConfig, StarvationView, StealStats,
 };
-use crate::sched::{SchedBackend, Scheduler, TaskMeta};
+use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
 use crate::util::rng::Rng;
 
 use super::cost::CostModel;
@@ -66,8 +66,12 @@ pub struct SimConfig {
     pub sched: SchedBackend,
     /// Coalesce same-destination successor activations into one
     /// `Deliver` event (`--batch-activations`; off reproduces the
-    /// per-edge protocol for ablations).
+    /// per-edge protocol for ablations). Also routes each local
+    /// activation ready set through one batched queue insert.
     pub batch_activations: bool,
+    /// Sharded steal-pool floor (`--pool-floor`; see
+    /// [`crate::sched::POOL_FLOOR`]).
+    pub pool_floor: usize,
 }
 
 impl Default for SimConfig {
@@ -80,6 +84,7 @@ impl Default for SimConfig {
             record_polls: true,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: POOL_FLOOR,
         }
     }
 }
@@ -157,6 +162,14 @@ struct SimNode {
     /// the waiting-time gate under `MigrateConfig::exec_ewma` — the DES
     /// mirror of the threaded runtime's atomic-bits EWMA.
     exec_ewma_us: f64,
+    /// Per-class execution-time estimates (µs; 0.0 = no history for the
+    /// class), updated at finish under `MigrateConfig::exec_per_class`
+    /// via the shared [`class_estimate_update`] rule — the DES mirror
+    /// of the threaded runtime's atomic-bits table.
+    class_est_us: [f64; TaskClass::COUNT],
+    /// Non-empty activation ready sets delivered through the batched
+    /// path (asserted equal to the activation-site batch counter).
+    activation_ready_batches: u64,
     busy_us: f64,
     steal: StealStats,
     inflight_steals: usize,
@@ -206,7 +219,7 @@ impl Simulator {
                 } else {
                     1.0
                 },
-                queue: cfg.sched.build(cfg.workers_per_node),
+                queue: cfg.sched.build_with(cfg.workers_per_node, cfg.pool_floor),
                 next_worker: 0,
                 tracker: ActivationTracker::new(),
                 executing: HashSet::new(),
@@ -215,6 +228,8 @@ impl Simulator {
                 tasks_done: 0,
                 exec_sum_us: 0.0,
                 exec_ewma_us: 0.0,
+                class_est_us: [0.0; TaskClass::COUNT],
+                activation_ready_batches: 0,
                 busy_us: 0.0,
                 steal: StealStats::default(),
                 inflight_steals: 0,
@@ -265,16 +280,19 @@ impl Simulator {
                 .all(|n| n.queue.is_empty() && n.executing.is_empty())
     }
 
-    /// The victim's execution-time estimate for the waiting-time gate
-    /// (shared policy helper, so the threaded runtime cannot diverge).
-    fn victim_avg_exec_us(&self, node_ix: usize) -> f64 {
+    /// The victim's execution-time estimates for the waiting-time gate
+    /// (shared policy helpers, so the threaded runtime cannot diverge).
+    fn victim_exec_snapshot(&self, node_ix: usize) -> ExecSnapshot {
         let node = &self.nodes[node_ix];
-        exec_estimate_us(
-            self.migrate.exec_ewma,
-            node.exec_ewma_us,
-            node.exec_sum_us,
-            node.tasks_done,
-        )
+        ExecSnapshot {
+            avg_us: exec_estimate_us(
+                self.migrate.exec_ewma,
+                node.exec_ewma_us,
+                node.exec_sum_us,
+                node.tasks_done,
+            ),
+            per_class: self.migrate.exec_per_class.then_some(node.class_est_us),
+        }
     }
 
     /// Pull ready tasks onto idle workers.
@@ -328,6 +346,27 @@ impl Simulator {
         }
     }
 
+    /// Deliver a coalesced activation batch: run the tracker over every
+    /// task, then enqueue the whole ready set through one batched
+    /// insert — the batch-first activation pipeline, mirroring the
+    /// threaded runtime's `activate_local_batch`.
+    fn activate_batch_at(&mut self, node_id: NodeId, tasks: &[TaskDesc]) {
+        let graph = self.graph.clone();
+        let node = &mut self.nodes[node_id.idx()];
+        let mut ready = Vec::new();
+        for &t in tasks {
+            if node.tracker.activate(graph.as_ref(), t) {
+                ready.push(t);
+            }
+        }
+        if !ready.is_empty() {
+            node.activation_ready_batches += 1;
+            let batch = TaskMeta::batch_of(graph.as_ref(), &ready);
+            node.queue.insert_batch_at(BatchSite::Activation, &batch);
+            self.dispatch(node_id);
+        }
+    }
+
     fn on_finish(&mut self, node_id: NodeId, task: TaskDesc, started_us: f64) {
         let dur = self.now_us - started_us;
         let succs = self.graph.successors(task);
@@ -348,15 +387,25 @@ impl Simulator {
             if self.migrate.exec_ewma {
                 node.exec_ewma_us = ewma_update(node.exec_ewma_us, dur);
             }
+            if self.migrate.exec_per_class {
+                let est = &mut node.class_est_us[task.class.idx()];
+                *est = class_estimate_update(*est, dur);
+            }
             node.busy_us += dur;
         }
         // Remote successors sharing a destination coalesce into one
-        // Deliver event — the DES mirror of the ActivateBatch message.
+        // Deliver event — the DES mirror of the ActivateBatch message —
+        // and local successors coalesce into one batched queue insert.
+        let mut local: Vec<TaskDesc> = Vec::new();
         let mut remote: Vec<(NodeId, Vec<TaskDesc>)> = Vec::new();
         for s in succs {
             let dest = if dynamic { node_id } else { self.graph.owner(s) };
             if dest == node_id {
-                self.activate_at(node_id, s);
+                if self.cfg.batch_activations {
+                    local.push(s);
+                } else {
+                    self.activate_at(node_id, s);
+                }
             } else if self.cfg.batch_activations {
                 match remote.iter_mut().find(|(d, _)| *d == dest) {
                     Some((_, bucket)) => bucket.push(s),
@@ -373,6 +422,9 @@ impl Simulator {
                     },
                 );
             }
+        }
+        if !local.is_empty() {
+            self.activate_batch_at(node_id, &local);
         }
         for (dest, tasks) in remote {
             let wire = self
@@ -461,7 +513,7 @@ impl Simulator {
     fn on_steal_request(&mut self, victim_id: NodeId, thief: NodeId) {
         let graph = self.graph.clone();
         let workers = self.cfg.workers_per_node;
-        let avg = self.victim_avg_exec_us(victim_id.idx());
+        let est = self.victim_exec_snapshot(victim_id.idx());
         let link = self.cfg.link;
         let node = &mut self.nodes[victim_id.idx()];
         node.steal.requests_served += 1;
@@ -470,7 +522,7 @@ impl Simulator {
             graph.as_ref(),
             node.queue.as_ref(),
             workers,
-            avg,
+            &est,
             link.latency_us,
             link.bw_bytes_per_us,
         );
@@ -525,8 +577,8 @@ impl Simulator {
                 // Recreate the tasks (same uids) at the thief in one
                 // batched insert — the DES mirror of the threaded
                 // runtime's one-lock-per-reply re-enqueue.
-                node.queue
-                    .insert_batch_meta(&TaskMeta::batch_of(graph.as_ref(), &tasks));
+                let batch = TaskMeta::batch_of(graph.as_ref(), &tasks);
+                node.queue.insert_batch_at(BatchSite::StealReply, &batch);
             }
         }
         if !tasks.is_empty() {
@@ -579,9 +631,7 @@ impl Simulator {
                         }
                         SimMsg::ActivateBatch(tasks) => {
                             self.activate_in_flight -= 1;
-                            for t in tasks {
-                                self.activate_at(dst, t);
-                            }
+                            self.activate_batch_at(dst, &tasks);
                         }
                         SimMsg::StealRequest { thief } => self.on_steal_request(dst, thief),
                         SimMsg::StealReply { tasks } => self.on_steal_reply(dst, tasks),
@@ -623,6 +673,8 @@ impl Simulator {
                     } else {
                         0.0
                     },
+                    class_est_us: n.class_est_us,
+                    activation_ready_batches: n.activation_ready_batches,
                     steal: n.steal,
                     sched: n.queue.stats(),
                     polls: n.polls,
@@ -675,6 +727,7 @@ mod tests {
                 record_polls: true,
                 sched,
                 batch_activations: true,
+                pool_floor: POOL_FLOOR,
             },
             CostModel::default_calibrated(),
             migrate,
@@ -719,6 +772,7 @@ mod tests {
                         max_inflight: 1,
                         migrate_overhead_us: 150.0,
                         exec_ewma: gate,
+                        exec_per_class: gate,
                     };
                     let r = sim(chol(10, 4), mc, 7, 2);
                     assert_eq!(
@@ -871,11 +925,18 @@ mod tests {
             let fed: u64 = r.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
             assert!(fed > 10, "{sched:?}: denials fed back ({fed})");
             match sched {
-                SchedBackend::Sharded => assert!(
-                    r.nodes[0].sched.watermark > crate::sched::SPILL_THRESHOLD as u64,
-                    "denials must raise the watermark, got {}",
-                    r.nodes[0].sched.watermark
-                ),
+                SchedBackend::Sharded => {
+                    assert!(
+                        r.nodes[0].sched.watermark > crate::sched::SPILL_THRESHOLD as u64,
+                        "denials must raise the watermark, got {}",
+                        r.nodes[0].sched.watermark
+                    );
+                    // Every denial is certain from the O(1) accounting
+                    // (overhead floor), so extraction never runs and
+                    // never hits the all-shards fallback walk.
+                    let walks: u64 = r.nodes.iter().map(|n| n.sched.extract_fallback_walks).sum();
+                    assert_eq!(walks, 0, "certain denials must skip extraction");
+                }
                 SchedBackend::Central => {
                     assert_eq!(r.nodes[0].sched.watermark, 0, "central has no watermark")
                 }
@@ -908,8 +969,15 @@ mod tests {
             let r = sim_with(g, mc, 3, 4, sched);
             let steals = r.total_steals();
             assert!(steals.successful_steals > 0, "{sched:?}");
-            let batches: u64 = r.nodes.iter().map(|n| n.sched.batch_inserts).sum();
-            let saved: u64 = r.nodes.iter().map(|n| n.sched.batch_saved_locks).sum();
+            // Per-call-site accounting keeps this exact even though the
+            // activation path batches on the same queues.
+            let reply: Vec<_> = r
+                .nodes
+                .iter()
+                .map(|n| n.sched.site(BatchSite::StealReply))
+                .collect();
+            let batches: u64 = reply.iter().map(|b| b.batches).sum();
+            let saved: u64 = reply.iter().map(|b| b.saved_locks()).sum();
             assert_eq!(
                 batches, steals.successful_steals,
                 "{sched:?}: exactly one batched insert per non-empty reply"
@@ -919,6 +987,81 @@ mod tests {
                 steals.tasks_received - steals.successful_steals,
                 "{sched:?}: lock saving = tasks − replies"
             );
+        }
+    }
+
+    /// The batch-first activation pipeline in the DES: per node, the
+    /// number of non-empty ready sets delivered through the batched
+    /// path equals the scheduler's activation-site batch counter —
+    /// exactly one batched insert per ready set — and the per-edge
+    /// ablation books nothing there.
+    #[test]
+    fn activation_ready_sets_batch_exactly_once() {
+        for sched in SchedBackend::ALL {
+            let run = |batch: bool| {
+                Simulator::new(
+                    chol(10, 3),
+                    SimConfig {
+                        workers_per_node: 4,
+                        link: LinkModel::cluster(),
+                        seed: 9,
+                        max_events: 50_000_000,
+                        record_polls: false,
+                        sched,
+                        batch_activations: batch,
+                        pool_floor: POOL_FLOOR,
+                    },
+                    CostModel::default_calibrated(),
+                    MigrateConfig::disabled(),
+                    20,
+                )
+                .run()
+            };
+            let r = run(true);
+            let mut ready_sets = 0;
+            for (ix, n) in r.nodes.iter().enumerate() {
+                assert_eq!(
+                    n.sched.site(BatchSite::Activation).batches,
+                    n.activation_ready_batches,
+                    "{sched:?} node {ix}: one batched insert per ready set"
+                );
+                ready_sets += n.activation_ready_batches;
+            }
+            assert!(ready_sets > 0, "{sched:?}: Cholesky fan-out must batch");
+            let unbatched = run(false);
+            for n in &unbatched.nodes {
+                assert_eq!(n.sched.site(BatchSite::Activation).batches, 0, "{sched:?}");
+                assert_eq!(n.activation_ready_batches, 0, "{sched:?}");
+            }
+        }
+    }
+
+    /// `--exec-per-class` on a mixed Cholesky: the per-class estimator
+    /// table ends the run with genuinely different estimates for POTRF
+    /// and GEMM (Table 1's orders-of-magnitude spread), the very signal
+    /// the node-wide mean erases, while completion and per-backend
+    /// determinism hold.
+    #[test]
+    fn exec_per_class_estimates_differ_by_class() {
+        for sched in SchedBackend::ALL {
+            let g = chol(12, 8);
+            let total = g.total_tasks().unwrap();
+            let mc = MigrateConfig {
+                exec_per_class: true,
+                ..MigrateConfig::default()
+            };
+            let a = sim_with(g, mc, 11, 4, sched);
+            assert_eq!(a.tasks_total_executed(), total, "{sched:?}");
+            let est = a.class_est_us_max();
+            let potrf = est[TaskClass::Potrf.idx()];
+            let gemm = est[TaskClass::Gemm.idx()];
+            assert!(potrf > 0.0 && gemm > 0.0, "{sched:?}: both classes ran");
+            assert!(
+                (potrf - gemm).abs() > 0.1 * potrf.max(gemm),
+                "{sched:?}: per-class estimates must differ (POTRF {potrf} vs GEMM {gemm})"
+            );
+            let b = sim_with(chol(12, 8), mc, 11, 4, sched);
+            assert_eq!(a.makespan_us, b.makespan_us, "{sched:?}: deterministic");
         }
     }
 
@@ -939,6 +1082,66 @@ mod tests {
             let b = sim_with(chol(10, 3), mc, 11, 4, sched);
             assert_eq!(a.makespan_us, b.makespan_us, "{sched:?}: deterministic");
         }
+    }
+
+    /// The acceptance scenario for the payload-certain fast path: an
+    /// all-on-node-0 UTS run over a link so slow that even the 64-byte
+    /// UTS descriptor loses the waiting-time comparison, while the
+    /// overhead floor alone (≈ 2µs) never proves anything. Every denial
+    /// is payload-driven — exactly the regime where the PR 3 gate
+    /// extracted-and-reinserted on every poll and sustained denial paid
+    /// the sharded all-shards fallback walk — and the run now completes
+    /// with zero extractions and zero fallback walks.
+    #[test]
+    fn payload_certain_denials_never_extract() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 32,
+            m: 4,
+            q: 0.3,
+            g: 50_000.0,
+            seed: 5,
+            nodes: 4,
+            max_depth: 24,
+        }));
+        let size = g.tree_size(10_000_000);
+        let mc = MigrateConfig {
+            poll_interval_us: 20.0,
+            migrate_overhead_us: 1.0, // overhead floor alone is never certain
+            ..MigrateConfig::default()
+        };
+        let r = Simulator::new(
+            g,
+            SimConfig {
+                workers_per_node: 4,
+                // 1e-5 B/µs: the 64 B descriptor alone costs 6.4 s on
+                // the wire — beyond any waiting time this run reaches.
+                link: LinkModel {
+                    latency_us: 1.0,
+                    bw_bytes_per_us: 1e-5,
+                },
+                seed: 3,
+                max_events: 50_000_000,
+                record_polls: false,
+                sched: SchedBackend::Sharded,
+                batch_activations: true,
+                pool_floor: POOL_FLOOR,
+            },
+            CostModel::default_calibrated(),
+            mc,
+            0,
+        )
+        .run();
+        assert_eq!(r.tasks_total_executed(), size);
+        let steals = r.total_steals();
+        assert!(
+            steals.waiting_time_denials > 10,
+            "wanted payload-driven denials, got {steals:?}"
+        );
+        assert_eq!(steals.successful_steals, 0);
+        let extracted: u64 = r.nodes.iter().map(|n| n.sched.steal_extracted).sum();
+        assert_eq!(extracted, 0, "payload-certain denials never extract");
+        let walks: u64 = r.nodes.iter().map(|n| n.sched.extract_fallback_walks).sum();
+        assert_eq!(walks, 0, "and never pay the sharded fallback walk");
     }
 
     #[test]

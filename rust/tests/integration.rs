@@ -38,6 +38,7 @@ fn sim_and_real_agree_on_static_distribution() {
             record_polls: false,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
@@ -54,6 +55,7 @@ fn sim_and_real_agree_on_static_distribution() {
             record_polls: false,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         Arc::new(NullExecutor),
     );
@@ -87,11 +89,13 @@ fn real_runtime_steals_preserve_exactly_once() {
                         max_inflight: 1,
                         migrate_overhead_us: 150.0,
                         exec_ewma: false,
+                        exec_per_class: false,
                     },
                     seed: 5,
                     record_polls: false,
                     sched: SchedBackend::Central,
                     batch_activations: true,
+                    pool_floor: parsteal::sched::POOL_FLOOR,
                 },
                 Arc::new(SpinExecutor::new(cost, 16, move |t| g2.work_units(t)).with_time_scale(0.2)),
             );
@@ -132,6 +136,7 @@ fn real_runtime_uts_dynamic_termination() {
             record_polls: false,
             sched: SchedBackend::Central,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         Arc::new(
             SpinExecutor::new(CostModel::default_calibrated(), 0, move |t| g2.work_units(t))
@@ -158,6 +163,7 @@ fn sharded_backend_sim_and_real_agree() {
             record_polls: false,
             sched: SchedBackend::Sharded,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
@@ -174,6 +180,7 @@ fn sharded_backend_sim_and_real_agree() {
             record_polls: false,
             sched: SchedBackend::Sharded,
             batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
         },
         Arc::new(NullExecutor),
     );
@@ -209,6 +216,7 @@ fn batched_activations_cut_deliver_events() {
                 record_polls: false,
                 sched: SchedBackend::Central,
                 batch_activations: batch,
+                pool_floor: parsteal::sched::POOL_FLOOR,
             },
             CostModel::default_calibrated(),
             MigrateConfig::disabled(),
@@ -252,6 +260,7 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
                 record_polls: false,
                 sched: SchedBackend::Central,
                 batch_activations: batch,
+                pool_floor: parsteal::sched::POOL_FLOOR,
             },
             CostModel::default_calibrated(),
             MigrateConfig::disabled(),
@@ -268,6 +277,7 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
                 record_polls: false,
                 sched: SchedBackend::Central,
                 batch_activations: batch,
+                pool_floor: parsteal::sched::POOL_FLOOR,
             },
             Arc::new(NullExecutor),
         );
@@ -276,6 +286,85 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
         let sim_dist: Vec<u64> = sim.nodes.iter().map(|n| n.tasks_executed).collect();
         let real_dist: Vec<u64> = real.nodes.iter().map(|n| n.tasks_executed).collect();
         assert_eq!(sim_dist, real_dist, "batch={batch}: same distribution");
+    }
+}
+
+/// `--exec-per-class` equivalence between the runtimes: with the
+/// composition-aware gate on, both execute every task exactly once, and
+/// in the denial-certain regime (overhead dwarfs any waiting time) they
+/// agree on the steal outcome totals — zero grants, zero migrated tasks
+/// — while the deterministic DES also observes the denials themselves.
+#[test]
+fn exec_per_class_des_and_threaded_agree() {
+    let mk_migrate = |overhead: f64| MigrateConfig {
+        poll_interval_us: 20.0,
+        migrate_overhead_us: overhead,
+        exec_per_class: true,
+        ..Default::default()
+    };
+    // All work starts on node 0, so thieves are permanently starving
+    // and the victim always has a stealable queue — every request in
+    // the denial-certain regime becomes a waiting-time denial in both
+    // runtimes (the same shape the denial-heavy feedback tests use).
+    let mk_uts = || {
+        Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }))
+    };
+    for overhead in [150.0, 1e9] {
+        let g = mk_uts();
+        let size = g.tree_size(10_000_000);
+        let sim = Simulator::new(
+            g,
+            SimConfig {
+                workers_per_node: 2,
+                link: LinkModel::cluster(),
+                seed: 4,
+                max_events: u64::MAX,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
+            },
+            CostModel::default_calibrated(),
+            mk_migrate(overhead),
+            0,
+        )
+        .run();
+        let g = mk_uts();
+        // 30 µs/task, as in the denial-heavy feedback e2e: long enough
+        // that thieves poll many times while node 0 still has a queue.
+        let ex = SpinExecutor::new(CostModel::default_calibrated(), 0, |_| 30_000.0);
+        let real = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                link: LinkModel::ideal(),
+                migrate: mk_migrate(overhead),
+                seed: 4,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
+            },
+            Arc::new(ex),
+        );
+        assert_eq!(sim.tasks_total_executed(), size, "overhead={overhead}");
+        assert_eq!(real.tasks_total_executed(), size, "overhead={overhead}");
+        if overhead >= 1e9 {
+            let (s, r) = (sim.total_steals(), real.total_steals());
+            assert_eq!(s.successful_steals, 0, "DES: gate denies all");
+            assert_eq!(r.successful_steals, 0, "threaded: gate denies all");
+            assert_eq!(s.tasks_migrated + r.tasks_migrated, 0);
+            assert!(s.waiting_time_denials > 0, "DES observed the denials");
+            assert!(r.waiting_time_denials > 0, "threaded observed the denials");
+        }
     }
 }
 

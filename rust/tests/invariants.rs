@@ -7,7 +7,7 @@ use std::sync::Arc;
 use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::TaskDesc;
 use parsteal::dataflow::ttg::TaskGraph;
-use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::migrate::{ExecSnapshot, MigrateConfig, ThiefPolicy, VictimPolicy};
 use parsteal::prop_assert;
 use parsteal::sched::{SchedBackend, SchedQueue, TaskMeta};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
@@ -33,6 +33,7 @@ fn random_migrate(rng: &mut Rng) -> MigrateConfig {
         max_inflight: 1 + rng.below(3) as usize,
         migrate_overhead_us: rng.uniform() * 300.0,
         exec_ewma: rng.uniform() < 0.5,
+        exec_per_class: rng.uniform() < 0.5,
     }
 }
 
@@ -76,6 +77,7 @@ fn prop_cholesky_sim_executes_every_task_once() {
                         SchedBackend::Sharded
                     },
                     batch_activations: rng.uniform() < 0.5,
+                    pool_floor: rng.below(4) as usize,
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -132,6 +134,7 @@ fn prop_uts_sim_matches_tree_size() {
                         SchedBackend::Sharded
                     },
                     batch_activations: rng.uniform() < 0.5,
+                    pool_floor: rng.below(4) as usize,
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -286,7 +289,8 @@ fn prop_victim_allowance_bounds() {
                 return Ok(());
             }
             let before = q.len();
-            let d = decide_steal(&mc, graph.as_ref(), &q, 8, 50.0, 5.0, 1e4);
+            let est = ExecSnapshot::uniform(50.0);
+            let d = decide_steal(&mc, graph.as_ref(), &q, 8, &est, 5.0, 1e4);
             let bound = match mc.victim {
                 VictimPolicy::Half => stealable / 2,
                 VictimPolicy::Chunk(k) => k.min(stealable),

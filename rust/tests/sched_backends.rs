@@ -200,6 +200,7 @@ fn prop_incremental_accounting_matches_oracle() {
         TaskMeta {
             stealable: i % 3 != 0,
             payload_bytes: 8 + (i as u64 % 11) * 16,
+            class: TaskClass::Synthetic,
         }
     }
     let stealable_filter = |task: &TaskDesc| task.i % 3 != 0;
@@ -307,6 +308,7 @@ fn prop_batch_insert_matches_sequential_insert() {
         TaskMeta {
             stealable: i % 3 != 0,
             payload_bytes: 8 + (i as u64 % 7) * 32,
+            class: TaskClass::Synthetic,
         }
     }
     check(
@@ -377,6 +379,106 @@ fn prop_batch_insert_matches_sequential_insert() {
                 drained == pre.len() + batch.len(),
                 "sharded: conservation violated ({drained})"
             );
+            Ok(())
+        },
+    );
+}
+
+/// The per-class queued counts must exactly match the `count_matching`
+/// oracle for every class after every operation of a random insert /
+/// select / extract / batch-insert interleaving, on both backends —
+/// the accounting the `--exec-per-class` waiting-time estimator trusts.
+#[test]
+fn prop_class_counts_match_oracle() {
+    fn class_of(i: u32) -> TaskClass {
+        TaskClass::ALL[(i as usize) % TaskClass::COUNT]
+    }
+    fn ct(i: u32) -> TaskDesc {
+        TaskDesc::indexed(class_of(i), i, 0, 0)
+    }
+    fn meta_of(i: u32) -> TaskMeta {
+        TaskMeta {
+            stealable: i % 3 != 0,
+            payload_bytes: 8 + (i as u64 % 5) * 16,
+            class: class_of(i),
+        }
+    }
+
+    #[derive(Clone, Copy)]
+    enum Op {
+        Insert(u32, i64),
+        InsertBatch(u32, usize),
+        Select(usize),
+        ExtractStealable(usize),
+        ExtractFiltered(usize),
+    }
+    check(
+        "class-counts-oracle",
+        Config {
+            cases: 40,
+            max_size: 160,
+            seed: 0xC1A55,
+        },
+        |rng, size| {
+            let workers = 1 + rng.below(6) as usize;
+            let mut ops = Vec::with_capacity(size);
+            let mut next_id = 0u32;
+            for _ in 0..size {
+                ops.push(match rng.below(6) {
+                    0 | 1 => {
+                        let op = Op::Insert(next_id, rng.next_u64() as i64 % 100);
+                        next_id += 1;
+                        op
+                    }
+                    2 => {
+                        let n = 1 + rng.below(5) as u32;
+                        let op = Op::InsertBatch(next_id, n as usize);
+                        next_id += n;
+                        op
+                    }
+                    3 => Op::Select(rng.below(workers as u64) as usize),
+                    4 => Op::ExtractStealable(rng.below(6) as usize),
+                    _ => Op::ExtractFiltered(rng.below(6) as usize),
+                });
+            }
+            for backend in SchedBackend::ALL {
+                let q = backend.build(workers);
+                for op in &ops {
+                    match *op {
+                        Op::Insert(id, prio) => q.insert_meta(ct(id), prio, meta_of(id)),
+                        Op::InsertBatch(first, n) => {
+                            let batch: Vec<(TaskDesc, i64, TaskMeta)> = (first..first + n as u32)
+                                .map(|id| (ct(id), id as i64 % 50, meta_of(id)))
+                                .collect();
+                            q.insert_batch_meta(&batch);
+                        }
+                        Op::Select(w) => {
+                            let _ = q.select(w);
+                        }
+                        Op::ExtractStealable(max) => {
+                            let _ = q.extract_stealable(max);
+                        }
+                        Op::ExtractFiltered(max) => {
+                            let _ = q.extract_for_steal(max, &|task| task.i % 2 == 0);
+                        }
+                    }
+                    let counts = q.class_counts();
+                    for class in TaskClass::ALL {
+                        let oracle = q.count_matching(&|task| task.class == class);
+                        prop_assert!(
+                            counts[class.idx()] == oracle,
+                            "{}: class {class:?} count {} != oracle {oracle}",
+                            q.name(),
+                            counts[class.idx()]
+                        );
+                    }
+                    prop_assert!(
+                        counts.iter().sum::<usize>() == q.len(),
+                        "{}: class counts must sum to the queue length",
+                        q.name()
+                    );
+                }
+            }
             Ok(())
         },
     );
