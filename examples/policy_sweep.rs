@@ -108,6 +108,7 @@ fn main() {
                         migrate_overhead_us: 150.0,
                         exec_ewma: false,
                         exec_per_class: false,
+                        share_estimates: false,
                     };
                     let mut times = Vec::new();
                     let mut pct = 0.0;
@@ -157,6 +158,28 @@ fn main() {
             .collect::<Vec<_>>()
             .join(", ");
         println!("[{}] --exec-per-class estimates: {classes}", sched.label());
+        // …and one estimate-sharing run: how much victim knowledge the
+        // steal replies carried, per node (merged digests / cold-class
+        // adoptions — a node that stole nothing shows 0/0).
+        let mc = MigrateConfig {
+            exec_per_class: true,
+            share_estimates: true,
+            ..MigrateConfig::default()
+        };
+        let r = run(mc, 100, sched);
+        let per_node = r
+            .nodes
+            .iter()
+            .map(|n| format!("{}/{}", n.digest_merges, n.digest_class_adoptions))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "[{}] --share-estimates digests merged/adoptions per node: {per_node} \
+             (total {} merged, {} adopted)",
+            sched.label(),
+            r.digest_merges_total(),
+            r.digest_class_adoptions_total()
+        );
         println!();
     }
 }

@@ -2,7 +2,10 @@
 //! the paper's `is_stealable` hook), run it on the simulator with work
 //! stealing on and off, and print the comparison.
 //!
-//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart [width]
+//!
+//! The optional `width` argument sizes the fan-out (default 4000; CI's
+//! smoke step passes a few hundred).
 
 use std::sync::Arc;
 
@@ -19,7 +22,10 @@ fn main() {
     // the only way nodes 1..3 ever see work. Tasks with odd index are
     // marked non-stealable through the TTG hook (they represent work
     // pinned to its data), so at most half the work can migrate.
-    let width: u32 = 4_000;
+    let width: u32 = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(4_000);
     let nodes = 4;
     let graph = Arc::new(
         TtgBuilder::new("quickstart-fanout", nodes)

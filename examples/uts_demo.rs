@@ -3,7 +3,11 @@
 //! parent placement); each policy is then compared on makespan and steal
 //! traffic.
 //!
-//!     cargo run --release --example uts_demo
+//!     cargo run --release --example uts_demo [b0]
+//!
+//! The optional `b0` argument sizes the root fan-out (default 120 — the
+//! paper's configuration; CI's smoke step passes a small value so the
+//! tree stays subcritical and quick).
 
 use std::sync::Arc;
 
@@ -14,8 +18,12 @@ use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::workloads::{UtsGraph, UtsParams};
 
 fn main() {
+    let b0: u32 = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(120);
     let params = UtsParams {
-        b0: 120,
+        b0,
         m: 5,
         q: 0.200014,
         g: 500_000.0, // 0.5 ms per tree node under the default cost model

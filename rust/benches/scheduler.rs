@@ -24,8 +24,13 @@
 //! queue-lock acquisition counts read back from the scheduler's own
 //! counters.
 //!
-//! `--json PATH` writes medians + telemetry for CI (`BENCH_PR4.json`,
-//! including the per-class gate's waiting-time comparison);
+//! Part 5 — the estimate-sharing microbench: a full `--share-estimates`
+//! digest merged into a cold thief table (all adoptions) and a warm one
+//! (all sample-weighted blends).
+//!
+//! `--json PATH` writes medians + telemetry for CI (the stable
+//! `BENCH.json` artifact — per-class gate waiting-time comparison,
+//! digest-merge counters, exact-min-payload hits);
 //! `--steal-decision-only` skips the slower parts.
 //!
 //!     cargo bench --bench scheduler [-- [--steal-decision-only] [--json PATH]]
@@ -37,8 +42,8 @@ use std::time::{Duration, Instant};
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use parsteal::dataflow::ttg::{DynGraph, TtgBuilder};
 use parsteal::migrate::{
-    protocol::decide_steal, waiting_time_per_class_us, waiting_time_us, ExecSnapshot,
-    MigrateConfig, VictimPolicy,
+    protocol::decide_steal, waiting_time_per_class_us, waiting_time_us, EstimateDigest,
+    ExecSnapshot, MigrateConfig, VictimPolicy,
 };
 use parsteal::sched::{
     BatchSite, SPILL_THRESHOLD, SchedBackend, SchedQueue, SchedStats, Scheduler, TaskMeta,
@@ -268,6 +273,11 @@ fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
                     "steal polls must not scan ({})",
                     backend.label()
                 );
+                assert_eq!(
+                    stats.min_payload_resets, 0,
+                    "the exact min-payload multiset never resets ({})",
+                    backend.label()
+                );
                 if kind == "certain" {
                     assert_eq!(
                         stats.steal_extracted, 0,
@@ -372,7 +382,68 @@ fn activation_batch_benches() -> Vec<(String, f64, u64)> {
     out
 }
 
-/// The composition-aware gate's telemetry for `BENCH_PR4.json`: the
+/// Satellite microbench: the `--share-estimates` digest merge. A full
+/// victim digest (every class seeded) merges into a *cold* thief table
+/// (every entry an adoption — the first-steal case) and into a *warm*
+/// one (every entry a sample-weighted blend). The per-merge latencies
+/// plus the adoption/blend counters go to `BENCH.json` so the perf
+/// trajectory of the sharing path is comparable across PRs.
+fn estimate_sharing_benches() -> Json {
+    println!();
+    println!("== estimate sharing: full-digest merge, cold vs warm thief table ==");
+    let mut b = Bencher::default();
+    // Built through the shared sample-capping constructor and merged
+    // through the shared `EstimateDigest::merge_into` loop — the bench
+    // exercises the exact code the DES runs per reply (the threaded
+    // runtime's CAS merge is its atomic twin).
+    let digest = EstimateDigest::snapshot(
+        500.0,
+        64,
+        std::array::from_fn(|c| 10.0 * (c as f64 + 1.0)),
+        [8; TaskClass::COUNT],
+    );
+    let cold_ns = b
+        .bench_with_setup(
+            "digest merge cold (all adoptions)",
+            || ([0.0f64; TaskClass::COUNT], [0u64; TaskClass::COUNT]),
+            |(mut table, mut samples)| {
+                let adoptions = digest.merge_into(&mut table, &mut samples);
+                (table, samples, adoptions)
+            },
+        )
+        .median_ns();
+    let warm_ns = b
+        .bench_with_setup(
+            "digest merge warm (all blends)",
+            || ([42.0f64; TaskClass::COUNT], [16u64; TaskClass::COUNT]),
+            |(mut table, mut samples)| {
+                let adoptions = digest.merge_into(&mut table, &mut samples);
+                (table, samples, adoptions)
+            },
+        )
+        .median_ns();
+    // Counter semantics, asserted once outside the timed loops.
+    let mut table = [0.0f64; TaskClass::COUNT];
+    let mut samples = [0u64; TaskClass::COUNT];
+    let first = digest.merge_into(&mut table, &mut samples);
+    let second = digest.merge_into(&mut table, &mut samples);
+    assert_eq!(
+        first as usize,
+        TaskClass::COUNT,
+        "cold merge adopts every class"
+    );
+    assert_eq!(second, 0, "warm merge blends, never adopts");
+    Json::obj(vec![
+        ("digest_merges", Json::Num(2.0)),
+        ("cold_class_adoptions", Json::Num(first as f64)),
+        ("warm_class_adoptions", Json::Num(second as f64)),
+        ("digest_wire_bytes", Json::Num(digest.wire_bytes() as f64)),
+        ("merge_cold_median_ns", Json::Num(cold_ns)),
+        ("merge_warm_median_ns", Json::Num(warm_ns)),
+    ])
+}
+
+/// The composition-aware gate's telemetry for `BENCH.json`: the
 /// same half-POTRF/half-GEMM queue seen by the node-wide formula and by
 /// the per-class one (`--exec-per-class`), whose estimates differ by
 /// Table 1's orders of magnitude.
@@ -405,6 +476,7 @@ fn write_json(
     path: &str,
     medians: &[(String, f64, SchedStats)],
     activations: &[(String, f64, u64)],
+    estimate_sharing: Json,
 ) {
     let steal_entries: Vec<Json> = medians
         .iter()
@@ -427,9 +499,21 @@ fn write_json(
                     Json::Num(stats.extract_fallback_walks as f64),
                 ),
                 ("watermark_after", Json::Num(stats.watermark as f64)),
+                (
+                    "min_payload_resets",
+                    Json::Num(stats.min_payload_resets as f64),
+                ),
             ])
         })
         .collect();
+    // Every payload-certain denial was proven by the exact min-payload
+    // floor alone — the multiset's O(1) read replacing an extraction.
+    let exact_min_hits: u64 = medians
+        .iter()
+        .filter(|(name, _, _)| name.contains("certain"))
+        .map(|(_, _, stats)| stats.feedback_wt_denials)
+        .sum();
+    let reset_total: u64 = medians.iter().map(|(_, _, s)| s.min_payload_resets).sum();
     let activation_entries: Vec<Json> = activations
         .iter()
         .map(|(name, ns, locks)| {
@@ -441,10 +525,18 @@ fn write_json(
         })
         .collect();
     let j = Json::obj(vec![
-        ("bench", Json::Str("scheduler_pr4".into())),
+        ("bench", Json::Str("scheduler".into())),
         ("steal_decision", Json::Arr(steal_entries)),
         ("activation_batching", Json::Arr(activation_entries)),
         ("per_class_gate", per_class_gate_telemetry()),
+        ("estimate_sharing", estimate_sharing),
+        (
+            "exact_min_payload",
+            Json::obj(vec![
+                ("certain_denial_hits", Json::Num(exact_min_hits as f64)),
+                ("stale_bound_resets", Json::Num(reset_total as f64)),
+            ]),
+        ),
     ]);
     match std::fs::write(path, j.pretty()) {
         Ok(()) => println!("\n(scheduler bench telemetry -> {path})"),
@@ -466,7 +558,8 @@ fn main() {
     }
     let medians = steal_decision_benches();
     let activations = activation_batch_benches();
+    let estimate_sharing = estimate_sharing_benches();
     if let Some(path) = json_path {
-        write_json(&path, &medians, &activations);
+        write_json(&path, &medians, &activations, estimate_sharing);
     }
 }

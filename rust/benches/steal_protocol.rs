@@ -67,6 +67,7 @@ fn main() {
             Msg::StealReply {
                 tasks: vec![TaskDesc::indexed(TaskClass::Gemm, 5, 3, 1)],
                 payload_bytes: 20_000,
+                digest: None,
             },
         );
         mb[0].recv_timeout(Duration::from_secs(1)).unwrap()

@@ -1,6 +1,7 @@
 //! Wire messages between runtime domains.
 
 use crate::dataflow::task::{NodeId, TaskDesc};
+use crate::migrate::EstimateDigest;
 use crate::term::SafraToken;
 
 /// Everything that crosses a node boundary.
@@ -19,9 +20,15 @@ pub enum Msg {
     /// Victim -> thief: migrated tasks (empty = steal failed). Each task
     /// is *recreated* at the thief with the same uid; `payload_bytes` is
     /// the size of the input data copied along (drives the link model).
+    /// Under `--share-estimates` a granted reply also carries the
+    /// victim's [`EstimateDigest`] — its execution-time knowledge
+    /// travels with the stolen work and seeds the thief's estimator
+    /// tables (merged via `migrate::merge_estimate`); the digest's wire
+    /// cost is accounted in [`Msg::wire_bytes`].
     StealReply {
         tasks: Vec<TaskDesc>,
         payload_bytes: u64,
+        digest: Option<EstimateDigest>,
     },
     /// Safra termination-detection token, traveling the ring.
     Token(SafraToken),
@@ -42,6 +49,20 @@ impl Msg {
         }
     }
 
+    /// Wire size of a steal reply carrying `tasks` task descriptors,
+    /// `payload_bytes` of input data and (under `--share-estimates`)
+    /// the victim's estimate digest: one 16-byte header, 32 bytes per
+    /// recreated descriptor, the payload itself, and the digest's
+    /// seeded entries. The DES uses this directly so both runtimes
+    /// share one wire model for the whole steal path.
+    pub fn steal_reply_wire_bytes(
+        tasks: usize,
+        payload_bytes: u64,
+        digest: Option<&EstimateDigest>,
+    ) -> u64 {
+        16 + 32 * tasks as u64 + payload_bytes + digest.map_or(0, EstimateDigest::wire_bytes)
+    }
+
     /// Approximate wire size (drives the latency/bandwidth model).
     pub fn wire_bytes(&self) -> u64 {
         match self {
@@ -51,7 +72,8 @@ impl Msg {
             Msg::StealReply {
                 tasks,
                 payload_bytes,
-            } => 16 + 32 * tasks.len() as u64 + payload_bytes,
+                digest,
+            } => Self::steal_reply_wire_bytes(tasks.len(), *payload_bytes, digest.as_ref()),
             Msg::Token(_) => 24,
             Msg::Shutdown => 8,
         }
@@ -83,12 +105,48 @@ mod tests {
         let small = Msg::StealReply {
             tasks: vec![t],
             payload_bytes: 0,
+            digest: None,
         };
         let big = Msg::StealReply {
             tasks: vec![t],
             payload_bytes: 20_000,
+            digest: None,
         };
         assert!(big.wire_bytes() > small.wire_bytes() + 19_000);
+    }
+
+    #[test]
+    fn steal_reply_accounts_digest_wire_cost() {
+        let t = TaskDesc::indexed(TaskClass::Gemm, 1, 2, 3);
+        let mut digest = EstimateDigest {
+            avg_us: 120.0,
+            avg_samples: 9,
+            class_est_us: [0.0; TaskClass::COUNT],
+            class_samples: [0; TaskClass::COUNT],
+        };
+        digest.class_est_us[TaskClass::Gemm.idx()] = 300.0;
+        digest.class_samples[TaskClass::Gemm.idx()] = 9;
+        let bare = Msg::StealReply {
+            tasks: vec![t],
+            payload_bytes: 512,
+            digest: None,
+        };
+        let shared = Msg::StealReply {
+            tasks: vec![t],
+            payload_bytes: 512,
+            digest: Some(digest),
+        };
+        assert_eq!(
+            shared.wire_bytes(),
+            bare.wire_bytes() + digest.wire_bytes(),
+            "the digest is not free on the wire"
+        );
+        assert_eq!(
+            shared.wire_bytes(),
+            Msg::steal_reply_wire_bytes(1, 512, Some(&digest)),
+            "the shared helper is the single wire model"
+        );
+        assert!(shared.is_basic(), "a digest-carrying reply is still basic");
     }
 
     #[test]

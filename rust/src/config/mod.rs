@@ -39,7 +39,7 @@ impl RunConfig {
     /// `--workload cholesky|uts --nodes N --workers W --tiles T --tile-size S`
     /// `--dense-fraction F --steal BOOL --victim half|chunk[K]|single`
     /// `--thief ready-only|ready-successors --waiting-time BOOL`
-    /// `--exec-ewma BOOL --exec-per-class BOOL`
+    /// `--exec-ewma BOOL --exec-per-class BOOL --share-estimates BOOL`
     /// `--sched central|sharded --batch-activations BOOL --pool-floor N`
     /// `--latency-us L --bw B --seed X` and the
     /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
@@ -85,6 +85,10 @@ impl RunConfig {
             // Off = one node-wide estimate; on = per-TaskClass table
             // and a queue-composition-weighted waiting time.
             exec_per_class: args.bool_or("exec-per-class", false)?,
+            // Off = per-node estimators only (paper-faithful); on =
+            // granted steal replies carry the victim's estimate digest
+            // and thieves merge it into their tables.
+            share_estimates: args.bool_or("share-estimates", false)?,
         };
         Ok(RunConfig {
             workload,
@@ -202,6 +206,22 @@ mod tests {
         assert!(!c.migrate.exec_per_class, "node-wide estimator by default");
         let c = RunConfig::from_args(&args("--exec-per-class true")).unwrap();
         assert!(c.migrate.exec_per_class);
+    }
+
+    #[test]
+    fn share_estimates_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert!(
+            !c.migrate.share_estimates,
+            "per-node estimators by default"
+        );
+        assert!(!c.migrate.track_per_class());
+        let c = RunConfig::from_args(&args("--share-estimates true")).unwrap();
+        assert!(c.migrate.share_estimates);
+        assert!(
+            c.migrate.track_per_class(),
+            "sharing keeps the class table maintained even without --exec-per-class"
+        );
     }
 
     #[test]

@@ -220,6 +220,7 @@ pub fn victim_cells(scale: Scale, waiting_time: bool) -> Vec<Cell> {
         migrate_overhead_us: 150.0,
         exec_ewma: false,
         exec_per_class: false,
+        share_estimates: false,
     };
     vec![
         Cell {

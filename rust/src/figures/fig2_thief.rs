@@ -22,6 +22,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         migrate_overhead_us: 150.0,
         exec_ewma: false,
         exec_per_class: false,
+        share_estimates: false,
     };
     let cells = [
         ("No-Steal", MigrateConfig::disabled()),

@@ -33,6 +33,7 @@ fn usage() -> String {
      \x20         [--tiles 200] [--tile-size 50] [--steal true] [--victim single]\n\
      \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
      \x20         [--exec-ewma false] [--exec-per-class false]\n\
+     \x20         [--share-estimates false]\n\
      \x20         [--sched central|sharded] [--pool-floor 2]\n\
      \x20         [--batch-activations true]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
@@ -190,6 +191,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         "sched:           batches: {}; max watermark {wm}, {walks} fallback walks",
         if site_text.is_empty() { "none".to_string() } else { site_text }
     );
+    if cfg.migrate.share_estimates {
+        println!(
+            "estimates:       {} digests merged, {} cold-class adoptions (merges per node {:?})",
+            report.digest_merges_total(),
+            report.digest_class_adoptions_total(),
+            report
+                .nodes
+                .iter()
+                .map(|n| n.digest_merges)
+                .collect::<Vec<_>>()
+        );
+    }
     if cfg.migrate.exec_per_class {
         let est = report.class_est_us_max();
         let classes = parsteal::dataflow::task::TaskClass::ALL

@@ -30,8 +30,16 @@ pub struct NodeReport {
     pub avg_exec_us: f64,
     /// Per-class execution-time estimates at end of run (µs, indexed by
     /// [`TaskClass`] discriminant; 0 = the class never completed a task
-    /// or `--exec-per-class` was off).
+    /// or neither `--exec-per-class` nor `--share-estimates` was on).
     pub class_est_us: [f64; TaskClass::COUNT],
+    /// Steal-reply estimate digests merged into this node's tables
+    /// (`--share-estimates`): exactly one per successful steal by this
+    /// node when the flag is on, 0 otherwise.
+    pub digest_merges: u64,
+    /// Class entries this node adopted cold from a digest — the thief
+    /// had no local history for the class, so the victim's estimate
+    /// seeded it outright.
+    pub digest_class_adoptions: u64,
     /// Non-empty activation ready sets delivered through the batched
     /// path — asserted equal to the scheduler's activation-site batch
     /// counter (exactly one batched insert per ready set).
@@ -160,12 +168,24 @@ impl RunReport {
         })
     }
 
+    /// Total steal-reply digests merged across nodes
+    /// (`--share-estimates`).
+    pub fn digest_merges_total(&self) -> u64 {
+        self.nodes.iter().map(|n| n.digest_merges).sum()
+    }
+
+    /// Total cold-class adoptions across nodes (`--share-estimates`).
+    pub fn digest_class_adoptions_total(&self) -> u64 {
+        self.nodes.iter().map(|n| n.digest_class_adoptions).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         let steals = self.total_steals();
         let batch_inserts: u64 = self.nodes.iter().map(|n| n.sched.batch_inserts()).sum();
         let saved_locks: u64 = self.nodes.iter().map(|n| n.sched.batch_saved_locks()).sum();
         let denials_fed: u64 = self.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
         let fallback_walks: u64 = self.nodes.iter().map(|n| n.sched.extract_fallback_walks).sum();
+        let payload_resets: u64 = self.nodes.iter().map(|n| n.sched.min_payload_resets).sum();
         let watermark_max = self
             .nodes
             .iter()
@@ -213,6 +233,27 @@ impl RunReport {
             ("sched_gate_denials_fed", Json::Num(denials_fed as f64)),
             ("sched_fallback_walks", Json::Num(fallback_walks as f64)),
             ("sched_watermark_max", Json::Num(watermark_max as f64)),
+            (
+                "sched_min_payload_resets",
+                Json::Num(payload_resets as f64),
+            ),
+            (
+                "digest_merges",
+                Json::Num(self.digest_merges_total() as f64),
+            ),
+            (
+                "digest_class_adoptions",
+                Json::Num(self.digest_class_adoptions_total() as f64),
+            ),
+            (
+                "digest_merges_per_node",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| Json::Num(n.digest_merges as f64))
+                        .collect(),
+                ),
+            ),
             (
                 "class_est_us",
                 Json::obj(

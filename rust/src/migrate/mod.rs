@@ -25,8 +25,9 @@ pub mod policy;
 pub mod protocol;
 
 pub use policy::{
-    class_estimate_update, ewma_update, exec_estimate_us, is_starving, migrate_time_us,
-    steal_allowance, waiting_time_per_class_us, waiting_time_us, EXEC_EWMA_ALPHA, ExecSnapshot,
-    MigrateConfig, StarvationView, ThiefPolicy, VictimPolicy,
+    class_estimate_update, ewma_update, exec_estimate_seeded_us, exec_estimate_us, is_starving,
+    merge_estimate, migrate_time_us, steal_allowance, waiting_time_per_class_us, waiting_time_us,
+    DIGEST_SAMPLE_CAP, EXEC_EWMA_ALPHA, EstimateDigest, ExecSnapshot, MigrateConfig,
+    StarvationView, ThiefPolicy, VictimPolicy,
 };
 pub use protocol::{StealStats, VictimDecision};

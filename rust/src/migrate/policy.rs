@@ -141,6 +141,18 @@ pub struct MigrateConfig {
     /// for classes that have not completed a task yet. Off by default —
     /// the node-wide estimator is the paper-faithful configuration.
     pub exec_per_class: bool,
+    /// Ship the victim's execution-time estimates with every granted
+    /// steal reply (`--share-estimates`): an [`EstimateDigest`] — the
+    /// node-wide estimate plus the seeded per-[`TaskClass`] entries and
+    /// their sample counts — travels with the stolen tasks, accounted in
+    /// the wire model, and is merged into the thief's estimator tables
+    /// on receipt via the shared sample-count-weighted
+    /// [`merge_estimate`] rule. A thief that has never executed a class
+    /// adopts the victim's estimate outright, so its waiting-time gate
+    /// stops falling back to a node-wide mean it does not have for
+    /// freshly stolen classes. Off by default — per-node estimators are
+    /// the paper-faithful configuration.
+    pub share_estimates: bool,
 }
 
 impl MigrateConfig {
@@ -149,6 +161,14 @@ impl MigrateConfig {
             enabled: false,
             ..Self::default()
         }
+    }
+
+    /// Must the runtimes maintain the per-class estimator tables?
+    /// True when the gate consumes them (`--exec-per-class`) *or* when
+    /// steal replies ship them to thieves (`--share-estimates`) — a
+    /// victim with an empty table has nothing worth sharing.
+    pub fn track_per_class(&self) -> bool {
+        self.exec_per_class || self.share_estimates
     }
 }
 
@@ -164,6 +184,7 @@ impl Default for MigrateConfig {
             migrate_overhead_us: 150.0,
             exec_ewma: false,
             exec_per_class: false,
+            share_estimates: false,
         }
     }
 }
@@ -387,6 +408,180 @@ impl ExecSnapshot {
     }
 }
 
+/// The victim's execution-time knowledge, shipped with a granted steal
+/// reply under [`MigrateConfig::share_estimates`]: the node-wide
+/// estimate plus the per-[`TaskClass`] table with sample counts, so the
+/// thief can weight the merge ([`merge_estimate`]). Entries with zero
+/// samples (class never completed a task at the victim) are unseeded:
+/// they cost nothing on the wire ([`EstimateDigest::wire_bytes`]) and
+/// merge as no-ops.
+///
+/// This is the DuctTeip-style hierarchical metadata propagation / AAWS
+/// performance-estimate sharing applied to the paper's waiting-time
+/// gate: a thief that has never executed a GEMM would otherwise gate
+/// its next victim-side decision on a node-wide fallback while the
+/// tasks it just stole carry the victim's measured cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EstimateDigest {
+    /// Victim's node-wide execution-time estimate (µs).
+    pub avg_us: f64,
+    /// Tasks behind `avg_us` (its merge weight at the thief).
+    pub avg_samples: u64,
+    /// Per-class estimates (µs; ≤ 0 with 0 samples = unseeded), indexed
+    /// by class discriminant.
+    pub class_est_us: [f64; TaskClass::COUNT],
+    /// Completed-task counts behind each class estimate.
+    pub class_samples: [u64; TaskClass::COUNT],
+}
+
+/// Cap on the sample weight any single digest entry may carry, applied
+/// victim-side when the digest is built ([`EstimateDigest::snapshot`]).
+/// Successive steals from the same victim re-ship its *cumulative*
+/// history; uncapped, a prolific victim's counts would grow a thief's
+/// merge weights without bound, letting one remote estimate permanently
+/// outvote the thief's own measurements (and echo back inflated when
+/// the thief later serves as victim). With the cap, one merge moves a
+/// warm entry by at most `CAP / (local + CAP)`, while the thief's own
+/// per-finish EWMA keeps its fixed 1/8 gain — local measurements
+/// dominate in steady state.
+pub const DIGEST_SAMPLE_CAP: u64 = 32;
+
+impl EstimateDigest {
+    /// Build a digest from a victim's estimator state, capping every
+    /// sample weight at [`DIGEST_SAMPLE_CAP`]. The single shared
+    /// constructor — both runtimes build their reply digests through
+    /// it, so the cap cannot diverge.
+    pub fn snapshot(
+        avg_us: f64,
+        avg_samples: u64,
+        class_est_us: [f64; TaskClass::COUNT],
+        class_samples: [u64; TaskClass::COUNT],
+    ) -> EstimateDigest {
+        EstimateDigest {
+            avg_us,
+            avg_samples: avg_samples.min(DIGEST_SAMPLE_CAP),
+            class_est_us,
+            class_samples: class_samples.map(|n| n.min(DIGEST_SAMPLE_CAP)),
+        }
+    }
+
+    /// Merge this digest's class entries into a plain estimator table
+    /// through [`merge_estimate`], returning the number of cold-class
+    /// adoptions. This is the *shared merge loop* — unseeded-entry
+    /// skip, adoption accounting, sample accumulation — used verbatim
+    /// by the DES and the benches; the threaded runtime's per-cell CAS
+    /// loop (`node/cluster.rs::merge_digest`) is its atomic twin.
+    pub fn merge_into(
+        &self,
+        table: &mut [f64; TaskClass::COUNT],
+        samples: &mut [u64; TaskClass::COUNT],
+    ) -> u64 {
+        let mut adoptions = 0u64;
+        for c in 0..TaskClass::COUNT {
+            let (remote_us, remote_n) = (self.class_est_us[c], self.class_samples[c]);
+            if remote_n == 0 || remote_us <= 0.0 {
+                continue; // unseeded at the victim: nothing to learn
+            }
+            adoptions += u64::from(!(samples[c] > 0 && table[c] > 0.0));
+            let (merged, n) = merge_estimate(table[c], samples[c], remote_us, remote_n);
+            table[c] = merged;
+            samples[c] = n;
+        }
+        adoptions
+    }
+
+    /// Classes whose entry actually carries information (≥ 1 sample and
+    /// a positive estimate) — the only entries that travel on the wire.
+    pub fn seeded_entries(&self) -> usize {
+        (0..TaskClass::COUNT)
+            .filter(|&c| self.class_samples[c] > 0 && self.class_est_us[c] > 0.0)
+            .count()
+    }
+
+    /// Wire cost of the digest inside a steal reply: a 16-byte header
+    /// (node-wide estimate + sample count) plus 20 bytes per seeded
+    /// class entry (4-byte class tag, 8-byte estimate, 8-byte count).
+    /// Unseeded entries do not travel.
+    pub fn wire_bytes(&self) -> u64 {
+        16 + 20 * self.seeded_entries() as u64
+    }
+}
+
+/// The estimate-sharing merge rule (`--share-estimates`), shared by the
+/// threaded runtime (f64-bits CAS per table cell, like
+/// [`class_estimate_update`]) and the DES (plain fields) so the two
+/// cannot diverge. Returns the merged `(estimate, samples)`:
+///
+/// * a remote entry with no samples (or a non-positive estimate) merges
+///   as a no-op — an unseeded victim teaches nothing;
+/// * an unseeded local entry **adopts** the remote one — the cold-class
+///   seeding the digest exists for;
+/// * two seeded entries **blend by sample weight**, so ten observed
+///   GEMMs outvote one, whichever side observed them.
+///
+/// Sample counts add, which makes merging commutative and associative
+/// up to floating-point rounding — property-tested order-insensitive in
+/// this module's tests.
+///
+/// ```
+/// use parsteal::migrate::merge_estimate;
+///
+/// // Unseeded local adopts; unseeded remote is a no-op.
+/// assert_eq!(merge_estimate(0.0, 0, 200.0, 4), (200.0, 4));
+/// assert_eq!(merge_estimate(100.0, 2, 0.0, 0), (100.0, 2));
+/// // Seeded entries blend by sample weight: (100·2 + 400·6) / 8.
+/// assert_eq!(merge_estimate(100.0, 2, 400.0, 6), (325.0, 8));
+/// ```
+pub fn merge_estimate(
+    local_us: f64,
+    local_samples: u64,
+    remote_us: f64,
+    remote_samples: u64,
+) -> (f64, u64) {
+    let remote_seeded = remote_samples > 0 && remote_us > 0.0;
+    let local_seeded = local_samples > 0 && local_us > 0.0;
+    match (local_seeded, remote_seeded) {
+        (_, false) => (local_us, local_samples),
+        (false, true) => (remote_us, remote_samples),
+        (true, true) => {
+            let n = local_samples + remote_samples;
+            let blended = (local_us * local_samples as f64 + remote_us * remote_samples as f64)
+                / n as f64;
+            (blended, n)
+        }
+    }
+}
+
+/// The node-wide estimate with a remote seed (`--share-estimates`): the
+/// local estimate ([`exec_estimate_us`]) whenever any local history
+/// exists, else the digest-merged seed from past victims — so a node
+/// that has not finished a single task gates on its victims' measured
+/// average instead of the optimistic 1 µs cold start.
+///
+/// ```
+/// use parsteal::migrate::exec_estimate_seeded_us;
+///
+/// // Local history wins…
+/// assert_eq!(exec_estimate_seeded_us(false, 0.0, 800.0, 4, 50.0), 200.0);
+/// // …a cold node uses the remote seed…
+/// assert_eq!(exec_estimate_seeded_us(false, 0.0, 0.0, 0, 50.0), 50.0);
+/// // …and with no seed either, the optimistic cold start survives.
+/// assert_eq!(exec_estimate_seeded_us(false, 0.0, 0.0, 0, 0.0), 1.0);
+/// ```
+pub fn exec_estimate_seeded_us(
+    use_ewma: bool,
+    ewma_us: f64,
+    exec_sum_us: f64,
+    tasks_done: u64,
+    remote_seed_us: f64,
+) -> f64 {
+    if tasks_done == 0 && !(use_ewma && ewma_us > 0.0) && remote_seed_us > 0.0 {
+        remote_seed_us
+    } else {
+        exec_estimate_us(use_ewma, ewma_us, exec_sum_us, tasks_done)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,6 +660,95 @@ mod tests {
             waiting_time_per_class_us(&counts, &uniform, 2, 5.0),
             waiting_time_us(8, 2, 5.0)
         );
+    }
+
+    #[test]
+    fn merge_unseeded_local_adopts_remote() {
+        // The cold-class case the digest exists for.
+        assert_eq!(merge_estimate(0.0, 0, 250.0, 3), (250.0, 3));
+        // A zero-sample local with a stale positive estimate still
+        // counts as unseeded (samples are the source of truth).
+        assert_eq!(merge_estimate(99.0, 0, 250.0, 3), (250.0, 3));
+    }
+
+    #[test]
+    fn merge_seeded_entries_blend_by_sample_weight() {
+        let (est, n) = merge_estimate(100.0, 1, 200.0, 3);
+        assert_eq!(n, 4);
+        assert_eq!(est, 175.0, "(100·1 + 200·3)/4");
+        // Weights matter: flipping the counts flips the blend.
+        let (est, _) = merge_estimate(100.0, 3, 200.0, 1);
+        assert_eq!(est, 125.0);
+    }
+
+    #[test]
+    fn merge_zero_sample_remote_is_noop() {
+        assert_eq!(merge_estimate(100.0, 2, 0.0, 0), (100.0, 2));
+        // A positive remote estimate with zero samples is distrusted.
+        assert_eq!(merge_estimate(100.0, 2, 777.0, 0), (100.0, 2));
+        // Both unseeded: still unseeded.
+        assert_eq!(merge_estimate(0.0, 0, 0.0, 0), (0.0, 0));
+    }
+
+    #[test]
+    fn digest_snapshot_caps_sample_weights() {
+        let mut class_est = [0.0; TaskClass::COUNT];
+        let mut class_n = [0u64; TaskClass::COUNT];
+        class_est[TaskClass::Gemm.idx()] = 500.0;
+        class_n[TaskClass::Gemm.idx()] = 10_000; // prolific victim
+        class_est[TaskClass::Potrf.idx()] = 40.0;
+        class_n[TaskClass::Potrf.idx()] = 3; // under the cap: untouched
+        let d = EstimateDigest::snapshot(120.0, 9_999, class_est, class_n);
+        assert_eq!(d.avg_samples, DIGEST_SAMPLE_CAP);
+        assert_eq!(d.class_samples[TaskClass::Gemm.idx()], DIGEST_SAMPLE_CAP);
+        assert_eq!(d.class_samples[TaskClass::Potrf.idx()], 3);
+        assert_eq!(d.class_est_us[TaskClass::Gemm.idx()], 500.0);
+        // A warm thief cannot be clobbered by one heavy digest: 128
+        // local samples vs the capped 32 keep the blend local-majority.
+        let mut table = [0.0; TaskClass::COUNT];
+        let mut samples = [0u64; TaskClass::COUNT];
+        table[TaskClass::Gemm.idx()] = 100.0;
+        samples[TaskClass::Gemm.idx()] = 128;
+        let adoptions = d.merge_into(&mut table, &mut samples);
+        assert_eq!(adoptions, 1, "only the POTRF entry is a cold adoption");
+        let blended = table[TaskClass::Gemm.idx()];
+        assert!(
+            blended < 200.0,
+            "capped weight must not clobber local history: {blended}"
+        );
+        assert_eq!(samples[TaskClass::Gemm.idx()], 128 + DIGEST_SAMPLE_CAP);
+        assert_eq!(table[TaskClass::Potrf.idx()], 40.0, "cold adoption");
+    }
+
+    #[test]
+    fn digest_wire_bytes_count_only_seeded_entries() {
+        let mut d = EstimateDigest {
+            avg_us: 10.0,
+            avg_samples: 4,
+            class_est_us: [0.0; TaskClass::COUNT],
+            class_samples: [0; TaskClass::COUNT],
+        };
+        assert_eq!(d.seeded_entries(), 0);
+        assert_eq!(d.wire_bytes(), 16, "header only");
+        d.class_est_us[TaskClass::Gemm.idx()] = 300.0;
+        d.class_samples[TaskClass::Gemm.idx()] = 7;
+        d.class_est_us[TaskClass::Potrf.idx()] = 50.0;
+        d.class_samples[TaskClass::Potrf.idx()] = 1;
+        // A zero-sample entry with a positive estimate does not travel.
+        d.class_est_us[TaskClass::Trsm.idx()] = 9.0;
+        assert_eq!(d.seeded_entries(), 2);
+        assert_eq!(d.wire_bytes(), 16 + 2 * 20);
+    }
+
+    #[test]
+    fn seeded_estimate_prefers_local_history() {
+        // Local running mean beats the seed.
+        assert_eq!(exec_estimate_seeded_us(false, 0.0, 400.0, 2, 33.0), 200.0);
+        // Local EWMA beats the seed.
+        assert_eq!(exec_estimate_seeded_us(true, 55.0, 0.0, 0, 33.0), 55.0);
+        // Cold node: seed replaces the optimistic 1 µs.
+        assert_eq!(exec_estimate_seeded_us(true, 0.0, 0.0, 0, 33.0), 33.0);
+        assert_eq!(exec_estimate_seeded_us(false, 0.0, 0.0, 0, 0.0), 1.0);
     }
 
     #[test]

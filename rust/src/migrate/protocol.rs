@@ -94,9 +94,13 @@ pub fn decide_steal(
         // the overhead-bound regime (PR 3) and the payload-bound one:
         // sustained payload-driven denial no longer extracts at all, so
         // the sharded backend's all-shards fallback walk never runs.
+        // The minimum is the queue's *exact* payload-multiset minimum
+        // (not the old monotone-per-epoch bound), so for single-task
+        // allowances the fast path denies precisely what the full
+        // extract-and-weigh would have denied.
         let min_payload = queue.min_stealable_payload_bytes();
         let payload_floor_us = if min_payload == u64::MAX {
-            0.0 // racing census; fall back to the overhead-only bound
+            0.0 // stealable set emptied under us; overhead-only bound
         } else {
             min_payload as f64 / link_bw_bytes_per_us
         };
@@ -260,6 +264,7 @@ mod tests {
             migrate_overhead_us: 150.0,
             exec_ewma: false,
             exec_per_class: false,
+            share_estimates: false,
         }
     }
 

@@ -11,8 +11,9 @@ use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    class_estimate_update, ewma_update, exec_estimate_us, is_starving, protocol::decide_steal,
-    ExecSnapshot, MigrateConfig, StarvationView, StealStats,
+    class_estimate_update, ewma_update, exec_estimate_seeded_us, is_starving, merge_estimate,
+    protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig, StarvationView,
+    StealStats,
 };
 use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
 use crate::term::{SafraAction, SafraState};
@@ -83,10 +84,26 @@ struct NodeState {
     /// history yet.
     exec_ewma_us_bits: AtomicU64,
     /// Per-class execution-time estimates (µs as `f64` bits), updated
-    /// at task finish when `MigrateConfig::exec_per_class` is on via
-    /// the shared [`class_estimate_update`] rule — the threaded twin of
+    /// at task finish when [`MigrateConfig::track_per_class`] via the
+    /// shared [`class_estimate_update`] rule — the threaded twin of
     /// the DES's plain-field table. 0 bits = no history for the class.
+    /// Under `--share-estimates`, steal-reply digests merge into the
+    /// same cells through [`merge_estimate`] (CAS over the f64 bits).
     class_est_us_bits: [AtomicU64; TaskClass::COUNT],
+    /// Completed-task counts behind each class estimate — the merge
+    /// weights for `--share-estimates` (local finishes count 1 each,
+    /// merged digests add the victim's sample count).
+    class_samples: [AtomicU64; TaskClass::COUNT],
+    /// Digest-merged node-wide estimate from past victims (µs as `f64`
+    /// bits) and its sample weight: the cold-start fallback the gate
+    /// uses before this node has finished a single task
+    /// ([`exec_estimate_seeded_us`]).
+    remote_avg_us_bits: AtomicU64,
+    remote_avg_samples: AtomicU64,
+    /// Steal-reply digests merged into this node's tables.
+    digest_merges: AtomicU64,
+    /// Class entries adopted cold from a digest (no local history).
+    digest_class_adoptions: AtomicU64,
     /// Non-empty activation ready sets delivered through the batched
     /// path — the runtime-layer count the scheduler's activation-site
     /// batch counter is asserted against (exactly one batched insert
@@ -146,6 +163,11 @@ impl Cluster {
                     exec_sum_ns: AtomicU64::new(0),
                     exec_ewma_us_bits: AtomicU64::new(0),
                     class_est_us_bits: std::array::from_fn(|_| AtomicU64::new(0)),
+                    class_samples: std::array::from_fn(|_| AtomicU64::new(0)),
+                    remote_avg_us_bits: AtomicU64::new(0),
+                    remote_avg_samples: AtomicU64::new(0),
+                    digest_merges: AtomicU64::new(0),
+                    digest_class_adoptions: AtomicU64::new(0),
                     activation_ready_batches: AtomicU64::new(0),
                     busy_ns: AtomicU64::new(0),
                     steal: Mutex::new(StealStats::default()),
@@ -255,6 +277,8 @@ impl Cluster {
                         class_est_us: std::array::from_fn(|c| {
                             f64::from_bits(nd.class_est_us_bits[c].load(Ordering::Relaxed))
                         }),
+                        digest_merges: nd.digest_merges.load(Ordering::Relaxed),
+                        digest_class_adoptions: nd.digest_class_adoptions.load(Ordering::Relaxed),
                         activation_ready_batches: nd
                             .activation_ready_batches
                             .load(Ordering::Relaxed),
@@ -327,6 +351,76 @@ fn activate_local_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDe
         node.activation_ready_batches.fetch_add(1, Ordering::Relaxed);
         enqueue_batch(node, graph, &ready, BatchSite::Activation);
     }
+}
+
+/// Snapshot this node's execution-time knowledge for a granted steal
+/// reply (`--share-estimates`): the node-wide estimate the gate just
+/// ran on, plus the per-class table and its sample weights — handed to
+/// the shared sample-capping [`EstimateDigest::snapshot`] constructor.
+fn steal_digest(node: &NodeState, avg_us: f64, avg_samples: u64) -> EstimateDigest {
+    EstimateDigest::snapshot(
+        avg_us,
+        avg_samples,
+        std::array::from_fn(|c| {
+            f64::from_bits(node.class_est_us_bits[c].load(Ordering::Relaxed))
+        }),
+        std::array::from_fn(|c| node.class_samples[c].load(Ordering::Relaxed)),
+    )
+}
+
+/// Merge a steal-reply [`EstimateDigest`] into this node's estimator
+/// tables (`--share-estimates`): the atomic twin of the shared
+/// [`EstimateDigest::merge_into`] loop — per seeded class entry one CAS
+/// loop over the f64-bits cell through the same [`merge_estimate`] rule
+/// (the scheme `class_estimate_update` uses at task finish), plus the
+/// node-wide cold-start seed. The sample-count read and the estimate
+/// CAS are two operations, so a concurrent task finish can interleave —
+/// the blend weight is then off by that one in-flight sample, which
+/// only nudges a heuristic; counts and estimates both stay
+/// monotone-consistent.
+fn merge_digest(node: &NodeState, digest: &EstimateDigest) {
+    let mut adoptions = 0u64;
+    for c in 0..TaskClass::COUNT {
+        let (remote_us, remote_n) = (digest.class_est_us[c], digest.class_samples[c]);
+        if remote_n == 0 || remote_us <= 0.0 {
+            continue; // unseeded at the victim: nothing to learn
+        }
+        let local_n = node.class_samples[c].load(Ordering::Relaxed);
+        let mut adopted = false;
+        let _ = node.class_est_us_bits[c].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |bits| {
+                let local_us = f64::from_bits(bits);
+                adopted = !(local_n > 0 && local_us > 0.0);
+                let (merged, _) = merge_estimate(local_us, local_n, remote_us, remote_n);
+                Some(merged.to_bits())
+            },
+        );
+        node.class_samples[c].fetch_add(remote_n, Ordering::Relaxed);
+        adoptions += adopted as u64;
+    }
+    if digest.avg_samples > 0 && digest.avg_us > 0.0 {
+        let local_n = node.remote_avg_samples.load(Ordering::Relaxed);
+        let _ = node.remote_avg_us_bits.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |bits| {
+                let (merged, _) = merge_estimate(
+                    f64::from_bits(bits),
+                    local_n,
+                    digest.avg_us,
+                    digest.avg_samples,
+                );
+                Some(merged.to_bits())
+            },
+        );
+        node.remote_avg_samples
+            .fetch_add(digest.avg_samples, Ordering::Relaxed);
+    }
+    node.digest_merges.fetch_add(1, Ordering::Relaxed);
+    node.digest_class_adoptions
+        .fetch_add(adoptions, Ordering::Relaxed);
 }
 
 fn worker_loop(
@@ -444,14 +538,17 @@ fn worker_loop(
                     Some(ewma_update(f64::from_bits(bits), dur_us).to_bits())
                 });
         }
-        if sh.cfg.migrate.exec_per_class {
+        if sh.cfg.migrate.track_per_class() {
             // Same CAS-over-bits scheme, one cell per class, through the
-            // shared update rule so the DES table cannot diverge.
+            // shared update rule so the DES table cannot diverge. Also
+            // maintained under --share-estimates alone: a victim with an
+            // empty table would have nothing worth shipping to thieves.
             let dur_us = dur_ns as f64 / 1e3;
             let cell = &node.class_est_us_bits[task.class.idx()];
             let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
                 Some(class_estimate_update(f64::from_bits(bits), dur_us).to_bits())
             });
+            node.class_samples[task.class.idx()].fetch_add(1, Ordering::Relaxed);
         }
         node.busy_ns.fetch_add(dur_ns, Ordering::SeqCst);
         node.last_finish_ns
@@ -478,17 +575,19 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                     let workers = sh.cfg.workers_per_node;
                     // The gate's execution-time estimates (shared policy
                     // helpers, so the DES cannot diverge): EWMA or
-                    // running mean node-wide, plus the per-class table
-                    // under --exec-per-class — all O(1) reads of
-                    // incrementally-maintained state.
+                    // running mean node-wide (digest-seeded while this
+                    // node is cold under --share-estimates), plus the
+                    // per-class table under --exec-per-class — all O(1)
+                    // reads of incrementally-maintained state.
                     let done = node.tasks_done.load(Ordering::SeqCst);
                     let ewma = f64::from_bits(node.exec_ewma_us_bits.load(Ordering::Relaxed));
                     let est = ExecSnapshot {
-                        avg_us: exec_estimate_us(
+                        avg_us: exec_estimate_seeded_us(
                             sh.cfg.migrate.exec_ewma,
                             ewma,
                             node.exec_sum_ns.load(Ordering::SeqCst) as f64 / 1e3,
                             done,
+                            f64::from_bits(node.remote_avg_us_bits.load(Ordering::Relaxed)),
                         ),
                         per_class: sh.cfg.migrate.exec_per_class.then(|| {
                             std::array::from_fn(|c| {
@@ -519,6 +618,11 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                             st.payload_bytes += decision.payload_bytes;
                         }
                     }
+                    // Execution-time knowledge travels with stolen work
+                    // (--share-estimates): a granted reply carries this
+                    // victim's estimate digest, priced into wire_bytes.
+                    let digest = (sh.cfg.migrate.share_estimates && !decision.tasks.is_empty())
+                        .then(|| steal_digest(&node, est.avg_us, done));
                     node.safra.lock().unwrap().on_send();
                     sh.net.send(
                         node.id,
@@ -526,11 +630,18 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                         Msg::StealReply {
                             tasks: decision.tasks,
                             payload_bytes: decision.payload_bytes,
+                            digest,
                         },
                     );
                 }
-                Msg::StealReply { tasks, .. } => {
+                Msg::StealReply { tasks, digest, .. } => {
                     node.inflight_steals.fetch_sub(1, Ordering::SeqCst);
+                    // Merge the victim's estimates BEFORE the stolen
+                    // tasks enter the queue: the very next gate decision
+                    // on this node must already see the seeded table.
+                    if let Some(d) = &digest {
+                        merge_digest(&node, d);
+                    }
                     if !tasks.is_empty() {
                         {
                             let mut st = node.steal.lock().unwrap();
@@ -955,6 +1066,52 @@ mod tests {
             .map(|n| n.class_est_us[TaskClass::UtsNode.idx()])
             .fold(0.0, f64::max);
         assert_eq!(uts_est, 0.0, "no UTS tasks ran, so no UTS estimate");
+    }
+
+    /// `--share-estimates` in the threaded runtime: every granted steal
+    /// reply carries the victim's digest, thieves merge it (cold classes
+    /// adopted), and every task still executes exactly once.
+    #[test]
+    fn share_estimates_run_merges_digests() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 30.0,
+                    exec_per_class: true,
+                    share_estimates: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
+                30_000.0
+            })),
+        );
+        assert_eq!(r.tasks_total_executed(), size);
+        let steals = r.total_steals();
+        assert!(steals.successful_steals > 0, "steals must land: {steals:?}");
+        let merges: u64 = r.nodes.iter().map(|n| n.digest_merges).sum();
+        assert_eq!(
+            merges, steals.successful_steals,
+            "every granted reply ships exactly one digest"
+        );
+        let adoptions: u64 = r.nodes.iter().map(|n| n.digest_class_adoptions).sum();
+        assert!(
+            adoptions > 0,
+            "cold thieves must adopt the UTS class estimate"
+        );
     }
 
     /// `--exec-ewma` in the threaded runtime: the gate runs on the

@@ -19,48 +19,32 @@ use std::sync::Mutex;
 
 use crate::dataflow::task::{TaskClass, TaskDesc};
 
-use super::{BatchSite, QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
+use super::{BatchSite, PayloadMultiset, QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
 
-#[derive(Debug)]
+#[derive(Debug, Default)]
 struct Central {
     map: BTreeMap<QKey, (TaskDesc, TaskMeta)>,
     /// Keys of entries whose meta marks them stealable (same ordering as
     /// `map`, so `iter().take(k)` is "k lowest-priority stealable").
     steal_idx: BTreeSet<QKey>,
     steal_payload: u64,
-    /// Lower bound on any queued stealable payload (`u64::MAX` = none):
-    /// monotone min over inserts, reset when `steal_idx` empties.
-    min_steal_payload: u64,
+    /// Exact multiset of the queued stealable payloads (shared
+    /// [`PayloadMultiset`]), maintained on every insert/select/extract.
+    steal_payloads: PayloadMultiset,
     /// Queued tasks per class (keyed on `task.class`).
     class_counts: [usize; TaskClass::COUNT],
     seq: u64,
     stats: SchedStats,
 }
 
-impl Default for Central {
-    fn default() -> Self {
-        Central {
-            map: BTreeMap::new(),
-            steal_idx: BTreeSet::new(),
-            steal_payload: 0,
-            min_steal_payload: u64::MAX,
-            class_counts: [0; TaskClass::COUNT],
-            seq: 0,
-            stats: SchedStats::default(),
-        }
-    }
-}
-
 impl Central {
-    /// Bookkeeping for one removed entry: steal index/payload, the
-    /// per-class count, and the payload bound's empty-set reset.
+    /// Bookkeeping for one removed entry: steal index/payload (incl. the
+    /// exact payload multiset) and the per-class count.
     fn forget(&mut self, key: QKey, task: &TaskDesc, meta: TaskMeta) {
         if meta.stealable {
             self.steal_idx.remove(&key);
             self.steal_payload -= meta.payload_bytes;
-            if self.steal_idx.is_empty() {
-                self.min_steal_payload = u64::MAX;
-            }
+            self.steal_payloads.remove(meta.payload_bytes);
         }
         self.class_counts[task.class.idx()] -= 1;
     }
@@ -111,7 +95,7 @@ impl CentralQueue {
         if meta.stealable {
             q.steal_idx.insert(key);
             q.steal_payload += meta.payload_bytes;
-            q.min_steal_payload = q.min_steal_payload.min(meta.payload_bytes);
+            q.steal_payloads.add(meta.payload_bytes);
         }
         q.class_counts[task.class.idx()] += 1;
         q.map.insert(key, (task, meta));
@@ -178,10 +162,11 @@ impl CentralQueue {
         self.inner.lock().unwrap().steal_payload
     }
 
-    /// Lower bound on any queued stealable payload — O(1), no scan
-    /// (`u64::MAX` when nothing stealable is queued).
+    /// The *exact* minimum queued stealable payload — O(1) read of the
+    /// cached multiset minimum (`u64::MAX` when nothing stealable is
+    /// queued), no scan.
     pub fn min_stealable_payload_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().min_steal_payload
+        self.inner.lock().unwrap().steal_payloads.min()
     }
 
     /// Queued tasks per class — O(1) copy of the incremental counters.
@@ -254,7 +239,12 @@ impl CentralQueue {
     }
 
     pub fn stats(&self) -> SchedStats {
-        let mut stats = self.inner.lock().unwrap().stats;
+        let mut stats = {
+            let q = self.inner.lock().unwrap();
+            let mut stats = q.stats;
+            stats.min_payload_resets = q.steal_payloads.resets();
+            stats
+        };
         stats.feedback_grants = self.feedback_grants.load(Ordering::Relaxed);
         stats.feedback_wt_denials = self.feedback_wt_denials.load(Ordering::Relaxed);
         stats
@@ -267,7 +257,7 @@ impl CentralQueue {
         q.map.clear();
         q.steal_idx.clear();
         q.steal_payload = 0;
-        q.min_steal_payload = u64::MAX;
+        q.steal_payloads.clear();
         q.class_counts = [0; TaskClass::COUNT];
         out
     }
@@ -467,13 +457,15 @@ mod tests {
         assert_eq!(q.class_counts(), [0; TaskClass::COUNT]);
     }
 
-    /// The payload bound: monotone min while stealable tasks remain,
-    /// reset to the sentinel when the stealable set empties.
+    /// The payload minimum is exact under any removal order: when the
+    /// lightest stealable task leaves, the bound rises to the true next
+    /// minimum instead of going stale-low, and it returns to the
+    /// sentinel when the stealable set empties.
     #[test]
-    fn min_payload_bound_tracks_inserts_and_empties() {
+    fn min_payload_is_exact_under_removals() {
         let q = CentralQueue::new();
         assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
-        for (i, payload) in [(0u32, 500u64), (1, 200), (2, 900)] {
+        for (i, payload) in [(0u32, 200u64), (1, 200), (2, 500), (4, 900)] {
             q.insert_meta(
                 t(i),
                 i as i64,
@@ -495,11 +487,19 @@ mod tests {
             },
         );
         assert_eq!(q.min_stealable_payload_bytes(), 200);
-        // Removing the smallest leaves the bound conservative (≤ 500).
-        let _ = q.extract_stealable(2); // takes i=0 (500) and i=1 (200)
-        assert!(q.min_stealable_payload_bytes() <= 500);
-        let _ = q.extract_stealable(1); // stealable set now empty
+        // One of the two 200-byte tasks leaves (extraction is lowest
+        // priority first = i=0): the duplicate keeps the min at 200.
+        assert_eq!(q.extract_stealable(1), vec![t(0)]);
+        assert_eq!(q.min_stealable_payload_bytes(), 200, "duplicate survives");
+        // The last 200-byte task leaves: the min rises to the *true*
+        // next minimum — the exactness the old monotone bound lost.
+        assert_eq!(q.extract_stealable(1), vec![t(1)]);
+        assert_eq!(q.min_stealable_payload_bytes(), 500);
+        assert_eq!(q.extract_stealable(1), vec![t(2)]);
+        assert_eq!(q.min_stealable_payload_bytes(), 900);
+        let _ = q.extract_stealable(1); // removes i=4: stealable set empty
         assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
         assert_eq!(q.len(), 1, "non-stealable task remains");
+        assert_eq!(q.stats().min_payload_resets, 0, "never a stale reset");
     }
 }

@@ -42,16 +42,15 @@
 //!   stealable,
 //! * [`Scheduler::stealable_payload_bytes`] — the input bytes that would
 //!   travel if all of them migrated,
-//! * [`Scheduler::min_stealable_payload_bytes`] — a lower bound on the
-//!   payload of any queued stealable task (monotone min, reset when the
-//!   stealable set empties), so a payload-certain waiting-time denial
-//!   needs no extraction at all, and
+//! * [`Scheduler::min_stealable_payload_bytes`] — the *exact* minimum
+//!   payload over the queued stealable tasks (an exact payload
+//!   multiset with a cached minimum), so a payload-certain waiting-time
+//!   denial needs no extraction at all, and
 //! * [`Scheduler::class_counts`] — queued tasks per [`TaskClass`], so
 //!   the per-class waiting-time estimator (`--exec-per-class`) can
 //!   weigh the actual queue composition,
 //!
-//! exact under any interleaving of insert / select / extract (the
-//! payload minimum is a conservative bound, see its docs), each an
+//! exact under any interleaving of insert / select / extract, each an
 //! O(1) read. [`Scheduler::extract_stealable`] serves the migrate thread
 //! from a per-queue index of stealable entries (lowest priority first)
 //! without filtering the whole map. Callers must keep the inserted meta
@@ -93,6 +92,7 @@
 //! inserts, selects and extractions (property-tested in
 //! `tests/sched_backends.rs`).
 
+use std::collections::BTreeMap;
 use std::str::FromStr;
 
 use crate::dataflow::task::{TaskClass, TaskDesc};
@@ -115,6 +115,80 @@ pub type SchedQueue = CentralQueue;
 pub(crate) struct QKey {
     pub(crate) prio: i64,
     pub(crate) age: u64, // u64::MAX - seq: larger = older
+}
+
+/// Exact multiset of the queued stealable payloads (payload ->
+/// occurrence count) with a cached minimum, shared by both backends —
+/// the central queue keeps one inside its map mutex, the sharded queue
+/// behind its own short mutex (mirroring the cached min into an atomic
+/// for O(1) lock-free reads). This replaced PR 4's monotone-per-epoch
+/// lower bound, whose empty-set reset could race an insert and leave
+/// the payload-certain fast path gating on a stale value: the minimum
+/// is now exact under any removal order.
+#[derive(Debug)]
+pub(crate) struct PayloadMultiset {
+    counts: BTreeMap<u64, usize>,
+    /// Cached `counts` minimum (`u64::MAX` = empty); recomputed only
+    /// when the last copy of the minimum leaves, so reads are O(1).
+    min: u64,
+    /// Desync tripwire: a removal that misses the multiset (see
+    /// [`SchedStats::min_payload_resets`]).
+    resets: u64,
+}
+
+impl Default for PayloadMultiset {
+    fn default() -> Self {
+        PayloadMultiset {
+            counts: BTreeMap::new(),
+            min: u64::MAX,
+            resets: 0,
+        }
+    }
+}
+
+impl PayloadMultiset {
+    /// Add one stealable payload (and refresh the cached minimum).
+    pub(crate) fn add(&mut self, payload: u64) {
+        *self.counts.entry(payload).or_insert(0) += 1;
+        if payload < self.min {
+            self.min = payload;
+        }
+    }
+
+    /// Remove one stealable payload. A removal that misses the multiset
+    /// would mean the accounting desynced: the tripwire counter fires
+    /// and the entry is skipped (the cached minimum stays valid).
+    pub(crate) fn remove(&mut self, payload: u64) {
+        match self.counts.get_mut(&payload) {
+            Some(n) if *n > 1 => *n -= 1,
+            Some(_) => {
+                self.counts.remove(&payload);
+                if payload == self.min {
+                    self.min = self.counts.first_key_value().map_or(u64::MAX, |(p, _)| *p);
+                }
+            }
+            None => {
+                debug_assert!(false, "payload multiset out of sync at {payload}");
+                self.resets += 1;
+            }
+        }
+    }
+
+    /// The exact minimum queued stealable payload (`u64::MAX` = none).
+    pub(crate) fn min(&self) -> u64 {
+        self.min
+    }
+
+    /// Conservative resets performed (0 unless the accounting desynced).
+    pub(crate) fn resets(&self) -> u64 {
+        self.resets
+    }
+
+    /// Drop everything (shutdown/drain paths).
+    pub(crate) fn clear(&mut self) {
+        self.counts.clear();
+        self.min = u64::MAX;
+    }
 }
 
 /// Steal-accounting metadata carried by every queued task.
@@ -293,6 +367,12 @@ pub struct SchedStats {
     /// payload-certain denial fast path plus the pool floor exist to
     /// keep this near zero under sustained denial.
     pub extract_fallback_walks: u64,
+    /// Conservative (stale) resets of the min-stealable-payload bound.
+    /// The exact payload multiset never needs one — this fires only if
+    /// a removal misses the multiset (accounting desync), and the
+    /// property suite plus the payload-certain e2e runs assert it stays
+    /// zero.
+    pub min_payload_resets: u64,
 }
 
 impl SchedStats {
@@ -371,14 +451,17 @@ pub trait Scheduler: Send + Sync + std::fmt::Debug {
     /// Total payload bytes of the queued stealable tasks. O(1).
     fn stealable_payload_bytes(&self) -> u64;
 
-    /// Lower bound on the payload of any queued stealable task, or
-    /// `u64::MAX` when nothing stealable is queued. O(1): maintained as
-    /// a monotone minimum over inserts, reset when the stealable set
-    /// empties — so it may under-report after removals (the bound gets
-    /// conservative, never wrong). `decide_steal` uses it for the
-    /// payload-certain denial fast path: any extractable batch carries
-    /// at least this much payload, so when even that floor loses the
-    /// waiting-time comparison the verdict is known without extracting.
+    /// The *exact* minimum payload of any queued stealable task, or
+    /// `u64::MAX` when nothing stealable is queued. O(1) read of a
+    /// cached minimum backed by an exact payload multiset maintained on
+    /// every insert/select/extract (property-tested against the scan
+    /// oracle). `decide_steal` uses it for the payload-certain denial
+    /// fast path: any extractable batch carries at least this much
+    /// payload, so when even that floor loses the waiting-time
+    /// comparison the verdict is known without extracting — and because
+    /// the minimum is exact, the fast path denies precisely the
+    /// requests the full extract-and-weigh would have denied whenever a
+    /// single-task allowance is in play.
     fn min_stealable_payload_bytes(&self) -> u64;
 
     /// Queued tasks per [`TaskClass`], indexed by class discriminant.
@@ -619,8 +702,9 @@ mod tests {
     }
 
     /// Per-class queued counts follow every insert/select/extract, and
-    /// the min-stealable-payload bound is a true lower bound that
-    /// resets when the stealable set empties.
+    /// the min-stealable-payload accounting is the *exact* multiset
+    /// minimum: it rises when the lightest task leaves and returns to
+    /// the sentinel when the stealable set empties.
     #[test]
     fn class_counts_and_min_payload_track_through_the_trait() {
         for backend in SchedBackend::ALL {
@@ -641,20 +725,46 @@ mod tests {
             assert_eq!(counts[TaskClass::Gemm.idx()], 2, "{backend:?}");
             assert_eq!(counts.iter().sum::<usize>(), q.len(), "{backend:?}");
             assert_eq!(q.min_stealable_payload_bytes(), 100, "{backend:?}");
-            // Removals keep the counts exact; the bound stays a lower
-            // bound (it may not rise when the smallest payload leaves).
+            // Removals keep the counts exact, and the payload minimum
+            // rises to the true next-smallest when the lightest leaves.
             let stolen = q.extract_stealable(1); // lowest priority = the POTRF
             assert_eq!(stolen[0].class, TaskClass::Potrf, "{backend:?}");
             assert_eq!(q.class_counts()[TaskClass::Potrf.idx()], 0, "{backend:?}");
-            assert!(q.min_stealable_payload_bytes() <= 200, "{backend:?}");
+            assert_eq!(q.min_stealable_payload_bytes(), 200, "{backend:?}");
             while q.select(0).is_some() {}
             assert_eq!(q.class_counts(), [0; TaskClass::COUNT], "{backend:?}");
             assert_eq!(
                 q.min_stealable_payload_bytes(),
                 u64::MAX,
-                "{backend:?}: bound resets when the stealable set empties"
+                "{backend:?}: empty stealable set reads as the sentinel"
             );
+            assert_eq!(q.stats().min_payload_resets, 0, "{backend:?}");
         }
+    }
+
+    /// The shared multiset both backends build their min-payload
+    /// accounting on: exact minimum under duplicates and any removal
+    /// order, sentinel when empty, zero resets unless desynced.
+    #[test]
+    fn payload_multiset_is_exact() {
+        let mut m = PayloadMultiset::default();
+        assert_eq!(m.min(), u64::MAX);
+        for p in [500, 200, 900, 200] {
+            m.add(p);
+        }
+        assert_eq!(m.min(), 200);
+        m.remove(200);
+        assert_eq!(m.min(), 200, "duplicate keeps the minimum");
+        m.remove(200);
+        assert_eq!(m.min(), 500, "minimum rises to the true next-smallest");
+        m.remove(900);
+        assert_eq!(m.min(), 500);
+        m.remove(500);
+        assert_eq!(m.min(), u64::MAX, "empty reads as the sentinel");
+        assert_eq!(m.resets(), 0);
+        m.add(7);
+        m.clear();
+        assert_eq!(m.min(), u64::MAX);
     }
 
     #[test]

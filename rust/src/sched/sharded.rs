@@ -35,11 +35,14 @@
 //! initial value. (Before the feedback hook, only pool pressure fed the
 //! watermark and the gate's denial signal was thrown away.)
 //!
-//! Steal accounting (`stealable_count`/`stealable_payload_bytes`, the
-//! per-class queued counts and the min-stealable-payload lower bound)
-//! lives in atomics maintained on insert/select/extract — an O(1) read
-//! for the victim policy — and each shard keeps a `BTreeSet` index of
-//! its stealable keys so `extract_stealable` never filters a map.
+//! Steal accounting (`stealable_count`/`stealable_payload_bytes` and
+//! the per-class queued counts) lives in atomics maintained on
+//! insert/select/extract — an O(1) read for the victim policy — and
+//! each shard keeps a `BTreeSet` index of its stealable keys so
+//! `extract_stealable` never filters a map. The minimum stealable
+//! payload is *exact*: a shared payload multiset behind a short mutex,
+//! with the current minimum cached in an atomic so the payload-certain
+//! denial fast path reads it in O(1).
 //!
 //! Two mechanisms keep sustained denial off the all-shards fallback
 //! walk. First, a *pool floor* ([`POOL_FLOOR`], `--pool-floor`): when a
@@ -66,7 +69,9 @@ use std::sync::Mutex;
 
 use crate::dataflow::task::{TaskClass, TaskDesc};
 
-use super::{BatchCounter, BatchSite, QKey, SchedStats, Scheduler, StealOutcome, TaskMeta};
+use super::{
+    BatchCounter, BatchSite, PayloadMultiset, QKey, SchedStats, Scheduler, StealOutcome, TaskMeta,
+};
 
 /// Initial spill watermark (20 ≈ half the paper's 40 workers, the same
 /// constant PaRSEC uses for chunked victim policies). The live value
@@ -147,11 +152,19 @@ pub struct ShardedQueue {
     stealable_cnt: AtomicUsize,
     /// Payload bytes of the queued stealable tasks.
     stealable_bytes: AtomicU64,
-    /// Lower bound on any queued stealable payload (`u64::MAX` = none):
-    /// `fetch_min` on insert, reset when the stealable count hits zero.
-    /// A reset racing a concurrent insert can leave the bound too high
-    /// for one poll — the fast path then denies a request it could have
-    /// weighed, which is a policy heuristic miss, never a safety issue.
+    /// Exact multiset of the queued stealable payloads (shared
+    /// [`PayloadMultiset`]), one for shards and pool together. Mutated
+    /// under its own short mutex on every stealable
+    /// insert/select/extract; the critical section is one `BTreeMap`
+    /// update plus refreshing the cached minimum below. This replaced
+    /// the PR 4 monotone-min bound, whose empty-set reset could race an
+    /// insert and leave the fast path gating on a stale value — the
+    /// minimum is now exact, at the cost of one short shared lock per
+    /// stealable-task mutation.
+    steal_payloads: Mutex<PayloadMultiset>,
+    /// Cached copy of the multiset minimum (`u64::MAX` = none),
+    /// refreshed under the multiset mutex so reads stay O(1) atomic
+    /// loads off the steal-decision hot path.
     min_steal_bytes: AtomicU64,
     /// Queued tasks per class (keyed on `task.class`).
     class_counts: [AtomicUsize; TaskClass::COUNT],
@@ -187,6 +200,7 @@ impl ShardedQueue {
             count: AtomicUsize::new(0),
             stealable_cnt: AtomicUsize::new(0),
             stealable_bytes: AtomicU64::new(0),
+            steal_payloads: Mutex::new(PayloadMultiset::default()),
             min_steal_bytes: AtomicU64::new(u64::MAX),
             class_counts: std::array::from_fn(|_| AtomicUsize::new(0)),
             pool_floor: POOL_FLOOR,
@@ -252,10 +266,38 @@ impl ShardedQueue {
         self.stealable_bytes.load(Ordering::Relaxed)
     }
 
-    /// Lower bound on any queued stealable payload — O(1) atomic read
-    /// (`u64::MAX` when nothing stealable is queued).
+    /// The *exact* minimum queued stealable payload — an O(1) atomic
+    /// read of the multiset's cached minimum (`u64::MAX` when nothing
+    /// stealable is queued).
     pub fn min_stealable_payload_bytes(&self) -> u64 {
         self.min_steal_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Add stealable payloads to the exact multiset and refresh the
+    /// cached minimum — one lock acquisition per call (batch callers
+    /// pass the whole batch).
+    fn payload_counts_insert(&self, payloads: &[u64]) {
+        if payloads.is_empty() {
+            return;
+        }
+        let mut counts = self.steal_payloads.lock().unwrap();
+        for &p in payloads {
+            counts.add(p);
+        }
+        self.min_steal_bytes.store(counts.min(), Ordering::Relaxed);
+    }
+
+    /// Remove stealable payloads from the exact multiset and refresh
+    /// the cached minimum.
+    fn payload_counts_remove(&self, payloads: &[u64]) {
+        if payloads.is_empty() {
+            return;
+        }
+        let mut counts = self.steal_payloads.lock().unwrap();
+        for &p in payloads {
+            counts.remove(p);
+        }
+        self.min_steal_bytes.store(counts.min(), Ordering::Relaxed);
     }
 
     /// Queued tasks per class — O(1) copies of the incremental counters.
@@ -343,16 +385,19 @@ impl ShardedQueue {
         }
     }
 
-    /// Book the arrival of `n` tasks carrying the given steal/class
-    /// accounting (shared by the single and batched insert paths).
-    /// `count`/`stealable_cnt` go up BEFORE the tasks become selectable
-    /// — the visibility contract of the module docs.
-    fn book_insert(&self, n: usize, stealable: usize, bytes: u64, min_bytes: u64) {
+    /// Book the arrival of `n` tasks carrying `stealable_payloads` (one
+    /// entry per stealable task in the batch) — shared by the single
+    /// and batched insert paths. `count`/`stealable_cnt` and the exact
+    /// payload multiset go up BEFORE the tasks become selectable — the
+    /// visibility contract of the module docs.
+    fn book_insert(&self, n: usize, stealable_payloads: &[u64]) {
         self.count.fetch_add(n, Ordering::SeqCst);
-        if stealable > 0 {
-            self.stealable_cnt.fetch_add(stealable, Ordering::SeqCst);
-            self.stealable_bytes.fetch_add(bytes, Ordering::Relaxed);
-            self.min_steal_bytes.fetch_min(min_bytes, Ordering::Relaxed);
+        if !stealable_payloads.is_empty() {
+            self.stealable_cnt
+                .fetch_add(stealable_payloads.len(), Ordering::SeqCst);
+            self.stealable_bytes
+                .fetch_add(stealable_payloads.iter().sum::<u64>(), Ordering::Relaxed);
+            self.payload_counts_insert(stealable_payloads);
         }
         self.inserts.fetch_add(n as u64, Ordering::Relaxed);
     }
@@ -374,12 +419,11 @@ impl ShardedQueue {
         // checks, and count up BEFORE the task becomes selectable — a
         // concurrent passivity check must never see empty while a task
         // exists.
-        self.book_insert(
-            1,
-            meta.stealable as usize,
-            if meta.stealable { meta.payload_bytes } else { 0 },
-            meta.payload_bytes,
-        );
+        if meta.stealable {
+            self.book_insert(1, &[meta.payload_bytes]);
+        } else {
+            self.book_insert(1, &[]);
+        }
         self.class_inc(task.class);
         let shard_ix =
             (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
@@ -408,20 +452,14 @@ impl ShardedQueue {
             return;
         }
         // Same visibility contract as insert_meta (counts up BEFORE the
-        // tasks become selectable), aggregated into one RMW per counter.
-        let stealable = batch.iter().filter(|(_, _, m)| m.stealable).count();
-        let bytes: u64 = batch
+        // tasks become selectable), aggregated into one RMW per counter
+        // and one payload-multiset lock for the whole batch.
+        let stealable_payloads: Vec<u64> = batch
             .iter()
             .filter(|(_, _, m)| m.stealable)
             .map(|(_, _, m)| m.payload_bytes)
-            .sum();
-        let min_bytes = batch
-            .iter()
-            .filter(|(_, _, m)| m.stealable)
-            .map(|(_, _, m)| m.payload_bytes)
-            .min()
-            .unwrap_or(u64::MAX);
-        self.book_insert(batch.len(), stealable, bytes, min_bytes);
+            .collect();
+        self.book_insert(batch.len(), &stealable_payloads);
         for (task, _, _) in batch {
             self.class_inc(task.class);
         }
@@ -453,18 +491,20 @@ impl ShardedQueue {
         self.insert_batch_at(BatchSite::Other, batch);
     }
 
-    /// Book the removal of `stealable` stealable tasks: the shared
-    /// stealable-count decrement plus the payload-bound reset when the
-    /// stealable set empties.
-    fn book_stealable_removed(&self, stealable: usize, payload: u64) {
-        if stealable == 0 {
+    /// Book the removal of stealable tasks carrying `payloads` (one
+    /// entry per removed stealable task): the shared stealable-count
+    /// decrement plus the exact payload-multiset removal — the multiset
+    /// *is* the bound, so there is no empty-set reset (and no reset
+    /// race) any more.
+    fn book_stealable_removed(&self, payloads: &[u64]) {
+        if payloads.is_empty() {
             return;
         }
-        let before = self.stealable_cnt.fetch_sub(stealable, Ordering::SeqCst);
-        self.stealable_bytes.fetch_sub(payload, Ordering::Relaxed);
-        if before == stealable {
-            self.min_steal_bytes.store(u64::MAX, Ordering::Relaxed);
-        }
+        self.stealable_cnt
+            .fetch_sub(payloads.len(), Ordering::SeqCst);
+        self.stealable_bytes
+            .fetch_sub(payloads.iter().sum::<u64>(), Ordering::Relaxed);
+        self.payload_counts_remove(payloads);
     }
 
     /// Book the removal of one selected task (and its steal accounting).
@@ -475,7 +515,7 @@ impl ShardedQueue {
             .fetch_add(remaining as u64, Ordering::Relaxed);
         self.class_dec(task.class);
         if meta.stealable {
-            self.book_stealable_removed(1, meta.payload_bytes);
+            self.book_stealable_removed(&[meta.payload_bytes]);
         }
     }
 
@@ -549,15 +589,15 @@ impl ShardedQueue {
     }
 
     /// Book the removal of the extracted tasks in `out` (all stealable)
-    /// carrying `payload` stealable bytes.
-    fn book_extract(&self, out: &[TaskDesc], payload: u64) {
+    /// carrying the per-task `payloads`.
+    fn book_extract(&self, out: &[TaskDesc], payloads: &[u64]) {
         self.steal_extracted
             .fetch_add(out.len() as u64, Ordering::Relaxed);
         self.count.fetch_sub(out.len(), Ordering::SeqCst);
         for task in out {
             self.class_dec(task.class);
         }
-        self.book_stealable_removed(out.len(), payload);
+        self.book_stealable_removed(payloads);
     }
 
     /// Victim-side extraction via the stealable indices: drain the pool
@@ -575,13 +615,13 @@ impl ShardedQueue {
             return Vec::new();
         }
         let mut out = Vec::new();
-        let mut payload = 0u64;
+        let mut payloads = Vec::new();
         {
             let mut pool = self.pool.lock().unwrap();
             let keys: Vec<QKey> = pool.steal_idx.iter().take(max).copied().collect();
             for k in keys {
                 if let Some((t, m)) = pool.remove(k) {
-                    payload += m.payload_bytes;
+                    payloads.push(m.payload_bytes);
                     out.push(t);
                 }
             }
@@ -608,7 +648,7 @@ impl ShardedQueue {
                 }
                 if let Some((t, m)) = self.shards[ix].lock().unwrap().remove(key) {
                     if out.len() < max {
-                        payload += m.payload_bytes;
+                        payloads.push(m.payload_bytes);
                         out.push(t);
                     } else {
                         restock.push((key, (t, m)));
@@ -617,7 +657,7 @@ impl ShardedQueue {
             }
             self.pool_insert(restock);
         }
-        self.book_extract(&out, payload);
+        self.book_extract(&out, &payloads);
         out
     }
 
@@ -644,13 +684,14 @@ impl ShardedQueue {
     }
 
     /// Remove up to `max` matching tasks from one locked shard, lowest
-    /// priority first, appending to `out`.
+    /// priority first, appending to `out` (and each removed stealable
+    /// payload to `stealable_payloads`).
     fn extract_from(
         shard: &mut Shard,
         max: usize,
         filter: &dyn Fn(&TaskDesc) -> bool,
         out: &mut Vec<TaskDesc>,
-        payload: &mut u64,
+        stealable_payloads: &mut Vec<u64>,
     ) {
         if out.len() >= max {
             return;
@@ -665,7 +706,7 @@ impl ShardedQueue {
         for k in keys {
             let (t, m) = shard.remove(k).expect("key vanished");
             if m.stealable {
-                *payload += m.payload_bytes;
+                stealable_payloads.push(m.payload_bytes);
             }
             out.push(t);
         }
@@ -684,13 +725,10 @@ impl ShardedQueue {
         }
         self.scans.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::new();
-        let mut payload = 0u64;
-        let mut stealable_removed = 0usize;
+        let mut stealable_payloads = Vec::new();
         {
             let mut pool = self.pool.lock().unwrap();
-            let idx_before = pool.steal_idx.len();
-            Self::extract_from(&mut pool, max, &filter, &mut out, &mut payload);
-            stealable_removed += idx_before - pool.steal_idx.len();
+            Self::extract_from(&mut pool, max, &filter, &mut out, &mut stealable_payloads);
         }
         if out.len() < max {
             let mut candidates: Vec<(QKey, usize)> = Vec::new();
@@ -711,8 +749,7 @@ impl ShardedQueue {
                 }
                 if let Some((t, m)) = self.shards[ix].lock().unwrap().remove(key) {
                     if m.stealable {
-                        payload += m.payload_bytes;
-                        stealable_removed += 1;
+                        stealable_payloads.push(m.payload_bytes);
                     }
                     out.push(t);
                 }
@@ -724,7 +761,7 @@ impl ShardedQueue {
         for task in &out {
             self.class_dec(task.class);
         }
-        self.book_stealable_removed(stealable_removed, payload);
+        self.book_stealable_removed(&stealable_payloads);
         out
     }
 
@@ -761,6 +798,7 @@ impl ShardedQueue {
             feedback_wt_denials: self.feedback_wt_denials.load(Ordering::Relaxed),
             watermark: self.watermark.load(Ordering::Relaxed) as u64,
             extract_fallback_walks: self.fallback_walks.load(Ordering::Relaxed),
+            min_payload_resets: self.steal_payloads.lock().unwrap().resets(),
         }
     }
 
@@ -769,13 +807,11 @@ impl ShardedQueue {
     /// once the node is quiescent.
     pub fn drain(&self) -> Vec<TaskDesc> {
         let mut out = Vec::new();
-        let mut stealable_removed = 0usize;
-        let mut payload = 0u64;
+        let mut stealable_payloads = Vec::new();
         let mut clear = |shard: &mut Shard| {
             for (t, m) in shard.map.values() {
                 if m.stealable {
-                    stealable_removed += 1;
-                    payload += m.payload_bytes;
+                    stealable_payloads.push(m.payload_bytes);
                 }
                 out.push(*t);
             }
@@ -790,7 +826,7 @@ impl ShardedQueue {
         for task in &out {
             self.class_dec(task.class);
         }
-        self.book_stealable_removed(stealable_removed, payload);
+        self.book_stealable_removed(&stealable_payloads);
         out
     }
 }

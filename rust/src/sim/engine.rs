@@ -28,8 +28,9 @@ use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    class_estimate_update, ewma_update, exec_estimate_us, is_starving, protocol::decide_steal,
-    ExecSnapshot, MigrateConfig, StarvationView, StealStats,
+    class_estimate_update, ewma_update, exec_estimate_seeded_us, is_starving, merge_estimate,
+    protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig, StarvationView,
+    StealStats,
 };
 use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
 use crate::util::rng::Rng;
@@ -95,8 +96,17 @@ enum SimMsg {
     /// Coalesced activations from one completion to one destination —
     /// the DES mirror of `comm::Msg::ActivateBatch`.
     ActivateBatch(Vec<TaskDesc>),
-    StealRequest { thief: NodeId },
-    StealReply { tasks: Vec<TaskDesc> },
+    StealRequest {
+        thief: NodeId,
+    },
+    /// The DES mirror of `comm::Msg::StealReply`: under
+    /// `--share-estimates` a granted reply also carries the victim's
+    /// [`EstimateDigest`], priced into the wire model exactly like the
+    /// threaded runtime's message.
+    StealReply {
+        tasks: Vec<TaskDesc>,
+        digest: Option<EstimateDigest>,
+    },
 }
 
 #[derive(Clone, Debug)]
@@ -163,10 +173,22 @@ struct SimNode {
     /// mirror of the threaded runtime's atomic-bits EWMA.
     exec_ewma_us: f64,
     /// Per-class execution-time estimates (µs; 0.0 = no history for the
-    /// class), updated at finish under `MigrateConfig::exec_per_class`
+    /// class), updated at finish under [`MigrateConfig::track_per_class`]
     /// via the shared [`class_estimate_update`] rule — the DES mirror
-    /// of the threaded runtime's atomic-bits table.
+    /// of the threaded runtime's atomic-bits table. Steal-reply digests
+    /// merge into the same entries via [`merge_estimate`].
     class_est_us: [f64; TaskClass::COUNT],
+    /// Completed-task counts behind each class estimate (the merge
+    /// weights for `--share-estimates`).
+    class_samples: [u64; TaskClass::COUNT],
+    /// Digest-merged node-wide seed (µs; 0.0 = none) and its weight:
+    /// the gate's cold-start fallback ([`exec_estimate_seeded_us`]).
+    remote_avg_us: f64,
+    remote_avg_samples: u64,
+    /// Steal-reply digests merged into this node's tables.
+    digest_merges: u64,
+    /// Class entries adopted cold from a digest (no local history).
+    digest_class_adoptions: u64,
     /// Non-empty activation ready sets delivered through the batched
     /// path (asserted equal to the activation-site batch counter).
     activation_ready_batches: u64,
@@ -229,6 +251,11 @@ impl Simulator {
                 exec_sum_us: 0.0,
                 exec_ewma_us: 0.0,
                 class_est_us: [0.0; TaskClass::COUNT],
+                class_samples: [0; TaskClass::COUNT],
+                remote_avg_us: 0.0,
+                remote_avg_samples: 0,
+                digest_merges: 0,
+                digest_class_adoptions: 0,
                 activation_ready_batches: 0,
                 busy_us: 0.0,
                 steal: StealStats::default(),
@@ -281,18 +308,40 @@ impl Simulator {
     }
 
     /// The victim's execution-time estimates for the waiting-time gate
-    /// (shared policy helpers, so the threaded runtime cannot diverge).
+    /// (shared policy helpers, so the threaded runtime cannot diverge);
+    /// the node-wide estimate falls back to the digest-merged seed
+    /// while the node is cold (`--share-estimates`).
     fn victim_exec_snapshot(&self, node_ix: usize) -> ExecSnapshot {
         let node = &self.nodes[node_ix];
         ExecSnapshot {
-            avg_us: exec_estimate_us(
+            avg_us: exec_estimate_seeded_us(
                 self.migrate.exec_ewma,
                 node.exec_ewma_us,
                 node.exec_sum_us,
                 node.tasks_done,
+                node.remote_avg_us,
             ),
             per_class: self.migrate.exec_per_class.then_some(node.class_est_us),
         }
+    }
+
+    /// Merge a steal-reply digest into the thief's estimator tables:
+    /// the shared [`EstimateDigest::merge_into`] loop for the per-class
+    /// entries, plus the node-wide cold-start seed.
+    fn merge_digest(node: &mut SimNode, digest: &EstimateDigest) {
+        node.digest_class_adoptions +=
+            digest.merge_into(&mut node.class_est_us, &mut node.class_samples);
+        if digest.avg_samples > 0 && digest.avg_us > 0.0 {
+            let (merged, n) = merge_estimate(
+                node.remote_avg_us,
+                node.remote_avg_samples,
+                digest.avg_us,
+                digest.avg_samples,
+            );
+            node.remote_avg_us = merged;
+            node.remote_avg_samples = n;
+        }
+        node.digest_merges += 1;
     }
 
     /// Pull ready tasks onto idle workers.
@@ -387,9 +436,10 @@ impl Simulator {
             if self.migrate.exec_ewma {
                 node.exec_ewma_us = ewma_update(node.exec_ewma_us, dur);
             }
-            if self.migrate.exec_per_class {
+            if self.migrate.track_per_class() {
                 let est = &mut node.class_est_us[task.class.idx()];
                 *est = class_estimate_update(*est, dur);
+                node.class_samples[task.class.idx()] += 1;
             }
             node.busy_us += dur;
         }
@@ -536,29 +586,56 @@ impl Simulator {
             node.steal.tasks_migrated += decision.tasks.len() as u64;
             node.steal.payload_bytes += decision.payload_bytes;
         }
+        // Execution-time knowledge travels with stolen work
+        // (--share-estimates): a granted reply carries the victim's
+        // digest — built through the shared sample-capping constructor
+        // — priced into the shared wire model below.
+        let digest = (self.migrate.share_estimates && !decision.tasks.is_empty()).then(|| {
+            let node = &self.nodes[victim_id.idx()];
+            EstimateDigest::snapshot(
+                est.avg_us,
+                node.tasks_done,
+                node.class_est_us,
+                node.class_samples,
+            )
+        });
         // Reply (even when empty: the thief must learn the steal failed).
         self.tasks_in_transit += decision.tasks.len() as u64;
-        let wire = self
-            .cfg
-            .link
-            .transfer_us(16 + 32 * decision.tasks.len() as u64 + decision.payload_bytes);
+        let reply_bytes = Msg::steal_reply_wire_bytes(
+            decision.tasks.len(),
+            decision.payload_bytes,
+            digest.as_ref(),
+        );
+        let wire = self.cfg.link.transfer_us(reply_bytes);
         self.push_event(
             self.now_us + wire,
             EventKind::Deliver {
                 dst: thief,
                 msg: SimMsg::StealReply {
                     tasks: decision.tasks,
+                    digest,
                 },
             },
         );
     }
 
-    fn on_steal_reply(&mut self, node_id: NodeId, tasks: Vec<TaskDesc>) {
+    fn on_steal_reply(
+        &mut self,
+        node_id: NodeId,
+        tasks: Vec<TaskDesc>,
+        digest: Option<EstimateDigest>,
+    ) {
         let graph = self.graph.clone();
         self.tasks_in_transit -= tasks.len() as u64;
         {
             let node = &mut self.nodes[node_id.idx()];
             node.inflight_steals = node.inflight_steals.saturating_sub(1);
+            // Merge the victim's estimates BEFORE the stolen tasks enter
+            // the queue, so the next gate decision on this node already
+            // sees the seeded table.
+            if let Some(d) = &digest {
+                Self::merge_digest(node, d);
+            }
             if !tasks.is_empty() {
                 node.steal.successful_steals += 1;
                 node.steal.tasks_received += tasks.len() as u64;
@@ -634,7 +711,9 @@ impl Simulator {
                             self.activate_batch_at(dst, &tasks);
                         }
                         SimMsg::StealRequest { thief } => self.on_steal_request(dst, thief),
-                        SimMsg::StealReply { tasks } => self.on_steal_reply(dst, tasks),
+                        SimMsg::StealReply { tasks, digest } => {
+                            self.on_steal_reply(dst, tasks, digest)
+                        }
                     }
                 }
                 EventKind::Poll { node } => self.on_poll(node),
@@ -674,6 +753,8 @@ impl Simulator {
                         0.0
                     },
                     class_est_us: n.class_est_us,
+                    digest_merges: n.digest_merges,
+                    digest_class_adoptions: n.digest_class_adoptions,
                     activation_ready_batches: n.activation_ready_batches,
                     steal: n.steal,
                     sched: n.queue.stats(),
@@ -773,6 +854,7 @@ mod tests {
                         migrate_overhead_us: 150.0,
                         exec_ewma: gate,
                         exec_per_class: gate,
+                        share_estimates: gate,
                     };
                     let r = sim(chol(10, 4), mc, 7, 2);
                     assert_eq!(
@@ -1142,6 +1224,122 @@ mod tests {
         assert_eq!(extracted, 0, "payload-certain denials never extract");
         let walks: u64 = r.nodes.iter().map(|n| n.sched.extract_fallback_walks).sum();
         assert_eq!(walks, 0, "and never pay the sharded fallback walk");
+        let resets: u64 = r.nodes.iter().map(|n| n.sched.min_payload_resets).sum();
+        assert_eq!(resets, 0, "the exact min-payload multiset never resets");
+    }
+
+    /// The estimate-sharing acceptance scenario, end to end in the DES:
+    /// a cold thief's first *post-steal* gate decision runs on the
+    /// victim-derived class estimate.
+    ///
+    /// Node 0 warms up on two non-stealable GEMMs (seeding its per-class
+    /// table), then exposes four heavy stealable GEMMs. Node 1 — which
+    /// has executed nothing — steals them, and node 0 starves and asks
+    /// for work back while node 1 is still executing its first stolen
+    /// task (zero completions: a genuinely cold victim). At that gate:
+    ///
+    /// * with `--share-estimates` the digest that rode the reply has
+    ///   seeded node 1's GEMM entry with the victim's measured ≈750 µs,
+    ///   so the expected wait (3 queued × 750 µs) dwarfs the migration
+    ///   cost and node 1 **grants** — it never waiting-time-denies all
+    ///   run long;
+    /// * without it, node 1's table is empty and the per-class formula
+    ///   falls back to the cold node-wide 1 µs: the expected wait is a
+    ///   few µs, the payload floor alone wins, and node 1 **denies** —
+    ///   the gap this PR closes.
+    #[test]
+    fn cold_thief_post_steal_gate_uses_victim_estimate() {
+        use crate::dataflow::ttg::TtgBuilder;
+        let mk_graph = || {
+            Arc::new(
+                TtgBuilder::new("estimate-sharing", 2)
+                    .with_roots(vec![TaskDesc::indexed(TaskClass::Synthetic, 0, 0, 0)])
+                    .wrap_g(
+                        "chain-then-fan",
+                        |t| t.i >= 3, // only the heavy fan is stealable
+                        |t| match t.i {
+                            // root -> warm-up GEMM 1 -> (warm-up GEMM 2
+                            // + the stealable fan 3..=6)
+                            0 => vec![TaskDesc::indexed(TaskClass::Gemm, 1, 0, 0)],
+                            1 => (2..=6)
+                                .map(|i| TaskDesc::indexed(TaskClass::Gemm, i, 0, 0))
+                                .collect(),
+                            _ => vec![],
+                        },
+                        |t| u32::from(t.i > 0),
+                        |_| NodeId(0),
+                        |_| 1.0,
+                    )
+                    .with_priority(|t| i64::from(t.i < 3)) // warm-ups first
+                    .with_payload(|t| if t.i >= 3 { 100_000 } else { 0 })
+                    .with_total_tasks(7)
+                    .build(),
+            )
+        };
+        // Noise-free costs so the schedule is analyzable: the root is
+        // 1 µs (Synthetic = work units), each GEMM ≈ 754 µs (tile 150).
+        let cost = CostModel {
+            noise_sigma: 0.0,
+            node_sigma: 0.0,
+            ..CostModel::default_calibrated()
+        };
+        let run = |share: bool| {
+            let mc = MigrateConfig {
+                poll_interval_us: 5.0,
+                victim: crate::migrate::VictimPolicy::Chunk(4),
+                exec_per_class: true,
+                share_estimates: share,
+                ..MigrateConfig::default()
+            };
+            Simulator::new(
+                mk_graph(),
+                SimConfig {
+                    workers_per_node: 1,
+                    link: LinkModel {
+                        latency_us: 1.0,
+                        bw_bytes_per_us: 1000.0,
+                    },
+                    seed: 3,
+                    max_events: 10_000_000,
+                    record_polls: false,
+                    sched: SchedBackend::Central,
+                    batch_activations: true,
+                    pool_floor: POOL_FLOOR,
+                },
+                cost.clone(),
+                mc,
+                150,
+            )
+            .run()
+        };
+        let shared = run(true);
+        assert_eq!(shared.tasks_total_executed(), 7);
+        assert!(
+            shared.nodes[1].digest_merges >= 1,
+            "the granted reply must carry a digest"
+        );
+        assert!(
+            shared.nodes[1].digest_class_adoptions >= 1,
+            "node 1 was cold: the GEMM entry must be an adoption"
+        );
+        assert_eq!(
+            shared.nodes[1].steal.waiting_time_denials, 0,
+            "gating on the victim-derived ≈750 µs GEMM estimate, node 1 \
+             never denies node 0's steal-back"
+        );
+        assert!(
+            shared.nodes[1].steal.tasks_migrated > 0,
+            "…and grants it: stolen work flows back to the starving owner"
+        );
+
+        let unshared = run(false);
+        assert_eq!(unshared.tasks_total_executed(), 7);
+        assert_eq!(unshared.nodes[1].digest_merges, 0, "no digest without the flag");
+        assert!(
+            unshared.nodes[1].steal.waiting_time_denials > 0,
+            "cold node 1 gates on the 1 µs fallback and wrongly denies \
+             the same request"
+        );
     }
 
     #[test]

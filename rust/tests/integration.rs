@@ -90,6 +90,7 @@ fn real_runtime_steals_preserve_exactly_once() {
                         migrate_overhead_us: 150.0,
                         exec_ewma: false,
                         exec_per_class: false,
+                        share_estimates: false,
                     },
                     seed: 5,
                     record_polls: false,
@@ -289,17 +290,23 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
     }
 }
 
-/// `--exec-per-class` equivalence between the runtimes: with the
-/// composition-aware gate on, both execute every task exactly once, and
-/// in the denial-certain regime (overhead dwarfs any waiting time) they
-/// agree on the steal outcome totals — zero grants, zero migrated tasks
-/// — while the deterministic DES also observes the denials themselves.
+/// `--exec-per-class` (± `--share-estimates`) equivalence between the
+/// runtimes, swept over both values of the sharing flag so the
+/// paper-faithful per-node configuration keeps its own cross-runtime
+/// coverage: both execute every task exactly once; with sharing on in
+/// the steal-friendly regime both merge digests (one per successful
+/// steal, with cold-class adoptions on the thieves) and with it off
+/// neither merges any; in the denial-certain regime (overhead dwarfs
+/// any waiting time) they agree on the steal outcome totals — zero
+/// grants, zero migrated tasks, zero digests — while the deterministic
+/// DES also observes the denials themselves.
 #[test]
-fn exec_per_class_des_and_threaded_agree() {
-    let mk_migrate = |overhead: f64| MigrateConfig {
+fn share_estimates_des_and_threaded_agree() {
+    let mk_migrate = |overhead: f64, share: bool| MigrateConfig {
         poll_interval_us: 20.0,
         migrate_overhead_us: overhead,
         exec_per_class: true,
+        share_estimates: share,
         ..Default::default()
     };
     // All work starts on node 0, so thieves are permanently starving
@@ -317,53 +324,84 @@ fn exec_per_class_des_and_threaded_agree() {
             max_depth: 18,
         }))
     };
-    for overhead in [150.0, 1e9] {
-        let g = mk_uts();
-        let size = g.tree_size(10_000_000);
-        let sim = Simulator::new(
-            g,
-            SimConfig {
-                workers_per_node: 2,
-                link: LinkModel::cluster(),
-                seed: 4,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-            },
-            CostModel::default_calibrated(),
-            mk_migrate(overhead),
-            0,
-        )
-        .run();
-        let g = mk_uts();
-        // 30 µs/task, as in the denial-heavy feedback e2e: long enough
-        // that thieves poll many times while node 0 still has a queue.
-        let ex = SpinExecutor::new(CostModel::default_calibrated(), 0, |_| 30_000.0);
-        let real = Cluster::run(
-            g,
-            ClusterConfig {
-                workers_per_node: 2,
-                link: LinkModel::ideal(),
-                migrate: mk_migrate(overhead),
-                seed: 4,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-            },
-            Arc::new(ex),
-        );
-        assert_eq!(sim.tasks_total_executed(), size, "overhead={overhead}");
-        assert_eq!(real.tasks_total_executed(), size, "overhead={overhead}");
-        if overhead >= 1e9 {
+    for share in [false, true] {
+        for overhead in [150.0, 1e9] {
+            let g = mk_uts();
+            let size = g.tree_size(10_000_000);
+            let sim = Simulator::new(
+                g,
+                SimConfig {
+                    workers_per_node: 2,
+                    link: LinkModel::cluster(),
+                    seed: 4,
+                    max_events: u64::MAX,
+                    record_polls: false,
+                    sched: SchedBackend::Central,
+                    batch_activations: true,
+                    pool_floor: parsteal::sched::POOL_FLOOR,
+                },
+                CostModel::default_calibrated(),
+                mk_migrate(overhead, share),
+                0,
+            )
+            .run();
+            let g = mk_uts();
+            // 30 µs/task, as in the denial-heavy feedback e2e: long
+            // enough that thieves poll many times while node 0 still
+            // has a queue.
+            let ex = SpinExecutor::new(CostModel::default_calibrated(), 0, |_| 30_000.0);
+            let real = Cluster::run(
+                g,
+                ClusterConfig {
+                    workers_per_node: 2,
+                    link: LinkModel::ideal(),
+                    migrate: mk_migrate(overhead, share),
+                    seed: 4,
+                    record_polls: false,
+                    sched: SchedBackend::Central,
+                    batch_activations: true,
+                    pool_floor: parsteal::sched::POOL_FLOOR,
+                },
+                Arc::new(ex),
+            );
+            let tag = format!("share={share} overhead={overhead}");
+            assert_eq!(sim.tasks_total_executed(), size, "{tag}");
+            assert_eq!(real.tasks_total_executed(), size, "{tag}");
             let (s, r) = (sim.total_steals(), real.total_steals());
-            assert_eq!(s.successful_steals, 0, "DES: gate denies all");
-            assert_eq!(r.successful_steals, 0, "threaded: gate denies all");
-            assert_eq!(s.tasks_migrated + r.tasks_migrated, 0);
-            assert!(s.waiting_time_denials > 0, "DES observed the denials");
-            assert!(r.waiting_time_denials > 0, "threaded observed the denials");
+            if overhead >= 1e9 {
+                assert_eq!(s.successful_steals, 0, "{tag}: DES gate denies all");
+                assert_eq!(r.successful_steals, 0, "{tag}: threaded gate denies all");
+                assert_eq!(s.tasks_migrated + r.tasks_migrated, 0, "{tag}");
+                assert!(s.waiting_time_denials > 0, "{tag}: DES observed denials");
+                assert!(r.waiting_time_denials > 0, "{tag}: threaded observed denials");
+            } else {
+                assert!(s.successful_steals > 0, "{tag}: DES steals must land");
+                assert!(r.successful_steals > 0, "{tag}: threaded steals must land");
+            }
+            if share && overhead < 1e9 {
+                // Steal-friendly sharing: both runtimes merge exactly
+                // one digest per successful steal, and the UTS thieves
+                // start cold, so the class entry arrives by adoption.
+                assert_eq!(
+                    sim.digest_merges_total(),
+                    s.successful_steals,
+                    "{tag}: DES one digest per successful steal"
+                );
+                assert_eq!(
+                    real.digest_merges_total(),
+                    r.successful_steals,
+                    "{tag}: threaded one digest per successful steal"
+                );
+                assert!(sim.digest_class_adoptions_total() > 0, "{tag}: DES adoptions");
+                assert!(
+                    real.digest_class_adoptions_total() > 0,
+                    "{tag}: threaded adoptions"
+                );
+            } else {
+                // Flag off (or nothing granted): no digests anywhere.
+                assert_eq!(sim.digest_merges_total(), 0, "{tag}: DES no digests");
+                assert_eq!(real.digest_merges_total(), 0, "{tag}: threaded no digests");
+            }
         }
     }
 }

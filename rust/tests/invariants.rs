@@ -34,6 +34,7 @@ fn random_migrate(rng: &mut Rng) -> MigrateConfig {
         migrate_overhead_us: rng.uniform() * 300.0,
         exec_ewma: rng.uniform() < 0.5,
         exec_per_class: rng.uniform() < 0.5,
+        share_estimates: rng.uniform() < 0.5,
     }
 }
 
@@ -309,6 +310,84 @@ fn prop_victim_allowance_bounds() {
                 q.len() + d.tasks.len() == before,
                 "queue conservation violated"
             );
+            Ok(())
+        },
+    );
+}
+
+/// The `--share-estimates` merge rule is order-insensitive: merging the
+/// same set of victim digest entries into a thief's table in any order
+/// lands on the same estimate (within f64 tolerance) and exactly the
+/// same sample count — so which reply arrives first cannot bias the
+/// gate. Also pins the two absorbing cases: zero-sample entries are
+/// no-ops in any position, and the first seeded entry is an adoption.
+#[test]
+fn prop_digest_merge_is_order_insensitive() {
+    use parsteal::migrate::merge_estimate;
+    check(
+        "digest-merge-order-insensitive",
+        Config {
+            cases: 80,
+            max_size: 12,
+            seed: 0xD16E57,
+        },
+        |rng, size| {
+            let entries: Vec<(f64, u64)> = (0..size.max(2))
+                .map(|_| {
+                    if rng.uniform() < 0.2 {
+                        (0.0, 0) // unseeded entry: must merge as a no-op
+                    } else {
+                        (1.0 + rng.uniform() * 5_000.0, 1 + rng.below(50))
+                    }
+                })
+                .collect();
+            let merge_all = |order: &[usize]| -> (f64, u64) {
+                let mut est = 0.0;
+                let mut n = 0u64;
+                for &ix in order {
+                    let (e, s) = entries[ix];
+                    let (m, mn) = merge_estimate(est, n, e, s);
+                    est = m;
+                    n = mn;
+                }
+                (est, n)
+            };
+            let forward: Vec<usize> = (0..entries.len()).collect();
+            let mut shuffled = forward.clone();
+            // Fisher-Yates with the prop RNG.
+            for i in (1..shuffled.len()).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                shuffled.swap(i, j);
+            }
+            let (a, an) = merge_all(&forward);
+            let (b, bn) = merge_all(&shuffled);
+            prop_assert!(an == bn, "sample counts must merge exactly: {an} vs {bn}");
+            let scale = a.abs().max(b.abs()).max(1.0);
+            prop_assert!(
+                (a - b).abs() <= 1e-9 * scale,
+                "merged estimate depends on order: {a} vs {b}"
+            );
+            // The weighted blend never leaves the convex hull of the
+            // seeded entries.
+            let seeded: Vec<f64> = entries
+                .iter()
+                .filter(|(_, n)| *n > 0)
+                .map(|(e, _)| *e)
+                .collect();
+            if seeded.is_empty() {
+                prop_assert!(an == 0 && a == 0.0, "no seed -> still unseeded");
+            } else {
+                let lo = seeded.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = seeded.iter().cloned().fold(0.0, f64::max);
+                prop_assert!(
+                    a >= lo - 1e-9 * scale && a <= hi + 1e-9 * scale,
+                    "blend {a} escaped [{lo}, {hi}]"
+                );
+                prop_assert!(
+                    an == entries.iter().map(|(_, n)| n).sum::<u64>(),
+                    "samples must sum over seeded entries"
+                );
+            }
             Ok(())
         },
     );

@@ -190,10 +190,15 @@ fn prop_backends_conserve_under_interleaving() {
 
 /// The incremental stealable-count/payload accounting must exactly
 /// match the `count_matching` scan oracle (and a hand-tracked payload
-/// sum) after every operation of a random insert / select /
-/// extract_stealable / extract_for_steal interleaving, on both backends.
+/// multiset — sum *and* exact minimum) after every operation of a
+/// random insert / select / extract_stealable / extract_for_steal
+/// interleaving, on both backends. The minimum assertion is the
+/// exact-multiset contract: after any removal sequence the reported
+/// `min_stealable_payload_bytes` is the true minimum (not a stale
+/// lower bound), with zero conservative resets.
 #[test]
 fn prop_incremental_accounting_matches_oracle() {
+    use std::collections::BTreeMap;
     // Meta derived deterministically from the task id, so the oracle
     // filter can recognize stealable tasks without sharing state.
     fn meta_of(i: u32) -> TaskMeta {
@@ -238,10 +243,16 @@ fn prop_incremental_accounting_matches_oracle() {
             for backend in SchedBackend::ALL {
                 let q = backend.build(workers);
                 // Hand-tracked multiset of queued stealable payloads.
-                let mut in_queue_payload: u64 = 0;
-                let remove = |task: TaskDesc, payload: &mut u64| {
+                let mut payloads: BTreeMap<u64, usize> = BTreeMap::new();
+                let remove = |task: TaskDesc, payloads: &mut BTreeMap<u64, usize>| {
                     if stealable_filter(&task) {
-                        *payload -= meta_of(task.i).payload_bytes;
+                        let p = meta_of(task.i).payload_bytes;
+                        match payloads.get_mut(&p) {
+                            Some(n) if *n > 1 => *n -= 1,
+                            _ => {
+                                payloads.remove(&p);
+                            }
+                        }
                     }
                 };
                 for op in &ops {
@@ -249,12 +260,12 @@ fn prop_incremental_accounting_matches_oracle() {
                         Op::Insert(id, prio) => {
                             q.insert_meta(t(id), prio, meta_of(id));
                             if id % 3 != 0 {
-                                in_queue_payload += meta_of(id).payload_bytes;
+                                *payloads.entry(meta_of(id).payload_bytes).or_insert(0) += 1;
                             }
                         }
                         Op::Select(w) => {
                             if let Some(task) = q.select(w) {
-                                remove(task, &mut in_queue_payload);
+                                remove(task, &mut payloads);
                             }
                         }
                         Op::ExtractStealable(max) => {
@@ -264,7 +275,7 @@ fn prop_incremental_accounting_matches_oracle() {
                                     "{}: non-stealable task {task} extracted",
                                     q.name()
                                 );
-                                remove(task, &mut in_queue_payload);
+                                remove(task, &mut payloads);
                             }
                         }
                         Op::ExtractFiltered(max) => {
@@ -272,7 +283,7 @@ fn prop_incremental_accounting_matches_oracle() {
                             // accounting must stay exact even when the
                             // scan path removes stealable tasks.
                             for task in q.extract_for_steal(max, &|task| task.i % 2 == 0) {
-                                remove(task, &mut in_queue_payload);
+                                remove(task, &mut payloads);
                             }
                         }
                     }
@@ -283,13 +294,26 @@ fn prop_incremental_accounting_matches_oracle() {
                         q.name(),
                         q.stealable_count()
                     );
+                    let tracked_sum: u64 = payloads.iter().map(|(p, n)| p * *n as u64).sum();
                     prop_assert!(
-                        q.stealable_payload_bytes() == in_queue_payload,
-                        "{}: payload {} != tracked {in_queue_payload}",
+                        q.stealable_payload_bytes() == tracked_sum,
+                        "{}: payload {} != tracked {tracked_sum}",
                         q.name(),
                         q.stealable_payload_bytes()
                     );
+                    let tracked_min = payloads.keys().next().copied().unwrap_or(u64::MAX);
+                    prop_assert!(
+                        q.min_stealable_payload_bytes() == tracked_min,
+                        "{}: min payload {} != exact multiset min {tracked_min}",
+                        q.name(),
+                        q.min_stealable_payload_bytes()
+                    );
                 }
+                prop_assert!(
+                    q.stats().min_payload_resets == 0,
+                    "{}: exact multiset must never reset conservatively",
+                    q.name()
+                );
             }
             Ok(())
         },
