@@ -39,17 +39,20 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use parsteal::dataflow::ttg::{DynGraph, TtgBuilder};
 use parsteal::migrate::{
     protocol::decide_steal, waiting_time_per_class_us, waiting_time_us, EstimateDigest,
-    ExecSnapshot, MigrateConfig, VictimPolicy,
+    ExecSnapshot, MigrateConfig, VictimPolicy, VictimSelect,
 };
 use parsteal::sched::{
     BatchSite, SPILL_THRESHOLD, SchedBackend, SchedQueue, SchedStats, Scheduler, TaskMeta,
 };
+use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::util::bench::Bencher;
 use parsteal::util::json::Json;
+use parsteal::workloads::{UtsGraph, UtsParams};
 
 fn filled(n: u32) -> SchedQueue {
     let q = SchedQueue::new();
@@ -472,11 +475,77 @@ fn per_class_gate_telemetry() -> Json {
     ])
 }
 
+/// The PR 6 victim-selection telemetry for `BENCH.json`: the same
+/// denial-skewed UTS tree (bursty subtree weights -> many requests land
+/// on poor or gate-closed victims) run through the DES twice at one
+/// seed — uniform victim choice vs the targeted selector — reporting
+/// each arm's grant rate and the makespan delta. Estimate sharing is on
+/// in both arms so the only difference is *which* victim each starving
+/// node asks. Cheap enough to run in the CI `--steal-decision-only`
+/// pass, so the grant-rate trajectory is comparable across PRs.
+fn victim_selection_telemetry() -> Json {
+    println!();
+    println!("== victim selection: uniform vs targeted on denial-skewed UTS (DES) ==");
+    let run = |select: VictimSelect| {
+        let graph = Arc::new(UtsGraph::new(UtsParams {
+            b0: 32,
+            m: 4,
+            q: 0.3,
+            g: 50_000.0,
+            seed: 5,
+            nodes: 4,
+            max_depth: 24,
+        }));
+        let mc = MigrateConfig {
+            poll_interval_us: 20.0,
+            share_estimates: true,
+            victim_select: select,
+            ..MigrateConfig::default()
+        };
+        let cfg = SimConfig {
+            workers_per_node: 4,
+            link: LinkModel::cluster(),
+            seed: 7,
+            max_events: 50_000_000,
+            record_polls: true,
+            sched: SchedBackend::Central,
+            batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
+        };
+        Simulator::new(graph, cfg, CostModel::default_calibrated(), mc, 20).run()
+    };
+    let uniform = run(VictimSelect::Uniform);
+    let targeted = run(VictimSelect::Targeted);
+    let (u_pct, t_pct) = (
+        uniform.total_steals().success_pct(),
+        targeted.total_steals().success_pct(),
+    );
+    let delta_pct =
+        100.0 * (targeted.makespan_us - uniform.makespan_us) / uniform.makespan_us;
+    println!(
+        "    uniform  grant rate {u_pct:>5.1}%  makespan {:>10.0}µs",
+        uniform.makespan_us
+    );
+    println!(
+        "    targeted grant rate {t_pct:>5.1}%  makespan {:>10.0}µs  (delta {delta_pct:+.2}%)",
+        targeted.makespan_us
+    );
+    Json::obj(vec![
+        ("scenario", Json::Str("uts_denial_skewed_4n".into())),
+        ("uniform_grant_pct", Json::Num(u_pct)),
+        ("targeted_grant_pct", Json::Num(t_pct)),
+        ("uniform_makespan_us", Json::Num(uniform.makespan_us)),
+        ("targeted_makespan_us", Json::Num(targeted.makespan_us)),
+        ("makespan_delta_pct", Json::Num(delta_pct)),
+    ])
+}
+
 fn write_json(
     path: &str,
     medians: &[(String, f64, SchedStats)],
     activations: &[(String, f64, u64)],
     estimate_sharing: Json,
+    victim_selection: Json,
 ) {
     let steal_entries: Vec<Json> = medians
         .iter()
@@ -530,6 +599,7 @@ fn write_json(
         ("activation_batching", Json::Arr(activation_entries)),
         ("per_class_gate", per_class_gate_telemetry()),
         ("estimate_sharing", estimate_sharing),
+        ("victim_selection", victim_selection),
         (
             "exact_min_payload",
             Json::obj(vec![
@@ -559,7 +629,8 @@ fn main() {
     let medians = steal_decision_benches();
     let activations = activation_batch_benches();
     let estimate_sharing = estimate_sharing_benches();
+    let victim_selection = victim_selection_telemetry();
     if let Some(path) = json_path {
-        write_json(&path, &medians, &activations, estimate_sharing);
+        write_json(&path, &medians, &activations, estimate_sharing, victim_selection);
     }
 }

@@ -7,9 +7,13 @@ use std::time::Duration;
 
 use parsteal::comm::{LinkModel, Msg, Network};
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
-use parsteal::migrate::{protocol::decide_steal, ExecSnapshot, MigrateConfig, VictimPolicy};
+use parsteal::migrate::{
+    protocol::decide_steal, ExecSnapshot, MigrateConfig, VictimOutcome, VictimPolicy,
+    VictimSelector,
+};
 use parsteal::sched::{SchedQueue, TaskMeta};
 use parsteal::util::bench::Bencher;
+use parsteal::util::rng::thief_rng;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
 
 fn main() {
@@ -68,9 +72,42 @@ fn main() {
                 tasks: vec![TaskDesc::indexed(TaskClass::Gemm, 5, 3, 1)],
                 payload_bytes: 20_000,
                 digest: None,
+                denied_by_waiting_time: false,
             },
         );
         mb[0].recv_timeout(Duration::from_secs(1)).unwrap()
     });
     net.shutdown();
+
+    // Victim selection: one pick per poll, uniform (the paper's draw)
+    // vs the targeted selector's scored argmax. Both are O(candidates)
+    // with zero queue access — the decoy queue stays untouched no
+    // matter how many picks run (asserted below). Epsilon 0 makes the
+    // targeted pick fully deterministic work, no exploration branch.
+    println!("== victim selection ==");
+    let decoy = fill();
+    let decoy_len = decoy.len();
+    for n in [8usize, 64] {
+        let mut rng = thief_rng(0xBE7C, 0);
+        b.bench(&format!("pick uniform ({n} nodes)"), || {
+            rng.pick_other(n, 0)
+        });
+        let mut sel = VictimSelector::new(0, n, thief_rng(0xBE7C, 0))
+            .with_link(5.0, 1e4)
+            .with_epsilon(0.0);
+        for v in 1..n {
+            let outcome = if v % 3 == 0 {
+                VictimOutcome::Granted
+            } else {
+                VictimOutcome::DeniedWaitingTime
+            };
+            sel.record(v, outcome, Some(100.0 * v as f64));
+        }
+        b.bench(&format!("pick targeted ({n} nodes)"), || {
+            let pick = sel.pick(250.0);
+            assert!(pick < n && pick != 0);
+            pick
+        });
+    }
+    assert_eq!(decoy.len(), decoy_len, "victim picks never touch a queue");
 }

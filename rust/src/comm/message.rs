@@ -25,10 +25,19 @@ pub enum Msg {
     /// travels with the stolen work and seeds the thief's estimator
     /// tables (merged via `migrate::merge_estimate`); the digest's wire
     /// cost is accounted in [`Msg::wire_bytes`].
+    ///
+    /// An empty reply distinguishes *why* it is empty:
+    /// `denied_by_waiting_time` is true when the victim had stealable
+    /// tasks but its waiting-time gate refused, false when its queue
+    /// was simply empty. Thieves feed the distinction to the targeted
+    /// victim selector (`migrate::VictimSelector`) and the per-victim
+    /// outcome telemetry. The flag is a single bit riding in the
+    /// 16-byte reply header, so the wire model is unchanged.
     StealReply {
         tasks: Vec<TaskDesc>,
         payload_bytes: u64,
         digest: Option<EstimateDigest>,
+        denied_by_waiting_time: bool,
     },
     /// Safra termination-detection token, traveling the ring.
     Token(SafraToken),
@@ -73,6 +82,7 @@ impl Msg {
                 tasks,
                 payload_bytes,
                 digest,
+                ..
             } => Self::steal_reply_wire_bytes(tasks.len(), *payload_bytes, digest.as_ref()),
             Msg::Token(_) => 24,
             Msg::Shutdown => 8,
@@ -106,11 +116,13 @@ mod tests {
             tasks: vec![t],
             payload_bytes: 0,
             digest: None,
+            denied_by_waiting_time: false,
         };
         let big = Msg::StealReply {
             tasks: vec![t],
             payload_bytes: 20_000,
             digest: None,
+            denied_by_waiting_time: false,
         };
         assert!(big.wire_bytes() > small.wire_bytes() + 19_000);
     }
@@ -130,11 +142,13 @@ mod tests {
             tasks: vec![t],
             payload_bytes: 512,
             digest: None,
+            denied_by_waiting_time: false,
         };
         let shared = Msg::StealReply {
             tasks: vec![t],
             payload_bytes: 512,
             digest: Some(digest),
+            denied_by_waiting_time: false,
         };
         assert_eq!(
             shared.wire_bytes(),
@@ -147,6 +161,19 @@ mod tests {
             "the shared helper is the single wire model"
         );
         assert!(shared.is_basic(), "a digest-carrying reply is still basic");
+    }
+
+    #[test]
+    fn denial_flag_is_wire_free() {
+        // The outcome tag rides in the existing 16-byte header.
+        let empty = |denied| Msg::StealReply {
+            tasks: vec![],
+            payload_bytes: 0,
+            digest: None,
+            denied_by_waiting_time: denied,
+        };
+        assert_eq!(empty(true).wire_bytes(), empty(false).wire_bytes());
+        assert!(empty(true).is_basic(), "denials still count for Safra");
     }
 
     #[test]

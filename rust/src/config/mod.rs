@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::comm::LinkModel;
-use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use crate::sched::{POOL_FLOOR, SchedBackend};
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
@@ -40,6 +40,7 @@ impl RunConfig {
     /// `--dense-fraction F --steal BOOL --victim half|chunk[K]|single`
     /// `--thief ready-only|ready-successors --waiting-time BOOL`
     /// `--exec-ewma BOOL --exec-per-class BOOL --share-estimates BOOL`
+    /// `--victim-select uniform|targeted`
     /// `--sched central|sharded --batch-activations BOOL --pool-floor N`
     /// `--latency-us L --bw B --seed X` and the
     /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
@@ -89,6 +90,13 @@ impl RunConfig {
             // granted steal replies carry the victim's estimate digest
             // and thieves merge it into their tables.
             share_estimates: args.bool_or("share-estimates", false)?,
+            // Uniform = the paper's random victim choice; targeted =
+            // score victims on decayed steal-outcome history, digest
+            // richness and modeled round-trip cost (PR 6).
+            victim_select: args
+                .str_or("victim-select", "uniform")
+                .parse::<VictimSelect>()
+                .map_err(anyhow::Error::msg)?,
         };
         Ok(RunConfig {
             workload,
@@ -222,6 +230,19 @@ mod tests {
             c.migrate.track_per_class(),
             "sharing keeps the class table maintained even without --exec-per-class"
         );
+    }
+
+    #[test]
+    fn victim_select_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert_eq!(
+            c.migrate.victim_select,
+            VictimSelect::Uniform,
+            "paper-faithful uniform choice by default"
+        );
+        let c = RunConfig::from_args(&args("--victim-select targeted")).unwrap();
+        assert_eq!(c.migrate.victim_select, VictimSelect::Targeted);
+        assert!(RunConfig::from_args(&args("--victim-select bogus")).is_err());
     }
 
     #[test]

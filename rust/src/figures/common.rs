@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::comm::LinkModel;
 use crate::metrics::RunReport;
-use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use crate::sched::{POOL_FLOOR, SchedBackend};
 use crate::sim::{CostModel, SimConfig, Simulator};
 use crate::stats::Summary;
@@ -71,6 +71,12 @@ pub struct Ctx {
     /// Scheduler backend every figure's simulations run on
     /// (`repro figure --sched central|sharded`).
     pub sched: SchedBackend,
+    /// Victim selection every steal-enabled cell runs with
+    /// (`repro figure --victim-select uniform|targeted`): uniform is
+    /// the paper's protocol and keeps figure outputs identical to
+    /// PR 5; targeted re-renders the same figures under the scored
+    /// selector for the uniform-vs-targeted ablation.
+    pub victim_select: VictimSelect,
 }
 
 impl Ctx {
@@ -82,6 +88,7 @@ impl Ctx {
             cost: CostModel::load_or_default(&artifacts_dir.join("costmodel.json")),
             out_dir: out_dir.to_path_buf(),
             sched: SchedBackend::Central,
+            victim_select: VictimSelect::Uniform,
         }
     }
 
@@ -89,6 +96,23 @@ impl Ctx {
     pub fn with_sched(mut self, sched: SchedBackend) -> Ctx {
         self.sched = sched;
         self
+    }
+
+    /// Select the victim-selection mode the figures sweep on.
+    pub fn with_victim_select(mut self, select: VictimSelect) -> Ctx {
+        self.victim_select = select;
+        self
+    }
+
+    /// Apply the context's victim-selection mode to a cell's policy —
+    /// figures call this on each steal-enabled [`MigrateConfig`] so
+    /// one `--victim-select targeted` flag re-renders every sweep
+    /// under the scored selector without touching cell labels.
+    pub fn apply_victim_select(&self, mut migrate: MigrateConfig) -> MigrateConfig {
+        if migrate.enabled {
+            migrate.victim_select = self.victim_select;
+        }
+        migrate
     }
 
     pub fn cholesky(&self, nodes: u32, seed: u64) -> Arc<CholeskyGraph> {
@@ -221,6 +245,7 @@ pub fn victim_cells(scale: Scale, waiting_time: bool) -> Vec<Cell> {
         exec_ewma: false,
         exec_per_class: false,
         share_estimates: false,
+        victim_select: VictimSelect::Uniform,
     };
     vec![
         Cell {

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use crate::util::json::Json;
 
 use super::common::{fmt_summary, Ctx};
@@ -23,6 +23,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         exec_ewma: false,
         exec_per_class: false,
         share_estimates: false,
+        victim_select: VictimSelect::Uniform,
     };
     let cells = [
         ("No-Steal", MigrateConfig::disabled()),

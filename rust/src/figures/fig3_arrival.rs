@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use crate::stats::Summary;
 use crate::util::json::Json;
 
@@ -33,6 +33,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         exec_ewma: false,
         exec_per_class: false,
         share_estimates: false,
+        victim_select: VictimSelect::Uniform,
     };
     let report = Simulator::new(
         graph,

@@ -13,15 +13,19 @@ use super::common::{fmt_summary, victim_cells, Ctx};
 pub const NODE_COUNTS: [u32; 4] = [2, 4, 8, 16];
 
 /// Shared sweep for fig4/fig5/fig8: every victim policy × node count ×
-/// seed, returning (policy label, nodes, times, success %).
+/// seed, returning (policy label, nodes, times, success %). Honors the
+/// harness's `--victim-select` mode (uniform keeps every cell — and
+/// therefore every figure artifact — identical to the pre-selector
+/// output; targeted re-renders the same sweep as the ablation arm).
 pub fn sweep(ctx: &Ctx) -> Vec<(String, u32, Vec<f64>, f64)> {
     let mut rows = Vec::new();
     for nodes in NODE_COUNTS {
         for cell in victim_cells(ctx.scale, true) {
+            let migrate = ctx.apply_victim_select(cell.migrate);
             let mut times = Vec::new();
             let mut success = 0.0;
             for s in 0..ctx.seeds {
-                let r = ctx.run_cholesky(nodes, cell.migrate, 2000 + s, false);
+                let r = ctx.run_cholesky(nodes, migrate, 2000 + s, false);
                 times.push(r.makespan_us / 1e6);
                 success += r.total_steals().success_pct();
             }

@@ -33,13 +33,13 @@ fn usage() -> String {
      \x20         [--tiles 200] [--tile-size 50] [--steal true] [--victim single]\n\
      \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
      \x20         [--exec-ewma false] [--exec-per-class false]\n\
-     \x20         [--share-estimates false]\n\
+     \x20         [--share-estimates false] [--victim-select uniform|targeted]\n\
      \x20         [--sched central|sharded] [--pool-floor 2]\n\
      \x20         [--batch-activations true]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
      \x20         [--figure-scale small|paper] [--sched central|sharded]\n\
-     \x20         [--artifacts artifacts]\n\
+     \x20         [--victim-select uniform|targeted] [--artifacts artifacts]\n\
      repro calibrate [--reps 50] [--out artifacts/costmodel.json]\n\
      repro verify [--tiles 6] [--tile-size 16] [--nodes 2] [--workers 2]\n\
      \x20         [--steal true] [--sched central|sharded]\n\
@@ -191,6 +191,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         "sched:           batches: {}; max watermark {wm}, {walks} fallback walks",
         if site_text.is_empty() { "none".to_string() } else { site_text }
     );
+    if steals.requests_sent > 0 {
+        let victims = report.victim_totals();
+        let text = victims
+            .iter()
+            .enumerate()
+            .filter(|(_, (g, d, e))| g + d + e > 0)
+            .map(|(v, (g, d, e))| format!("n{v} {g}g/{d}d/{e}e"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!(
+            "victims:         [{}] {text} (grants/wt-denials/empties per victim)",
+            cfg.migrate.victim_select.label()
+        );
+    }
     if cfg.migrate.share_estimates {
         println!(
             "estimates:       {} digests merged, {} cold-class adoptions (merges per node {:?})",
@@ -229,9 +243,15 @@ fn cmd_figure(args: &Args) -> Result<()> {
         .str_or("sched", "central")
         .parse::<parsteal::sched::SchedBackend>()
         .map_err(anyhow::Error::msg)?;
+    let victim_select = args
+        .str_or("victim-select", "uniform")
+        .parse::<parsteal::migrate::VictimSelect>()
+        .map_err(anyhow::Error::msg)?;
     let artifacts = artifacts_dir(args);
     args.check_unknown()?;
-    let ctx = Ctx::new(scale, seeds, &artifacts, &out).with_sched(sched);
+    let ctx = Ctx::new(scale, seeds, &artifacts, &out)
+        .with_sched(sched)
+        .with_victim_select(victim_select);
     let text = figures::run(&ctx, &id)?;
     println!("{text}");
     eprintln!("(machine-readable output under {})", out.display());

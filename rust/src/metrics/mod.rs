@@ -45,6 +45,16 @@ pub struct NodeReport {
     /// counter (exactly one batched insert per ready set).
     pub activation_ready_batches: u64,
     pub steal: StealStats,
+    /// Thief-side reply outcomes by victim (index = victim node id):
+    /// granted replies. Recorded for every reply regardless of
+    /// `--victim-select`; empty when this report was built by hand or
+    /// the run had one node. Per node, `victim_grants.iter().sum()`
+    /// equals `steal.successful_steals`.
+    pub victim_grants: Vec<u64>,
+    /// Waiting-time-gate denials by victim (same indexing).
+    pub victim_wt_denials: Vec<u64>,
+    /// Empty-queue denials by victim (same indexing).
+    pub victim_empties: Vec<u64>,
     /// End-of-run scheduler counters for this node's queue: batched-
     /// insert accounting, gate-feedback events and (sharded) the final
     /// adaptive spill watermark.
@@ -179,8 +189,26 @@ impl RunReport {
         self.nodes.iter().map(|n| n.digest_class_adoptions).sum()
     }
 
+    /// Per-victim reply outcomes summed across all thieves, indexed by
+    /// victim node id: `(grants, wt_denials, empties)` — how often each
+    /// node was successfully robbed vs how often it turned thieves
+    /// away. Missing per-node tables (hand-built reports) count zero.
+    pub fn victim_totals(&self) -> Vec<(u64, u64, u64)> {
+        let p = self.nodes.len();
+        let mut out = vec![(0u64, 0u64, 0u64); p];
+        for n in &self.nodes {
+            for (v, slot) in out.iter_mut().enumerate() {
+                slot.0 += n.victim_grants.get(v).copied().unwrap_or(0);
+                slot.1 += n.victim_wt_denials.get(v).copied().unwrap_or(0);
+                slot.2 += n.victim_empties.get(v).copied().unwrap_or(0);
+            }
+        }
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         let steals = self.total_steals();
+        let victims = self.victim_totals();
         let batch_inserts: u64 = self.nodes.iter().map(|n| n.sched.batch_inserts()).sum();
         let saved_locks: u64 = self.nodes.iter().map(|n| n.sched.batch_saved_locks()).sum();
         let denials_fed: u64 = self.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
@@ -251,6 +279,24 @@ impl RunReport {
                     self.nodes
                         .iter()
                         .map(|n| Json::Num(n.digest_merges as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "victim_grants",
+                Json::Arr(
+                    victims
+                        .iter()
+                        .map(|&(g, _, _)| Json::Num(g as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "victim_denials",
+                Json::Arr(
+                    victims
+                        .iter()
+                        .map(|&(_, d, e)| Json::Num((d + e) as f64))
                         .collect(),
                 ),
             ),
@@ -344,6 +390,32 @@ mod tests {
             deliver_events: 0,
         };
         assert_eq!(r.potential_series(10.0).len(), 3);
+    }
+
+    #[test]
+    fn victim_totals_sum_across_thieves() {
+        let mut n0 = NodeReport::default();
+        n0.victim_grants = vec![0, 3, 1];
+        n0.victim_wt_denials = vec![0, 2, 0];
+        n0.victim_empties = vec![0, 0, 4];
+        let n1 = NodeReport::default(); // hand-built: empty tables = zeros
+        let mut n2 = NodeReport::default();
+        n2.victim_grants = vec![5, 0, 0];
+        let r = RunReport {
+            workload: "t".into(),
+            makespan_us: 1.0,
+            nodes: vec![n0, n1, n2],
+            total_tasks: 0,
+            workers_per_node: 1,
+            link: LinkModel::ideal(),
+            events: 0,
+            deliver_events: 0,
+        };
+        assert_eq!(
+            r.victim_totals(),
+            vec![(5, 0, 0), (3, 2, 0), (1, 0, 4)],
+            "summed across thieves, indexed by victim"
+        );
     }
 
     #[test]

@@ -20,9 +20,17 @@
 //! estimate the gate runs on can track observed runtimes
 //! ([`MigrateConfig::exec_ewma`]). See `docs/ARCHITECTURE.md` for the
 //! loop diagram.
+//!
+//! Since PR 6 the *thief* side of that loop is closed too: victim
+//! choice, uniform-random in the paper (and by default), can instead be
+//! driven by the [`victim::VictimSelector`] (`--victim-select
+//! targeted`), which scores candidates from decayed per-victim steal
+//! outcomes, shipped [`EstimateDigest`] richness, and the modeled
+//! round-trip price of the steal.
 
 pub mod policy;
 pub mod protocol;
+pub mod victim;
 
 pub use policy::{
     class_estimate_update, ewma_update, exec_estimate_seeded_us, exec_estimate_us, is_starving,
@@ -31,3 +39,4 @@ pub use policy::{
     StarvationView, ThiefPolicy, VictimPolicy,
 };
 pub use protocol::{StealStats, VictimDecision};
+pub use victim::{classify_reply, VictimOutcome, VictimSelect, VictimSelector};

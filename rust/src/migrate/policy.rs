@@ -10,6 +10,7 @@
 
 use std::str::FromStr;
 
+use super::victim::VictimSelect;
 use crate::dataflow::task::TaskClass;
 
 /// When does a node decide it is starving and becomes a thief?
@@ -153,6 +154,13 @@ pub struct MigrateConfig {
     /// freshly stolen classes. Off by default — per-node estimators are
     /// the paper-faithful configuration.
     pub share_estimates: bool,
+    /// How thieves choose their victims (`--victim-select`):
+    /// [`VictimSelect::Uniform`] is the paper's uniform-random pick and
+    /// the default; [`VictimSelect::Targeted`] scores candidates from
+    /// decayed steal-outcome history, digest richness and link price
+    /// ([`super::VictimSelector`]). Per-victim outcome telemetry is
+    /// recorded either way.
+    pub victim_select: VictimSelect,
 }
 
 impl MigrateConfig {
@@ -185,6 +193,7 @@ impl Default for MigrateConfig {
             exec_ewma: false,
             exec_per_class: false,
             share_estimates: false,
+            victim_select: VictimSelect::Uniform,
         }
     }
 }

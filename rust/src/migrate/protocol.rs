@@ -265,6 +265,7 @@ mod tests {
             exec_ewma: false,
             exec_per_class: false,
             share_estimates: false,
+            victim_select: crate::migrate::VictimSelect::Uniform,
         }
     }
 

@@ -1,0 +1,509 @@
+//! Victim *selection* — which node a starving thief asks — as opposed
+//! to the victim *policy* ([`super::VictimPolicy`]), which is how much a
+//! victim gives away once asked.
+//!
+//! The paper's thieves pick victims uniformly at random, and that
+//! remains the default ([`VictimSelect::Uniform`], paper-faithful).
+//! `--victim-select targeted` enables the [`VictimSelector`], which
+//! scores every candidate from three signals, each maintained in O(1)
+//! per observation and consulted in O(candidates) per pick — the
+//! selector never scans a queue, its own or anyone else's:
+//!
+//! 1. **Steal-outcome history** — per-victim counts of granted,
+//!    waiting-time-denied and empty replies, exponentially decayed
+//!    ([`OUTCOME_DECAY`]) so stale verdicts fade as the run's load
+//!    balance shifts. Laplace-smoothed into a grant likelihood
+//!    ([`VictimSelector::grant_likelihood`]); an unprobed victim sits
+//!    at 0.5. This is the AAWS idea (Fernandes et al.): prefer victims
+//!    with demonstrated surplus.
+//! 2. **Queue richness** — the victim's last-shipped
+//!    [`super::EstimateDigest`] node-wide estimate, i.e. how much work
+//!    one stolen task from that victim is worth. Digest observations
+//!    age by [`DIGEST_DECAY`] per selector clock tick (lazily, via one
+//!    `powi` — no per-tick sweep), so a long-running thief is not
+//!    forever anchored to one early victim's numbers.
+//! 3. **Round-trip price** — the modeled cost of the steal itself,
+//!    `2·latency + reply_bytes/bw`, *subtracted* from the expected win.
+//!    This is the Khatiri et al. analysis (*Work Stealing with
+//!    latency*): a distant rich victim can lose to a near poor one, and
+//!    the unit test `latency_dominated_rich_victim_loses` pins the
+//!    inversion.
+//!
+//! The score is
+//!
+//! ```text
+//! score(v) = grant_likelihood(v) · expected_win_us(v) − round_trip_cost_us(v)
+//! ```
+//!
+//! and the pick is epsilon-greedy ([`DEFAULT_EPSILON`]): explore a
+//! uniform-random victim with probability ε so cold or recovered
+//! victims stay discoverable, otherwise take the argmax with uniform
+//! tie-breaking. With no history at all (or after full decay) every
+//! score ties and the selector degenerates to the paper's uniform
+//! choice — property-tested in `tests/invariants.rs`.
+
+use std::str::FromStr;
+
+use crate::util::rng::Rng;
+
+/// Per-observation decay applied to a victim's outcome counters before
+/// each new reply from it is counted: an effective memory of
+/// 1/(1−0.9) = 10 recent probes. Denials from the start of the run
+/// should not poison a victim that has since filled up (and vice
+/// versa) — UTS-style irregular graphs move their surplus around.
+pub const OUTCOME_DECAY: f64 = 0.9;
+
+/// Per-clock-tick decay of a digest observation's weight (one tick =
+/// one recorded reply at this thief). Applied lazily as
+/// `DIGEST_DECAY^age` when the weight is read, so maintenance stays
+/// O(1) per observation instead of O(victims) per tick.
+pub const DIGEST_DECAY: f64 = 0.95;
+
+/// Laplace prior mass on the grant/miss counters: one phantom grant
+/// and one phantom miss, so an unprobed victim scores a likelihood of
+/// exactly 0.5 instead of 0/0.
+pub const OUTCOME_PRIOR: f64 = 1.0;
+
+/// Weight of the thief's own fallback estimate when blending it with
+/// aged digest observations in [`VictimSelector::expected_win_us`]:
+/// one fresh digest counts as much as the local prior, and a fully
+/// aged-out digest leaves the fallback alone.
+pub const DIGEST_PRIOR: f64 = 1.0;
+
+/// Exploration rate of the epsilon-greedy pick: 1 in 10 steals probes
+/// a uniform-random victim so the outcome history never freezes.
+pub const DEFAULT_EPSILON: f64 = 0.1;
+
+/// Reply bytes priced into the round-trip cost: the 16-byte reply
+/// header, one 32-byte task descriptor and the 16-byte digest header —
+/// the marginal wire bill of a minimal *successful* steal. A constant,
+/// not a measurement: pricing must not require scanning any queue.
+pub const PRICED_REPLY_BYTES: f64 = 64.0;
+
+/// How a starving thief chooses which node to rob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VictimSelect {
+    /// Uniform random victim — the paper's protocol and the default.
+    #[default]
+    Uniform,
+    /// Score-and-argmax over the decayed outcome history, digest
+    /// richness and link price ([`VictimSelector`]).
+    Targeted,
+}
+
+impl VictimSelect {
+    /// Canonical CLI spelling; accepted back by the [`FromStr`] parser
+    /// (round-trip property-tested in `tests/invariants.rs`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            VictimSelect::Uniform => "uniform",
+            VictimSelect::Targeted => "targeted",
+        }
+    }
+}
+
+impl FromStr for VictimSelect {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" | "random" | "rand" => Ok(VictimSelect::Uniform),
+            "targeted" | "target" | "scored" => Ok(VictimSelect::Targeted),
+            _ => Err(format!(
+                "unknown victim selection '{s}' (uniform | targeted)"
+            )),
+        }
+    }
+}
+
+/// What one steal reply told the thief about its victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VictimOutcome {
+    /// The reply carried tasks.
+    Granted,
+    /// The victim had stealable tasks but its waiting-time gate
+    /// refused to part with them — a *busy* victim, worth retrying
+    /// sooner than an empty one.
+    DeniedWaitingTime,
+    /// The victim had nothing stealable at all.
+    DeniedEmpty,
+}
+
+/// Classify a steal reply from its observable fields — shared by the
+/// threaded runtime and the DES so the two label outcomes identically.
+pub fn classify_reply(got_tasks: bool, denied_by_waiting_time: bool) -> VictimOutcome {
+    if got_tasks {
+        VictimOutcome::Granted
+    } else if denied_by_waiting_time {
+        VictimOutcome::DeniedWaitingTime
+    } else {
+        VictimOutcome::DeniedEmpty
+    }
+}
+
+/// The targeted victim selector: one per thief node, fed a record per
+/// steal reply, consulted once per steal request. All state is a few
+/// `f64` per candidate; [`VictimSelector::pick`] touches each
+/// candidate exactly once and never inspects a queue.
+#[derive(Clone, Debug)]
+pub struct VictimSelector {
+    /// This thief's own index — never picked.
+    node: usize,
+    /// Total node count (candidates = `n − 1`).
+    n: usize,
+    /// Private stream for exploration and tie-breaking; per-node
+    /// ([`crate::util::rng::thief_rng`]) so the DES's shared
+    /// cost-noise stream is never perturbed.
+    rng: Rng,
+    epsilon: f64,
+    /// One-way wire latency to each candidate (µs). Uniform under the
+    /// current fabric model; kept per-victim so heterogeneous links
+    /// (and the Khatiri inversion test) price correctly.
+    latency_us: Vec<f64>,
+    bw_bytes_per_us: f64,
+    /// Decayed outcome masses, per victim.
+    grants: Vec<f64>,
+    wt_denials: Vec<f64>,
+    empties: Vec<f64>,
+    /// Weighted mean of digest `avg_us` observations, per victim…
+    richness_us: Vec<f64>,
+    /// …its decayed observation weight…
+    richness_w: Vec<f64>,
+    /// …and the clock value `richness_w` was last materialized at
+    /// (ages as `DIGEST_DECAY^(clock − stamp)` when read).
+    richness_stamp: Vec<u64>,
+    /// Advances once per recorded reply; the time base digest ages
+    /// are measured in.
+    clock: u64,
+}
+
+impl VictimSelector {
+    /// A selector with no history: every victim scores identically, so
+    /// the first picks are uniform (minus the link price, also still
+    /// uniform). `rng` should come from
+    /// [`crate::util::rng::thief_rng`] so both runtimes derive the
+    /// same per-node stream.
+    pub fn new(node: usize, n: usize, rng: Rng) -> VictimSelector {
+        VictimSelector {
+            node,
+            n,
+            rng,
+            epsilon: DEFAULT_EPSILON,
+            latency_us: vec![0.0; n],
+            bw_bytes_per_us: 1_000.0,
+            grants: vec![0.0; n],
+            wt_denials: vec![0.0; n],
+            empties: vec![0.0; n],
+            richness_us: vec![0.0; n],
+            richness_w: vec![0.0; n],
+            richness_stamp: vec![0; n],
+            clock: 0,
+        }
+    }
+
+    /// Price every candidate with the same link, matching today's
+    /// uniform fabric ([`crate::comm::LinkModel`]).
+    pub fn with_link(mut self, latency_us: f64, bw_bytes_per_us: f64) -> VictimSelector {
+        self.latency_us.fill(latency_us);
+        self.bw_bytes_per_us = bw_bytes_per_us.max(f64::MIN_POSITIVE);
+        self
+    }
+
+    pub fn with_epsilon(mut self, epsilon: f64) -> VictimSelector {
+        self.epsilon = epsilon;
+        self
+    }
+
+    /// Override one candidate's latency (heterogeneous-link tests).
+    pub fn set_latency_us(&mut self, victim: usize, latency_us: f64) {
+        self.latency_us[victim] = latency_us;
+    }
+
+    /// Feed one steal reply into the history. `digest_avg_us` is the
+    /// node-wide estimate from the reply's [`super::EstimateDigest`],
+    /// when one travelled — it refreshes the victim's richness signal.
+    /// O(1): decays only the observed victim's counters and advances
+    /// the clock (other victims' digests age lazily via the clock).
+    pub fn record(&mut self, victim: usize, outcome: VictimOutcome, digest_avg_us: Option<f64>) {
+        self.clock += 1;
+        self.grants[victim] *= OUTCOME_DECAY;
+        self.wt_denials[victim] *= OUTCOME_DECAY;
+        self.empties[victim] *= OUTCOME_DECAY;
+        match outcome {
+            VictimOutcome::Granted => self.grants[victim] += 1.0,
+            VictimOutcome::DeniedWaitingTime => self.wt_denials[victim] += 1.0,
+            VictimOutcome::DeniedEmpty => self.empties[victim] += 1.0,
+        }
+        if let Some(avg_us) = digest_avg_us {
+            if avg_us > 0.0 {
+                let aged = self.aged_digest_weight(victim);
+                let w = aged + 1.0;
+                self.richness_us[victim] =
+                    (self.richness_us[victim] * aged + avg_us) / w;
+                self.richness_w[victim] = w;
+                self.richness_stamp[victim] = self.clock;
+            }
+        }
+    }
+
+    /// The victim's digest-observation weight after lazy aging.
+    fn aged_digest_weight(&self, victim: usize) -> f64 {
+        let age = (self.clock - self.richness_stamp[victim]).min(4_096) as i32;
+        self.richness_w[victim] * DIGEST_DECAY.powi(age)
+    }
+
+    /// Laplace-smoothed probability that a request to `victim` comes
+    /// back with tasks: `(g + 1) / (g + d + e + 2)` over the decayed
+    /// masses. No history → 0.5.
+    pub fn grant_likelihood(&self, victim: usize) -> f64 {
+        let g = self.grants[victim];
+        let miss = self.wt_denials[victim] + self.empties[victim];
+        (g + OUTCOME_PRIOR) / (g + miss + 2.0 * OUTCOME_PRIOR)
+    }
+
+    /// Expected worth (µs) of one task stolen from `victim`: the aged
+    /// digest observations shrunk toward `fallback_us` — the thief's
+    /// own node-wide estimate, its best guess absent remote evidence.
+    /// Fully aged-out history returns exactly the fallback.
+    pub fn expected_win_us(&self, victim: usize, fallback_us: f64) -> f64 {
+        let w = self.aged_digest_weight(victim);
+        (w * self.richness_us[victim] + DIGEST_PRIOR * fallback_us) / (w + DIGEST_PRIOR)
+    }
+
+    /// The steal's modeled price: request out, reply back
+    /// (`2·latency`), plus the minimal granted reply's bytes at link
+    /// bandwidth. A constant per victim — no queue is consulted.
+    pub fn round_trip_cost_us(&self, victim: usize) -> f64 {
+        2.0 * self.latency_us[victim] + PRICED_REPLY_BYTES / self.bw_bytes_per_us
+    }
+
+    /// The candidate's full score (µs of expected net win).
+    pub fn score(&self, victim: usize, fallback_win_us: f64) -> f64 {
+        self.grant_likelihood(victim) * self.expected_win_us(victim, fallback_win_us)
+            - self.round_trip_cost_us(victim)
+    }
+
+    /// Choose a victim: with probability ε a uniform-random candidate
+    /// (exploration), otherwise the score argmax with uniform
+    /// tie-breaking (reservoir-sampled, so an all-tie state — no
+    /// history, or full decay on a uniform fabric — is a uniform draw
+    /// and the selector degenerates to the paper's protocol). Never
+    /// returns `self.node`. O(candidates).
+    pub fn pick(&mut self, fallback_win_us: f64) -> usize {
+        debug_assert!(self.n > 1);
+        if self.epsilon > 0.0 && self.rng.uniform() < self.epsilon {
+            return self.rng.pick_other(self.n, self.node);
+        }
+        let mut best = if self.node == 0 { 1 } else { 0 };
+        let mut best_score = f64::NEG_INFINITY;
+        let mut ties = 0u64;
+        for v in 0..self.n {
+            if v == self.node {
+                continue;
+            }
+            let s = self.score(v, fallback_win_us);
+            if s > best_score {
+                best = v;
+                best_score = s;
+                ties = 1;
+            } else if s == best_score {
+                ties += 1;
+                if self.rng.below(ties) == 0 {
+                    best = v;
+                }
+            }
+        }
+        best
+    }
+
+    /// Multiply every piece of decayed history by `factor`
+    /// (`fade(0.0)` forgets everything). Exists for the
+    /// decay-returns-to-uniform property test; the runtimes never call
+    /// it — their decay is the per-observation [`OUTCOME_DECAY`] /
+    /// [`DIGEST_DECAY`] machinery.
+    pub fn fade(&mut self, factor: f64) {
+        for v in 0..self.n {
+            self.grants[v] *= factor;
+            self.wt_denials[v] *= factor;
+            self.empties[v] *= factor;
+            self.richness_w[v] *= factor;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::thief_rng;
+
+    fn selector(node: usize, n: usize) -> VictimSelector {
+        VictimSelector::new(node, n, thief_rng(42, node)).with_link(1.0, 1_000.0)
+    }
+
+    #[test]
+    fn select_labels_round_trip() {
+        for s in [VictimSelect::Uniform, VictimSelect::Targeted] {
+            assert_eq!(s.label().parse::<VictimSelect>().unwrap(), s);
+        }
+        assert_eq!("RANDOM".parse::<VictimSelect>().unwrap(), VictimSelect::Uniform);
+        assert_eq!("scored".parse::<VictimSelect>().unwrap(), VictimSelect::Targeted);
+        assert!("nearest".parse::<VictimSelect>().is_err());
+        assert_eq!(VictimSelect::default(), VictimSelect::Uniform);
+    }
+
+    #[test]
+    fn classify_reply_covers_all_outcomes() {
+        assert_eq!(classify_reply(true, false), VictimOutcome::Granted);
+        // A granted reply wins even if the flag were set (it never is).
+        assert_eq!(classify_reply(true, true), VictimOutcome::Granted);
+        assert_eq!(classify_reply(false, true), VictimOutcome::DeniedWaitingTime);
+        assert_eq!(classify_reply(false, false), VictimOutcome::DeniedEmpty);
+    }
+
+    #[test]
+    fn cold_selector_scores_tie_and_grant_likelihood_is_half() {
+        let s = selector(0, 4);
+        for v in 1..4 {
+            assert_eq!(s.grant_likelihood(v), 0.5);
+            assert_eq!(s.score(v, 100.0), s.score(1, 100.0));
+        }
+        // Expected win with no digest history is exactly the fallback.
+        assert_eq!(s.expected_win_us(2, 123.0), 123.0);
+    }
+
+    #[test]
+    fn granting_victim_outscores_denying_victim() {
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        for _ in 0..5 {
+            s.record(1, VictimOutcome::Granted, Some(50.0));
+            s.record(2, VictimOutcome::DeniedEmpty, None);
+        }
+        assert!(s.grant_likelihood(1) > 0.8, "{}", s.grant_likelihood(1));
+        assert!(s.grant_likelihood(2) < 0.2, "{}", s.grant_likelihood(2));
+        assert!(s.score(1, 50.0) > s.score(2, 50.0));
+        for _ in 0..20 {
+            assert_eq!(s.pick(50.0), 1);
+        }
+    }
+
+    #[test]
+    fn digest_richness_prefers_fat_task_victims() {
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        // Both victims grant equally; victim 1's tasks are 100× fatter.
+        for _ in 0..4 {
+            s.record(1, VictimOutcome::Granted, Some(1_000.0));
+            s.record(2, VictimOutcome::Granted, Some(10.0));
+        }
+        assert!(s.expected_win_us(1, 10.0) > s.expected_win_us(2, 10.0));
+        assert_eq!(s.pick(10.0), 1);
+    }
+
+    #[test]
+    fn latency_dominated_rich_victim_loses() {
+        // The Khatiri et al. inversion: a rich victim behind a long
+        // link prices below a poor one next door.
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        for _ in 0..4 {
+            s.record(1, VictimOutcome::Granted, Some(10_000.0)); // rich…
+            s.record(2, VictimOutcome::Granted, Some(100.0)); // …poor
+        }
+        assert_eq!(s.pick(100.0), 1, "equal links: richness wins");
+        // Push the rich victim 20 ms away (round trip 40 ms ≫ win).
+        s.set_latency_us(1, 20_000.0);
+        assert!(s.score(1, 100.0) < s.score(2, 100.0));
+        assert_eq!(s.pick(100.0), 2, "latency prices the rich victim out");
+    }
+
+    #[test]
+    fn outcome_history_decays() {
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        for _ in 0..10 {
+            s.record(1, VictimOutcome::DeniedEmpty, None);
+        }
+        let poisoned = s.grant_likelihood(1);
+        assert!(poisoned < 0.2);
+        // The victim fills up: a few grants outweigh the decayed
+        // denial history well before 10 more probes.
+        for _ in 0..5 {
+            s.record(1, VictimOutcome::Granted, Some(50.0));
+        }
+        assert!(
+            s.grant_likelihood(1) > 0.6,
+            "decay forgives: {}",
+            s.grant_likelihood(1)
+        );
+    }
+
+    #[test]
+    fn digest_observations_age_toward_fallback() {
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        s.record(1, VictimOutcome::Granted, Some(10_000.0));
+        let fresh = s.expected_win_us(1, 10.0);
+        assert!(fresh > 4_000.0, "fresh digest dominates: {fresh}");
+        // 200 clock ticks of unrelated traffic age the observation out.
+        for _ in 0..200 {
+            s.record(2, VictimOutcome::DeniedEmpty, None);
+        }
+        let stale = s.expected_win_us(1, 10.0);
+        assert!(stale < 20.0, "aged digest ≈ fallback: {stale}");
+        assert!(stale >= 10.0);
+    }
+
+    #[test]
+    fn fade_returns_selector_to_uniform() {
+        let mut s = selector(0, 4).with_epsilon(0.0);
+        for _ in 0..6 {
+            s.record(1, VictimOutcome::Granted, Some(500.0));
+            s.record(2, VictimOutcome::DeniedEmpty, None);
+            s.record(3, VictimOutcome::DeniedWaitingTime, None);
+        }
+        assert_eq!(s.pick(50.0), 1);
+        s.fade(0.0);
+        for v in 1..4 {
+            assert_eq!(s.grant_likelihood(v), 0.5);
+            assert_eq!(s.expected_win_us(v, 50.0), 50.0);
+            assert_eq!(s.score(v, 50.0), s.score(1, 50.0));
+        }
+        // All-tie picks are a uniform draw: every victim shows up.
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[s.pick(50.0)] = true;
+        }
+        assert!(!seen[0], "never self");
+        assert!(seen[1] && seen[2] && seen[3], "uniform coverage: {seen:?}");
+    }
+
+    #[test]
+    fn pick_never_self_and_explores_everywhere_at_full_epsilon() {
+        let mut s = selector(2, 6).with_epsilon(1.0);
+        let mut seen = [false; 6];
+        for _ in 0..500 {
+            let v = s.pick(10.0);
+            assert_ne!(v, 2);
+            seen[v] = true;
+        }
+        for (v, hit) in seen.iter().enumerate() {
+            assert_eq!(*hit, v != 2, "victim {v}");
+        }
+    }
+
+    #[test]
+    fn identical_history_gives_identical_picks() {
+        let mut a = selector(0, 5).with_epsilon(0.0);
+        let mut b = selector(0, 5).with_epsilon(0.0);
+        let feed = |s: &mut VictimSelector| {
+            s.record(1, VictimOutcome::Granted, Some(300.0));
+            s.record(2, VictimOutcome::DeniedWaitingTime, None);
+            s.record(3, VictimOutcome::DeniedEmpty, None);
+            s.record(4, VictimOutcome::Granted, None);
+        };
+        feed(&mut a);
+        feed(&mut b);
+        for v in 1..5 {
+            assert_eq!(a.score(v, 80.0), b.score(v, 80.0));
+        }
+        for _ in 0..50 {
+            assert_eq!(a.pick(80.0), b.pick(80.0));
+        }
+    }
+}

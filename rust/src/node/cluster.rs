@@ -11,13 +11,13 @@ use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    class_estimate_update, ewma_update, exec_estimate_seeded_us, is_starving, merge_estimate,
-    protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig, StarvationView,
-    StealStats,
+    class_estimate_update, classify_reply, ewma_update, exec_estimate_seeded_us, is_starving,
+    merge_estimate, protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig,
+    StarvationView, StealStats, VictimOutcome, VictimSelect, VictimSelector,
 };
 use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
 use crate::term::{SafraAction, SafraState};
-use crate::util::rng::Rng;
+use crate::util::rng::thief_rng;
 
 /// Real-mode run configuration.
 #[derive(Clone, Copy, Debug)]
@@ -111,6 +111,17 @@ struct NodeState {
     activation_ready_batches: AtomicU64,
     busy_ns: AtomicU64,
     steal: Mutex<StealStats>,
+    /// Thief-side per-victim reply outcomes (index = victim node):
+    /// granted / waiting-time-denied / empty, recorded for every reply
+    /// regardless of `--victim-select` so the targeted-vs-uniform
+    /// ablation is observable without a debugger.
+    victim_grants: Vec<AtomicU64>,
+    victim_wt_denials: Vec<AtomicU64>,
+    victim_empties: Vec<AtomicU64>,
+    /// The targeted victim selector (`--victim-select targeted`):
+    /// picked by the migrate thread, fed replies by the comm thread.
+    /// Uniform mode never takes this lock.
+    victim_sel: Mutex<VictimSelector>,
     inflight_steals: AtomicUsize,
     safra: Mutex<SafraState>,
     shutdown: AtomicBool,
@@ -171,6 +182,13 @@ impl Cluster {
                     activation_ready_batches: AtomicU64::new(0),
                     busy_ns: AtomicU64::new(0),
                     steal: Mutex::new(StealStats::default()),
+                    victim_grants: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                    victim_wt_denials: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                    victim_empties: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                    victim_sel: Mutex::new(
+                        VictimSelector::new(i, n.max(2), thief_rng(cfg.seed, i))
+                            .with_link(cfg.link.latency_us, cfg.link.bw_bytes_per_us),
+                    ),
                     inflight_steals: AtomicUsize::new(0),
                     safra: Mutex::new(SafraState::new(NodeId(i as u32), n)),
                     shutdown: AtomicBool::new(false),
@@ -283,6 +301,21 @@ impl Cluster {
                             .activation_ready_batches
                             .load(Ordering::Relaxed),
                         steal: *nd.steal.lock().unwrap(),
+                        victim_grants: nd
+                            .victim_grants
+                            .iter()
+                            .map(|a| a.load(Ordering::Relaxed))
+                            .collect(),
+                        victim_wt_denials: nd
+                            .victim_wt_denials
+                            .iter()
+                            .map(|a| a.load(Ordering::Relaxed))
+                            .collect(),
+                        victim_empties: nd
+                            .victim_empties
+                            .iter()
+                            .map(|a| a.load(Ordering::Relaxed))
+                            .collect(),
                         sched: nd.queue.stats(),
                         polls: std::mem::take(&mut nd.polls.lock().unwrap()),
                         arrival_ready: std::mem::take(&mut nd.arrival_ready.lock().unwrap()),
@@ -568,6 +601,8 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
             if env.msg.is_basic() {
                 node.safra.lock().unwrap().on_receive();
             }
+            // A steal reply's sender IS the victim it reports on.
+            let src = env.src;
             match env.msg {
                 Msg::Activate { task } => activate_local(&node, graph, task),
                 Msg::ActivateBatch { tasks } => activate_local_batch(&node, graph, &tasks),
@@ -631,11 +666,34 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                             tasks: decision.tasks,
                             payload_bytes: decision.payload_bytes,
                             digest,
+                            denied_by_waiting_time: decision.denied_by_waiting_time,
                         },
                     );
                 }
-                Msg::StealReply { tasks, digest, .. } => {
+                Msg::StealReply {
+                    tasks,
+                    digest,
+                    denied_by_waiting_time,
+                    ..
+                } => {
                     node.inflight_steals.fetch_sub(1, Ordering::SeqCst);
+                    // Per-victim outcome telemetry (always) and the
+                    // targeted selector's history (only when it will be
+                    // consulted — uniform mode never takes the lock).
+                    let outcome = classify_reply(!tasks.is_empty(), denied_by_waiting_time);
+                    let table = match outcome {
+                        VictimOutcome::Granted => &node.victim_grants,
+                        VictimOutcome::DeniedWaitingTime => &node.victim_wt_denials,
+                        VictimOutcome::DeniedEmpty => &node.victim_empties,
+                    };
+                    table[src.idx()].fetch_add(1, Ordering::Relaxed);
+                    if sh.cfg.migrate.victim_select == VictimSelect::Targeted {
+                        node.victim_sel.lock().unwrap().record(
+                            src.idx(),
+                            outcome,
+                            digest.as_ref().map(|d| d.avg_us),
+                        );
+                    }
                     // Merge the victim's estimates BEFORE the stolen
                     // tasks enter the queue: the very next gate decision
                     // on this node must already see the seeded table.
@@ -714,7 +772,7 @@ fn perform_safra_action(sh: &Arc<Shared>, node: &Arc<NodeState>, action: SafraAc
 }
 
 fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
-    let mut rng = Rng::new(sh.cfg.seed ^ (0x5EA1 + node.id.idx() as u64));
+    let mut rng = thief_rng(sh.cfg.seed, node.id.idx());
     let n = sh.nodes.len();
     let poll = Duration::from_nanos((sh.cfg.migrate.poll_interval_us * 1e3) as u64);
     loop {
@@ -738,7 +796,25 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
         {
             node.inflight_steals.fetch_add(1, Ordering::SeqCst);
             node.steal.lock().unwrap().requests_sent += 1;
-            let victim = NodeId(rng.pick_other(n, node.id.idx()) as u32);
+            let victim = match sh.cfg.migrate.victim_select {
+                VictimSelect::Uniform => NodeId(rng.pick_other(n, node.id.idx()) as u32),
+                VictimSelect::Targeted => {
+                    // The selector's fallback win per stolen task is the
+                    // thief's own node-wide estimate — the same quantity
+                    // the victim-side gate runs on, digest-seeded while
+                    // this node is still cold under --share-estimates.
+                    let done = node.tasks_done.load(Ordering::SeqCst);
+                    let ewma = f64::from_bits(node.exec_ewma_us_bits.load(Ordering::Relaxed));
+                    let fallback = exec_estimate_seeded_us(
+                        sh.cfg.migrate.exec_ewma,
+                        ewma,
+                        node.exec_sum_ns.load(Ordering::SeqCst) as f64 / 1e3,
+                        done,
+                        f64::from_bits(node.remote_avg_us_bits.load(Ordering::Relaxed)),
+                    );
+                    NodeId(node.victim_sel.lock().unwrap().pick(fallback) as u32)
+                }
+            };
             node.safra.lock().unwrap().on_send();
             sh.net
                 .send(node.id, victim, Msg::StealRequest { thief: node.id });
@@ -1112,6 +1188,64 @@ mod tests {
             adoptions > 0,
             "cold thieves must adopt the UTS class estimate"
         );
+    }
+
+    /// `--victim-select targeted` in the threaded runtime: every task
+    /// still executes exactly once, steals land, and the per-victim
+    /// outcome telemetry obeys its invariants — grants per node equal
+    /// that node's successful steals (same code path), a node never
+    /// records an outcome against itself, and at most `max_inflight`
+    /// requests per node can be unanswered at shutdown.
+    #[test]
+    fn targeted_victim_selection_completes_and_accounts() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 30.0,
+                    share_estimates: true,
+                    victim_select: VictimSelect::Targeted,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
+                30_000.0
+            })),
+        );
+        assert_eq!(r.tasks_total_executed(), size);
+        let steals = r.total_steals();
+        assert!(steals.successful_steals > 0, "steals must land: {steals:?}");
+        for (ix, n) in r.nodes.iter().enumerate() {
+            let grants: u64 = n.victim_grants.iter().sum();
+            assert_eq!(
+                grants, n.steal.successful_steals,
+                "node {ix}: per-victim grants mirror successful steals"
+            );
+            assert_eq!(n.victim_grants[ix], 0, "node {ix}: never robs itself");
+            assert_eq!(n.victim_wt_denials[ix] + n.victim_empties[ix], 0);
+            let replies: u64 = grants
+                + n.victim_wt_denials.iter().sum::<u64>()
+                + n.victim_empties.iter().sum::<u64>();
+            assert!(
+                replies <= n.steal.requests_sent
+                    && n.steal.requests_sent - replies <= 1,
+                "node {ix}: ≤ max_inflight requests unanswered at shutdown \
+                 ({replies} of {})",
+                n.steal.requests_sent
+            );
+        }
     }
 
     /// `--exec-ewma` in the threaded runtime: the gate runs on the

@@ -28,12 +28,12 @@ use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
-    class_estimate_update, ewma_update, exec_estimate_seeded_us, is_starving, merge_estimate,
-    protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig, StarvationView,
-    StealStats,
+    class_estimate_update, classify_reply, ewma_update, exec_estimate_seeded_us, is_starving,
+    merge_estimate, protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig,
+    StarvationView, StealStats, VictimOutcome, VictimSelect, VictimSelector,
 };
 use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
-use crate::util::rng::Rng;
+use crate::util::rng::{thief_rng, Rng};
 
 use super::cost::CostModel;
 
@@ -102,10 +102,16 @@ enum SimMsg {
     /// The DES mirror of `comm::Msg::StealReply`: under
     /// `--share-estimates` a granted reply also carries the victim's
     /// [`EstimateDigest`], priced into the wire model exactly like the
-    /// threaded runtime's message.
+    /// threaded runtime's message. `victim` is the sender (the threaded
+    /// runtime reads it off the envelope) and `denied_by_waiting_time`
+    /// mirrors the wire flag, so the thief can attribute the outcome to
+    /// its per-victim history — both are header metadata, free on the
+    /// modeled wire.
     StealReply {
+        victim: NodeId,
         tasks: Vec<TaskDesc>,
         digest: Option<EstimateDigest>,
+        denied_by_waiting_time: bool,
     },
 }
 
@@ -194,6 +200,17 @@ struct SimNode {
     activation_ready_batches: u64,
     busy_us: f64,
     steal: StealStats,
+    /// Thief-side per-victim reply outcomes (index = victim node),
+    /// recorded for every reply regardless of `--victim-select` —
+    /// the DES mirror of the threaded runtime's atomic tables.
+    victim_grants: Vec<u64>,
+    victim_wt_denials: Vec<u64>,
+    victim_empties: Vec<u64>,
+    /// The targeted victim selector (`--victim-select targeted`). Its
+    /// RNG is the per-node thief stream ([`thief_rng`]), so targeted
+    /// mode never perturbs the simulator's shared cost-noise stream —
+    /// default-off runs stay bit-identical.
+    victim_sel: VictimSelector,
     inflight_steals: usize,
     polls: Vec<PollSample>,
     arrival_ready: Vec<PollSample>,
@@ -235,7 +252,10 @@ impl Simulator {
         let n = graph.num_nodes();
         let mut rng = Rng::new(cfg.seed);
         let nodes = (0..n)
-            .map(|_| SimNode {
+            .map(|i| SimNode {
+                // The slow-factor draw stays on the shared stream in the
+                // same order as ever; the selector gets its own per-node
+                // thief stream so default-off runs are bit-identical.
                 slow_factor: if cost.node_sigma > 0.0 {
                     rng.lognormal_noise(cost.node_sigma)
                 } else {
@@ -259,6 +279,11 @@ impl Simulator {
                 activation_ready_batches: 0,
                 busy_us: 0.0,
                 steal: StealStats::default(),
+                victim_grants: vec![0; n],
+                victim_wt_denials: vec![0; n],
+                victim_empties: vec![0; n],
+                victim_sel: VictimSelector::new(i, n.max(2), thief_rng(cfg.seed, i))
+                    .with_link(cfg.link.latency_us, cfg.link.bw_bytes_per_us),
                 inflight_steals: 0,
                 polls: Vec::new(),
                 arrival_ready: Vec::new(),
@@ -537,7 +562,27 @@ impl Simulator {
             )
         };
         if starving && can_request {
-            let victim = NodeId(self.rng.pick_other(self.nodes.len(), node_id.idx()) as u32);
+            let victim = match self.migrate.victim_select {
+                // The paper's protocol, on the simulator's shared
+                // stream — the exact draw sequence of every prior PR.
+                VictimSelect::Uniform => {
+                    NodeId(self.rng.pick_other(self.nodes.len(), node_id.idx()) as u32)
+                }
+                VictimSelect::Targeted => {
+                    // Fallback win per stolen task = the thief's own
+                    // node-wide estimate (digest-seeded while cold) —
+                    // the same quantity the victim-side gate runs on.
+                    let node = &self.nodes[node_id.idx()];
+                    let fallback = exec_estimate_seeded_us(
+                        self.migrate.exec_ewma,
+                        node.exec_ewma_us,
+                        node.exec_sum_us,
+                        node.tasks_done,
+                        node.remote_avg_us,
+                    );
+                    NodeId(self.nodes[node_id.idx()].victim_sel.pick(fallback) as u32)
+                }
+            };
             {
                 let node = &mut self.nodes[node_id.idx()];
                 node.inflight_steals += 1;
@@ -612,8 +657,10 @@ impl Simulator {
             EventKind::Deliver {
                 dst: thief,
                 msg: SimMsg::StealReply {
+                    victim: victim_id,
                     tasks: decision.tasks,
                     digest,
+                    denied_by_waiting_time: decision.denied_by_waiting_time,
                 },
             },
         );
@@ -622,14 +669,29 @@ impl Simulator {
     fn on_steal_reply(
         &mut self,
         node_id: NodeId,
+        victim: NodeId,
         tasks: Vec<TaskDesc>,
         digest: Option<EstimateDigest>,
+        denied_by_waiting_time: bool,
     ) {
         let graph = self.graph.clone();
         self.tasks_in_transit -= tasks.len() as u64;
         {
             let node = &mut self.nodes[node_id.idx()];
             node.inflight_steals = node.inflight_steals.saturating_sub(1);
+            // Per-victim outcome telemetry (always) and, under
+            // targeted selection, the selector's decayed history —
+            // mirroring the threaded comm loop's reply arm.
+            let outcome = classify_reply(!tasks.is_empty(), denied_by_waiting_time);
+            match outcome {
+                VictimOutcome::Granted => node.victim_grants[victim.idx()] += 1,
+                VictimOutcome::DeniedWaitingTime => node.victim_wt_denials[victim.idx()] += 1,
+                VictimOutcome::DeniedEmpty => node.victim_empties[victim.idx()] += 1,
+            }
+            if self.migrate.victim_select == VictimSelect::Targeted {
+                node.victim_sel
+                    .record(victim.idx(), outcome, digest.as_ref().map(|d| d.avg_us));
+            }
             // Merge the victim's estimates BEFORE the stolen tasks enter
             // the queue, so the next gate decision on this node already
             // sees the seeded table.
@@ -711,9 +773,12 @@ impl Simulator {
                             self.activate_batch_at(dst, &tasks);
                         }
                         SimMsg::StealRequest { thief } => self.on_steal_request(dst, thief),
-                        SimMsg::StealReply { tasks, digest } => {
-                            self.on_steal_reply(dst, tasks, digest)
-                        }
+                        SimMsg::StealReply {
+                            victim,
+                            tasks,
+                            digest,
+                            denied_by_waiting_time,
+                        } => self.on_steal_reply(dst, victim, tasks, digest, denied_by_waiting_time),
                     }
                 }
                 EventKind::Poll { node } => self.on_poll(node),
@@ -757,6 +822,9 @@ impl Simulator {
                     digest_class_adoptions: n.digest_class_adoptions,
                     activation_ready_batches: n.activation_ready_batches,
                     steal: n.steal,
+                    victim_grants: n.victim_grants,
+                    victim_wt_denials: n.victim_wt_denials,
+                    victim_empties: n.victim_empties,
                     sched: n.queue.stats(),
                     polls: n.polls,
                     arrival_ready: n.arrival_ready,
@@ -855,6 +923,7 @@ mod tests {
                         exec_ewma: gate,
                         exec_per_class: gate,
                         share_estimates: gate,
+                        victim_select: VictimSelect::Uniform,
                     };
                     let r = sim(chol(10, 4), mc, 7, 2);
                     assert_eq!(
@@ -1339,6 +1408,90 @@ mod tests {
             unshared.nodes[1].steal.waiting_time_denials > 0,
             "cold node 1 gates on the 1 µs fallback and wrongly denies \
              the same request"
+        );
+    }
+
+    /// `--victim-select targeted` in the DES: completion, determinism,
+    /// and exact per-victim reply accounting. The DES heap drains
+    /// fully, so — unlike the threaded runtime, where `max_inflight`
+    /// requests can be unanswered at shutdown — every request has a
+    /// recorded outcome: per node, grants + denials + empties equals
+    /// requests sent, and grants alone equal successful steals.
+    /// Uniform mode records the same telemetry.
+    #[test]
+    fn targeted_selection_completes_deterministic_and_accounts() {
+        let mk_graph = || {
+            Arc::new(UtsGraph::new(UtsParams {
+                b0: 32,
+                m: 4,
+                q: 0.3,
+                g: 50_000.0,
+                seed: 5,
+                nodes: 4,
+                max_depth: 24,
+            }))
+        };
+        for select in [VictimSelect::Uniform, VictimSelect::Targeted] {
+            let mc = MigrateConfig {
+                poll_interval_us: 20.0,
+                share_estimates: true,
+                victim_select: select,
+                ..MigrateConfig::default()
+            };
+            let g = mk_graph();
+            let size = g.tree_size(10_000_000);
+            let a = sim(g, mc, 3, 4);
+            assert_eq!(a.tasks_total_executed(), size, "{select:?}");
+            assert!(a.total_steals().successful_steals > 0, "{select:?}");
+            for (ix, n) in a.nodes.iter().enumerate() {
+                let grants: u64 = n.victim_grants.iter().sum();
+                assert_eq!(
+                    grants, n.steal.successful_steals,
+                    "{select:?} node {ix}: grants mirror successful steals"
+                );
+                let replies: u64 = grants
+                    + n.victim_wt_denials.iter().sum::<u64>()
+                    + n.victim_empties.iter().sum::<u64>();
+                assert_eq!(
+                    replies, n.steal.requests_sent,
+                    "{select:?} node {ix}: the heap drains every reply"
+                );
+                assert_eq!(
+                    n.victim_grants[ix] + n.victim_wt_denials[ix] + n.victim_empties[ix],
+                    0,
+                    "{select:?} node {ix}: never robs itself"
+                );
+            }
+            let b = sim(mk_graph(), mc, 3, 4);
+            assert_eq!(a.makespan_us, b.makespan_us, "{select:?}: deterministic");
+            assert_eq!(a.events, b.events, "{select:?}");
+            assert_eq!(
+                a.total_steals().successful_steals,
+                b.total_steals().successful_steals,
+                "{select:?}"
+            );
+        }
+    }
+
+    /// Default-off really is paper-faithful: a uniform-mode run built
+    /// by a binary that *contains* the targeted machinery must be
+    /// bit-identical to the PR 5 behavior — in particular the victim
+    /// sequence, and therefore makespan, events and steal counts, must
+    /// not shift by a single shared-stream RNG draw.
+    #[test]
+    fn uniform_mode_matches_explicit_default() {
+        let a = sim(chol(10, 4), MigrateConfig::default(), 7, 2);
+        let explicit = MigrateConfig {
+            victim_select: VictimSelect::Uniform,
+            ..MigrateConfig::default()
+        };
+        let b = sim(chol(10, 4), explicit, 7, 2);
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.deliver_events, b.deliver_events);
+        assert_eq!(
+            a.total_steals().successful_steals,
+            b.total_steals().successful_steals
         );
     }
 

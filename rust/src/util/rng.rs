@@ -131,6 +131,16 @@ impl Rng {
     }
 }
 
+/// The per-node thief-side stream: seed `run_seed ^ (0x5EA1 + node)`.
+/// One derivation, called by the threaded runtime's migrate thread and
+/// the DES's targeted victim selectors alike, so uniform-mode victim
+/// sequences (and targeted-mode exploration draws) are identical by
+/// construction across the two runtimes instead of by two hand-rolled
+/// copies of the same expression.
+pub fn thief_rng(run_seed: u64, node_idx: usize) -> Rng {
+    Rng::new(run_seed ^ (0x5EA1 + node_idx as u64))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +210,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn thief_rng_matches_hand_rolled_derivation() {
+        // The derivation both runtimes hand-rolled before PR 6; the
+        // helper must reproduce it exactly or uniform-mode victim
+        // sequences (and figure outputs) change.
+        for (seed, idx) in [(0u64, 0usize), (7, 3), (0xC404, 12), (u64::MAX, 255)] {
+            let mut legacy = Rng::new(seed ^ (0x5EA1 + idx as u64));
+            let mut helper = thief_rng(seed, idx);
+            for _ in 0..64 {
+                assert_eq!(legacy.next_u64(), helper.next_u64());
+            }
+        }
+        // Distinct nodes get distinct streams.
+        assert_ne!(thief_rng(7, 0).next_u64(), thief_rng(7, 1).next_u64());
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use parsteal::comm::LinkModel;
 use parsteal::dataflow::ttg::TaskGraph;
-use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use parsteal::node::{Cluster, ClusterConfig, NullExecutor, SpinExecutor};
 use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
@@ -91,6 +91,7 @@ fn real_runtime_steals_preserve_exactly_once() {
                         exec_ewma: false,
                         exec_per_class: false,
                         share_estimates: false,
+                        victim_select: VictimSelect::Uniform,
                     },
                     seed: 5,
                     record_polls: false,
@@ -401,6 +402,95 @@ fn share_estimates_des_and_threaded_agree() {
                 // Flag off (or nothing granted): no digests anywhere.
                 assert_eq!(sim.digest_merges_total(), 0, "{tag}: DES no digests");
                 assert_eq!(real.digest_merges_total(), 0, "{tag}: threaded no digests");
+            }
+        }
+    }
+}
+
+/// `--victim-select targeted` equivalence between the runtimes, swept
+/// over both selection modes: every task still executes exactly once,
+/// steals land in both runtimes, and each runtime's per-victim outcome
+/// tables are internally consistent (grants mirror successful steals,
+/// no node ever records an outcome against itself). The two runtimes
+/// differ in timing, so the sweep checks structural invariants, not
+/// equal victim sequences.
+#[test]
+fn targeted_victim_selection_des_and_threaded_agree() {
+    let mk_uts = || {
+        Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }))
+    };
+    for select in [VictimSelect::Uniform, VictimSelect::Targeted] {
+        let mc = MigrateConfig {
+            poll_interval_us: 20.0,
+            share_estimates: true,
+            victim_select: select,
+            ..Default::default()
+        };
+        let g = mk_uts();
+        let size = g.tree_size(10_000_000);
+        let sim = Simulator::new(
+            g,
+            SimConfig {
+                workers_per_node: 2,
+                link: LinkModel::cluster(),
+                seed: 4,
+                max_events: u64::MAX,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
+            },
+            CostModel::default_calibrated(),
+            mc,
+            0,
+        )
+        .run();
+        let real = Cluster::run(
+            mk_uts(),
+            ClusterConfig {
+                workers_per_node: 2,
+                link: LinkModel::ideal(),
+                migrate: mc,
+                seed: 4,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
+            },
+            Arc::new(SpinExecutor::new(
+                CostModel::default_calibrated(),
+                0,
+                |_| 30_000.0,
+            )),
+        );
+        let tag = format!("select={select:?}");
+        assert_eq!(sim.tasks_total_executed(), size, "{tag}: DES");
+        assert_eq!(real.tasks_total_executed(), size, "{tag}: threaded");
+        assert!(sim.total_steals().successful_steals > 0, "{tag}: DES steals");
+        assert!(
+            real.total_steals().successful_steals > 0,
+            "{tag}: threaded steals"
+        );
+        for report in [&sim, &real] {
+            for (ix, n) in report.nodes.iter().enumerate() {
+                let grants: u64 = n.victim_grants.iter().sum();
+                assert_eq!(
+                    grants, n.steal.successful_steals,
+                    "{tag} node {ix}: grants mirror successful steals"
+                );
+                assert_eq!(
+                    n.victim_grants[ix] + n.victim_wt_denials[ix] + n.victim_empties[ix],
+                    0,
+                    "{tag} node {ix}: never an outcome against itself"
+                );
             }
         }
     }

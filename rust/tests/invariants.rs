@@ -7,7 +7,10 @@ use std::sync::Arc;
 use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::TaskDesc;
 use parsteal::dataflow::ttg::TaskGraph;
-use parsteal::migrate::{ExecSnapshot, MigrateConfig, ThiefPolicy, VictimPolicy};
+use parsteal::migrate::{
+    ExecSnapshot, MigrateConfig, ThiefPolicy, VictimOutcome, VictimPolicy, VictimSelect,
+    VictimSelector,
+};
 use parsteal::prop_assert;
 use parsteal::sched::{SchedBackend, SchedQueue, TaskMeta};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
@@ -35,6 +38,11 @@ fn random_migrate(rng: &mut Rng) -> MigrateConfig {
         exec_ewma: rng.uniform() < 0.5,
         exec_per_class: rng.uniform() < 0.5,
         share_estimates: rng.uniform() < 0.5,
+        victim_select: if rng.uniform() < 0.5 {
+            VictimSelect::Uniform
+        } else {
+            VictimSelect::Targeted
+        },
     }
 }
 
@@ -452,7 +460,122 @@ fn prop_policy_label_fromstr_round_trip() {
                     "label '{label}' round-tripped to {parsed:?}"
                 );
             }
+            for select in [VictimSelect::Uniform, VictimSelect::Targeted] {
+                let label = select.label();
+                let parsed = label
+                    .parse::<VictimSelect>()
+                    .map_err(|e| format!("label '{label}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == select,
+                    "label '{label}' round-tripped to {parsed:?}"
+                );
+            }
+            for (spelling, want) in [
+                ("random", VictimSelect::Uniform),
+                ("rand", VictimSelect::Uniform),
+                ("UNIFORM", VictimSelect::Uniform),
+                ("target", VictimSelect::Targeted),
+                ("scored", VictimSelect::Targeted),
+                ("Targeted", VictimSelect::Targeted),
+            ] {
+                let parsed = spelling
+                    .parse::<VictimSelect>()
+                    .map_err(|e| format!("spelling '{spelling}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == want,
+                    "'{spelling}' parsed to {parsed:?}, wanted {want:?}"
+                );
+            }
+            prop_assert!(
+                "nearest".parse::<VictimSelect>().is_err(),
+                "unknown selection spellings must be rejected"
+            );
             Ok(())
         },
     );
+}
+
+/// Targeted victim selection is a pure function of its history: feeding
+/// two selectors the same random reply sequence gives identical scores
+/// and identical greedy picks, and fading the history to zero returns
+/// the selector to the uniform regime — every candidate scores the same
+/// and repeated picks cover all of them (the paper's protocol as the
+/// fixed point of full decay).
+#[test]
+fn prop_victim_selector_deterministic_and_decays_to_uniform() {
+    use parsteal::util::rng::thief_rng;
+    check(
+        "victim-selector-determinism",
+        Config {
+            cases: 60,
+            max_size: 120,
+            seed: 0x7A26E7,
+        },
+        |rng, size| {
+            let n = 2 + rng.below(7) as usize;
+            let node = rng.below(n as u64) as usize;
+            let seed = rng.next_u64();
+            let mk = || {
+                VictimSelector::new(node, n, thief_rng(seed, node))
+                    .with_link(rng_free_latency(), 1_000.0)
+                    .with_epsilon(0.0)
+            };
+            let mut a = mk();
+            let mut b = mk();
+            let fallback = 1.0 + rng.uniform() * 500.0;
+            for _ in 0..size.max(1) {
+                let victim = {
+                    // Any candidate but the thief itself.
+                    let r = rng.below(n as u64 - 1) as usize;
+                    if r >= node { r + 1 } else { r }
+                };
+                let outcome = match rng.below(3) {
+                    0 => VictimOutcome::Granted,
+                    1 => VictimOutcome::DeniedWaitingTime,
+                    _ => VictimOutcome::DeniedEmpty,
+                };
+                let digest = (rng.uniform() < 0.5).then(|| 1.0 + rng.uniform() * 2_000.0);
+                a.record(victim, outcome, digest);
+                b.record(victim, outcome, digest);
+            }
+            for v in (0..n).filter(|v| *v != node) {
+                let (sa, sb) = (a.score(v, fallback), b.score(v, fallback));
+                prop_assert!(
+                    sa == sb,
+                    "identical history, different scores for {v}: {sa} vs {sb}"
+                );
+            }
+            for _ in 0..10 {
+                let (pa, pb) = (a.pick(fallback), b.pick(fallback));
+                prop_assert!(pa == pb, "identical history, different picks: {pa} vs {pb}");
+                prop_assert!(pa != node, "picked itself");
+            }
+            // Full decay: back to the uniform regime.
+            a.fade(0.0);
+            let candidates: Vec<usize> = (0..n).filter(|v| *v != node).collect();
+            let base = a.score(candidates[0], fallback);
+            for &v in &candidates {
+                prop_assert!(
+                    a.score(v, fallback) == base,
+                    "faded selector must score all candidates equally"
+                );
+            }
+            let mut seen = vec![false; n];
+            for _ in 0..64 * n {
+                let v = a.pick(fallback);
+                prop_assert!(v != node, "faded pick chose itself");
+                seen[v] = true;
+            }
+            for &v in &candidates {
+                prop_assert!(seen[v], "faded picks must cover victim {v} (uniform draw)");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Uniform link price for the determinism property: a constant, so the
+/// two selectors under comparison share it by construction.
+fn rng_free_latency() -> f64 {
+    5.0
 }
