@@ -131,6 +131,7 @@ fn main() -> anyhow::Result<()> {
                 sched: SchedBackend::Central,
                 batch_activations: true,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             ex.executor(),
         );

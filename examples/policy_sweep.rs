@@ -63,6 +63,7 @@ fn main() {
                 sched,
                 batch_activations: true,
                 pool_floor: POOL_FLOOR,
+                faults: Default::default(),
             },
             CostModel::default_calibrated(),
             migrate,

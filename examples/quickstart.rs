@@ -69,6 +69,7 @@ fn main() {
                 sched: SchedBackend::Central,
                 batch_activations: true,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             CostModel::default_calibrated(),
             migrate,

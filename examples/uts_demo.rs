@@ -86,6 +86,7 @@ fn main() {
                 sched: SchedBackend::Central,
                 batch_activations: true,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             CostModel::default_calibrated(),
             migrate,

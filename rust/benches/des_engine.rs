@@ -35,6 +35,7 @@ fn run_once(tiles: u32, steal: bool, record_polls: bool) -> (u64, f64) {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         CostModel::default_calibrated(),
         migrate,

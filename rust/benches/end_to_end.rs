@@ -38,6 +38,7 @@ fn sim_run(tiles: u32, tile_size: u32, steal: bool) -> (f64, f64) {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         cost,
         migrate,
@@ -85,6 +86,7 @@ fn main() {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         Arc::new(NullExecutor),
     );

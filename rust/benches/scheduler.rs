@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use parsteal::dataflow::ttg::{DynGraph, TtgBuilder};
+use parsteal::faults::FaultPlan;
 use parsteal::migrate::{
     protocol::decide_steal, waiting_time_per_class_us, waiting_time_us, EstimateDigest,
     ExecSnapshot, MigrateConfig, VictimPolicy, VictimSelect,
@@ -511,6 +512,7 @@ fn victim_selection_telemetry() -> Json {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         };
         Simulator::new(graph, cfg, CostModel::default_calibrated(), mc, 20).run()
     };
@@ -540,12 +542,98 @@ fn victim_selection_telemetry() -> Json {
     ])
 }
 
+/// The fault-tolerance telemetry for `BENCH.json`: the same steal-heavy
+/// UTS tree at one seed, run with the fabric reliable, with the
+/// protocol hardening armed but no injected faults (`--faults on` —
+/// measures the pure ledger/timeout overhead, which should be ~0), and
+/// across a reply-drop sweep (measures how makespan inflates as the
+/// retransmit machinery works harder). Deterministic DES at fixed
+/// seeds, so the block is comparable across PRs.
+fn fault_tolerance_telemetry() -> Json {
+    println!();
+    println!("== fault tolerance: ledger overhead + makespan vs reply-drop rate (DES) ==");
+    let run = |faults: FaultPlan| {
+        let graph = Arc::new(UtsGraph::new(UtsParams {
+            b0: 32,
+            m: 4,
+            q: 0.3,
+            g: 50_000.0,
+            seed: 5,
+            nodes: 4,
+            max_depth: 24,
+        }));
+        let mc = MigrateConfig {
+            poll_interval_us: 20.0,
+            ..MigrateConfig::default()
+        };
+        let cfg = SimConfig {
+            workers_per_node: 4,
+            link: LinkModel::cluster(),
+            seed: 7,
+            max_events: 50_000_000,
+            record_polls: false,
+            sched: SchedBackend::Central,
+            batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
+            faults,
+        };
+        Simulator::new(graph, cfg, CostModel::default_calibrated(), mc, 20).run()
+    };
+    let baseline = run(FaultPlan::default());
+    let hardened = run("on".parse().unwrap());
+    let overhead_pct =
+        100.0 * (hardened.makespan_us - baseline.makespan_us) / baseline.makespan_us;
+    println!(
+        "    reliable fabric       makespan {:>10.0}µs",
+        baseline.makespan_us
+    );
+    println!(
+        "    hardened, no faults   makespan {:>10.0}µs  (ledger overhead {overhead_pct:+.3}%)",
+        hardened.makespan_us
+    );
+    let mut sweep = Vec::new();
+    for drop in [0.1, 0.25, 0.4] {
+        let r = run(format!("drop-reply={drop}").parse().unwrap());
+        let inflation_pct =
+            100.0 * (r.makespan_us - baseline.makespan_us) / baseline.makespan_us;
+        println!(
+            "    drop-reply={drop:<4}       makespan {:>10.0}µs  ({inflation_pct:+.2}%, \
+             {} timeouts, {} retries, {} reclaims)",
+            r.makespan_us,
+            r.steal_timeouts_total(),
+            r.steal_retries_total(),
+            r.ledger_reclaims_total()
+        );
+        sweep.push(Json::obj(vec![
+            ("drop_reply", Json::Num(drop)),
+            ("makespan_us", Json::Num(r.makespan_us)),
+            ("makespan_inflation_pct", Json::Num(inflation_pct)),
+            ("replies_dropped", Json::Num(r.faults_dropped as f64)),
+            ("steal_timeouts", Json::Num(r.steal_timeouts_total() as f64)),
+            ("steal_retries", Json::Num(r.steal_retries_total() as f64)),
+            ("ledger_reclaims", Json::Num(r.ledger_reclaims_total() as f64)),
+            (
+                "dup_replies_suppressed",
+                Json::Num(r.dup_replies_suppressed_total() as f64),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("scenario", Json::Str("uts_steal_heavy_4n".into())),
+        ("baseline_makespan_us", Json::Num(baseline.makespan_us)),
+        ("hardened_makespan_us", Json::Num(hardened.makespan_us)),
+        ("ledger_overhead_pct", Json::Num(overhead_pct)),
+        ("drop_sweep", Json::Arr(sweep)),
+    ])
+}
+
 fn write_json(
     path: &str,
     medians: &[(String, f64, SchedStats)],
     activations: &[(String, f64, u64)],
     estimate_sharing: Json,
     victim_selection: Json,
+    fault_tolerance: Json,
 ) {
     let steal_entries: Vec<Json> = medians
         .iter()
@@ -600,6 +688,7 @@ fn write_json(
         ("per_class_gate", per_class_gate_telemetry()),
         ("estimate_sharing", estimate_sharing),
         ("victim_selection", victim_selection),
+        ("fault_tolerance", fault_tolerance),
         (
             "exact_min_payload",
             Json::obj(vec![
@@ -630,7 +719,15 @@ fn main() {
     let activations = activation_batch_benches();
     let estimate_sharing = estimate_sharing_benches();
     let victim_selection = victim_selection_telemetry();
+    let fault_tolerance = fault_tolerance_telemetry();
     if let Some(path) = json_path {
-        write_json(&path, &medians, &activations, estimate_sharing, victim_selection);
+        write_json(
+            &path,
+            &medians,
+            &activations,
+            estimate_sharing,
+            victim_selection,
+            fault_tolerance,
+        );
     }
 }

@@ -63,12 +63,16 @@ fn main() {
     // Full message round trip through the fabric (ideal link).
     let (net, mb) = Network::new(2, LinkModel::ideal());
     b.bench("steal request/reply round trip (ideal link)", || {
-        net.send(NodeId(0), NodeId(1), Msg::StealRequest { thief: NodeId(0) });
+        net.send(NodeId(0), NodeId(1), Msg::StealRequest {
+            thief: NodeId(0),
+            req: 1,
+        });
         let _req = mb[1].recv_timeout(Duration::from_secs(1)).unwrap();
         net.send(
             NodeId(1),
             NodeId(0),
             Msg::StealReply {
+                req: 1,
                 tasks: vec![TaskDesc::indexed(TaskClass::Gemm, 5, 3, 1)],
                 payload_bytes: 20_000,
                 digest: None,

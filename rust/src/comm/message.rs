@@ -1,6 +1,7 @@
 //! Wire messages between runtime domains.
 
 use crate::dataflow::task::{NodeId, TaskDesc};
+use crate::faults::FaultMark;
 use crate::migrate::EstimateDigest;
 use crate::term::SafraToken;
 
@@ -16,7 +17,12 @@ pub enum Msg {
     /// the receiver) instead of one `Activate` per edge.
     ActivateBatch { tasks: Vec<TaskDesc> },
     /// Thief -> victim: the thief detected starvation and asks for work.
-    StealRequest { thief: NodeId },
+    /// `req` is the thief's monotonically-seeded request id (thief id in
+    /// the high bits, per-thief counter in the low bits): the reply
+    /// echoes it, so under `--faults` the thief can match replies to
+    /// outstanding requests, suppress duplicates and time out the rest.
+    /// It rides in the existing 16-byte header (wire-free).
+    StealRequest { thief: NodeId, req: u64 },
     /// Victim -> thief: migrated tasks (empty = steal failed). Each task
     /// is *recreated* at the thief with the same uid; `payload_bytes` is
     /// the size of the input data copied along (drives the link model).
@@ -34,11 +40,21 @@ pub enum Msg {
     /// outcome telemetry. The flag is a single bit riding in the
     /// 16-byte reply header, so the wire model is unchanged.
     StealReply {
+        /// Echo of the originating [`Msg::StealRequest`] id (wire-free,
+        /// rides in the reply header like the denial flag).
+        req: u64,
         tasks: Vec<TaskDesc>,
         payload_bytes: u64,
         digest: Option<EstimateDigest>,
         denied_by_waiting_time: bool,
     },
+    /// Thief -> victim: transfer handshake for request `req`
+    /// (`--faults` only). `accepted = true` acknowledges a granted
+    /// reply — the victim retires the matching transfer-ledger entry;
+    /// `accepted = false` is a nack sent when the thief timed out and
+    /// abandoned the request — the victim reclaims the ledger entry's
+    /// tasks into its own queue. Priced like a request header.
+    TransferAck { req: u64, accepted: bool },
     /// Safra termination-detection token, traveling the ring.
     Token(SafraToken),
     /// Leader -> all: distributed termination detected, shut down.
@@ -84,6 +100,7 @@ impl Msg {
                 digest,
                 ..
             } => Self::steal_reply_wire_bytes(tasks.len(), *payload_bytes, digest.as_ref()),
+            Msg::TransferAck { .. } => 16,
             Msg::Token(_) => 24,
             Msg::Shutdown => 8,
         }
@@ -102,6 +119,10 @@ pub struct Envelope {
     pub src: NodeId,
     pub dst: NodeId,
     pub msg: Msg,
+    /// `--faults` verdict stamped by the fabric (default
+    /// [`FaultMark::None`]); see [`FaultMark`] for the receive-side
+    /// contract that keeps Safra's message accounting balanced.
+    pub fault: FaultMark,
 }
 
 #[cfg(test)]
@@ -113,12 +134,14 @@ mod tests {
     fn wire_bytes_scale_with_payload() {
         let t = TaskDesc::indexed(TaskClass::Gemm, 1, 2, 3);
         let small = Msg::StealReply {
+            req: 1,
             tasks: vec![t],
             payload_bytes: 0,
             digest: None,
             denied_by_waiting_time: false,
         };
         let big = Msg::StealReply {
+            req: 2,
             tasks: vec![t],
             payload_bytes: 20_000,
             digest: None,
@@ -139,12 +162,14 @@ mod tests {
         digest.class_est_us[TaskClass::Gemm.idx()] = 300.0;
         digest.class_samples[TaskClass::Gemm.idx()] = 9;
         let bare = Msg::StealReply {
+            req: 7,
             tasks: vec![t],
             payload_bytes: 512,
             digest: None,
             denied_by_waiting_time: false,
         };
         let shared = Msg::StealReply {
+            req: 7,
             tasks: vec![t],
             payload_bytes: 512,
             digest: Some(digest),
@@ -164,16 +189,43 @@ mod tests {
     }
 
     #[test]
-    fn denial_flag_is_wire_free() {
-        // The outcome tag rides in the existing 16-byte header.
-        let empty = |denied| Msg::StealReply {
+    fn denial_flag_and_request_id_are_wire_free() {
+        // The outcome tag and the request id ride in the existing
+        // 16-byte header.
+        let empty = |req, denied| Msg::StealReply {
+            req,
             tasks: vec![],
             payload_bytes: 0,
             digest: None,
             denied_by_waiting_time: denied,
         };
-        assert_eq!(empty(true).wire_bytes(), empty(false).wire_bytes());
-        assert!(empty(true).is_basic(), "denials still count for Safra");
+        assert_eq!(empty(0, true).wire_bytes(), empty(0, false).wire_bytes());
+        assert_eq!(
+            empty(0, false).wire_bytes(),
+            empty(u64::MAX, false).wire_bytes()
+        );
+        assert!(empty(0, true).is_basic(), "denials still count for Safra");
+        assert_eq!(
+            Msg::StealRequest {
+                thief: NodeId(0),
+                req: u64::MAX
+            }
+            .wire_bytes(),
+            16,
+            "request id rides in the 16-byte request header"
+        );
+    }
+
+    #[test]
+    fn transfer_ack_is_a_basic_16_byte_message() {
+        for accepted in [false, true] {
+            let ack = Msg::TransferAck { req: 42, accepted };
+            assert_eq!(ack.wire_bytes(), 16, "priced like a request header");
+            assert!(
+                ack.is_basic(),
+                "acks are application traffic: Safra must count them"
+            );
+        }
     }
 
     #[test]

@@ -13,6 +13,8 @@ use std::time::{Duration, Instant};
 
 use super::message::{Envelope, Msg};
 use crate::dataflow::task::NodeId;
+use crate::faults::{FaultClass, FaultMark, FaultPlan};
+use crate::util::rng::{fault_rng, Rng};
 
 /// Wire model: time on the wire = `latency_us + bytes / bw_bytes_per_us`.
 #[derive(Clone, Copy, Debug)]
@@ -108,12 +110,37 @@ pub struct Network {
     seq: AtomicU64,
     pub sent_msgs: AtomicU64,
     pub sent_bytes: AtomicU64,
+    /// `--faults` schedule, applied to steal-protocol traffic only
+    /// (see [`Network::new_with_faults`]); default off.
+    faults: FaultPlan,
+    /// Dedicated RNG stream for fault decisions (never touched when the
+    /// plan is off, so a faults-off fabric is byte-identical to one
+    /// built without a plan).
+    fault_rng: Mutex<Rng>,
+    /// Fabric start time: the straggler window's run clock.
+    t0: Instant,
+    /// Steal-class messages delivered marked-dropped (diagnostics).
+    pub faults_dropped: AtomicU64,
+    /// Injected duplicate copies (diagnostics).
+    pub faults_duplicated: AtomicU64,
 }
 
 impl Network {
     /// Build a fabric for `n` nodes; returns the network plus each node's
     /// mailbox (index = node id).
     pub fn new(n: usize, link: LinkModel) -> (Arc<Network>, Vec<NodeMailbox>) {
+        Self::new_with_faults(n, link, FaultPlan::default(), 0)
+    }
+
+    /// Build a fabric with a fault plan (`--faults`). `seed` feeds the
+    /// dedicated fault stream; with `plan` disabled this is exactly
+    /// [`Network::new`].
+    pub fn new_with_faults(
+        n: usize,
+        link: LinkModel,
+        plan: FaultPlan,
+        seed: u64,
+    ) -> (Arc<Network>, Vec<NodeMailbox>) {
         let mut senders = Vec::with_capacity(n);
         let mut mailboxes = Vec::with_capacity(n);
         for _ in 0..n {
@@ -138,6 +165,11 @@ impl Network {
             seq: AtomicU64::new(0),
             sent_msgs: AtomicU64::new(0),
             sent_bytes: AtomicU64::new(0),
+            faults: plan,
+            fault_rng: Mutex::new(fault_rng(seed, 0)),
+            t0: Instant::now(),
+            faults_dropped: AtomicU64::new(0),
+            faults_duplicated: AtomicU64::new(0),
         });
         if net.delay.is_some() {
             let line = net.delay.as_ref().unwrap().clone();
@@ -159,19 +191,76 @@ impl Network {
         self.link
     }
 
-    /// Send `msg` from `src` to `dst` through the wire model.
+    /// Which fault class (if any) a message belongs to: only the steal
+    /// protocol is ever faulted — activations, tokens and shutdown stay
+    /// reliable.
+    fn steal_class(msg: &Msg) -> Option<FaultClass> {
+        match msg {
+            Msg::StealRequest { .. } => Some(FaultClass::Request),
+            Msg::StealReply { .. } => Some(FaultClass::Reply),
+            Msg::TransferAck { .. } => Some(FaultClass::Ack),
+            _ => None,
+        }
+    }
+
+    /// Send `msg` from `src` to `dst` through the wire model. With a
+    /// fault plan active, steal-class messages may be delivered marked
+    /// [`FaultMark::Dropped`] (the receiver balances Safra's accounting
+    /// and discards), duplicated (extra copy marked
+    /// [`FaultMark::Duplicate`]) or delayed (multiplied wire time; a
+    /// no-op on ideal links, which model zero wire time).
     pub fn send(&self, src: NodeId, dst: NodeId, msg: Msg) {
         let bytes = msg.wire_bytes();
         self.sent_msgs.fetch_add(1, Ordering::Relaxed);
         self.sent_bytes.fetch_add(bytes, Ordering::Relaxed);
-        let env = Envelope { src, dst, msg };
+        let mut mark = FaultMark::None;
+        let mut delay_mult = 1.0;
+        let mut duplicate = false;
+        if self.faults.enabled {
+            if let Some(class) = Self::steal_class(&msg) {
+                let now_us = self.t0.elapsed().as_secs_f64() * 1e6;
+                let d = self.faults.decide(
+                    class,
+                    src.0,
+                    dst.0,
+                    now_us,
+                    &mut self.fault_rng.lock().unwrap(),
+                );
+                if d.dropped {
+                    mark = FaultMark::Dropped;
+                    self.faults_dropped.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    duplicate = d.duplicate;
+                    delay_mult = d.delay_mult;
+                }
+            }
+        }
+        if duplicate {
+            self.faults_duplicated.fetch_add(1, Ordering::Relaxed);
+            self.sent_msgs.fetch_add(1, Ordering::Relaxed);
+            self.sent_bytes.fetch_add(bytes, Ordering::Relaxed);
+            self.dispatch(
+                Envelope {
+                    src,
+                    dst,
+                    msg: msg.clone(),
+                    fault: FaultMark::Duplicate,
+                },
+                bytes,
+                delay_mult,
+            );
+        }
+        self.dispatch(Envelope { src, dst, msg, fault: mark }, bytes, delay_mult);
+    }
+
+    fn dispatch(&self, env: Envelope, bytes: u64, delay_mult: f64) {
         match &self.delay {
             None => {
                 // Ignore send errors during shutdown (receiver dropped).
-                let _ = self.senders[dst.idx()].send(env);
+                let _ = self.senders[env.dst.idx()].send(env);
             }
             Some(line) => {
-                let delay_us = self.link.transfer_us(bytes);
+                let delay_us = self.link.transfer_us(bytes) * delay_mult;
                 let deliver_at = Instant::now() + Duration::from_nanos((delay_us * 1e3) as u64);
                 let seq = self.seq.fetch_add(1, Ordering::Relaxed);
                 line.heap.lock().unwrap().push(Delayed {
@@ -301,8 +390,72 @@ mod tests {
     fn counters_track_traffic() {
         let (net, _mb) = Network::new(2, LinkModel::ideal());
         net.send(NodeId(0), NodeId(1), activate(0));
-        net.send(NodeId(0), NodeId(1), Msg::StealRequest { thief: NodeId(0) });
+        net.send(
+            NodeId(0),
+            NodeId(1),
+            Msg::StealRequest {
+                thief: NodeId(0),
+                req: 1,
+            },
+        );
         assert_eq!(net.sent_msgs.load(Ordering::Relaxed), 2);
         assert!(net.sent_bytes.load(Ordering::Relaxed) >= 48);
+    }
+
+    #[test]
+    fn faulted_fabric_marks_but_never_loses_steal_messages() {
+        // Every steal-class message still arrives — dropped ones are
+        // *marked*, so Safra's send/receive accounting stays balanced —
+        // while activations pass untouched.
+        let plan: FaultPlan = "drop=0.5,dup=0.3".parse().unwrap();
+        let (net, mb) = Network::new_with_faults(2, LinkModel::ideal(), plan, 0xFAB);
+        let sends = 400u64;
+        for i in 0..sends {
+            net.send(
+                NodeId(0),
+                NodeId(1),
+                Msg::StealRequest {
+                    thief: NodeId(0),
+                    req: i,
+                },
+            );
+        }
+        net.send(NodeId(0), NodeId(1), activate(9));
+        let (mut normal, mut dropped, mut dups) = (0u64, 0u64, 0u64);
+        let mut activations = 0u64;
+        while let Some(env) = mb[1].recv_timeout(Duration::from_millis(100)) {
+            match (&env.msg, env.fault) {
+                (Msg::Activate { .. }, mark) => {
+                    assert_eq!(mark, FaultMark::None, "activations are never faulted");
+                    activations += 1;
+                }
+                (_, FaultMark::None) => normal += 1,
+                (_, FaultMark::Dropped) => dropped += 1,
+                (_, FaultMark::Duplicate) => dups += 1,
+            }
+        }
+        assert_eq!(activations, 1);
+        assert_eq!(normal + dropped, sends, "every original send arrives");
+        assert_eq!(dropped, net.faults_dropped.load(Ordering::Relaxed));
+        assert_eq!(dups, net.faults_duplicated.load(Ordering::Relaxed));
+        assert!(dropped > 0, "a 50% drop plan must drop something");
+        assert!(dups > 0, "a 30% dup plan must duplicate something");
+    }
+
+    #[test]
+    fn faults_off_fabric_is_unmarked() {
+        let (net, mb) = Network::new(2, LinkModel::ideal());
+        net.send(
+            NodeId(0),
+            NodeId(1),
+            Msg::StealRequest {
+                thief: NodeId(0),
+                req: 3,
+            },
+        );
+        let env = mb[1].recv_timeout(Duration::from_millis(100)).unwrap();
+        assert_eq!(env.fault, FaultMark::None);
+        assert_eq!(net.faults_dropped.load(Ordering::Relaxed), 0);
+        assert_eq!(net.faults_duplicated.load(Ordering::Relaxed), 0);
     }
 }

@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use crate::comm::LinkModel;
+use crate::faults::FaultPlan;
 use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use crate::sched::{POOL_FLOOR, SchedBackend};
 use crate::sim::SimConfig;
@@ -32,6 +33,8 @@ pub struct RunConfig {
     pub batch_activations: bool,
     /// Sharded steal-pool floor (`--pool-floor`).
     pub pool_floor: usize,
+    /// Steal-protocol fault injection (`--faults`, default off).
+    pub faults: FaultPlan,
 }
 
 impl RunConfig {
@@ -42,6 +45,8 @@ impl RunConfig {
     /// `--exec-ewma BOOL --exec-per-class BOOL --share-estimates BOOL`
     /// `--victim-select uniform|targeted`
     /// `--sched central|sharded --batch-activations BOOL --pool-floor N`
+    /// `--faults SPEC` (e.g. `drop=0.05,delay=3x`; see
+    /// [`FaultPlan`] for the grammar),
     /// `--latency-us L --bw B --seed X` and the
     /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
     pub fn from_args(args: &Args) -> Result<RunConfig> {
@@ -113,6 +118,10 @@ impl RunConfig {
                 .map_err(anyhow::Error::msg)?,
             batch_activations: args.bool_or("batch-activations", true)?,
             pool_floor: args.u64_or("pool-floor", POOL_FLOOR as u64)? as usize,
+            faults: args
+                .str_or("faults", "off")
+                .parse::<FaultPlan>()
+                .map_err(anyhow::Error::msg)?,
         })
     }
 
@@ -140,6 +149,7 @@ impl RunConfig {
             sched: self.sched,
             batch_activations: self.batch_activations,
             pool_floor: self.pool_floor,
+            faults: self.faults,
         }
     }
 }
@@ -255,6 +265,19 @@ mod tests {
         assert_eq!(c.sim_config().pool_floor, 7);
         let c = RunConfig::from_args(&args("--pool-floor 0")).unwrap();
         assert_eq!(c.pool_floor, 0, "0 disables restocking");
+    }
+
+    #[test]
+    fn faults_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert!(!c.faults.enabled, "reliable fabric by default");
+        assert!(!c.sim_config().faults.enabled);
+        let c = RunConfig::from_args(&args("--faults drop=0.05,delay=3x")).unwrap();
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.drop_reply, 0.05);
+        assert_eq!(c.faults.delay_factor, 3.0);
+        assert_eq!(c.sim_config().faults, c.faults);
+        assert!(RunConfig::from_args(&args("--faults bogus=1")).is_err());
     }
 
     #[test]

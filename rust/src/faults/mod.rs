@@ -1,0 +1,459 @@
+//! Deterministic fault injection for the steal protocol (`--faults`).
+//!
+//! A [`FaultPlan`] describes, per steal-protocol message class
+//! (StealRequest / StealReply / TransferAck), the probability that the
+//! fabric drops, duplicates or delays a message, plus an optional
+//! straggler window during which one node's steal traffic is slowed or
+//! stalled outright. The plan is injected at the two existing
+//! chokepoints — the threaded comm fabric (`comm::Network::send`) and
+//! the DES wire model (`sim::Simulator` deliver scheduling) — and is
+//! *scoped to steal traffic only*: Safra tokens, activations and
+//! shutdown messages are never faulted, so termination detection and
+//! the dataflow itself stay reliable while the steal protocol has to
+//! heal itself (timeouts + retries on the thief, a transfer ledger +
+//! ack handshake on the victim; see `docs/ARCHITECTURE.md`,
+//! "Fault model & recovery").
+//!
+//! Determinism: the plan owns no state; each fabric derives a dedicated
+//! RNG stream (`util::rng::fault_rng`) so a disabled plan draws nothing
+//! and an enabled one never perturbs the scheduler's RNG. With the plan
+//! off (the default) both runtimes are byte-identical to a build
+//! without this module.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::util::rng::Rng;
+
+/// Drop/duplicate probabilities are clamped here: a drop probability of
+/// 1.0 would make the retransmit loop diverge (no retry can ever land),
+/// so the parser caps every probability at this value.
+pub const MAX_FAULT_P: f64 = 0.95;
+
+/// Steal-protocol message classes a [`FaultPlan`] distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Thief → victim `StealRequest`.
+    Request,
+    /// Victim → thief `StealReply` (grant or denial).
+    Reply,
+    /// Thief → victim `TransferAck` (ack or nack).
+    Ack,
+}
+
+/// How the fabric tagged one delivered message.
+///
+/// The threaded runtime cannot silently lose a basic message — the
+/// Safra detector counts every send, so an unmatched send would leave a
+/// permanent deficit and the run would never terminate. A "dropped"
+/// message is therefore still *delivered*, marked [`FaultMark::Dropped`]:
+/// the receiver balances the message accounting and then discards it
+/// unprocessed. A duplicate is the inverse: an extra copy marked
+/// [`FaultMark::Duplicate`] that the receiver processes (protocol-level
+/// dedup makes it harmless) but does *not* count as a receive, because
+/// no send was counted for it. The DES has no Safra detector (it is
+/// omniscient), so it drops messages for real and only uses
+/// [`FaultMark::Duplicate`] bookkeeping internally.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultMark {
+    /// Normal delivery.
+    #[default]
+    None,
+    /// Deliver only to balance accounting; receiver must discard.
+    Dropped,
+    /// Injected extra copy; process but do not count the receive.
+    Duplicate,
+}
+
+/// The fabric's verdict on one steal-class message.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultDecision {
+    /// Message is lost (threaded: delivered marked-dropped).
+    pub dropped: bool,
+    /// One extra copy is delivered alongside the original.
+    pub duplicate: bool,
+    /// Multiplier on the modeled wire time (≥ 1.0; a no-op on ideal
+    /// links, which model zero wire time).
+    pub delay_mult: f64,
+}
+
+impl FaultDecision {
+    /// The undisturbed verdict (also what a disabled plan returns).
+    pub fn pass() -> FaultDecision {
+        FaultDecision {
+            dropped: false,
+            duplicate: false,
+            delay_mult: 1.0,
+        }
+    }
+}
+
+/// A seeded, declarative fault schedule (`--faults`), default off.
+///
+/// Spec grammar (comma-separated `key=value` entries):
+///
+/// ```text
+/// off | none                  disabled (the default)
+/// on                          protocol hardening active, no injected faults
+/// drop=P                      drop all three classes with probability P
+/// drop-request|drop-reply|drop-ack=P    per-class drop probability
+/// dup=P, dup-request|dup-reply|dup-ack=P  duplicate probabilities
+/// delay=Fx (or F)             multiply steal-message wire time by F
+/// delay-p=P                   fraction of steal messages delayed (default 1)
+/// slow-node=N                 straggler node id for the window below
+/// slow-factor=F               extra delay on the straggler's steal traffic
+/// slow-from-us=T,slow-until-us=T   straggler window in run time (µs)
+/// stall                       straggler drops (instead of delays) in-window
+/// ```
+///
+/// Example: `--faults drop=0.05,delay=3x`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Master switch; `false` means no draws, no marks, no extra
+    /// messages, no timeout machinery — byte-identical to PR 6.
+    pub enabled: bool,
+    pub drop_request: f64,
+    pub drop_reply: f64,
+    pub drop_ack: f64,
+    pub dup_request: f64,
+    pub dup_reply: f64,
+    pub dup_ack: f64,
+    /// Wire-time multiplier for delayed steal messages (≥ 1.0).
+    pub delay_factor: f64,
+    /// Probability a steal message is delayed (only if `delay_factor > 1`).
+    pub delay_p: f64,
+    /// Straggler node: its steal traffic (either direction) is slowed by
+    /// `slow_factor` — or stalled outright with `stall` — while the run
+    /// clock is inside `[slow_from_us, slow_until_us)`.
+    pub slow_node: Option<u32>,
+    pub slow_factor: f64,
+    pub slow_from_us: f64,
+    pub slow_until_us: f64,
+    pub stall: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            enabled: false,
+            drop_request: 0.0,
+            drop_reply: 0.0,
+            drop_ack: 0.0,
+            dup_request: 0.0,
+            dup_reply: 0.0,
+            dup_ack: 0.0,
+            delay_factor: 1.0,
+            delay_p: 1.0,
+            slow_node: None,
+            slow_factor: 1.0,
+            slow_from_us: 0.0,
+            slow_until_us: f64::INFINITY,
+            stall: false,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Decide the fate of one steal-class message. `now_us` is the run
+    /// clock (sim time in the DES, wall time since fabric start in the
+    /// threaded runtime) used only for the straggler window. Draws from
+    /// `rng` only when the plan is enabled.
+    pub fn decide(
+        &self,
+        class: FaultClass,
+        src: u32,
+        dst: u32,
+        now_us: f64,
+        rng: &mut Rng,
+    ) -> FaultDecision {
+        let mut d = FaultDecision::pass();
+        if !self.enabled {
+            return d;
+        }
+        if let Some(s) = self.slow_node {
+            if (src == s || dst == s) && now_us >= self.slow_from_us && now_us < self.slow_until_us
+            {
+                if self.stall {
+                    d.dropped = true;
+                    return d;
+                }
+                d.delay_mult *= self.slow_factor.max(1.0);
+            }
+        }
+        let (p_drop, p_dup) = match class {
+            FaultClass::Request => (self.drop_request, self.dup_request),
+            FaultClass::Reply => (self.drop_reply, self.dup_reply),
+            FaultClass::Ack => (self.drop_ack, self.dup_ack),
+        };
+        if p_drop > 0.0 && rng.uniform() < p_drop {
+            d.dropped = true;
+            return d;
+        }
+        if p_dup > 0.0 && rng.uniform() < p_dup {
+            d.duplicate = true;
+        }
+        if self.delay_factor > 1.0 && self.delay_p > 0.0 && rng.uniform() < self.delay_p {
+            d.delay_mult *= self.delay_factor;
+        }
+        d
+    }
+
+    /// Canonical spec string; `plan.label().parse()` round-trips.
+    pub fn label(&self) -> String {
+        if !self.enabled {
+            return "off".to_string();
+        }
+        let mut parts: Vec<String> = Vec::new();
+        let triple = |parts: &mut Vec<String>, key: &str, a: f64, b: f64, c: f64| {
+            if a == b && b == c {
+                if a > 0.0 {
+                    parts.push(format!("{key}={a}"));
+                }
+            } else {
+                for (suffix, p) in [("request", a), ("reply", b), ("ack", c)] {
+                    if p > 0.0 {
+                        parts.push(format!("{key}-{suffix}={p}"));
+                    }
+                }
+            }
+        };
+        triple(
+            &mut parts,
+            "drop",
+            self.drop_request,
+            self.drop_reply,
+            self.drop_ack,
+        );
+        triple(
+            &mut parts,
+            "dup",
+            self.dup_request,
+            self.dup_reply,
+            self.dup_ack,
+        );
+        if self.delay_factor > 1.0 {
+            parts.push(format!("delay={}x", self.delay_factor));
+            if self.delay_p < 1.0 {
+                parts.push(format!("delay-p={}", self.delay_p));
+            }
+        }
+        if let Some(s) = self.slow_node {
+            parts.push(format!("slow-node={s}"));
+            if self.slow_factor > 1.0 {
+                parts.push(format!("slow-factor={}", self.slow_factor));
+            }
+            if self.slow_from_us > 0.0 {
+                parts.push(format!("slow-from-us={}", self.slow_from_us));
+            }
+            if self.slow_until_us.is_finite() {
+                parts.push(format!("slow-until-us={}", self.slow_until_us));
+            }
+            if self.stall {
+                parts.push("stall".to_string());
+            }
+        }
+        if parts.is_empty() {
+            "on".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f64, String> {
+    let p: f64 = v
+        .parse()
+        .map_err(|_| format!("--faults: '{key}={v}' is not a probability"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("--faults: '{key}={v}' must be in [0, 1]"));
+    }
+    Ok(p.min(MAX_FAULT_P))
+}
+
+fn parse_factor(key: &str, v: &str) -> Result<f64, String> {
+    let raw = v.strip_suffix(['x', 'X']).unwrap_or(v);
+    let f: f64 = raw
+        .parse()
+        .map_err(|_| format!("--faults: '{key}={v}' is not a factor"))?;
+    if f < 1.0 {
+        return Err(format!("--faults: '{key}={v}' must be >= 1"));
+    }
+    Ok(f)
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let spec = s.trim();
+        let mut plan = FaultPlan::default();
+        if spec.is_empty() || spec.eq_ignore_ascii_case("off") || spec.eq_ignore_ascii_case("none")
+        {
+            return Ok(plan);
+        }
+        plan.enabled = true;
+        if spec.eq_ignore_ascii_case("on") {
+            return Ok(plan);
+        }
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (key, value) = match entry.split_once('=') {
+                Some((k, v)) => (k.trim(), v.trim()),
+                None => (entry, ""),
+            };
+            match key.to_ascii_lowercase().as_str() {
+                "drop" => {
+                    let p = parse_prob(key, value)?;
+                    plan.drop_request = p;
+                    plan.drop_reply = p;
+                    plan.drop_ack = p;
+                }
+                "drop-request" => plan.drop_request = parse_prob(key, value)?,
+                "drop-reply" => plan.drop_reply = parse_prob(key, value)?,
+                "drop-ack" => plan.drop_ack = parse_prob(key, value)?,
+                "dup" => {
+                    let p = parse_prob(key, value)?;
+                    plan.dup_request = p;
+                    plan.dup_reply = p;
+                    plan.dup_ack = p;
+                }
+                "dup-request" => plan.dup_request = parse_prob(key, value)?,
+                "dup-reply" => plan.dup_reply = parse_prob(key, value)?,
+                "dup-ack" => plan.dup_ack = parse_prob(key, value)?,
+                "delay" => plan.delay_factor = parse_factor(key, value)?,
+                "delay-p" => plan.delay_p = parse_prob(key, value)?,
+                "slow-node" => {
+                    plan.slow_node = Some(value.parse().map_err(|_| {
+                        format!("--faults: 'slow-node={value}' is not a node id")
+                    })?)
+                }
+                "slow-factor" => plan.slow_factor = parse_factor(key, value)?,
+                "slow-from-us" => {
+                    plan.slow_from_us = value.parse().map_err(|_| {
+                        format!("--faults: 'slow-from-us={value}' is not a time")
+                    })?
+                }
+                "slow-until-us" => {
+                    plan.slow_until_us = value.parse().map_err(|_| {
+                        format!("--faults: 'slow-until-us={value}' is not a time")
+                    })?
+                }
+                "stall" => plan.stall = value.is_empty() || value.parse().unwrap_or(false),
+                other => return Err(format!("--faults: unknown key '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::fault_rng;
+
+    #[test]
+    fn default_is_off_and_decides_nothing() {
+        let plan = FaultPlan::default();
+        assert!(!plan.enabled);
+        assert_eq!(plan.label(), "off");
+        let mut rng = fault_rng(1, 0);
+        let before = rng.next_u64();
+        let mut rng = fault_rng(1, 0);
+        let d = plan.decide(FaultClass::Reply, 0, 1, 0.0, &mut rng);
+        assert_eq!(d, FaultDecision::pass());
+        // A disabled plan must not consume the RNG stream.
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn spec_parses_and_clamps() {
+        let plan: FaultPlan = "drop=0.05,delay=3x".parse().unwrap();
+        assert!(plan.enabled);
+        assert_eq!(plan.drop_request, 0.05);
+        assert_eq!(plan.drop_reply, 0.05);
+        assert_eq!(plan.drop_ack, 0.05);
+        assert_eq!(plan.delay_factor, 3.0);
+        let clamped: FaultPlan = "drop-reply=1.0".parse().unwrap();
+        assert_eq!(
+            clamped.drop_reply, MAX_FAULT_P,
+            "certain loss would make retransmission diverge"
+        );
+        assert!("drop=2".parse::<FaultPlan>().is_err());
+        assert!("delay=0.5x".parse::<FaultPlan>().is_err());
+        assert!("bogus=1".parse::<FaultPlan>().is_err());
+        assert!(!"off".parse::<FaultPlan>().unwrap().enabled);
+        let on: FaultPlan = "on".parse().unwrap();
+        assert!(on.enabled && on.label() == "on");
+    }
+
+    #[test]
+    fn label_round_trips() {
+        for spec in [
+            "on",
+            "drop=0.2",
+            "drop-reply=0.3,dup-ack=0.1",
+            "drop=0.05,delay=3x",
+            "delay=2x,delay-p=0.25",
+            "slow-node=2,slow-factor=4,slow-from-us=100,slow-until-us=5000",
+            "drop=0.1,slow-node=0,stall",
+        ] {
+            let plan: FaultPlan = spec.parse().unwrap();
+            let relabeled: FaultPlan = plan.label().parse().unwrap();
+            assert_eq!(plan, relabeled, "spec '{spec}' label '{}'", plan.label());
+        }
+    }
+
+    #[test]
+    fn drop_rate_is_roughly_honored() {
+        let plan: FaultPlan = "drop-reply=0.5".parse().unwrap();
+        let mut rng = fault_rng(42, 3);
+        let dropped = (0..10_000)
+            .filter(|_| plan.decide(FaultClass::Reply, 1, 0, 0.0, &mut rng).dropped)
+            .count();
+        assert!((4_500..5_500).contains(&dropped), "dropped {dropped}/10000");
+        // Other classes are untouched by a reply-only plan.
+        let d = plan.decide(FaultClass::Request, 1, 0, 0.0, &mut rng);
+        assert!(!d.dropped && !d.duplicate && d.delay_mult == 1.0);
+    }
+
+    #[test]
+    fn straggler_window_stalls_only_inside() {
+        let plan: FaultPlan = "slow-node=1,slow-from-us=100,slow-until-us=200,stall"
+            .parse()
+            .unwrap();
+        let mut rng = fault_rng(7, 0);
+        assert!(plan.decide(FaultClass::Request, 1, 0, 150.0, &mut rng).dropped);
+        assert!(plan.decide(FaultClass::Request, 0, 1, 150.0, &mut rng).dropped);
+        assert!(!plan.decide(FaultClass::Request, 1, 0, 50.0, &mut rng).dropped);
+        assert!(!plan.decide(FaultClass::Request, 1, 0, 200.0, &mut rng).dropped);
+        assert!(!plan.decide(FaultClass::Request, 2, 0, 150.0, &mut rng).dropped);
+        let slow: FaultPlan = "slow-node=1,slow-factor=4".parse().unwrap();
+        let d = slow.decide(FaultClass::Reply, 1, 0, 0.0, &mut rng);
+        assert_eq!(d.delay_mult, 4.0);
+        assert!(!d.dropped);
+    }
+
+    #[test]
+    fn duplicates_and_delays_compose() {
+        let plan: FaultPlan = "dup=0.95,delay=3x".parse().unwrap();
+        let mut rng = fault_rng(9, 1);
+        let mut dup_seen = false;
+        let mut delay_seen = false;
+        for _ in 0..200 {
+            let d = plan.decide(FaultClass::Ack, 0, 1, 0.0, &mut rng);
+            assert!(!d.dropped);
+            dup_seen |= d.duplicate;
+            delay_seen |= d.delay_mult == 3.0;
+        }
+        assert!(dup_seen && delay_seen);
+    }
+}

@@ -178,6 +178,7 @@ impl Ctx {
             sched: self.sched,
             batch_activations: true,
             pool_floor: POOL_FLOOR,
+            faults: Default::default(),
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 50).run()
     }
@@ -199,6 +200,7 @@ impl Ctx {
             sched: self.sched,
             batch_activations: true,
             pool_floor: POOL_FLOOR,
+            faults: Default::default(),
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, tile).run()
     }
@@ -214,6 +216,7 @@ impl Ctx {
             sched: self.sched,
             batch_activations: true,
             pool_floor: POOL_FLOOR,
+            faults: Default::default(),
         };
         Simulator::new(graph, cfg, self.cost.clone(), migrate, 0).run()
     }

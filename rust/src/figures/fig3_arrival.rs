@@ -49,6 +49,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             sched: ctx.sched,
             batch_activations: true,
             pool_floor: crate::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         ctx.cost.clone(),
         mc,

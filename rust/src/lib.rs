@@ -26,6 +26,7 @@
 pub mod comm;
 pub mod config;
 pub mod dataflow;
+pub mod faults;
 pub mod figures;
 pub mod metrics;
 pub mod migrate;

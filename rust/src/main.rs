@@ -36,6 +36,7 @@ fn usage() -> String {
      \x20         [--share-estimates false] [--victim-select uniform|targeted]\n\
      \x20         [--sched central|sharded] [--pool-floor 2]\n\
      \x20         [--batch-activations true]\n\
+     \x20         [--faults off|drop=P,dup=P,delay=Fx,slow-node=N,...]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
      \x20         [--figure-scale small|paper] [--sched central|sharded]\n\
@@ -103,6 +104,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     sched: cfg.sched,
                     batch_activations: cfg.batch_activations,
                     pool_floor: cfg.pool_floor,
+                    faults: cfg.faults,
                 },
                 ex,
             )
@@ -126,6 +128,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     sched: cfg.sched,
                     batch_activations: cfg.batch_activations,
                     pool_floor: cfg.pool_floor,
+                    faults: cfg.faults,
                 },
                 ex,
             )
@@ -145,6 +148,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     sched: cfg.sched,
                     batch_activations: cfg.batch_activations,
                     pool_floor: cfg.pool_floor,
+                    faults: cfg.faults,
                 },
                 ex,
             )
@@ -196,13 +200,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         let text = victims
             .iter()
             .enumerate()
-            .filter(|(_, (g, d, e))| g + d + e > 0)
-            .map(|(v, (g, d, e))| format!("n{v} {g}g/{d}d/{e}e"))
+            .filter(|(_, (g, d, e, t))| g + d + e + t > 0)
+            .map(|(v, (g, d, e, t))| format!("n{v} {g}g/{d}d/{e}e/{t}t"))
             .collect::<Vec<_>>()
             .join(", ");
         println!(
-            "victims:         [{}] {text} (grants/wt-denials/empties per victim)",
+            "victims:         [{}] {text} (grants/wt-denials/empties/timeouts per victim)",
             cfg.migrate.victim_select.label()
+        );
+    }
+    if cfg.faults.enabled {
+        println!(
+            "faults:          [{}] {} dropped, {} duplicated; {} timeouts, {} retries, \
+             {} ledger reclaims, {} dup replies suppressed",
+            cfg.faults.label(),
+            report.faults_dropped,
+            report.faults_duplicated,
+            report.steal_timeouts_total(),
+            report.steal_retries_total(),
+            report.ledger_reclaims_total(),
+            report.dup_replies_suppressed_total()
         );
     }
     if cfg.migrate.share_estimates {
@@ -318,6 +335,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             sched,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         ex.clone(),
     );

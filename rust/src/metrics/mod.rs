@@ -55,6 +55,22 @@ pub struct NodeReport {
     pub victim_wt_denials: Vec<u64>,
     /// Empty-queue denials by victim (same indexing).
     pub victim_empties: Vec<u64>,
+    /// Abandoned (timed-out) requests by victim (same indexing; only
+    /// nonzero under `--faults`, where the fabric may eat a request or
+    /// reply and the thief's watchdog gives up on it).
+    pub victim_timeouts: Vec<u64>,
+    /// Steal requests this node abandoned after the watchdog deadline
+    /// (`--faults` only; reliable fabrics answer every request).
+    pub steal_timeouts: u64,
+    /// Abandoned requests re-issued within the retry budget.
+    pub steal_retries: u64,
+    /// Transfer-ledger entries this node (as victim) reclaimed on a
+    /// thief's nack — granted tasks that came home and re-entered the
+    /// queue instead of being lost with their dropped reply.
+    pub ledger_reclaims: u64,
+    /// Duplicate or late steal replies suppressed by request id — each
+    /// one a double-execution the exactly-once protocol prevented.
+    pub dup_replies_suppressed: u64,
     /// End-of-run scheduler counters for this node's queue: batched-
     /// insert accounting, gate-feedback events and (sharded) the final
     /// adaptive spill watermark.
@@ -80,6 +96,12 @@ pub struct RunReport {
     /// DES only: Deliver (wire message) events — the quantity activation
     /// batching shrinks.
     pub deliver_events: u64,
+    /// Steal-class messages the fault plan dropped (`--faults`; in the
+    /// threaded runtime these are delivered marked-dropped to balance
+    /// the Safra accounting, but the payload is discarded).
+    pub faults_dropped: u64,
+    /// Extra steal-class message copies the fault plan injected.
+    pub faults_duplicated: u64,
 }
 
 impl RunReport {
@@ -190,20 +212,42 @@ impl RunReport {
     }
 
     /// Per-victim reply outcomes summed across all thieves, indexed by
-    /// victim node id: `(grants, wt_denials, empties)` — how often each
-    /// node was successfully robbed vs how often it turned thieves
-    /// away. Missing per-node tables (hand-built reports) count zero.
-    pub fn victim_totals(&self) -> Vec<(u64, u64, u64)> {
+    /// victim node id: `(grants, wt_denials, empties, timeouts)` — how
+    /// often each node was successfully robbed, turned thieves away, or
+    /// (under `--faults`) left them hanging past the watchdog deadline.
+    /// Missing per-node tables (hand-built reports) count zero.
+    pub fn victim_totals(&self) -> Vec<(u64, u64, u64, u64)> {
         let p = self.nodes.len();
-        let mut out = vec![(0u64, 0u64, 0u64); p];
+        let mut out = vec![(0u64, 0u64, 0u64, 0u64); p];
         for n in &self.nodes {
             for (v, slot) in out.iter_mut().enumerate() {
                 slot.0 += n.victim_grants.get(v).copied().unwrap_or(0);
                 slot.1 += n.victim_wt_denials.get(v).copied().unwrap_or(0);
                 slot.2 += n.victim_empties.get(v).copied().unwrap_or(0);
+                slot.3 += n.victim_timeouts.get(v).copied().unwrap_or(0);
             }
         }
         out
+    }
+
+    /// Total abandoned (timed-out) steal requests across nodes.
+    pub fn steal_timeouts_total(&self) -> u64 {
+        self.nodes.iter().map(|n| n.steal_timeouts).sum()
+    }
+
+    /// Total watchdog-driven retries across nodes.
+    pub fn steal_retries_total(&self) -> u64 {
+        self.nodes.iter().map(|n| n.steal_retries).sum()
+    }
+
+    /// Total nack-reclaimed transfer-ledger entries across nodes.
+    pub fn ledger_reclaims_total(&self) -> u64 {
+        self.nodes.iter().map(|n| n.ledger_reclaims).sum()
+    }
+
+    /// Total duplicate replies suppressed across nodes.
+    pub fn dup_replies_suppressed_total(&self) -> u64 {
+        self.nodes.iter().map(|n| n.dup_replies_suppressed).sum()
     }
 
     pub fn to_json(&self) -> Json {
@@ -231,6 +275,27 @@ impl RunReport {
             ("workers_per_node", Json::Num(self.workers_per_node as f64)),
             ("events", Json::Num(self.events as f64)),
             ("deliver_events", Json::Num(self.deliver_events as f64)),
+            ("faults_dropped", Json::Num(self.faults_dropped as f64)),
+            (
+                "faults_duplicated",
+                Json::Num(self.faults_duplicated as f64),
+            ),
+            (
+                "steal_timeouts",
+                Json::Num(self.steal_timeouts_total() as f64),
+            ),
+            (
+                "steal_retries",
+                Json::Num(self.steal_retries_total() as f64),
+            ),
+            (
+                "ledger_reclaims",
+                Json::Num(self.ledger_reclaims_total() as f64),
+            ),
+            (
+                "dup_replies_suppressed",
+                Json::Num(self.dup_replies_suppressed_total() as f64),
+            ),
             ("steal_requests", Json::Num(steals.requests_sent as f64)),
             ("steal_successes", Json::Num(steals.successful_steals as f64)),
             ("steal_success_pct", Json::Num(steals.success_pct())),
@@ -287,7 +352,7 @@ impl RunReport {
                 Json::Arr(
                     victims
                         .iter()
-                        .map(|&(g, _, _)| Json::Num(g as f64))
+                        .map(|&(g, _, _, _)| Json::Num(g as f64))
                         .collect(),
                 ),
             ),
@@ -296,7 +361,16 @@ impl RunReport {
                 Json::Arr(
                     victims
                         .iter()
-                        .map(|&(_, d, e)| Json::Num((d + e) as f64))
+                        .map(|&(_, d, e, _)| Json::Num((d + e) as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "victim_timeouts",
+                Json::Arr(
+                    victims
+                        .iter()
+                        .map(|&(_, _, _, t)| Json::Num(t as f64))
                         .collect(),
                 ),
             ),
@@ -350,6 +424,8 @@ mod tests {
             link: LinkModel::ideal(),
             events: 0,
             deliver_events: 0,
+            faults_dropped: 0,
+            faults_duplicated: 0,
         };
         // each node's mean/max = 1 -> I = 0
         let e = r.potential_series(100.0);
@@ -371,6 +447,8 @@ mod tests {
             link: LinkModel::ideal(),
             events: 0,
             deliver_events: 0,
+            faults_dropped: 0,
+            faults_duplicated: 0,
         };
         let e = r.potential_series(100.0);
         // w = [1, 0]: I = 1 - 0.5 = 0.5; E = I*P = 1.0
@@ -388,6 +466,8 @@ mod tests {
             link: LinkModel::ideal(),
             events: 0,
             deliver_events: 0,
+            faults_dropped: 0,
+            faults_duplicated: 0,
         };
         assert_eq!(r.potential_series(10.0).len(), 3);
     }
@@ -398,6 +478,7 @@ mod tests {
         n0.victim_grants = vec![0, 3, 1];
         n0.victim_wt_denials = vec![0, 2, 0];
         n0.victim_empties = vec![0, 0, 4];
+        n0.victim_timeouts = vec![0, 1, 0];
         let n1 = NodeReport::default(); // hand-built: empty tables = zeros
         let mut n2 = NodeReport::default();
         n2.victim_grants = vec![5, 0, 0];
@@ -410,10 +491,12 @@ mod tests {
             link: LinkModel::ideal(),
             events: 0,
             deliver_events: 0,
+            faults_dropped: 0,
+            faults_duplicated: 0,
         };
         assert_eq!(
             r.victim_totals(),
-            vec![(5, 0, 0), (3, 2, 0), (1, 0, 4)],
+            vec![(5, 0, 0, 0), (3, 2, 0, 1), (1, 0, 4, 0)],
             "summed across thieves, indexed by victim"
         );
     }
@@ -433,6 +516,8 @@ mod tests {
             link: LinkModel::ideal(),
             events: 0,
             deliver_events: 0,
+            faults_dropped: 0,
+            faults_duplicated: 0,
         };
         assert_eq!(r.arrival_ready_all(), vec![3, 9]);
     }

@@ -38,5 +38,8 @@ pub use policy::{
     DIGEST_SAMPLE_CAP, EXEC_EWMA_ALPHA, EstimateDigest, ExecSnapshot, MigrateConfig,
     StarvationView, ThiefPolicy, VictimPolicy,
 };
-pub use protocol::{StealStats, VictimDecision};
+pub use protocol::{
+    steal_req_id, steal_timeout_us, StealStats, VictimDecision, STEAL_BACKOFF_CAP_EXP,
+    STEAL_TIMEOUT_FLOOR_US, THIEF_RETRY_BUDGET,
+};
 pub use victim::{classify_reply, VictimOutcome, VictimSelect, VictimSelector};

@@ -28,6 +28,64 @@ use super::policy::{
     migrate_time_us, steal_allowance, waiting_time_per_class_us, waiting_time_us, ExecSnapshot,
     MigrateConfig,
 };
+use super::victim::PRICED_REPLY_BYTES;
+
+/// How many times a thief re-issues a timed-out steal request before
+/// abandoning the slot (`--faults` hardening). With per-class drop
+/// probability capped at [`crate::faults::MAX_FAULT_P`] = 0.95, the
+/// chance that a request *and* all four retries lose a message is below
+/// `0.995^5` of the worst case — in practice a handful of retries
+/// clears any plan the fabric accepts, and the inflight slot is
+/// released (never leaked) either way.
+pub const THIEF_RETRY_BUDGET: u32 = 4;
+
+/// Floor on the steal timeout (µs): on an ideal link the modeled
+/// round trip is ~0, but the victim's migrate thread still polls its
+/// mailbox at `poll_interval_us` granularity and the threaded
+/// runtime's comm loop adds scheduling jitter — a sub-millisecond
+/// timeout would fire on healthy traffic and every "retry" would be a
+/// spurious duplicate.
+pub const STEAL_TIMEOUT_FLOOR_US: f64 = 5_000.0;
+
+/// Exponential-backoff cap: the timeout doubles per attempt but never
+/// exceeds `2^4 = 16×` the base, so a long fault window delays
+/// recovery by a bounded factor instead of unboundedly.
+pub const STEAL_BACKOFF_CAP_EXP: u32 = 4;
+
+/// Compose a steal request id: the thief's node id in the high bits,
+/// its monotone per-thief counter in the low 40 — globally unique
+/// without coordination, and wire-free (the id rides the existing
+/// 16-byte request/reply headers). `+1` keeps every id nonzero, so 0
+/// can never collide with a live request. Shared by the threaded
+/// runtime and the DES so transcripts line up.
+pub fn steal_req_id(thief: u32, counter: u64) -> u64 {
+    ((u64::from(thief) + 1) << 40) | (counter & ((1 << 40) - 1))
+}
+
+/// The thief's steal timeout for retry `attempt` (0 = first try), in
+/// µs. Shared by the threaded runtime and the DES so both time out —
+/// and therefore retry, and therefore agree — identically.
+///
+/// The base is derived from the same Khatiri-style round-trip model
+/// the victim selector prices steals with: request out + reply back
+/// (`2·latency`) plus the minimal priced reply
+/// ([`PRICED_REPLY_BYTES`]) at link bandwidth. Four round trips of
+/// headroom absorb fault-plan delay multipliers, plus the victim's
+/// processing overhead and two mailbox poll intervals, floored at
+/// [`STEAL_TIMEOUT_FLOOR_US`]; then capped exponential backoff per
+/// attempt.
+pub fn steal_timeout_us(
+    latency_us: f64,
+    bw_bytes_per_us: f64,
+    migrate_overhead_us: f64,
+    poll_interval_us: f64,
+    attempt: u32,
+) -> f64 {
+    let round_trip = 2.0 * latency_us + PRICED_REPLY_BYTES / bw_bytes_per_us.max(f64::MIN_POSITIVE);
+    let base = (4.0 * round_trip + migrate_overhead_us + 2.0 * poll_interval_us)
+        .max(STEAL_TIMEOUT_FLOOR_US);
+    base * f64::from(1u32 << attempt.min(STEAL_BACKOFF_CAP_EXP))
+}
 
 /// Outcome of processing one steal request at the victim.
 #[derive(Debug, Default)]
@@ -591,6 +649,47 @@ mod tests {
             assert_eq!(q.stats().feedback_grants, 1, "{backend:?}: empty is not a grant");
             assert_eq!(q.stats().feedback_wt_denials, 0, "{backend:?}");
         }
+    }
+
+    #[test]
+    fn steal_req_ids_are_unique_across_thieves_and_nonzero() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for thief in 0..16u32 {
+            for counter in 0..64u64 {
+                let id = steal_req_id(thief, counter);
+                assert_ne!(id, 0);
+                assert!(seen.insert(id), "collision at thief {thief} counter {counter}");
+            }
+        }
+    }
+
+    #[test]
+    fn steal_timeout_scales_with_link_and_backs_off_capped() {
+        // Ideal link: the floor dominates.
+        assert_eq!(steal_timeout_us(0.0, 1e9, 50.0, 100.0, 0), STEAL_TIMEOUT_FLOOR_US);
+        // Slow link: the round-trip term dominates the floor.
+        // rt = 2·10_000 + 64/1 = 20_064; base = 4·rt + 150 + 200.
+        let slow = steal_timeout_us(10_000.0, 1.0, 150.0, 100.0, 0);
+        assert_eq!(slow, 4.0 * 20_064.0 + 150.0 + 200.0);
+        // Exponential backoff, capped at 2^STEAL_BACKOFF_CAP_EXP.
+        for attempt in 0..=STEAL_BACKOFF_CAP_EXP {
+            assert_eq!(
+                steal_timeout_us(10_000.0, 1.0, 150.0, 100.0, attempt),
+                slow * f64::from(1u32 << attempt),
+                "attempt {attempt}"
+            );
+        }
+        assert_eq!(
+            steal_timeout_us(10_000.0, 1.0, 150.0, 100.0, 40),
+            steal_timeout_us(10_000.0, 1.0, 150.0, 100.0, STEAL_BACKOFF_CAP_EXP),
+            "backoff is capped, not unbounded"
+        );
+        // Monotone in attempt up to the cap.
+        assert!(
+            steal_timeout_us(0.0, 1e9, 50.0, 100.0, 1) > STEAL_TIMEOUT_FLOOR_US,
+            "retries wait longer than first tries"
+        );
     }
 
     #[test]

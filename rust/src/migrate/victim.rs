@@ -127,10 +127,19 @@ pub enum VictimOutcome {
     DeniedWaitingTime,
     /// The victim had nothing stealable at all.
     DeniedEmpty,
+    /// No reply arrived before the thief's steal timeout (`--faults`):
+    /// the request or its reply was lost, or the victim is stalled.
+    /// Scored like a miss — a victim that does not answer is worth
+    /// exactly as little as one that answers empty — but counted
+    /// separately so the telemetry can tell loss from poverty.
+    TimedOut,
 }
 
 /// Classify a steal reply from its observable fields — shared by the
 /// threaded runtime and the DES so the two label outcomes identically.
+/// A reply that never arrives is classified at the timeout site
+/// ([`VictimOutcome::TimedOut`]), not here: timeouts have no reply to
+/// observe.
 pub fn classify_reply(got_tasks: bool, denied_by_waiting_time: bool) -> VictimOutcome {
     if got_tasks {
         VictimOutcome::Granted
@@ -165,6 +174,7 @@ pub struct VictimSelector {
     grants: Vec<f64>,
     wt_denials: Vec<f64>,
     empties: Vec<f64>,
+    timeouts: Vec<f64>,
     /// Weighted mean of digest `avg_us` observations, per victim…
     richness_us: Vec<f64>,
     /// …its decayed observation weight…
@@ -194,6 +204,7 @@ impl VictimSelector {
             grants: vec![0.0; n],
             wt_denials: vec![0.0; n],
             empties: vec![0.0; n],
+            timeouts: vec![0.0; n],
             richness_us: vec![0.0; n],
             richness_w: vec![0.0; n],
             richness_stamp: vec![0; n],
@@ -229,10 +240,12 @@ impl VictimSelector {
         self.grants[victim] *= OUTCOME_DECAY;
         self.wt_denials[victim] *= OUTCOME_DECAY;
         self.empties[victim] *= OUTCOME_DECAY;
+        self.timeouts[victim] *= OUTCOME_DECAY;
         match outcome {
             VictimOutcome::Granted => self.grants[victim] += 1.0,
             VictimOutcome::DeniedWaitingTime => self.wt_denials[victim] += 1.0,
             VictimOutcome::DeniedEmpty => self.empties[victim] += 1.0,
+            VictimOutcome::TimedOut => self.timeouts[victim] += 1.0,
         }
         if let Some(avg_us) = digest_avg_us {
             if avg_us > 0.0 {
@@ -257,7 +270,7 @@ impl VictimSelector {
     /// masses. No history → 0.5.
     pub fn grant_likelihood(&self, victim: usize) -> f64 {
         let g = self.grants[victim];
-        let miss = self.wt_denials[victim] + self.empties[victim];
+        let miss = self.wt_denials[victim] + self.empties[victim] + self.timeouts[victim];
         (g + OUTCOME_PRIOR) / (g + miss + 2.0 * OUTCOME_PRIOR)
     }
 
@@ -326,6 +339,7 @@ impl VictimSelector {
             self.grants[v] *= factor;
             self.wt_denials[v] *= factor;
             self.empties[v] *= factor;
+            self.timeouts[v] *= factor;
             self.richness_w[v] *= factor;
         }
     }
@@ -412,6 +426,33 @@ mod tests {
         s.set_latency_us(1, 20_000.0);
         assert!(s.score(1, 100.0) < s.score(2, 100.0));
         assert_eq!(s.pick(100.0), 2, "latency prices the rich victim out");
+    }
+
+    #[test]
+    fn timeouts_score_like_misses_but_decay_and_fade() {
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        for _ in 0..5 {
+            s.record(1, VictimOutcome::Granted, Some(50.0));
+            s.record(2, VictimOutcome::TimedOut, None);
+        }
+        // A victim that never answers prices like one that answers empty.
+        assert!(s.grant_likelihood(2) < 0.2, "{}", s.grant_likelihood(2));
+        assert!(s.score(1, 50.0) > s.score(2, 50.0));
+        for _ in 0..20 {
+            assert_eq!(s.pick(50.0), 1, "the lossy victim is avoided");
+        }
+        // Decay forgives a recovered victim (the fault window closed).
+        for _ in 0..5 {
+            s.record(2, VictimOutcome::Granted, Some(50.0));
+        }
+        assert!(
+            s.grant_likelihood(2) > 0.6,
+            "timeouts decay: {}",
+            s.grant_likelihood(2)
+        );
+        // And fade(0) wipes the timeout mass like every other signal.
+        s.fade(0.0);
+        assert_eq!(s.grant_likelihood(2), 0.5);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Multi-node threaded runtime: workers + comm thread + migrate thread
 //! per node, Safra termination, steal protocol over the message fabric.
 
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -9,13 +10,15 @@ use crate::comm::{LinkModel, Msg, Network, NodeMailbox};
 use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
+use crate::faults::{FaultMark, FaultPlan};
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
     class_estimate_update, classify_reply, ewma_update, exec_estimate_seeded_us, is_starving,
-    merge_estimate, protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig,
-    StarvationView, StealStats, VictimOutcome, VictimSelect, VictimSelector,
+    merge_estimate, protocol::decide_steal, steal_req_id, steal_timeout_us, EstimateDigest,
+    ExecSnapshot, MigrateConfig, StarvationView, StealStats, VictimOutcome, VictimSelect,
+    VictimSelector, THIEF_RETRY_BUDGET,
 };
-use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
+use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, StealOutcome, TaskMeta};
 use crate::term::{SafraAction, SafraState};
 use crate::util::rng::thief_rng;
 
@@ -38,6 +41,12 @@ pub struct ClusterConfig {
     /// Sharded steal-pool floor (`--pool-floor`; see
     /// [`crate::sched::POOL_FLOOR`]).
     pub pool_floor: usize,
+    /// Fault-injection plan (`--faults`) applied by the message fabric
+    /// to steal traffic, plus the self-healing protocol it activates
+    /// (request timeouts, retries, the victim-side transfer ledger).
+    /// Disabled by default — the fabric and protocol are then
+    /// byte-identical to the fault-free runtime.
+    pub faults: FaultPlan,
 }
 
 impl Default for ClusterConfig {
@@ -51,8 +60,70 @@ impl Default for ClusterConfig {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: POOL_FLOOR,
+            faults: FaultPlan::default(),
         }
     }
+}
+
+/// One outstanding thief-side steal request. The map is maintained even
+/// with `--faults` off: matching replies to requests is what lets the
+/// shutdown drain reclaim the inflight slot of a reply that never got
+/// processed (the pre-PR 7 `inflight_steals` leak).
+#[derive(Clone, Copy, Debug)]
+struct PendingSteal {
+    victim: NodeId,
+    sent_at: Instant,
+    /// Retry number (0 = first try) — indexes the capped exponential
+    /// backoff in [`steal_timeout_us`].
+    attempt: u32,
+}
+
+/// Thief-side request bookkeeping, one mutex for both maps: the
+/// comm thread's resolve (check `resolved`, remove `pending`, record
+/// the outcome) and the migrate thread's timeout claim (remove
+/// `pending`, mark Abandoned) must each be atomic against the other,
+/// or a reply racing a timeout could both enqueue the tasks *and* nack
+/// the victim into reclaiming them — a double execution.
+#[derive(Default)]
+struct StealBook {
+    pending: HashMap<u64, PendingSteal>,
+    resolved: HashMap<u64, StealResolution>,
+}
+
+/// Terminal state of a thief-side request (`--faults` only), kept so a
+/// late or fabric-duplicated reply is suppressed instead of processed
+/// twice, and so the victim's retransmits can be re-answered with the
+/// ack they are waiting for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StealResolution {
+    /// A granted reply was accepted and its tasks enqueued; the ack
+    /// went (or is being re-sent) to the victim.
+    AckedGrant,
+    /// A denial was processed — nothing to ack (the victim keeps no
+    /// ledger entry for denials).
+    AckedDenial,
+    /// The thief timed out and nacked; any reply that still arrives is
+    /// discarded and re-nacked so the victim reclaims exactly once.
+    Abandoned,
+}
+
+/// Victim-side record of a granted-but-unacknowledged transfer
+/// (`--faults` only). The tasks live here — off the queue, not yet
+/// owned by the thief — until the thief's [`Msg::TransferAck`] retires
+/// the entry (accepted) or reclaims it (nack → batch reinsert), so a
+/// dropped reply can never lose tasks and a duplicated one can never
+/// double them.
+struct LedgerEntry {
+    thief: NodeId,
+    /// The granted tasks, for the nack-reclaim reinsert.
+    tasks: Vec<TaskDesc>,
+    /// The exact reply message sent, retransmitted verbatim on
+    /// ack-timeout and on fabric-duplicated requests.
+    reply: Msg,
+    sent_at: Instant,
+    /// Retransmit number — backoff index, uncapped count (the victim
+    /// never unilaterally reclaims; only a nack reclaims).
+    attempt: u32,
 }
 
 /// Shared state of one runtime domain.
@@ -118,11 +189,34 @@ struct NodeState {
     victim_grants: Vec<AtomicU64>,
     victim_wt_denials: Vec<AtomicU64>,
     victim_empties: Vec<AtomicU64>,
+    /// Thief-side steal timeouts per victim (`--faults`), the fourth
+    /// outcome column of the per-victim telemetry.
+    victim_timeouts: Vec<AtomicU64>,
     /// The targeted victim selector (`--victim-select targeted`):
     /// picked by the migrate thread, fed replies by the comm thread.
     /// Uniform mode never takes this lock.
     victim_sel: Mutex<VictimSelector>,
     inflight_steals: AtomicUsize,
+    /// Monotone request-id counter for [`steal_req_id`].
+    next_req: AtomicU64,
+    /// Outstanding thief-side requests (always maintained — see
+    /// [`PendingSteal`]) and their terminal resolutions (`--faults`
+    /// only), under one lock (see [`StealBook`]).
+    steal_book: Mutex<StealBook>,
+    /// Victim-side request ids already served (`--faults` only):
+    /// fabric-duplicated requests re-answer from the ledger instead of
+    /// extracting twice.
+    served_reqs: Mutex<HashSet<u64>>,
+    /// Victim-side transfer ledger (`--faults` only).
+    ledger: Mutex<HashMap<u64, LedgerEntry>>,
+    /// Tasks parked in the ledger — a node holding unacked transfers is
+    /// not passive (Safra safety: those tasks are nowhere else).
+    ledger_tasks: AtomicUsize,
+    /// `--faults` protocol telemetry (see [`NodeReport`]).
+    steal_timeouts: AtomicU64,
+    steal_retries: AtomicU64,
+    ledger_reclaims: AtomicU64,
+    dup_replies_suppressed: AtomicU64,
     safra: Mutex<SafraState>,
     shutdown: AtomicBool,
     polls: Mutex<Vec<PollSample>>,
@@ -133,7 +227,12 @@ struct NodeState {
 
 impl NodeState {
     fn passive(&self) -> bool {
-        self.executing_count.load(Ordering::SeqCst) == 0 && self.queue.is_empty()
+        self.executing_count.load(Ordering::SeqCst) == 0
+            && self.queue.is_empty()
+            // Unacked granted transfers: the tasks exist only in this
+            // node's ledger, so the node must stay active until the
+            // thief's ack retires them or its nack reclaims them.
+            && self.ledger_tasks.load(Ordering::SeqCst) == 0
     }
 }
 
@@ -158,7 +257,7 @@ impl Cluster {
         executor: Arc<dyn super::TaskExecutor>,
     ) -> RunReport {
         let n = graph.num_nodes();
-        let (net, mailboxes) = Network::new(n, cfg.link);
+        let (net, mailboxes) = Network::new_with_faults(n, cfg.link, cfg.faults, cfg.seed);
         let nodes: Vec<Arc<NodeState>> = (0..n)
             .map(|i| {
                 Arc::new(NodeState {
@@ -185,11 +284,21 @@ impl Cluster {
                     victim_grants: (0..n).map(|_| AtomicU64::new(0)).collect(),
                     victim_wt_denials: (0..n).map(|_| AtomicU64::new(0)).collect(),
                     victim_empties: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                    victim_timeouts: (0..n).map(|_| AtomicU64::new(0)).collect(),
                     victim_sel: Mutex::new(
                         VictimSelector::new(i, n.max(2), thief_rng(cfg.seed, i))
                             .with_link(cfg.link.latency_us, cfg.link.bw_bytes_per_us),
                     ),
                     inflight_steals: AtomicUsize::new(0),
+                    next_req: AtomicU64::new(0),
+                    steal_book: Mutex::new(StealBook::default()),
+                    served_reqs: Mutex::new(HashSet::new()),
+                    ledger: Mutex::new(HashMap::new()),
+                    ledger_tasks: AtomicUsize::new(0),
+                    steal_timeouts: AtomicU64::new(0),
+                    steal_retries: AtomicU64::new(0),
+                    ledger_reclaims: AtomicU64::new(0),
+                    dup_replies_suppressed: AtomicU64::new(0),
                     safra: Mutex::new(SafraState::new(NodeId(i as u32), n)),
                     shutdown: AtomicBool::new(false),
                     polls: Mutex::new(Vec::new()),
@@ -257,6 +366,31 @@ impl Cluster {
         }
         net.shutdown();
 
+        // Self-healing postconditions. Requests still pending at
+        // shutdown (their reply sat undelivered in a mailbox, or was
+        // dropped by the fault plan) are abandoned now, reclaiming
+        // their inflight slots — then every slot must be accounted for
+        // and the transfer ledger empty: exactly-once conservation has
+        // no residue under any fault pattern.
+        for nd in &nodes {
+            let abandoned = nd.steal_book.lock().unwrap().pending.drain().count();
+            if abandoned > 0 {
+                nd.inflight_steals.fetch_sub(abandoned, Ordering::SeqCst);
+            }
+            assert_eq!(
+                nd.inflight_steals.load(Ordering::SeqCst),
+                0,
+                "node {} leaked inflight-steal slots",
+                nd.id.0
+            );
+            assert!(
+                nd.ledger.lock().unwrap().is_empty(),
+                "node {} shut down with transfer-ledger residue",
+                nd.id.0
+            );
+            assert_eq!(nd.ledger_tasks.load(Ordering::SeqCst), 0);
+        }
+
         let makespan_ns = nodes
             .iter()
             .map(|nd| nd.last_finish_ns.load(Ordering::SeqCst))
@@ -279,6 +413,8 @@ impl Cluster {
             link: cfg.link,
             events: 0,
             deliver_events: 0,
+            faults_dropped: net.faults_dropped.load(Ordering::Relaxed),
+            faults_duplicated: net.faults_duplicated.load(Ordering::Relaxed),
             nodes: nodes
                 .iter()
                 .map(|nd| {
@@ -316,6 +452,17 @@ impl Cluster {
                             .iter()
                             .map(|a| a.load(Ordering::Relaxed))
                             .collect(),
+                        victim_timeouts: nd
+                            .victim_timeouts
+                            .iter()
+                            .map(|a| a.load(Ordering::Relaxed))
+                            .collect(),
+                        steal_timeouts: nd.steal_timeouts.load(Ordering::Relaxed),
+                        steal_retries: nd.steal_retries.load(Ordering::Relaxed),
+                        ledger_reclaims: nd.ledger_reclaims.load(Ordering::Relaxed),
+                        dup_replies_suppressed: nd
+                            .dup_replies_suppressed
+                            .load(Ordering::Relaxed),
                         sched: nd.queue.stats(),
                         polls: std::mem::take(&mut nd.polls.lock().unwrap()),
                         arrival_ready: std::mem::take(&mut nd.arrival_ready.lock().unwrap()),
@@ -598,15 +745,43 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
         }
         let env = mailbox.recv_timeout(Duration::from_micros(200));
         if let Some(env) = env {
-            if env.msg.is_basic() {
+            // FaultMark contract (see `crate::faults`): a Dropped
+            // envelope is delivered for Safra accounting only — count
+            // the receive, discard the payload. A Duplicate is the
+            // fabric's extra copy — process it (the protocol's request
+            // ids dedup it) but do NOT count it, so the message deficit
+            // stays balanced at one receive per send.
+            if env.msg.is_basic() && env.fault != FaultMark::Duplicate {
                 node.safra.lock().unwrap().on_receive();
+            }
+            if env.fault == FaultMark::Dropped {
+                continue;
             }
             // A steal reply's sender IS the victim it reports on.
             let src = env.src;
             match env.msg {
                 Msg::Activate { task } => activate_local(&node, graph, task),
                 Msg::ActivateBatch { tasks } => activate_local_batch(&node, graph, &tasks),
-                Msg::StealRequest { thief } => {
+                Msg::StealRequest { thief, req } => {
+                    let faults_on = sh.cfg.faults.enabled;
+                    if faults_on && !node.served_reqs.lock().unwrap().insert(req) {
+                        // Fabric-duplicated request: the first copy was
+                        // served. If its grant still awaits the ack,
+                        // retransmit the stored reply verbatim (the
+                        // thief dedups on `req`); otherwise the
+                        // original answer already covers this copy.
+                        let resend = node
+                            .ledger
+                            .lock()
+                            .unwrap()
+                            .get(&req)
+                            .map(|e| e.reply.clone());
+                        if let Some(msg) = resend {
+                            node.safra.lock().unwrap().on_send();
+                            sh.net.send(node.id, thief, msg);
+                        }
+                        continue;
+                    }
                     let workers = sh.cfg.workers_per_node;
                     // The gate's execution-time estimates (shared policy
                     // helpers, so the DES cannot diverge): EWMA or
@@ -658,25 +833,99 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                     // victim's estimate digest, priced into wire_bytes.
                     let digest = (sh.cfg.migrate.share_estimates && !decision.tasks.is_empty())
                         .then(|| steal_digest(&node, est.avg_us, done));
+                    let granted = decision.tasks.clone();
+                    let reply = Msg::StealReply {
+                        req,
+                        tasks: decision.tasks,
+                        payload_bytes: decision.payload_bytes,
+                        digest,
+                        denied_by_waiting_time: decision.denied_by_waiting_time,
+                    };
+                    if faults_on && !granted.is_empty() {
+                        // Park the granted tasks in the transfer ledger
+                        // until the thief acks: order matters — the
+                        // tasks must be accounted somewhere before the
+                        // reply leaves, or a dropped reply could race a
+                        // Safra probe into a false termination.
+                        node.ledger_tasks.fetch_add(granted.len(), Ordering::SeqCst);
+                        node.ledger.lock().unwrap().insert(
+                            req,
+                            LedgerEntry {
+                                thief,
+                                tasks: granted,
+                                reply: reply.clone(),
+                                sent_at: Instant::now(),
+                                attempt: 0,
+                            },
+                        );
+                    }
                     node.safra.lock().unwrap().on_send();
-                    sh.net.send(
-                        node.id,
-                        thief,
-                        Msg::StealReply {
-                            tasks: decision.tasks,
-                            payload_bytes: decision.payload_bytes,
-                            digest,
-                            denied_by_waiting_time: decision.denied_by_waiting_time,
-                        },
-                    );
+                    sh.net.send(node.id, thief, reply);
                 }
                 Msg::StealReply {
+                    req,
                     tasks,
                     digest,
                     denied_by_waiting_time,
                     ..
                 } => {
-                    node.inflight_steals.fetch_sub(1, Ordering::SeqCst);
+                    let faults_on = sh.cfg.faults.enabled;
+                    // Resolve the reply atomically against the timeout
+                    // scan (one StealBook lock): either this request is
+                    // already resolved — duplicate/late reply, suppress
+                    // and re-answer with the ack the victim's
+                    // retransmit loop is waiting for — or this reply
+                    // resolves it now.
+                    let granted = !tasks.is_empty();
+                    let dup = {
+                        let mut book = node.steal_book.lock().unwrap();
+                        match book.resolved.get(&req).copied() {
+                            Some(res) => Some(res),
+                            None => {
+                                // Release the inflight slot only on a
+                                // matched request: an unmatched reply
+                                // must not push the counter negative —
+                                // the pre-PR 7 accounting decremented
+                                // unconditionally and leaked on every
+                                // abandoned path.
+                                if book.pending.remove(&req).is_some() {
+                                    node.inflight_steals.fetch_sub(1, Ordering::SeqCst);
+                                }
+                                if faults_on {
+                                    book.resolved.insert(
+                                        req,
+                                        if granted {
+                                            StealResolution::AckedGrant
+                                        } else {
+                                            StealResolution::AckedDenial
+                                        },
+                                    );
+                                }
+                                None
+                            }
+                        }
+                    };
+                    if let Some(res) = dup {
+                        node.dup_replies_suppressed.fetch_add(1, Ordering::Relaxed);
+                        let ack = match res {
+                            StealResolution::AckedGrant => Some(true),
+                            StealResolution::Abandoned => Some(false),
+                            StealResolution::AckedDenial => None,
+                        };
+                        if let Some(accepted) = ack {
+                            node.safra.lock().unwrap().on_send();
+                            sh.net
+                                .send(node.id, src, Msg::TransferAck { req, accepted });
+                        }
+                        continue;
+                    }
+                    if faults_on && granted {
+                        // Ack the transfer so the victim retires its
+                        // ledger entry; denials keep none.
+                        node.safra.lock().unwrap().on_send();
+                        sh.net
+                            .send(node.id, src, Msg::TransferAck { req, accepted: true });
+                    }
                     // Per-victim outcome telemetry (always) and the
                     // targeted selector's history (only when it will be
                     // consulted — uniform mode never takes the lock).
@@ -685,6 +934,7 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                         VictimOutcome::Granted => &node.victim_grants,
                         VictimOutcome::DeniedWaitingTime => &node.victim_wt_denials,
                         VictimOutcome::DeniedEmpty => &node.victim_empties,
+                        VictimOutcome::TimedOut => &node.victim_timeouts,
                     };
                     table[src.idx()].fetch_add(1, Ordering::Relaxed);
                     if sh.cfg.migrate.victim_select == VictimSelect::Targeted {
@@ -725,6 +975,25 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                         // in one batched insert: one queue-lock
                         // acquisition per reply, not one per task.
                         enqueue_batch(&node, graph, &tasks, BatchSite::StealReply);
+                    }
+                }
+                Msg::TransferAck { req, accepted } => {
+                    // Retire (ack) or reclaim (nack) the ledger entry.
+                    // Unknown req = the entry was already retired by an
+                    // earlier copy of this ack — idempotent no-op.
+                    let entry = node.ledger.lock().unwrap().remove(&req);
+                    if let Some(entry) = entry {
+                        if !accepted {
+                            // The thief abandoned the transfer: the
+                            // tasks come home through the same batch
+                            // site a gate denial uses. Reinsert before
+                            // releasing the ledger accounting so the
+                            // node never looks passive in between.
+                            node.ledger_reclaims.fetch_add(1, Ordering::Relaxed);
+                            enqueue_batch(&node, graph, &entry.tasks, BatchSite::GateDenial);
+                        }
+                        node.ledger_tasks
+                            .fetch_sub(entry.tasks.len(), Ordering::SeqCst);
                     }
                 }
                 Msg::Token(tok) => {
@@ -780,6 +1049,10 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
             return;
         }
         std::thread::sleep(poll);
+        if sh.cfg.faults.enabled {
+            scan_steal_timeouts(&sh, &node);
+            scan_ledger_acks(&sh, &node);
+        }
         // Both fields are O(1) counter reads — the starvation poll no
         // longer walks the executing set calling successors() per task.
         let view = StarvationView {
@@ -815,10 +1088,143 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
                     NodeId(node.victim_sel.lock().unwrap().pick(fallback) as u32)
                 }
             };
+            let req = steal_req_id(node.id.0, node.next_req.fetch_add(1, Ordering::Relaxed));
+            node.steal_book.lock().unwrap().pending.insert(
+                req,
+                PendingSteal {
+                    victim,
+                    sent_at: Instant::now(),
+                    attempt: 0,
+                },
+            );
             node.safra.lock().unwrap().on_send();
             sh.net
-                .send(node.id, victim, Msg::StealRequest { thief: node.id });
+                .send(node.id, victim, Msg::StealRequest { thief: node.id, req });
         }
+    }
+}
+
+/// Thief-side timeout sweep (`--faults` only, from the migrate
+/// thread): every pending request older than its
+/// [`steal_timeout_us`] deadline is abandoned — nacked so the victim
+/// reclaims any parked grant — and, while the retry budget lasts,
+/// re-issued to the same victim under a fresh request id with the
+/// inflight slot retained. Budget exhausted → the slot is released.
+fn scan_steal_timeouts(sh: &Arc<Shared>, node: &Arc<NodeState>) {
+    let now = Instant::now();
+    let mc = &sh.cfg.migrate;
+    let expired: Vec<(u64, PendingSteal)> = node
+        .steal_book
+        .lock()
+        .unwrap()
+        .pending
+        .iter()
+        .filter(|(_, p)| {
+            now.duration_since(p.sent_at).as_secs_f64() * 1e6
+                >= steal_timeout_us(
+                    sh.cfg.link.latency_us,
+                    sh.cfg.link.bw_bytes_per_us,
+                    mc.migrate_overhead_us,
+                    mc.poll_interval_us,
+                    p.attempt,
+                )
+        })
+        .map(|(r, p)| (*r, *p))
+        .collect();
+    for (req, p) in expired {
+        // Claim the request atomically against the comm thread's
+        // resolve (one StealBook lock): remove it from pending and
+        // mark it Abandoned in one critical section, so a racing reply
+        // is suppressed (and re-nacked) instead of double-resolving.
+        // If the remove misses, the reply won — this timeout never
+        // happened.
+        let claimed = {
+            let mut book = node.steal_book.lock().unwrap();
+            if book.pending.remove(&req).is_some() {
+                book.resolved.insert(req, StealResolution::Abandoned);
+                true
+            } else {
+                false
+            }
+        };
+        if !claimed {
+            continue;
+        }
+        node.steal_timeouts.fetch_add(1, Ordering::Relaxed);
+        node.victim_timeouts[p.victim.idx()].fetch_add(1, Ordering::Relaxed);
+        if mc.victim_select == VictimSelect::Targeted {
+            node.victim_sel.lock().unwrap().record(
+                p.victim.idx(),
+                VictimOutcome::TimedOut,
+                None,
+            );
+        }
+        // A timeout is a denial-flavored signal to the scheduler: the
+        // fabric just proved migration is slower than planned.
+        node.queue.feedback(StealOutcome::TimedOut);
+        // Nack so a grant parked in the victim's ledger comes home.
+        node.safra.lock().unwrap().on_send();
+        sh.net
+            .send(node.id, p.victim, Msg::TransferAck { req, accepted: false });
+        if p.attempt < THIEF_RETRY_BUDGET {
+            let retry = steal_req_id(node.id.0, node.next_req.fetch_add(1, Ordering::Relaxed));
+            node.steal_book.lock().unwrap().pending.insert(
+                retry,
+                PendingSteal {
+                    victim: p.victim,
+                    sent_at: Instant::now(),
+                    attempt: p.attempt + 1,
+                },
+            );
+            node.steal_retries.fetch_add(1, Ordering::Relaxed);
+            node.steal.lock().unwrap().requests_sent += 1;
+            node.safra.lock().unwrap().on_send();
+            sh.net.send(
+                node.id,
+                p.victim,
+                Msg::StealRequest {
+                    thief: node.id,
+                    req: retry,
+                },
+            );
+        } else {
+            node.inflight_steals.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Victim-side ack sweep (`--faults` only, from the migrate thread):
+/// ledger entries whose ack is overdue get their stored reply
+/// retransmitted verbatim, with the same capped backoff as the thief's
+/// timeout — and *unbounded* retries: the victim never unilaterally
+/// reclaims (the thief may be executing the tasks), only a nack does.
+/// With per-class fault probabilities capped below 1, some retransmit
+/// eventually lands and its ack (or nack) retires the entry w.p. 1.
+fn scan_ledger_acks(sh: &Arc<Shared>, node: &Arc<NodeState>) {
+    let now = Instant::now();
+    let mc = &sh.cfg.migrate;
+    let resend: Vec<(NodeId, Msg)> = {
+        let mut ledger = node.ledger.lock().unwrap();
+        let mut out = Vec::new();
+        for (_, e) in ledger.iter_mut() {
+            let deadline = steal_timeout_us(
+                sh.cfg.link.latency_us,
+                sh.cfg.link.bw_bytes_per_us,
+                mc.migrate_overhead_us,
+                mc.poll_interval_us,
+                e.attempt,
+            );
+            if now.duration_since(e.sent_at).as_secs_f64() * 1e6 >= deadline {
+                e.sent_at = now;
+                e.attempt += 1;
+                out.push((e.thief, e.reply.clone()));
+            }
+        }
+        out
+    };
+    for (thief, reply) in resend {
+        node.safra.lock().unwrap().on_send();
+        sh.net.send(node.id, thief, reply);
     }
 }
 
@@ -873,6 +1279,79 @@ mod tests {
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), total);
+        // Faults off: none of the self-healing machinery may engage.
+        for n in &r.nodes {
+            assert_eq!(n.steal_timeouts, 0);
+            assert_eq!(n.steal_retries, 0);
+            assert_eq!(n.ledger_reclaims, 0);
+            assert_eq!(n.dup_replies_suppressed, 0);
+            assert!(n.victim_timeouts.iter().all(|&t| t == 0));
+        }
+    }
+
+    /// The acceptance scenario: an 8-node Cholesky over a fabric that
+    /// drops 20% of steal replies (and duplicates 10% of everything)
+    /// still executes every task exactly once — dropped grants come
+    /// home through the transfer ledger's nack-reclaim, duplicated
+    /// replies are suppressed by request id, and the end-of-run
+    /// asserts inside [`Cluster::run`] prove zero ledger residue and
+    /// zero inflight-slot leaks.
+    #[test]
+    fn faulty_fabric_cholesky_completes_exactly_once() {
+        let g = chol(10, 8);
+        let total = g.total_tasks().unwrap();
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 50.0,
+                    ..Default::default()
+                },
+                faults: "drop-reply=0.2,dup=0.1".parse().unwrap(),
+                ..Default::default()
+            },
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(
+            r.tasks_total_executed(),
+            total,
+            "exactly-once under 20% reply loss"
+        );
+    }
+
+    /// Same under an irregular workload with real (spinning) task
+    /// bodies and a plan that drops *and* delays every steal-message
+    /// class — the worst case for the timeout derivation, since
+    /// delayed replies race the retry path.
+    #[test]
+    fn faulty_fabric_uts_completes_exactly_once() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                migrate: MigrateConfig {
+                    poll_interval_us: 30.0,
+                    ..Default::default()
+                },
+                faults: "drop=0.2,delay=2x,delay-p=0.3".parse().unwrap(),
+                ..Default::default()
+            },
+            Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
+                30_000.0
+            })),
+        );
+        assert_eq!(r.tasks_total_executed(), size);
     }
 
     #[test]

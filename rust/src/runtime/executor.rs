@@ -267,6 +267,7 @@ mod tests {
                 sched: SchedBackend::Central,
                 batch_activations: true,
                 pool_floor: crate::sched::POOL_FLOOR,
+                faults: Default::default(),
             };
             let r = Cluster::run(g.clone(), cfg, ex.clone());
             assert_eq!(r.tasks_total_executed(), g.total_tasks().unwrap());

@@ -61,6 +61,7 @@ pub struct CentralQueue {
     /// steal poll just to bump a counter.
     feedback_grants: AtomicU64,
     feedback_wt_denials: AtomicU64,
+    feedback_timeouts: AtomicU64,
 }
 
 impl CentralQueue {
@@ -135,6 +136,9 @@ impl CentralQueue {
                 self.feedback_wt_denials.fetch_add(1, Ordering::Relaxed);
             }
             StealOutcome::DeniedEmpty => {}
+            StealOutcome::TimedOut => {
+                self.feedback_timeouts.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
@@ -247,6 +251,7 @@ impl CentralQueue {
         };
         stats.feedback_grants = self.feedback_grants.load(Ordering::Relaxed);
         stats.feedback_wt_denials = self.feedback_wt_denials.load(Ordering::Relaxed);
+        stats.feedback_timeouts = self.feedback_timeouts.load(Ordering::Relaxed);
         stats
     }
 

@@ -274,6 +274,12 @@ pub enum StealOutcome {
     DeniedWaitingTime,
     /// Nothing stealable was queued — no locality signal either way.
     DeniedEmpty,
+    /// Thief-side only (`--faults`): a steal request timed out without
+    /// any reply. No gate verdict was measured, but the thief just
+    /// proved that migration over this fabric is *at least* a timeout
+    /// slower than planned — treated like a denial (keep tasks local)
+    /// by the sharded backend's watermark.
+    TimedOut,
 }
 
 /// Which bulk-arrival path a batched insert came from. The accounting
@@ -359,6 +365,9 @@ pub struct SchedStats {
     pub feedback_grants: u64,
     /// [`StealOutcome::DeniedWaitingTime`] feedback events received.
     pub feedback_wt_denials: u64,
+    /// [`StealOutcome::TimedOut`] feedback events received (thief-side
+    /// steal timeouts under `--faults`).
+    pub feedback_timeouts: u64,
     /// Live adaptive spill watermark at snapshot time (sharded backend
     /// only; the central backend has no watermark and reports 0).
     pub watermark: u64,
@@ -775,9 +784,13 @@ mod tests {
             q.feedback(StealOutcome::DeniedWaitingTime);
             q.feedback(StealOutcome::DeniedWaitingTime);
             q.feedback(StealOutcome::DeniedEmpty);
+            q.feedback(StealOutcome::TimedOut);
+            q.feedback(StealOutcome::TimedOut);
+            q.feedback(StealOutcome::TimedOut);
             let s = q.stats();
             assert_eq!(s.feedback_grants, 1, "{backend:?}");
             assert_eq!(s.feedback_wt_denials, 2, "{backend:?}");
+            assert_eq!(s.feedback_timeouts, 3, "{backend:?}");
         }
     }
 }

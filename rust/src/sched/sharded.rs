@@ -182,6 +182,7 @@ pub struct ShardedQueue {
     batch_tasks: [AtomicU64; BatchSite::COUNT],
     feedback_grants: AtomicU64,
     feedback_wt_denials: AtomicU64,
+    feedback_timeouts: AtomicU64,
     /// `extract_stealable` pool-misses that walked the shard indices.
     fallback_walks: AtomicU64,
     /// Shard-empty batch rebalances performed (diagnostics).
@@ -214,6 +215,7 @@ impl ShardedQueue {
             batch_tasks: std::array::from_fn(|_| AtomicU64::new(0)),
             feedback_grants: AtomicU64::new(0),
             feedback_wt_denials: AtomicU64::new(0),
+            feedback_timeouts: AtomicU64::new(0),
             fallback_walks: AtomicU64::new(0),
             rebalances: AtomicU64::new(0),
         }
@@ -341,6 +343,13 @@ impl ShardedQueue {
                 self.raise_watermark();
             }
             StealOutcome::DeniedEmpty => {}
+            // A thief-side timeout (`--faults`) is a denial-flavored
+            // signal: migration over this fabric just cost a whole
+            // timeout and delivered nothing, so keep tasks local.
+            StealOutcome::TimedOut => {
+                self.feedback_timeouts.fetch_add(1, Ordering::Relaxed);
+                self.raise_watermark();
+            }
         }
     }
 
@@ -796,6 +805,7 @@ impl ShardedQueue {
             batches,
             feedback_grants: self.feedback_grants.load(Ordering::Relaxed),
             feedback_wt_denials: self.feedback_wt_denials.load(Ordering::Relaxed),
+            feedback_timeouts: self.feedback_timeouts.load(Ordering::Relaxed),
             watermark: self.watermark.load(Ordering::Relaxed) as u64,
             extract_fallback_walks: self.fallback_walks.load(Ordering::Relaxed),
             min_payload_resets: self.steal_payloads.lock().unwrap().resets(),

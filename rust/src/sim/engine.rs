@@ -19,21 +19,23 @@
 //! — integration tests check both agree on task counts.
 
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::comm::{LinkModel, Msg};
 use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
+use crate::faults::{FaultClass, FaultPlan};
 use crate::metrics::{NodeReport, PollSample, RunReport};
 use crate::migrate::{
     class_estimate_update, classify_reply, ewma_update, exec_estimate_seeded_us, is_starving,
-    merge_estimate, protocol::decide_steal, EstimateDigest, ExecSnapshot, MigrateConfig,
-    StarvationView, StealStats, VictimOutcome, VictimSelect, VictimSelector,
+    merge_estimate, protocol::decide_steal, steal_req_id, steal_timeout_us, EstimateDigest,
+    ExecSnapshot, MigrateConfig, StarvationView, StealStats, VictimOutcome, VictimSelect,
+    VictimSelector, THIEF_RETRY_BUDGET,
 };
-use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, TaskMeta};
-use crate::util::rng::{thief_rng, Rng};
+use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, StealOutcome, TaskMeta};
+use crate::util::rng::{fault_rng, thief_rng, Rng};
 
 use super::cost::CostModel;
 
@@ -73,6 +75,12 @@ pub struct SimConfig {
     /// Sharded steal-pool floor (`--pool-floor`; see
     /// [`crate::sched::POOL_FLOOR`]).
     pub pool_floor: usize,
+    /// Fault-injection plan for steal-protocol messages (`--faults`).
+    /// The DES wire model drops messages for real (no Safra detector
+    /// to balance), so the self-healing protocol — timeouts, retries,
+    /// the transfer ledger — carries the run to completion. Default
+    /// off: no draws, no extra events, byte-identical behavior.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimConfig {
@@ -86,6 +94,7 @@ impl Default for SimConfig {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: POOL_FLOOR,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -98,6 +107,9 @@ enum SimMsg {
     ActivateBatch(Vec<TaskDesc>),
     StealRequest {
         thief: NodeId,
+        /// Request id ([`steal_req_id`]); correlates retries, replies
+        /// and acks. Header metadata, free on the modeled wire.
+        req: u64,
     },
     /// The DES mirror of `comm::Msg::StealReply`: under
     /// `--share-estimates` a granted reply also carries the victim's
@@ -108,10 +120,18 @@ enum SimMsg {
     /// its per-victim history — both are header metadata, free on the
     /// modeled wire.
     StealReply {
+        req: u64,
         victim: NodeId,
         tasks: Vec<TaskDesc>,
         digest: Option<EstimateDigest>,
         denied_by_waiting_time: bool,
+    },
+    /// Thief → victim handshake closing a steal request (faults-on
+    /// only): `accepted` retires the parked ledger entry, a nack sends
+    /// it home — the DES mirror of `comm::Msg::TransferAck`.
+    TransferAck {
+        req: u64,
+        accepted: bool,
     },
 }
 
@@ -129,6 +149,50 @@ enum EventKind {
     Poll {
         node: NodeId,
     },
+    /// Thief-side watchdog (faults-on only): if `req` is still pending
+    /// when this fires, the steal is abandoned, nacked and retried.
+    StealTimeout {
+        node: NodeId,
+        req: u64,
+    },
+    /// Victim-side watchdog (faults-on only): if `req`'s ledger entry
+    /// is still unacked when this fires, the stored reply retransmits.
+    AckTimeout {
+        node: NodeId,
+        req: u64,
+    },
+}
+
+/// Thief-side record of one unanswered steal request. The map is
+/// maintained on every run (exact end-of-run slot accounting — the
+/// `inflight_steals` leak fix); only faults-on runs arm a
+/// [`EventKind::StealTimeout`] against it.
+#[derive(Clone, Copy, Debug)]
+struct SimPendingSteal {
+    victim: NodeId,
+    attempt: u32,
+}
+
+/// How a request id was settled on the thief — the DES mirror of the
+/// threaded runtime's resolution map. Late or duplicated replies
+/// consult this to re-ack idempotently instead of re-enqueueing.
+#[derive(Clone, Copy, Debug)]
+enum SimStealResolution {
+    AckedGrant,
+    AckedDenial,
+    Abandoned,
+}
+
+/// Victim-side transfer-ledger entry: a granted reply's tasks stay
+/// parked here until the thief's ack retires them (or a nack sends
+/// them home through a `GateDenial` batch insert). The stored reply
+/// retransmits verbatim on ack-timeout, so duplicates are exact.
+struct SimLedgerEntry {
+    thief: NodeId,
+    tasks: Vec<TaskDesc>,
+    reply: SimMsg,
+    reply_bytes: u64,
+    attempt: u32,
 }
 
 struct Event {
@@ -206,12 +270,31 @@ struct SimNode {
     victim_grants: Vec<u64>,
     victim_wt_denials: Vec<u64>,
     victim_empties: Vec<u64>,
+    /// Per-victim abandoned requests (thief-side timeouts; faults-on
+    /// only — a reliable fabric answers every request).
+    victim_timeouts: Vec<u64>,
     /// The targeted victim selector (`--victim-select targeted`). Its
     /// RNG is the per-node thief stream ([`thief_rng`]), so targeted
     /// mode never perturbs the simulator's shared cost-noise stream —
     /// default-off runs stay bit-identical.
     victim_sel: VictimSelector,
     inflight_steals: usize,
+    /// Monotonic counter behind [`steal_req_id`].
+    next_req: u64,
+    /// Thief side: requests awaiting a reply (or a timeout).
+    pending_steals: HashMap<u64, SimPendingSteal>,
+    /// Thief side: settled request ids (faults-on only; dedup + re-ack).
+    resolved_steals: HashMap<u64, SimStealResolution>,
+    /// Victim side: request ids already served (faults-on only;
+    /// duplicate requests retransmit the parked reply instead of
+    /// granting twice).
+    served_reqs: HashSet<u64>,
+    /// Victim side: the transfer ledger (faults-on only).
+    ledger: HashMap<u64, SimLedgerEntry>,
+    steal_timeouts: u64,
+    steal_retries: u64,
+    ledger_reclaims: u64,
+    dup_replies_suppressed: u64,
     polls: Vec<PollSample>,
     arrival_ready: Vec<PollSample>,
     next_poll_scheduled: bool,
@@ -236,7 +319,19 @@ pub struct Simulator {
     /// Activation messages currently on the wire.
     activate_in_flight: u64,
     /// Stolen tasks currently on the wire (inside StealReply messages).
+    /// Faults-on grants are accounted in `ledger_total` instead — the
+    /// wire may drop them, but the ledger cannot.
     tasks_in_transit: u64,
+    /// Tasks parked in victim transfer ledgers (faults-on only): work
+    /// that exists nowhere else once a granted reply is dropped, so it
+    /// must keep the run alive until an ack or nack settles it.
+    ledger_total: u64,
+    /// Dedicated fault stream ([`fault_rng`]): a disabled plan draws
+    /// nothing, an enabled one never perturbs the cost-noise stream.
+    fault_rng: Rng,
+    /// Steal-class messages the fault plan dropped / duplicated.
+    faults_dropped: u64,
+    faults_duplicated: u64,
 }
 
 impl Simulator {
@@ -282,9 +377,19 @@ impl Simulator {
                 victim_grants: vec![0; n],
                 victim_wt_denials: vec![0; n],
                 victim_empties: vec![0; n],
+                victim_timeouts: vec![0; n],
                 victim_sel: VictimSelector::new(i, n.max(2), thief_rng(cfg.seed, i))
                     .with_link(cfg.link.latency_us, cfg.link.bw_bytes_per_us),
                 inflight_steals: 0,
+                next_req: 0,
+                pending_steals: HashMap::new(),
+                resolved_steals: HashMap::new(),
+                served_reqs: HashSet::new(),
+                ledger: HashMap::new(),
+                steal_timeouts: 0,
+                steal_retries: 0,
+                ledger_reclaims: 0,
+                dup_replies_suppressed: 0,
                 polls: Vec::new(),
                 arrival_ready: Vec::new(),
                 next_poll_scheduled: false,
@@ -305,6 +410,10 @@ impl Simulator {
             deliver_events: 0,
             activate_in_flight: 0,
             tasks_in_transit: 0,
+            ledger_total: 0,
+            fault_rng: fault_rng(cfg.seed, 0),
+            faults_dropped: 0,
+            faults_duplicated: 0,
         }
     }
 
@@ -326,10 +435,75 @@ impl Simulator {
     fn work_done(&self) -> bool {
         self.activate_in_flight == 0
             && self.tasks_in_transit == 0
+            && self.ledger_total == 0
             && self
                 .nodes
                 .iter()
                 .all(|n| n.queue.is_empty() && n.executing.is_empty())
+    }
+
+    /// Schedule a steal-class message across the modeled wire, routed
+    /// through the fault plan exactly like the threaded fabric's send
+    /// path: dropped messages schedule no `Deliver` at all (the DES has
+    /// no Safra detector to balance), duplicates schedule two, delays
+    /// stretch the modeled transfer time. Disabled plans draw nothing
+    /// and multiply by exactly 1.0, so default-off event streams are
+    /// byte-identical.
+    fn send_steal_msg(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        class: FaultClass,
+        bytes: u64,
+        msg: SimMsg,
+    ) {
+        let d = self
+            .cfg
+            .faults
+            .decide(class, src.0, dst.0, self.now_us, &mut self.fault_rng);
+        if d.dropped {
+            self.faults_dropped += 1;
+            return;
+        }
+        let wire = self.cfg.link.transfer_us(bytes) * d.delay_mult;
+        if d.duplicate {
+            self.faults_duplicated += 1;
+            self.push_event(
+                self.now_us + wire,
+                EventKind::Deliver {
+                    dst,
+                    msg: msg.clone(),
+                },
+            );
+        }
+        self.push_event(self.now_us + wire, EventKind::Deliver { dst, msg });
+    }
+
+    /// Arm the thief-side watchdog for a pending request (faults-on
+    /// only): the deadline is the Khatiri round-trip-derived
+    /// [`steal_timeout_us`], backing off with the attempt number.
+    fn arm_steal_timeout(&mut self, node: NodeId, req: u64, attempt: u32) {
+        let t = steal_timeout_us(
+            self.cfg.link.latency_us,
+            self.cfg.link.bw_bytes_per_us,
+            self.migrate.migrate_overhead_us,
+            self.migrate.poll_interval_us,
+            attempt,
+        );
+        self.push_event(self.now_us + t, EventKind::StealTimeout { node, req });
+    }
+
+    /// Arm the victim-side watchdog for an unacked ledger entry
+    /// (faults-on only), same deadline schedule as the thief's.
+    fn arm_ack_timeout(&mut self, node: NodeId, req: u64, attempt: u32) {
+        let t = steal_timeout_us(
+            self.cfg.link.latency_us,
+            self.cfg.link.bw_bytes_per_us,
+            self.migrate.migrate_overhead_us,
+            self.migrate.poll_interval_us,
+            attempt,
+        );
+        self.push_event(self.now_us + t, EventKind::AckTimeout { node, req });
     }
 
     /// The victim's execution-time estimates for the waiting-time gate
@@ -583,19 +757,29 @@ impl Simulator {
                     NodeId(self.nodes[node_id.idx()].victim_sel.pick(fallback) as u32)
                 }
             };
-            {
+            let req = {
                 let node = &mut self.nodes[node_id.idx()];
                 node.inflight_steals += 1;
                 node.steal.requests_sent += 1;
-            }
-            let wire = self.cfg.link.transfer_us(16);
-            self.push_event(
-                self.now_us + wire,
-                EventKind::Deliver {
-                    dst: victim,
-                    msg: SimMsg::StealRequest { thief: node_id },
+                let req = steal_req_id(node_id.0, node.next_req);
+                node.next_req += 1;
+                node.pending_steals
+                    .insert(req, SimPendingSteal { victim, attempt: 0 });
+                req
+            };
+            self.send_steal_msg(
+                node_id,
+                victim,
+                FaultClass::Request,
+                16,
+                SimMsg::StealRequest {
+                    thief: node_id,
+                    req,
                 },
             );
+            if self.cfg.faults.enabled {
+                self.arm_steal_timeout(node_id, req, 0);
+            }
         }
         // Keep polling while the node still has any reason to act: the
         // paper's migrate thread runs until distributed termination, but
@@ -605,7 +789,21 @@ impl Simulator {
         self.ensure_poll(node_id);
     }
 
-    fn on_steal_request(&mut self, victim_id: NodeId, thief: NodeId) {
+    fn on_steal_request(&mut self, victim_id: NodeId, thief: NodeId, req: u64) {
+        let faults_on = self.cfg.faults.enabled;
+        if faults_on && !self.nodes[victim_id.idx()].served_reqs.insert(req) {
+            // Duplicate request (fabric dup, or a retransmit racing the
+            // reply): if the grant is still parked, resend the stored
+            // reply verbatim; a settled denial needs nothing.
+            let parked = self.nodes[victim_id.idx()]
+                .ledger
+                .get(&req)
+                .map(|e| (e.reply.clone(), e.reply_bytes));
+            if let Some((reply, bytes)) = parked {
+                self.send_steal_msg(victim_id, thief, FaultClass::Reply, bytes, reply);
+            }
+            return;
+        }
         let graph = self.graph.clone();
         let workers = self.cfg.workers_per_node;
         let est = self.victim_exec_snapshot(victim_id.idx());
@@ -645,48 +843,124 @@ impl Simulator {
             )
         });
         // Reply (even when empty: the thief must learn the steal failed).
-        self.tasks_in_transit += decision.tasks.len() as u64;
+        let granted = !decision.tasks.is_empty();
+        if !faults_on {
+            // Reliable wire: the in-flight counter alone keeps the run
+            // alive until the reply lands (exact PR 6 accounting).
+            self.tasks_in_transit += decision.tasks.len() as u64;
+        }
         let reply_bytes = Msg::steal_reply_wire_bytes(
             decision.tasks.len(),
             decision.payload_bytes,
             digest.as_ref(),
         );
-        let wire = self.cfg.link.transfer_us(reply_bytes);
-        self.push_event(
-            self.now_us + wire,
-            EventKind::Deliver {
-                dst: thief,
-                msg: SimMsg::StealReply {
-                    victim: victim_id,
-                    tasks: decision.tasks,
-                    digest,
-                    denied_by_waiting_time: decision.denied_by_waiting_time,
+        let msg = SimMsg::StealReply {
+            req,
+            victim: victim_id,
+            tasks: decision.tasks,
+            digest,
+            denied_by_waiting_time: decision.denied_by_waiting_time,
+        };
+        if faults_on && granted {
+            // Park the grant in the transfer ledger until the thief's
+            // ack retires it: the wire may drop the reply, the ledger
+            // cannot. Accounted in `ledger_total` *before* the send so
+            // the work can never be invisible to `work_done`.
+            let tasks = match &msg {
+                SimMsg::StealReply { tasks, .. } => tasks.clone(),
+                _ => unreachable!(),
+            };
+            self.ledger_total += tasks.len() as u64;
+            self.nodes[victim_id.idx()].ledger.insert(
+                req,
+                SimLedgerEntry {
+                    thief,
+                    tasks,
+                    reply: msg.clone(),
+                    reply_bytes,
+                    attempt: 0,
                 },
-            },
-        );
+            );
+            self.arm_ack_timeout(victim_id, req, 0);
+        }
+        self.send_steal_msg(victim_id, thief, FaultClass::Reply, reply_bytes, msg);
     }
 
     fn on_steal_reply(
         &mut self,
         node_id: NodeId,
+        req: u64,
         victim: NodeId,
         tasks: Vec<TaskDesc>,
         digest: Option<EstimateDigest>,
         denied_by_waiting_time: bool,
     ) {
         let graph = self.graph.clone();
-        self.tasks_in_transit -= tasks.len() as u64;
+        let granted = !tasks.is_empty();
+        if self.cfg.faults.enabled {
+            // Settle the request id exactly once: duplicated or late
+            // replies only repeat the handshake verdict, never the
+            // enqueue.
+            if let Some(&res) = self.nodes[node_id.idx()].resolved_steals.get(&req) {
+                self.nodes[node_id.idx()].dup_replies_suppressed += 1;
+                let ack = match res {
+                    SimStealResolution::AckedGrant => Some(true),
+                    SimStealResolution::Abandoned => Some(false),
+                    SimStealResolution::AckedDenial => None,
+                };
+                if let Some(accepted) = ack {
+                    self.send_steal_msg(
+                        node_id,
+                        victim,
+                        FaultClass::Ack,
+                        16,
+                        SimMsg::TransferAck { req, accepted },
+                    );
+                }
+                return;
+            }
+            let node = &mut self.nodes[node_id.idx()];
+            node.pending_steals.remove(&req);
+            node.resolved_steals.insert(
+                req,
+                if granted {
+                    SimStealResolution::AckedGrant
+                } else {
+                    SimStealResolution::AckedDenial
+                },
+            );
+            if granted {
+                // Accept the transfer: the victim retires the ledger
+                // entry when (a copy of) this ack lands.
+                self.send_steal_msg(
+                    node_id,
+                    victim,
+                    FaultClass::Ack,
+                    16,
+                    SimMsg::TransferAck {
+                        req,
+                        accepted: true,
+                    },
+                );
+            }
+        } else {
+            self.nodes[node_id.idx()].pending_steals.remove(&req);
+            self.tasks_in_transit -= tasks.len() as u64;
+        }
         {
             let node = &mut self.nodes[node_id.idx()];
             node.inflight_steals = node.inflight_steals.saturating_sub(1);
             // Per-victim outcome telemetry (always) and, under
             // targeted selection, the selector's decayed history —
             // mirroring the threaded comm loop's reply arm.
-            let outcome = classify_reply(!tasks.is_empty(), denied_by_waiting_time);
+            let outcome = classify_reply(granted, denied_by_waiting_time);
             match outcome {
                 VictimOutcome::Granted => node.victim_grants[victim.idx()] += 1,
                 VictimOutcome::DeniedWaitingTime => node.victim_wt_denials[victim.idx()] += 1,
                 VictimOutcome::DeniedEmpty => node.victim_empties[victim.idx()] += 1,
+                // Timeouts are recorded at the watchdog, never from a
+                // reply in hand.
+                VictimOutcome::TimedOut => node.victim_timeouts[victim.idx()] += 1,
             }
             if self.migrate.victim_select == VictimSelect::Targeted {
                 node.victim_sel
@@ -724,6 +998,117 @@ impl Simulator {
             self.dispatch(node_id);
         }
         self.ensure_poll(node_id);
+    }
+
+    /// Victim side of the handshake: an ack retires the parked ledger
+    /// entry; a nack (the thief abandoned the request) sends the tasks
+    /// home through the same `GateDenial` batch insert a waiting-time
+    /// reversal uses. Unknown request ids (entry already retired by an
+    /// earlier ack copy) are idempotent no-ops.
+    fn on_transfer_ack(&mut self, victim_id: NodeId, req: u64, accepted: bool) {
+        let Some(entry) = self.nodes[victim_id.idx()].ledger.remove(&req) else {
+            return;
+        };
+        if !accepted {
+            let graph = self.graph.clone();
+            let node = &mut self.nodes[victim_id.idx()];
+            node.ledger_reclaims += 1;
+            let batch = TaskMeta::batch_of(graph.as_ref(), &entry.tasks);
+            node.queue.insert_batch_at(BatchSite::GateDenial, &batch);
+        }
+        self.ledger_total -= entry.tasks.len() as u64;
+        if !accepted {
+            self.dispatch(victim_id);
+            self.ensure_poll(victim_id);
+        }
+    }
+
+    /// Thief side of the watchdog: if the request is still pending the
+    /// steal is abandoned — scored as a timeout against the victim, fed
+    /// back to the scheduler as a denial-flavored signal, nacked so a
+    /// parked grant comes home, and retried (same victim, fresh request
+    /// id, doubled deadline) while the budget lasts. The inflight slot
+    /// is released only when the retry budget is spent — the leak fix's
+    /// accounting discipline.
+    fn on_steal_timeout(&mut self, node_id: NodeId, req: u64) {
+        let Some(p) = self.nodes[node_id.idx()].pending_steals.remove(&req) else {
+            return; // the reply won the race
+        };
+        {
+            let node = &mut self.nodes[node_id.idx()];
+            node.resolved_steals
+                .insert(req, SimStealResolution::Abandoned);
+            node.steal_timeouts += 1;
+            node.victim_timeouts[p.victim.idx()] += 1;
+            if self.migrate.victim_select == VictimSelect::Targeted {
+                node.victim_sel
+                    .record(p.victim.idx(), VictimOutcome::TimedOut, None);
+            }
+            node.queue.feedback(StealOutcome::TimedOut);
+        }
+        // Nack eagerly: if the victim parked a grant whose reply was
+        // lost, this sends it home without waiting for its ack-timeout.
+        self.send_steal_msg(
+            node_id,
+            p.victim,
+            FaultClass::Ack,
+            16,
+            SimMsg::TransferAck {
+                req,
+                accepted: false,
+            },
+        );
+        if p.attempt < THIEF_RETRY_BUDGET {
+            let new_req = {
+                let node = &mut self.nodes[node_id.idx()];
+                let new_req = steal_req_id(node_id.0, node.next_req);
+                node.next_req += 1;
+                node.pending_steals.insert(
+                    new_req,
+                    SimPendingSteal {
+                        victim: p.victim,
+                        attempt: p.attempt + 1,
+                    },
+                );
+                node.steal_retries += 1;
+                node.steal.requests_sent += 1;
+                new_req
+            };
+            self.send_steal_msg(
+                node_id,
+                p.victim,
+                FaultClass::Request,
+                16,
+                SimMsg::StealRequest {
+                    thief: node_id,
+                    req: new_req,
+                },
+            );
+            self.arm_steal_timeout(node_id, new_req, p.attempt + 1);
+        } else {
+            let node = &mut self.nodes[node_id.idx()];
+            node.inflight_steals = node.inflight_steals.saturating_sub(1);
+            self.ensure_poll(node_id);
+        }
+    }
+
+    /// Victim side of the watchdog: an unacked ledger entry retransmits
+    /// its stored reply verbatim and re-arms with a doubled deadline.
+    /// Retransmits are unbounded — the victim must never unilaterally
+    /// reclaim a grant it cannot prove the thief abandoned (the thief's
+    /// nack is that proof), and the drop-probability cap guarantees an
+    /// ack or nack eventually lands.
+    fn on_ack_timeout(&mut self, victim_id: NodeId, req: u64) {
+        let Some((thief, reply, bytes, attempt)) = ({
+            self.nodes[victim_id.idx()].ledger.get_mut(&req).map(|e| {
+                e.attempt += 1;
+                (e.thief, e.reply.clone(), e.reply_bytes, e.attempt)
+            })
+        }) else {
+            return; // acked (or reclaimed) in the meantime
+        };
+        self.send_steal_msg(victim_id, thief, FaultClass::Reply, bytes, reply);
+        self.arm_ack_timeout(victim_id, req, attempt);
     }
 
     /// Run to completion and produce the report.
@@ -772,16 +1157,31 @@ impl Simulator {
                             self.activate_in_flight -= 1;
                             self.activate_batch_at(dst, &tasks);
                         }
-                        SimMsg::StealRequest { thief } => self.on_steal_request(dst, thief),
+                        SimMsg::StealRequest { thief, req } => {
+                            self.on_steal_request(dst, thief, req)
+                        }
                         SimMsg::StealReply {
+                            req,
                             victim,
                             tasks,
                             digest,
                             denied_by_waiting_time,
-                        } => self.on_steal_reply(dst, victim, tasks, digest, denied_by_waiting_time),
+                        } => self.on_steal_reply(
+                            dst,
+                            req,
+                            victim,
+                            tasks,
+                            digest,
+                            denied_by_waiting_time,
+                        ),
+                        SimMsg::TransferAck { req, accepted } => {
+                            self.on_transfer_ack(dst, req, accepted)
+                        }
                     }
                 }
                 EventKind::Poll { node } => self.on_poll(node),
+                EventKind::StealTimeout { node, req } => self.on_steal_timeout(node, req),
+                EventKind::AckTimeout { node, req } => self.on_ack_timeout(node, req),
             }
         }
 
@@ -792,11 +1192,25 @@ impl Simulator {
                 "simulator finished without executing every task"
             );
         }
-        for node in &self.nodes {
+        for (ix, node) in self.nodes.iter().enumerate() {
             assert!(node.queue.is_empty(), "ready task left behind");
             assert!(node.executing.is_empty());
             assert!(node.tracker.is_quiescent(), "activation left behind");
+            // The self-healing protocol's conservation laws: every
+            // request was answered or timed out (so every inflight slot
+            // was reclaimed — the leak fix), and every granted transfer
+            // was acked or sent home (zero ledger residue).
+            assert!(
+                node.pending_steals.is_empty(),
+                "node {ix}: steal request neither answered nor timed out"
+            );
+            assert_eq!(
+                node.inflight_steals, 0,
+                "node {ix}: leaked inflight-steal slots"
+            );
+            assert!(node.ledger.is_empty(), "node {ix}: transfer-ledger residue");
         }
+        assert_eq!(self.ledger_total, 0, "transfer-ledger accounting residue");
 
         RunReport {
             workload: self.graph.name().to_string(),
@@ -806,6 +1220,8 @@ impl Simulator {
             link: self.cfg.link,
             events: self.events_processed,
             deliver_events: self.deliver_events,
+            faults_dropped: self.faults_dropped,
+            faults_duplicated: self.faults_duplicated,
             nodes: self
                 .nodes
                 .into_iter()
@@ -825,6 +1241,11 @@ impl Simulator {
                     victim_grants: n.victim_grants,
                     victim_wt_denials: n.victim_wt_denials,
                     victim_empties: n.victim_empties,
+                    victim_timeouts: n.victim_timeouts,
+                    steal_timeouts: n.steal_timeouts,
+                    steal_retries: n.steal_retries,
+                    ledger_reclaims: n.ledger_reclaims,
+                    dup_replies_suppressed: n.dup_replies_suppressed,
                     sched: n.queue.stats(),
                     polls: n.polls,
                     arrival_ready: n.arrival_ready,
@@ -877,6 +1298,7 @@ mod tests {
                 sched,
                 batch_activations: true,
                 pool_floor: POOL_FLOOR,
+                ..Default::default()
             },
             CostModel::default_calibrated(),
             migrate,
@@ -1161,6 +1583,7 @@ mod tests {
                         sched,
                         batch_activations: batch,
                         pool_floor: POOL_FLOOR,
+                        ..Default::default()
                     },
                     CostModel::default_calibrated(),
                     MigrateConfig::disabled(),
@@ -1276,6 +1699,7 @@ mod tests {
                 sched: SchedBackend::Sharded,
                 batch_activations: true,
                 pool_floor: POOL_FLOOR,
+                ..Default::default()
             },
             CostModel::default_calibrated(),
             mc,
@@ -1374,6 +1798,7 @@ mod tests {
                     sched: SchedBackend::Central,
                     batch_activations: true,
                     pool_floor: POOL_FLOOR,
+                    ..Default::default()
                 },
                 cost.clone(),
                 mc,
@@ -1493,6 +1918,164 @@ mod tests {
             a.total_steals().successful_steals,
             b.total_steals().successful_steals
         );
+    }
+
+    /// The master-switch contract: a *disabled* plan that nonetheless
+    /// carries aggressive probabilities must be byte-identical to the
+    /// default — `enabled: false` means no draws, no timeout events, no
+    /// handshake messages, no ledger, no divergence of any kind.
+    #[test]
+    fn disabled_fault_plan_is_byte_identical() {
+        let run = |faults: FaultPlan| {
+            Simulator::new(
+                chol(10, 4),
+                SimConfig {
+                    workers_per_node: 2,
+                    seed: 7,
+                    max_events: 50_000_000,
+                    faults,
+                    ..Default::default()
+                },
+                CostModel::default_calibrated(),
+                MigrateConfig::default(),
+                20,
+            )
+            .run()
+        };
+        let a = run(FaultPlan::default());
+        let b = run(FaultPlan {
+            enabled: false, // the switch trumps every knob below
+            drop_reply: 0.9,
+            dup_request: 0.9,
+            delay_factor: 8.0,
+            ..FaultPlan::default()
+        });
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.deliver_events, b.deliver_events);
+        assert_eq!(
+            a.total_steals().successful_steals,
+            b.total_steals().successful_steals
+        );
+        assert_eq!(a.faults_dropped + b.faults_dropped, 0);
+        for n in a.nodes.iter().chain(&b.nodes) {
+            assert_eq!(n.steal_timeouts + n.steal_retries, 0);
+            assert_eq!(n.ledger_reclaims + n.dup_replies_suppressed, 0);
+        }
+    }
+
+    /// The acceptance scenario in the DES: an all-on-node-0 UTS run
+    /// over a fabric that drops 40% of steal replies (plus request
+    /// drops and duplicates everywhere) completes with every task
+    /// executed exactly once — the internal end-of-run asserts prove
+    /// zero ledger residue, zero pending requests and zero leaked
+    /// inflight slots — while the healing machinery demonstrably
+    /// engaged, and the whole ordeal is deterministic given the seed.
+    #[test]
+    fn faulty_fabric_des_completes_exactly_once_and_heals() {
+        let mk_graph = || {
+            Arc::new(UtsGraph::new(UtsParams {
+                b0: 32,
+                m: 4,
+                q: 0.3,
+                g: 50_000.0,
+                seed: 5,
+                nodes: 4,
+                max_depth: 24,
+            }))
+        };
+        let faults: FaultPlan = "drop-reply=0.4,drop-request=0.2,dup=0.25"
+            .parse()
+            .unwrap();
+        let run = || {
+            Simulator::new(
+                mk_graph(),
+                SimConfig {
+                    workers_per_node: 4,
+                    seed: 3,
+                    max_events: 50_000_000,
+                    record_polls: false,
+                    faults,
+                    ..Default::default()
+                },
+                CostModel::default_calibrated(),
+                MigrateConfig {
+                    poll_interval_us: 20.0,
+                    ..MigrateConfig::default()
+                },
+                20,
+            )
+            .run()
+        };
+        let g = mk_graph();
+        let size = g.tree_size(10_000_000);
+        let a = run();
+        assert_eq!(a.tasks_total_executed(), size, "exactly once under loss");
+        assert!(a.faults_dropped > 0, "the plan must actually bite");
+        assert!(a.faults_duplicated > 0);
+        let timeouts: u64 = a.nodes.iter().map(|n| n.steal_timeouts).sum();
+        let retries: u64 = a.nodes.iter().map(|n| n.steal_retries).sum();
+        let reclaims: u64 = a.nodes.iter().map(|n| n.ledger_reclaims).sum();
+        let dups: u64 = a.nodes.iter().map(|n| n.dup_replies_suppressed).sum();
+        assert!(timeouts > 0, "dropped replies must time out");
+        assert!(retries > 0, "timeouts must retry within the budget");
+        assert!(dups > 0, "duplicated replies must be suppressed");
+        assert!(
+            reclaims > 0,
+            "some dropped grant must come home via nack-reclaim \
+             (timeouts {timeouts}, retries {retries}, dups {dups})"
+        );
+        // Per-victim timeout telemetry balances the node totals.
+        for (ix, n) in a.nodes.iter().enumerate() {
+            assert_eq!(
+                n.victim_timeouts.iter().sum::<u64>(),
+                n.steal_timeouts,
+                "node {ix}"
+            );
+            assert_eq!(n.victim_timeouts[ix], 0, "node {ix}: never times out on itself");
+        }
+        // Chaos, but seeded chaos: the run is a pure function of the seed.
+        let b = run();
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.faults_dropped, b.faults_dropped);
+    }
+
+    /// The straggler window: stalling node 1's steal traffic for the
+    /// first half of the run must not break exactly-once completion,
+    /// and the stalled traffic registers as drops.
+    #[test]
+    fn straggler_stall_window_heals() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 20_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = Simulator::new(
+            g,
+            SimConfig {
+                workers_per_node: 4,
+                seed: 3,
+                max_events: 50_000_000,
+                record_polls: false,
+                faults: "slow-node=1,slow-until-us=20000,stall".parse().unwrap(),
+                ..Default::default()
+            },
+            CostModel::default_calibrated(),
+            MigrateConfig {
+                poll_interval_us: 20.0,
+                ..MigrateConfig::default()
+            },
+            20,
+        )
+        .run();
+        assert_eq!(r.tasks_total_executed(), size);
+        assert!(r.faults_dropped > 0, "in-window steal traffic stalls");
     }
 
     #[test]

@@ -141,6 +141,15 @@ pub fn thief_rng(run_seed: u64, node_idx: usize) -> Rng {
     Rng::new(run_seed ^ (0x5EA1 + node_idx as u64))
 }
 
+/// The fault-injection stream (`--faults`): one dedicated derivation
+/// per fabric (`stream` 0 is the convention for a run's single fabric),
+/// disjoint from `thief_rng` and the run seed itself, so an enabled
+/// fault plan never perturbs scheduling decisions and a disabled one
+/// draws nothing at all.
+pub fn fault_rng(run_seed: u64, stream: usize) -> Rng {
+    Rng::new(run_seed ^ (0xFA17_0000 + stream as u64))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

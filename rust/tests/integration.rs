@@ -39,6 +39,7 @@ fn sim_and_real_agree_on_static_distribution() {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
@@ -56,6 +57,7 @@ fn sim_and_real_agree_on_static_distribution() {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         Arc::new(NullExecutor),
     );
@@ -98,6 +100,7 @@ fn real_runtime_steals_preserve_exactly_once() {
                     sched: SchedBackend::Central,
                     batch_activations: true,
                     pool_floor: parsteal::sched::POOL_FLOOR,
+                    faults: Default::default(),
                 },
                 Arc::new(SpinExecutor::new(cost, 16, move |t| g2.work_units(t)).with_time_scale(0.2)),
             );
@@ -139,6 +142,7 @@ fn real_runtime_uts_dynamic_termination() {
             sched: SchedBackend::Central,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         Arc::new(
             SpinExecutor::new(CostModel::default_calibrated(), 0, move |t| g2.work_units(t))
@@ -166,6 +170,7 @@ fn sharded_backend_sim_and_real_agree() {
             sched: SchedBackend::Sharded,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
@@ -183,6 +188,7 @@ fn sharded_backend_sim_and_real_agree() {
             sched: SchedBackend::Sharded,
             batch_activations: true,
             pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
         },
         Arc::new(NullExecutor),
     );
@@ -219,6 +225,7 @@ fn batched_activations_cut_deliver_events() {
                 sched: SchedBackend::Central,
                 batch_activations: batch,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             CostModel::default_calibrated(),
             MigrateConfig::disabled(),
@@ -263,6 +270,7 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
                 sched: SchedBackend::Central,
                 batch_activations: batch,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             CostModel::default_calibrated(),
             MigrateConfig::disabled(),
@@ -280,6 +288,7 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
                 sched: SchedBackend::Central,
                 batch_activations: batch,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             Arc::new(NullExecutor),
         );
@@ -340,6 +349,7 @@ fn share_estimates_des_and_threaded_agree() {
                     sched: SchedBackend::Central,
                     batch_activations: true,
                     pool_floor: parsteal::sched::POOL_FLOOR,
+                    faults: Default::default(),
                 },
                 CostModel::default_calibrated(),
                 mk_migrate(overhead, share),
@@ -362,6 +372,7 @@ fn share_estimates_des_and_threaded_agree() {
                     sched: SchedBackend::Central,
                     batch_activations: true,
                     pool_floor: parsteal::sched::POOL_FLOOR,
+                    faults: Default::default(),
                 },
                 Arc::new(ex),
             );
@@ -447,6 +458,7 @@ fn targeted_victim_selection_des_and_threaded_agree() {
                 sched: SchedBackend::Central,
                 batch_activations: true,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             CostModel::default_calibrated(),
             mc,
@@ -464,6 +476,7 @@ fn targeted_victim_selection_des_and_threaded_agree() {
                 sched: SchedBackend::Central,
                 batch_activations: true,
                 pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: Default::default(),
             },
             Arc::new(SpinExecutor::new(
                 CostModel::default_calibrated(),

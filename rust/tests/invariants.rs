@@ -7,10 +7,12 @@ use std::sync::Arc;
 use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::TaskDesc;
 use parsteal::dataflow::ttg::TaskGraph;
+use parsteal::faults::FaultPlan;
 use parsteal::migrate::{
     ExecSnapshot, MigrateConfig, ThiefPolicy, VictimOutcome, VictimPolicy, VictimSelect,
     VictimSelector,
 };
+use parsteal::node::{Cluster, ClusterConfig, NullExecutor};
 use parsteal::prop_assert;
 use parsteal::sched::{SchedBackend, SchedQueue, TaskMeta};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
@@ -87,6 +89,7 @@ fn prop_cholesky_sim_executes_every_task_once() {
                     },
                     batch_activations: rng.uniform() < 0.5,
                     pool_floor: rng.below(4) as usize,
+                    faults: Default::default(),
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -144,6 +147,7 @@ fn prop_uts_sim_matches_tree_size() {
                     },
                     batch_activations: rng.uniform() < 0.5,
                     pool_floor: rng.below(4) as usize,
+                    faults: Default::default(),
                 },
                 CostModel::default_calibrated(),
                 random_migrate(rng),
@@ -578,4 +582,308 @@ fn prop_victim_selector_deterministic_and_decays_to_uniform() {
 /// two selectors under comparison share it by construction.
 fn rng_free_latency() -> f64 {
     5.0
+}
+
+/// A random *finite* chaos schedule: aggressive enough that replies are
+/// lost and duplicated in most runs, but every probability stays under
+/// the parser's convergence cap and every straggler window closes, so
+/// the retransmit loops are guaranteed to drain.
+fn random_fault_plan(rng: &mut Rng) -> FaultPlan {
+    let mut plan = FaultPlan {
+        enabled: true,
+        drop_request: rng.uniform() * 0.3,
+        drop_reply: 0.15 + rng.uniform() * 0.25,
+        drop_ack: rng.uniform() * 0.3,
+        dup_request: rng.uniform() * 0.25,
+        dup_reply: 0.1 + rng.uniform() * 0.2,
+        dup_ack: rng.uniform() * 0.25,
+        ..Default::default()
+    };
+    if rng.uniform() < 0.5 {
+        plan.delay_factor = 1.0 + rng.uniform() * 3.0;
+        plan.delay_p = rng.uniform() * 0.9;
+    }
+    if rng.uniform() < 0.3 {
+        plan.slow_node = Some(rng.below(4) as u32);
+        plan.slow_factor = 1.0 + rng.uniform() * 4.0;
+        plan.slow_from_us = rng.uniform() * 5_000.0;
+        // Finite by construction: an unbounded stall is a crashed node,
+        // which the protocol (correctly) cannot outwait.
+        plan.slow_until_us = plan.slow_from_us + 1_000.0 + rng.uniform() * 20_000.0;
+        plan.stall = rng.uniform() < 0.5;
+    }
+    plan
+}
+
+/// Chaos property: random fault schedules on random UTS trees under
+/// random steal policies still execute every task exactly once, and the
+/// self-healing machinery is actually exercised — across the sweep the
+/// protocol must observe timeouts, retries, ledger reclaims and
+/// suppressed duplicate replies (the DES itself asserts zero ledger
+/// residue and `inflight_steals == 0` at the end of every run).
+#[test]
+fn prop_steal_protocol_heals_under_chaos() {
+    let mut agg = (0u64, 0u64, 0u64, 0u64); // timeouts, retries, reclaims, dups
+    check(
+        "chaos-exactly-once",
+        Config {
+            cases: 12,
+            max_size: 24,
+            seed: 0xC4A05,
+        },
+        |rng, size| {
+            let plan = random_fault_plan(rng);
+            let graph = Arc::new(UtsGraph::new(UtsParams {
+                b0: 16 + size as u32,
+                m: 4,
+                q: 0.25 + rng.uniform() * 0.1,
+                g: 20_000.0 + rng.uniform() * 30_000.0,
+                seed: rng.next_u64(),
+                nodes: 2 + rng.below(3) as u32,
+                max_depth: 20,
+            }));
+            let tree = graph.tree_size(300_000);
+            if tree >= 300_000 {
+                return Ok(()); // skip pathological trees
+            }
+            let mut mc = random_migrate(rng);
+            mc.enabled = true;
+            mc.poll_interval_us = 15.0 + rng.uniform() * 30.0;
+            let report = Simulator::new(
+                graph,
+                SimConfig {
+                    workers_per_node: 2 + rng.below(3) as usize,
+                    link: LinkModel::cluster(),
+                    seed: rng.next_u64(),
+                    max_events: 200_000_000,
+                    record_polls: false,
+                    sched: if rng.uniform() < 0.5 {
+                        SchedBackend::Central
+                    } else {
+                        SchedBackend::Sharded
+                    },
+                    batch_activations: rng.uniform() < 0.5,
+                    pool_floor: rng.below(4) as usize,
+                    faults: plan,
+                },
+                CostModel::default_calibrated(),
+                mc,
+                0,
+            )
+            .run();
+            prop_assert!(
+                report.tasks_total_executed() == tree,
+                "plan '{}': executed {} of tree {tree}",
+                plan.label(),
+                report.tasks_total_executed()
+            );
+            agg.0 += report.steal_timeouts_total();
+            agg.1 += report.steal_retries_total();
+            agg.2 += report.ledger_reclaims_total();
+            agg.3 += report.dup_replies_suppressed_total();
+            Ok(())
+        },
+    );
+    // The sweep as a whole must have healed something, or the chaos
+    // schedules above are too tame to mean anything.
+    assert!(agg.0 > 0, "no steal timeouts observed across the sweep");
+    assert!(agg.1 > 0, "no retries observed across the sweep");
+    assert!(agg.2 > 0, "no ledger reclaims observed across the sweep");
+    assert!(agg.3 > 0, "no duplicate replies suppressed across the sweep");
+}
+
+/// The threaded runtime under the same chaos schedules: every task
+/// still executes exactly once (the cluster's shutdown drain asserts
+/// `inflight_steals == 0` and an empty transfer ledger internally).
+#[test]
+fn chaos_threaded_runtime_heals_exactly_once() {
+    for (spec, seed) in [
+        ("drop=0.25,dup=0.15", 11u64),
+        ("drop-reply=0.35,delay=3x,delay-p=0.5", 12),
+        ("dup=0.3,drop-ack=0.3", 13),
+    ] {
+        let g = Arc::new(CholeskyGraph::new(CholeskyParams {
+            tiles: 10,
+            tile_size: 16,
+            nodes: 3,
+            dense_fraction: 0.5,
+            seed: 9,
+            all_dense: false,
+        }));
+        let total = g.total_tasks().unwrap();
+        let r = Cluster::run(
+            g,
+            ClusterConfig {
+                workers_per_node: 2,
+                link: LinkModel::ideal(),
+                migrate: MigrateConfig {
+                    poll_interval_us: 20.0,
+                    ..Default::default()
+                },
+                seed,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
+                faults: spec.parse().unwrap(),
+            },
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(r.tasks_total_executed(), total, "faults={spec}");
+    }
+}
+
+/// A disabled plan must never perturb the DES, no matter what garbage
+/// its probability fields hold: same makespan, same event counts, same
+/// steal totals as the default reliable fabric, and none of the fault
+/// machinery may fire. This is the regression wall for the "off ==
+/// byte-identical to the pre-fault runtime" contract, swept over random
+/// geometries and policies.
+#[test]
+fn prop_disabled_faults_never_perturb_the_des() {
+    check(
+        "faults-off-identical",
+        Config {
+            cases: 8,
+            max_size: 12,
+            seed: 0x0FF,
+        },
+        |rng, size| {
+            let params = CholeskyParams {
+                tiles: 4 + size as u32,
+                tile_size: 16,
+                nodes: 1 + rng.below(4) as u32,
+                dense_fraction: rng.uniform(),
+                seed: rng.next_u64(),
+                all_dense: false,
+            };
+            let mc = random_migrate(rng);
+            let seed = rng.next_u64();
+            let workers = 1 + rng.below(4) as usize;
+            let run = |faults: FaultPlan| {
+                Simulator::new(
+                    Arc::new(CholeskyGraph::new(params.clone())),
+                    SimConfig {
+                        workers_per_node: workers,
+                        link: LinkModel::cluster(),
+                        seed,
+                        max_events: 200_000_000,
+                        record_polls: false,
+                        sched: SchedBackend::Central,
+                        batch_activations: true,
+                        pool_floor: 2,
+                        faults,
+                    },
+                    CostModel::default_calibrated(),
+                    mc,
+                    16,
+                )
+                .run()
+            };
+            let off = run(FaultPlan::default());
+            let disabled = run(FaultPlan {
+                enabled: false,
+                drop_reply: 0.9,
+                dup_request: 0.9,
+                delay_factor: 8.0,
+                ..Default::default()
+            });
+            prop_assert!(
+                off.makespan_us == disabled.makespan_us,
+                "makespan diverged: {} vs {}",
+                off.makespan_us,
+                disabled.makespan_us
+            );
+            prop_assert!(
+                off.events == disabled.events && off.deliver_events == disabled.deliver_events,
+                "event counts diverged: {}/{} vs {}/{}",
+                off.events,
+                off.deliver_events,
+                disabled.events,
+                disabled.deliver_events
+            );
+            let (a, b) = (off.total_steals(), disabled.total_steals());
+            prop_assert!(
+                a.requests_sent == b.requests_sent
+                    && a.successful_steals == b.successful_steals
+                    && a.tasks_migrated == b.tasks_migrated,
+                "steal totals diverged"
+            );
+            prop_assert!(
+                disabled.faults_dropped == 0
+                    && disabled.faults_duplicated == 0
+                    && disabled.steal_timeouts_total() == 0
+                    && disabled.steal_retries_total() == 0
+                    && disabled.ledger_reclaims_total() == 0
+                    && disabled.dup_replies_suppressed_total() == 0,
+                "fault machinery fired on a disabled plan"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// CLI-surface drift guard for `--faults`: every spec the code can
+/// print must parse back to the same plan, over random grids of
+/// probabilities, delay factors and straggler windows (mirrors the
+/// policy-label round-trip above).
+#[test]
+fn prop_faultplan_label_round_trips() {
+    check(
+        "faultplan-label-roundtrip",
+        Config {
+            cases: 150,
+            max_size: 8,
+            seed: 0xFA17,
+        },
+        |rng, _| {
+            let plan = if rng.uniform() < 0.1 {
+                FaultPlan::default() // "off"
+            } else {
+                let grid = |rng: &mut Rng| rng.below(95) as f64 / 100.0;
+                let mut p = FaultPlan {
+                    enabled: true,
+                    drop_request: grid(rng),
+                    drop_reply: grid(rng),
+                    drop_ack: grid(rng),
+                    dup_request: grid(rng),
+                    dup_reply: grid(rng),
+                    dup_ack: grid(rng),
+                    ..Default::default()
+                };
+                if rng.uniform() < 0.3 {
+                    // Uniform plans print the single-key spelling.
+                    p.drop_reply = p.drop_request;
+                    p.drop_ack = p.drop_request;
+                }
+                if rng.uniform() < 0.5 {
+                    p.delay_factor = 1.0 + (1 + rng.below(20)) as f64 / 4.0;
+                    p.delay_p = grid(rng);
+                }
+                if rng.uniform() < 0.5 {
+                    p.slow_node = Some(rng.below(8) as u32);
+                    if rng.uniform() < 0.5 {
+                        p.slow_factor = (2 + rng.below(6)) as f64;
+                    }
+                    if rng.uniform() < 0.5 {
+                        p.slow_from_us = (1 + rng.below(10_000)) as f64;
+                    }
+                    if rng.uniform() < 0.5 {
+                        p.slow_until_us = p.slow_from_us + (1 + rng.below(50_000)) as f64;
+                    }
+                    p.stall = rng.uniform() < 0.5;
+                }
+                p
+            };
+            let label = plan.label();
+            let parsed: FaultPlan = label
+                .parse()
+                .map_err(|e| format!("label '{label}' did not parse: {e}"))?;
+            prop_assert!(
+                parsed == plan,
+                "label '{label}' round-tripped to {parsed:?}, wanted {plan:?}"
+            );
+            Ok(())
+        },
+    );
 }
