@@ -1,11 +1,12 @@
 //! Policy sweep: the full cross-product of thief policy × victim policy
 //! × waiting-time gate on the headline Cholesky workload — the
 //! design-space exploration behind Figs. 2, 5 and 6, in one table —
-//! now swept per scheduler backend. The ranking of policies must be
-//! stable across backends (the acceptance check for the sharded queue:
-//! same Steal-vs-No-Steal ordering as central).
+//! now swept per scheduler backend (central, sharded and the lock-free
+//! workassist queue). The ranking of policies must be stable across
+//! backends (the acceptance check for every non-central queue: same
+//! Steal-vs-No-Steal ordering as central).
 //!
-//!     cargo run --release --example policy_sweep [seeds] [--sched=central|sharded|both]
+//!     cargo run --release --example policy_sweep [seeds] [--sched=central|sharded|workassist|all]
 
 use std::sync::Arc;
 
@@ -28,7 +29,9 @@ fn main() {
                     Ok(b) => vec![b],
                     Err(e) => {
                         eprintln!("{e}");
-                        eprintln!("usage: policy_sweep [seeds] [--sched=central|sharded|both]");
+                        eprintln!(
+                            "usage: policy_sweep [seeds] [--sched=central|sharded|workassist|all]"
+                        );
                         std::process::exit(2);
                     }
                 },
@@ -36,7 +39,7 @@ fn main() {
         } else if let Ok(n) = arg.parse::<u64>() {
             seeds = n;
         } else {
-            eprintln!("usage: policy_sweep [seeds] [--sched=central|sharded|both]");
+            eprintln!("usage: policy_sweep [seeds] [--sched=central|sharded|workassist|all]");
             std::process::exit(2);
         }
     }

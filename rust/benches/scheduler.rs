@@ -6,14 +6,17 @@
 //!
 //! Part 2 — the §4.4 contention benchmark: N worker threads hammer one
 //! node queue (select+insert pairs) for a fixed window, with and without
-//! a concurrent migrate thread extracting steal candidates, across both
-//! backends. This is the experiment the sharded backend exists for: at
-//! 40 workers with concurrent steal extraction it should beat the
-//! central single-lock queue by ≥ 2× aggregate throughput.
+//! a concurrent migrate thread extracting steal candidates, across the
+//! full backend matrix (central / sharded / workassist) up to 80
+//! workers. This is the experiment the sharded and lock-free backends
+//! exist for: at 40 workers with concurrent steal extraction sharded
+//! should beat the central single-lock queue by ≥ 2× aggregate
+//! throughput, and workassist must do all of it with zero mutex
+//! acquisitions.
 //!
 //! Part 3 — the steal-decision microbench: one full victim-side
 //! `decide_steal` poll (O(1) census + waiting-time gate + index-based
-//! extraction) at 1/8/40 workers on both backends, in two denial
+//! extraction) at 1/8/40 workers on every backend, in two denial
 //! regimes: *payload-certain* (the min-payload bound proves the denial
 //! without extracting — the poll is pure accounting reads) and
 //! *payload-weighing* (a light outlier forces extract-and-reinsert —
@@ -188,26 +191,28 @@ fn contention_benches() {
     println!();
     println!("== contention: N workers × (select+insert), ± concurrent steal extraction ==");
     println!(
-        "{:<9} {:>7} {:>7}   {:>14} {:>14} {:>9}",
-        "steal", "workers", "", "central", "sharded", "speedup"
+        "{:<9} {:>7}   {:>14} {:>14} {:>14} {:>9} {:>9}",
+        "steal", "workers", "central", "sharded", "workassist", "shd/cen", "wa/cen"
     );
     let window = Duration::from_millis(400);
     for with_steal in [false, true] {
-        for workers in [1usize, 8, 40] {
+        for workers in [1usize, 8, 40, 80] {
             // One warm run to stabilize allocator state, then measure.
             for backend in SchedBackend::ALL {
                 contention_run(backend, workers, with_steal, Duration::from_millis(50));
             }
             let central = contention_run(SchedBackend::Central, workers, with_steal, window);
             let sharded = contention_run(SchedBackend::Sharded, workers, with_steal, window);
+            let assist = contention_run(SchedBackend::Workassist, workers, with_steal, window);
             println!(
-                "{:<9} {:>7} {:>7}   {:>11.2}M/s {:>11.2}M/s {:>8.2}x",
+                "{:<9} {:>7}   {:>11.2}M/s {:>11.2}M/s {:>11.2}M/s {:>8.2}x {:>8.2}x",
                 if with_steal { "+steal" } else { "-" },
                 workers,
-                "",
                 central / 1e6,
                 sharded / 1e6,
-                sharded / central
+                assist / 1e6,
+                sharded / central,
+                assist / central
             );
         }
     }
@@ -309,6 +314,18 @@ fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
                         "denial-heavy steady state must raise the watermark \
                          ({} <= {SPILL_THRESHOLD})",
                         stats.watermark
+                    );
+                }
+                if backend == SchedBackend::Workassist {
+                    // The poll must be lock-free end to end, and an
+                    // uncontended poll never even retries a CAS.
+                    assert_eq!(
+                        stats.lock_acquisitions, 0,
+                        "the lock-free backend's steal poll took a lock"
+                    );
+                    assert_eq!(
+                        stats.cas_retries, 0,
+                        "an uncontended steal poll must not retry a CAS"
                     );
                 }
             }
@@ -660,6 +677,11 @@ fn write_json(
                     "min_payload_resets",
                     Json::Num(stats.min_payload_resets as f64),
                 ),
+                (
+                    "lock_acquisitions",
+                    Json::Num(stats.lock_acquisitions as f64),
+                ),
+                ("cas_retries", Json::Num(stats.cas_retries as f64)),
             ])
         })
         .collect();

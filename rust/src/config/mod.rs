@@ -27,7 +27,7 @@ pub struct RunConfig {
     pub link: LinkModel,
     pub migrate: MigrateConfig,
     pub seed: u64,
-    /// Scheduler backend (`--sched central|sharded`).
+    /// Scheduler backend (`--sched central|sharded|workassist`).
     pub sched: SchedBackend,
     /// Coalesce same-destination activations (`--batch-activations`).
     pub batch_activations: bool,
@@ -44,7 +44,8 @@ impl RunConfig {
     /// `--thief ready-only|ready-successors --waiting-time BOOL`
     /// `--exec-ewma BOOL --exec-per-class BOOL --share-estimates BOOL`
     /// `--victim-select uniform|targeted`
-    /// `--sched central|sharded --batch-activations BOOL --pool-floor N`
+    /// `--sched central|sharded|workassist`
+    /// `--batch-activations BOOL --pool-floor N`
     /// `--faults SPEC` (e.g. `drop=0.05,delay=3x`; see
     /// [`FaultPlan`] for the grammar),
     /// `--latency-us L --bw B --seed X` and the
@@ -207,6 +208,11 @@ mod tests {
         let c = RunConfig::from_args(&args("--sched sharded")).unwrap();
         assert_eq!(c.sched, SchedBackend::Sharded);
         assert_eq!(c.sim_config().sched, SchedBackend::Sharded);
+        let c = RunConfig::from_args(&args("--sched workassist")).unwrap();
+        assert_eq!(c.sched, SchedBackend::Workassist);
+        assert_eq!(c.sim_config().sched, SchedBackend::Workassist);
+        let c = RunConfig::from_args(&args("--sched lockfree")).unwrap();
+        assert_eq!(c.sched, SchedBackend::Workassist, "alias accepted");
         assert!(RunConfig::from_args(&args("--sched bogus")).is_err());
     }
 

@@ -34,16 +34,16 @@ fn usage() -> String {
      \x20         [--thief ready-successors] [--waiting-time true] [--seed 1]\n\
      \x20         [--exec-ewma false] [--exec-per-class false]\n\
      \x20         [--share-estimates false] [--victim-select uniform|targeted]\n\
-     \x20         [--sched central|sharded] [--pool-floor 2]\n\
+     \x20         [--sched central|sharded|workassist] [--pool-floor 2]\n\
      \x20         [--batch-activations true]\n\
      \x20         [--faults off|drop=P,dup=P,delay=Fx,slow-node=N,...]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
-     \x20         [--figure-scale small|paper] [--sched central|sharded]\n\
+     \x20         [--figure-scale small|paper] [--sched central|sharded|workassist]\n\
      \x20         [--victim-select uniform|targeted] [--artifacts artifacts]\n\
      repro calibrate [--reps 50] [--out artifacts/costmodel.json]\n\
      repro verify [--tiles 6] [--tile-size 16] [--nodes 2] [--workers 2]\n\
-     \x20         [--steal true] [--sched central|sharded]\n\
+     \x20         [--steal true] [--sched central|sharded|workassist]\n\
      \x20         [--artifacts artifacts] [--pjrt-threads 2]\n"
         .to_string()
 }

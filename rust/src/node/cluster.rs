@@ -31,7 +31,7 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// Record Fig.1/Fig.3 poll samples.
     pub record_polls: bool,
-    /// Scheduler backend per node (`--sched central|sharded`).
+    /// Scheduler backend per node (`--sched central|sharded|workassist`).
     pub sched: SchedBackend,
     /// Coalesce same-destination successor activations into one
     /// `ActivateBatch` message (`--batch-activations`; off reproduces
@@ -1774,6 +1774,37 @@ mod tests {
                 Arc::new(NullExecutor),
             );
             assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
+        }
+    }
+
+    /// The lock-free workassist backend must run the full protocol —
+    /// workers, comm, migrate thread, Safra termination — to the same
+    /// task counts, without ever taking a queue lock on any node.
+    #[test]
+    fn workassist_backend_executes_every_task_lock_free() {
+        for steal in [false, true] {
+            let g = chol(8, 3);
+            let total = g.total_tasks().unwrap();
+            let r = Cluster::run(
+                g,
+                ClusterConfig {
+                    workers_per_node: 2,
+                    sched: SchedBackend::Workassist,
+                    migrate: if steal {
+                        MigrateConfig {
+                            poll_interval_us: 50.0,
+                            ..Default::default()
+                        }
+                    } else {
+                        MigrateConfig::disabled()
+                    },
+                    ..Default::default()
+                },
+                Arc::new(NullExecutor),
+            );
+            assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
+            let locks: u64 = r.nodes.iter().map(|n| n.sched.lock_acquisitions).sum();
+            assert_eq!(locks, 0, "steal={steal}: workassist took a lock");
         }
     }
 }

@@ -15,7 +15,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::dataflow::task::{TaskClass, TaskDesc};
 
@@ -62,6 +62,10 @@ pub struct CentralQueue {
     feedback_grants: AtomicU64,
     feedback_wt_denials: AtomicU64,
     feedback_timeouts: AtomicU64,
+    /// Every acquisition of the queue mutex, feeding
+    /// [`SchedStats::lock_acquisitions`] — the §4.4 contention metric
+    /// the lock-free backend's zero is compared against.
+    lock_acquisitions: AtomicU64,
 }
 
 impl CentralQueue {
@@ -69,8 +73,15 @@ impl CentralQueue {
         Self::default()
     }
 
+    /// The one way in to the queue state: every caller goes through
+    /// here, so the acquisition counter can never undercount.
+    fn locked(&self) -> MutexGuard<'_, Central> {
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap()
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.locked().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -82,7 +93,7 @@ impl CentralQueue {
     }
 
     pub fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         Self::insert_locked(&mut q, task, priority, meta);
     }
 
@@ -109,7 +120,7 @@ impl CentralQueue {
         if batch.is_empty() {
             return;
         }
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         q.stats.batches[site.idx()].batches += 1;
         q.stats.batches[site.idx()].tasks += batch.len() as u64;
         for &(task, priority, meta) in batch {
@@ -144,7 +155,7 @@ impl CentralQueue {
 
     /// Worker-side `select`: highest-priority ready task.
     pub fn select(&self) -> Option<TaskDesc> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         let entry = q.map.pop_last();
         if let Some((key, (task, meta))) = entry {
             q.stats.selects += 1;
@@ -158,24 +169,24 @@ impl CentralQueue {
 
     /// Queued stealable tasks — O(1), no scan.
     pub fn stealable_count(&self) -> usize {
-        self.inner.lock().unwrap().steal_idx.len()
+        self.locked().steal_idx.len()
     }
 
     /// Payload bytes of the queued stealable tasks — O(1), no scan.
     pub fn stealable_payload_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().steal_payload
+        self.locked().steal_payload
     }
 
     /// The *exact* minimum queued stealable payload — O(1) read of the
     /// cached multiset minimum (`u64::MAX` when nothing stealable is
     /// queued), no scan.
     pub fn min_stealable_payload_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().steal_payloads.min()
+        self.locked().steal_payloads.min()
     }
 
     /// Queued tasks per class — O(1) copy of the incremental counters.
     pub fn class_counts(&self) -> [usize; TaskClass::COUNT] {
-        self.inner.lock().unwrap().class_counts
+        self.locked().class_counts
     }
 
     /// Migrate-thread extraction of up to `max` stealable tasks, lowest
@@ -186,7 +197,7 @@ impl CentralQueue {
         if max == 0 {
             return Vec::new();
         }
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         let keys: Vec<QKey> = q.steal_idx.iter().take(max).copied().collect();
         let mut out = Vec::with_capacity(keys.len());
         for k in keys {
@@ -200,7 +211,7 @@ impl CentralQueue {
 
     /// Count tasks satisfying `filter` (O(n) oracle; counted as a scan).
     pub fn count_matching(&self, filter: impl Fn(&TaskDesc) -> bool) -> usize {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         q.stats.scans += 1;
         q.map.values().filter(|(t, _)| filter(t)).count()
     }
@@ -215,7 +226,7 @@ impl CentralQueue {
         if max == 0 {
             return Vec::new();
         }
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         q.stats.scans += 1;
         // Collect keys only for matches: the scan itself allocates
         // nothing per non-matching task and never copies a TaskDesc.
@@ -238,13 +249,13 @@ impl CentralQueue {
 
     /// Peek the highest priority value (scheduling diagnostics).
     pub fn max_priority(&self) -> Option<i64> {
-        let q = self.inner.lock().unwrap();
+        let q = self.locked();
         q.map.last_key_value().map(|(k, _)| k.prio)
     }
 
     pub fn stats(&self) -> SchedStats {
         let mut stats = {
-            let q = self.inner.lock().unwrap();
+            let q = self.locked();
             let mut stats = q.stats;
             stats.min_payload_resets = q.steal_payloads.resets();
             stats
@@ -252,12 +263,13 @@ impl CentralQueue {
         stats.feedback_grants = self.feedback_grants.load(Ordering::Relaxed);
         stats.feedback_wt_denials = self.feedback_wt_denials.load(Ordering::Relaxed);
         stats.feedback_timeouts = self.feedback_timeouts.load(Ordering::Relaxed);
+        stats.lock_acquisitions = self.lock_acquisitions.load(Ordering::Relaxed);
         stats
     }
 
     /// Drain everything (shutdown paths in tests).
     pub fn drain(&self) -> Vec<TaskDesc> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         let out = q.map.values().map(|(t, _)| *t).collect();
         q.map.clear();
         q.steal_idx.clear();

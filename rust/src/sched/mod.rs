@@ -1,4 +1,4 @@
-//! Node-level schedulers: one trait, two backends, O(1) steal accounting.
+//! Node-level schedulers: one trait, three backends, O(1) steal accounting.
 //!
 //! PaRSEC's default distributed scheduler keeps *node-level* queues
 //! ordered by priority; worker threads `select` from the front, and the
@@ -12,7 +12,7 @@
 //! ([`crate::node`]), the discrete-event simulator ([`crate::sim`]) and
 //! the victim-side steal protocol ([`crate::migrate::protocol`]) — goes
 //! through the [`Scheduler`] trait, so backends are swappable per run
-//! (`--sched central|sharded`):
+//! (`--sched central|sharded|workassist`):
 //!
 //! * [`CentralQueue`] — the reference backend: one `BTreeMap` keyed by
 //!   `(priority, insertion-seq)` behind one lock. Both ends are O(log n)
@@ -28,6 +28,12 @@
 //!   a worker `select`. The watermark is *adaptive*: steal requests the
 //!   pool cannot cover push it down (spill more toward thieves), workers
 //!   that have to fall back to the pool push it back up.
+//! * [`WorkAssistQueue`] — the lock-free backend: published task blocks
+//!   plus CAS-claimed entries in the work-assisting style, no mutex on
+//!   any path ([`SchedStats::lock_acquisitions`] is hard-wired zero and
+//!   [`SchedStats::cas_retries`] counts contention instead). Verified by
+//!   a `loom` model-checking suite (`tests/loom_workassist.rs`) on top
+//!   of the shared property suite.
 //!
 //! # The accounting contract
 //!
@@ -100,9 +106,11 @@ use crate::dataflow::ttg::TaskGraph;
 
 mod central;
 mod sharded;
+mod workassist;
 
 pub use central::CentralQueue;
 pub use sharded::{POOL_FLOOR, SPILL_THRESHOLD, ShardedQueue};
+pub use workassist::WorkAssistQueue;
 
 /// The historical name of the node queue; kept as an alias for the
 /// reference backend so existing call sites and tests read unchanged.
@@ -382,6 +390,17 @@ pub struct SchedStats {
     /// property suite plus the payload-certain e2e runs assert it stays
     /// zero.
     pub min_payload_resets: u64,
+    /// Mutex acquisitions performed by the backend across every op —
+    /// the lock-freedom gate. The locked backends count each `lock()`;
+    /// the workassist backend has no mutex anywhere and hard-wires this
+    /// to zero, which the bench and e2e asserts pin down.
+    pub lock_acquisitions: u64,
+    /// Failed compare-exchange attempts (claim races, chain-head and
+    /// delta-stack pushes, combiner-epoch handoffs). Zero
+    /// single-threaded; under contention each retry certifies that
+    /// *another* thread made progress — the lock-freedom argument. The
+    /// locked backends report 0.
+    pub cas_retries: u64,
 }
 
 impl SchedStats {
@@ -509,7 +528,8 @@ pub trait Scheduler: Send + Sync + std::fmt::Debug {
     fn name(&self) -> &'static str;
 }
 
-/// Which [`Scheduler`] backend a run uses (`--sched central|sharded`).
+/// Which [`Scheduler`] backend a run uses
+/// (`--sched central|sharded|workassist`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum SchedBackend {
     /// One priority map behind one lock (reference / deterministic).
@@ -517,6 +537,9 @@ pub enum SchedBackend {
     Central,
     /// Per-worker shards + low-priority steal pool.
     Sharded,
+    /// Lock-free published blocks + CAS-claimed entries
+    /// (work-assisting).
+    Workassist,
 }
 
 impl SchedBackend {
@@ -535,6 +558,9 @@ impl SchedBackend {
             SchedBackend::Sharded => {
                 Box::new(ShardedQueue::new(workers).with_pool_floor(pool_floor))
             }
+            // No pool, so no pool floor: thieves claim from the same
+            // published blocks workers do.
+            SchedBackend::Workassist => Box::new(WorkAssistQueue::new(workers)),
         }
     }
 
@@ -542,10 +568,15 @@ impl SchedBackend {
         match self {
             SchedBackend::Central => "central",
             SchedBackend::Sharded => "sharded",
+            SchedBackend::Workassist => "workassist",
         }
     }
 
-    pub const ALL: [SchedBackend; 2] = [SchedBackend::Central, SchedBackend::Sharded];
+    pub const ALL: [SchedBackend; 3] = [
+        SchedBackend::Central,
+        SchedBackend::Sharded,
+        SchedBackend::Workassist,
+    ];
 }
 
 impl FromStr for SchedBackend {
@@ -555,8 +586,9 @@ impl FromStr for SchedBackend {
         match s.to_ascii_lowercase().as_str() {
             "central" | "btree" | "locked" => Ok(SchedBackend::Central),
             "sharded" | "shards" | "per-worker" => Ok(SchedBackend::Sharded),
+            "workassist" | "lockfree" | "assist" => Ok(SchedBackend::Workassist),
             _ => Err(format!(
-                "unknown scheduler backend '{s}' (central | sharded)"
+                "unknown scheduler backend '{s}' (central | sharded | workassist)"
             )),
         }
     }
@@ -575,6 +607,10 @@ mod tests {
     fn backend_parses() {
         assert_eq!("central".parse::<SchedBackend>().unwrap(), SchedBackend::Central);
         assert_eq!("Sharded".parse::<SchedBackend>().unwrap(), SchedBackend::Sharded);
+        let wa = "workassist".parse::<SchedBackend>().unwrap();
+        assert_eq!(wa, SchedBackend::Workassist);
+        let alias = "lockfree".parse::<SchedBackend>().unwrap();
+        assert_eq!(alias, SchedBackend::Workassist);
         assert!("fancy".parse::<SchedBackend>().is_err());
         assert_eq!(SchedBackend::default(), SchedBackend::Central);
     }

@@ -65,7 +65,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::dataflow::task::{TaskClass, TaskDesc};
 
@@ -187,6 +187,10 @@ pub struct ShardedQueue {
     fallback_walks: AtomicU64,
     /// Shard-empty batch rebalances performed (diagnostics).
     rebalances: AtomicU64,
+    /// Every mutex acquisition (shards, pool, payload multiset),
+    /// feeding [`SchedStats::lock_acquisitions`] — the §4.4 contention
+    /// metric the lock-free backend's zero is compared against.
+    lock_acquisitions: AtomicU64,
 }
 
 impl ShardedQueue {
@@ -218,7 +222,17 @@ impl ShardedQueue {
             feedback_timeouts: AtomicU64::new(0),
             fallback_walks: AtomicU64::new(0),
             rebalances: AtomicU64::new(0),
+            lock_acquisitions: AtomicU64::new(0),
         }
+    }
+
+    /// Acquire `m`, counting the acquisition toward
+    /// [`SchedStats::lock_acquisitions`]. Every mutex in this backend
+    /// (shards, pool, payload multiset) is taken through here, so the
+    /// contention metric can never undercount.
+    fn locked<'a, T>(&self, m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        m.lock().unwrap()
     }
 
     /// Set the steal-pool floor (`--pool-floor`; see [`POOL_FLOOR`]).
@@ -233,7 +247,7 @@ impl ShardedQueue {
 
     /// Tasks currently waiting in the steal pool (diagnostics).
     pub fn pool_len(&self) -> usize {
-        self.pool.lock().unwrap().len()
+        self.locked(&self.pool).len()
     }
 
     /// `extract_stealable` calls that missed the pool and walked the
@@ -282,7 +296,7 @@ impl ShardedQueue {
         if payloads.is_empty() {
             return;
         }
-        let mut counts = self.steal_payloads.lock().unwrap();
+        let mut counts = self.locked(&self.steal_payloads);
         for &p in payloads {
             counts.add(p);
         }
@@ -295,7 +309,7 @@ impl ShardedQueue {
         if payloads.is_empty() {
             return;
         }
-        let mut counts = self.steal_payloads.lock().unwrap();
+        let mut counts = self.locked(&self.steal_payloads);
         for &p in payloads {
             counts.remove(p);
         }
@@ -388,7 +402,7 @@ impl ShardedQueue {
         if spilled.is_empty() {
             return;
         }
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = self.locked(&self.pool);
         for (k, (t, m)) in spilled {
             pool.insert(k, t, m);
         }
@@ -438,7 +452,7 @@ impl ShardedQueue {
             (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
         let watermark = self.watermark.load(Ordering::Relaxed);
         let spilled = {
-            let mut shard = self.shards[shard_ix].lock().unwrap();
+            let mut shard = self.locked(&self.shards[shard_ix]);
             shard.insert(self.key_for(priority), task, meta);
             Self::drain_spill(&mut shard, watermark)
         };
@@ -476,7 +490,7 @@ impl ShardedQueue {
         self.batch_tasks[site.idx()]
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
         if site == BatchSite::GateDenial {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = self.locked(&self.pool);
             for &(task, priority, meta) in batch {
                 pool.insert(self.key_for(priority), task, meta);
             }
@@ -486,7 +500,7 @@ impl ShardedQueue {
             (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize;
         let watermark = self.watermark.load(Ordering::Relaxed);
         let spilled = {
-            let mut shard = self.shards[shard_ix].lock().unwrap();
+            let mut shard = self.locked(&self.shards[shard_ix]);
             for &(task, priority, meta) in batch {
                 shard.insert(self.key_for(priority), task, meta);
             }
@@ -534,11 +548,11 @@ impl ShardedQueue {
     pub fn select(&self, worker: usize) -> Option<TaskDesc> {
         let n = self.shards.len();
         let own = worker % n;
-        if let Some((_, (t, m))) = self.shards[own].lock().unwrap().pop_last() {
+        if let Some((_, (t, m))) = self.locked(&self.shards[own]).pop_last() {
             self.book_select(&t, m);
             return Some(t);
         }
-        if let Some((_, (t, m))) = self.pool.lock().unwrap().pop_last() {
+        if let Some((_, (t, m))) = self.locked(&self.pool).pop_last() {
             // A local worker reclaiming pooled work: spill was too
             // eager — nudge the watermark up.
             self.raise_watermark();
@@ -551,14 +565,14 @@ impl ShardedQueue {
         let mut richest: Option<(usize, usize)> = None; // (len, ix)
         for offset in 1..n {
             let ix = (own + offset) % n;
-            let len = self.shards[ix].lock().unwrap().len();
+            let len = self.locked(&self.shards[ix]).len();
             if len > richest.map_or(0, |(l, _)| l) {
                 richest = Some((len, ix));
             }
         }
         if let Some((_, ix)) = richest {
             let batch = {
-                let mut donor = self.shards[ix].lock().unwrap();
+                let mut donor = self.locked(&self.shards[ix]);
                 let take = donor.len().div_ceil(2);
                 let mut batch = Vec::with_capacity(take);
                 for _ in 0..take {
@@ -575,7 +589,7 @@ impl ShardedQueue {
             let mut entries = batch.into_iter();
             if let Some((_, (t, m))) = entries.next() {
                 {
-                    let mut own_shard = self.shards[own].lock().unwrap();
+                    let mut own_shard = self.locked(&self.shards[own]);
                     for (k, (task, meta)) in entries {
                         own_shard.insert(k, task, meta);
                     }
@@ -589,7 +603,7 @@ impl ShardedQueue {
         // take; last resort is the old one-task neighbor walk.
         for offset in 1..n {
             let ix = (own + offset) % n;
-            if let Some((_, (t, m))) = self.shards[ix].lock().unwrap().pop_last() {
+            if let Some((_, (t, m))) = self.locked(&self.shards[ix]).pop_last() {
                 self.book_select(&t, m);
                 return Some(t);
             }
@@ -626,7 +640,7 @@ impl ShardedQueue {
         let mut out = Vec::new();
         let mut payloads = Vec::new();
         {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = self.locked(&self.pool);
             let keys: Vec<QKey> = pool.steal_idx.iter().take(max).copied().collect();
             for k in keys {
                 if let Some((t, m)) = pool.remove(k) {
@@ -644,7 +658,7 @@ impl ShardedQueue {
             self.fallback_walks.fetch_add(1, Ordering::Relaxed);
             let mut candidates: Vec<(QKey, usize)> = Vec::new();
             for (ix, shard) in self.shards.iter().enumerate() {
-                let guard = shard.lock().unwrap();
+                let guard = self.locked(shard);
                 candidates.extend(guard.steal_idx.iter().map(|k| (*k, ix)));
             }
             candidates.sort_unstable();
@@ -655,7 +669,7 @@ impl ShardedQueue {
                 if out.len() >= max && restock.len() >= self.pool_floor {
                     break;
                 }
-                if let Some((t, m)) = self.shards[ix].lock().unwrap().remove(key) {
+                if let Some((t, m)) = self.locked(&self.shards[ix]).remove(key) {
                     if out.len() < max {
                         payloads.push(m.payload_bytes);
                         out.push(t);
@@ -672,22 +686,13 @@ impl ShardedQueue {
 
     pub fn count_matching(&self, filter: impl Fn(&TaskDesc) -> bool) -> usize {
         self.scans.fetch_add(1, Ordering::Relaxed);
-        let mut n = self
-            .pool
-            .lock()
-            .unwrap()
-            .map
-            .values()
-            .filter(|(t, _)| filter(t))
-            .count();
+        let mut n = {
+            let pool = self.locked(&self.pool);
+            pool.map.values().filter(|(t, _)| filter(t)).count()
+        };
         for shard in &self.shards {
-            n += shard
-                .lock()
-                .unwrap()
-                .map
-                .values()
-                .filter(|(t, _)| filter(t))
-                .count();
+            let guard = self.locked(shard);
+            n += guard.map.values().filter(|(t, _)| filter(t)).count();
         }
         n
     }
@@ -736,13 +741,13 @@ impl ShardedQueue {
         let mut out = Vec::new();
         let mut stealable_payloads = Vec::new();
         {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = self.locked(&self.pool);
             Self::extract_from(&mut pool, max, &filter, &mut out, &mut stealable_payloads);
         }
         if out.len() < max {
             let mut candidates: Vec<(QKey, usize)> = Vec::new();
             for (ix, shard) in self.shards.iter().enumerate() {
-                let guard = shard.lock().unwrap();
+                let guard = self.locked(shard);
                 candidates.extend(
                     guard
                         .map
@@ -756,7 +761,7 @@ impl ShardedQueue {
                 if out.len() >= max {
                     break;
                 }
-                if let Some((t, m)) = self.shards[ix].lock().unwrap().remove(key) {
+                if let Some((t, m)) = self.locked(&self.shards[ix]).remove(key) {
                     if m.stealable {
                         stealable_payloads.push(m.payload_bytes);
                     }
@@ -775,15 +780,12 @@ impl ShardedQueue {
     }
 
     pub fn max_priority(&self) -> Option<i64> {
-        let mut best: Option<i64> = self
-            .pool
-            .lock()
-            .unwrap()
-            .map
-            .last_key_value()
-            .map(|(k, _)| k.prio);
+        let mut best: Option<i64> = {
+            let pool = self.locked(&self.pool);
+            pool.map.last_key_value().map(|(k, _)| k.prio)
+        };
         for shard in &self.shards {
-            if let Some((k, _)) = shard.lock().unwrap().map.last_key_value() {
+            if let Some((k, _)) = self.locked(shard).map.last_key_value() {
                 best = Some(best.map_or(k.prio, |b| b.max(k.prio)));
             }
         }
@@ -808,7 +810,9 @@ impl ShardedQueue {
             feedback_timeouts: self.feedback_timeouts.load(Ordering::Relaxed),
             watermark: self.watermark.load(Ordering::Relaxed) as u64,
             extract_fallback_walks: self.fallback_walks.load(Ordering::Relaxed),
-            min_payload_resets: self.steal_payloads.lock().unwrap().resets(),
+            min_payload_resets: self.locked(&self.steal_payloads).resets(),
+            lock_acquisitions: self.lock_acquisitions.load(Ordering::Relaxed),
+            cas_retries: 0,
         }
     }
 
@@ -829,9 +833,9 @@ impl ShardedQueue {
             shard.steal_idx.clear();
         };
         for shard in &self.shards {
-            clear(&mut shard.lock().unwrap());
+            clear(&mut self.locked(shard));
         }
-        clear(&mut self.pool.lock().unwrap());
+        clear(&mut self.locked(&self.pool));
         self.count.fetch_sub(out.len(), Ordering::SeqCst);
         for task in &out {
             self.class_dec(task.class);
@@ -1201,6 +1205,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // real threads: minutes under the interpreter
     fn concurrent_workers_and_stealer_conserve_tasks() {
         use std::sync::Arc;
         let q = Arc::new(ShardedQueue::new(4));

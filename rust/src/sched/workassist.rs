@@ -1,0 +1,1024 @@
+//! The lock-free backend: per-worker publish chains + CAS-claimed
+//! entries, in the work-assisting style (`--sched workassist`).
+//!
+//! Both existing backends serialize every hot-path op on a mutex — the
+//! §4.4 contention structure the paper measures. This backend removes
+//! the mutex entirely: ready tasks are published as immutable *blocks*
+//! (one block per insert event, so a batched activation set is one
+//! allocation and one CAS, the work-assisting analogue of advertising a
+//! whole chunk of remaining work at once), and consumers — worker
+//! `select`, the migrate thread's `extract_stealable`, `drain` — *claim*
+//! individual entries with a single `compare_exchange` on the entry's
+//! claim flag. Whoever wins the CAS owns the task; everyone else moves
+//! on. There is no lock to convoy on, so a stalled thread can never
+//! block another (lock-freedom: every failed claim CAS means some other
+//! thread made progress).
+//!
+//! # Ordering
+//!
+//! `select` claims the globally best unclaimed entry (highest priority,
+//! then oldest), and extraction claims the globally worst stealable one
+//! (lowest priority, then newest) — the exact order the central queue's
+//! `BTreeMap` yields. Single-threaded, this backend is therefore
+//! *order-identical* to `central` (property-tested in
+//! `tests/sched_backends.rs`), which is also what makes the DES runs on
+//! it deterministic. Candidates are found via per-block summaries (the
+//! best/worst unclaimed entry of each block, recomputed by the claiming
+//! thread), so a `select` walks `O(blocks)` summaries plus one block's
+//! entries instead of every queued task. Under concurrency a summary
+//! can be momentarily stale; the claim rescan is the authority, so
+//! staleness costs candidate quality, never correctness.
+//!
+//! # The accounting contract, without a lock
+//!
+//! `len` / `stealable_count` / `stealable_payload_bytes` /
+//! `class_counts` are plain atomic counters: bumped *before* a block is
+//! published and decremented *after* an entry is claimed, so at every
+//! quiesce point they are exact, and mid-flight they are the same
+//! best-effort census any concurrent reader of the locked backends
+//! observes between its own lock acquisitions.
+//!
+//! The one structure that cannot be a counter — the *exact*
+//! min-stealable-payload multiset — uses mutex-free flat combining:
+//! every insert/claim pushes an add/remove delta onto a Treiber stack,
+//! and a reader CASes an epoch counter from even to odd to become the
+//! *combiner*, draining the stack into the private [`PayloadMultiset`]
+//! and refreshing the cached minimum. If the epoch CAS fails, another
+//! thread is combining at this instant and the reader returns the last
+//! combined minimum instead of waiting — bounded staleness under
+//! contention, exactness whenever the read is not racing a writer
+//! (every single-threaded read, every quiesce point, and in particular
+//! every DES `decide_steal` poll). No path here ever takes a mutex:
+//! [`SchedStats::lock_acquisitions`] is hard-wired to zero, and
+//! [`SchedStats::cas_retries`] counts every failed CAS so the bench and
+//! e2e gates can assert the hot path is both scan-free and lock-free.
+//!
+//! # Memory
+//!
+//! Blocks are unlinked from the traversal chains opportunistically once
+//! every entry is claimed, but the allocations are retained on a
+//! separate all-blocks chain until the queue drops (the unlink CAS can
+//! momentarily resurrect an exhausted block, which is harmless exactly
+//! because nothing is freed early). That trades a run's peak block
+//! count in heap for not needing an epoch/hazard reclamation scheme;
+//! queues live for one run and are dropped whole.
+
+use std::fmt;
+use std::ptr;
+
+use crate::dataflow::task::{TaskClass, TaskDesc};
+
+use self::sync::{AtomicBool, AtomicI64, AtomicPtr, AtomicU64, AtomicUsize, Ordering, UnsafeCell};
+use super::{
+    BatchCounter, BatchSite, PayloadMultiset, SchedStats, Scheduler, StealOutcome, TaskMeta,
+};
+
+/// Atomic and cell shims: the std types normally, loom's checked twins
+/// under `--cfg loom`, so the model-checking suite
+/// (`tests/loom_workassist.rs`) explores the owner-pop / thief-claim /
+/// accounting-read interleavings of this exact code, not a copy.
+mod sync {
+    #[cfg(not(loom))]
+    pub(super) use std::sync::atomic::{
+        AtomicBool, AtomicI64, AtomicPtr, AtomicU64, AtomicUsize, Ordering,
+    };
+
+    #[cfg(loom)]
+    pub(super) use loom::sync::atomic::{
+        AtomicBool, AtomicI64, AtomicPtr, AtomicU64, AtomicUsize, Ordering,
+    };
+
+    /// `UnsafeCell` with loom's closure API (`with_mut`) so the
+    /// flat-combining body is identical under std and loom.
+    #[cfg(not(loom))]
+    pub(super) struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    #[cfg(not(loom))]
+    impl<T> UnsafeCell<T> {
+        pub(super) fn new(value: T) -> Self {
+            UnsafeCell(std::cell::UnsafeCell::new(value))
+        }
+
+        pub(super) fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+
+    #[cfg(loom)]
+    pub(super) use loom::cell::UnsafeCell;
+}
+
+/// `n` fresh values in a boxed slice (the per-shard, per-class and
+/// per-site atomic arrays).
+fn filled<T>(n: usize, make: impl Fn() -> T) -> Box<[T]> {
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(make());
+    }
+    v.into_boxed_slice()
+}
+
+/// One queued task inside a published block. Immutable except for the
+/// claim flag: the winning `compare_exchange(false, true)` transfers
+/// ownership of `task` to the claimer.
+struct Entry {
+    task: TaskDesc,
+    prio: i64,
+    meta: TaskMeta,
+    claimed: AtomicBool,
+}
+
+/// One immutable block of entries, published by a single insert event
+/// (a plain insert is a 1-entry block; a batch is one block — the
+/// work-assisting "advertise the whole chunk at once").
+struct Node {
+    /// Sequence number of `entries[0]`; entry `k` is `seq0 + k`, so the
+    /// global priority-then-FIFO order needs no per-entry storage.
+    seq0: u64,
+    /// Unclaimed entries left (monotone to zero). A zero block is
+    /// exhausted and eligible for opportunistic unlinking.
+    remaining: AtomicUsize,
+    /// Traversal chain within a shard; mutated only by unlink CASes.
+    next: AtomicPtr<Node>,
+    /// Retention chain over every block ever published. Written before
+    /// publication, read only by `Drop`, so deferred reclamation can
+    /// never double-free or race a walker.
+    all_next: *mut Node,
+    /// Block summary: best unclaimed entry (highest priority, then
+    /// oldest), recomputed by each claiming thread. `i64::MIN` means
+    /// "none known" — a reader then rescans the block itself, so a
+    /// genuine `i64::MIN` priority degrades speed, never correctness.
+    best_prio: AtomicI64,
+    best_seq: AtomicU64,
+    /// Block summary: worst *stealable* unclaimed entry (lowest
+    /// priority, then newest); `i64::MAX` means "none known".
+    worst_prio: AtomicI64,
+    worst_seq: AtomicU64,
+    entries: Box<[Entry]>,
+}
+
+/// One pending payload-multiset mutation on the flat-combining stack.
+struct Delta {
+    payload: u64,
+    add: bool,
+    next: *mut Delta,
+}
+
+/// The lock-free work-assisting queue (`--sched workassist`). See the
+/// module docs for the claim protocol and the accounting contract.
+pub struct WorkAssistQueue {
+    /// Per-worker publish chains: inserts are spread across shards by
+    /// sequence number so concurrent publishers rarely contend on one
+    /// head CAS. Consumers walk all shards (the claim order is global).
+    shards: Box<[AtomicPtr<Node>]>,
+    /// Retention list head (see [`Node::all_next`]).
+    all_head: AtomicPtr<Node>,
+    seq: AtomicU64,
+    /// Queued entries (published minus claimed).
+    count: AtomicUsize,
+    steal_count: AtomicUsize,
+    steal_payload: AtomicU64,
+    class_counts: Box<[AtomicUsize]>,
+    /// Flat-combining state for the exact payload multiset: pending
+    /// deltas (Treiber stack), the combiner epoch (odd = someone is
+    /// combining), the multiset itself (touched only by the combiner)
+    /// and the last combined minimum / resets.
+    deltas: AtomicPtr<Delta>,
+    combine_epoch: AtomicU64,
+    multiset: UnsafeCell<PayloadMultiset>,
+    min_cache: AtomicU64,
+    resets_cache: AtomicU64,
+    // stats
+    inserts: AtomicU64,
+    selects: AtomicU64,
+    select_len_sum: AtomicU64,
+    steal_extracted: AtomicU64,
+    scans: AtomicU64,
+    batch_batches: Box<[AtomicU64]>,
+    batch_tasks: Box<[AtomicU64]>,
+    feedback_grants: AtomicU64,
+    feedback_wt_denials: AtomicU64,
+    feedback_timeouts: AtomicU64,
+    cas_retries: AtomicU64,
+}
+
+// SAFETY: the only non-Sync field is the flat-combining multiset cell,
+// which is mutated exclusively by the thread that won the (even -> odd)
+// combiner-epoch CAS and read by nobody else; blocks behind the raw
+// pointers are immutable after publication except through their atomics
+// and are freed only by `Drop` (`&mut self`).
+unsafe impl Send for WorkAssistQueue {}
+unsafe impl Sync for WorkAssistQueue {}
+
+impl WorkAssistQueue {
+    /// Build the queue for a node with `workers` worker threads (one
+    /// publish shard per worker; at least one).
+    pub fn new(workers: usize) -> Self {
+        let n_shards = workers.max(1);
+        WorkAssistQueue {
+            shards: filled(n_shards, || AtomicPtr::new(ptr::null_mut())),
+            all_head: AtomicPtr::new(ptr::null_mut()),
+            seq: AtomicU64::new(0),
+            count: AtomicUsize::new(0),
+            steal_count: AtomicUsize::new(0),
+            steal_payload: AtomicU64::new(0),
+            class_counts: filled(TaskClass::COUNT, || AtomicUsize::new(0)),
+            deltas: AtomicPtr::new(ptr::null_mut()),
+            combine_epoch: AtomicU64::new(0),
+            multiset: UnsafeCell::new(PayloadMultiset::default()),
+            min_cache: AtomicU64::new(u64::MAX),
+            resets_cache: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            selects: AtomicU64::new(0),
+            select_len_sum: AtomicU64::new(0),
+            steal_extracted: AtomicU64::new(0),
+            scans: AtomicU64::new(0),
+            batch_batches: filled(BatchSite::COUNT, || AtomicU64::new(0)),
+            batch_tasks: filled(BatchSite::COUNT, || AtomicU64::new(0)),
+            feedback_grants: AtomicU64::new(0),
+            feedback_wt_denials: AtomicU64::new(0),
+            feedback_timeouts: AtomicU64::new(0),
+            cas_retries: AtomicU64::new(0),
+        }
+    }
+
+    fn bump_retry(&self) {
+        self.cas_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One CAS attempt on a block-chain link; a failed attempt is
+    /// counted as a retry so the lock-freedom gates can see contention.
+    fn cas_node(&self, link: &AtomicPtr<Node>, cur: *mut Node, new: *mut Node) -> bool {
+        let r = link.compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire);
+        if r.is_err() {
+            self.bump_retry();
+        }
+        r.is_ok()
+    }
+
+    /// One CAS attempt on the delta stack head; failures count as above.
+    fn cas_delta(&self, link: &AtomicPtr<Delta>, cur: *mut Delta, new: *mut Delta) -> bool {
+        let r = link.compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire);
+        if r.is_err() {
+            self.bump_retry();
+        }
+        r.is_ok()
+    }
+
+    /// Publish one block of tasks: accounting first (a reader that can
+    /// already see the block must never under-count), then the block
+    /// itself via a head CAS on its shard chain.
+    fn publish(&self, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        debug_assert!(!batch.is_empty());
+        let n = batch.len();
+        let seq0 = self.seq.fetch_add(n as u64, Ordering::Relaxed);
+        self.inserts.fetch_add(n as u64, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::SeqCst);
+        let mut best: Option<(i64, u64)> = None;
+        let mut worst: Option<(i64, u64)> = None;
+        for (k, &(task, prio, meta)) in batch.iter().enumerate() {
+            let seq = seq0 + k as u64;
+            let class = task.class.idx();
+            self.class_counts[class].fetch_add(1, Ordering::Relaxed);
+            if meta.stealable {
+                self.steal_count.fetch_add(1, Ordering::SeqCst);
+                self.steal_payload
+                    .fetch_add(meta.payload_bytes, Ordering::SeqCst);
+                self.push_delta(meta.payload_bytes, true);
+                if worst.is_none_or(|(p, s)| prio < p || (prio == p && seq > s)) {
+                    worst = Some((prio, seq));
+                }
+            }
+            if best.is_none_or(|(p, s)| prio > p || (prio == p && seq < s)) {
+                best = Some((prio, seq));
+            }
+        }
+        let mut entries = Vec::with_capacity(n);
+        for &(task, prio, meta) in batch {
+            entries.push(Entry {
+                task,
+                prio,
+                meta,
+                claimed: AtomicBool::new(false),
+            });
+        }
+        let (bp, bs) = best.unwrap_or((i64::MIN, 0));
+        let (wp, ws) = worst.unwrap_or((i64::MAX, 0));
+        let node = Box::into_raw(Box::new(Node {
+            seq0,
+            remaining: AtomicUsize::new(n),
+            next: AtomicPtr::new(ptr::null_mut()),
+            all_next: ptr::null_mut(),
+            best_prio: AtomicI64::new(bp),
+            best_seq: AtomicU64::new(bs),
+            worst_prio: AtomicI64::new(wp),
+            worst_seq: AtomicU64::new(ws),
+            entries: entries.into_boxed_slice(),
+        }));
+        // Retention chain first (Drop must see every allocation even if
+        // a panic lands between the two pushes).
+        loop {
+            let head = self.all_head.load(Ordering::Relaxed);
+            // SAFETY: `node` is unpublished — this thread still owns it.
+            unsafe { (*node).all_next = head };
+            if self.cas_node(&self.all_head, head, node) {
+                break;
+            }
+        }
+        let shard = &self.shards[seq0 as usize % self.shards.len()];
+        loop {
+            let head = shard.load(Ordering::Acquire);
+            // SAFETY: `node` stays valid until Drop; the store is made
+            // visible by the release CAS inside `cas_node`.
+            unsafe { (*node).next.store(head, Ordering::Relaxed) };
+            if self.cas_node(shard, head, node) {
+                return;
+            }
+        }
+    }
+
+    /// Push one pending multiset mutation onto the flat-combining stack.
+    fn push_delta(&self, payload: u64, add: bool) {
+        let delta = Box::into_raw(Box::new(Delta {
+            payload,
+            add,
+            next: ptr::null_mut(),
+        }));
+        loop {
+            let head = self.deltas.load(Ordering::Acquire);
+            // SAFETY: `delta` is unpublished — this thread still owns it.
+            unsafe { (*delta).next = head };
+            if self.cas_delta(&self.deltas, head, delta) {
+                return;
+            }
+        }
+    }
+
+    /// Become the combiner (epoch CAS even -> odd) and fold every
+    /// pending delta into the multiset, refreshing the cached minimum.
+    /// Returns false when another thread holds the combiner role right
+    /// now — that thread is installing an up-to-date minimum, so the
+    /// caller reads the cache instead of waiting.
+    fn try_combine(&self) -> bool {
+        let epoch = self.combine_epoch.load(Ordering::Acquire);
+        if epoch % 2 == 1 {
+            return false;
+        }
+        let ctr = &self.combine_epoch;
+        let won = ctr.compare_exchange(epoch, epoch + 1, Ordering::AcqRel, Ordering::Acquire);
+        if won.is_err() {
+            self.bump_retry();
+            return false;
+        }
+        let mut segment = self.deltas.swap(ptr::null_mut(), Ordering::AcqRel);
+        // Reverse the drained segment to push order: an entry's add is
+        // always pushed before its remove (the claim happens after the
+        // block — and therefore the add — was published), so applying
+        // in push order can never remove before adding.
+        let mut ordered: *mut Delta = ptr::null_mut();
+        while !segment.is_null() {
+            // SAFETY: the swap above transferred the whole segment to
+            // this thread exclusively.
+            let next = unsafe { (*segment).next };
+            unsafe { (*segment).next = ordered };
+            ordered = segment;
+            segment = next;
+        }
+        self.multiset.with_mut(|multiset| {
+            // SAFETY: the odd epoch makes this thread the only one
+            // touching the multiset until the store below.
+            let multiset = unsafe { &mut *multiset };
+            let mut cur = ordered;
+            while !cur.is_null() {
+                // SAFETY: exclusive ownership of the drained segment.
+                let delta = unsafe { Box::from_raw(cur) };
+                if delta.add {
+                    multiset.add(delta.payload);
+                } else {
+                    multiset.remove(delta.payload);
+                }
+                cur = delta.next;
+            }
+            self.min_cache.store(multiset.min(), Ordering::Release);
+            let resets = multiset.resets();
+            self.resets_cache.store(resets, Ordering::Release);
+        });
+        self.combine_epoch.store(epoch + 2, Ordering::Release);
+        true
+    }
+
+    /// Visit every live block in every shard, opportunistically
+    /// unlinking exhausted blocks along the way (failed unlink CASes
+    /// are abandoned, not retried — a later walk gets them).
+    fn walk_blocks(&self, visit: &mut dyn FnMut(&Node)) {
+        for shard in self.shards.iter() {
+            let mut prev: *mut Node = ptr::null_mut();
+            let mut cur = shard.load(Ordering::Acquire);
+            while !cur.is_null() {
+                // SAFETY: published blocks stay allocated until Drop.
+                let node = unsafe { &*cur };
+                let next = node.next.load(Ordering::Acquire);
+                if node.remaining.load(Ordering::Acquire) == 0 {
+                    // Bypass the exhausted block. Only exhausted blocks
+                    // are ever bypassed, and none is freed before Drop,
+                    // so a racing stale CAS can at worst relink an
+                    // exhausted block — harmless, a later walk skips it.
+                    let link: &AtomicPtr<Node> = if prev.is_null() {
+                        shard
+                    } else {
+                        // SAFETY: `prev` is a previously visited block.
+                        unsafe { &(*prev).next }
+                    };
+                    if !self.cas_node(link, cur, next) {
+                        prev = cur;
+                    }
+                    cur = next;
+                    continue;
+                }
+                visit(node);
+                prev = cur;
+                cur = next;
+            }
+        }
+    }
+
+    /// Visit every unclaimed entry (the O(n) walk behind the oracle
+    /// paths and `drain`).
+    fn walk_entries(&self, visit: &mut dyn FnMut(&Node, usize, &Entry, u64)) {
+        self.walk_blocks(&mut |node| {
+            for (k, e) in node.entries.iter().enumerate() {
+                if !e.claimed.load(Ordering::Acquire) {
+                    visit(node, k, e, node.seq0 + k as u64);
+                }
+            }
+        });
+    }
+
+    /// Recompute a block's best/worst summaries from its claim flags
+    /// (run by every claiming thread after its claim; racing recomputes
+    /// can leave the summary stale, which readers self-heal by
+    /// rescanning — the claim CAS is the authority).
+    fn recompute(node: &Node) {
+        let mut best: Option<(i64, u64)> = None;
+        let mut worst: Option<(i64, u64)> = None;
+        for (k, e) in node.entries.iter().enumerate() {
+            if e.claimed.load(Ordering::Acquire) {
+                continue;
+            }
+            let seq = node.seq0 + k as u64;
+            if best.is_none_or(|(p, s)| e.prio > p || (e.prio == p && seq < s)) {
+                best = Some((e.prio, seq));
+            }
+            if e.meta.stealable
+                && worst.is_none_or(|(p, s)| e.prio < p || (e.prio == p && seq > s))
+            {
+                worst = Some((e.prio, seq));
+            }
+        }
+        let (bp, bs) = best.unwrap_or((i64::MIN, 0));
+        node.best_prio.store(bp, Ordering::Release);
+        node.best_seq.store(bs, Ordering::Release);
+        let (wp, ws) = worst.unwrap_or((i64::MAX, 0));
+        node.worst_prio.store(wp, Ordering::Release);
+        node.worst_seq.store(ws, Ordering::Release);
+    }
+
+    /// A block's best unclaimed candidate: the summary when it is
+    /// fresh, a direct rescan when the summary reads as the sentinel.
+    fn block_best(node: &Node) -> Option<(i64, u64)> {
+        if node.remaining.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let p = node.best_prio.load(Ordering::Acquire);
+        if p != i64::MIN {
+            return Some((p, node.best_seq.load(Ordering::Acquire)));
+        }
+        let mut best: Option<(i64, u64)> = None;
+        for (k, e) in node.entries.iter().enumerate() {
+            if e.claimed.load(Ordering::Acquire) {
+                continue;
+            }
+            let seq = node.seq0 + k as u64;
+            if best.is_none_or(|(p, s)| e.prio > p || (e.prio == p && seq < s)) {
+                best = Some((e.prio, seq));
+            }
+        }
+        best
+    }
+
+    /// A block's worst stealable unclaimed candidate (extraction end).
+    fn block_worst(node: &Node) -> Option<(i64, u64)> {
+        if node.remaining.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let p = node.worst_prio.load(Ordering::Acquire);
+        if p != i64::MAX {
+            return Some((p, node.worst_seq.load(Ordering::Acquire)));
+        }
+        let mut worst: Option<(i64, u64)> = None;
+        for (k, e) in node.entries.iter().enumerate() {
+            if e.claimed.load(Ordering::Acquire) || !e.meta.stealable {
+                continue;
+            }
+            let seq = node.seq0 + k as u64;
+            if worst.is_none_or(|(p, s)| e.prio < p || (e.prio == p && seq > s)) {
+                worst = Some((e.prio, seq));
+            }
+        }
+        worst
+    }
+
+    /// Claim entry `k` of `node`. On the winning CAS, decrement the
+    /// block's remaining count, refresh its summaries and book the
+    /// removal in the accounting counters.
+    fn claim(&self, node: &Node, k: usize) -> bool {
+        let e = &node.entries[k];
+        let flag = &e.claimed;
+        let won = flag.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire);
+        if won.is_err() {
+            self.bump_retry();
+            return false;
+        }
+        node.remaining.fetch_sub(1, Ordering::AcqRel);
+        Self::recompute(node);
+        self.count.fetch_sub(1, Ordering::SeqCst);
+        let class = e.task.class.idx();
+        self.class_counts[class].fetch_sub(1, Ordering::Relaxed);
+        if e.meta.stealable {
+            self.steal_count.fetch_sub(1, Ordering::SeqCst);
+            self.steal_payload
+                .fetch_sub(e.meta.payload_bytes, Ordering::SeqCst);
+            self.push_delta(e.meta.payload_bytes, false);
+        }
+        true
+    }
+
+    /// Rescan `node` for its actual best unclaimed entry (select end).
+    fn pick_best(node: &Node) -> Option<usize> {
+        let mut pick: Option<(usize, i64, u64)> = None;
+        for (k, e) in node.entries.iter().enumerate() {
+            if e.claimed.load(Ordering::Acquire) {
+                continue;
+            }
+            let seq = node.seq0 + k as u64;
+            if pick.is_none_or(|(_, p, s)| e.prio > p || (e.prio == p && seq < s)) {
+                pick = Some((k, e.prio, seq));
+            }
+        }
+        pick.map(|(k, _, _)| k)
+    }
+
+    /// Rescan `node` for its actual worst stealable unclaimed entry.
+    fn pick_worst(node: &Node) -> Option<usize> {
+        let mut pick: Option<(usize, i64, u64)> = None;
+        for (k, e) in node.entries.iter().enumerate() {
+            if e.claimed.load(Ordering::Acquire) || !e.meta.stealable {
+                continue;
+            }
+            let seq = node.seq0 + k as u64;
+            if pick.is_none_or(|(_, p, s)| e.prio < p || (e.prio == p && seq > s)) {
+                pick = Some((k, e.prio, seq));
+            }
+        }
+        pick.map(|(k, _, _)| k)
+    }
+
+    /// Live (non-exhausted, still-linked) blocks — exposed for the unit
+    /// tests asserting exhausted blocks actually leave the chains.
+    #[cfg(all(test, not(loom)))]
+    fn live_blocks(&self) -> usize {
+        let mut n = 0;
+        self.walk_blocks(&mut |_| n += 1);
+        n
+    }
+}
+
+impl Scheduler for WorkAssistQueue {
+    fn insert_meta(&self, task: TaskDesc, priority: i64, meta: TaskMeta) {
+        self.publish(&[(task, priority, meta)]);
+    }
+
+    fn insert_batch_at(&self, site: BatchSite, batch: &[(TaskDesc, i64, TaskMeta)]) {
+        if batch.is_empty() {
+            return;
+        }
+        self.batch_batches[site.idx()].fetch_add(1, Ordering::Relaxed);
+        self.batch_tasks[site.idx()]
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        self.publish(batch);
+    }
+
+    /// Outcome counters only: there is no watermark to adapt (nothing
+    /// spills — thieves claim from the same blocks workers do).
+    fn feedback(&self, outcome: StealOutcome) {
+        match outcome {
+            StealOutcome::Granted => {
+                self.feedback_grants.fetch_add(1, Ordering::Relaxed);
+            }
+            StealOutcome::DeniedWaitingTime => {
+                self.feedback_wt_denials.fetch_add(1, Ordering::Relaxed);
+            }
+            StealOutcome::DeniedEmpty => {}
+            StealOutcome::TimedOut => {
+                self.feedback_timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn select(&self, _worker: usize) -> Option<TaskDesc> {
+        loop {
+            let mut cand: Option<(*const Node, i64, u64)> = None;
+            self.walk_blocks(&mut |node| {
+                if let Some((p, s)) = Self::block_best(node) {
+                    if cand.is_none_or(|(_, cp, cs)| p > cp || (p == cp && s < cs)) {
+                        cand = Some((node as *const Node, p, s));
+                    }
+                }
+            });
+            let (node, _, _) = cand?;
+            // SAFETY: published blocks stay allocated until Drop.
+            let node = unsafe { &*node };
+            let Some(k) = Self::pick_best(node) else {
+                // Stale summary (every entry was claimed meanwhile):
+                // heal it and re-walk.
+                Self::recompute(node);
+                continue;
+            };
+            if self.claim(node, k) {
+                self.selects.fetch_add(1, Ordering::Relaxed);
+                let len_after = self.count.load(Ordering::Relaxed) as u64;
+                self.select_len_sum.fetch_add(len_after, Ordering::Relaxed);
+                return Some(node.entries[k].task);
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.count.load(Ordering::SeqCst)
+    }
+
+    fn stealable_count(&self) -> usize {
+        self.steal_count.load(Ordering::SeqCst)
+    }
+
+    fn stealable_payload_bytes(&self) -> u64 {
+        self.steal_payload.load(Ordering::SeqCst)
+    }
+
+    fn min_stealable_payload_bytes(&self) -> u64 {
+        self.try_combine();
+        self.min_cache.load(Ordering::Acquire)
+    }
+
+    fn class_counts(&self) -> [usize; TaskClass::COUNT] {
+        let mut counts = [0usize; TaskClass::COUNT];
+        for (ix, c) in counts.iter_mut().enumerate() {
+            *c = self.class_counts[ix].load(Ordering::Relaxed);
+        }
+        counts
+    }
+
+    fn extract_stealable(&self, max: usize) -> Vec<TaskDesc> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            let mut cand: Option<(*const Node, i64, u64)> = None;
+            self.walk_blocks(&mut |node| {
+                if let Some((p, s)) = Self::block_worst(node) {
+                    if cand.is_none_or(|(_, cp, cs)| p < cp || (p == cp && s > cs)) {
+                        cand = Some((node as *const Node, p, s));
+                    }
+                }
+            });
+            let Some((node, _, _)) = cand else { break };
+            // SAFETY: published blocks stay allocated until Drop.
+            let node = unsafe { &*node };
+            let Some(k) = Self::pick_worst(node) else {
+                Self::recompute(node);
+                continue;
+            };
+            if self.claim(node, k) {
+                out.push(node.entries[k].task);
+            }
+        }
+        self.steal_extracted
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn count_matching(&self, filter: &dyn Fn(&TaskDesc) -> bool) -> usize {
+        self.scans.fetch_add(1, Ordering::Relaxed);
+        let mut n = 0;
+        self.walk_entries(&mut |_, _, e, _| {
+            if filter(&e.task) {
+                n += 1;
+            }
+        });
+        n
+    }
+
+    fn extract_for_steal(&self, max: usize, filter: &dyn Fn(&TaskDesc) -> bool) -> Vec<TaskDesc> {
+        self.scans.fetch_add(1, Ordering::Relaxed);
+        let mut out = Vec::new();
+        while out.len() < max {
+            let mut pick: Option<(*const Node, usize, i64, u64)> = None;
+            self.walk_entries(&mut |node, k, e, seq| {
+                if !filter(&e.task) {
+                    return;
+                }
+                if pick.is_none_or(|(_, _, p, s)| e.prio < p || (e.prio == p && seq > s)) {
+                    pick = Some((node as *const Node, k, e.prio, seq));
+                }
+            });
+            let Some((node, k, _, _)) = pick else { break };
+            // SAFETY: published blocks stay allocated until Drop.
+            let node = unsafe { &*node };
+            if self.claim(node, k) {
+                out.push(node.entries[k].task);
+            }
+        }
+        self.steal_extracted
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn max_priority(&self) -> Option<i64> {
+        let mut best: Option<i64> = None;
+        self.walk_entries(&mut |_, _, e, _| {
+            if best.is_none_or(|p| e.prio > p) {
+                best = Some(e.prio);
+            }
+        });
+        best
+    }
+
+    fn stats(&self) -> SchedStats {
+        // Fold pending deltas so `min_payload_resets` is current.
+        self.try_combine();
+        let mut batches = [BatchCounter::default(); BatchSite::COUNT];
+        for (ix, b) in batches.iter_mut().enumerate() {
+            b.batches = self.batch_batches[ix].load(Ordering::Relaxed);
+            b.tasks = self.batch_tasks[ix].load(Ordering::Relaxed);
+        }
+        SchedStats {
+            inserts: self.inserts.load(Ordering::Relaxed),
+            selects: self.selects.load(Ordering::Relaxed),
+            steal_extracted: self.steal_extracted.load(Ordering::Relaxed),
+            select_len_sum: self.select_len_sum.load(Ordering::Relaxed),
+            scans: self.scans.load(Ordering::Relaxed),
+            batches,
+            feedback_grants: self.feedback_grants.load(Ordering::Relaxed),
+            feedback_wt_denials: self.feedback_wt_denials.load(Ordering::Relaxed),
+            feedback_timeouts: self.feedback_timeouts.load(Ordering::Relaxed),
+            watermark: 0,
+            extract_fallback_walks: 0,
+            min_payload_resets: self.resets_cache.load(Ordering::Acquire),
+            lock_acquisitions: 0,
+            cas_retries: self.cas_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    fn drain(&self) -> Vec<TaskDesc> {
+        let mut all: Vec<(*const Node, usize, i64, u64)> = Vec::new();
+        self.walk_entries(&mut |node, k, e, seq| {
+            all.push((node as *const Node, k, e.prio, seq));
+        });
+        // The central queue's drain order: ascending (priority, age) =
+        // priority ascending, newest first among equals.
+        all.sort_by(|a, b| a.2.cmp(&b.2).then(b.3.cmp(&a.3)));
+        let mut out = Vec::with_capacity(all.len());
+        for (node, k, _, _) in all {
+            // SAFETY: published blocks stay allocated until Drop.
+            let node = unsafe { &*node };
+            if self.claim(node, k) {
+                out.push(node.entries[k].task);
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "workassist"
+    }
+}
+
+impl fmt::Debug for WorkAssistQueue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let shards = self.shards.len();
+        let len = self.count.load(Ordering::Relaxed);
+        let stealable = self.steal_count.load(Ordering::Relaxed);
+        write!(f, "WorkAssistQueue {{ shards: {shards}, len: {len}, stealable: {stealable} }}")
+    }
+}
+
+impl Drop for WorkAssistQueue {
+    fn drop(&mut self) {
+        // Deferred reclamation happens here, and only here: walk the
+        // retention chain (every block ever published, linked or not)
+        // and the pending-delta stack.
+        let mut cur = self.all_head.swap(ptr::null_mut(), Ordering::AcqRel);
+        while !cur.is_null() {
+            // SAFETY: `&mut self` — no other thread can hold a
+            // reference into the queue anymore.
+            let node = unsafe { Box::from_raw(cur) };
+            cur = node.all_next;
+        }
+        let mut delta = self.deltas.swap(ptr::null_mut(), Ordering::AcqRel);
+        while !delta.is_null() {
+            // SAFETY: as above.
+            let d = unsafe { Box::from_raw(delta) };
+            delta = d.next;
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::super::CentralQueue;
+    use super::*;
+
+    fn t(i: u32) -> TaskDesc {
+        TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0)
+    }
+
+    fn meta(stealable: bool, payload: u64) -> TaskMeta {
+        TaskMeta {
+            stealable,
+            payload_bytes: payload,
+            class: TaskClass::Synthetic,
+        }
+    }
+
+    /// Single-threaded, the claim order is *identical* to the central
+    /// queue: select = priority-then-FIFO, extraction = lowest priority
+    /// newest-first, drain = central's map order.
+    #[test]
+    fn order_identical_to_central_single_threaded() {
+        let wa = WorkAssistQueue::new(4);
+        let central = CentralQueue::new();
+        let prios = [5i64, 9, 5, -3, 9, 0, 7, 5, -3, 2];
+        for (i, &p) in prios.iter().enumerate() {
+            let m = meta(i % 3 != 0, 10 * i as u64);
+            wa.insert_meta(t(i as u32), p, m);
+            central.insert_meta(t(i as u32), p, m);
+        }
+        assert_eq!(wa.select(0), central.select());
+        assert_eq!(wa.select(1), central.select());
+        assert_eq!(wa.extract_stealable(3), central.extract_stealable(3));
+        assert_eq!(wa.select(2), central.select());
+        assert_eq!(
+            Scheduler::drain(&wa),
+            Scheduler::drain(&central),
+            "drain preserves central's (priority asc, newest-first) order"
+        );
+        assert!(wa.is_empty());
+    }
+
+    /// The full single-threaded hot path performs zero lock
+    /// acquisitions and zero CAS retries — the lock-freedom claim the
+    /// bench and e2e gates assert.
+    #[test]
+    fn hot_path_is_lock_free_single_threaded() {
+        let q = WorkAssistQueue::new(2);
+        let mut batch = Vec::new();
+        for i in 0..8u32 {
+            batch.push((t(i), i as i64, meta(true, 64)));
+        }
+        q.insert_batch_at(BatchSite::Activation, &batch);
+        for i in 8..16u32 {
+            q.insert_meta(t(i), i as i64, meta(i % 2 == 0, 32));
+        }
+        while q.select(0).is_some() {}
+        let _ = q.extract_stealable(4);
+        let _ = q.min_stealable_payload_bytes();
+        let s = q.stats();
+        assert_eq!(s.lock_acquisitions, 0, "no mutex anywhere on this backend");
+        assert_eq!(s.cas_retries, 0, "single-threaded CASes never fail");
+        assert_eq!(s.scans, 0, "accounting paths never scan");
+    }
+
+    /// The flat-combined multiset minimum is exact at every
+    /// single-threaded read, including duplicate payloads and
+    /// interleaved removals (mirrors the central backend's test).
+    #[test]
+    fn min_payload_is_exact_through_the_combiner() {
+        let q = WorkAssistQueue::new(2);
+        assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
+        for (i, payload) in [(0u32, 200u64), (1, 200), (2, 500), (4, 900)] {
+            q.insert_meta(t(i), i as i64, meta(true, payload));
+        }
+        q.insert_meta(t(3), 3, meta(false, 1));
+        assert_eq!(q.min_stealable_payload_bytes(), 200);
+        assert_eq!(q.extract_stealable(1), vec![t(0)]);
+        assert_eq!(q.min_stealable_payload_bytes(), 200, "duplicate survives");
+        assert_eq!(q.extract_stealable(1), vec![t(1)]);
+        assert_eq!(q.min_stealable_payload_bytes(), 500);
+        assert_eq!(q.extract_stealable(1), vec![t(2)]);
+        assert_eq!(q.min_stealable_payload_bytes(), 900);
+        let _ = q.extract_stealable(1);
+        assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
+        assert_eq!(q.len(), 1, "non-stealable task remains");
+        assert_eq!(q.stats().min_payload_resets, 0);
+    }
+
+    /// Exhausted blocks leave the traversal chains: after a claim-all,
+    /// a subsequent walk unlinks every block, so chain length tracks
+    /// the live queue, not the insert history.
+    #[test]
+    fn exhausted_blocks_are_unlinked() {
+        let q = WorkAssistQueue::new(2);
+        for round in 0..10u32 {
+            for i in 0..20u32 {
+                q.insert(t(round * 20 + i), i as i64);
+            }
+            while q.select(0).is_some() {}
+            // The drain-walk above already pruned what it traversed;
+            // one more walk reaches a fully unlinked state.
+            assert_eq!(q.live_blocks(), 0, "round {round}");
+        }
+    }
+
+    /// Per-class counts and batch-site accounting flow through the
+    /// lock-free paths exactly as on the locked backends.
+    #[test]
+    fn class_counts_and_batches_track() {
+        let q = WorkAssistQueue::new(2);
+        let potrf = TaskDesc::indexed(TaskClass::Potrf, 0, 0, 0);
+        let mp = TaskMeta {
+            stealable: true,
+            payload_bytes: 100,
+            class: TaskClass::Potrf,
+        };
+        let gemm = TaskDesc::indexed(TaskClass::Gemm, 1, 0, 0);
+        let mg = TaskMeta {
+            stealable: true,
+            payload_bytes: 300,
+            class: TaskClass::Gemm,
+        };
+        let batch = vec![(potrf, 3, mp), (gemm, 1, mg)];
+        q.insert_batch_at(BatchSite::StealReply, &batch);
+        assert_eq!(q.class_counts()[TaskClass::Potrf.idx()], 1);
+        assert_eq!(q.class_counts()[TaskClass::Gemm.idx()], 1);
+        assert_eq!(q.stats().site(BatchSite::StealReply).batches, 1);
+        assert_eq!(q.stats().site(BatchSite::StealReply).tasks, 2);
+        assert_eq!(q.stealable_payload_bytes(), 400);
+        // Extraction takes the lowest priority: the GEMM.
+        let stolen = q.extract_stealable(1);
+        assert_eq!(stolen[0].class, TaskClass::Gemm);
+        assert_eq!(q.class_counts()[TaskClass::Gemm.idx()], 0);
+        assert_eq!(q.min_stealable_payload_bytes(), 100);
+    }
+
+    /// Real threads hammering every op conserve tasks: nothing is lost,
+    /// nothing claimed twice, and the quiesced accounting is exact.
+    #[test]
+    #[cfg_attr(miri, ignore)] // threads + raw-pointer walks: minutes under miri
+    fn threaded_claims_conserve_tasks() {
+        use std::collections::HashSet;
+        use std::sync::Arc;
+
+        let q = Arc::new(WorkAssistQueue::new(4));
+        let per_thread = 200u32;
+        let mut writers = Vec::new();
+        for w in 0..3u32 {
+            let q = Arc::clone(&q);
+            writers.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let id = w * per_thread + i;
+                    q.insert_meta(t(id), (id % 7) as i64, meta(id % 2 == 0, id as u64));
+                }
+            }));
+        }
+        let mut takers = Vec::new();
+        for w in 0..3usize {
+            let q = Arc::clone(&q);
+            takers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for round in 0..per_thread {
+                    if w == 0 && round % 8 == 0 {
+                        got.extend(q.extract_stealable(2));
+                    } else if let Some(task) = q.select(w) {
+                        got.push(task);
+                    }
+                }
+                got
+            }));
+        }
+        for h in writers {
+            h.join().unwrap();
+        }
+        let mut removed: Vec<TaskDesc> = Vec::new();
+        for h in takers {
+            removed.extend(h.join().unwrap());
+        }
+        removed.extend(Scheduler::drain(&*q));
+        assert_eq!(removed.len(), 3 * per_thread as usize, "conservation");
+        let distinct: HashSet<u32> = removed.iter().map(|d| d.i).collect();
+        assert_eq!(distinct.len(), removed.len(), "no task claimed twice");
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.stealable_count(), 0);
+        assert_eq!(q.stealable_payload_bytes(), 0);
+        assert_eq!(q.min_stealable_payload_bytes(), u64::MAX);
+        assert_eq!(q.stats().min_payload_resets, 0);
+        assert_eq!(q.stats().lock_acquisitions, 0);
+    }
+}

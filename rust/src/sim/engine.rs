@@ -63,9 +63,10 @@ pub struct SimConfig {
     /// Record per-select poll samples (Fig. 1/Fig. 3 instrumentation;
     /// costs memory on huge runs).
     pub record_polls: bool,
-    /// Scheduler backend per node (`--sched central|sharded`). The sim
-    /// is single-threaded, so both are deterministic given the seed;
-    /// sharded reproduces the sharded *ordering* semantics.
+    /// Scheduler backend per node (`--sched
+    /// central|sharded|workassist`). The sim is single-threaded, so
+    /// every backend is deterministic given the seed; sharded and
+    /// workassist reproduce their *ordering* semantics.
     pub sched: SchedBackend,
     /// Coalesce same-destination successor activations into one
     /// `Deliver` event (`--batch-activations`; off reproduces the
@@ -1512,6 +1513,13 @@ mod tests {
                 }
                 SchedBackend::Central => {
                     assert_eq!(r.nodes[0].sched.watermark, 0, "central has no watermark")
+                }
+                SchedBackend::Workassist => {
+                    // No watermark, no mutex: the lock-free backend's
+                    // denial-heavy run must stay lock-free end to end.
+                    assert_eq!(r.nodes[0].sched.watermark, 0, "workassist has no watermark");
+                    let locks: u64 = r.nodes.iter().map(|n| n.sched.lock_acquisitions).sum();
+                    assert_eq!(locks, 0, "workassist must never take a lock");
                 }
             }
         }

@@ -199,6 +199,65 @@ fn sharded_backend_sim_and_real_agree() {
     assert_eq!(sim_dist, real_dist, "static mapping must be identical");
 }
 
+/// Backend sweep, lock-free arm: the workassist scheduler must preserve
+/// the same sim ↔ real agreement — same totals in both runtimes, the
+/// same static distribution with stealing disabled — and both runs must
+/// finish with zero mutex acquisitions on every node queue: the whole
+/// execution rode the claim CAS, never a lock.
+#[test]
+fn workassist_backend_sim_and_real_agree() {
+    let g = chol(10, 3);
+    let total = g.total_tasks().unwrap();
+    let sim = Simulator::new(
+        g.clone(),
+        SimConfig {
+            workers_per_node: 2,
+            link: LinkModel::cluster(),
+            seed: 4,
+            max_events: u64::MAX,
+            record_polls: false,
+            sched: SchedBackend::Workassist,
+            batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
+        },
+        CostModel::default_calibrated(),
+        MigrateConfig::disabled(),
+        16,
+    )
+    .run();
+    let real = Cluster::run(
+        g.clone(),
+        ClusterConfig {
+            workers_per_node: 2,
+            link: LinkModel::ideal(),
+            migrate: MigrateConfig::disabled(),
+            seed: 4,
+            record_polls: false,
+            sched: SchedBackend::Workassist,
+            batch_activations: true,
+            pool_floor: parsteal::sched::POOL_FLOOR,
+            faults: Default::default(),
+        },
+        Arc::new(NullExecutor),
+    );
+    assert_eq!(sim.tasks_total_executed(), total);
+    assert_eq!(real.tasks_total_executed(), total);
+    let sim_dist: Vec<u64> = sim.nodes.iter().map(|n| n.tasks_executed).collect();
+    let real_dist: Vec<u64> = real.nodes.iter().map(|n| n.tasks_executed).collect();
+    assert_eq!(sim_dist, real_dist, "static mapping must be identical");
+    // The end-to-end lock-freedom assert: a full run on the lock-free
+    // backend never takes a queue mutex, in either runtime, on any node.
+    for (report, kind) in [(&sim, "sim"), (&real, "real")] {
+        for (ix, node) in report.nodes.iter().enumerate() {
+            assert_eq!(
+                node.sched.lock_acquisitions, 0,
+                "{kind} node {ix}: workassist took a lock"
+            );
+        }
+    }
+}
+
 /// Activation batching must cut the DES wire-event count measurably on
 /// the 8-node Cholesky e2e while executing exactly the same tasks on
 /// exactly the same nodes (stealing disabled, so the static owner map

@@ -48,6 +48,13 @@ fn random_migrate(rng: &mut Rng) -> MigrateConfig {
     }
 }
 
+/// Uniformly random scheduler backend: every invariant in this file
+/// must hold on the full matrix (central / sharded / workassist).
+fn random_sched(rng: &mut Rng) -> SchedBackend {
+    let n = SchedBackend::ALL.len() as u64;
+    SchedBackend::ALL[rng.below(n) as usize]
+}
+
 /// Exactly-once execution and full completion for random Cholesky
 /// geometries under random policies.
 #[test]
@@ -82,11 +89,7 @@ fn prop_cholesky_sim_executes_every_task_once() {
                     seed: rng.next_u64(),
                     max_events: 200_000_000,
                     record_polls: false,
-                    sched: if rng.uniform() < 0.5 {
-                        SchedBackend::Central
-                    } else {
-                        SchedBackend::Sharded
-                    },
+                    sched: random_sched(rng),
                     batch_activations: rng.uniform() < 0.5,
                     pool_floor: rng.below(4) as usize,
                     faults: Default::default(),
@@ -140,11 +143,7 @@ fn prop_uts_sim_matches_tree_size() {
                     seed: rng.next_u64(),
                     max_events: 200_000_000,
                     record_polls: false,
-                    sched: if rng.uniform() < 0.5 {
-                        SchedBackend::Central
-                    } else {
-                        SchedBackend::Sharded
-                    },
+                    sched: random_sched(rng),
                     batch_activations: rng.uniform() < 0.5,
                     pool_floor: rng.below(4) as usize,
                     faults: Default::default(),
@@ -494,6 +493,37 @@ fn prop_policy_label_fromstr_round_trip() {
                 "nearest".parse::<VictimSelect>().is_err(),
                 "unknown selection spellings must be rejected"
             );
+            // `--sched` backend labels round-trip too, including the
+            // workassist aliases the CLI accepts.
+            for backend in SchedBackend::ALL {
+                let label = backend.label();
+                let parsed = label
+                    .parse::<SchedBackend>()
+                    .map_err(|e| format!("label '{label}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == backend,
+                    "label '{label}' round-tripped to {parsed:?}"
+                );
+            }
+            for (spelling, want) in [
+                ("workassist", SchedBackend::Workassist),
+                ("lockfree", SchedBackend::Workassist),
+                ("assist", SchedBackend::Workassist),
+                ("CENTRAL", SchedBackend::Central),
+                ("Sharded", SchedBackend::Sharded),
+            ] {
+                let parsed = spelling
+                    .parse::<SchedBackend>()
+                    .map_err(|e| format!("spelling '{spelling}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == want,
+                    "'{spelling}' parsed to {parsed:?}, wanted {want:?}"
+                );
+            }
+            prop_assert!(
+                "lockless".parse::<SchedBackend>().is_err(),
+                "unknown backend spellings must be rejected"
+            );
             Ok(())
         },
     );
@@ -657,11 +687,7 @@ fn prop_steal_protocol_heals_under_chaos() {
                     seed: rng.next_u64(),
                     max_events: 200_000_000,
                     record_polls: false,
-                    sched: if rng.uniform() < 0.5 {
-                        SchedBackend::Central
-                    } else {
-                        SchedBackend::Sharded
-                    },
+                    sched: random_sched(rng),
                     batch_activations: rng.uniform() < 0.5,
                     pool_floor: rng.below(4) as usize,
                     faults: plan,
@@ -692,44 +718,54 @@ fn prop_steal_protocol_heals_under_chaos() {
     assert!(agg.3 > 0, "no duplicate replies suppressed across the sweep");
 }
 
-/// The threaded runtime under the same chaos schedules: every task
-/// still executes exactly once (the cluster's shutdown drain asserts
-/// `inflight_steals == 0` and an empty transfer ledger internally).
+/// The threaded runtime under the same chaos schedules, crossed with
+/// every scheduler backend: every task still executes exactly once
+/// (the cluster's shutdown drain asserts `inflight_steals == 0` and an
+/// empty transfer ledger internally). The workassist arm is the
+/// self-healing steal protocol running on the lock-free queue — the
+/// composition this PR promises.
 #[test]
 fn chaos_threaded_runtime_heals_exactly_once() {
-    for (spec, seed) in [
-        ("drop=0.25,dup=0.15", 11u64),
-        ("drop-reply=0.35,delay=3x,delay-p=0.5", 12),
-        ("dup=0.3,drop-ack=0.3", 13),
-    ] {
-        let g = Arc::new(CholeskyGraph::new(CholeskyParams {
-            tiles: 10,
-            tile_size: 16,
-            nodes: 3,
-            dense_fraction: 0.5,
-            seed: 9,
-            all_dense: false,
-        }));
-        let total = g.total_tasks().unwrap();
-        let r = Cluster::run(
-            g,
-            ClusterConfig {
-                workers_per_node: 2,
-                link: LinkModel::ideal(),
-                migrate: MigrateConfig {
-                    poll_interval_us: 20.0,
-                    ..Default::default()
+    for backend in SchedBackend::ALL {
+        for (spec, seed) in [
+            ("drop=0.25,dup=0.15", 11u64),
+            ("drop-reply=0.35,delay=3x,delay-p=0.5", 12),
+            ("dup=0.3,drop-ack=0.3", 13),
+        ] {
+            let g = Arc::new(CholeskyGraph::new(CholeskyParams {
+                tiles: 10,
+                tile_size: 16,
+                nodes: 3,
+                dense_fraction: 0.5,
+                seed: 9,
+                all_dense: false,
+            }));
+            let total = g.total_tasks().unwrap();
+            let r = Cluster::run(
+                g,
+                ClusterConfig {
+                    workers_per_node: 2,
+                    link: LinkModel::ideal(),
+                    migrate: MigrateConfig {
+                        poll_interval_us: 20.0,
+                        ..Default::default()
+                    },
+                    seed,
+                    record_polls: false,
+                    sched: backend,
+                    batch_activations: true,
+                    pool_floor: parsteal::sched::POOL_FLOOR,
+                    faults: spec.parse().unwrap(),
                 },
-                seed,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: spec.parse().unwrap(),
-            },
-            Arc::new(NullExecutor),
-        );
-        assert_eq!(r.tasks_total_executed(), total, "faults={spec}");
+                Arc::new(NullExecutor),
+            );
+            assert_eq!(
+                r.tasks_total_executed(),
+                total,
+                "faults={spec} sched={}",
+                backend.label()
+            );
+        }
     }
 }
 

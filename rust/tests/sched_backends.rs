@@ -1,9 +1,10 @@
-//! Backend-agreement property tests (in-tree `prop` driver): the
-//! sharded scheduler must be a semantic refinement of the central one —
-//! identical select order where the semantics promise it (single shard,
-//! no spill), priority-then-FIFO per shard in general, and identical
-//! task conservation under randomized interleavings of insert / select /
-//! steal extraction.
+//! Backend-agreement property tests (in-tree `prop` driver), run over
+//! the full backend matrix (central / sharded / workassist): every
+//! other backend must be a semantic refinement of the central one —
+//! identical select order where the semantics promise it (single-shard
+//! sharded, workassist at any worker count), priority-then-FIFO per
+//! shard in general, and identical task conservation under randomized
+//! interleavings of insert / select / steal extraction.
 
 use parsteal::dataflow::task::{TaskClass, TaskDesc};
 use parsteal::prop_assert;
@@ -15,6 +16,16 @@ use parsteal::util::rng::Rng;
 
 fn t(i: u32) -> TaskDesc {
     TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0)
+}
+
+/// Backend matrix: one boxed instance of every scheduler backend, so a
+/// property written once runs against all three.
+fn matrix(workers: usize) -> Vec<Box<dyn Scheduler>> {
+    let mut backends = Vec::new();
+    for backend in SchedBackend::ALL {
+        backends.push(backend.build(workers));
+    }
+    backends
 }
 
 /// With one shard and fewer tasks than the spill watermark the sharded
@@ -43,6 +54,42 @@ fn prop_single_shard_matches_central_order() {
                 prop_assert!(a == b, "diverged at step {step}: {a:?} vs {b:?}");
             }
             prop_assert!(sharded.select(0).is_none(), "sharded had extra tasks");
+            Ok(())
+        },
+    );
+}
+
+/// The lock-free workassist backend is order-identical to the central
+/// queue from single-threaded code at *any* worker count: every claim
+/// walk targets the global (max priority, oldest insertion) entry, no
+/// matter which worker asks — and it takes zero locks doing so.
+#[test]
+fn prop_workassist_matches_central_order() {
+    check(
+        "workassist-order",
+        Config {
+            cases: 64,
+            max_size: 200,
+            seed: 0x3AFE,
+        },
+        |rng, size| {
+            let workers = 1 + rng.below(8) as usize;
+            let central = CentralQueue::new();
+            let assist = SchedBackend::Workassist.build(workers);
+            for i in 0..size as u32 {
+                let prio = rng.next_u64() as i64 % 50;
+                central.insert(t(i), prio);
+                assist.insert(t(i), prio);
+            }
+            for step in 0..size {
+                let w = rng.below(workers as u64) as usize;
+                let a = central.select();
+                let b = assist.select(w);
+                prop_assert!(a == b, "diverged at step {step}: {a:?} vs {b:?}");
+            }
+            prop_assert!(assist.select(0).is_none(), "workassist had extra tasks");
+            let stats = assist.stats();
+            prop_assert!(stats.lock_acquisitions == 0, "lock-free path took a lock");
             Ok(())
         },
     );
@@ -100,9 +147,9 @@ fn prop_per_shard_priority_then_fifo() {
 }
 
 /// Randomized interleavings of insert / select / steal extraction keep
-/// both backends conserving tasks, with identical insert and removal
-/// totals (select+steal split may differ — that is scheduling policy,
-/// not conservation).
+/// every backend in the matrix conserving tasks, with identical insert
+/// and removal totals (select+steal split may differ — that is
+/// scheduling policy, not conservation).
 #[test]
 fn prop_backends_conserve_under_interleaving() {
     #[derive(Clone, Copy)]
@@ -133,10 +180,7 @@ fn prop_backends_conserve_under_interleaving() {
                     _ => Op::Steal(rng.below(5) as usize),
                 });
             }
-            let backends: Vec<Box<dyn Scheduler>> = vec![
-                SchedBackend::Central.build(workers),
-                SchedBackend::Sharded.build(workers),
-            ];
+            let backends = matrix(workers);
             let mut removed_totals = Vec::new();
             for q in &backends {
                 let mut inserted = std::collections::HashSet::new();
@@ -179,10 +223,12 @@ fn prop_backends_conserve_under_interleaving() {
                 );
                 removed_totals.push(removed.len());
             }
-            prop_assert!(
-                removed_totals[0] == removed_totals[1],
-                "backends disagree on total throughput: {removed_totals:?}"
-            );
+            for pair in removed_totals.windows(2) {
+                prop_assert!(
+                    pair[0] == pair[1],
+                    "backends disagree on total throughput: {removed_totals:?}"
+                );
+            }
             Ok(())
         },
     );
@@ -321,11 +367,13 @@ fn prop_incremental_accounting_matches_oracle() {
 }
 
 /// `insert_batch_meta` is observationally equivalent to the same
-/// sequence of `insert_meta` calls on the central backend (identical
-/// select order and accounting), and preserves the accounting +
-/// conservation contract on the sharded one (placement may differ — a
-/// batch lands in one shard — but nothing is lost and the incremental
-/// census stays exact).
+/// sequence of `insert_meta` calls on the central and workassist
+/// backends (identical select order and accounting — for workassist
+/// that means one published block behaves exactly like a chain of
+/// single-entry blocks), and preserves the accounting + conservation
+/// contract on the sharded one (placement may differ — a batch lands
+/// in one shard — but nothing is lost and the incremental census stays
+/// exact).
 #[test]
 fn prop_batch_insert_matches_sequential_insert() {
     fn meta_of(i: u32) -> TaskMeta {
@@ -403,6 +451,35 @@ fn prop_batch_insert_matches_sequential_insert() {
                 drained == pre.len() + batch.len(),
                 "sharded: conservation violated ({drained})"
             );
+
+            // Workassist: one published block must be observationally
+            // identical to the same sequence of single-entry blocks.
+            let wa_batch = SchedBackend::Workassist.build(workers);
+            let wa_seq = SchedBackend::Workassist.build(workers);
+            for &(i, prio) in &pre {
+                wa_batch.insert_meta(t(i), prio, meta_of(i));
+                wa_seq.insert_meta(t(i), prio, meta_of(i));
+            }
+            wa_batch.insert_batch_meta(&batch);
+            for &(task, prio, meta) in &batch {
+                wa_seq.insert_meta(task, prio, meta);
+            }
+            prop_assert!(
+                wa_batch.stealable_count() == wa_seq.stealable_count(),
+                "workassist: stealable count diverged"
+            );
+            prop_assert!(
+                wa_batch.stealable_payload_bytes() == wa_seq.stealable_payload_bytes(),
+                "workassist: payload sum diverged"
+            );
+            prop_assert!(
+                wa_batch.min_stealable_payload_bytes() == wa_seq.min_stealable_payload_bytes(),
+                "workassist: payload min diverged"
+            );
+            for step in 0..wa_batch.len() {
+                let (x, y) = (wa_batch.select(0), wa_seq.select(0));
+                prop_assert!(x == y, "workassist: select diverged at {step}: {x:?} vs {y:?}");
+            }
             Ok(())
         },
     );
@@ -508,8 +585,8 @@ fn prop_class_counts_match_oracle() {
     );
 }
 
-/// Diagnostics agree: after identical inserts, both backends report the
-/// same length and max priority.
+/// Diagnostics agree: after identical inserts, every backend in the
+/// matrix reports the same length, max priority and filtered count.
 #[test]
 fn prop_len_and_max_priority_agree() {
     check(
@@ -521,30 +598,35 @@ fn prop_len_and_max_priority_agree() {
         },
         |rng, size| {
             let workers = 1 + rng.below(8) as usize;
-            let central = SchedBackend::Central.build(workers);
-            let sharded = SchedBackend::Sharded.build(workers);
+            let backends = matrix(workers);
             for i in 0..size as u32 {
                 let prio = rng.next_u64() as i64 % 100 - 50;
-                central.insert(t(i), prio);
-                sharded.insert(t(i), prio);
+                for q in &backends {
+                    q.insert(t(i), prio);
+                }
             }
-            prop_assert!(
-                central.len() == sharded.len(),
-                "len: {} vs {}",
-                central.len(),
-                sharded.len()
-            );
-            prop_assert!(
-                central.max_priority() == sharded.max_priority(),
-                "max_priority: {:?} vs {:?}",
-                central.max_priority(),
-                sharded.max_priority()
-            );
             let evens = &|task: &TaskDesc| task.i % 2 == 0;
-            prop_assert!(
-                central.count_matching(evens) == sharded.count_matching(evens),
-                "count_matching disagrees"
-            );
+            for q in &backends[1..] {
+                prop_assert!(
+                    q.len() == backends[0].len(),
+                    "{}: len {} vs {}",
+                    q.name(),
+                    q.len(),
+                    backends[0].len()
+                );
+                prop_assert!(
+                    q.max_priority() == backends[0].max_priority(),
+                    "{}: max_priority {:?} vs {:?}",
+                    q.name(),
+                    q.max_priority(),
+                    backends[0].max_priority()
+                );
+                prop_assert!(
+                    q.count_matching(evens) == backends[0].count_matching(evens),
+                    "{}: count_matching disagrees",
+                    q.name()
+                );
+            }
             Ok(())
         },
     );

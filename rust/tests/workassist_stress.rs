@@ -1,0 +1,163 @@
+//! Randomized multi-threaded differential stress test for the
+//! lock-free workassist backend: real threads hammer one shared
+//! `WorkAssistQueue` with inserts, batch publishes, selects, steal
+//! extractions and feedback, each logging exactly what it inserted and
+//! removed. At every quiesce point (the join barrier after each round)
+//! the linearized log — inserts minus removals — is replayed into a
+//! shadow `CentralQueue` oracle, which must agree exactly on length,
+//! stealable count, payload sum, *exact* payload minimum, per-class
+//! counts and max priority. Across the whole run every task is
+//! conserved (claimed exactly once or drained at the end), and the
+//! backend must finish with `lock_acquisitions == 0`: contention is
+//! absorbed by CAS retries, never by a mutex.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::thread;
+
+use parsteal::dataflow::task::{TaskClass, TaskDesc};
+use parsteal::sched::{BatchSite, CentralQueue, Scheduler, StealOutcome, TaskMeta, WorkAssistQueue};
+use parsteal::util::rng::Rng;
+
+const THREADS: usize = 8;
+const ROUNDS: usize = 4;
+const PER: u32 = 48;
+
+/// What one thread did to the shared queue: every insert (with its
+/// priority and meta) and every task it successfully claimed.
+type Log = (Vec<(TaskDesc, i64, TaskMeta)>, Vec<TaskDesc>);
+
+fn class_of(i: u32) -> TaskClass {
+    TaskClass::ALL[(i as usize) % TaskClass::COUNT]
+}
+
+fn t(i: u32) -> TaskDesc {
+    TaskDesc::indexed(class_of(i), i, 0, 0)
+}
+
+// Meta derived deterministically from the task id, so logs only need
+// to carry task identities to reconstruct the full accounting oracle.
+fn meta_of(i: u32) -> TaskMeta {
+    TaskMeta {
+        stealable: i % 3 != 0,
+        payload_bytes: 8 + (i as u64 % 11) * 16,
+        class: class_of(i),
+    }
+}
+
+/// One thread's workload: a randomized interleaving of single inserts,
+/// batch publishes, owner selects, both steal-extraction paths,
+/// accounting reads and steal feedback. Returns the faithful op log.
+fn hammer(q: &WorkAssistQueue, seed: u64, base: u32, worker: usize) -> Log {
+    let mut rng = Rng::new(seed);
+    let mut inserted = Vec::new();
+    let mut removed = Vec::new();
+    let mut next = base;
+    for step in 0..PER {
+        if step % 8 == 7 {
+            let mut batch = Vec::new();
+            for _ in 0..3 {
+                let prio = rng.next_u64() as i64 % 100;
+                batch.push((t(next), prio, meta_of(next)));
+                next += 1;
+            }
+            q.insert_batch_at(BatchSite::Activation, &batch);
+            inserted.extend(batch);
+        } else {
+            let prio = rng.next_u64() as i64 % 100;
+            q.insert_meta(t(next), prio, meta_of(next));
+            inserted.push((t(next), prio, meta_of(next)));
+            next += 1;
+        }
+        match rng.below(6) {
+            0 => {
+                if let Some(task) = q.select(worker) {
+                    removed.push(task);
+                }
+            }
+            1 => removed.extend(q.extract_stealable(2)),
+            2 => {
+                let evens = |task: &TaskDesc| task.i % 2 == 0;
+                removed.extend(q.extract_for_steal(2, &evens));
+            }
+            3 => {
+                // Accounting reads race the claims; the values are
+                // checked exactly at the quiesce points.
+                let _ = q.stealable_count();
+                let _ = q.min_stealable_payload_bytes();
+                let _ = q.class_counts();
+            }
+            4 => q.feedback(StealOutcome::Granted),
+            _ => {}
+        }
+    }
+    (inserted, removed)
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // real threads: minutes under the interpreter
+fn stress_differential_against_central_oracle() {
+    let q = Arc::new(WorkAssistQueue::new(THREADS));
+    let mut live: HashMap<TaskDesc, (i64, TaskMeta)> = HashMap::new();
+    let mut ever_removed: HashSet<TaskDesc> = HashSet::new();
+    for round in 0..ROUNDS {
+        let mut handles = Vec::new();
+        for k in 0..THREADS {
+            let q = Arc::clone(&q);
+            let seed = (round * THREADS + k) as u64 * 0x9E37 + 7;
+            let base = ((round * THREADS + k) as u32 + 1) * 1000;
+            handles.push(thread::spawn(move || hammer(&q, seed, base, k)));
+        }
+        let mut logs = Vec::new();
+        for handle in handles {
+            logs.push(handle.join().unwrap());
+        }
+        // Linearize: all inserts land before any removal is checked, so
+        // cross-thread steals (B removes what A inserted) resolve.
+        for (inserted, _) in &logs {
+            for &(task, prio, meta) in inserted {
+                live.insert(task, (prio, meta));
+            }
+        }
+        for (_, removed) in &logs {
+            for &task in removed {
+                assert!(ever_removed.insert(task), "task {task} claimed twice");
+                assert!(live.remove(&task).is_some(), "removed {task} never inserted");
+            }
+        }
+        // Quiesce point: replay the surviving set into a shadow central
+        // queue and compare every accounting surface exactly.
+        let oracle = CentralQueue::new();
+        for (task, (prio, meta)) in &live {
+            oracle.insert_meta(*task, *prio, *meta);
+        }
+        assert_eq!(q.len(), oracle.len(), "round {round}: len diverged");
+        assert_eq!(q.stealable_count(), oracle.stealable_count(), "round {round}: count");
+        assert_eq!(
+            q.stealable_payload_bytes(),
+            oracle.stealable_payload_bytes(),
+            "round {round}: payload sum diverged"
+        );
+        assert_eq!(
+            q.min_stealable_payload_bytes(),
+            oracle.min_stealable_payload_bytes(),
+            "round {round}: exact payload minimum diverged"
+        );
+        assert_eq!(q.class_counts(), oracle.class_counts(), "round {round}: class counts");
+        assert_eq!(q.max_priority(), oracle.max_priority(), "round {round}: max priority");
+        assert_eq!(q.stats().min_payload_resets, 0, "round {round}: conservative reset");
+    }
+    // Final conservation: drain returns each surviving task exactly once.
+    let drained = q.drain();
+    assert_eq!(drained.len(), live.len(), "drain disagrees with the live set");
+    let unique: HashSet<TaskDesc> = drained.iter().copied().collect();
+    assert_eq!(unique.len(), drained.len(), "duplicate task in drain");
+    for task in &drained {
+        assert!(live.contains_key(task), "drained {task} was never live");
+    }
+    assert!(q.is_empty(), "queue not empty after drain");
+    let stats = q.stats();
+    assert_eq!(stats.lock_acquisitions, 0, "workassist took a lock under stress");
+    let claimed = stats.selects + stats.steal_extracted;
+    assert_eq!(claimed, ever_removed.len() as u64, "claim stats disagree with the log");
+}
