@@ -635,12 +635,50 @@ fn fault_tolerance_telemetry() -> Json {
             ),
         ]));
     }
+    // Crash-stop recovery on the same scenario: node 2 dies a third of
+    // the way through the baseline makespan; the survivors re-home its
+    // work. The deterministic DES makes the whole sub-block stable
+    // across runs, so the recovery cost is comparable across PRs.
+    let crash_at = baseline.makespan_us / 3.0;
+    let crash_spec = format!("crash-node=2,crash-at-us={crash_at:.0}");
+    let crashed = run(crash_spec.parse().unwrap());
+    let crash_inflation_pct =
+        100.0 * (crashed.makespan_us - baseline.makespan_us) / baseline.makespan_us;
+    println!(
+        "    crash-node=2 @ T/3    makespan {:>10.0}µs  ({crash_inflation_pct:+.2}%, \
+         {} recovered, detect {:.0}µs)",
+        crashed.makespan_us, crashed.recovery.tasks_recovered, crashed.recovery.detect_latency_us
+    );
     Json::obj(vec![
         ("scenario", Json::Str("uts_steal_heavy_4n".into())),
         ("baseline_makespan_us", Json::Num(baseline.makespan_us)),
         ("hardened_makespan_us", Json::Num(hardened.makespan_us)),
         ("ledger_overhead_pct", Json::Num(overhead_pct)),
         ("drop_sweep", Json::Arr(sweep)),
+        (
+            "crash_recovery",
+            Json::obj(vec![
+                ("crash_at_us", Json::Num(crash_at)),
+                ("makespan_us", Json::Num(crashed.makespan_us)),
+                ("makespan_inflation_pct", Json::Num(crash_inflation_pct)),
+                (
+                    "nodes_crashed",
+                    Json::Num(crashed.recovery.nodes_crashed as f64),
+                ),
+                (
+                    "tasks_recovered",
+                    Json::Num(crashed.recovery.tasks_recovered as f64),
+                ),
+                (
+                    "ring_repairs",
+                    Json::Num(crashed.recovery.ring_repairs as f64),
+                ),
+                (
+                    "detect_latency_us",
+                    Json::Num(crashed.recovery.detect_latency_us),
+                ),
+            ]),
+        ),
     ])
 }
 

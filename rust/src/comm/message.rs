@@ -55,6 +55,19 @@ pub enum Msg {
     /// abandoned the request — the victim reclaims the ledger entry's
     /// tasks into its own queue. Priced like a request header.
     TransferAck { req: u64, accepted: bool },
+    /// Crash recovery (leader -> rehash survivor): ready tasks swept
+    /// from a dead node's queue, executing set, transfer ledger or
+    /// orphan bin, re-injected for direct enqueue — their dependencies
+    /// were already satisfied on the dead node, so they bypass the
+    /// activation tracker. Basic on purpose: re-injection must blacken
+    /// the receiver and count in the Safra deficit, or a token that
+    /// already passed the survivor could declare termination with the
+    /// recovered work still queued.
+    Recover { tasks: Vec<TaskDesc> },
+    /// Idle-period heartbeat to the leader's failure detector
+    /// (`--faults crash-*` only). Control traffic like the token: not
+    /// counted by Safra, never faulted by the plan.
+    Ping,
     /// Safra termination-detection token, traveling the ring.
     Token(SafraToken),
     /// Leader -> all: distributed termination detected, shut down.
@@ -101,15 +114,20 @@ impl Msg {
                 ..
             } => Self::steal_reply_wire_bytes(tasks.len(), *payload_bytes, digest.as_ref()),
             Msg::TransferAck { .. } => 16,
+            // Recovered tasks re-enter as packed descriptors under one
+            // header, priced like a same-sized activation batch.
+            Msg::Recover { tasks } => 16 + 24 * tasks.len() as u64,
+            Msg::Ping => 16,
             Msg::Token(_) => 24,
             Msg::Shutdown => 8,
         }
     }
 
     /// Safra counts "basic" messages (application traffic); control
-    /// messages (token, shutdown) are excluded from the message deficit.
+    /// messages (token, ping, shutdown) are excluded from the message
+    /// deficit.
     pub fn is_basic(&self) -> bool {
-        !matches!(self, Msg::Token(_) | Msg::Shutdown)
+        !matches!(self, Msg::Token(_) | Msg::Shutdown | Msg::Ping)
     }
 }
 
@@ -236,6 +254,11 @@ mod tests {
         .is_basic());
         assert!(Msg::ActivateBatch { tasks: vec![] }.is_basic());
         assert!(!Msg::Shutdown.is_basic());
+        assert!(!Msg::Ping.is_basic(), "heartbeats are control traffic");
+        assert!(
+            Msg::Recover { tasks: vec![] }.is_basic(),
+            "re-injected work must count in the Safra deficit"
+        );
     }
 
     #[test]

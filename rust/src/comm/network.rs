@@ -6,7 +6,7 @@
 //! — preserving per-link FIFO order like an MPI point-to-point channel.
 
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -101,6 +101,47 @@ struct DelayLine {
     shutdown: Mutex<bool>,
 }
 
+/// Crash-stop gate (`--faults crash-*`), shared between the fabric and
+/// its delay-line thread. Once the armed node's crash time passes, the
+/// fabric drops everything the dead node sends and diverts everything
+/// addressed to it into a graveyard, which the recovery coordinator
+/// drains: basic messages are re-injected to the rehash survivor,
+/// steal-class ones are discarded (the steal protocol's own timeout and
+/// ledger machinery heals them). Unarmed (the default), every check is
+/// one relaxed atomic load and the fabric behaves exactly as before.
+struct CrashGate {
+    /// Armed victim (`u32::MAX` = none).
+    node: AtomicU32,
+    /// Crash time as `f64` bits, µs on the fabric clock.
+    at_us_bits: AtomicU64,
+    /// Fabric start time (copy of [`Network::t0`]).
+    t0: Instant,
+    /// Envelopes addressed to the dead node after its crash.
+    graveyard: Mutex<Vec<Envelope>>,
+}
+
+impl CrashGate {
+    fn unarmed(t0: Instant) -> CrashGate {
+        CrashGate {
+            node: AtomicU32::new(u32::MAX),
+            at_us_bits: AtomicU64::new(0),
+            t0,
+            graveyard: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn is_crashed(&self, node: NodeId) -> bool {
+        let armed = self.node.load(Ordering::Relaxed);
+        armed == node.0
+            && self.t0.elapsed().as_secs_f64() * 1e6
+                >= f64::from_bits(self.at_us_bits.load(Ordering::Relaxed))
+    }
+
+    fn bury(&self, env: Envelope) {
+        self.graveyard.lock().unwrap().push(env);
+    }
+}
+
 /// The cluster fabric.
 pub struct Network {
     senders: Vec<Sender<Envelope>>,
@@ -123,6 +164,8 @@ pub struct Network {
     pub faults_dropped: AtomicU64,
     /// Injected duplicate copies (diagnostics).
     pub faults_duplicated: AtomicU64,
+    /// Crash-stop gate (`--faults crash-*`); unarmed by default.
+    crash: Arc<CrashGate>,
 }
 
 impl Network {
@@ -157,6 +200,7 @@ impl Network {
                 shutdown: Mutex::new(false),
             }))
         };
+        let t0 = Instant::now();
         let net = Arc::new(Network {
             senders,
             link,
@@ -167,20 +211,69 @@ impl Network {
             sent_bytes: AtomicU64::new(0),
             faults: plan,
             fault_rng: Mutex::new(fault_rng(seed, 0)),
-            t0: Instant::now(),
+            t0,
             faults_dropped: AtomicU64::new(0),
             faults_duplicated: AtomicU64::new(0),
+            crash: Arc::new(CrashGate::unarmed(t0)),
         });
         if net.delay.is_some() {
             let line = net.delay.as_ref().unwrap().clone();
             let senders = net.senders.clone();
+            let gate = net.crash.clone();
             let handle = std::thread::Builder::new()
                 .name("net-delay".into())
-                .spawn(move || delay_loop(line, senders))
+                .spawn(move || delay_loop(line, senders, gate))
                 .expect("spawn delay line");
             *net.delay_thread.lock().unwrap() = Some(handle);
         }
         (net, mailboxes)
+    }
+
+    /// Arm the crash-stop gate: from `at_us` on the fabric clock, `node`
+    /// is dead to the network. Called once at startup from the resolved
+    /// [`FaultPlan::crash_schedule`].
+    pub fn arm_crash(&self, node: u32, at_us: f64) {
+        self.crash.at_us_bits.store(at_us.to_bits(), Ordering::Relaxed);
+        self.crash.node.store(node, Ordering::Relaxed);
+    }
+
+    /// Whether `node` is past its armed crash time.
+    pub fn is_crashed(&self, node: NodeId) -> bool {
+        self.crash.is_crashed(node)
+    }
+
+    /// Run clock (µs since fabric start) — the time base of the fault
+    /// plan's straggler window and the crash gate.
+    pub fn now_us(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Divert an envelope to the dead node's graveyard (also used by
+    /// the dead node's comm thread to hand over its final mailbox
+    /// contents — messages delivered but never processed).
+    pub fn bury(&self, env: Envelope) {
+        self.crash.bury(env);
+    }
+
+    /// Drain the graveyard (recovery coordinator only).
+    pub fn drain_graveyard(&self) -> Vec<Envelope> {
+        std::mem::take(&mut *self.crash.graveyard.lock().unwrap())
+    }
+
+    /// True when no envelope is buried awaiting recovery.
+    pub fn graveyard_is_empty(&self) -> bool {
+        self.crash.graveyard.lock().unwrap().is_empty()
+    }
+
+    /// True while the delay line still holds traffic addressed to
+    /// `node` — the leader gates termination on this so a message in
+    /// flight toward a dead node (invisible to Safra after the ring
+    /// repair) cannot be lost to the graveyard after the final drain.
+    pub fn inflight_to(&self, node: NodeId) -> bool {
+        match &self.delay {
+            None => false,
+            Some(line) => line.heap.lock().unwrap().iter().any(|d| d.env.dst == node),
+        }
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -210,6 +303,21 @@ impl Network {
     /// [`FaultMark::Duplicate`]) or delayed (multiplied wire time; a
     /// no-op on ideal links, which model zero wire time).
     pub fn send(&self, src: NodeId, dst: NodeId, msg: Msg) {
+        if self.crash.is_crashed(src) {
+            // A crashed node's last racing sends never reach the wire.
+            return;
+        }
+        if self.crash.is_crashed(dst) {
+            // Addressed to a dead host: straight to the graveyard for
+            // the recovery coordinator (no wire, no fault draws).
+            self.crash.bury(Envelope {
+                src,
+                dst,
+                msg,
+                fault: FaultMark::None,
+            });
+            return;
+        }
         let bytes = msg.wire_bytes();
         self.sent_msgs.fetch_add(1, Ordering::Relaxed);
         self.sent_bytes.fetch_add(bytes, Ordering::Relaxed);
@@ -300,14 +408,24 @@ impl Drop for Network {
     }
 }
 
-fn delay_loop(line: Arc<DelayLine>, senders: Vec<Sender<Envelope>>) {
+fn delay_loop(line: Arc<DelayLine>, senders: Vec<Sender<Envelope>>, gate: Arc<CrashGate>) {
+    // Deliver, or bury if the destination crashed while the envelope
+    // was on the wire (the in-flight half of the crash gate; sends
+    // after the crash never reach the heap at all).
+    let deliver = |env: Envelope| {
+        if gate.is_crashed(env.dst) {
+            gate.bury(env);
+        } else {
+            let _ = senders[env.dst.idx()].send(env);
+        }
+    };
     loop {
         let mut heap = line.heap.lock().unwrap();
         loop {
             if *line.shutdown.lock().unwrap() {
                 // Flush whatever is pending so no message is lost.
                 while let Some(d) = heap.pop() {
-                    let _ = senders[d.env.dst.idx()].send(d.env);
+                    deliver(d.env);
                 }
                 return;
             }
@@ -315,7 +433,7 @@ fn delay_loop(line: Arc<DelayLine>, senders: Vec<Sender<Envelope>>) {
             match heap.peek() {
                 Some(d) if d.deliver_at <= now => {
                     let d = heap.pop().unwrap();
-                    let _ = senders[d.env.dst.idx()].send(d.env);
+                    deliver(d.env);
                 }
                 Some(d) => {
                     let wait = d.deliver_at - now;
@@ -440,6 +558,36 @@ mod tests {
         assert_eq!(dups, net.faults_duplicated.load(Ordering::Relaxed));
         assert!(dropped > 0, "a 50% drop plan must drop something");
         assert!(dups > 0, "a 30% dup plan must duplicate something");
+    }
+
+    #[test]
+    fn crash_gate_buries_traffic_to_and_drops_traffic_from_the_dead() {
+        let (net, mb) = Network::new(3, LinkModel::ideal());
+        // Unarmed: nobody is crashed, nothing is buried.
+        assert!(!net.is_crashed(NodeId(1)));
+        assert!(net.graveyard_is_empty());
+        net.arm_crash(1, 0.0); // dead from t = 0
+        assert!(net.is_crashed(NodeId(1)));
+        assert!(!net.is_crashed(NodeId(2)));
+        // To the dead: buried, not delivered.
+        net.send(NodeId(0), NodeId(1), activate(4));
+        assert!(mb[1].try_recv().is_none());
+        assert!(!net.graveyard_is_empty());
+        // From the dead: dropped outright.
+        net.send(NodeId(1), NodeId(2), activate(5));
+        assert!(mb[2].try_recv().is_none());
+        // Survivor-to-survivor traffic is untouched.
+        net.send(NodeId(0), NodeId(2), activate(6));
+        assert!(matches!(
+            mb[2].recv_timeout(Duration::from_millis(100)).unwrap().msg,
+            Msg::Activate { task } if task.i == 6
+        ));
+        // The coordinator drains exactly what was buried.
+        let grave = net.drain_graveyard();
+        assert_eq!(grave.len(), 1);
+        assert!(matches!(grave[0].msg, Msg::Activate { task } if task.i == 4));
+        assert!(net.graveyard_is_empty());
+        assert!(!net.inflight_to(NodeId(1)), "ideal links hold nothing");
     }
 
     #[test]

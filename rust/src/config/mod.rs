@@ -283,6 +283,15 @@ mod tests {
         assert_eq!(c.faults.drop_reply, 0.05);
         assert_eq!(c.faults.delay_factor, 3.0);
         assert_eq!(c.sim_config().faults, c.faults);
+        let c = RunConfig::from_args(&args("--faults crash-node=2,crash-at-us=1500,drop=0.01"))
+            .unwrap();
+        assert!(c.faults.enabled && c.faults.has_crash());
+        assert_eq!(c.faults.crash_node, Some(2));
+        assert_eq!(c.faults.crash_at_us, 1500.0);
+        assert_eq!(c.sim_config().faults, c.faults);
+        let c = RunConfig::from_args(&args("--faults crash-p=0.5")).unwrap();
+        assert!(c.faults.has_crash());
+        assert_eq!(c.faults.crash_p, 0.5);
         assert!(RunConfig::from_args(&args("--faults bogus=1")).is_err());
     }
 

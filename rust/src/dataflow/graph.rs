@@ -85,6 +85,27 @@ impl ActivationTracker {
     pub fn is_quiescent(&self) -> bool {
         self.remaining.is_empty()
     }
+
+    /// Crash recovery: hand over every partially-activated task with the
+    /// number of dependency edges already satisfied for it, leaving this
+    /// tracker quiescent. The recovery coordinator replays each entry as
+    /// `satisfied` activations at the rehash survivor's tracker (whose
+    /// lazy in-degree init reproduces the state exactly); the remaining
+    /// edges arrive there later via rerouted activations. Sorted by
+    /// descriptor so recovery is deterministic regardless of hash order.
+    pub fn drain_partial(&mut self, graph: &dyn TaskGraph) -> Vec<(TaskDesc, u32)> {
+        let mut out: Vec<(TaskDesc, u32)> = self
+            .remaining
+            .drain()
+            .map(|(t, remaining)| {
+                let satisfied = graph.in_degree(t).max(1) - remaining;
+                debug_assert!(satisfied > 0, "untouched task in the remaining map");
+                (t, satisfied)
+            })
+            .collect();
+        out.sort_unstable_by_key(|(t, _)| *t);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +150,26 @@ mod tests {
         assert_eq!(tr.pending(), 0);
         assert!(tr.is_quiescent());
         assert_eq!(tr.activations_received(), 3);
+    }
+
+    #[test]
+    fn drain_partial_replays_into_a_fresh_tracker() {
+        let g = diamond();
+        let t = |i| TaskDesc::indexed(TaskClass::Synthetic, i, 0, 0);
+        let mut dead = ActivationTracker::new();
+        assert!(!dead.activate(&g, t(3)), "one of two inputs satisfied");
+        let partial = dead.drain_partial(&g);
+        assert!(dead.is_quiescent(), "the dead tracker is emptied");
+        assert_eq!(partial, vec![(t(3), 1)]);
+        // Replaying at a survivor reproduces the state: the next (last)
+        // activation fires the task exactly once.
+        let mut survivor = ActivationTracker::new();
+        for (task, satisfied) in partial {
+            for _ in 0..satisfied {
+                assert!(!survivor.activate(&g, task));
+            }
+        }
+        assert!(survivor.activate(&g, t(3)), "remaining edge fires it");
     }
 
     #[test]

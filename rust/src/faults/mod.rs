@@ -104,9 +104,17 @@ impl FaultDecision {
 /// slow-factor=F               extra delay on the straggler's steal traffic
 /// slow-from-us=T,slow-until-us=T   straggler window in run time (µs)
 /// stall                       straggler drops (instead of delays) in-window
+/// crash-node=N                crash-stop node N (never 0, the ring leader)
+/// crash-at-us=T               crash time on the run clock (µs)
+/// crash-p=P                   probabilistic crash: with probability P one
+///                             node (crash-node, or a uniform draw over
+///                             1..n) crash-stops at crash-at-us (or a
+///                             drawn time) — all draws from the dedicated
+///                             fault stream, so zero draws when off
 /// ```
 ///
-/// Example: `--faults drop=0.05,delay=3x`.
+/// Example: `--faults drop=0.05,delay=3x` or
+/// `--faults crash-node=2,crash-at-us=30000,drop=0.02`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FaultPlan {
     /// Master switch; `false` means no draws, no marks, no extra
@@ -130,6 +138,16 @@ pub struct FaultPlan {
     pub slow_from_us: f64,
     pub slow_until_us: f64,
     pub stall: bool,
+    /// Crash-stop victim. Node 0 is never crashable: it is the Safra
+    /// ring leader and the recovery coordinator (the parser rejects it).
+    pub crash_node: Option<u32>,
+    /// Crash time on the run clock (µs). 0 with `crash_node` set means
+    /// "crash immediately"; 0 with only `crash_p` set means "draw one".
+    pub crash_at_us: f64,
+    /// Probabilistic crash: with this probability, one node crash-stops
+    /// (the node is `crash_node` if set, else a uniform draw over
+    /// `1..n`; the time is `crash_at_us` if > 0, else a uniform draw).
+    pub crash_p: f64,
 }
 
 impl Default for FaultPlan {
@@ -149,6 +167,9 @@ impl Default for FaultPlan {
             slow_from_us: 0.0,
             slow_until_us: f64::INFINITY,
             stall: false,
+            crash_node: None,
+            crash_at_us: 0.0,
+            crash_p: 0.0,
         }
     }
 }
@@ -196,6 +217,42 @@ impl FaultPlan {
             d.delay_mult *= self.delay_factor;
         }
         d
+    }
+
+    /// Whether this plan can crash-stop a node at all.
+    pub fn has_crash(&self) -> bool {
+        self.enabled && (self.crash_node.is_some() || self.crash_p > 0.0)
+    }
+
+    /// Resolve the crash schedule for a run of `num_nodes` nodes:
+    /// `Some((node, at_us))` if a node crash-stops, `None` otherwise.
+    ///
+    /// Both runtimes call this once at startup with the *same* dedicated
+    /// stream (`fault_rng(seed, 1)`), so the DES and the threaded fabric
+    /// agree on who dies and when. A plan with no crash spec makes zero
+    /// draws (byte-identity when off); a deterministic `crash-node` +
+    /// `crash-at-us` pair makes zero draws too. Node 0 never crashes —
+    /// it is the ring leader and the recovery coordinator.
+    pub fn crash_schedule(&self, num_nodes: usize, rng: &mut Rng) -> Option<(u32, f64)> {
+        if !self.has_crash() || num_nodes < 2 {
+            return None;
+        }
+        if self.crash_p > 0.0 && rng.uniform() >= self.crash_p {
+            return None;
+        }
+        let node = match self.crash_node {
+            Some(n) if n > 0 && (n as usize) < num_nodes => n,
+            Some(_) => return None, // out of range for this run
+            None => 1 + rng.below((num_nodes - 1) as u64) as u32,
+        };
+        let at_us = if self.crash_at_us > 0.0 {
+            self.crash_at_us
+        } else if self.crash_node.is_some() && self.crash_p == 0.0 {
+            0.0 // deterministic immediate crash, no draw
+        } else {
+            1_000.0 + rng.uniform() * 19_000.0
+        };
+        Some((node, at_us))
     }
 
     /// Canonical spec string; `plan.label().parse()` round-trips.
@@ -251,6 +308,15 @@ impl FaultPlan {
             if self.stall {
                 parts.push("stall".to_string());
             }
+        }
+        if let Some(n) = self.crash_node {
+            parts.push(format!("crash-node={n}"));
+        }
+        if self.crash_at_us > 0.0 {
+            parts.push(format!("crash-at-us={}", self.crash_at_us));
+        }
+        if self.crash_p > 0.0 {
+            parts.push(format!("crash-p={}", self.crash_p));
         }
         if parts.is_empty() {
             "on".to_string()
@@ -348,6 +414,37 @@ impl FromStr for FaultPlan {
                     })?
                 }
                 "stall" => plan.stall = value.is_empty() || value.parse().unwrap_or(false),
+                "crash-node" => {
+                    let n: u32 = value.parse().map_err(|_| {
+                        format!("--faults: 'crash-node={value}' is not a node id")
+                    })?;
+                    if n == 0 {
+                        // Node 0 is the ring leader and recovery coordinator.
+                        return Err("--faults: crash-node=0 is not allowed".to_string());
+                    }
+                    plan.crash_node = Some(n);
+                }
+                "crash-at-us" => {
+                    let t: f64 = value.parse().map_err(|_| {
+                        format!("--faults: 'crash-at-us={value}' is not a time")
+                    })?;
+                    if t < 0.0 {
+                        return Err(format!("--faults: 'crash-at-us={value}' must be >= 0"));
+                    }
+                    plan.crash_at_us = t;
+                }
+                "crash-p" => {
+                    // Deliberately not clamped to MAX_FAULT_P: a certain
+                    // crash (p = 1) is a valid, recoverable schedule —
+                    // unlike certain message loss, which would diverge.
+                    let p: f64 = value.parse().map_err(|_| {
+                        format!("--faults: 'crash-p={value}' is not a probability")
+                    })?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("--faults: 'crash-p={value}' must be in [0, 1]"));
+                    }
+                    plan.crash_p = p;
+                }
                 other => return Err(format!("--faults: unknown key '{other}'")),
             }
         }
@@ -405,6 +502,9 @@ mod tests {
             "delay=2x,delay-p=0.25",
             "slow-node=2,slow-factor=4,slow-from-us=100,slow-until-us=5000",
             "drop=0.1,slow-node=0,stall",
+            "crash-node=2,crash-at-us=30000",
+            "crash-p=0.5",
+            "drop=0.05,crash-node=3,crash-at-us=1000,crash-p=1",
         ] {
             let plan: FaultPlan = spec.parse().unwrap();
             let relabeled: FaultPlan = plan.label().parse().unwrap();
@@ -440,6 +540,54 @@ mod tests {
         let d = slow.decide(FaultClass::Reply, 1, 0, 0.0, &mut rng);
         assert_eq!(d.delay_mult, 4.0);
         assert!(!d.dropped);
+    }
+
+    #[test]
+    fn crash_schedule_is_deterministic_and_draw_free_when_off() {
+        // No crash spec: zero draws, even with other faults enabled.
+        let plan: FaultPlan = "drop=0.2".parse().unwrap();
+        let mut rng = fault_rng(11, 1);
+        let before = rng.next_u64();
+        let mut rng = fault_rng(11, 1);
+        assert_eq!(plan.crash_schedule(8, &mut rng), None);
+        assert_eq!(rng.next_u64(), before, "no-crash plan must not draw");
+
+        // Deterministic node+time: zero draws as well.
+        let det: FaultPlan = "crash-node=2,crash-at-us=30000".parse().unwrap();
+        let mut rng = fault_rng(11, 1);
+        assert_eq!(det.crash_schedule(8, &mut rng), Some((2, 30_000.0)));
+        assert_eq!(rng.next_u64(), before);
+
+        // Out-of-range victim: the plan is a no-op for this run size.
+        assert_eq!(det.crash_schedule(2, &mut fault_rng(11, 1)), None);
+        // Single-node runs have no one to fail over to.
+        assert_eq!(det.crash_schedule(1, &mut fault_rng(11, 1)), None);
+
+        // Probabilistic form: same seed, same schedule; node 0 never
+        // drawn; a drawn time lands in the documented window.
+        let p: FaultPlan = "crash-p=1".parse().unwrap();
+        let a = p.crash_schedule(8, &mut fault_rng(42, 1)).unwrap();
+        let b = p.crash_schedule(8, &mut fault_rng(42, 1)).unwrap();
+        assert_eq!(a, b);
+        for seed in 0..200u64 {
+            if let Some((n, t)) = p.crash_schedule(4, &mut fault_rng(seed, 1)) {
+                assert!((1..4).contains(&n), "node 0 must never crash");
+                assert!((1_000.0..20_000.0).contains(&t));
+            } else {
+                panic!("crash-p=1 must always schedule a crash");
+            }
+        }
+        // crash-p=0.5 hits roughly half the seeds.
+        let half: FaultPlan = "crash-p=0.5".parse().unwrap();
+        let hits = (0..1_000u64)
+            .filter(|&s| half.crash_schedule(4, &mut fault_rng(s, 1)).is_some())
+            .count();
+        assert!((400..600).contains(&hits), "hits {hits}/1000");
+        assert!("crash-node=0".parse::<FaultPlan>().is_err());
+        assert!("crash-p=1.5".parse::<FaultPlan>().is_err());
+        assert!("crash-at-us=-5".parse::<FaultPlan>().is_err());
+        assert!(det.has_crash() && p.has_crash() && !plan.has_crash());
+        assert!(!FaultPlan::default().has_crash());
     }
 
     #[test]

@@ -36,7 +36,8 @@ fn usage() -> String {
      \x20         [--share-estimates false] [--victim-select uniform|targeted]\n\
      \x20         [--sched central|sharded|workassist] [--pool-floor 2]\n\
      \x20         [--batch-activations true]\n\
-     \x20         [--faults off|drop=P,dup=P,delay=Fx,slow-node=N,...]\n\
+     \x20         [--faults off|drop=P,dup=P,delay=Fx,slow-node=N,\n\
+     \x20          crash-node=N,crash-at-us=T,crash-p=P,...]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
      repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
      \x20         [--figure-scale small|paper] [--sched central|sharded|workassist]\n\
@@ -200,12 +201,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         let text = victims
             .iter()
             .enumerate()
-            .filter(|(_, (g, d, e, t))| g + d + e + t > 0)
-            .map(|(v, (g, d, e, t))| format!("n{v} {g}g/{d}d/{e}e/{t}t"))
+            .filter(|(_, (g, d, e, t, q))| g + d + e + t + q > 0)
+            .map(|(v, (g, d, e, t, q))| {
+                let mark = if *q > 0 { "/q" } else { "" };
+                format!("n{v} {g}g/{d}d/{e}e/{t}t{mark}")
+            })
             .collect::<Vec<_>>()
             .join(", ");
         println!(
-            "victims:         [{}] {text} (grants/wt-denials/empties/timeouts per victim)",
+            "victims:         [{}] {text} (grants/wt-denials/empties/timeouts per victim; \
+             /q = quarantined)",
             cfg.migrate.victim_select.label()
         );
     }
@@ -220,6 +225,17 @@ fn cmd_run(args: &Args) -> Result<()> {
             report.steal_retries_total(),
             report.ledger_reclaims_total(),
             report.dup_replies_suppressed_total()
+        );
+    }
+    if cfg.faults.has_crash() {
+        println!(
+            "recovery:        {} suspected, {} crashed, {} ring repairs, {} tasks recovered \
+             (detect latency {:.0}µs)",
+            report.recovery.nodes_suspected,
+            report.recovery.nodes_crashed,
+            report.recovery.ring_repairs,
+            report.recovery.tasks_recovered,
+            report.recovery.detect_latency_us
         );
     }
     if cfg.migrate.share_estimates {

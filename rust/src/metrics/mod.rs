@@ -59,6 +59,11 @@ pub struct NodeReport {
     /// nonzero under `--faults`, where the fabric may eat a request or
     /// reply and the thief's watchdog gives up on it).
     pub victim_timeouts: Vec<u64>,
+    /// Quarantine records by victim (same indexing): at most one per
+    /// victim — the permanent verdict a thief passes on a crashed peer
+    /// (membership update) or on one that never answered within the
+    /// whole retry budget. A quarantined victim is never picked again.
+    pub victim_quarantined: Vec<u64>,
     /// Steal requests this node abandoned after the watchdog deadline
     /// (`--faults` only; reliable fabrics answer every request).
     pub steal_timeouts: u64,
@@ -82,6 +87,30 @@ pub struct NodeReport {
     pub arrival_ready: Vec<PollSample>,
 }
 
+/// Crash-recovery telemetry, identical across both runtimes: the DES
+/// fills it from its omniscient Crash/Recover events, the threaded
+/// runtime from the leader's heartbeat detector and recovery sweep.
+/// All-zero (the `Default`) on fault-free runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Nodes the failure detector suspected (and, with injected
+    /// crash-stop faults only, confirmed — false positives are zero by
+    /// construction of the suspicion threshold).
+    pub nodes_suspected: u64,
+    /// Nodes actually crashed by the fault plan.
+    pub nodes_crashed: u64,
+    /// Tasks re-homed onto survivors by lineage recovery: the dead
+    /// node's ready queue, executing set, unabsorbed transfer-ledger
+    /// grants, and partially-activated tasks whose lineage replayed.
+    pub tasks_recovered: u64,
+    /// Safra ring repairs (token splices) performed.
+    pub ring_repairs: u64,
+    /// Detection latency (µs): crash instant to the recovery sweep. In
+    /// the DES this is exactly the modeled suspicion threshold; in the
+    /// threaded runtime it is the measured wall-clock gap.
+    pub detect_latency_us: f64,
+}
+
 /// Outcome of one run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -102,6 +131,9 @@ pub struct RunReport {
     pub faults_dropped: u64,
     /// Extra steal-class message copies the fault plan injected.
     pub faults_duplicated: u64,
+    /// Crash-stop detection/repair/recovery counters (`--faults
+    /// crash-*`; all-zero otherwise).
+    pub recovery: RecoveryStats,
 }
 
 impl RunReport {
@@ -212,19 +244,22 @@ impl RunReport {
     }
 
     /// Per-victim reply outcomes summed across all thieves, indexed by
-    /// victim node id: `(grants, wt_denials, empties, timeouts)` — how
-    /// often each node was successfully robbed, turned thieves away, or
-    /// (under `--faults`) left them hanging past the watchdog deadline.
-    /// Missing per-node tables (hand-built reports) count zero.
-    pub fn victim_totals(&self) -> Vec<(u64, u64, u64, u64)> {
+    /// victim node id: `(grants, wt_denials, empties, timeouts,
+    /// quarantines)` — how often each node was successfully robbed,
+    /// turned thieves away, (under `--faults`) left them hanging past
+    /// the watchdog deadline, or was written off permanently (crash
+    /// declarations and exhausted retry budgets). Missing per-node
+    /// tables (hand-built reports) count zero.
+    pub fn victim_totals(&self) -> Vec<(u64, u64, u64, u64, u64)> {
         let p = self.nodes.len();
-        let mut out = vec![(0u64, 0u64, 0u64, 0u64); p];
+        let mut out = vec![(0u64, 0u64, 0u64, 0u64, 0u64); p];
         for n in &self.nodes {
             for (v, slot) in out.iter_mut().enumerate() {
                 slot.0 += n.victim_grants.get(v).copied().unwrap_or(0);
                 slot.1 += n.victim_wt_denials.get(v).copied().unwrap_or(0);
                 slot.2 += n.victim_empties.get(v).copied().unwrap_or(0);
                 slot.3 += n.victim_timeouts.get(v).copied().unwrap_or(0);
+                slot.4 += n.victim_quarantined.get(v).copied().unwrap_or(0);
             }
         }
         out
@@ -296,6 +331,23 @@ impl RunReport {
                 "dup_replies_suppressed",
                 Json::Num(self.dup_replies_suppressed_total() as f64),
             ),
+            (
+                "nodes_suspected",
+                Json::Num(self.recovery.nodes_suspected as f64),
+            ),
+            (
+                "nodes_crashed",
+                Json::Num(self.recovery.nodes_crashed as f64),
+            ),
+            (
+                "tasks_recovered",
+                Json::Num(self.recovery.tasks_recovered as f64),
+            ),
+            ("ring_repairs", Json::Num(self.recovery.ring_repairs as f64)),
+            (
+                "detect_latency_us",
+                Json::Num(self.recovery.detect_latency_us),
+            ),
             ("steal_requests", Json::Num(steals.requests_sent as f64)),
             ("steal_successes", Json::Num(steals.successful_steals as f64)),
             ("steal_success_pct", Json::Num(steals.success_pct())),
@@ -352,7 +404,7 @@ impl RunReport {
                 Json::Arr(
                     victims
                         .iter()
-                        .map(|&(g, _, _, _)| Json::Num(g as f64))
+                        .map(|&(g, _, _, _, _)| Json::Num(g as f64))
                         .collect(),
                 ),
             ),
@@ -361,7 +413,7 @@ impl RunReport {
                 Json::Arr(
                     victims
                         .iter()
-                        .map(|&(_, d, e, _)| Json::Num((d + e) as f64))
+                        .map(|&(_, d, e, _, _)| Json::Num((d + e) as f64))
                         .collect(),
                 ),
             ),
@@ -370,7 +422,16 @@ impl RunReport {
                 Json::Arr(
                     victims
                         .iter()
-                        .map(|&(_, _, _, t)| Json::Num(t as f64))
+                        .map(|&(_, _, _, t, _)| Json::Num(t as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "victim_quarantined",
+                Json::Arr(
+                    victims
+                        .iter()
+                        .map(|&(_, _, _, _, q)| Json::Num(q as f64))
                         .collect(),
                 ),
             ),
@@ -426,6 +487,7 @@ mod tests {
             deliver_events: 0,
             faults_dropped: 0,
             faults_duplicated: 0,
+            recovery: RecoveryStats::default(),
         };
         // each node's mean/max = 1 -> I = 0
         let e = r.potential_series(100.0);
@@ -449,6 +511,7 @@ mod tests {
             deliver_events: 0,
             faults_dropped: 0,
             faults_duplicated: 0,
+            recovery: RecoveryStats::default(),
         };
         let e = r.potential_series(100.0);
         // w = [1, 0]: I = 1 - 0.5 = 0.5; E = I*P = 1.0
@@ -468,6 +531,7 @@ mod tests {
             deliver_events: 0,
             faults_dropped: 0,
             faults_duplicated: 0,
+            recovery: RecoveryStats::default(),
         };
         assert_eq!(r.potential_series(10.0).len(), 3);
     }
@@ -479,6 +543,7 @@ mod tests {
         n0.victim_wt_denials = vec![0, 2, 0];
         n0.victim_empties = vec![0, 0, 4];
         n0.victim_timeouts = vec![0, 1, 0];
+        n0.victim_quarantined = vec![0, 0, 1];
         let n1 = NodeReport::default(); // hand-built: empty tables = zeros
         let mut n2 = NodeReport::default();
         n2.victim_grants = vec![5, 0, 0];
@@ -493,10 +558,11 @@ mod tests {
             deliver_events: 0,
             faults_dropped: 0,
             faults_duplicated: 0,
+            recovery: RecoveryStats::default(),
         };
         assert_eq!(
             r.victim_totals(),
-            vec![(5, 0, 0, 0), (3, 2, 0, 1), (1, 0, 4, 0)],
+            vec![(5, 0, 0, 0, 0), (3, 2, 0, 1, 0), (1, 0, 4, 0, 1)],
             "summed across thieves, indexed by victim"
         );
     }
@@ -518,6 +584,7 @@ mod tests {
             deliver_events: 0,
             faults_dropped: 0,
             faults_duplicated: 0,
+            recovery: RecoveryStats::default(),
         };
         assert_eq!(r.arrival_ready_all(), vec![3, 9]);
     }

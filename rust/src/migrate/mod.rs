@@ -39,7 +39,7 @@ pub use policy::{
     StarvationView, ThiefPolicy, VictimPolicy,
 };
 pub use protocol::{
-    steal_req_id, steal_timeout_us, StealStats, VictimDecision, STEAL_BACKOFF_CAP_EXP,
-    STEAL_TIMEOUT_FLOOR_US, THIEF_RETRY_BUDGET,
+    steal_req_id, steal_timeout_us, suspicion_timeout_us, StealStats, VictimDecision,
+    ACK_PROBE_BUDGET, STEAL_BACKOFF_CAP_EXP, STEAL_TIMEOUT_FLOOR_US, THIEF_RETRY_BUDGET,
 };
 pub use victim::{classify_reply, VictimOutcome, VictimSelect, VictimSelector};

@@ -52,6 +52,40 @@ pub const STEAL_TIMEOUT_FLOOR_US: f64 = 5_000.0;
 /// recovery by a bounded factor instead of unboundedly.
 pub const STEAL_BACKOFF_CAP_EXP: u32 = 4;
 
+/// How many times the victim's ack watchdog retransmits an unacked
+/// `StealReply` before *probing* the thief instead of retransmitting
+/// again. PR 7 retransmitted unbounded, which was the documented
+/// liveness caveat: a thief stalled forever (or crash-stopped) kept the
+/// victim's ledger entry — and the run — alive indefinitely. After this
+/// budget the victim settles the entry from the thief's transfer book:
+/// an absorbed grant retires it, anything else reclaims the tasks.
+pub const ACK_PROBE_BUDGET: u32 = 4;
+
+/// The failure detector's suspicion threshold (µs): how long a node may
+/// stay silent before the leader declares it dead. Derived from the
+/// same wire model as [`steal_timeout_us`] — several fully backed-off
+/// steal round trips — so on a healthy fabric a silent-but-live node is
+/// impossible by construction: idle nodes ping at a quarter of this
+/// period, and the modeled worst-case round trip (including the fault
+/// plan's bounded delay factor budget) is a small fraction of it.
+/// Shared by the threaded runtime (wall clock) and the DES (which uses
+/// it directly as the deterministic detection latency), so both declare
+/// at the same model time and never falsely in a fault-free run.
+pub fn suspicion_timeout_us(
+    latency_us: f64,
+    bw_bytes_per_us: f64,
+    migrate_overhead_us: f64,
+    poll_interval_us: f64,
+) -> f64 {
+    4.0 * steal_timeout_us(
+        latency_us,
+        bw_bytes_per_us,
+        migrate_overhead_us,
+        poll_interval_us,
+        0,
+    )
+}
+
 /// Compose a steal request id: the thief's node id in the high bits,
 /// its monotone per-thief counter in the low 40 — globally unique
 /// without coordination, and wire-free (the id rides the existing
@@ -690,6 +724,19 @@ mod tests {
             steal_timeout_us(0.0, 1e9, 50.0, 100.0, 1) > STEAL_TIMEOUT_FLOOR_US,
             "retries wait longer than first tries"
         );
+    }
+
+    #[test]
+    fn suspicion_threshold_dominates_steal_timeouts() {
+        // The detector must never fire on a node that is merely slow to
+        // answer a steal: the threshold sits above a full first-try
+        // timeout with headroom, on ideal and slow links alike.
+        for (lat, bw) in [(0.0, 1e9), (10_000.0, 1.0), (500.0, 1e3)] {
+            let t0 = steal_timeout_us(lat, bw, 150.0, 100.0, 0);
+            let susp = suspicion_timeout_us(lat, bw, 150.0, 100.0);
+            assert_eq!(susp, 4.0 * t0);
+            assert!(susp >= 4.0 * STEAL_TIMEOUT_FLOOR_US);
+        }
     }
 
     #[test]

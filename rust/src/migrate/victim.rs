@@ -133,6 +133,13 @@ pub enum VictimOutcome {
     /// exactly as little as one that answers empty — but counted
     /// separately so the telemetry can tell loss from poverty.
     TimedOut,
+    /// The victim is gone for good: crash-stopped (membership declared
+    /// it dead), or it exhausted the thief's whole retry budget without
+    /// ever answering (a stalled-forever straggler). Unlike every other
+    /// outcome this one is *permanent* — decay never forgives it and
+    /// [`VictimSelector::pick`] skips the victim outright, closing the
+    /// PR 7 liveness caveat (a dead victim used to be retried forever).
+    Quarantined,
 }
 
 /// Classify a steal reply from its observable fields — shared by the
@@ -185,6 +192,9 @@ pub struct VictimSelector {
     /// Advances once per recorded reply; the time base digest ages
     /// are measured in.
     clock: u64,
+    /// Permanently excluded victims (crash-stopped or stalled past the
+    /// full retry budget). Never decays, never faded.
+    quarantined: Vec<bool>,
 }
 
 impl VictimSelector {
@@ -209,6 +219,7 @@ impl VictimSelector {
             richness_w: vec![0.0; n],
             richness_stamp: vec![0; n],
             clock: 0,
+            quarantined: vec![false; n],
         }
     }
 
@@ -246,6 +257,7 @@ impl VictimSelector {
             VictimOutcome::DeniedWaitingTime => self.wt_denials[victim] += 1.0,
             VictimOutcome::DeniedEmpty => self.empties[victim] += 1.0,
             VictimOutcome::TimedOut => self.timeouts[victim] += 1.0,
+            VictimOutcome::Quarantined => self.quarantined[victim] = true,
         }
         if let Some(avg_us) = digest_avg_us {
             if avg_us > 0.0 {
@@ -304,18 +316,40 @@ impl VictimSelector {
     /// returns `self.node`. O(candidates).
     pub fn pick(&mut self, fallback_win_us: f64) -> usize {
         debug_assert!(self.n > 1);
-        if self.epsilon > 0.0 && self.rng.uniform() < self.epsilon {
+        let live = (0..self.n)
+            .filter(|&v| v != self.node && !self.quarantined[v])
+            .count();
+        if live == 0 {
+            // Every candidate is quarantined: there is no good answer,
+            // so fall back to a uniform draw — the ensuing request times
+            // out or is denied like any other and stealing starves out.
             return self.rng.pick_other(self.n, self.node);
         }
-        let mut best = if self.node == 0 { 1 } else { 0 };
+        if self.epsilon > 0.0 && self.rng.uniform() < self.epsilon {
+            // k-th live candidate. With nothing quarantined this is the
+            // same draw and the same index map as `Rng::pick_other`, so
+            // quarantine-free runs are byte-identical to PR 8.
+            let mut k = self.rng.below(live as u64) as usize;
+            for v in 0..self.n {
+                if v == self.node || self.quarantined[v] {
+                    continue;
+                }
+                if k == 0 {
+                    return v;
+                }
+                k -= 1;
+            }
+            unreachable!("k < live by construction");
+        }
+        let mut best = usize::MAX;
         let mut best_score = f64::NEG_INFINITY;
         let mut ties = 0u64;
         for v in 0..self.n {
-            if v == self.node {
+            if v == self.node || self.quarantined[v] {
                 continue;
             }
             let s = self.score(v, fallback_win_us);
-            if s > best_score {
+            if s > best_score || best == usize::MAX {
                 best = v;
                 best_score = s;
                 ties = 1;
@@ -327,6 +361,11 @@ impl VictimSelector {
             }
         }
         best
+    }
+
+    /// Whether `victim` has been permanently excluded.
+    pub fn is_quarantined(&self, victim: usize) -> bool {
+        self.quarantined[victim]
     }
 
     /// Multiply every piece of decayed history by `factor`
@@ -525,6 +564,43 @@ mod tests {
         }
         for (v, hit) in seen.iter().enumerate() {
             assert_eq!(*hit, v != 2, "victim {v}");
+        }
+    }
+
+    #[test]
+    fn quarantine_is_permanent_and_skipped_by_pick() {
+        let mut s = selector(0, 4).with_epsilon(0.5);
+        // Victim 1 is the richest by far — then it crash-stops.
+        for _ in 0..6 {
+            s.record(1, VictimOutcome::Granted, Some(10_000.0));
+        }
+        s.record(1, VictimOutcome::Quarantined, None);
+        assert!(s.is_quarantined(1));
+        for _ in 0..300 {
+            let v = s.pick(50.0);
+            assert_ne!(v, 1, "quarantined victims are never picked");
+            assert_ne!(v, 0, "never self");
+        }
+        // Neither decay, fresh grants elsewhere, nor fade() forgive it.
+        for _ in 0..50 {
+            s.record(2, VictimOutcome::Granted, Some(50.0));
+        }
+        s.fade(0.0);
+        assert!(s.is_quarantined(1));
+        for _ in 0..100 {
+            assert_ne!(s.pick(50.0), 1);
+        }
+    }
+
+    #[test]
+    fn all_quarantined_degenerates_to_uniform_fallback() {
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        s.record(1, VictimOutcome::Quarantined, None);
+        s.record(2, VictimOutcome::Quarantined, None);
+        // No live candidate remains; the pick still terminates and
+        // never returns self.
+        for _ in 0..50 {
+            assert_ne!(s.pick(50.0), 0);
         }
     }
 

@@ -10,7 +10,14 @@
 //! * `Deliver` — a message crosses the wire (activation or steal
 //!   protocol, delayed by the link model);
 //! * `Poll`    — a node's migrate thread wakes up and runs the thief-side
-//!   starvation check.
+//!   starvation check;
+//! * `Crash` / `Recover` — crash-stop fault injection (`--faults
+//!   crash-*`): the node falls silent at the crash instant, and one
+//!   detection latency later ([`suspicion_timeout_us`], the DES mirror
+//!   of the threaded leader's heartbeat threshold) the recovery sweep
+//!   re-homes every piece of its unfinished work onto the rehash
+//!   survivor — ready queue, executing set, transfer ledger, partial
+//!   activation state, and orphaned in-flight activations.
 //!
 //! Termination: the engine is done when no work remains anywhere
 //! (queues, executing sets, in-flight messages); `Poll` events alone
@@ -27,12 +34,12 @@ use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use crate::dataflow::ttg::TaskGraph;
 use crate::dataflow::ActivationTracker;
 use crate::faults::{FaultClass, FaultPlan};
-use crate::metrics::{NodeReport, PollSample, RunReport};
+use crate::metrics::{NodeReport, PollSample, RecoveryStats, RunReport};
 use crate::migrate::{
     class_estimate_update, classify_reply, ewma_update, exec_estimate_seeded_us, is_starving,
-    merge_estimate, protocol::decide_steal, steal_req_id, steal_timeout_us, EstimateDigest,
-    ExecSnapshot, MigrateConfig, StarvationView, StealStats, VictimOutcome, VictimSelect,
-    VictimSelector, THIEF_RETRY_BUDGET,
+    merge_estimate, protocol::decide_steal, steal_req_id, steal_timeout_us, suspicion_timeout_us,
+    EstimateDigest, ExecSnapshot, MigrateConfig, StarvationView, StealStats, VictimOutcome,
+    VictimSelect, VictimSelector, ACK_PROBE_BUDGET, THIEF_RETRY_BUDGET,
 };
 use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, StealOutcome, TaskMeta};
 use crate::util::rng::{fault_rng, thief_rng, Rng};
@@ -162,6 +169,19 @@ enum EventKind {
         node: NodeId,
         req: u64,
     },
+    /// Crash-stop injection (`--faults crash-*` only): the node falls
+    /// silent — its queued events are discarded at the pop, traffic to
+    /// it is orphaned or dropped with exact accounting.
+    Crash {
+        node: NodeId,
+    },
+    /// Detection + ring repair + lineage recovery, one detection
+    /// latency after the matching [`EventKind::Crash`]: the omniscient
+    /// DES compresses the threaded runtime's heartbeat detector, Safra
+    /// splice and leader sweep into a single deterministic event.
+    Recover {
+        node: NodeId,
+    },
 }
 
 /// Thief-side record of one unanswered steal request. The map is
@@ -274,6 +294,10 @@ struct SimNode {
     /// Per-victim abandoned requests (thief-side timeouts; faults-on
     /// only — a reliable fabric answers every request).
     victim_timeouts: Vec<u64>,
+    /// Per-victim quarantine records (crash declarations and exhausted
+    /// retry budgets): the permanent [`VictimOutcome::Quarantined`]
+    /// state the targeted selector never forgives.
+    victim_quarantined: Vec<u64>,
     /// The targeted victim selector (`--victim-select targeted`). Its
     /// RNG is the per-node thief stream ([`thief_rng`]), so targeted
     /// mode never perturbs the simulator's shared cost-noise stream —
@@ -333,6 +357,22 @@ pub struct Simulator {
     /// Steal-class messages the fault plan dropped / duplicated.
     faults_dropped: u64,
     faults_duplicated: u64,
+    /// Resolved crash schedule (node, virtual time), drawn once from the
+    /// dedicated crash stream (`fault_rng(seed, 1)`); `None` arms
+    /// nothing — no draws, no events, byte-identical event streams.
+    crash: Option<(u32, f64)>,
+    /// Crashed nodes: their events are discarded at the pop, traffic to
+    /// them is orphaned or dropped with exact accounting.
+    dead: Vec<bool>,
+    /// Crashed nodes whose recovery sweep has run: traffic still in
+    /// flight to them re-routes to the rehash survivor on delivery.
+    swept: Vec<bool>,
+    /// Activations delivered to a dead node before its recovery sweep —
+    /// the DES mirror of the threaded fabric's graveyard. Applied at the
+    /// rehash survivor by the sweep; counted as outstanding work.
+    orphans: Vec<TaskDesc>,
+    /// Crash-recovery telemetry (detection, repair, re-homed tasks).
+    recovery: RecoveryStats,
 }
 
 impl Simulator {
@@ -379,6 +419,7 @@ impl Simulator {
                 victim_wt_denials: vec![0; n],
                 victim_empties: vec![0; n],
                 victim_timeouts: vec![0; n],
+                victim_quarantined: vec![0; n],
                 victim_sel: VictimSelector::new(i, n.max(2), thief_rng(cfg.seed, i))
                     .with_link(cfg.link.latency_us, cfg.link.bw_bytes_per_us),
                 inflight_steals: 0,
@@ -415,6 +456,14 @@ impl Simulator {
             fault_rng: fault_rng(cfg.seed, 0),
             faults_dropped: 0,
             faults_duplicated: 0,
+            // The crash schedule draws from its own stream (index 1):
+            // plans without a crash spec draw nothing, and an armed one
+            // never perturbs the message-fault stream above.
+            crash: cfg.faults.crash_schedule(n, &mut fault_rng(cfg.seed, 1)),
+            dead: vec![false; n],
+            swept: vec![false; n],
+            orphans: Vec::new(),
+            recovery: RecoveryStats::default(),
         }
     }
 
@@ -437,10 +486,29 @@ impl Simulator {
         self.activate_in_flight == 0
             && self.tasks_in_transit == 0
             && self.ledger_total == 0
+            && self.orphans.is_empty()
             && self
                 .nodes
                 .iter()
                 .all(|n| n.queue.is_empty() && n.executing.is_empty())
+    }
+
+    /// Rehash target for work owned by `id`: `id` itself while live,
+    /// else the first live node cyclically after it — the deterministic
+    /// ownership rehash both runtimes share, so lineage recovery lands
+    /// on the same survivor everywhere.
+    fn route(&self, id: NodeId) -> NodeId {
+        if !self.dead[id.idx()] {
+            return id;
+        }
+        let n = self.nodes.len();
+        for k in 1..n {
+            let c = (id.idx() + k) % n;
+            if !self.dead[c] {
+                return NodeId(c as u32);
+            }
+        }
+        id
     }
 
     /// Schedule a steal-class message across the modeled wire, routed
@@ -650,6 +718,15 @@ impl Simulator {
         let mut remote: Vec<(NodeId, Vec<TaskDesc>)> = Vec::new();
         for s in succs {
             let dest = if dynamic { node_id } else { self.graph.owner(s) };
+            // Post-recovery, activations for dead-owned tasks re-route
+            // to the rehash survivor at the send; inside the detection
+            // window they stay addressed to the dead node and are
+            // orphaned on delivery (detection latency is not free).
+            let dest = if self.swept[dest.idx()] {
+                self.route(dest)
+            } else {
+                dest
+            };
             if dest == node_id {
                 if self.cfg.batch_activations {
                     local.push(s);
@@ -739,9 +816,25 @@ impl Simulator {
         if starving && can_request {
             let victim = match self.migrate.victim_select {
                 // The paper's protocol, on the simulator's shared
-                // stream — the exact draw sequence of every prior PR.
+                // stream — the exact draw sequence of every prior PR
+                // while the membership is intact; once a node has
+                // crashed the same single draw maps onto the k-th live
+                // candidate instead (`None` = no live peers to rob).
                 VictimSelect::Uniform => {
-                    NodeId(self.rng.pick_other(self.nodes.len(), node_id.idx()) as u32)
+                    let me = node_id.idx();
+                    if self.dead.iter().any(|&d| d) {
+                        let live: Vec<usize> = (0..self.nodes.len())
+                            .filter(|&i| i != me && !self.dead[i])
+                            .collect();
+                        if live.is_empty() {
+                            None
+                        } else {
+                            let k = self.rng.below(live.len() as u64) as usize;
+                            Some(NodeId(live[k] as u32))
+                        }
+                    } else {
+                        Some(NodeId(self.rng.pick_other(self.nodes.len(), me) as u32))
+                    }
                 }
                 VictimSelect::Targeted => {
                     // Fallback win per stolen task = the thief's own
@@ -755,31 +848,34 @@ impl Simulator {
                         node.tasks_done,
                         node.remote_avg_us,
                     );
-                    NodeId(self.nodes[node_id.idx()].victim_sel.pick(fallback) as u32)
+                    let pick = self.nodes[node_id.idx()].victim_sel.pick(fallback);
+                    Some(NodeId(pick as u32))
                 }
             };
-            let req = {
-                let node = &mut self.nodes[node_id.idx()];
-                node.inflight_steals += 1;
-                node.steal.requests_sent += 1;
-                let req = steal_req_id(node_id.0, node.next_req);
-                node.next_req += 1;
-                node.pending_steals
-                    .insert(req, SimPendingSteal { victim, attempt: 0 });
-                req
-            };
-            self.send_steal_msg(
-                node_id,
-                victim,
-                FaultClass::Request,
-                16,
-                SimMsg::StealRequest {
-                    thief: node_id,
-                    req,
-                },
-            );
-            if self.cfg.faults.enabled {
-                self.arm_steal_timeout(node_id, req, 0);
+            if let Some(victim) = victim {
+                let req = {
+                    let node = &mut self.nodes[node_id.idx()];
+                    node.inflight_steals += 1;
+                    node.steal.requests_sent += 1;
+                    let req = steal_req_id(node_id.0, node.next_req);
+                    node.next_req += 1;
+                    node.pending_steals
+                        .insert(req, SimPendingSteal { victim, attempt: 0 });
+                    req
+                };
+                self.send_steal_msg(
+                    node_id,
+                    victim,
+                    FaultClass::Request,
+                    16,
+                    SimMsg::StealRequest {
+                        thief: node_id,
+                        req,
+                    },
+                );
+                if self.cfg.faults.enabled {
+                    self.arm_steal_timeout(node_id, req, 0);
+                }
             }
         }
         // Keep polling while the node still has any reason to act: the
@@ -887,6 +983,20 @@ impl Simulator {
         self.send_steal_msg(victim_id, thief, FaultClass::Reply, reply_bytes, msg);
     }
 
+    /// Permanently quarantine `victim` in `node`'s targeted selector and
+    /// record it once in the per-victim telemetry (the `/q` marker both
+    /// runtimes print). Idempotent: quarantine never decays, so only the
+    /// first record per victim counts.
+    fn quarantine(&mut self, node_ix: usize, victim_ix: usize) {
+        let node = &mut self.nodes[node_ix];
+        if node.victim_sel.is_quarantined(victim_ix) {
+            return;
+        }
+        node.victim_sel
+            .record(victim_ix, VictimOutcome::Quarantined, None);
+        node.victim_quarantined[victim_ix] += 1;
+    }
+
     fn on_steal_reply(
         &mut self,
         node_id: NodeId,
@@ -898,6 +1008,28 @@ impl Simulator {
     ) {
         let graph = self.graph.clone();
         let granted = !tasks.is_empty();
+        if granted
+            && self.dead[victim.idx()]
+            && !self.nodes[node_id.idx()].resolved_steals.contains_key(&req)
+        {
+            // A grant whose victim has since crashed is refused: the
+            // durable copy of these tasks is the entry parked in the
+            // dead node's transfer ledger, which the recovery sweep
+            // re-homes — absorbing the in-flight copy too would run
+            // them twice. Resolve the request as abandoned (the sweep's
+            // probe reads exactly this verdict) and quarantine the
+            // victim so the thief never solicits it again.
+            let node = &mut self.nodes[node_id.idx()];
+            node.pending_steals.remove(&req);
+            node.resolved_steals
+                .insert(req, SimStealResolution::Abandoned);
+            node.inflight_steals = node.inflight_steals.saturating_sub(1);
+            node.steal_timeouts += 1;
+            node.victim_timeouts[victim.idx()] += 1;
+            self.quarantine(node_id.idx(), victim.idx());
+            self.ensure_poll(node_id);
+            return;
+        }
         if self.cfg.faults.enabled {
             // Settle the request id exactly once: duplicated or late
             // replies only repeat the handshake verdict, never the
@@ -1047,19 +1179,24 @@ impl Simulator {
             }
             node.queue.feedback(StealOutcome::TimedOut);
         }
-        // Nack eagerly: if the victim parked a grant whose reply was
-        // lost, this sends it home without waiting for its ack-timeout.
-        self.send_steal_msg(
-            node_id,
-            p.victim,
-            FaultClass::Ack,
-            16,
-            SimMsg::TransferAck {
-                req,
-                accepted: false,
-            },
-        );
-        if p.attempt < THIEF_RETRY_BUDGET {
+        let dead_victim = self.dead[p.victim.idx()];
+        if !dead_victim {
+            // Nack eagerly: if the victim parked a grant whose reply
+            // was lost, this sends it home without waiting for its
+            // ack-timeout. A dead victim's ledger is swept by the
+            // recovery pass instead — no point nacking a corpse.
+            self.send_steal_msg(
+                node_id,
+                p.victim,
+                FaultClass::Ack,
+                16,
+                SimMsg::TransferAck {
+                    req,
+                    accepted: false,
+                },
+            );
+        }
+        if !dead_victim && p.attempt < THIEF_RETRY_BUDGET {
             let new_req = {
                 let node = &mut self.nodes[node_id.idx()];
                 let new_req = steal_req_id(node_id.0, node.next_req);
@@ -1087,6 +1224,12 @@ impl Simulator {
             );
             self.arm_steal_timeout(node_id, new_req, p.attempt + 1);
         } else {
+            // Crashed victim, or the whole retry budget spent without a
+            // single reply: quarantine it permanently. This is the fix
+            // for the unbounded-stall liveness caveat — an unresponsive
+            // victim ends in quarantine, never in an infinite retry
+            // (or, victim-side, retransmit) loop.
+            self.quarantine(node_id.idx(), p.victim.idx());
             let node = &mut self.nodes[node_id.idx()];
             node.inflight_steals = node.inflight_steals.saturating_sub(1);
             self.ensure_poll(node_id);
@@ -1094,26 +1237,219 @@ impl Simulator {
     }
 
     /// Victim side of the watchdog: an unacked ledger entry retransmits
-    /// its stored reply verbatim and re-arms with a doubled deadline.
-    /// Retransmits are unbounded — the victim must never unilaterally
-    /// reclaim a grant it cannot prove the thief abandoned (the thief's
-    /// nack is that proof), and the drop-probability cap guarantees an
-    /// ack or nack eventually lands.
+    /// its stored reply verbatim and re-arms with a doubled deadline —
+    /// but not forever. Once [`ACK_PROBE_BUDGET`] retransmits are spent,
+    /// or immediately when the thief has crashed, the victim settles the
+    /// entry from the thief's own resolution book (the one place the
+    /// omniscient DES — like the threaded shared-memory fabric — stands
+    /// in for a real network's connection-reset signal): an absorbed
+    /// grant retires the entry, anything else is marked abandoned at the
+    /// thief and the tasks come home through the nack-reclaim path.
+    /// This closes the PR 7 liveness caveat — a thief that never acks
+    /// (permanent stall window, or a crash) can no longer pin its
+    /// victim in an unbounded retransmit loop.
     fn on_ack_timeout(&mut self, victim_id: NodeId, req: u64) {
-        let Some((thief, reply, bytes, attempt)) = ({
-            self.nodes[victim_id.idx()].ledger.get_mut(&req).map(|e| {
-                e.attempt += 1;
-                (e.thief, e.reply.clone(), e.reply_bytes, e.attempt)
-            })
-        }) else {
-            return; // acked (or reclaimed) in the meantime
+        let (thief, attempt, settle) = {
+            let Some(e) = self.nodes[victim_id.idx()].ledger.get(&req) else {
+                return; // acked (or reclaimed) in the meantime
+            };
+            let settle = self.dead[e.thief.idx()] || e.attempt >= ACK_PROBE_BUDGET;
+            (e.thief, e.attempt, settle)
+        };
+        if settle {
+            let resolved = self.nodes[thief.idx()].resolved_steals.get(&req);
+            let absorbed = matches!(resolved, Some(SimStealResolution::AckedGrant));
+            let Some(entry) = self.nodes[victim_id.idx()].ledger.remove(&req) else {
+                return;
+            };
+            self.ledger_total -= entry.tasks.len() as u64;
+            if absorbed {
+                // The thief enqueued the tasks; only its ack was lost.
+                return;
+            }
+            {
+                // Abandon the request at the thief so a late reply copy
+                // or its own watchdog cannot resurrect it, and release
+                // the inflight slot its retry loop was holding.
+                let tnode = &mut self.nodes[thief.idx()];
+                if tnode.pending_steals.remove(&req).is_some() {
+                    tnode.inflight_steals = tnode.inflight_steals.saturating_sub(1);
+                }
+                tnode
+                    .resolved_steals
+                    .insert(req, SimStealResolution::Abandoned);
+            }
+            let graph = self.graph.clone();
+            {
+                let node = &mut self.nodes[victim_id.idx()];
+                node.ledger_reclaims += 1;
+                let batch = TaskMeta::batch_of(graph.as_ref(), &entry.tasks);
+                node.queue.insert_batch_at(BatchSite::GateDenial, &batch);
+            }
+            self.dispatch(victim_id);
+            self.ensure_poll(victim_id);
+            return;
+        }
+        let (reply, bytes) = {
+            let Some(e) = self.nodes[victim_id.idx()].ledger.get_mut(&req) else {
+                return;
+            };
+            e.attempt += 1;
+            (e.reply.clone(), e.reply_bytes)
         };
         self.send_steal_msg(victim_id, thief, FaultClass::Reply, bytes, reply);
-        self.arm_ack_timeout(victim_id, req, attempt);
+        self.arm_ack_timeout(victim_id, req, attempt + 1);
+    }
+
+    /// The crash instant: the node falls silent. Its queued events are
+    /// discarded as they pop and its unfinished work stays frozen in
+    /// place until the recovery sweep one detection latency later — the
+    /// threaded leader's heartbeat threshold, reused verbatim so both
+    /// runtimes model the same detection delay.
+    fn on_crash(&mut self, node_id: NodeId) {
+        if self.dead[node_id.idx()] {
+            return;
+        }
+        self.dead[node_id.idx()] = true;
+        self.recovery.nodes_crashed += 1;
+        let detect = suspicion_timeout_us(
+            self.cfg.link.latency_us,
+            self.cfg.link.bw_bytes_per_us,
+            self.migrate.migrate_overhead_us,
+            self.migrate.poll_interval_us,
+        );
+        self.recovery.detect_latency_us = detect;
+        self.push_event(self.now_us + detect, EventKind::Recover { node: node_id });
+    }
+
+    /// Detection + ring repair + lineage recovery, compressed into one
+    /// deterministic sweep (the DES is omniscient; the threaded runtime
+    /// spreads the same steps across the heartbeat detector, the Safra
+    /// splice and the leader's re-injection loop):
+    ///
+    /// 1. quarantine the dead node at every live selector (membership);
+    /// 2. re-home its ready queue, executing set and unabsorbed
+    ///    transfer-ledger grants onto the rehash survivor;
+    /// 3. reclaim grants parked *for* the dead thief at live victims;
+    /// 4. replay its partial activation state and the orphaned in-flight
+    ///    activations at the survivor's tracker.
+    fn on_recover(&mut self, node_id: NodeId) {
+        let d = node_id.idx();
+        debug_assert!(self.dead[d] && !self.swept[d]);
+        self.swept[d] = true;
+        self.recovery.nodes_suspected += 1;
+        self.recovery.ring_repairs += 1;
+        let target = self.route(node_id);
+        if target == node_id {
+            return; // no live survivor (unreachable: node 0 never crashes)
+        }
+        let graph = self.graph.clone();
+        for i in 0..self.nodes.len() {
+            if i != d && !self.dead[i] {
+                self.quarantine(i, d);
+            }
+        }
+        // Ready queue first (dependencies already satisfied: direct
+        // re-enqueue, no tracker replay), then the executing set —
+        // sorted, HashSet iteration order is not deterministic.
+        let mut ready = self.nodes[d].queue.drain();
+        let mut executing: Vec<TaskDesc> = self.nodes[d].executing.drain().collect();
+        executing.sort_unstable();
+        ready.extend(executing);
+        self.nodes[d].executing_local_succ = 0;
+        self.nodes[d].idle_workers = self.cfg.workers_per_node;
+        // The dead victim's transfer ledger: a grant its thief provably
+        // absorbed is settled (the tasks run over there); anything else
+        // exists only here and is re-homed with the queue.
+        let mut reqs: Vec<u64> = self.nodes[d].ledger.keys().copied().collect();
+        reqs.sort_unstable();
+        for req in reqs {
+            let Some(entry) = self.nodes[d].ledger.remove(&req) else {
+                continue;
+            };
+            self.ledger_total -= entry.tasks.len() as u64;
+            let resolved = self.nodes[entry.thief.idx()].resolved_steals.get(&req);
+            let absorbed = matches!(resolved, Some(SimStealResolution::AckedGrant));
+            if !absorbed {
+                ready.extend(entry.tasks);
+            }
+        }
+        // Grants parked at live victims for the dead thief: absorbed
+        // ones were already recovered with the dead queue above; the
+        // rest come home through the nack-reclaim path.
+        for i in 0..self.nodes.len() {
+            if i == d || self.dead[i] {
+                continue;
+            }
+            let mut reqs: Vec<u64> = self.nodes[i]
+                .ledger
+                .iter()
+                .filter(|(_, e)| e.thief == node_id)
+                .map(|(r, _)| *r)
+                .collect();
+            reqs.sort_unstable();
+            let mut reclaimed = false;
+            for req in reqs {
+                let Some(entry) = self.nodes[i].ledger.remove(&req) else {
+                    continue;
+                };
+                self.ledger_total -= entry.tasks.len() as u64;
+                let resolved = self.nodes[d].resolved_steals.get(&req);
+                let absorbed = matches!(resolved, Some(SimStealResolution::AckedGrant));
+                if !absorbed {
+                    let node = &mut self.nodes[i];
+                    node.ledger_reclaims += 1;
+                    let batch = TaskMeta::batch_of(graph.as_ref(), &entry.tasks);
+                    node.queue.insert_batch_at(BatchSite::GateDenial, &batch);
+                    reclaimed = true;
+                }
+            }
+            if reclaimed {
+                self.dispatch(NodeId(i as u32));
+                self.ensure_poll(NodeId(i as u32));
+            }
+        }
+        // The dead thief's own outstanding requests: live victims settle
+        // them from its resolution book (the probe path), so the slots
+        // are simply released; its watchdog events die at the pop.
+        self.nodes[d].pending_steals.clear();
+        self.nodes[d].inflight_steals = 0;
+        if !ready.is_empty() {
+            let batch = TaskMeta::batch_of(graph.as_ref(), &ready);
+            self.nodes[target.idx()]
+                .queue
+                .insert_batch_at(BatchSite::Other, &batch);
+        }
+        // Partial activation state replays as `satisfied` activations at
+        // the survivor's tracker (its lazy in-degree init reproduces the
+        // dead tracker's counts exactly); the remaining edges arrive
+        // there later through post-recovery re-routing.
+        let partial = self.nodes[d].tracker.drain_partial(graph.as_ref());
+        // `tasks_recovered` counts every task the sweep re-homed: ready
+        // and executing work re-enqueued directly, unabsorbed ledger
+        // grants, and partially-activated tasks whose lineage replays.
+        self.recovery.tasks_recovered += (ready.len() + partial.len()) as u64;
+        for (task, satisfied) in partial {
+            for _ in 0..satisfied {
+                self.activate_at(target, task);
+            }
+        }
+        // Activations that were in flight to the dead node land last.
+        let orphans = std::mem::take(&mut self.orphans);
+        if !orphans.is_empty() {
+            self.activate_batch_at(target, &orphans);
+        }
+        self.dispatch(target);
+        self.ensure_poll(target);
     }
 
     /// Run to completion and produce the report.
     pub fn run(mut self) -> RunReport {
+        // Arm the crash schedule, if any: one event, zero when the plan
+        // has no crash spec — default-off heaps are byte-identical.
+        if let Some((node, at_us)) = self.crash {
+            self.push_event(at_us, EventKind::Crash { node: NodeId(node) });
+        }
         // Seed roots.
         for root in self.graph.roots() {
             let owner = self.graph.owner(root);
@@ -1138,6 +1474,21 @@ impl Simulator {
                     self.cfg.max_events
                 );
             }
+            // A dead node's own events die at the pop: it finishes
+            // nothing, polls nothing, and its watchdogs are settled by
+            // the recovery sweep and the survivors' probe paths.
+            let owner = match &ev.kind {
+                EventKind::Finish { node, .. }
+                | EventKind::Poll { node }
+                | EventKind::StealTimeout { node, .. }
+                | EventKind::AckTimeout { node, .. } => Some(*node),
+                _ => None,
+            };
+            if let Some(owner) = owner {
+                if self.dead[owner.idx()] {
+                    continue;
+                }
+            }
             match ev.kind {
                 EventKind::Finish {
                     node,
@@ -1149,6 +1500,42 @@ impl Simulator {
                 }
                 EventKind::Deliver { dst, msg } => {
                     self.deliver_events += 1;
+                    if self.dead[dst.idx()] {
+                        match msg {
+                            // Activations survive the crash: orphaned
+                            // into the graveyard inside the detection
+                            // window, re-routed to the rehash survivor
+                            // after the sweep.
+                            SimMsg::Activate(t) => {
+                                self.activate_in_flight -= 1;
+                                if self.swept[dst.idx()] {
+                                    let target = self.route(dst);
+                                    self.activate_at(target, t);
+                                } else {
+                                    self.orphans.push(t);
+                                }
+                            }
+                            SimMsg::ActivateBatch(tasks) => {
+                                self.activate_in_flight -= 1;
+                                if self.swept[dst.idx()] {
+                                    let target = self.route(dst);
+                                    self.activate_batch_at(target, &tasks);
+                                } else {
+                                    self.orphans.extend(tasks);
+                                }
+                            }
+                            // Steal traffic to the dead is dropped:
+                            // requests go unanswered (the thief's
+                            // watchdog quarantines), a reply's grant
+                            // stays parked in the sender's ledger (the
+                            // probe path settles it), and acks target a
+                            // ledger the sweep already emptied.
+                            SimMsg::StealRequest { .. }
+                            | SimMsg::StealReply { .. }
+                            | SimMsg::TransferAck { .. } => {}
+                        }
+                        continue;
+                    }
                     match msg {
                         SimMsg::Activate(t) => {
                             self.activate_in_flight -= 1;
@@ -1183,6 +1570,8 @@ impl Simulator {
                 EventKind::Poll { node } => self.on_poll(node),
                 EventKind::StealTimeout { node, req } => self.on_steal_timeout(node, req),
                 EventKind::AckTimeout { node, req } => self.on_ack_timeout(node, req),
+                EventKind::Crash { node } => self.on_crash(node),
+                EventKind::Recover { node } => self.on_recover(node),
             }
         }
 
@@ -1212,6 +1601,7 @@ impl Simulator {
             assert!(node.ledger.is_empty(), "node {ix}: transfer-ledger residue");
         }
         assert_eq!(self.ledger_total, 0, "transfer-ledger accounting residue");
+        assert!(self.orphans.is_empty(), "orphaned activations never re-homed");
 
         RunReport {
             workload: self.graph.name().to_string(),
@@ -1223,6 +1613,7 @@ impl Simulator {
             deliver_events: self.deliver_events,
             faults_dropped: self.faults_dropped,
             faults_duplicated: self.faults_duplicated,
+            recovery: self.recovery,
             nodes: self
                 .nodes
                 .into_iter()
@@ -1243,6 +1634,7 @@ impl Simulator {
                     victim_wt_denials: n.victim_wt_denials,
                     victim_empties: n.victim_empties,
                     victim_timeouts: n.victim_timeouts,
+                    victim_quarantined: n.victim_quarantined,
                     steal_timeouts: n.steal_timeouts,
                     steal_retries: n.steal_retries,
                     ledger_reclaims: n.ledger_reclaims,
@@ -1956,6 +2348,9 @@ mod tests {
             drop_reply: 0.9,
             dup_request: 0.9,
             delay_factor: 8.0,
+            crash_node: Some(3),
+            crash_at_us: 5.0,
+            crash_p: 0.9,
             ..FaultPlan::default()
         });
         assert_eq!(a.makespan_us, b.makespan_us);
@@ -2084,6 +2479,114 @@ mod tests {
         .run();
         assert_eq!(r.tasks_total_executed(), size);
         assert!(r.faults_dropped > 0, "in-window steal traffic stalls");
+    }
+
+    /// Crash-stop acceptance in the DES: killing node 2 a third of the
+    /// way through an 8-node Cholesky still executes every task exactly
+    /// once among the survivors — the run-exit asserts prove zero
+    /// ledger/inflight/orphan residue — while the recovery telemetry
+    /// records the detection, the ring repair and the re-homed work,
+    /// and the whole ordeal is deterministic given the seed. All three
+    /// scheduler backends.
+    #[test]
+    fn crash_stop_recovers_exactly_once_on_every_backend() {
+        for sched in SchedBackend::ALL {
+            let run = |faults: FaultPlan| {
+                Simulator::new(
+                    chol(12, 8),
+                    SimConfig {
+                        workers_per_node: 4,
+                        seed: 3,
+                        max_events: 50_000_000,
+                        record_polls: false,
+                        sched,
+                        faults,
+                        ..Default::default()
+                    },
+                    CostModel::default_calibrated(),
+                    MigrateConfig {
+                        poll_interval_us: 20.0,
+                        ..MigrateConfig::default()
+                    },
+                    20,
+                )
+                .run()
+            };
+            let total = chol(12, 8).total_tasks().unwrap();
+            // Calibrate the crash instant off the fault-free makespan so
+            // node 2 is provably mid-run (busy) when it dies.
+            let base = run(FaultPlan::default());
+            assert_eq!(base.tasks_total_executed(), total, "{sched:?}");
+            let mid = (base.makespan_us / 3.0).max(1.0) as u64;
+            let plan: FaultPlan = format!("crash-node=2,crash-at-us={mid}").parse().unwrap();
+            let a = run(plan);
+            assert_eq!(a.tasks_total_executed(), total, "{sched:?}: exactly once");
+            assert_eq!(a.recovery.nodes_crashed, 1, "{sched:?}");
+            assert_eq!(a.recovery.nodes_suspected, 1, "{sched:?}");
+            assert_eq!(a.recovery.ring_repairs, 1, "{sched:?}");
+            assert!(
+                a.recovery.tasks_recovered > 0,
+                "{sched:?}: a mid-run crash must strand work to re-home"
+            );
+            assert!(
+                a.recovery.detect_latency_us > 0.0,
+                "{sched:?}: detection latency is modeled, not free"
+            );
+            assert!(
+                a.makespan_us > base.makespan_us,
+                "{sched:?}: losing an eighth of the cluster cannot be free"
+            );
+            // Every survivor quarantined the corpse exactly once.
+            for (ix, n) in a.nodes.iter().enumerate() {
+                if ix != 2 {
+                    assert_eq!(n.victim_quarantined[2], 1, "{sched:?} node {ix}");
+                }
+            }
+            let b = run(plan);
+            assert_eq!(a.makespan_us, b.makespan_us, "{sched:?}: deterministic");
+            assert_eq!(a.events, b.events, "{sched:?}");
+            assert_eq!(a.recovery.tasks_recovered, b.recovery.tasks_recovered, "{sched:?}");
+        }
+    }
+
+    /// The PR 7 liveness caveat, closed: a *permanent* stall window
+    /// (node 1's steal traffic black-holed from 2 ms onward, with no
+    /// end) used to pin victims whose granted reply crossed the window
+    /// edge in an unbounded ack-retransmit loop — this regression test
+    /// previously could not terminate. The probe budget now settles
+    /// every parked grant from the thief's own book, so the run drains.
+    #[test]
+    fn permanent_stall_settles_via_probe_budget() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 20_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let r = Simulator::new(
+            g,
+            SimConfig {
+                workers_per_node: 4,
+                seed: 3,
+                max_events: 50_000_000,
+                record_polls: false,
+                faults: "slow-node=1,slow-from-us=2000,stall".parse().unwrap(),
+                ..Default::default()
+            },
+            CostModel::default_calibrated(),
+            MigrateConfig {
+                poll_interval_us: 20.0,
+                ..MigrateConfig::default()
+            },
+            20,
+        )
+        .run();
+        assert_eq!(r.tasks_total_executed(), size, "exactly once despite the stall");
+        assert!(r.faults_dropped > 0, "the permanent window must bite");
     }
 
     #[test]

@@ -9,6 +9,21 @@
 //! a token circulates when nodes are passive, accumulating deficits.
 //! The leader announces termination when a white token returns with a
 //! zero global deficit to a white, passive leader.
+//!
+//! # Crash-stop repair
+//!
+//! Since PR 9 the deficit is kept *per peer* rather than as one scalar,
+//! and each node carries a live-set over the ring. [`SafraState::deficit`]
+//! sums only over live peers, so [`SafraState::declare_dead`] reconciles
+//! a dead node's unresolved message deficit by construction: sends to it
+//! and receives from it simply stop counting, however late the caller
+//! learns about the death (a send to a peer that is *later* declared
+//! dead is excluded retroactively — there is no reconciliation race).
+//! The ring splices around dead members ([`SafraState::next`] skips
+//! them), any parked token from the pre-repair era is discarded, and the
+//! leader regenerates the probe in a fresh round; stale in-flight tokens
+//! from before the repair are recognized by their round number when they
+//! return to the leader and dropped.
 
 use crate::dataflow::task::NodeId;
 
@@ -25,7 +40,8 @@ pub struct SafraToken {
     pub color: Color,
     /// Sum of message deficits accumulated so far this round.
     pub count: i64,
-    /// Probe round (diagnostics only).
+    /// Probe round; the leader uses it to discard tokens that predate a
+    /// ring repair (otherwise diagnostics only).
     pub round: u64,
 }
 
@@ -34,13 +50,18 @@ pub struct SafraToken {
 pub struct SafraState {
     me: NodeId,
     num_nodes: usize,
-    /// basic messages sent − received at this node
-    deficit: i64,
+    /// Basic messages sent to / received from each peer. The deficit is
+    /// computed over live peers only — see the module docs.
+    sent_to: Vec<i64>,
+    recv_from: Vec<i64>,
+    live: Vec<bool>,
     color: Color,
     /// Token parked here until the node goes passive.
     held: Option<SafraToken>,
     /// Leader only: number of probe rounds initiated.
     rounds: u64,
+    /// Ring repairs performed (peers declared dead).
+    repairs: u64,
 }
 
 /// What the caller must do after a state transition.
@@ -59,31 +80,68 @@ impl SafraState {
         SafraState {
             me,
             num_nodes,
-            deficit: 0,
+            sent_to: vec![0; num_nodes],
+            recv_from: vec![0; num_nodes],
+            live: vec![true; num_nodes],
             color: Color::White,
             held: None,
             rounds: 0,
+            repairs: 0,
         }
     }
 
+    /// Next *live* node clockwise on the ring (self if alone).
     fn next(&self) -> NodeId {
-        NodeId(((self.me.idx() + 1) % self.num_nodes) as u32)
+        let mut i = (self.me.idx() + 1) % self.num_nodes;
+        while !self.live[i] && i != self.me.idx() {
+            i = (i + 1) % self.num_nodes;
+        }
+        NodeId(i as u32)
     }
 
     pub fn is_leader(&self) -> bool {
         self.me.idx() == 0
     }
 
+    fn num_live(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn is_live(&self, peer: NodeId) -> bool {
+        self.live[peer.idx()]
+    }
+
     /// Call on every *basic* message send.
-    pub fn on_send(&mut self) {
-        self.deficit += 1;
+    pub fn on_send(&mut self, dst: NodeId) {
+        self.sent_to[dst.idx()] += 1;
     }
 
     /// Call on every *basic* message receive. Receiving makes the node
     /// black: it may have been re-activated after the token passed.
-    pub fn on_receive(&mut self) {
-        self.deficit -= 1;
+    pub fn on_receive(&mut self, src: NodeId) {
+        self.recv_from[src.idx()] += 1;
         self.color = Color::Black;
+    }
+
+    /// Splice `peer` out of the ring and reconcile its deficit: counted
+    /// sends to it and receives from it stop contributing (the per-peer
+    /// ledgers make this retroactive, so a racing send that was counted
+    /// just before the declaration is excluded too). Any parked token is
+    /// from the pre-repair era and is discarded — the leader regenerates
+    /// the probe in a new round on its normal cadence.
+    pub fn declare_dead(&mut self, peer: NodeId) {
+        let p = peer.idx();
+        if p == self.me.idx() || !self.live[p] {
+            return;
+        }
+        self.live[p] = false;
+        self.repairs += 1;
+        self.held = None;
+        if self.is_leader() {
+            // Era bump: tokens launched before the repair carry a stale
+            // round and die on return (see `try_forward`).
+            self.rounds += 1;
+        }
     }
 
     /// Call when the token arrives. The token is parked until the node is
@@ -97,8 +155,8 @@ impl SafraState {
     /// holding/waiting on a token round).
     pub fn leader_start_probe(&mut self, passive: bool) -> SafraAction {
         debug_assert!(self.is_leader());
-        if !passive || self.held.is_some() || self.num_nodes == 1 {
-            if self.num_nodes == 1 && passive && self.deficit == 0 {
+        if !passive || self.held.is_some() || self.num_live() == 1 {
+            if self.num_live() == 1 && passive && self.deficit() == 0 {
                 return SafraAction::Terminate;
             }
             return SafraAction::None;
@@ -127,11 +185,16 @@ impl SafraState {
             return SafraAction::None;
         };
         if self.is_leader() {
-            // Round completed.
             self.held = None;
+            if tok.round != self.rounds {
+                // A token launched before a ring repair: its count mixes
+                // contributions from an era with a different membership.
+                // Drop it; the next probe uses the repaired ring.
+                return SafraAction::None;
+            }
             if tok.color == Color::White
                 && self.color == Color::White
-                && tok.count + self.deficit == 0
+                && tok.count + self.deficit() == 0
             {
                 // Token accumulated every other node's deficit; adding the
                 // leader's *current* deficit closes the global sum — zero
@@ -144,7 +207,7 @@ impl SafraState {
             self.rounds += 1;
             let token = SafraToken {
                 color: Color::White,
-                count: self.deficit,
+                count: self.deficit(),
                 round: self.rounds,
             };
             return SafraAction::Forward(self.next(), token);
@@ -161,18 +224,27 @@ impl SafraState {
             self.next(),
             SafraToken {
                 color,
-                count: tok.count + self.deficit,
+                count: tok.count + self.deficit(),
                 round: tok.round,
             },
         )
     }
 
+    /// This node's message deficit over *live* peers.
     pub fn deficit(&self) -> i64 {
-        self.deficit
+        (0..self.num_nodes)
+            .filter(|&p| self.live[p])
+            .map(|p| self.sent_to[p] - self.recv_from[p])
+            .sum()
     }
 
     pub fn rounds(&self) -> u64 {
         self.rounds
+    }
+
+    /// Ring repairs this node has performed (peers spliced out).
+    pub fn repairs(&self) -> u64 {
+        self.repairs
     }
 }
 
@@ -180,13 +252,34 @@ impl SafraState {
 mod tests {
     use super::*;
 
+    fn ring(n: usize) -> Vec<SafraState> {
+        (0..n).map(|i| SafraState::new(NodeId(i as u32), n)).collect()
+    }
+
+    /// Run the ring until termination or `max` hops; returns whether the
+    /// leader terminated. Every node is treated as permanently passive.
+    fn settle(nodes: &mut [SafraState], max: usize) -> bool {
+        let mut action = nodes[0].leader_start_probe(true);
+        for _ in 0..max {
+            match action {
+                SafraAction::Forward(dst, tok) => {
+                    action = nodes[dst.idx()].on_token(tok, true);
+                }
+                SafraAction::Terminate => return true,
+                SafraAction::None => {
+                    action = nodes[0].leader_start_probe(true);
+                }
+            }
+        }
+        false
+    }
+
     /// Drive a full ring by hand: `n` nodes, no traffic -> terminates in
     /// at most two rounds.
     #[test]
     fn quiet_ring_terminates() {
         let n = 4;
-        let mut nodes: Vec<SafraState> =
-            (0..n).map(|i| SafraState::new(NodeId(i as u32), n)).collect();
+        let mut nodes = ring(n);
         let mut action = nodes[0].leader_start_probe(true);
         let mut hops = 0;
         loop {
@@ -205,10 +298,9 @@ mod tests {
     #[test]
     fn in_flight_message_defers_termination() {
         let n = 3;
-        let mut nodes: Vec<SafraState> =
-            (0..n).map(|i| SafraState::new(NodeId(i as u32), n)).collect();
-        // node 1 has sent a message that nobody received yet
-        nodes[1].on_send();
+        let mut nodes = ring(n);
+        // node 1 has sent a message to node 2 that nobody received yet
+        nodes[1].on_send(NodeId(2));
         let mut action = nodes[0].leader_start_probe(true);
         let mut forwards = 0;
         // run the ring for a while: must never terminate
@@ -223,22 +315,8 @@ mod tests {
             }
         }
         // deliver the message: receiver goes black, deficits cancel
-        nodes[2].on_receive();
-        let mut action = nodes[0].leader_start_probe(true);
-        let mut terminated = false;
-        for _ in 0..30 {
-            match action {
-                SafraAction::Forward(dst, tok) => {
-                    action = nodes[dst.idx()].on_token(tok, true);
-                }
-                SafraAction::Terminate => {
-                    terminated = true;
-                    break;
-                }
-                SafraAction::None => break,
-            }
-        }
-        assert!(terminated, "ring must terminate after traffic settles");
+        nodes[2].on_receive(NodeId(1));
+        assert!(settle(&mut nodes, 30), "ring must terminate after traffic settles");
     }
 
     #[test]
@@ -263,7 +341,99 @@ mod tests {
     fn single_node_terminates_directly() {
         let mut s = SafraState::new(NodeId(0), 1);
         assert_eq!(s.leader_start_probe(true), SafraAction::Terminate);
-        s.on_send();
+        s.on_send(NodeId(0));
         assert_eq!(s.leader_start_probe(true), SafraAction::None);
+    }
+
+    /// Ring repair with one dead node: the dead peer's unresolved
+    /// deficit (sends to it that it never matched, receives from it that
+    /// the survivors counted) reconciles to zero and the spliced ring
+    /// terminates.
+    #[test]
+    fn ring_repair_reconciles_one_dead_node() {
+        let n = 4;
+        let mut nodes = ring(n);
+        // Traffic involving the doomed node 2, unmatched at crash time:
+        // 0 sent it two messages it processed (its recv ledger dies with
+        // it), it sent 1 a message that 1 received (1's recv counted),
+        // and 3 sent it a message still in flight.
+        nodes[0].on_send(NodeId(2));
+        nodes[0].on_send(NodeId(2));
+        nodes[1].on_receive(NodeId(2));
+        nodes[3].on_send(NodeId(2));
+        // Without the repair the global deficit is permanently positive:
+        // the ring can never terminate.
+        assert!(!settle(&mut nodes, 40));
+        // Node 2 crash-stops; every survivor splices it out.
+        for i in [0usize, 1, 3] {
+            nodes[i].declare_dead(NodeId(2));
+            assert_eq!(nodes[i].repairs(), 1);
+        }
+        assert_eq!(nodes[0].deficit(), 0);
+        assert_eq!(nodes[1].deficit(), 0);
+        assert_eq!(nodes[3].deficit(), 0);
+        assert!(settle(&mut nodes, 40), "spliced ring must terminate");
+        // The ring now hops 0 -> 1 -> 3 -> 0.
+        match nodes[1].on_token(
+            SafraToken {
+                color: Color::White,
+                count: 0,
+                round: nodes[0].rounds(),
+            },
+            true,
+        ) {
+            SafraAction::Forward(dst, _) => assert_eq!(dst, NodeId(3)),
+            other => panic!("expected forward past the dead node, got {other:?}"),
+        }
+    }
+
+    /// Two dead nodes, declared at different times, with a late racing
+    /// send to an already-declared peer: the per-peer ledgers make the
+    /// reconciliation retroactive, so the ring still terminates.
+    #[test]
+    fn ring_repair_reconciles_two_dead_nodes() {
+        let n = 5;
+        let mut nodes = ring(n);
+        nodes[1].on_send(NodeId(2));
+        nodes[3].on_send(NodeId(4));
+        nodes[0].on_receive(NodeId(4));
+        for i in [0usize, 1, 3] {
+            nodes[i].declare_dead(NodeId(2));
+        }
+        // A racing send counted *after* the declaration: excluded
+        // retroactively because the deficit is computed per peer.
+        nodes[1].on_send(NodeId(2));
+        assert_eq!(nodes[1].deficit(), 0);
+        for i in [0usize, 1, 3] {
+            nodes[i].declare_dead(NodeId(4));
+            assert_eq!(nodes[i].repairs(), 2);
+        }
+        assert_eq!(nodes[0].deficit(), 0);
+        assert_eq!(nodes[3].deficit(), 0);
+        assert!(settle(&mut nodes, 60), "doubly spliced ring must terminate");
+        // Survivor-to-survivor traffic still counts normally.
+        nodes[1].on_send(NodeId(3));
+        assert!(!settle(&mut nodes, 40));
+        nodes[3].on_receive(NodeId(1));
+        assert!(settle(&mut nodes, 60));
+    }
+
+    /// A token launched before a repair is recognized by its stale round
+    /// number when it returns to the leader and discarded instead of
+    /// being evaluated against the repaired ring.
+    #[test]
+    fn stale_round_token_dies_at_leader() {
+        let n = 3;
+        let mut nodes = ring(n);
+        let SafraAction::Forward(_, tok) = nodes[0].leader_start_probe(true) else {
+            panic!()
+        };
+        // While the token is in flight, node 2 dies and the ring repairs.
+        nodes[0].declare_dead(NodeId(2));
+        nodes[1].declare_dead(NodeId(2));
+        // The stale token eventually finds its way back to the leader.
+        assert_eq!(nodes[0].on_token(tok, true), SafraAction::None);
+        // The next probe terminates on the repaired ring.
+        assert!(settle(&mut nodes, 30));
     }
 }

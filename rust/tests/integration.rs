@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use parsteal::comm::LinkModel;
 use parsteal::dataflow::ttg::TaskGraph;
+use parsteal::faults::FaultPlan;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use parsteal::node::{Cluster, ClusterConfig, NullExecutor, SpinExecutor};
 use parsteal::sched::SchedBackend;
@@ -565,6 +566,103 @@ fn targeted_victim_selection_des_and_threaded_agree() {
                 );
             }
         }
+    }
+}
+
+/// Crash-stop agreement between the runtimes on the acceptance
+/// scenario: an 8-node Cholesky losing one of several swept nodes a
+/// third of the way through its (baseline-measured) makespan. Both
+/// runtimes must still execute the full task set exactly once among
+/// the survivors — the surviving-task totals agree by construction —
+/// each must confirm exactly one crash and one ring splice, and the
+/// DES must replay the same crash schedule bit-identically.
+#[test]
+fn crash_recovery_des_and_threaded_agree() {
+    let g = chol(10, 8);
+    let total = g.total_tasks().unwrap();
+    let mc = MigrateConfig {
+        poll_interval_us: 30.0,
+        ..Default::default()
+    };
+    let sim_run = |faults: FaultPlan| {
+        Simulator::new(
+            g.clone(),
+            SimConfig {
+                workers_per_node: 2,
+                link: LinkModel::cluster(),
+                seed: 4,
+                max_events: u64::MAX,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
+                faults,
+            },
+            CostModel::default_calibrated(),
+            mc,
+            16,
+        )
+        .run()
+    };
+    let g2 = g.clone();
+    let ex = Arc::new(
+        SpinExecutor::new(CostModel::default_calibrated(), 16, move |t| g2.work_units(t))
+            .with_time_scale(0.2),
+    );
+    let real_run = |faults: FaultPlan| {
+        Cluster::run(
+            g.clone(),
+            ClusterConfig {
+                workers_per_node: 2,
+                link: LinkModel::ideal(),
+                migrate: mc,
+                seed: 4,
+                record_polls: false,
+                sched: SchedBackend::Central,
+                batch_activations: true,
+                pool_floor: parsteal::sched::POOL_FLOOR,
+                faults,
+            },
+            ex.clone(),
+        )
+    };
+    // Fault-free baselines pin the crash instant to mid-run on each
+    // runtime's own clock (virtual for the DES, wall for the cluster).
+    let base_sim = sim_run(FaultPlan::default());
+    let base_real = real_run(FaultPlan::default());
+    assert_eq!(base_sim.tasks_total_executed(), total);
+    assert_eq!(base_real.tasks_total_executed(), total);
+    let sim_at = (base_sim.makespan_us / 3.0).max(50.0);
+    let real_at = (base_real.makespan_us / 3.0).max(500.0);
+    for dead in [1u32, 4, 7] {
+        let plan = |at: f64| -> FaultPlan {
+            format!("crash-node={dead},crash-at-us={at:.0}").parse().unwrap()
+        };
+        let sim = sim_run(plan(sim_at));
+        assert_eq!(
+            sim.tasks_total_executed(),
+            total,
+            "dead={dead}: DES exactly once among survivors"
+        );
+        assert_eq!(sim.recovery.nodes_crashed, 1, "dead={dead}: DES crash fired");
+        assert_eq!(sim.recovery.ring_repairs, 1, "dead={dead}: DES ring splice");
+        let replay = sim_run(plan(sim_at));
+        assert_eq!(
+            sim.makespan_us, replay.makespan_us,
+            "dead={dead}: DES crash replay must be bit-identical"
+        );
+        assert_eq!(
+            sim.recovery.tasks_recovered, replay.recovery.tasks_recovered,
+            "dead={dead}: DES recovery is deterministic"
+        );
+        let real = real_run(plan(real_at));
+        assert_eq!(
+            real.tasks_total_executed(),
+            total,
+            "dead={dead}: threaded exactly once among survivors"
+        );
+        assert_eq!(real.recovery.nodes_crashed, 1, "dead={dead}: threaded crash fired");
+        assert_eq!(real.recovery.ring_repairs, 1, "dead={dead}: threaded ring splice");
     }
 }
 

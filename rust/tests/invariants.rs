@@ -637,8 +637,10 @@ fn random_fault_plan(rng: &mut Rng) -> FaultPlan {
         plan.slow_node = Some(rng.below(4) as u32);
         plan.slow_factor = 1.0 + rng.uniform() * 4.0;
         plan.slow_from_us = rng.uniform() * 5_000.0;
-        // Finite by construction: an unbounded stall is a crashed node,
-        // which the protocol (correctly) cannot outwait.
+        // Finite by construction: an unbounded stall reads as a crash
+        // — the detector quarantines the node permanently (covered by
+        // the crash-stop sweep below); this sweep asserts that
+        // *transient* chaos heals without abandoning anyone.
         plan.slow_until_us = plan.slow_from_us + 1_000.0 + rng.uniform() * 20_000.0;
         plan.stall = rng.uniform() < 0.5;
     }
@@ -822,6 +824,9 @@ fn prop_disabled_faults_never_perturb_the_des() {
                 drop_reply: 0.9,
                 dup_request: 0.9,
                 delay_factor: 8.0,
+                crash_node: Some(1),
+                crash_at_us: 50.0,
+                crash_p: 0.9,
                 ..Default::default()
             });
             prop_assert!(
@@ -851,7 +856,10 @@ fn prop_disabled_faults_never_perturb_the_des() {
                     && disabled.steal_timeouts_total() == 0
                     && disabled.steal_retries_total() == 0
                     && disabled.ledger_reclaims_total() == 0
-                    && disabled.dup_replies_suppressed_total() == 0,
+                    && disabled.dup_replies_suppressed_total() == 0
+                    && disabled.recovery.nodes_crashed == 0
+                    && disabled.recovery.nodes_suspected == 0
+                    && disabled.recovery.tasks_recovered == 0,
                 "fault machinery fired on a disabled plan"
             );
             Ok(())
@@ -909,6 +917,17 @@ fn prop_faultplan_label_round_trips() {
                     }
                     p.stall = rng.uniform() < 0.5;
                 }
+                if rng.uniform() < 0.5 {
+                    if rng.uniform() < 0.7 {
+                        p.crash_node = Some(rng.below(8) as u32);
+                    }
+                    if rng.uniform() < 0.7 {
+                        p.crash_at_us = (1 + rng.below(30_000)) as f64;
+                    }
+                    if rng.uniform() < 0.5 {
+                        p.crash_p = (1 + rng.below(99)) as f64 / 100.0;
+                    }
+                }
                 p
             };
             let label = plan.label();
@@ -922,4 +941,89 @@ fn prop_faultplan_label_round_trips() {
             Ok(())
         },
     );
+}
+
+/// Crash-stop property: random Cholesky geometries losing a random
+/// non-leader node at a random instant (sometimes composed with reply
+/// drops) still execute every task exactly once among the survivors,
+/// and the same schedule replayed with the same seed is bit-identical
+/// — recovery is deterministic. A crash past the makespan is a no-op,
+/// so the exactly-once claim holds unconditionally; across the sweep
+/// at least one crash must actually fire and re-home work, or the
+/// windows above are too tame.
+#[test]
+fn prop_crash_recovery_exactly_once_among_survivors() {
+    let mut crashes = 0u64;
+    let mut recovered = 0u64;
+    check(
+        "crash-exactly-once-among-survivors",
+        Config {
+            cases: 12,
+            max_size: 10,
+            seed: 0xC2A54,
+        },
+        |rng, size| {
+            let nodes = 2 + rng.below(6) as u32;
+            let graph = Arc::new(CholeskyGraph::new(CholeskyParams {
+                tiles: 4 + size as u32,
+                tile_size: 16,
+                nodes,
+                dense_fraction: 0.4 + rng.uniform() * 0.4,
+                seed: rng.next_u64(),
+                all_dense: false,
+            }));
+            let total = graph.total_tasks().unwrap();
+            let plan = FaultPlan {
+                enabled: true,
+                crash_node: Some(1 + rng.below(nodes as u64 - 1) as u32),
+                crash_at_us: 50.0 + rng.uniform() * 5_000.0,
+                drop_reply: rng.uniform() * 0.1,
+                ..Default::default()
+            };
+            let mut mc = random_migrate(rng);
+            mc.enabled = true;
+            mc.poll_interval_us = 15.0 + rng.uniform() * 40.0;
+            let seed = rng.next_u64();
+            let run = || {
+                Simulator::new(
+                    graph.clone(),
+                    SimConfig {
+                        workers_per_node: 2,
+                        link: LinkModel::cluster(),
+                        seed,
+                        max_events: 200_000_000,
+                        record_polls: false,
+                        sched: SchedBackend::Central,
+                        batch_activations: true,
+                        pool_floor: 2,
+                        faults: plan,
+                    },
+                    CostModel::default_calibrated(),
+                    mc,
+                    16,
+                )
+                .run()
+            };
+            let r = run();
+            prop_assert!(
+                r.tasks_total_executed() == total,
+                "plan '{}': executed {} of {total}",
+                plan.label(),
+                r.tasks_total_executed()
+            );
+            let replay = run();
+            prop_assert!(
+                replay.makespan_us == r.makespan_us
+                    && replay.recovery.nodes_crashed == r.recovery.nodes_crashed
+                    && replay.recovery.tasks_recovered == r.recovery.tasks_recovered
+                    && replay.recovery.ring_repairs == r.recovery.ring_repairs,
+                "same crash schedule, divergent replay"
+            );
+            crashes += r.recovery.nodes_crashed;
+            recovered += r.recovery.tasks_recovered;
+            Ok(())
+        },
+    );
+    assert!(crashes > 0, "no crash ever fired across the sweep");
+    assert!(recovered > 0, "no task was ever re-homed across the sweep");
 }
