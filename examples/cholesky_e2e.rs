@@ -21,14 +21,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use parsteal::comm::LinkModel;
 use parsteal::dataflow::data::TileStore;
 use parsteal::dataflow::ttg::TaskGraph;
 use parsteal::migrate::MigrateConfig;
 use parsteal::node::{Cluster, ClusterConfig, TaskExecutor};
 use parsteal::runtime::executor::build_tile_store;
 use parsteal::runtime::{CpuCholeskyExecutor, KernelService, PjrtCholeskyExecutor};
-use parsteal::sched::SchedBackend;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
 
 /// Either kernel backend, with the same verify surface.
@@ -115,24 +113,15 @@ fn main() -> anyhow::Result<()> {
         let t0 = Instant::now();
         let report = Cluster::run(
             graph.clone(),
-            ClusterConfig {
-                workers_per_node: workers,
-                link: LinkModel::ideal(),
-                migrate: if steal {
-                    MigrateConfig {
-                        poll_interval_us: 100.0,
-                        ..Default::default()
-                    }
+            ClusterConfig::default()
+                .with_workers_per_node(workers)
+                .with_migrate(if steal {
+                    MigrateConfig::default()
                 } else {
                     MigrateConfig::disabled()
-                },
-                seed: 2,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+                })
+                .with_seed(2)
+                .with_record_polls(false),
             ex.executor(),
         );
         let wall = t0.elapsed().as_secs_f64();

@@ -10,10 +10,9 @@
 
 use std::sync::Arc;
 
-use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::TaskClass;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
-use parsteal::sched::{BatchSite, POOL_FLOOR, SchedBackend};
+use parsteal::sched::{BatchSite, SchedBackend};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::stats::Summary;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
@@ -57,17 +56,11 @@ fn main() {
     let run = |migrate: MigrateConfig, seed: u64, sched: SchedBackend| {
         Simulator::new(
             graph(),
-            SimConfig {
-                workers_per_node: 8,
-                link: LinkModel::cluster(),
-                seed,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched,
-                batch_activations: true,
-                pool_floor: POOL_FLOOR,
-                faults: Default::default(),
-            },
+            SimConfig::default()
+                .with_workers_per_node(8)
+                .with_seed(seed)
+                .with_record_polls(false)
+                .with_sched(sched),
             CostModel::default_calibrated(),
             migrate,
             50,
@@ -102,19 +95,10 @@ fn main() {
                 VictimPolicy::Half,
             ] {
                 for gate in [false, true] {
-                    let mc = MigrateConfig {
-                        enabled: true,
-                        thief,
-                        victim,
-                        use_waiting_time: gate,
-                        poll_interval_us: 100.0,
-                        max_inflight: 1,
-                        migrate_overhead_us: 150.0,
-                        exec_ewma: false,
-                        exec_per_class: false,
-                        share_estimates: false,
-                        victim_select: VictimSelect::Uniform,
-                    };
+                    let mc = MigrateConfig::default()
+                        .with_thief(thief)
+                        .with_victim(victim)
+                        .with_use_waiting_time(gate);
                     let mut times = Vec::new();
                     let mut pct = 0.0;
                     for s in 0..seeds {
@@ -150,10 +134,7 @@ fn main() {
         println!("[{}] batched inserts: {batches}", sched.label());
         // One composition-aware run: the per-class estimate snapshot the
         // --exec-per-class gate runs on (POTRF vs GEMM should differ).
-        let mc = MigrateConfig {
-            exec_per_class: true,
-            ..MigrateConfig::default()
-        };
+        let mc = MigrateConfig::default().with_exec_per_class(true);
         let r = run(mc, 100, sched);
         let est = r.class_est_us_max();
         let classes = TaskClass::ALL
@@ -166,11 +147,9 @@ fn main() {
         // …and one estimate-sharing run: how much victim knowledge the
         // steal replies carried, per node (merged digests / cold-class
         // adoptions — a node that stole nothing shows 0/0).
-        let mc = MigrateConfig {
-            exec_per_class: true,
-            share_estimates: true,
-            ..MigrateConfig::default()
-        };
+        let mc = MigrateConfig::default()
+            .with_exec_per_class(true)
+            .with_share_estimates(true);
         let r = run(mc, 100, sched);
         let per_node = r
             .nodes
@@ -192,11 +171,9 @@ fn main() {
         // convert a higher fraction of its requests into grants at a
         // no-worse makespan.
         for select in [VictimSelect::Uniform, VictimSelect::Targeted] {
-            let mc = MigrateConfig {
-                share_estimates: true,
-                victim_select: select,
-                ..MigrateConfig::default()
-            };
+            let mc = MigrateConfig::default()
+                .with_share_estimates(true)
+                .with_victim_select(select);
             let mut times = Vec::new();
             let mut pct = 0.0;
             for s in 0..seeds {

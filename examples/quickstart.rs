@@ -9,11 +9,9 @@
 
 use std::sync::Arc;
 
-use parsteal::comm::LinkModel;
 use parsteal::dataflow::task::{NodeId, TaskClass, TaskDesc};
 use parsteal::dataflow::ttg::TtgBuilder;
 use parsteal::migrate::MigrateConfig;
-use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 
 fn main() {
@@ -60,17 +58,10 @@ fn main() {
         };
         let report = Simulator::new(
             graph.clone(),
-            SimConfig {
-                workers_per_node: 8,
-                link: LinkModel::cluster(),
-                seed: 7,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+            SimConfig::default()
+                .with_workers_per_node(8)
+                .with_seed(7)
+                .with_record_polls(false),
             CostModel::default_calibrated(),
             migrate,
             0,

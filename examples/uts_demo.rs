@@ -11,9 +11,7 @@
 
 use std::sync::Arc;
 
-use parsteal::comm::LinkModel;
 use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy};
-use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::workloads::{UtsGraph, UtsParams};
 
@@ -45,49 +43,25 @@ fn main() {
         ("No-Steal", MigrateConfig::disabled()),
         (
             "Chunk(4)",
-            MigrateConfig {
-                victim: VictimPolicy::Chunk(4),
-                ..Default::default()
-            },
+            MigrateConfig::default().with_victim(VictimPolicy::Chunk(4)),
         ),
-        (
-            "Half",
-            MigrateConfig {
-                victim: VictimPolicy::Half,
-                ..Default::default()
-            },
-        ),
-        (
-            "Single",
-            MigrateConfig {
-                victim: VictimPolicy::Single,
-                ..Default::default()
-            },
-        ),
+        ("Half", MigrateConfig::default().with_victim(VictimPolicy::Half)),
+        ("Single", MigrateConfig::default().with_victim(VictimPolicy::Single)),
         (
             "Single/ready-only",
-            MigrateConfig {
-                victim: VictimPolicy::Single,
-                thief: ThiefPolicy::ReadyOnly,
-                ..Default::default()
-            },
+            MigrateConfig::default()
+                .with_victim(VictimPolicy::Single)
+                .with_thief(ThiefPolicy::ReadyOnly),
         ),
     ];
 
     for (label, migrate) in cells {
         let report = Simulator::new(
             graph.clone(),
-            SimConfig {
-                workers_per_node: 8,
-                link: LinkModel::cluster(),
-                seed: 11,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+            SimConfig::default()
+                .with_workers_per_node(8)
+                .with_seed(11)
+                .with_record_polls(false),
             CostModel::default_calibrated(),
             migrate,
             0,

@@ -4,9 +4,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use parsteal::comm::LinkModel;
 use parsteal::migrate::MigrateConfig;
-use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::util::bench::fmt_ns;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
@@ -26,17 +24,9 @@ fn run_once(tiles: u32, steal: bool, record_polls: bool) -> (u64, f64) {
     let t0 = Instant::now();
     let report = Simulator::new(
         graph,
-        SimConfig {
-            workers_per_node: 8,
-            link: LinkModel::cluster(),
-            seed: 1,
-            max_events: u64::MAX,
-            record_polls,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        SimConfig::default()
+            .with_workers_per_node(8)
+            .with_record_polls(record_polls),
         CostModel::default_calibrated(),
         migrate,
         50,

@@ -6,10 +6,8 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use parsteal::comm::LinkModel;
 use parsteal::migrate::MigrateConfig;
 use parsteal::node::{Cluster, ClusterConfig, NullExecutor};
-use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
 use parsteal::workloads::{CholeskyGraph, CholeskyParams};
 
@@ -29,17 +27,10 @@ fn sim_run(tiles: u32, tile_size: u32, steal: bool) -> (f64, f64) {
     let t0 = Instant::now();
     let report = Simulator::new(
         graph,
-        SimConfig {
-            workers_per_node: 8,
-            link: LinkModel::cluster(),
-            seed: 3,
-            max_events: u64::MAX,
-            record_polls: false,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        SimConfig::default()
+            .with_workers_per_node(8)
+            .with_seed(3)
+            .with_record_polls(false),
         cost,
         migrate,
         tile_size,
@@ -77,17 +68,9 @@ fn main() {
     let t0 = Instant::now();
     let report = Cluster::run(
         graph,
-        ClusterConfig {
-            workers_per_node: 2,
-            link: LinkModel::ideal(),
-            migrate: MigrateConfig::default(),
-            seed: 1,
-            record_polls: false,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        ClusterConfig::default()
+            .with_workers_per_node(2)
+            .with_record_polls(false),
         Arc::new(NullExecutor),
     );
     let wall = t0.elapsed().as_secs_f64();

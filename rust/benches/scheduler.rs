@@ -54,6 +54,7 @@ use parsteal::sched::{
     BatchSite, SPILL_THRESHOLD, SchedBackend, SchedQueue, SchedStats, Scheduler, TaskMeta,
 };
 use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::topology::{StealDomains, Topology, TIER_NAMES};
 use parsteal::util::bench::Bencher;
 use parsteal::util::json::Json;
 use parsteal::workloads::{UtsGraph, UtsParams};
@@ -251,11 +252,9 @@ fn steal_decision_benches() -> Vec<(String, f64, SchedStats)> {
     let mut medians = Vec::new();
     let certain = bench_graph(|_| 1 << 30);
     let weighing = bench_graph(|t| if t.i == 2 { 64 } else { 1 << 30 });
-    let mc = MigrateConfig {
-        victim: VictimPolicy::Single,
-        use_waiting_time: true,
-        ..Default::default()
-    };
+    let mc = MigrateConfig::default()
+        .with_victim(VictimPolicy::Single)
+        .with_use_waiting_time(true);
     const DEPTH: u32 = 2048;
     for backend in SchedBackend::ALL {
         for workers in [1usize, 8, 40] {
@@ -514,23 +513,14 @@ fn victim_selection_telemetry() -> Json {
             nodes: 4,
             max_depth: 24,
         }));
-        let mc = MigrateConfig {
-            poll_interval_us: 20.0,
-            share_estimates: true,
-            victim_select: select,
-            ..MigrateConfig::default()
-        };
-        let cfg = SimConfig {
-            workers_per_node: 4,
-            link: LinkModel::cluster(),
-            seed: 7,
-            max_events: 50_000_000,
-            record_polls: true,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        };
+        let mc = MigrateConfig::default()
+            .with_poll_interval_us(20.0)
+            .with_share_estimates(true)
+            .with_victim_select(select);
+        let cfg = SimConfig::default()
+            .with_workers_per_node(4)
+            .with_seed(7)
+            .with_max_events(50_000_000);
         Simulator::new(graph, cfg, CostModel::default_calibrated(), mc, 20).run()
     };
     let uniform = run(VictimSelect::Uniform);
@@ -579,21 +569,13 @@ fn fault_tolerance_telemetry() -> Json {
             nodes: 4,
             max_depth: 24,
         }));
-        let mc = MigrateConfig {
-            poll_interval_us: 20.0,
-            ..MigrateConfig::default()
-        };
-        let cfg = SimConfig {
-            workers_per_node: 4,
-            link: LinkModel::cluster(),
-            seed: 7,
-            max_events: 50_000_000,
-            record_polls: false,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults,
-        };
+        let mc = MigrateConfig::default().with_poll_interval_us(20.0);
+        let cfg = SimConfig::default()
+            .with_workers_per_node(4)
+            .with_seed(7)
+            .with_max_events(50_000_000)
+            .with_record_polls(false)
+            .with_faults(faults);
         Simulator::new(graph, cfg, CostModel::default_calibrated(), mc, 20).run()
     };
     let baseline = run(FaultPlan::default());
@@ -682,6 +664,92 @@ fn fault_tolerance_telemetry() -> Json {
     ])
 }
 
+/// The PR 10 topology telemetry for `BENCH.json`: the same root-heavy
+/// UTS tree on a two-tier topology (4 sockets of 4 nodes), run through
+/// the deterministic DES at one seed with flat vs hierarchical steal
+/// domains. Reports each arm's makespan, per-tier steal-request counts
+/// and cross-tier request/byte totals, so the cross-tier traffic
+/// trajectory is comparable across PRs.
+fn topology_telemetry() -> Json {
+    println!();
+    println!("== steal domains: flat vs hierarchical on a two-tier topology (DES) ==");
+    let topo = Topology::two_tier(
+        4,
+        LinkModel {
+            latency_us: 1.0,
+            bw_bytes_per_us: 20_000.0,
+        },
+        LinkModel {
+            latency_us: 30.0,
+            bw_bytes_per_us: 1_500.0,
+        },
+    );
+    let run = |domains: StealDomains| {
+        let graph = Arc::new(UtsGraph::new(UtsParams {
+            b0: 32,
+            m: 4,
+            q: 0.3,
+            g: 50_000.0,
+            seed: 5,
+            nodes: 16,
+            max_depth: 24,
+        }));
+        let mc = MigrateConfig::default().with_poll_interval_us(20.0);
+        let cfg = SimConfig::default()
+            .with_workers_per_node(4)
+            .with_seed(7)
+            .with_max_events(50_000_000)
+            .with_record_polls(false)
+            .with_topology(topo)
+            .with_steal_domains(domains);
+        Simulator::new(graph, cfg, CostModel::default_calibrated(), mc, 20).run()
+    };
+    let mut arms = Vec::new();
+    for domains in [StealDomains::Flat, StealDomains::Hierarchical] {
+        let r = run(domains);
+        let tiers = r.tier_steal_totals();
+        let per_tier = TIER_NAMES
+            .iter()
+            .zip(tiers)
+            .map(|(name, (req, _, _))| format!("{name} {req}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!(
+            "    {:<12} makespan {:>10.0}µs  cross-tier {:>6} requests / {:>12} bytes  ({per_tier})",
+            domains.label(),
+            r.makespan_us,
+            r.cross_tier_steal_requests(),
+            r.cross_tier_steal_bytes()
+        );
+        arms.push(Json::obj(vec![
+            ("domains", Json::from(domains.label())),
+            ("makespan_us", Json::Num(r.makespan_us)),
+            (
+                "tier_requests",
+                Json::Arr(
+                    tiers
+                        .iter()
+                        .map(|(req, _, _)| Json::Num(*req as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "cross_tier_requests",
+                Json::Num(r.cross_tier_steal_requests() as f64),
+            ),
+            (
+                "cross_tier_bytes",
+                Json::Num(r.cross_tier_steal_bytes() as f64),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("scenario", Json::Str("uts_two_tier_16n".into())),
+        ("topology", Json::Str(topo.label())),
+        ("arms", Json::Arr(arms)),
+    ])
+}
+
 fn write_json(
     path: &str,
     medians: &[(String, f64, SchedStats)],
@@ -689,6 +757,7 @@ fn write_json(
     estimate_sharing: Json,
     victim_selection: Json,
     fault_tolerance: Json,
+    topology: Json,
 ) {
     let steal_entries: Vec<Json> = medians
         .iter()
@@ -749,6 +818,7 @@ fn write_json(
         ("estimate_sharing", estimate_sharing),
         ("victim_selection", victim_selection),
         ("fault_tolerance", fault_tolerance),
+        ("topology", topology),
         (
             "exact_min_payload",
             Json::obj(vec![
@@ -780,6 +850,7 @@ fn main() {
     let estimate_sharing = estimate_sharing_benches();
     let victim_selection = victim_selection_telemetry();
     let fault_tolerance = fault_tolerance_telemetry();
+    let topology = topology_telemetry();
     if let Some(path) = json_path {
         write_json(
             &path,
@@ -788,6 +859,7 @@ fn main() {
             estimate_sharing,
             victim_selection,
             fault_tolerance,
+            topology,
         );
     }
 }

@@ -44,10 +44,7 @@ fn main() {
         ("chunk20", VictimPolicy::Chunk(20)),
         ("half", VictimPolicy::Half),
     ] {
-        let mc = MigrateConfig {
-            victim,
-            ..Default::default()
-        };
+        let mc = MigrateConfig::default().with_victim(victim);
         let g = graph.clone();
         b.bench_with_setup(
             &format!("decide_steal {label} (gated)"),

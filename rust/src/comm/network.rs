@@ -14,10 +14,11 @@ use std::time::{Duration, Instant};
 use super::message::{Envelope, Msg};
 use crate::dataflow::task::NodeId;
 use crate::faults::{FaultClass, FaultMark, FaultPlan};
+use crate::topology::{Topology, TIER_COUNT};
 use crate::util::rng::{fault_rng, Rng};
 
 /// Wire model: time on the wire = `latency_us + bytes / bw_bytes_per_us`.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinkModel {
     pub latency_us: f64,
     pub bw_bytes_per_us: f64,
@@ -146,6 +147,10 @@ impl CrashGate {
 pub struct Network {
     senders: Vec<Sender<Envelope>>,
     link: LinkModel,
+    /// Tier model resolving each (src, dst) pair to its link
+    /// (`--topology`); flat by default, in which case every pair is
+    /// `link` verbatim.
+    topo: Topology,
     delay: Option<Arc<DelayLine>>,
     delay_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     seq: AtomicU64,
@@ -184,6 +189,20 @@ impl Network {
         plan: FaultPlan,
         seed: u64,
     ) -> (Arc<Network>, Vec<NodeMailbox>) {
+        Self::new_with_topology(n, link, Topology::flat(), plan, seed)
+    }
+
+    /// Build a fabric with a fault plan and a [`Topology`]
+    /// (`--topology`): each (src, dst) pair's wire time uses the link of
+    /// the tightest tier containing both. With `topo` flat this is
+    /// exactly [`Network::new_with_faults`].
+    pub fn new_with_topology(
+        n: usize,
+        link: LinkModel,
+        topo: Topology,
+        plan: FaultPlan,
+        seed: u64,
+    ) -> (Arc<Network>, Vec<NodeMailbox>) {
         let mut senders = Vec::with_capacity(n);
         let mut mailboxes = Vec::with_capacity(n);
         for _ in 0..n {
@@ -191,7 +210,11 @@ impl Network {
             senders.push(tx);
             mailboxes.push(NodeMailbox { rx });
         }
-        let delay = if link.is_ideal() {
+        // The delay line exists iff *any* resolvable pair has a
+        // non-ideal link; for a flat topology every tier link is the
+        // base link, so this is the old `!link.is_ideal()` test.
+        let needs_delay = (0..TIER_COUNT).any(|t| !topo.tier_link(t, link).is_ideal());
+        let delay = if !needs_delay {
             None
         } else {
             Some(Arc::new(DelayLine {
@@ -204,6 +227,7 @@ impl Network {
         let net = Arc::new(Network {
             senders,
             link,
+            topo,
             delay,
             delay_thread: Mutex::new(None),
             seq: AtomicU64::new(0),
@@ -282,6 +306,17 @@ impl Network {
 
     pub fn link(&self) -> LinkModel {
         self.link
+    }
+
+    /// The fabric's tier model (flat unless built with
+    /// [`Network::new_with_topology`]).
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// The link this fabric uses between one specific pair of nodes.
+    pub fn link_between(&self, a: NodeId, b: NodeId) -> LinkModel {
+        self.topo.link_between(a.idx(), b.idx(), self.link)
     }
 
     /// Which fault class (if any) a message belongs to: only the steal
@@ -368,7 +403,8 @@ impl Network {
                 let _ = self.senders[env.dst.idx()].send(env);
             }
             Some(line) => {
-                let delay_us = self.link.transfer_us(bytes) * delay_mult;
+                let delay_us =
+                    self.link_between(env.src, env.dst).transfer_us(bytes) * delay_mult;
                 let deliver_at = Instant::now() + Duration::from_nanos((delay_us * 1e3) as u64);
                 let seq = self.seq.fetch_add(1, Ordering::Relaxed);
                 line.heap.lock().unwrap().push(Delayed {
@@ -588,6 +624,44 @@ mod tests {
         assert!(matches!(grave[0].msg, Msg::Activate { task } if task.i == 4));
         assert!(net.graveyard_is_empty());
         assert!(!net.inflight_to(NodeId(1)), "ideal links hold nothing");
+    }
+
+    #[test]
+    fn topology_fabric_resolves_pairwise_links() {
+        // Ideal base link, but cross-socket pairs ride a modeled
+        // cluster link: the fabric must spin up its delay line and
+        // resolve each pair's link from the topology.
+        let topo: Topology = "socket=2,cluster-lat-us=300,cluster-bw=1000"
+            .parse()
+            .unwrap();
+        let (net, mb) =
+            Network::new_with_topology(4, LinkModel::ideal(), topo, FaultPlan::default(), 0);
+        let socket = net.link_between(NodeId(0), NodeId(1));
+        assert!(socket.is_ideal(), "socket mates inherit the ideal base");
+        let cross = net.link_between(NodeId(0), NodeId(2));
+        assert_eq!((cross.latency_us, cross.bw_bytes_per_us), (300.0, 1_000.0));
+        let t0 = Instant::now();
+        net.send(NodeId(0), NodeId(2), activate(1));
+        let env = mb[2].recv_timeout(Duration::from_secs(1)).expect("delivery");
+        assert!(matches!(env.msg, Msg::Activate { task } if task.i == 1));
+        assert!(
+            t0.elapsed() >= Duration::from_micros(300),
+            "cross-socket latency applied"
+        );
+        // Socket-local traffic is not slowed by the cluster tier.
+        net.send(NodeId(0), NodeId(1), activate(2));
+        assert!(mb[1].recv_timeout(Duration::from_millis(200)).is_some());
+        net.shutdown();
+        // A flat topology keeps the ideal fast path (no delay line).
+        let (flat, _mb) = Network::new_with_topology(
+            2,
+            LinkModel::ideal(),
+            Topology::flat(),
+            FaultPlan::default(),
+            0,
+        );
+        assert!(flat.link_between(NodeId(0), NodeId(1)).is_ideal());
+        assert!(flat.delay.is_none(), "flat+ideal needs no delay thread");
     }
 
     #[test]

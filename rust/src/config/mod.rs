@@ -7,20 +7,22 @@ use anyhow::Result;
 use crate::comm::LinkModel;
 use crate::faults::FaultPlan;
 use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
+use crate::node::ClusterConfig;
 use crate::sched::{POOL_FLOOR, SchedBackend};
 use crate::sim::SimConfig;
+use crate::topology::{StealDomains, Topology};
 use crate::util::cli::Args;
 use crate::workloads::{CholeskyParams, UtsParams};
 
 /// Which workload a run executes.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Workload {
     Cholesky(CholeskyParams),
     Uts(UtsParams),
 }
 
 /// Full run configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     pub workload: Workload,
     pub workers_per_node: usize,
@@ -35,6 +37,94 @@ pub struct RunConfig {
     pub pool_floor: usize,
     /// Steal-protocol fault injection (`--faults`, default off).
     pub faults: FaultPlan,
+    /// Tiered link model (`--topology`, default flat): per-pair link
+    /// parameters for the wire model, timeout formulas and victim
+    /// selector in both backends.
+    pub topology: Topology,
+    /// Steal-domain policy (`--steal-domains flat|hierarchical`).
+    pub steal_domains: StealDomains,
+}
+
+impl Default for RunConfig {
+    /// The empty-flag configuration: `RunConfig::default()` is exactly
+    /// `RunConfig::from_args(&Args::parse([]))` — the paper-headline
+    /// 200-tile Cholesky on 4 nodes (asserted in the unit tests, so the
+    /// two construction paths cannot drift apart).
+    fn default() -> Self {
+        RunConfig {
+            workload: Workload::Cholesky(CholeskyParams {
+                tiles: 200,
+                tile_size: 50,
+                nodes: 4,
+                dense_fraction: 0.5,
+                seed: 1,
+                all_dense: false,
+            }),
+            workers_per_node: 40,
+            link: LinkModel {
+                latency_us: 5.0,
+                bw_bytes_per_us: 10_000.0,
+            },
+            migrate: MigrateConfig::default(),
+            seed: 1,
+            sched: SchedBackend::Central,
+            batch_activations: true,
+            pool_floor: POOL_FLOOR,
+            faults: FaultPlan::default(),
+            topology: Topology::flat(),
+            steal_domains: StealDomains::Flat,
+        }
+    }
+}
+
+/// Chainable setters (`RunConfig::default().with_seed(7)…`): call
+/// sites name only what they change, so adding a config field never
+/// again touches every literal in the tree.
+impl RunConfig {
+    pub fn with_workload(mut self, v: Workload) -> Self {
+        self.workload = v;
+        self
+    }
+    pub fn with_workers_per_node(mut self, v: usize) -> Self {
+        self.workers_per_node = v;
+        self
+    }
+    pub fn with_link(mut self, v: LinkModel) -> Self {
+        self.link = v;
+        self
+    }
+    pub fn with_migrate(mut self, v: MigrateConfig) -> Self {
+        self.migrate = v;
+        self
+    }
+    pub fn with_seed(mut self, v: u64) -> Self {
+        self.seed = v;
+        self
+    }
+    pub fn with_sched(mut self, v: SchedBackend) -> Self {
+        self.sched = v;
+        self
+    }
+    pub fn with_batch_activations(mut self, v: bool) -> Self {
+        self.batch_activations = v;
+        self
+    }
+    pub fn with_pool_floor(mut self, v: usize) -> Self {
+        self.pool_floor = v;
+        self
+    }
+    pub fn with_faults(mut self, v: FaultPlan) -> Self {
+        self.faults = v;
+        self
+    }
+    pub fn with_topology(mut self, v: Topology) -> Self {
+        self.topology = v;
+        self
+    }
+    pub fn with_steal_domains(mut self, v: StealDomains) -> Self {
+        self.steal_domains = v;
+        self
+    }
 }
 
 impl RunConfig {
@@ -48,6 +138,10 @@ impl RunConfig {
     /// `--batch-activations BOOL --pool-floor N`
     /// `--faults SPEC` (e.g. `drop=0.05,delay=3x`; see
     /// [`FaultPlan`] for the grammar),
+    /// `--topology SPEC` (e.g.
+    /// `socket=4,socket-lat-us=1,socket-bw=40000,cluster-lat-us=20`;
+    /// see [`Topology`] for the grammar),
+    /// `--steal-domains flat|hierarchical`,
     /// `--latency-us L --bw B --seed X` and the
     /// UTS knobs `--uts-b0/--uts-m/--uts-q/--uts-g`.
     pub fn from_args(args: &Args) -> Result<RunConfig> {
@@ -72,58 +166,71 @@ impl RunConfig {
                 all_dense: args.bool_or("all-dense", false)?,
             }),
         };
-        let migrate = MigrateConfig {
-            enabled: args.bool_or("steal", true)?,
-            thief: args
-                .str_or("thief", "ready-successors")
-                .parse::<ThiefPolicy>()
-                .map_err(anyhow::Error::msg)?,
-            victim: args
-                .str_or("victim", "single")
-                .parse::<VictimPolicy>()
-                .map_err(anyhow::Error::msg)?,
-            use_waiting_time: args.bool_or("waiting-time", true)?,
-            poll_interval_us: args.f64_or("poll-interval-us", 100.0)?,
-            max_inflight: args.u64_or("max-inflight", 1)? as usize,
-            migrate_overhead_us: args.f64_or("migrate-overhead-us", 150.0)?,
+        let migrate = MigrateConfig::default()
+            .with_enabled(args.bool_or("steal", true)?)
+            .with_thief(
+                args.str_or("thief", "ready-successors")
+                    .parse::<ThiefPolicy>()
+                    .map_err(anyhow::Error::msg)?,
+            )
+            .with_victim(
+                args.str_or("victim", "single")
+                    .parse::<VictimPolicy>()
+                    .map_err(anyhow::Error::msg)?,
+            )
+            .with_use_waiting_time(args.bool_or("waiting-time", true)?)
+            .with_poll_interval_us(args.f64_or("poll-interval-us", 100.0)?)
+            .with_max_inflight(args.u64_or("max-inflight", 1)? as usize)
+            .with_migrate_overhead_us(args.f64_or("migrate-overhead-us", 150.0)?)
             // Off = the paper's running-mean estimator (§3); on = gate
             // on an EWMA of observed execution times.
-            exec_ewma: args.bool_or("exec-ewma", false)?,
+            .with_exec_ewma(args.bool_or("exec-ewma", false)?)
             // Off = one node-wide estimate; on = per-TaskClass table
             // and a queue-composition-weighted waiting time.
-            exec_per_class: args.bool_or("exec-per-class", false)?,
+            .with_exec_per_class(args.bool_or("exec-per-class", false)?)
             // Off = per-node estimators only (paper-faithful); on =
             // granted steal replies carry the victim's estimate digest
             // and thieves merge it into their tables.
-            share_estimates: args.bool_or("share-estimates", false)?,
+            .with_share_estimates(args.bool_or("share-estimates", false)?)
             // Uniform = the paper's random victim choice; targeted =
             // score victims on decayed steal-outcome history, digest
             // richness and modeled round-trip cost (PR 6).
-            victim_select: args
-                .str_or("victim-select", "uniform")
-                .parse::<VictimSelect>()
-                .map_err(anyhow::Error::msg)?,
-        };
-        Ok(RunConfig {
-            workload,
-            workers_per_node: args.u64_or("workers", 40)? as usize,
-            link: LinkModel {
+            .with_victim_select(
+                args.str_or("victim-select", "uniform")
+                    .parse::<VictimSelect>()
+                    .map_err(anyhow::Error::msg)?,
+            );
+        Ok(RunConfig::default()
+            .with_workload(workload)
+            .with_workers_per_node(args.u64_or("workers", 40)? as usize)
+            .with_link(LinkModel {
                 latency_us: args.f64_or("latency-us", 5.0)?,
                 bw_bytes_per_us: args.f64_or("bw", 10_000.0)?,
-            },
-            migrate,
-            seed,
-            sched: args
-                .str_or("sched", "central")
-                .parse::<SchedBackend>()
-                .map_err(anyhow::Error::msg)?,
-            batch_activations: args.bool_or("batch-activations", true)?,
-            pool_floor: args.u64_or("pool-floor", POOL_FLOOR as u64)? as usize,
-            faults: args
-                .str_or("faults", "off")
-                .parse::<FaultPlan>()
-                .map_err(anyhow::Error::msg)?,
-        })
+            })
+            .with_migrate(migrate)
+            .with_seed(seed)
+            .with_sched(
+                args.str_or("sched", "central")
+                    .parse::<SchedBackend>()
+                    .map_err(anyhow::Error::msg)?,
+            )
+            .with_batch_activations(args.bool_or("batch-activations", true)?)
+            .with_pool_floor(args.u64_or("pool-floor", POOL_FLOOR as u64)? as usize)
+            .with_faults(
+                args.str_or("faults", "off")
+                    .parse::<FaultPlan>()
+                    .map_err(anyhow::Error::msg)?,
+            )
+            .with_topology(
+                args.str_or("topology", "flat")
+                    .parse::<Topology>()
+                    .map_err(anyhow::Error::msg)?,
+            )
+            .with_steal_domains(
+                args.str_or("steal-domains", "flat")
+                    .parse::<StealDomains>()
+                    .map_err(anyhow::Error::msg)?,
+            ))
     }
 
     pub fn nodes(&self) -> u32 {
@@ -141,17 +248,35 @@ impl RunConfig {
     }
 
     pub fn sim_config(&self) -> SimConfig {
-        SimConfig {
-            workers_per_node: self.workers_per_node,
-            link: self.link,
-            seed: self.seed,
-            max_events: u64::MAX,
-            record_polls: true,
-            sched: self.sched,
-            batch_activations: self.batch_activations,
-            pool_floor: self.pool_floor,
-            faults: self.faults,
-        }
+        SimConfig::default()
+            .with_workers_per_node(self.workers_per_node)
+            .with_link(self.link)
+            .with_seed(self.seed)
+            .with_max_events(u64::MAX)
+            .with_record_polls(true)
+            .with_sched(self.sched)
+            .with_batch_activations(self.batch_activations)
+            .with_pool_floor(self.pool_floor)
+            .with_faults(self.faults)
+            .with_topology(self.topology)
+            .with_steal_domains(self.steal_domains)
+    }
+
+    /// [`ClusterConfig`] for the threaded backend, mirroring
+    /// [`RunConfig::sim_config`] so both backends honour the same flags.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig::default()
+            .with_workers_per_node(self.workers_per_node)
+            .with_link(self.link)
+            .with_migrate(self.migrate)
+            .with_seed(self.seed)
+            .with_record_polls(true)
+            .with_sched(self.sched)
+            .with_batch_activations(self.batch_activations)
+            .with_pool_floor(self.pool_floor)
+            .with_faults(self.faults)
+            .with_topology(self.topology)
+            .with_steal_domains(self.steal_domains)
     }
 }
 
@@ -303,5 +428,140 @@ mod tests {
         let c = RunConfig::from_args(&args("--batch-activations false")).unwrap();
         assert!(!c.batch_activations);
         assert!(!c.sim_config().batch_activations);
+    }
+
+    #[test]
+    fn topology_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert!(c.topology.is_flat(), "flat fabric by default");
+        assert!(c.sim_config().topology.is_flat());
+        let c = RunConfig::from_args(&args(
+            "--topology socket=4,socket-lat-us=1,socket-bw=40000,cluster-lat-us=20",
+        ))
+        .unwrap();
+        assert!(!c.topology.is_flat());
+        assert_eq!(c.topology.socket_size, 4);
+        assert_eq!(c.topology.socket_lat_us, 1.0);
+        assert_eq!(c.sim_config().topology, c.topology);
+        // The label round-trips back through the parser.
+        let back: Topology = c.topology.label().parse().unwrap();
+        assert_eq!(back, c.topology);
+        assert!(RunConfig::from_args(&args("--topology socket=bogus")).is_err());
+        assert!(
+            RunConfig::from_args(&args("--topology socket=4,rack=6")).is_err(),
+            "tiers must nest"
+        );
+    }
+
+    #[test]
+    fn steal_domains_flag() {
+        let c = RunConfig::from_args(&args("")).unwrap();
+        assert_eq!(c.steal_domains, StealDomains::Flat, "flat by default");
+        let c = RunConfig::from_args(&args("--steal-domains hierarchical")).unwrap();
+        assert_eq!(c.steal_domains, StealDomains::Hierarchical);
+        assert_eq!(c.sim_config().steal_domains, StealDomains::Hierarchical);
+        let c = RunConfig::from_args(&args("--steal-domains hier")).unwrap();
+        assert_eq!(c.steal_domains, StealDomains::Hierarchical, "alias");
+        assert!(RunConfig::from_args(&args("--steal-domains bogus")).is_err());
+    }
+
+    /// `RunConfig::default()` and the empty flag set are the same
+    /// configuration — the builder base can never drift from the CLI
+    /// defaults without this failing.
+    #[test]
+    fn default_builder_matches_empty_flags() {
+        let d = RunConfig::default();
+        let f = RunConfig::from_args(&args("")).unwrap();
+        let Workload::Cholesky(dp) = &d.workload else {
+            panic!()
+        };
+        let Workload::Cholesky(fp) = &f.workload else {
+            panic!()
+        };
+        assert_eq!(dp, fp);
+        assert_eq!(d.workers_per_node, f.workers_per_node);
+        assert_eq!(d.link, f.link);
+        assert_eq!(d.migrate, f.migrate);
+        assert_eq!(d.seed, f.seed);
+        assert_eq!(d.sched, f.sched);
+        assert_eq!(d.batch_activations, f.batch_activations);
+        assert_eq!(d.pool_floor, f.pool_floor);
+        assert_eq!(d.faults, f.faults);
+        assert_eq!(d.topology, f.topology);
+        assert_eq!(d.steal_domains, f.steal_domains);
+    }
+
+    #[test]
+    fn builder_setters_equal_exhaustive_literal() {
+        // The one place a full RunConfig literal is allowed to live:
+        // the builders' own equivalence check.
+        let workload = Workload::Uts(UtsParams {
+            b0: 32,
+            m: 4,
+            q: 0.2,
+            g: 1_000.0,
+            seed: 5,
+            nodes: 3,
+            max_depth: 12,
+        });
+        let link = LinkModel {
+            latency_us: 4.0,
+            bw_bytes_per_us: 2_000.0,
+        };
+        let migrate = MigrateConfig::default().with_max_inflight(2);
+        let faults: FaultPlan = "drop=0.05".parse().unwrap();
+        let topology: Topology = "socket=3,socket-lat-us=2".parse().unwrap();
+        let built = RunConfig::default()
+            .with_workload(workload.clone())
+            .with_workers_per_node(6)
+            .with_link(link)
+            .with_migrate(migrate)
+            .with_seed(77)
+            .with_sched(SchedBackend::Sharded)
+            .with_batch_activations(false)
+            .with_pool_floor(3)
+            .with_faults(faults)
+            .with_topology(topology)
+            .with_steal_domains(StealDomains::Hierarchical);
+        let literal = RunConfig {
+            workload,
+            workers_per_node: 6,
+            link,
+            migrate,
+            seed: 77,
+            sched: SchedBackend::Sharded,
+            batch_activations: false,
+            pool_floor: 3,
+            faults,
+            topology,
+            steal_domains: StealDomains::Hierarchical,
+        };
+        assert_eq!(built, literal);
+    }
+
+    /// The two backend-config projections agree on every shared knob,
+    /// so `--backend real` and the DES can never silently diverge on
+    /// the same flag set.
+    #[test]
+    fn sim_and_cluster_projections_agree() {
+        let c = RunConfig::from_args(&args(
+            "--workers 3 --seed 9 --sched sharded --pool-floor 5 \
+             --topology socket=2,socket-lat-us=1 --steal-domains hierarchical",
+        ))
+        .unwrap();
+        let s = c.sim_config();
+        let k = c.cluster_config();
+        assert_eq!(s.workers_per_node, k.workers_per_node);
+        assert_eq!(s.link, k.link);
+        assert_eq!(s.seed, k.seed);
+        assert_eq!(s.sched, k.sched);
+        assert_eq!(s.batch_activations, k.batch_activations);
+        assert_eq!(s.pool_floor, k.pool_floor);
+        assert_eq!(s.faults, k.faults);
+        assert_eq!(s.topology, k.topology);
+        assert_eq!(s.steal_domains, k.steal_domains);
+        assert_eq!(k.migrate, c.migrate);
+        assert_eq!(k.topology, c.topology);
+        assert_eq!(k.steal_domains, StealDomains::Hierarchical);
     }
 }

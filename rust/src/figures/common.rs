@@ -6,12 +6,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::comm::LinkModel;
 use crate::metrics::RunReport;
-use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
-use crate::sched::{POOL_FLOOR, SchedBackend};
+use crate::migrate::{MigrateConfig, VictimPolicy, VictimSelect};
+use crate::sched::SchedBackend;
 use crate::sim::{CostModel, SimConfig, Simulator};
 use crate::stats::Summary;
+use crate::topology::{StealDomains, Topology};
 use crate::util::json::Json;
 use crate::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
 
@@ -62,21 +62,87 @@ pub struct Cell {
     pub migrate: MigrateConfig,
 }
 
+/// Cross-cutting knobs one `repro figure` invocation stamps onto every
+/// simulation a figure runs (`--sched`, `--victim-select`,
+/// `--topology`, `--steal-domains`). [`RunOverrides::default`] is the
+/// identity: figures rendered with it are byte-identical to a harness
+/// with no override support at all, so re-rendering a sweep under a
+/// different scheduler or topology is one flag, not a figure rewrite.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RunOverrides {
+    /// Scheduler backend every figure's simulations run on.
+    pub sched: SchedBackend,
+    /// Victim selection every steal-enabled cell runs with: uniform is
+    /// the paper's protocol; targeted re-renders the same figures under
+    /// the scored selector for the uniform-vs-targeted ablation.
+    pub victim_select: VictimSelect,
+    /// Link topology every simulation prices communication on.
+    pub topology: Topology,
+    /// Steal-domain policy (flat victim choice vs tier escalation).
+    pub steal_domains: StealDomains,
+}
+
+impl Default for RunOverrides {
+    fn default() -> Self {
+        RunOverrides {
+            sched: SchedBackend::Central,
+            victim_select: VictimSelect::Uniform,
+            topology: Topology::flat(),
+            steal_domains: StealDomains::Flat,
+        }
+    }
+}
+
+impl RunOverrides {
+    /// Select the scheduler backend the figures sweep on.
+    pub fn with_sched(mut self, sched: SchedBackend) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Select the victim-selection mode the figures sweep on.
+    pub fn with_victim_select(mut self, select: VictimSelect) -> Self {
+        self.victim_select = select;
+        self
+    }
+
+    /// Select the link topology the figures sweep on.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Select the steal-domain policy the figures sweep on.
+    pub fn with_steal_domains(mut self, domains: StealDomains) -> Self {
+        self.steal_domains = domains;
+        self
+    }
+
+    /// Apply the victim-selection override to a cell's steal policy;
+    /// disabled cells (No-Steal) pass through untouched.
+    pub fn apply_migrate(&self, mut migrate: MigrateConfig) -> MigrateConfig {
+        if migrate.enabled {
+            migrate.victim_select = self.victim_select;
+        }
+        migrate
+    }
+
+    /// Stamp the scheduler/topology overrides onto a simulator config.
+    pub fn apply_sim(&self, cfg: SimConfig) -> SimConfig {
+        cfg.with_sched(self.sched)
+            .with_topology(self.topology)
+            .with_steal_domains(self.steal_domains)
+    }
+}
+
 /// Harness context threaded through every figure.
 pub struct Ctx {
     pub scale: Scale,
     pub seeds: u64,
     pub cost: CostModel,
     pub out_dir: std::path::PathBuf,
-    /// Scheduler backend every figure's simulations run on
-    /// (`repro figure --sched central|sharded`).
-    pub sched: SchedBackend,
-    /// Victim selection every steal-enabled cell runs with
-    /// (`repro figure --victim-select uniform|targeted`): uniform is
-    /// the paper's protocol and keeps figure outputs identical to
-    /// PR 5; targeted re-renders the same figures under the scored
-    /// selector for the uniform-vs-targeted ablation.
-    pub victim_select: VictimSelect,
+    /// Overrides stamped onto every run this context performs.
+    pub ov: RunOverrides,
 }
 
 impl Ctx {
@@ -87,32 +153,16 @@ impl Ctx {
             seeds,
             cost: CostModel::load_or_default(&artifacts_dir.join("costmodel.json")),
             out_dir: out_dir.to_path_buf(),
-            sched: SchedBackend::Central,
-            victim_select: VictimSelect::Uniform,
+            ov: RunOverrides::default(),
         }
     }
 
-    /// Select the scheduler backend the figures sweep on.
-    pub fn with_sched(mut self, sched: SchedBackend) -> Ctx {
-        self.sched = sched;
+    /// Install the run overrides for every figure this context renders
+    /// — the single entry point that replaced the per-knob
+    /// `with_sched`/`with_victim_select` setters.
+    pub fn overrides(mut self, ov: RunOverrides) -> Ctx {
+        self.ov = ov;
         self
-    }
-
-    /// Select the victim-selection mode the figures sweep on.
-    pub fn with_victim_select(mut self, select: VictimSelect) -> Ctx {
-        self.victim_select = select;
-        self
-    }
-
-    /// Apply the context's victim-selection mode to a cell's policy —
-    /// figures call this on each steal-enabled [`MigrateConfig`] so
-    /// one `--victim-select targeted` flag re-renders every sweep
-    /// under the scored selector without touching cell labels.
-    pub fn apply_victim_select(&self, mut migrate: MigrateConfig) -> MigrateConfig {
-        if migrate.enabled {
-            migrate.victim_select = self.victim_select;
-        }
-        migrate
     }
 
     pub fn cholesky(&self, nodes: u32, seed: u64) -> Arc<CholeskyGraph> {
@@ -169,18 +219,13 @@ impl Ctx {
         record_polls: bool,
     ) -> RunReport {
         let graph = self.cholesky(nodes, 0); // same matrix across seeds
-        let cfg = SimConfig {
-            workers_per_node: self.scale.workers(),
-            link: LinkModel::cluster(),
-            seed,
-            max_events: u64::MAX,
-            record_polls,
-            sched: self.sched,
-            batch_activations: true,
-            pool_floor: POOL_FLOOR,
-            faults: Default::default(),
-        };
-        Simulator::new(graph, cfg, self.cost.clone(), migrate, 50).run()
+        let cfg = self.ov.apply_sim(
+            SimConfig::default()
+                .with_workers_per_node(self.scale.workers())
+                .with_seed(seed)
+                .with_record_polls(record_polls),
+        );
+        Simulator::new(graph, cfg, self.cost.clone(), self.ov.apply_migrate(migrate), 50).run()
     }
 
     pub fn run_cholesky_graph(
@@ -191,34 +236,24 @@ impl Ctx {
         record_polls: bool,
     ) -> RunReport {
         let tile = graph.params().tile_size;
-        let cfg = SimConfig {
-            workers_per_node: self.scale.workers(),
-            link: LinkModel::cluster(),
-            seed,
-            max_events: u64::MAX,
-            record_polls,
-            sched: self.sched,
-            batch_activations: true,
-            pool_floor: POOL_FLOOR,
-            faults: Default::default(),
-        };
-        Simulator::new(graph, cfg, self.cost.clone(), migrate, tile).run()
+        let cfg = self.ov.apply_sim(
+            SimConfig::default()
+                .with_workers_per_node(self.scale.workers())
+                .with_seed(seed)
+                .with_record_polls(record_polls),
+        );
+        Simulator::new(graph, cfg, self.cost.clone(), self.ov.apply_migrate(migrate), tile).run()
     }
 
     pub fn run_uts(&self, nodes: u32, migrate: MigrateConfig, seed: u64) -> RunReport {
         let graph = self.uts(nodes, 0);
-        let cfg = SimConfig {
-            workers_per_node: self.scale.workers(),
-            link: LinkModel::cluster(),
-            seed,
-            max_events: u64::MAX,
-            record_polls: false,
-            sched: self.sched,
-            batch_activations: true,
-            pool_floor: POOL_FLOOR,
-            faults: Default::default(),
-        };
-        Simulator::new(graph, cfg, self.cost.clone(), migrate, 0).run()
+        let cfg = self.ov.apply_sim(
+            SimConfig::default()
+                .with_workers_per_node(self.scale.workers())
+                .with_seed(seed)
+                .with_record_polls(false),
+        );
+        Simulator::new(graph, cfg, self.cost.clone(), self.ov.apply_migrate(migrate), 0).run()
     }
 
     /// Execution times (seconds of virtual time) across seeds.
@@ -237,18 +272,10 @@ impl Ctx {
 
 /// Standard policy set for the victim-policy figures.
 pub fn victim_cells(scale: Scale, waiting_time: bool) -> Vec<Cell> {
-    let mk = |victim| MigrateConfig {
-        enabled: true,
-        thief: ThiefPolicy::ReadySuccessors,
-        victim,
-        use_waiting_time: waiting_time,
-        poll_interval_us: 100.0,
-        max_inflight: 1,
-        migrate_overhead_us: 150.0,
-        exec_ewma: false,
-        exec_per_class: false,
-        share_estimates: false,
-        victim_select: VictimSelect::Uniform,
+    let mk = |victim| {
+        MigrateConfig::default()
+            .with_victim(victim)
+            .with_use_waiting_time(waiting_time)
     };
     vec![
         Cell {

@@ -5,26 +5,14 @@
 
 use anyhow::Result;
 
-use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
+use crate::migrate::{MigrateConfig, ThiefPolicy};
 use crate::util::json::Json;
 
 use super::common::{fmt_summary, Ctx};
 
 pub fn run(ctx: &Ctx) -> Result<String> {
     let nodes = 4;
-    let mk = |thief| MigrateConfig {
-        enabled: true,
-        thief,
-        victim: VictimPolicy::Single,
-        use_waiting_time: true,
-        poll_interval_us: 100.0,
-        max_inflight: 1,
-        migrate_overhead_us: 150.0,
-        exec_ewma: false,
-        exec_per_class: false,
-        share_estimates: false,
-        victim_select: VictimSelect::Uniform,
-    };
+    let mk = |thief| MigrateConfig::default().with_thief(thief);
     let cells = [
         ("No-Steal", MigrateConfig::disabled()),
         ("Ready-only", mk(ThiefPolicy::ReadyOnly)),

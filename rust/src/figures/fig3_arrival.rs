@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
+use crate::migrate::{MigrateConfig, ThiefPolicy};
 use crate::stats::Summary;
 use crate::util::json::Json;
 
@@ -22,40 +22,17 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     use crate::sim::{SimConfig, Simulator};
     let tiles = ctx.scale.tiles() / 2;
     let graph = ctx.cholesky_custom(2, tiles, 100, 0);
-    let mc = MigrateConfig {
-        enabled: true,
-        thief: ThiefPolicy::ReadyOnly,
-        victim: VictimPolicy::Single,
-        use_waiting_time: true,
-        poll_interval_us: 100.0,
-        max_inflight: 1,
-        migrate_overhead_us: 150.0,
-        exec_ewma: false,
-        exec_per_class: false,
-        share_estimates: false,
-        victim_select: VictimSelect::Uniform,
-    };
-    let report = Simulator::new(
-        graph,
-        SimConfig {
-            workers_per_node: ctx.scale.workers(),
-            link: LinkModel {
+    let mc = MigrateConfig::default().with_thief(ThiefPolicy::ReadyOnly);
+    let cfg = ctx.ov.apply_sim(
+        SimConfig::default()
+            .with_workers_per_node(ctx.scale.workers())
+            .with_link(LinkModel {
                 latency_us: 50.0,
                 bw_bytes_per_us: 1_000.0,
-            },
-            seed: 7,
-            max_events: u64::MAX,
-            record_polls: true,
-            sched: ctx.sched,
-            batch_activations: true,
-            pool_floor: crate::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
-        ctx.cost.clone(),
-        mc,
-        100,
-    )
-    .run();
+            })
+            .with_seed(7),
+    );
+    let report = Simulator::new(graph, cfg, ctx.cost.clone(), ctx.ov.apply_migrate(mc), 100).run();
     let samples = report.arrival_ready_all();
     let mut out = String::new();
     out.push_str("Fig.3 — ready tasks at thief when stolen task arrives (ReadyOnly, 2 nodes)\n");

@@ -21,7 +21,7 @@ pub fn sweep(ctx: &Ctx) -> Vec<(String, u32, Vec<f64>, f64)> {
     let mut rows = Vec::new();
     for nodes in NODE_COUNTS {
         for cell in victim_cells(ctx.scale, true) {
-            let migrate = ctx.apply_victim_select(cell.migrate);
+            let migrate = ctx.ov.apply_migrate(cell.migrate);
             let mut times = Vec::new();
             let mut success = 0.0;
             for s in 0..ctx.seeds {

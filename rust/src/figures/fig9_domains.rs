@@ -1,0 +1,118 @@
+//! Fig. 9 — flat vs hierarchical steal domains on a two-tier topology
+//! at cluster scale (128 simulated nodes, 16 sockets of 8). UTS puts
+//! all roots on node 0, so every other node must steal its work; flat
+//! victim choice sends almost every request over the slow cluster
+//! links, while hierarchical domains exhaust the thief's socket before
+//! escalating. Shape: hierarchical moves markedly fewer steal requests
+//! and payload bytes across sockets at equal seeds, without losing the
+//! makespan benefit of stealing.
+
+use anyhow::Result;
+
+use crate::comm::LinkModel;
+use crate::migrate::MigrateConfig;
+use crate::sim::{SimConfig, Simulator};
+use crate::stats::Summary;
+use crate::topology::{StealDomains, Topology, TIER_COUNT, TIER_NAMES};
+use crate::util::json::Json;
+
+use super::common::{fmt_summary, Ctx};
+
+/// Simulated node count — past the hundred-node mark so cross-tier
+/// traffic dominates under flat victim choice.
+pub const NODES: u32 = 128;
+/// Nodes per socket domain in the two-tier topology.
+pub const SOCKET_SIZE: u32 = 8;
+
+/// The two-tier topology every Fig. 9 cell runs on: fast intra-socket
+/// links, slow everything-else.
+pub fn two_tier() -> Topology {
+    Topology::two_tier(
+        SOCKET_SIZE,
+        LinkModel {
+            latency_us: 1.0,
+            bw_bytes_per_us: 40_000.0,
+        },
+        LinkModel {
+            latency_us: 20.0,
+            bw_bytes_per_us: 2_500.0,
+        },
+    )
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let topo = two_tier();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig.9 — flat vs hierarchical steal domains (UTS, {NODES} nodes, topology {})\n",
+        topo.label()
+    ));
+    let mut json_rows = Vec::new();
+    for domains in [StealDomains::Flat, StealDomains::Hierarchical] {
+        let mut times = Vec::new();
+        let mut cross_req = Vec::new();
+        let mut cross_bytes = Vec::new();
+        let mut tier_req = [0u64; TIER_COUNT];
+        for s in 0..ctx.seeds {
+            let graph = ctx.uts(NODES, 0); // same tree across seeds
+            let cfg = ctx
+                .ov
+                .apply_sim(
+                    SimConfig::default()
+                        .with_workers_per_node(ctx.scale.workers())
+                        .with_seed(9000 + s)
+                        .with_record_polls(false),
+                )
+                .with_topology(topo)
+                .with_steal_domains(domains);
+            let migrate = ctx.ov.apply_migrate(MigrateConfig::default());
+            let r = Simulator::new(graph, cfg, ctx.cost.clone(), migrate, 0).run();
+            times.push(r.makespan_us / 1e6);
+            cross_req.push(r.cross_tier_steal_requests() as f64);
+            cross_bytes.push(r.cross_tier_steal_bytes() as f64);
+            let tiers = r.tier_steal_totals();
+            for (acc, (req, _, _)) in tier_req.iter_mut().zip(tiers) {
+                *acc += req;
+            }
+        }
+        let label = domains.label();
+        out.push_str(&format!("\n{label}\n"));
+        out.push_str(&format!("  {}\n", fmt_summary("makespan", &times)));
+        let req = Summary::of(&cross_req);
+        let bytes = Summary::of(&cross_bytes);
+        out.push_str(&format!(
+            "  cross-tier: {:.0} requests, {:.0} payload bytes (mean/seed)\n",
+            req.mean, bytes.mean
+        ));
+        let per_tier = TIER_NAMES
+            .iter()
+            .zip(tier_req)
+            .map(|(name, r)| format!("{name} {r}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        out.push_str(&format!("  requests by tier (all seeds): {per_tier}\n"));
+        json_rows.push(Json::obj(vec![
+            ("domains", Json::from(label)),
+            ("nodes", Json::from(NODES as u64)),
+            ("topology", Json::from(topo.label().as_str())),
+            (
+                "makespan_s",
+                Json::Arr(times.iter().map(|t| Json::Num(*t)).collect()),
+            ),
+            (
+                "cross_tier_requests",
+                Json::Arr(cross_req.iter().map(|v| Json::Num(*v)).collect()),
+            ),
+            (
+                "cross_tier_bytes",
+                Json::Arr(cross_bytes.iter().map(|v| Json::Num(*v)).collect()),
+            ),
+            (
+                "tier_requests",
+                Json::Arr(tier_req.iter().map(|v| Json::from(*v)).collect()),
+            ),
+        ]));
+    }
+    ctx.write_json("fig9", &Json::obj(vec![("rows", Json::Arr(json_rows))]))?;
+    Ok(out)
+}

@@ -2,7 +2,7 @@
 //! the paper's evaluation (§4). See DESIGN.md's experiment index for the
 //! workload, parameters and "shape that must hold" per experiment.
 //!
-//! Entry point: [`run`] with a figure id (`fig1`..`fig8`, `table1`,
+//! Entry point: [`run`] with a figure id (`fig1`..`fig9`, `table1`,
 //! `stats`, or `all`). Output goes to stdout and `<out>/<id>.json`.
 
 pub mod common;
@@ -13,15 +13,16 @@ pub mod fig45_victim;
 pub mod fig6_waiting;
 pub mod fig7_uts;
 pub mod fig8_success;
+pub mod fig9_domains;
 pub mod stats_check;
 pub mod table1_granularity;
 
 use anyhow::{bail, Result};
 
-pub use common::{Ctx, Scale};
+pub use common::{Ctx, RunOverrides, Scale};
 
-pub const ALL_IDS: [&str; 10] = [
-    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "table1", "stats",
+pub const ALL_IDS: [&str; 11] = [
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "stats",
 ];
 
 /// Run one figure (or `all`); returns the rendered report text.
@@ -41,6 +42,7 @@ pub fn run(ctx: &Ctx, id: &str) -> Result<String> {
         }
         "fig6" => fig6_waiting::run(ctx),
         "fig7" => fig7_uts::run(ctx),
+        "fig9" => fig9_domains::run(ctx),
         "table1" => table1_granularity::run(ctx),
         "stats" => stats_check::run(ctx),
         "all" => {
@@ -61,6 +63,8 @@ pub fn run(ctx: &Ctx, id: &str) -> Result<String> {
             out.push_str(&fig6_waiting::run(ctx)?);
             out.push('\n');
             out.push_str(&fig7_uts::run(ctx)?);
+            out.push('\n');
+            out.push_str(&fig9_domains::run(ctx)?);
             out.push('\n');
             out.push_str(&table1_granularity::run(ctx)?);
             out.push('\n');

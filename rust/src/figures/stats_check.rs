@@ -21,10 +21,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
                 .makespan_us
                 / 1e6,
         );
-        let half = crate::migrate::MigrateConfig {
-            victim: crate::migrate::VictimPolicy::Half,
-            ..MigrateConfig::default()
-        };
+        let half = MigrateConfig::default().with_victim(crate::migrate::VictimPolicy::Half);
         steal.push(ctx.run_cholesky(nodes, half, 6000 + s, false).makespan_us / 1e6);
     }
     let mut out = String::new();

@@ -36,5 +36,6 @@ pub mod sched;
 pub mod sim;
 pub mod stats;
 pub mod term;
+pub mod topology;
 pub mod util;
 pub mod workloads;

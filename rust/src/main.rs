@@ -4,7 +4,7 @@
 //!
 //! * `run`       — one run (DES by default; `--backend real` for the
 //!   threaded runtime, `--backend pjrt` for real PJRT tile kernels).
-//! * `figure`    — regenerate a paper figure/table (`fig1..fig8`,
+//! * `figure`    — regenerate a paper figure/table (`fig1..fig9`,
 //!   `table1`, `stats`, `all`).
 //! * `calibrate` — measure PJRT kernel timings, fit and store the DES
 //!   cost model.
@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 
 use parsteal::config::{RunConfig, Workload};
 use parsteal::dataflow::ttg::TaskGraph;
-use parsteal::figures::{self, Ctx, Scale};
+use parsteal::figures::{self, Ctx, RunOverrides, Scale};
 use parsteal::node::{Cluster, ClusterConfig, SpinExecutor};
 use parsteal::runtime::executor::build_tile_store;
 use parsteal::runtime::{calibrate, KernelService, PjrtCholeskyExecutor};
@@ -38,10 +38,13 @@ fn usage() -> String {
      \x20         [--batch-activations true]\n\
      \x20         [--faults off|drop=P,dup=P,delay=Fx,slow-node=N,\n\
      \x20          crash-node=N,crash-at-us=T,crash-p=P,...]\n\
+     \x20         [--topology flat|socket=S,rack=R,socket-lat-us=L,...]\n\
+     \x20         [--steal-domains flat|hierarchical]\n\
      \x20         [--backend sim|real|pjrt] [--artifacts artifacts]\n\
-     repro figure <fig1..fig8|table1|stats|all> [--out results] [--seeds 5]\n\
+     repro figure <fig1..fig9|table1|stats|all> [--out results] [--seeds 5]\n\
      \x20         [--figure-scale small|paper] [--sched central|sharded|workassist]\n\
      \x20         [--victim-select uniform|targeted] [--artifacts artifacts]\n\
+     \x20         [--topology SPEC] [--steal-domains flat|hierarchical]\n\
      repro calibrate [--reps 50] [--out artifacts/costmodel.json]\n\
      repro verify [--tiles 6] [--tile-size 16] [--nodes 2] [--workers 2]\n\
      \x20         [--steal true] [--sched central|sharded|workassist]\n\
@@ -94,21 +97,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             let g2 = graph.clone();
             let tile = p.tile_size;
             let ex = Arc::new(SpinExecutor::new(cost, tile, move |t| g2.work_units(t)));
-            Cluster::run(
-                graph,
-                ClusterConfig {
-                    workers_per_node: cfg.workers_per_node,
-                    link: cfg.link,
-                    migrate: cfg.migrate,
-                    seed: cfg.seed,
-                    record_polls: true,
-                    sched: cfg.sched,
-                    batch_activations: cfg.batch_activations,
-                    pool_floor: cfg.pool_floor,
-                    faults: cfg.faults,
-                },
-                ex,
-            )
+            Cluster::run(graph, cfg.cluster_config(), ex)
         }
         (Workload::Cholesky(p), "pjrt") => {
             let graph = Arc::new(CholeskyGraph::new(p.clone()));
@@ -118,41 +107,13 @@ fn cmd_run(args: &Args) -> Result<()> {
                 args.u64_or("pjrt-threads", 2)? as usize,
             )?;
             let ex = Arc::new(PjrtCholeskyExecutor::new(graph.clone(), svc));
-            Cluster::run(
-                graph,
-                ClusterConfig {
-                    workers_per_node: cfg.workers_per_node,
-                    link: cfg.link,
-                    migrate: cfg.migrate,
-                    seed: cfg.seed,
-                    record_polls: true,
-                    sched: cfg.sched,
-                    batch_activations: cfg.batch_activations,
-                    pool_floor: cfg.pool_floor,
-                    faults: cfg.faults,
-                },
-                ex,
-            )
+            Cluster::run(graph, cfg.cluster_config(), ex)
         }
         (Workload::Uts(p), "real") => {
             let graph = Arc::new(UtsGraph::new(*p));
             let g2 = graph.clone();
             let ex = Arc::new(SpinExecutor::new(cost, 0, move |t| g2.work_units(t)));
-            Cluster::run(
-                graph,
-                ClusterConfig {
-                    workers_per_node: cfg.workers_per_node,
-                    link: cfg.link,
-                    migrate: cfg.migrate,
-                    seed: cfg.seed,
-                    record_polls: true,
-                    sched: cfg.sched,
-                    batch_activations: cfg.batch_activations,
-                    pool_floor: cfg.pool_floor,
-                    faults: cfg.faults,
-                },
-                ex,
-            )
+            Cluster::run(graph, cfg.cluster_config(), ex)
         }
         (_, other) => bail!("unsupported backend '{other}' for this workload"),
     };
@@ -196,6 +157,22 @@ fn cmd_run(args: &Args) -> Result<()> {
         "sched:           batches: {}; max watermark {wm}, {walks} fallback walks",
         if site_text.is_empty() { "none".to_string() } else { site_text }
     );
+    if !cfg.topology.is_flat() || cfg.steal_domains != parsteal::topology::StealDomains::Flat {
+        let tiers = report.tier_steal_totals();
+        let per_tier = parsteal::topology::TIER_NAMES
+            .iter()
+            .zip(tiers)
+            .map(|(name, (req, _, _))| format!("{name} {req}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!(
+            "topology:        [{}] domains {}; tier requests: {per_tier}; cross-tier {} requests / {} bytes",
+            cfg.topology.label(),
+            cfg.steal_domains.label(),
+            report.cross_tier_steal_requests(),
+            report.cross_tier_steal_bytes()
+        );
+    }
     if steals.requests_sent > 0 {
         let victims = report.victim_totals();
         let text = victims
@@ -280,11 +257,22 @@ fn cmd_figure(args: &Args) -> Result<()> {
         .str_or("victim-select", "uniform")
         .parse::<parsteal::migrate::VictimSelect>()
         .map_err(anyhow::Error::msg)?;
+    let topology = args
+        .str_or("topology", "flat")
+        .parse::<parsteal::topology::Topology>()
+        .map_err(anyhow::Error::msg)?;
+    let steal_domains = args
+        .str_or("steal-domains", "flat")
+        .parse::<parsteal::topology::StealDomains>()
+        .map_err(anyhow::Error::msg)?;
     let artifacts = artifacts_dir(args);
     args.check_unknown()?;
-    let ctx = Ctx::new(scale, seeds, &artifacts, &out)
+    let overrides = RunOverrides::default()
         .with_sched(sched)
-        .with_victim_select(victim_select);
+        .with_victim_select(victim_select)
+        .with_topology(topology)
+        .with_steal_domains(steal_domains);
+    let ctx = Ctx::new(scale, seeds, &artifacts, &out).overrides(overrides);
     let text = figures::run(&ctx, &id)?;
     println!("{text}");
     eprintln!("(machine-readable output under {})", out.display());
@@ -333,26 +321,19 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let svc = KernelService::start(artifacts, Some(vec![tile_size]), threads)?;
     let ex = Arc::new(PjrtCholeskyExecutor::new(graph.clone(), svc));
     let t0 = std::time::Instant::now();
+    let migrate = if steal {
+        parsteal::migrate::MigrateConfig::default().with_poll_interval_us(50.0)
+    } else {
+        parsteal::migrate::MigrateConfig::disabled()
+    };
     let report = Cluster::run(
         graph.clone(),
-        ClusterConfig {
-            workers_per_node: workers,
-            link: parsteal::comm::LinkModel::ideal(),
-            migrate: if steal {
-                parsteal::migrate::MigrateConfig {
-                    poll_interval_us: 50.0,
-                    ..Default::default()
-                }
-            } else {
-                parsteal::migrate::MigrateConfig::disabled()
-            },
-            seed: 1,
-            record_polls: false,
-            sched,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        ClusterConfig::default()
+            .with_workers_per_node(workers)
+            .with_link(parsteal::comm::LinkModel::ideal())
+            .with_migrate(migrate)
+            .with_record_polls(false)
+            .with_sched(sched),
         ex.clone(),
     );
     let wall = t0.elapsed();

@@ -10,6 +10,7 @@ use crate::comm::LinkModel;
 use crate::dataflow::task::TaskClass;
 use crate::migrate::StealStats;
 use crate::sched::{BatchSite, SchedStats};
+use crate::topology::{TIER_COUNT, TIER_NAMES};
 use crate::util::json::Json;
 
 /// One ready-queue observation, taken whenever a worker completed a
@@ -64,6 +65,18 @@ pub struct NodeReport {
     /// (membership update) or on one that never answered within the
     /// whole retry budget. A quarantined victim is never picked again.
     pub victim_quarantined: Vec<u64>,
+    /// Thief-side steal requests this node sent, by topology tier of
+    /// the victim (0 = socket, 1 = rack, 2 = cluster; see
+    /// [`crate::topology::TIER_NAMES`]). On a flat topology every
+    /// remote victim is cluster-distance, so only index 2 is nonzero.
+    /// Sums to `steal.requests_sent`.
+    pub tier_steal_requests: [u64; TIER_COUNT],
+    /// Granted replies this node received, by victim tier. Sums to
+    /// `steal.successful_steals`.
+    pub tier_steal_grants: [u64; TIER_COUNT],
+    /// Stolen-task payload bytes that crossed each tier toward this
+    /// node (granted-reply wire bytes, by victim tier).
+    pub tier_steal_bytes: [u64; TIER_COUNT],
     /// Steal requests this node abandoned after the watchdog deadline
     /// (`--faults` only; reliable fabrics answer every request).
     pub steal_timeouts: u64,
@@ -285,9 +298,38 @@ impl RunReport {
         self.nodes.iter().map(|n| n.dup_replies_suppressed).sum()
     }
 
+    /// Per-tier steal traffic summed across thieves: `(requests,
+    /// grants, bytes)` indexed by topology tier
+    /// ([`crate::topology::TIER_NAMES`]).
+    pub fn tier_steal_totals(&self) -> [(u64, u64, u64); TIER_COUNT] {
+        let mut out = [(0u64, 0u64, 0u64); TIER_COUNT];
+        for n in &self.nodes {
+            for t in 0..TIER_COUNT {
+                out[t].0 += n.tier_steal_requests[t];
+                out[t].1 += n.tier_steal_grants[t];
+                out[t].2 += n.tier_steal_bytes[t];
+            }
+        }
+        out
+    }
+
+    /// Steal requests that left their socket (rack + cluster tiers) —
+    /// the traffic hierarchical steal domains exist to shrink.
+    pub fn cross_tier_steal_requests(&self) -> u64 {
+        let tiers = self.tier_steal_totals();
+        tiers[1].0 + tiers[2].0
+    }
+
+    /// Stolen-payload bytes that left their socket.
+    pub fn cross_tier_steal_bytes(&self) -> u64 {
+        let tiers = self.tier_steal_totals();
+        tiers[1].2 + tiers[2].2
+    }
+
     pub fn to_json(&self) -> Json {
         let steals = self.total_steals();
         let victims = self.victim_totals();
+        let tiers = self.tier_steal_totals();
         let batch_inserts: u64 = self.nodes.iter().map(|n| n.sched.batch_inserts()).sum();
         let saved_locks: u64 = self.nodes.iter().map(|n| n.sched.batch_saved_locks()).sum();
         let denials_fed: u64 = self.nodes.iter().map(|n| n.sched.feedback_wt_denials).sum();
@@ -445,6 +487,44 @@ impl RunReport {
                 ),
             ),
             (
+                "steal_tier_requests",
+                Json::obj(
+                    TIER_NAMES
+                        .iter()
+                        .enumerate()
+                        .map(|(t, name)| (*name, Json::Num(tiers[t].0 as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "steal_tier_grants",
+                Json::obj(
+                    TIER_NAMES
+                        .iter()
+                        .enumerate()
+                        .map(|(t, name)| (*name, Json::Num(tiers[t].1 as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "steal_tier_bytes",
+                Json::obj(
+                    TIER_NAMES
+                        .iter()
+                        .enumerate()
+                        .map(|(t, name)| (*name, Json::Num(tiers[t].2 as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "cross_tier_steal_requests",
+                Json::Num(self.cross_tier_steal_requests() as f64),
+            ),
+            (
+                "cross_tier_steal_bytes",
+                Json::Num(self.cross_tier_steal_bytes() as f64),
+            ),
+            (
                 "per_node_tasks",
                 Json::Arr(
                     self.nodes
@@ -565,6 +645,36 @@ mod tests {
             vec![(5, 0, 0, 0, 0), (3, 2, 0, 1, 0), (1, 0, 4, 0, 1)],
             "summed across thieves, indexed by victim"
         );
+    }
+
+    #[test]
+    fn tier_totals_sum_across_thieves() {
+        let mut n0 = NodeReport::default();
+        n0.tier_steal_requests = [4, 2, 1];
+        n0.tier_steal_grants = [3, 1, 0];
+        n0.tier_steal_bytes = [300, 100, 0];
+        let mut n1 = NodeReport::default();
+        n1.tier_steal_requests = [0, 0, 6];
+        n1.tier_steal_bytes = [0, 0, 640];
+        let r = RunReport {
+            workload: "t".into(),
+            makespan_us: 1.0,
+            nodes: vec![n0, n1],
+            total_tasks: 0,
+            workers_per_node: 1,
+            link: LinkModel::ideal(),
+            events: 0,
+            deliver_events: 0,
+            faults_dropped: 0,
+            faults_duplicated: 0,
+            recovery: RecoveryStats::default(),
+        };
+        assert_eq!(
+            r.tier_steal_totals(),
+            [(4, 3, 300), (2, 1, 100), (7, 0, 640)]
+        );
+        assert_eq!(r.cross_tier_steal_requests(), 9, "rack + cluster");
+        assert_eq!(r.cross_tier_steal_bytes(), 740);
     }
 
     #[test]

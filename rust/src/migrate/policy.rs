@@ -102,7 +102,7 @@ impl FromStr for ThiefPolicy {
 }
 
 /// Full work-stealing configuration for a run.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MigrateConfig {
     /// Stealing enabled at all? (`No-Steal` baseline when false.)
     pub enabled: bool,
@@ -165,10 +165,67 @@ pub struct MigrateConfig {
 
 impl MigrateConfig {
     pub fn disabled() -> Self {
-        MigrateConfig {
-            enabled: false,
-            ..Self::default()
-        }
+        Self::default().with_enabled(false)
+    }
+
+    // Chainable builder setters: `MigrateConfig::default().with_victim(…)
+    // .with_share_estimates(true)`. Every construction site outside this
+    // block goes through these (or `..Default::default()` spreads), so
+    // adding a field no longer forces edits to every literal in the repo.
+
+    pub fn with_enabled(mut self, enabled: bool) -> Self {
+        self.enabled = enabled;
+        self
+    }
+
+    pub fn with_thief(mut self, thief: ThiefPolicy) -> Self {
+        self.thief = thief;
+        self
+    }
+
+    pub fn with_victim(mut self, victim: VictimPolicy) -> Self {
+        self.victim = victim;
+        self
+    }
+
+    pub fn with_use_waiting_time(mut self, on: bool) -> Self {
+        self.use_waiting_time = on;
+        self
+    }
+
+    pub fn with_poll_interval_us(mut self, us: f64) -> Self {
+        self.poll_interval_us = us;
+        self
+    }
+
+    pub fn with_max_inflight(mut self, n: usize) -> Self {
+        self.max_inflight = n;
+        self
+    }
+
+    pub fn with_migrate_overhead_us(mut self, us: f64) -> Self {
+        self.migrate_overhead_us = us;
+        self
+    }
+
+    pub fn with_exec_ewma(mut self, on: bool) -> Self {
+        self.exec_ewma = on;
+        self
+    }
+
+    pub fn with_exec_per_class(mut self, on: bool) -> Self {
+        self.exec_per_class = on;
+        self
+    }
+
+    pub fn with_share_estimates(mut self, on: bool) -> Self {
+        self.share_estimates = on;
+        self
+    }
+
+    pub fn with_victim_select(mut self, select: VictimSelect) -> Self {
+        self.victim_select = select;
+        self
     }
 
     /// Must the runtimes maintain the per-class estimator tables?
@@ -765,6 +822,38 @@ mod tests {
         assert_eq!(class_estimate_update(0.0, 40.0), 40.0, "first sample seeds");
         assert_eq!(class_estimate_update(40.0, 40.0), 40.0);
         assert_eq!(class_estimate_update(100.0, 200.0), ewma_update(100.0, 200.0));
+    }
+
+    #[test]
+    fn builder_setters_equal_exhaustive_literal() {
+        // The one place a full MigrateConfig literal is allowed to live:
+        // the builders' own equivalence check.
+        let built = MigrateConfig::default()
+            .with_enabled(false)
+            .with_thief(ThiefPolicy::ReadyOnly)
+            .with_victim(VictimPolicy::Chunk(9))
+            .with_use_waiting_time(false)
+            .with_poll_interval_us(55.0)
+            .with_max_inflight(3)
+            .with_migrate_overhead_us(40.0)
+            .with_exec_ewma(true)
+            .with_exec_per_class(true)
+            .with_share_estimates(true)
+            .with_victim_select(VictimSelect::Targeted);
+        let literal = MigrateConfig {
+            enabled: false,
+            thief: ThiefPolicy::ReadyOnly,
+            victim: VictimPolicy::Chunk(9),
+            use_waiting_time: false,
+            poll_interval_us: 55.0,
+            max_inflight: 3,
+            migrate_overhead_us: 40.0,
+            exec_ewma: true,
+            exec_per_class: true,
+            share_estimates: true,
+            victim_select: VictimSelect::Targeted,
+        };
+        assert_eq!(format!("{built:?}"), format!("{literal:?}"));
     }
 
     #[test]

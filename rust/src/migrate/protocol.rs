@@ -299,7 +299,7 @@ mod tests {
     use super::*;
     use crate::dataflow::task::{NodeId, TaskClass, TaskDesc};
     use crate::dataflow::ttg::TtgBuilder;
-    use crate::migrate::policy::{ThiefPolicy, VictimPolicy};
+    use crate::migrate::policy::VictimPolicy;
     use crate::sched::{SchedBackend, SchedQueue};
 
     fn graph(payload: u64) -> impl TaskGraph {
@@ -346,19 +346,9 @@ mod tests {
     }
 
     fn cfg(victim: VictimPolicy, gate: bool) -> MigrateConfig {
-        MigrateConfig {
-            enabled: true,
-            thief: ThiefPolicy::ReadySuccessors,
-            victim,
-            use_waiting_time: gate,
-            poll_interval_us: 100.0,
-            max_inflight: 1,
-            migrate_overhead_us: 150.0,
-            exec_ewma: false,
-            exec_per_class: false,
-            share_estimates: false,
-            victim_select: crate::migrate::VictimSelect::Uniform,
-        }
+        MigrateConfig::default()
+            .with_victim(victim)
+            .with_use_waiting_time(gate)
     }
 
     #[test]

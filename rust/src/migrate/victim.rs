@@ -44,6 +44,10 @@
 
 use std::str::FromStr;
 
+use super::policy::EstimateDigest;
+use crate::comm::LinkModel;
+use crate::dataflow::task::TaskClass;
+use crate::topology::Topology;
 use crate::util::rng::Rng;
 
 /// Per-observation decay applied to a victim's outcome counters before
@@ -172,11 +176,14 @@ pub struct VictimSelector {
     /// cost-noise stream is never perturbed.
     rng: Rng,
     epsilon: f64,
-    /// One-way wire latency to each candidate (µs). Uniform under the
-    /// current fabric model; kept per-victim so heterogeneous links
-    /// (and the Khatiri inversion test) price correctly.
+    /// One-way wire latency to each candidate (µs). Per-victim so a
+    /// [`Topology`] (and the Khatiri inversion test) price correctly;
+    /// uniform on a flat fabric.
     latency_us: Vec<f64>,
-    bw_bytes_per_us: f64,
+    /// Link bandwidth to each candidate (bytes/µs) — per-victim since
+    /// the topology model made links pairwise (the follow-up PR 6
+    /// deferred).
+    bw_bytes_per_us: Vec<f64>,
     /// Decayed outcome masses, per victim.
     grants: Vec<f64>,
     wt_denials: Vec<f64>,
@@ -189,6 +196,12 @@ pub struct VictimSelector {
     /// …and the clock value `richness_w` was last materialized at
     /// (ages as `DIGEST_DECAY^(clock − stamp)` when read).
     richness_stamp: Vec<u64>,
+    /// Per-victim per-[`TaskClass`] digest richness (µs) and weights —
+    /// the digest's class table, decayed on the same stamp as the
+    /// node-wide richness, consulted when the thief supplies its queued
+    /// class mix ([`VictimSelector::expected_win_mix_us`]).
+    class_richness_us: Vec<[f64; TaskClass::COUNT]>,
+    class_richness_w: Vec<[f64; TaskClass::COUNT]>,
     /// Advances once per recorded reply; the time base digest ages
     /// are measured in.
     clock: u64,
@@ -210,7 +223,7 @@ impl VictimSelector {
             rng,
             epsilon: DEFAULT_EPSILON,
             latency_us: vec![0.0; n],
-            bw_bytes_per_us: 1_000.0,
+            bw_bytes_per_us: vec![1_000.0; n],
             grants: vec![0.0; n],
             wt_denials: vec![0.0; n],
             empties: vec![0.0; n],
@@ -218,16 +231,32 @@ impl VictimSelector {
             richness_us: vec![0.0; n],
             richness_w: vec![0.0; n],
             richness_stamp: vec![0; n],
+            class_richness_us: vec![[0.0; TaskClass::COUNT]; n],
+            class_richness_w: vec![[0.0; TaskClass::COUNT]; n],
             clock: 0,
             quarantined: vec![false; n],
         }
     }
 
-    /// Price every candidate with the same link, matching today's
-    /// uniform fabric ([`crate::comm::LinkModel`]).
+    /// Price every candidate with the same link — a flat fabric
+    /// ([`crate::comm::LinkModel`]).
     pub fn with_link(mut self, latency_us: f64, bw_bytes_per_us: f64) -> VictimSelector {
         self.latency_us.fill(latency_us);
-        self.bw_bytes_per_us = bw_bytes_per_us.max(f64::MIN_POSITIVE);
+        self.bw_bytes_per_us
+            .fill(bw_bytes_per_us.max(f64::MIN_POSITIVE));
+        self
+    }
+
+    /// Price each candidate with its pairwise link under `topo`
+    /// ([`Topology::link_between`]). With a flat topology every pair
+    /// resolves to `base` and this is exactly
+    /// [`VictimSelector::with_link`] on the base parameters.
+    pub fn with_topology(mut self, topo: &Topology, base: LinkModel) -> VictimSelector {
+        for v in 0..self.n {
+            let l = topo.link_between(self.node, v, base);
+            self.latency_us[v] = l.latency_us;
+            self.bw_bytes_per_us[v] = l.bw_bytes_per_us.max(f64::MIN_POSITIVE);
+        }
         self
     }
 
@@ -241,12 +270,19 @@ impl VictimSelector {
         self.latency_us[victim] = latency_us;
     }
 
-    /// Feed one steal reply into the history. `digest_avg_us` is the
-    /// node-wide estimate from the reply's [`super::EstimateDigest`],
-    /// when one travelled — it refreshes the victim's richness signal.
-    /// O(1): decays only the observed victim's counters and advances
-    /// the clock (other victims' digests age lazily via the clock).
-    pub fn record(&mut self, victim: usize, outcome: VictimOutcome, digest_avg_us: Option<f64>) {
+    /// Feed one steal reply into the history. `digest` is the reply's
+    /// [`EstimateDigest`], when one travelled — its node-wide estimate
+    /// refreshes the victim's richness signal and its per-class table
+    /// refreshes the class-aware richness consulted by
+    /// [`VictimSelector::expected_win_mix_us`]. O(1): decays only the
+    /// observed victim's counters and advances the clock (other
+    /// victims' digests age lazily via the clock).
+    pub fn record(
+        &mut self,
+        victim: usize,
+        outcome: VictimOutcome,
+        digest: Option<&EstimateDigest>,
+    ) {
         self.clock += 1;
         self.grants[victim] *= OUTCOME_DECAY;
         self.wt_denials[victim] *= OUTCOME_DECAY;
@@ -259,22 +295,43 @@ impl VictimSelector {
             VictimOutcome::TimedOut => self.timeouts[victim] += 1.0,
             VictimOutcome::Quarantined => self.quarantined[victim] = true,
         }
-        if let Some(avg_us) = digest_avg_us {
-            if avg_us > 0.0 {
-                let aged = self.aged_digest_weight(victim);
+        if let Some(d) = digest {
+            if d.avg_us > 0.0 {
+                // Age the victim's whole digest record (node-wide and
+                // per-class share one stamp, so one powi covers both),
+                // then fold in the fresh observation.
+                let decay = self.digest_age_factor(victim);
+                let aged = self.richness_w[victim] * decay;
                 let w = aged + 1.0;
                 self.richness_us[victim] =
-                    (self.richness_us[victim] * aged + avg_us) / w;
+                    (self.richness_us[victim] * aged + d.avg_us) / w;
                 self.richness_w[victim] = w;
+                for c in 0..TaskClass::COUNT {
+                    let cw = self.class_richness_w[victim][c] * decay;
+                    if d.class_samples[c] > 0 && d.class_est_us[c] > 0.0 {
+                        let nw = cw + 1.0;
+                        self.class_richness_us[victim][c] =
+                            (self.class_richness_us[victim][c] * cw + d.class_est_us[c]) / nw;
+                        self.class_richness_w[victim][c] = nw;
+                    } else {
+                        self.class_richness_w[victim][c] = cw;
+                    }
+                }
                 self.richness_stamp[victim] = self.clock;
             }
         }
     }
 
+    /// Lazy-aging factor for the victim's digest record at the current
+    /// clock: `DIGEST_DECAY^(clock − stamp)`.
+    fn digest_age_factor(&self, victim: usize) -> f64 {
+        let age = (self.clock - self.richness_stamp[victim]).min(4_096) as i32;
+        DIGEST_DECAY.powi(age)
+    }
+
     /// The victim's digest-observation weight after lazy aging.
     fn aged_digest_weight(&self, victim: usize) -> f64 {
-        let age = (self.clock - self.richness_stamp[victim]).min(4_096) as i32;
-        self.richness_w[victim] * DIGEST_DECAY.powi(age)
+        self.richness_w[victim] * self.digest_age_factor(victim)
     }
 
     /// Laplace-smoothed probability that a request to `victim` comes
@@ -295,17 +352,67 @@ impl VictimSelector {
         (w * self.richness_us[victim] + DIGEST_PRIOR * fallback_us) / (w + DIGEST_PRIOR)
     }
 
+    /// Class-aware expected win: the digest's per-class table weighted
+    /// by the thief's queued class mix, instead of the node-wide mean.
+    /// Each queued class contributes its aged per-class richness shrunk
+    /// toward the node-wide expectation (which itself shrinks toward
+    /// `fallback_us`), weighted by its share of the mix. An empty mix —
+    /// the common case for a fully starved thief — degenerates to
+    /// [`VictimSelector::expected_win_us`] exactly, as does a victim
+    /// whose digests never carried class entries.
+    pub fn expected_win_mix_us(
+        &self,
+        victim: usize,
+        mix: &[usize; TaskClass::COUNT],
+        fallback_us: f64,
+    ) -> f64 {
+        let total: usize = mix.iter().sum();
+        if total == 0 {
+            return self.expected_win_us(victim, fallback_us);
+        }
+        let base = self.expected_win_us(victim, fallback_us);
+        let decay = self.digest_age_factor(victim);
+        let mut acc = 0.0;
+        for c in 0..TaskClass::COUNT {
+            if mix[c] == 0 {
+                continue;
+            }
+            let cw = self.class_richness_w[victim][c] * decay;
+            let est = (cw * self.class_richness_us[victim][c] + DIGEST_PRIOR * base)
+                / (cw + DIGEST_PRIOR);
+            acc += mix[c] as f64 * est;
+        }
+        acc / total as f64
+    }
+
     /// The steal's modeled price: request out, reply back
-    /// (`2·latency`), plus the minimal granted reply's bytes at link
-    /// bandwidth. A constant per victim — no queue is consulted.
+    /// (`2·latency`), plus the minimal granted reply's bytes at the
+    /// pairwise link bandwidth. A constant per victim — no queue is
+    /// consulted.
     pub fn round_trip_cost_us(&self, victim: usize) -> f64 {
-        2.0 * self.latency_us[victim] + PRICED_REPLY_BYTES / self.bw_bytes_per_us
+        2.0 * self.latency_us[victim] + PRICED_REPLY_BYTES / self.bw_bytes_per_us[victim]
     }
 
     /// The candidate's full score (µs of expected net win).
     pub fn score(&self, victim: usize, fallback_win_us: f64) -> f64 {
         self.grant_likelihood(victim) * self.expected_win_us(victim, fallback_win_us)
             - self.round_trip_cost_us(victim)
+    }
+
+    /// [`VictimSelector::score`] with the thief's queued class mix
+    /// driving the expected win (`None` = node-wide, identical to
+    /// `score`).
+    pub fn score_mix(
+        &self,
+        victim: usize,
+        fallback_win_us: f64,
+        mix: Option<&[usize; TaskClass::COUNT]>,
+    ) -> f64 {
+        let win = match mix {
+            Some(m) => self.expected_win_mix_us(victim, m, fallback_win_us),
+            None => self.expected_win_us(victim, fallback_win_us),
+        };
+        self.grant_likelihood(victim) * win - self.round_trip_cost_us(victim)
     }
 
     /// Choose a victim: with probability ε a uniform-random candidate
@@ -315,23 +422,49 @@ impl VictimSelector {
     /// and the selector degenerates to the paper's protocol). Never
     /// returns `self.node`. O(candidates).
     pub fn pick(&mut self, fallback_win_us: f64) -> usize {
+        self.pick_scoped(fallback_win_us, None, None)
+    }
+
+    /// [`VictimSelector::pick`] restricted to a steal domain and/or
+    /// class-mix-aware:
+    ///
+    /// * `domain` — per-node membership mask (`--steal-domains
+    ///   hierarchical` passes the current escalation tier's peers);
+    ///   `None` = every remote node, exactly `pick`'s candidate set.
+    /// * `mix` — the thief's queued class mix for the expected-win term
+    ///   ([`VictimSelector::score_mix`]); `None` or all-zero = the
+    ///   node-wide mean.
+    ///
+    /// With both `None` this *is* `pick`: same candidate walk, same RNG
+    /// draws, same result — the byte-identity anchor for flat runs.
+    pub fn pick_scoped(
+        &mut self,
+        fallback_win_us: f64,
+        domain: Option<&[bool]>,
+        mix: Option<&[usize; TaskClass::COUNT]>,
+    ) -> usize {
         debug_assert!(self.n > 1);
-        let live = (0..self.n)
-            .filter(|&v| v != self.node && !self.quarantined[v])
-            .count();
+        let allowed = |sel: &Self, v: usize| {
+            v != sel.node
+                && !sel.quarantined[v]
+                && domain.map_or(true, |d| d.get(v).copied().unwrap_or(false))
+        };
+        let live = (0..self.n).filter(|&v| allowed(self, v)).count();
         if live == 0 {
-            // Every candidate is quarantined: there is no good answer,
-            // so fall back to a uniform draw — the ensuing request times
-            // out or is denied like any other and stealing starves out.
+            // Every candidate is quarantined (or the whole domain is):
+            // there is no good answer, so fall back to a uniform draw —
+            // the ensuing request times out or is denied like any other
+            // and stealing starves out.
             return self.rng.pick_other(self.n, self.node);
         }
         if self.epsilon > 0.0 && self.rng.uniform() < self.epsilon {
-            // k-th live candidate. With nothing quarantined this is the
-            // same draw and the same index map as `Rng::pick_other`, so
-            // quarantine-free runs are byte-identical to PR 8.
+            // k-th live candidate. With nothing quarantined and no
+            // domain this is the same draw and the same index map as
+            // `Rng::pick_other`, so quarantine-free flat runs are
+            // byte-identical to PR 8.
             let mut k = self.rng.below(live as u64) as usize;
             for v in 0..self.n {
-                if v == self.node || self.quarantined[v] {
+                if !allowed(self, v) {
                     continue;
                 }
                 if k == 0 {
@@ -345,10 +478,10 @@ impl VictimSelector {
         let mut best_score = f64::NEG_INFINITY;
         let mut ties = 0u64;
         for v in 0..self.n {
-            if v == self.node || self.quarantined[v] {
+            if !allowed(self, v) {
                 continue;
             }
-            let s = self.score(v, fallback_win_us);
+            let s = self.score_mix(v, fallback_win_us, mix);
             if s > best_score || best == usize::MAX {
                 best = v;
                 best_score = s;
@@ -393,6 +526,26 @@ mod tests {
         VictimSelector::new(node, n, thief_rng(42, node)).with_link(1.0, 1_000.0)
     }
 
+    /// A digest carrying only the node-wide estimate — what most tests
+    /// feed [`VictimSelector::record`].
+    fn digest(avg_us: f64) -> EstimateDigest {
+        EstimateDigest {
+            avg_us,
+            avg_samples: 1,
+            class_est_us: [0.0; TaskClass::COUNT],
+            class_samples: [0; TaskClass::COUNT],
+        }
+    }
+
+    /// A digest with one seeded class entry on top of the node-wide
+    /// estimate.
+    fn class_digest(avg_us: f64, class: TaskClass, est_us: f64) -> EstimateDigest {
+        let mut d = digest(avg_us);
+        d.class_est_us[class.idx()] = est_us;
+        d.class_samples[class.idx()] = 1;
+        d
+    }
+
     #[test]
     fn select_labels_round_trip() {
         for s in [VictimSelect::Uniform, VictimSelect::Targeted] {
@@ -428,7 +581,7 @@ mod tests {
     fn granting_victim_outscores_denying_victim() {
         let mut s = selector(0, 3).with_epsilon(0.0);
         for _ in 0..5 {
-            s.record(1, VictimOutcome::Granted, Some(50.0));
+            s.record(1, VictimOutcome::Granted, Some(&digest(50.0)));
             s.record(2, VictimOutcome::DeniedEmpty, None);
         }
         assert!(s.grant_likelihood(1) > 0.8, "{}", s.grant_likelihood(1));
@@ -444,8 +597,8 @@ mod tests {
         let mut s = selector(0, 3).with_epsilon(0.0);
         // Both victims grant equally; victim 1's tasks are 100× fatter.
         for _ in 0..4 {
-            s.record(1, VictimOutcome::Granted, Some(1_000.0));
-            s.record(2, VictimOutcome::Granted, Some(10.0));
+            s.record(1, VictimOutcome::Granted, Some(&digest(1_000.0)));
+            s.record(2, VictimOutcome::Granted, Some(&digest(10.0)));
         }
         assert!(s.expected_win_us(1, 10.0) > s.expected_win_us(2, 10.0));
         assert_eq!(s.pick(10.0), 1);
@@ -457,7 +610,7 @@ mod tests {
         // link prices below a poor one next door.
         let mut s = selector(0, 3).with_epsilon(0.0);
         for _ in 0..4 {
-            s.record(1, VictimOutcome::Granted, Some(10_000.0)); // rich…
+            s.record(1, VictimOutcome::Granted, Some(&digest(10_000.0))); // rich…
             s.record(2, VictimOutcome::Granted, Some(100.0)); // …poor
         }
         assert_eq!(s.pick(100.0), 1, "equal links: richness wins");
@@ -471,7 +624,7 @@ mod tests {
     fn timeouts_score_like_misses_but_decay_and_fade() {
         let mut s = selector(0, 3).with_epsilon(0.0);
         for _ in 0..5 {
-            s.record(1, VictimOutcome::Granted, Some(50.0));
+            s.record(1, VictimOutcome::Granted, Some(&digest(50.0)));
             s.record(2, VictimOutcome::TimedOut, None);
         }
         // A victim that never answers prices like one that answers empty.
@@ -482,7 +635,7 @@ mod tests {
         }
         // Decay forgives a recovered victim (the fault window closed).
         for _ in 0..5 {
-            s.record(2, VictimOutcome::Granted, Some(50.0));
+            s.record(2, VictimOutcome::Granted, Some(&digest(50.0)));
         }
         assert!(
             s.grant_likelihood(2) > 0.6,
@@ -505,7 +658,7 @@ mod tests {
         // The victim fills up: a few grants outweigh the decayed
         // denial history well before 10 more probes.
         for _ in 0..5 {
-            s.record(1, VictimOutcome::Granted, Some(50.0));
+            s.record(1, VictimOutcome::Granted, Some(&digest(50.0)));
         }
         assert!(
             s.grant_likelihood(1) > 0.6,
@@ -517,7 +670,7 @@ mod tests {
     #[test]
     fn digest_observations_age_toward_fallback() {
         let mut s = selector(0, 3).with_epsilon(0.0);
-        s.record(1, VictimOutcome::Granted, Some(10_000.0));
+        s.record(1, VictimOutcome::Granted, Some(&digest(10_000.0)));
         let fresh = s.expected_win_us(1, 10.0);
         assert!(fresh > 4_000.0, "fresh digest dominates: {fresh}");
         // 200 clock ticks of unrelated traffic age the observation out.
@@ -533,7 +686,7 @@ mod tests {
     fn fade_returns_selector_to_uniform() {
         let mut s = selector(0, 4).with_epsilon(0.0);
         for _ in 0..6 {
-            s.record(1, VictimOutcome::Granted, Some(500.0));
+            s.record(1, VictimOutcome::Granted, Some(&digest(500.0)));
             s.record(2, VictimOutcome::DeniedEmpty, None);
             s.record(3, VictimOutcome::DeniedWaitingTime, None);
         }
@@ -572,7 +725,7 @@ mod tests {
         let mut s = selector(0, 4).with_epsilon(0.5);
         // Victim 1 is the richest by far — then it crash-stops.
         for _ in 0..6 {
-            s.record(1, VictimOutcome::Granted, Some(10_000.0));
+            s.record(1, VictimOutcome::Granted, Some(&digest(10_000.0)));
         }
         s.record(1, VictimOutcome::Quarantined, None);
         assert!(s.is_quarantined(1));
@@ -583,7 +736,7 @@ mod tests {
         }
         // Neither decay, fresh grants elsewhere, nor fade() forgive it.
         for _ in 0..50 {
-            s.record(2, VictimOutcome::Granted, Some(50.0));
+            s.record(2, VictimOutcome::Granted, Some(&digest(50.0)));
         }
         s.fade(0.0);
         assert!(s.is_quarantined(1));
@@ -609,7 +762,7 @@ mod tests {
         let mut a = selector(0, 5).with_epsilon(0.0);
         let mut b = selector(0, 5).with_epsilon(0.0);
         let feed = |s: &mut VictimSelector| {
-            s.record(1, VictimOutcome::Granted, Some(300.0));
+            s.record(1, VictimOutcome::Granted, Some(&digest(300.0)));
             s.record(2, VictimOutcome::DeniedWaitingTime, None);
             s.record(3, VictimOutcome::DeniedEmpty, None);
             s.record(4, VictimOutcome::Granted, None);
@@ -622,5 +775,93 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(a.pick(80.0), b.pick(80.0));
         }
+    }
+
+    #[test]
+    fn topology_prices_links_pairwise() {
+        let base = LinkModel::cluster();
+        let topo: Topology = "socket=2,socket-lat-us=1,socket-bw=40000,cluster-lat-us=20,cluster-bw=2500"
+            .parse()
+            .unwrap();
+        let s = VictimSelector::new(0, 4, thief_rng(7, 0)).with_topology(&topo, base);
+        // Socket mate: 2·1 + 64/40000; cross-socket: 2·20 + 64/2500.
+        assert_eq!(s.round_trip_cost_us(1), 2.0 + 64.0 / 40_000.0);
+        assert_eq!(s.round_trip_cost_us(2), 40.0 + 64.0 / 2_500.0);
+        assert_eq!(s.round_trip_cost_us(2), s.round_trip_cost_us(3));
+        // Flat topology ≡ with_link on the base parameters, bit-for-bit.
+        let flat = VictimSelector::new(0, 4, thief_rng(7, 0))
+            .with_topology(&Topology::flat(), base);
+        let uniform = VictimSelector::new(0, 4, thief_rng(7, 0))
+            .with_link(base.latency_us, base.bw_bytes_per_us);
+        for v in 1..4 {
+            assert_eq!(
+                flat.round_trip_cost_us(v).to_bits(),
+                uniform.round_trip_cost_us(v).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn pick_scoped_respects_the_domain_mask() {
+        let mut s = selector(0, 8).with_epsilon(0.5);
+        // Victim 5 is far richer — but outside the domain.
+        for _ in 0..6 {
+            s.record(5, VictimOutcome::Granted, Some(&digest(10_000.0)));
+        }
+        let domain = [false, true, true, true, false, false, false, false];
+        for _ in 0..300 {
+            let v = s.pick_scoped(50.0, Some(&domain), None);
+            assert!((1..=3).contains(&v), "out-of-domain pick: {v}");
+        }
+        // An empty domain falls back to a uniform draw over everyone.
+        let none = [false; 8];
+        for _ in 0..50 {
+            assert_ne!(s.pick_scoped(50.0, Some(&none), None), 0);
+        }
+        // No domain, no mix ≡ pick (same draws on identical clones).
+        let mut a = selector(1, 6).with_epsilon(0.3);
+        let mut b = a.clone();
+        for _ in 0..100 {
+            assert_eq!(a.pick(20.0), b.pick_scoped(20.0, None, None));
+        }
+    }
+
+    #[test]
+    fn class_mix_weighs_digest_class_table() {
+        let mut s = selector(0, 3).with_epsilon(0.0);
+        // Victim 1 is rich in GEMMs, victim 2 in POTRFs; identical
+        // node-wide averages, so the mean-based score cannot tell them
+        // apart.
+        for _ in 0..4 {
+            s.record(
+                1,
+                VictimOutcome::Granted,
+                Some(&class_digest(500.0, TaskClass::Gemm, 2_000.0)),
+            );
+            s.record(
+                2,
+                VictimOutcome::Granted,
+                Some(&class_digest(500.0, TaskClass::Potrf, 2_000.0)),
+            );
+        }
+        assert_eq!(s.expected_win_us(1, 100.0), s.expected_win_us(2, 100.0));
+        let mut gemm_mix = [0usize; TaskClass::COUNT];
+        gemm_mix[TaskClass::Gemm.idx()] = 5;
+        assert!(
+            s.expected_win_mix_us(1, &gemm_mix, 100.0)
+                > s.expected_win_mix_us(2, &gemm_mix, 100.0),
+            "a GEMM-heavy thief values the GEMM-rich victim more"
+        );
+        assert_eq!(s.pick_scoped(100.0, None, Some(&gemm_mix)), 1);
+        let mut potrf_mix = [0usize; TaskClass::COUNT];
+        potrf_mix[TaskClass::Potrf.idx()] = 5;
+        assert_eq!(s.pick_scoped(100.0, None, Some(&potrf_mix)), 2);
+        // An empty mix degenerates to the node-wide mean exactly.
+        let empty = [0usize; TaskClass::COUNT];
+        assert_eq!(
+            s.expected_win_mix_us(1, &empty, 100.0),
+            s.expected_win_us(1, 100.0)
+        );
+        assert_eq!(s.score_mix(1, 100.0, None), s.score(1, 100.0));
     }
 }

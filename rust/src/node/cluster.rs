@@ -20,10 +20,11 @@ use crate::migrate::{
 };
 use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, StealOutcome, TaskMeta};
 use crate::term::{SafraAction, SafraState};
+use crate::topology::{EscalationState, StealDomains, Topology, TIER_COUNT};
 use crate::util::rng::{fault_rng, thief_rng};
 
 /// Real-mode run configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClusterConfig {
     pub workers_per_node: usize,
     pub link: LinkModel,
@@ -47,6 +48,15 @@ pub struct ClusterConfig {
     /// Disabled by default — the fabric and protocol are then
     /// byte-identical to the fault-free runtime.
     pub faults: FaultPlan,
+    /// Tiered link model (`--topology`): the single source of per-pair
+    /// link parameters for the wire model, the steal/suspicion timeout
+    /// formulas and the victim selector's round-trip price. The flat
+    /// default leaves every pair on `link`, byte-identical to the
+    /// untiered runtime.
+    pub topology: Topology,
+    /// Steal-domain policy (`--steal-domains`): hierarchical thieves
+    /// exhaust the nearest topology tier before escalating outward.
+    pub steal_domains: StealDomains,
 }
 
 impl Default for ClusterConfig {
@@ -61,7 +71,59 @@ impl Default for ClusterConfig {
             batch_activations: true,
             pool_floor: POOL_FLOOR,
             faults: FaultPlan::default(),
+            topology: Topology::flat(),
+            steal_domains: StealDomains::Flat,
         }
+    }
+}
+
+/// Chainable setters: `ClusterConfig::default().with_seed(7)…` — the
+/// builder face of the config, so call sites name only what they
+/// change and new fields stop taxing every struct literal in the tree.
+impl ClusterConfig {
+    pub fn with_workers_per_node(mut self, v: usize) -> Self {
+        self.workers_per_node = v;
+        self
+    }
+    pub fn with_link(mut self, v: LinkModel) -> Self {
+        self.link = v;
+        self
+    }
+    pub fn with_migrate(mut self, v: MigrateConfig) -> Self {
+        self.migrate = v;
+        self
+    }
+    pub fn with_seed(mut self, v: u64) -> Self {
+        self.seed = v;
+        self
+    }
+    pub fn with_record_polls(mut self, v: bool) -> Self {
+        self.record_polls = v;
+        self
+    }
+    pub fn with_sched(mut self, v: SchedBackend) -> Self {
+        self.sched = v;
+        self
+    }
+    pub fn with_batch_activations(mut self, v: bool) -> Self {
+        self.batch_activations = v;
+        self
+    }
+    pub fn with_pool_floor(mut self, v: usize) -> Self {
+        self.pool_floor = v;
+        self
+    }
+    pub fn with_faults(mut self, v: FaultPlan) -> Self {
+        self.faults = v;
+        self
+    }
+    pub fn with_topology(mut self, v: Topology) -> Self {
+        self.topology = v;
+        self
+    }
+    pub fn with_steal_domains(mut self, v: StealDomains) -> Self {
+        self.steal_domains = v;
+        self
     }
 }
 
@@ -201,6 +263,23 @@ struct NodeState {
     /// picked by the migrate thread, fed replies by the comm thread.
     /// Uniform mode never takes this lock.
     victim_sel: Mutex<VictimSelector>,
+    /// Hierarchical steal-domain escalation (`--steal-domains
+    /// hierarchical`): the migrate thread reads the current tier when
+    /// choosing a victim, the comm thread resets/widens it on reply
+    /// outcomes. Flat mode never takes this lock.
+    escalation: Mutex<EscalationState>,
+    /// Thief-side steal traffic by topology tier of the victim:
+    /// requests sent (including retries), granted replies, and granted
+    /// reply wire bytes. On a flat topology everything lands in the
+    /// cluster tier.
+    tier_steal_requests: [AtomicU64; TIER_COUNT],
+    tier_steal_grants: [AtomicU64; TIER_COUNT],
+    tier_steal_bytes: [AtomicU64; TIER_COUNT],
+    /// Per-class ready-queue population, maintained incrementally
+    /// (increment before the queue insert, decrement after the pop, so
+    /// the count never transiently underflows): the thief-side class
+    /// mix the targeted selector weighs digests against.
+    queued_class: [AtomicU64; TaskClass::COUNT],
     inflight_steals: AtomicUsize,
     /// Monotone request-id counter for [`steal_req_id`].
     next_req: AtomicU64,
@@ -298,7 +377,8 @@ impl Cluster {
         executor: Arc<dyn super::TaskExecutor>,
     ) -> RunReport {
         let n = graph.num_nodes();
-        let (net, mailboxes) = Network::new_with_faults(n, cfg.link, cfg.faults, cfg.seed);
+        let (net, mailboxes) =
+            Network::new_with_topology(n, cfg.link, cfg.topology, cfg.faults, cfg.seed);
         let nodes: Vec<Arc<NodeState>> = (0..n)
             .map(|i| {
                 Arc::new(NodeState {
@@ -329,8 +409,13 @@ impl Cluster {
                     victim_quarantined: (0..n).map(|_| AtomicU64::new(0)).collect(),
                     victim_sel: Mutex::new(
                         VictimSelector::new(i, n.max(2), thief_rng(cfg.seed, i))
-                            .with_link(cfg.link.latency_us, cfg.link.bw_bytes_per_us),
+                            .with_topology(&cfg.topology, cfg.link),
                     ),
+                    escalation: Mutex::new(EscalationState::new(&cfg.topology, i, n)),
+                    tier_steal_requests: std::array::from_fn(|_| AtomicU64::new(0)),
+                    tier_steal_grants: std::array::from_fn(|_| AtomicU64::new(0)),
+                    tier_steal_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
+                    queued_class: std::array::from_fn(|_| AtomicU64::new(0)),
                     inflight_steals: AtomicUsize::new(0),
                     next_req: AtomicU64::new(0),
                     steal_book: Mutex::new(StealBook::default()),
@@ -531,6 +616,15 @@ impl Cluster {
                             .iter()
                             .map(|a| a.load(Ordering::Relaxed))
                             .collect(),
+                        tier_steal_requests: std::array::from_fn(|t| {
+                            nd.tier_steal_requests[t].load(Ordering::Relaxed)
+                        }),
+                        tier_steal_grants: std::array::from_fn(|t| {
+                            nd.tier_steal_grants[t].load(Ordering::Relaxed)
+                        }),
+                        tier_steal_bytes: std::array::from_fn(|t| {
+                            nd.tier_steal_bytes[t].load(Ordering::Relaxed)
+                        }),
                         steal_timeouts: nd.steal_timeouts.load(Ordering::Relaxed),
                         steal_retries: nd.steal_retries.load(Ordering::Relaxed),
                         ledger_reclaims: nd.ledger_reclaims.load(Ordering::Relaxed),
@@ -550,6 +644,7 @@ impl Cluster {
 /// Insert a ready task (with its steal-accounting meta) and wake a
 /// worker.
 fn enqueue(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
+    node.queued_class[task.class.idx()].fetch_add(1, Ordering::Relaxed);
     node.queue
         .insert_meta(task, graph.priority(task), TaskMeta::of(graph, task));
     // Only touch the idle lock when someone is (about to be) parked.
@@ -570,12 +665,27 @@ fn enqueue(node: &NodeState, graph: &dyn TaskGraph, task: TaskDesc) {
 /// SeqCst protocol; `notify_all` because a batch can feed several
 /// parked workers at once.
 fn enqueue_batch(node: &NodeState, graph: &dyn TaskGraph, tasks: &[TaskDesc], site: BatchSite) {
+    for t in tasks {
+        node.queued_class[t.class.idx()].fetch_add(1, Ordering::Relaxed);
+    }
     node.queue
         .insert_batch_at(site, &TaskMeta::batch_of(graph, tasks));
     if node.parked.load(Ordering::SeqCst) > 0 {
         let _idle = node.idle.lock().unwrap();
         node.queue_cv.notify_all();
     }
+}
+
+/// Release one task's slot in the per-class ready-queue census (the
+/// pop-side twin of the `enqueue`/`enqueue_batch` increments).
+/// Saturating: the census feeds a scoring heuristic, so a transient
+/// accounting slip must never wrap the counter.
+fn class_dec(node: &NodeState, class: TaskClass) {
+    let _ = node.queued_class[class.idx()].fetch_update(
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+        |v| Some(v.saturating_sub(1)),
+    );
 }
 
 /// Deliver one local activation; enqueue if it completed the in-degree.
@@ -855,7 +965,11 @@ fn recovery_sweep(sh: &Arc<Shared>, leader: &Arc<NodeState>, dead: usize) {
     }
 
     // (3) The dead ready queue and the workers' orphan bin.
-    ready.extend(dn.queue.drain());
+    let drained = dn.queue.drain();
+    for t in &drained {
+        class_dec(dn, t.class);
+    }
+    ready.extend(drained);
     ready.extend(dn.orphaned.lock().unwrap().drain(..));
     ready.sort_unstable();
 
@@ -972,6 +1086,7 @@ fn worker_loop(
             node.parked.fetch_sub(1, Ordering::SeqCst);
             continue;
         };
+        class_dec(&node, task.class);
         if node.crashed.load(Ordering::SeqCst) {
             // Crash-stopped between the pop and the execution: the
             // task dies with the node — into the orphan bin, where the
@@ -1110,9 +1225,13 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
     let graph = sh.graph.as_ref();
     let n = sh.nodes.len();
     let crash = sh.recovery.crash;
+    // The detector must tolerate the slowest pair in the topology, or
+    // a quiet node across the widest tier would be suspected by its
+    // own heartbeat latency (worst_link is the base link when flat).
+    let worst = sh.cfg.topology.worst_link(n, sh.cfg.link);
     let suspicion_us = suspicion_timeout_us(
-        sh.cfg.link.latency_us,
-        sh.cfg.link.bw_bytes_per_us,
+        worst.latency_us,
+        worst.bw_bytes_per_us,
         sh.cfg.migrate.migrate_overhead_us,
         sh.cfg.migrate.poll_interval_us,
     );
@@ -1249,15 +1368,26 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                             })
                         }),
                     };
+                    // The waiting-time gate prices the migration against
+                    // the actual victim→thief link, not the cluster-wide
+                    // base: a same-socket steal must not be denied at
+                    // cross-rack cost.
+                    let pair = sh
+                        .cfg
+                        .topology
+                        .link_between(node.id.idx(), thief.idx(), sh.cfg.link);
                     let decision = decide_steal(
                         &sh.cfg.migrate,
                         graph,
                         node.queue.as_ref(),
                         workers,
                         &est,
-                        sh.cfg.link.latency_us,
-                        sh.cfg.link.bw_bytes_per_us,
+                        pair.latency_us,
+                        pair.bw_bytes_per_us,
                     );
+                    for t in &decision.tasks {
+                        class_dec(&node, t.class);
+                    }
                     {
                         let mut st = node.steal.lock().unwrap();
                         st.requests_served += 1;
@@ -1309,9 +1439,9 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                 Msg::StealReply {
                     req,
                     tasks,
+                    payload_bytes,
                     digest,
                     denied_by_waiting_time,
-                    ..
                 } => {
                     let faults_on = sh.cfg.faults.enabled;
                     // Resolve the reply atomically against the timeout
@@ -1379,6 +1509,7 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                         }
                         continue;
                     }
+                    let hierarchical = sh.cfg.steal_domains == StealDomains::Hierarchical;
                     if refused {
                         // Telemetry mirrors a timeout (no ack — the
                         // dead victim's ledger is swept, not retired;
@@ -1387,6 +1518,9 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                         node.steal_timeouts.fetch_add(1, Ordering::Relaxed);
                         node.victim_timeouts[src.idx()].fetch_add(1, Ordering::Relaxed);
                         quarantine_victim(&node, src.idx());
+                        if hierarchical {
+                            node.escalation.lock().unwrap().on_miss();
+                        }
                         continue;
                     }
                     if faults_on && granted {
@@ -1411,11 +1545,21 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                     };
                     table[src.idx()].fetch_add(1, Ordering::Relaxed);
                     if sh.cfg.migrate.victim_select == VictimSelect::Targeted {
-                        node.victim_sel.lock().unwrap().record(
-                            src.idx(),
-                            outcome,
-                            digest.as_ref().map(|d| d.avg_us),
-                        );
+                        node.victim_sel
+                            .lock()
+                            .unwrap()
+                            .record(src.idx(), outcome, digest.as_ref());
+                    }
+                    // A grant narrows the escalation back to the home
+                    // tier; any denial is a miss that (after the
+                    // per-tier budget) widens the next search outward.
+                    if hierarchical {
+                        let mut esc = node.escalation.lock().unwrap();
+                        if tasks.is_empty() {
+                            esc.on_miss();
+                        } else {
+                            esc.on_grant();
+                        }
                     }
                     // Merge the victim's estimates BEFORE the stolen
                     // tasks enter the queue: the very next gate decision
@@ -1429,6 +1573,19 @@ fn comm_loop(sh: Arc<Shared>, node: Arc<NodeState>, mailbox: NodeMailbox) {
                             st.successful_steals += 1;
                             st.tasks_received += tasks.len() as u64;
                         }
+                        // Thief-side per-tier traffic: the grant and its
+                        // wire bytes are booked to the victim's tier,
+                        // same convention as `requests_sent`.
+                        let tier = sh.cfg.topology.tier_of(node.id.idx(), src.idx());
+                        node.tier_steal_grants[tier].fetch_add(1, Ordering::Relaxed);
+                        node.tier_steal_bytes[tier].fetch_add(
+                            Msg::steal_reply_wire_bytes(
+                                tasks.len(),
+                                payload_bytes,
+                                digest.as_ref(),
+                            ),
+                            Ordering::Relaxed,
+                        );
                         if sh.cfg.record_polls {
                             // Fig. 3 instrumentation: queue length each
                             // stolen task would have seen arriving
@@ -1577,7 +1734,37 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
         if is_starving(sh.cfg.migrate.thief, view)
             && node.inflight_steals.load(Ordering::SeqCst) < sh.cfg.migrate.max_inflight
         {
+            let me = node.id.idx();
+            let hierarchical = sh.cfg.steal_domains == StealDomains::Hierarchical;
             let victim = match sh.cfg.migrate.victim_select {
+                VictimSelect::Uniform if hierarchical => {
+                    // Hierarchical uniform: draw among the live peers
+                    // of the current escalation tier, widening only
+                    // when the tier's misses exhaust its budget. Empty
+                    // tier (everyone near is dead) → all live peers.
+                    let tier = node.escalation.lock().unwrap().tier();
+                    let near: Vec<usize> = sh
+                        .cfg
+                        .topology
+                        .peers_within(me, n, tier)
+                        .into_iter()
+                        .filter(|&p| sh.recovery.alive[p].load(Ordering::SeqCst))
+                        .collect();
+                    let cands = if near.is_empty() {
+                        let live: Vec<usize> = (0..n)
+                            .filter(|&p| {
+                                p != me && sh.recovery.alive[p].load(Ordering::SeqCst)
+                            })
+                            .collect();
+                        if live.is_empty() {
+                            continue;
+                        }
+                        live
+                    } else {
+                        near
+                    };
+                    NodeId(cands[rng.below(cands.len() as u64) as usize] as u32)
+                }
                 VictimSelect::Uniform => {
                     // Membership-aware uniform draw, DES-mirrored:
                     // while everyone is alive this is the exact
@@ -1585,12 +1772,11 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
                     // sequence); after a crash it is the k-th-live
                     // equivalent over the survivors.
                     if sh.recovery.epoch.load(Ordering::SeqCst) == 0 {
-                        NodeId(rng.pick_other(n, node.id.idx()) as u32)
+                        NodeId(rng.pick_other(n, me) as u32)
                     } else {
                         let live: Vec<usize> = (0..n)
                             .filter(|&p| {
-                                p != node.id.idx()
-                                    && sh.recovery.alive[p].load(Ordering::SeqCst)
+                                p != me && sh.recovery.alive[p].load(Ordering::SeqCst)
                             })
                             .collect();
                         if live.is_empty() {
@@ -1613,11 +1799,32 @@ fn migrate_loop(sh: Arc<Shared>, node: Arc<NodeState>) {
                         done,
                         f64::from_bits(node.remote_avg_us_bits.load(Ordering::Relaxed)),
                     );
-                    NodeId(node.victim_sel.lock().unwrap().pick(fallback) as u32)
+                    // Class-aware scoring sees this thief's queue mix;
+                    // hierarchical mode scopes the candidate walk to
+                    // the current escalation tier.
+                    let mix = sh.cfg.migrate.track_per_class().then(|| {
+                        std::array::from_fn(|c| {
+                            node.queued_class[c].load(Ordering::Relaxed) as usize
+                        })
+                    });
+                    let domain = hierarchical.then(|| {
+                        let tier = node.escalation.lock().unwrap().tier();
+                        let mask: Vec<bool> = (0..n)
+                            .map(|p| sh.cfg.topology.in_domain(me, p, tier))
+                            .collect();
+                        mask
+                    });
+                    NodeId(node.victim_sel.lock().unwrap().pick_scoped(
+                        fallback,
+                        domain.as_deref(),
+                        mix.as_ref(),
+                    ) as u32)
                 }
             };
             node.inflight_steals.fetch_add(1, Ordering::SeqCst);
             node.steal.lock().unwrap().requests_sent += 1;
+            let tier = sh.cfg.topology.tier_of(me, victim.idx());
+            node.tier_steal_requests[tier].fetch_add(1, Ordering::Relaxed);
             let req = steal_req_id(node.id.0, node.next_req.fetch_add(1, Ordering::Relaxed));
             node.steal_book.lock().unwrap().pending.insert(
                 req,
@@ -1650,10 +1857,16 @@ fn scan_steal_timeouts(sh: &Arc<Shared>, node: &Arc<NodeState>) {
         .pending
         .iter()
         .filter(|(_, p)| {
+            // Deadline from the actual thief→victim link: a same-socket
+            // request must not wait out a cross-rack round trip.
+            let pair = sh
+                .cfg
+                .topology
+                .link_between(node.id.idx(), p.victim.idx(), sh.cfg.link);
             now.duration_since(p.sent_at).as_secs_f64() * 1e6
                 >= steal_timeout_us(
-                    sh.cfg.link.latency_us,
-                    sh.cfg.link.bw_bytes_per_us,
+                    pair.latency_us,
+                    pair.bw_bytes_per_us,
                     mc.migrate_overhead_us,
                     mc.poll_interval_us,
                     p.attempt,
@@ -1685,6 +1898,9 @@ fn scan_steal_timeouts(sh: &Arc<Shared>, node: &Arc<NodeState>) {
         // A timeout is a denial-flavored signal to the scheduler: the
         // fabric just proved migration is slower than planned.
         node.queue.feedback(StealOutcome::TimedOut);
+        if sh.cfg.steal_domains == StealDomains::Hierarchical {
+            node.escalation.lock().unwrap().on_miss();
+        }
         let victim_dead = sh.recovery.crash.is_some()
             && !sh.recovery.alive[p.victim.idx()].load(Ordering::SeqCst);
         if victim_dead {
@@ -1718,6 +1934,8 @@ fn scan_steal_timeouts(sh: &Arc<Shared>, node: &Arc<NodeState>) {
             );
             node.steal_retries.fetch_add(1, Ordering::Relaxed);
             node.steal.lock().unwrap().requests_sent += 1;
+            let tier = sh.cfg.topology.tier_of(node.id.idx(), p.victim.idx());
+            node.tier_steal_requests[tier].fetch_add(1, Ordering::Relaxed);
             node.safra.lock().unwrap().on_send(p.victim);
             sh.net.send(
                 node.id,
@@ -1762,9 +1980,13 @@ fn scan_ledger_acks(sh: &Arc<Shared>, node: &Arc<NodeState>) {
     {
         let mut ledger = node.ledger.lock().unwrap();
         for (&req, e) in ledger.iter_mut() {
+            let pair = sh
+                .cfg
+                .topology
+                .link_between(node.id.idx(), e.thief.idx(), sh.cfg.link);
             let deadline = steal_timeout_us(
-                sh.cfg.link.latency_us,
-                sh.cfg.link.bw_bytes_per_us,
+                pair.latency_us,
+                pair.bw_bytes_per_us,
                 mc.migrate_overhead_us,
                 mc.poll_interval_us,
                 e.attempt,
@@ -1845,11 +2067,9 @@ mod tests {
         let total = g.total_tasks().unwrap();
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig::disabled(),
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::disabled()),
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), total);
@@ -1861,14 +2081,9 @@ mod tests {
         let total = g.total_tasks().unwrap();
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 50.0,
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(50.0)),
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), total);
@@ -1895,15 +2110,10 @@ mod tests {
         let total = g.total_tasks().unwrap();
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 50.0,
-                    ..Default::default()
-                },
-                faults: "drop-reply=0.2,dup=0.1".parse().unwrap(),
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(50.0))
+                .with_faults("drop-reply=0.2,dup=0.1".parse().unwrap()),
             Arc::new(NullExecutor),
         );
         assert_eq!(
@@ -1931,15 +2141,10 @@ mod tests {
         let size = g.tree_size(10_000_000);
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 30.0,
-                    ..Default::default()
-                },
-                faults: "drop=0.2,delay=2x,delay-p=0.3".parse().unwrap(),
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(30.0))
+                .with_faults("drop=0.2,delay=2x,delay-p=0.3".parse().unwrap()),
             Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
                 30_000.0
             })),
@@ -1961,14 +2166,9 @@ mod tests {
         let size = g.tree_size(10_000_000);
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 30.0,
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(30.0)),
             Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
                 30_000.0
             })),
@@ -1984,10 +2184,7 @@ mod tests {
         let g = chol(5, 1);
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                ..Default::default()
-            },
+            ClusterConfig::default().with_workers_per_node(2),
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), 35);
@@ -2002,19 +2199,14 @@ mod tests {
             let total = g.total_tasks().unwrap();
             let r = Cluster::run(
                 g,
-                ClusterConfig {
-                    workers_per_node: 2,
-                    batch_activations: false,
-                    migrate: if steal {
-                        MigrateConfig {
-                            poll_interval_us: 50.0,
-                            ..Default::default()
-                        }
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_batch_activations(false)
+                    .with_migrate(if steal {
+                        MigrateConfig::default().with_poll_interval_us(50.0)
                     } else {
                         MigrateConfig::disabled()
-                    },
-                    ..Default::default()
-                },
+                    }),
                 Arc::new(NullExecutor),
             );
             assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
@@ -2042,16 +2234,15 @@ mod tests {
             let size = g.tree_size(10_000_000);
             let r = Cluster::run(
                 g,
-                ClusterConfig {
-                    workers_per_node: 2,
-                    sched,
-                    migrate: MigrateConfig {
-                        poll_interval_us: 30.0,
-                        migrate_overhead_us: 1e9, // gate always denies
-                        ..Default::default()
-                    },
-                    ..Default::default()
-                },
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_sched(sched)
+                    .with_migrate(
+                        MigrateConfig::default()
+                            .with_poll_interval_us(30.0)
+                            // gate always denies
+                            .with_migrate_overhead_us(1e9),
+                    ),
                 Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
                     30_000.0
                 })),
@@ -2096,16 +2287,12 @@ mod tests {
         let size = g.tree_size(10_000_000);
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 30.0,
-                    use_waiting_time: false,
-                    victim: crate::migrate::VictimPolicy::Chunk(4),
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ClusterConfig::default().with_workers_per_node(2).with_migrate(
+                MigrateConfig::default()
+                    .with_poll_interval_us(30.0)
+                    .with_use_waiting_time(false)
+                    .with_victim(crate::migrate::VictimPolicy::Chunk(4)),
+            ),
             Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
                 30_000.0
             })),
@@ -2148,12 +2335,10 @@ mod tests {
             let total = g.total_tasks().unwrap();
             let r = Cluster::run(
                 g,
-                ClusterConfig {
-                    workers_per_node: 2,
-                    batch_activations: batch,
-                    migrate: MigrateConfig::disabled(),
-                    ..Default::default()
-                },
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_batch_activations(batch)
+                    .with_migrate(MigrateConfig::disabled()),
                 Arc::new(NullExecutor),
             );
             assert_eq!(r.tasks_total_executed(), total, "batch={batch}");
@@ -2190,15 +2375,11 @@ mod tests {
             .with_time_scale(0.05);
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 50.0,
-                    exec_per_class: true,
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ClusterConfig::default().with_workers_per_node(2).with_migrate(
+                MigrateConfig::default()
+                    .with_poll_interval_us(50.0)
+                    .with_exec_per_class(true),
+            ),
             Arc::new(ex),
         );
         assert_eq!(r.tasks_total_executed(), total);
@@ -2233,16 +2414,12 @@ mod tests {
         let size = g.tree_size(10_000_000);
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 30.0,
-                    exec_per_class: true,
-                    share_estimates: true,
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ClusterConfig::default().with_workers_per_node(2).with_migrate(
+                MigrateConfig::default()
+                    .with_poll_interval_us(30.0)
+                    .with_exec_per_class(true)
+                    .with_share_estimates(true),
+            ),
             Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
                 30_000.0
             })),
@@ -2282,16 +2459,12 @@ mod tests {
         let size = g.tree_size(10_000_000);
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 30.0,
-                    share_estimates: true,
-                    victim_select: VictimSelect::Targeted,
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ClusterConfig::default().with_workers_per_node(2).with_migrate(
+                MigrateConfig::default()
+                    .with_poll_interval_us(30.0)
+                    .with_share_estimates(true)
+                    .with_victim_select(VictimSelect::Targeted),
+            ),
             Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
                 30_000.0
             })),
@@ -2328,15 +2501,11 @@ mod tests {
         let total = g.total_tasks().unwrap();
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 50.0,
-                    exec_ewma: true,
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ClusterConfig::default().with_workers_per_node(2).with_migrate(
+                MigrateConfig::default()
+                    .with_poll_interval_us(50.0)
+                    .with_exec_ewma(true),
+            ),
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), total);
@@ -2351,19 +2520,14 @@ mod tests {
             let total = g.total_tasks().unwrap();
             let r = Cluster::run(
                 g,
-                ClusterConfig {
-                    workers_per_node: 2,
-                    sched: SchedBackend::Sharded,
-                    migrate: if steal {
-                        MigrateConfig {
-                            poll_interval_us: 50.0,
-                            ..Default::default()
-                        }
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_sched(SchedBackend::Sharded)
+                    .with_migrate(if steal {
+                        MigrateConfig::default().with_poll_interval_us(50.0)
                     } else {
                         MigrateConfig::disabled()
-                    },
-                    ..Default::default()
-                },
+                    }),
                 Arc::new(NullExecutor),
             );
             assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
@@ -2380,19 +2544,14 @@ mod tests {
             let total = g.total_tasks().unwrap();
             let r = Cluster::run(
                 g,
-                ClusterConfig {
-                    workers_per_node: 2,
-                    sched: SchedBackend::Workassist,
-                    migrate: if steal {
-                        MigrateConfig {
-                            poll_interval_us: 50.0,
-                            ..Default::default()
-                        }
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_sched(SchedBackend::Workassist)
+                    .with_migrate(if steal {
+                        MigrateConfig::default().with_poll_interval_us(50.0)
                     } else {
                         MigrateConfig::disabled()
-                    },
-                    ..Default::default()
-                },
+                    }),
                 Arc::new(NullExecutor),
             );
             assert_eq!(r.tasks_total_executed(), total, "steal={steal}");
@@ -2412,14 +2571,11 @@ mod tests {
     fn crash_stop_cholesky_recovers_exactly_once() {
         let g = chol(10, 8);
         let total = g.total_tasks().unwrap();
-        let cfg = |faults: FaultPlan| ClusterConfig {
-            workers_per_node: 2,
-            migrate: MigrateConfig {
-                poll_interval_us: 50.0,
-                ..Default::default()
-            },
-            faults,
-            ..Default::default()
+        let cfg = |faults: FaultPlan| {
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(50.0))
+                .with_faults(faults)
         };
         let g2 = g.clone();
         let ex = Arc::new(
@@ -2466,16 +2622,11 @@ mod tests {
         let spec = "crash-node=1,crash-at-us=2000,drop-reply=0.1,dup=0.1";
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                sched: SchedBackend::Workassist,
-                migrate: MigrateConfig {
-                    poll_interval_us: 30.0,
-                    ..Default::default()
-                },
-                faults: spec.parse().unwrap(),
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_sched(SchedBackend::Workassist)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(30.0))
+                .with_faults(spec.parse().unwrap()),
             Arc::new(SpinExecutor::new(
                 CostModel::default_calibrated(),
                 0,
@@ -2494,15 +2645,10 @@ mod tests {
         let total = g.total_tasks().unwrap();
         let r = Cluster::run(
             g,
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig {
-                    poll_interval_us: 50.0,
-                    ..Default::default()
-                },
-                faults: "crash-node=1,crash-at-us=30000000".parse().unwrap(),
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(50.0))
+                .with_faults("crash-node=1,crash-at-us=30000000".parse().unwrap()),
             Arc::new(NullExecutor),
         );
         assert_eq!(r.tasks_total_executed(), total);
@@ -2510,5 +2656,137 @@ mod tests {
         assert_eq!(r.recovery.nodes_suspected, 0);
         assert_eq!(r.recovery.tasks_recovered, 0);
         assert_eq!(r.recovery.ring_repairs, 0);
+    }
+
+    /// Flat topology (explicit or default): every remote pair is
+    /// cluster-distance, so the per-tier thief-side counters must book
+    /// all steal traffic to the cluster tier and nothing anywhere else,
+    /// and the tier sums must reconcile with the flat steal stats.
+    #[test]
+    fn flat_topology_books_all_steal_traffic_to_cluster_tier() {
+        let g = chol(8, 3);
+        let total = g.total_tasks().unwrap();
+        let r = Cluster::run(
+            g,
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(50.0))
+                .with_topology(Topology::flat())
+                .with_steal_domains(StealDomains::Flat),
+            Arc::new(NullExecutor),
+        );
+        assert_eq!(r.tasks_total_executed(), total);
+        for (ix, n) in r.nodes.iter().enumerate() {
+            assert_eq!(
+                n.tier_steal_requests[0] + n.tier_steal_requests[1],
+                0,
+                "node {ix}: flat runs must never see a sub-cluster tier"
+            );
+            assert_eq!(n.tier_steal_requests[2], n.steal.requests_sent);
+            assert_eq!(
+                n.tier_steal_grants.iter().sum::<u64>(),
+                n.steal.successful_steals
+            );
+        }
+    }
+
+    /// `--steal-domains hierarchical` on a 2-tier topology in the
+    /// threaded runtime: the run completes exactly once on every
+    /// backend path touched (escalation, domain-scoped picks, per-pair
+    /// timeouts), the per-tier counters reconcile with the steal stats,
+    /// and thieves provably begin at their home socket tier.
+    #[test]
+    fn hierarchical_domains_two_tier_threaded_run_completes() {
+        let g = Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 4,
+            max_depth: 18,
+        }));
+        let size = g.tree_size(10_000_000);
+        let topo = Topology::two_tier(
+            2,
+            LinkModel {
+                latency_us: 1.0,
+                bw_bytes_per_us: 40_000.0,
+            },
+            LinkModel {
+                latency_us: 20.0,
+                bw_bytes_per_us: 2_500.0,
+            },
+        );
+        let r = Cluster::run(
+            g,
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::default().with_poll_interval_us(30.0))
+                .with_topology(topo)
+                .with_steal_domains(StealDomains::Hierarchical),
+            Arc::new(SpinExecutor::new(CostModel::default_calibrated(), 0, |_| {
+                30_000.0
+            })),
+        );
+        assert_eq!(r.tasks_total_executed(), size);
+        let mut requests = 0;
+        for (ix, n) in r.nodes.iter().enumerate() {
+            assert_eq!(
+                n.tier_steal_requests.iter().sum::<u64>(),
+                n.steal.requests_sent,
+                "node {ix}: tier requests reconcile"
+            );
+            assert_eq!(
+                n.tier_steal_grants.iter().sum::<u64>(),
+                n.steal.successful_steals,
+                "node {ix}: tier grants reconcile"
+            );
+            requests += n.steal.requests_sent;
+        }
+        assert!(requests > 0, "the starving sockets must have stolen");
+        // Every thief's escalation starts at its socket tier, so the
+        // socket tier must have seen traffic before any widening.
+        let near: u64 = r.nodes.iter().map(|n| n.tier_steal_requests[0]).sum();
+        assert!(near > 0, "hierarchical thieves begin at the socket tier");
+    }
+
+    #[test]
+    fn builder_setters_equal_exhaustive_literal() {
+        // The one place a full ClusterConfig literal is allowed to
+        // live: the builders' own equivalence check.
+        let topo: Topology = "socket=2,rack=4,rack-lat-us=9".parse().unwrap();
+        let faults: FaultPlan = "dup=0.2".parse().unwrap();
+        let link = LinkModel {
+            latency_us: 3.0,
+            bw_bytes_per_us: 750.0,
+        };
+        let migrate = MigrateConfig::default().with_poll_interval_us(42.0);
+        let built = ClusterConfig::default()
+            .with_workers_per_node(5)
+            .with_link(link)
+            .with_migrate(migrate)
+            .with_seed(11)
+            .with_record_polls(false)
+            .with_sched(SchedBackend::Workassist)
+            .with_batch_activations(false)
+            .with_pool_floor(6)
+            .with_faults(faults)
+            .with_topology(topo)
+            .with_steal_domains(StealDomains::Hierarchical);
+        let literal = ClusterConfig {
+            workers_per_node: 5,
+            link,
+            migrate,
+            seed: 11,
+            record_polls: false,
+            sched: SchedBackend::Workassist,
+            batch_activations: false,
+            pool_floor: 6,
+            faults,
+            topology: topo,
+            steal_domains: StealDomains::Hierarchical,
+        };
+        assert_eq!(built, literal);
     }
 }

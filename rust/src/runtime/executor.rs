@@ -225,11 +225,9 @@ impl TaskExecutor for CpuCholeskyExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::LinkModel;
     use crate::dataflow::ttg::TaskGraph;
     use crate::migrate::MigrateConfig;
     use crate::node::{Cluster, ClusterConfig};
-    use crate::sched::SchedBackend;
     use crate::workloads::CholeskyParams;
 
     fn dense_graph(tiles: u32, tile_size: u32, nodes: u32) -> Arc<CholeskyGraph> {
@@ -251,24 +249,15 @@ mod tests {
             let g = dense_graph(4, 8, 2);
             let ex = Arc::new(CpuCholeskyExecutor::new(g.clone()));
             let reference = build_tile_store(&g);
-            let cfg = ClusterConfig {
-                workers_per_node: 2,
-                link: LinkModel::ideal(),
-                migrate: if steal {
-                    MigrateConfig {
-                        poll_interval_us: 30.0,
-                        ..Default::default()
-                    }
+            let cfg = ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(if steal {
+                    MigrateConfig::default().with_poll_interval_us(30.0)
                 } else {
                     MigrateConfig::disabled()
-                },
-                seed: 11,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: crate::sched::POOL_FLOOR,
-                faults: Default::default(),
-            };
+                })
+                .with_seed(11)
+                .with_record_polls(false);
             let r = Cluster::run(g.clone(), cfg, ex.clone());
             assert_eq!(r.tasks_total_executed(), g.total_tasks().unwrap());
             let err = ex.verify(&reference);
@@ -289,11 +278,9 @@ mod tests {
         let ex = Arc::new(CpuCholeskyExecutor::new(g.clone()));
         let r = Cluster::run(
             g.clone(),
-            ClusterConfig {
-                workers_per_node: 2,
-                migrate: MigrateConfig::disabled(),
-                ..Default::default()
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::disabled()),
             ex.clone(),
         );
         assert_eq!(r.tasks_total_executed(), g.total_tasks().unwrap());

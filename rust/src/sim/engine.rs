@@ -42,6 +42,7 @@ use crate::migrate::{
     VictimSelect, VictimSelector, ACK_PROBE_BUDGET, THIEF_RETRY_BUDGET,
 };
 use crate::sched::{BatchSite, POOL_FLOOR, SchedBackend, Scheduler, StealOutcome, TaskMeta};
+use crate::topology::{EscalationState, StealDomains, Topology, TIER_COUNT};
 use crate::util::rng::{fault_rng, thief_rng, Rng};
 
 use super::cost::CostModel;
@@ -58,7 +59,7 @@ fn local_successor_count(graph: &dyn TaskGraph, node_id: NodeId, task: TaskDesc)
 }
 
 /// Simulator knobs (cluster geometry and wire model).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SimConfig {
     /// Worker threads per node (paper: 40).
     pub workers_per_node: usize,
@@ -89,6 +90,15 @@ pub struct SimConfig {
     /// the transfer ledger — carries the run to completion. Default
     /// off: no draws, no extra events, byte-identical behavior.
     pub faults: FaultPlan,
+    /// Tiered link model (`--topology`): resolves every node *pair* to
+    /// the link of the tightest tier containing both. The flat default
+    /// returns `link` verbatim for every pair — byte-identical to the
+    /// pre-topology simulator.
+    pub topology: Topology,
+    /// Steal-domain traversal (`--steal-domains`): flat (the paper's
+    /// cluster-wide victim pool, default) or hierarchical (exhaust the
+    /// nearest topology tier before escalating).
+    pub steal_domains: StealDomains,
 }
 
 impl Default for SimConfig {
@@ -103,7 +113,59 @@ impl Default for SimConfig {
             batch_activations: true,
             pool_floor: POOL_FLOOR,
             faults: FaultPlan::default(),
+            topology: Topology::flat(),
+            steal_domains: StealDomains::Flat,
         }
+    }
+}
+
+/// Chainable setters, so call sites state only what differs from the
+/// default instead of restating every knob (and silently breaking when
+/// a knob is added).
+impl SimConfig {
+    pub fn with_workers_per_node(mut self, workers: usize) -> Self {
+        self.workers_per_node = workers;
+        self
+    }
+    pub fn with_link(mut self, link: LinkModel) -> Self {
+        self.link = link;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn with_max_events(mut self, max_events: u64) -> Self {
+        self.max_events = max_events;
+        self
+    }
+    pub fn with_record_polls(mut self, record: bool) -> Self {
+        self.record_polls = record;
+        self
+    }
+    pub fn with_sched(mut self, sched: SchedBackend) -> Self {
+        self.sched = sched;
+        self
+    }
+    pub fn with_batch_activations(mut self, batch: bool) -> Self {
+        self.batch_activations = batch;
+        self
+    }
+    pub fn with_pool_floor(mut self, floor: usize) -> Self {
+        self.pool_floor = floor;
+        self
+    }
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+    pub fn with_steal_domains(mut self, domains: StealDomains) -> Self {
+        self.steal_domains = domains;
+        self
     }
 }
 
@@ -303,6 +365,23 @@ struct SimNode {
     /// mode never perturbs the simulator's shared cost-noise stream —
     /// default-off runs stay bit-identical.
     victim_sel: VictimSelector,
+    /// Hierarchical steal-domain escalation (`--steal-domains
+    /// hierarchical`): the shared per-thief state machine. Inert (never
+    /// consulted) in flat mode.
+    escalation: EscalationState,
+    /// Per-class counts of queued (ready) tasks, maintained alongside
+    /// every queue insert/remove — the thief-side class mix the
+    /// targeted selector weighs digest richness by. O(1) reads, like
+    /// the starvation counters.
+    queued_class: [usize; TaskClass::COUNT],
+    /// Thief-side steal-request counts by victim tier
+    /// ([`Topology::tier_of`]); sums to `steal.requests_sent`.
+    tier_steal_requests: [u64; TIER_COUNT],
+    /// Granted replies received, by victim tier; sums to
+    /// `steal.successful_steals`.
+    tier_steal_grants: [u64; TIER_COUNT],
+    /// Granted-reply wire bytes received, by victim tier.
+    tier_steal_bytes: [u64; TIER_COUNT],
     inflight_steals: usize,
     /// Monotonic counter behind [`steal_req_id`].
     next_req: u64,
@@ -421,7 +500,12 @@ impl Simulator {
                 victim_timeouts: vec![0; n],
                 victim_quarantined: vec![0; n],
                 victim_sel: VictimSelector::new(i, n.max(2), thief_rng(cfg.seed, i))
-                    .with_link(cfg.link.latency_us, cfg.link.bw_bytes_per_us),
+                    .with_topology(&cfg.topology, cfg.link),
+                escalation: EscalationState::new(&cfg.topology, i, n),
+                queued_class: [0; TaskClass::COUNT],
+                tier_steal_requests: [0; TIER_COUNT],
+                tier_steal_grants: [0; TIER_COUNT],
+                tier_steal_bytes: [0; TIER_COUNT],
                 inflight_steals: 0,
                 next_req: 0,
                 pending_steals: HashMap::new(),
@@ -465,6 +549,13 @@ impl Simulator {
             orphans: Vec::new(),
             recovery: RecoveryStats::default(),
         }
+    }
+
+    /// Per-pair link resolution through the topology. Flat returns the
+    /// base link *verbatim* (the same value, not a recomputation), so
+    /// default-off runs are byte-identical to the pre-topology engine.
+    fn link_for(&self, a: NodeId, b: NodeId) -> LinkModel {
+        self.cfg.topology.link_between(a.idx(), b.idx(), self.cfg.link)
     }
 
     fn push_event(&mut self, t_us: f64, kind: EventKind) {
@@ -534,7 +625,7 @@ impl Simulator {
             self.faults_dropped += 1;
             return;
         }
-        let wire = self.cfg.link.transfer_us(bytes) * d.delay_mult;
+        let wire = self.link_for(src, dst).transfer_us(bytes) * d.delay_mult;
         if d.duplicate {
             self.faults_duplicated += 1;
             self.push_event(
@@ -550,11 +641,13 @@ impl Simulator {
 
     /// Arm the thief-side watchdog for a pending request (faults-on
     /// only): the deadline is the Khatiri round-trip-derived
-    /// [`steal_timeout_us`], backing off with the attempt number.
-    fn arm_steal_timeout(&mut self, node: NodeId, req: u64, attempt: u32) {
+    /// [`steal_timeout_us`] on the *pairwise* link to the victim,
+    /// backing off with the attempt number.
+    fn arm_steal_timeout(&mut self, node: NodeId, victim: NodeId, req: u64, attempt: u32) {
+        let link = self.link_for(node, victim);
         let t = steal_timeout_us(
-            self.cfg.link.latency_us,
-            self.cfg.link.bw_bytes_per_us,
+            link.latency_us,
+            link.bw_bytes_per_us,
             self.migrate.migrate_overhead_us,
             self.migrate.poll_interval_us,
             attempt,
@@ -563,11 +656,13 @@ impl Simulator {
     }
 
     /// Arm the victim-side watchdog for an unacked ledger entry
-    /// (faults-on only), same deadline schedule as the thief's.
-    fn arm_ack_timeout(&mut self, node: NodeId, req: u64, attempt: u32) {
+    /// (faults-on only), same deadline schedule as the thief's on the
+    /// same pairwise link.
+    fn arm_ack_timeout(&mut self, node: NodeId, thief: NodeId, req: u64, attempt: u32) {
+        let link = self.link_for(node, thief);
         let t = steal_timeout_us(
-            self.cfg.link.latency_us,
-            self.cfg.link.bw_bytes_per_us,
+            link.latency_us,
+            link.bw_bytes_per_us,
             self.migrate.migrate_overhead_us,
             self.migrate.poll_interval_us,
             attempt,
@@ -623,6 +718,8 @@ impl Simulator {
             let Some(task) = node.queue.select(worker) else {
                 break;
             };
+            node.queued_class[task.class.idx()] =
+                node.queued_class[task.class.idx()].saturating_sub(1);
             node.next_worker = (worker + 1) % self.cfg.workers_per_node.max(1);
             if self.cfg.record_polls {
                 node.polls.push(PollSample {
@@ -657,6 +754,7 @@ impl Simulator {
         let graph = self.graph.clone();
         let node = &mut self.nodes[node_id.idx()];
         if node.tracker.activate(graph.as_ref(), task) {
+            node.queued_class[task.class.idx()] += 1;
             node.queue
                 .insert_meta(task, graph.priority(task), TaskMeta::of(graph.as_ref(), task));
             self.dispatch(node_id);
@@ -678,6 +776,9 @@ impl Simulator {
         }
         if !ready.is_empty() {
             node.activation_ready_batches += 1;
+            for t in &ready {
+                node.queued_class[t.class.idx()] += 1;
+            }
             let batch = TaskMeta::batch_of(graph.as_ref(), &ready);
             node.queue.insert_batch_at(BatchSite::Activation, &batch);
             self.dispatch(node_id);
@@ -739,7 +840,9 @@ impl Simulator {
                     None => remote.push((dest, vec![s])),
                 }
             } else {
-                let wire = self.cfg.link.transfer_us(Msg::activation_wire_bytes(1));
+                let wire = self
+                    .link_for(node_id, dest)
+                    .transfer_us(Msg::activation_wire_bytes(1));
                 self.activate_in_flight += 1;
                 self.push_event(
                     self.now_us + wire,
@@ -755,8 +858,7 @@ impl Simulator {
         }
         for (dest, tasks) in remote {
             let wire = self
-                .cfg
-                .link
+                .link_for(node_id, dest)
                 .transfer_us(Msg::activation_wire_bytes(tasks.len()));
             self.activate_in_flight += 1;
             let msg = if tasks.len() == 1 {
@@ -814,16 +916,39 @@ impl Simulator {
             )
         };
         if starving && can_request {
+            let me = node_id.idx();
+            let n_nodes = self.nodes.len();
+            let hierarchical = self.cfg.steal_domains == StealDomains::Hierarchical;
             let victim = match self.migrate.victim_select {
                 // The paper's protocol, on the simulator's shared
                 // stream — the exact draw sequence of every prior PR
                 // while the membership is intact; once a node has
                 // crashed the same single draw maps onto the k-th live
                 // candidate instead (`None` = no live peers to rob).
+                // Hierarchical mode is a new mode and draws over the
+                // escalation tier's live peers instead (falling back to
+                // the whole cluster when the near tiers hold none).
                 VictimSelect::Uniform => {
-                    let me = node_id.idx();
-                    if self.dead.iter().any(|&d| d) {
-                        let live: Vec<usize> = (0..self.nodes.len())
+                    if hierarchical {
+                        let tier = self.nodes[me].escalation.tier();
+                        let mut cands: Vec<usize> = self
+                            .cfg
+                            .topology
+                            .peers_within(me, n_nodes, tier)
+                            .into_iter()
+                            .filter(|&p| !self.dead[p])
+                            .collect();
+                        if cands.is_empty() {
+                            cands = (0..n_nodes).filter(|&i| i != me && !self.dead[i]).collect();
+                        }
+                        if cands.is_empty() {
+                            None
+                        } else {
+                            let k = self.rng.below(cands.len() as u64) as usize;
+                            Some(NodeId(cands[k] as u32))
+                        }
+                    } else if self.dead.iter().any(|&d| d) {
+                        let live: Vec<usize> = (0..n_nodes)
                             .filter(|&i| i != me && !self.dead[i])
                             .collect();
                         if live.is_empty() {
@@ -833,14 +958,18 @@ impl Simulator {
                             Some(NodeId(live[k] as u32))
                         }
                     } else {
-                        Some(NodeId(self.rng.pick_other(self.nodes.len(), me) as u32))
+                        Some(NodeId(self.rng.pick_other(n_nodes, me) as u32))
                     }
                 }
                 VictimSelect::Targeted => {
                     // Fallback win per stolen task = the thief's own
                     // node-wide estimate (digest-seeded while cold) —
                     // the same quantity the victim-side gate runs on.
-                    let node = &self.nodes[node_id.idx()];
+                    // With per-class tracking on, the thief's queued
+                    // class mix weighs the digest-derived per-class
+                    // richness; under hierarchical domains the pick is
+                    // masked to the escalation tier's peers.
+                    let node = &self.nodes[me];
                     let fallback = exec_estimate_seeded_us(
                         self.migrate.exec_ewma,
                         node.exec_ewma_us,
@@ -848,15 +977,30 @@ impl Simulator {
                         node.tasks_done,
                         node.remote_avg_us,
                     );
-                    let pick = self.nodes[node_id.idx()].victim_sel.pick(fallback);
+                    let mix = self.migrate.track_per_class().then(|| node.queued_class);
+                    let domain = hierarchical.then(|| {
+                        let tier = node.escalation.tier();
+                        let mut mask = vec![false; n_nodes];
+                        for p in self.cfg.topology.peers_within(me, n_nodes, tier) {
+                            mask[p] = true;
+                        }
+                        mask
+                    });
+                    let pick = self.nodes[me].victim_sel.pick_scoped(
+                        fallback,
+                        domain.as_deref(),
+                        mix.as_ref(),
+                    );
                     Some(NodeId(pick as u32))
                 }
             };
             if let Some(victim) = victim {
+                let tier = self.cfg.topology.tier_of(me, victim.idx());
                 let req = {
-                    let node = &mut self.nodes[node_id.idx()];
+                    let node = &mut self.nodes[me];
                     node.inflight_steals += 1;
                     node.steal.requests_sent += 1;
+                    node.tier_steal_requests[tier] += 1;
                     let req = steal_req_id(node_id.0, node.next_req);
                     node.next_req += 1;
                     node.pending_steals
@@ -874,7 +1018,7 @@ impl Simulator {
                     },
                 );
                 if self.cfg.faults.enabled {
-                    self.arm_steal_timeout(node_id, req, 0);
+                    self.arm_steal_timeout(node_id, victim, req, 0);
                 }
             }
         }
@@ -904,7 +1048,10 @@ impl Simulator {
         let graph = self.graph.clone();
         let workers = self.cfg.workers_per_node;
         let est = self.victim_exec_snapshot(victim_id.idx());
-        let link = self.cfg.link;
+        // The waiting-time gate prices the migration against the
+        // *pairwise* link to this thief — a socket-local steal is
+        // cheaper to grant than a cross-rack one.
+        let link = self.link_for(victim_id, thief);
         let node = &mut self.nodes[victim_id.idx()];
         node.steal.requests_served += 1;
         let decision = decide_steal(
@@ -925,6 +1072,10 @@ impl Simulator {
         } else {
             node.steal.tasks_migrated += decision.tasks.len() as u64;
             node.steal.payload_bytes += decision.payload_bytes;
+            for t in &decision.tasks {
+                node.queued_class[t.class.idx()] =
+                    node.queued_class[t.class.idx()].saturating_sub(1);
+            }
         }
         // Execution-time knowledge travels with stolen work
         // (--share-estimates): a granted reply carries the victim's
@@ -978,7 +1129,7 @@ impl Simulator {
                     attempt: 0,
                 },
             );
-            self.arm_ack_timeout(victim_id, req, 0);
+            self.arm_ack_timeout(victim_id, thief, req, 0);
         }
         self.send_steal_msg(victim_id, thief, FaultClass::Reply, reply_bytes, msg);
     }
@@ -1026,6 +1177,9 @@ impl Simulator {
             node.inflight_steals = node.inflight_steals.saturating_sub(1);
             node.steal_timeouts += 1;
             node.victim_timeouts[victim.idx()] += 1;
+            if self.cfg.steal_domains == StealDomains::Hierarchical {
+                node.escalation.on_miss();
+            }
             self.quarantine(node_id.idx(), victim.idx());
             self.ensure_poll(node_id);
             return;
@@ -1081,6 +1235,8 @@ impl Simulator {
             self.tasks_in_transit -= tasks.len() as u64;
         }
         {
+            let tier = self.cfg.topology.tier_of(node_id.idx(), victim.idx());
+            let hierarchical = self.cfg.steal_domains == StealDomains::Hierarchical;
             let node = &mut self.nodes[node_id.idx()];
             node.inflight_steals = node.inflight_steals.saturating_sub(1);
             // Per-victim outcome telemetry (always) and, under
@@ -1095,9 +1251,18 @@ impl Simulator {
                 // reply in hand.
                 VictimOutcome::TimedOut => node.victim_timeouts[victim.idx()] += 1,
             }
+            // Hierarchical escalation: a grant snaps back to the near
+            // tier, any denial counts toward widening the domain.
+            if hierarchical {
+                if granted {
+                    node.escalation.on_grant();
+                } else {
+                    node.escalation.on_miss();
+                }
+            }
             if self.migrate.victim_select == VictimSelect::Targeted {
                 node.victim_sel
-                    .record(victim.idx(), outcome, digest.as_ref().map(|d| d.avg_us));
+                    .record(victim.idx(), outcome, digest.as_ref());
             }
             // Merge the victim's estimates BEFORE the stolen tasks enter
             // the queue, so the next gate decision on this node already
@@ -1108,6 +1273,15 @@ impl Simulator {
             if !tasks.is_empty() {
                 node.steal.successful_steals += 1;
                 node.steal.tasks_received += tasks.len() as u64;
+                node.tier_steal_grants[tier] += 1;
+                node.tier_steal_bytes[tier] += Msg::steal_reply_wire_bytes(
+                    tasks.len(),
+                    tasks.iter().map(|t| graph.payload_bytes(*t)).sum(),
+                    digest.as_ref(),
+                );
+                for t in &tasks {
+                    node.queued_class[t.class.idx()] += 1;
+                }
                 // Fig. 3 instrumentation: queue length each stolen task
                 // would have seen arriving one-by-one (len, len+1, …),
                 // sampled before the batch insert.
@@ -1146,6 +1320,9 @@ impl Simulator {
             let graph = self.graph.clone();
             let node = &mut self.nodes[victim_id.idx()];
             node.ledger_reclaims += 1;
+            for t in &entry.tasks {
+                node.queued_class[t.class.idx()] += 1;
+            }
             let batch = TaskMeta::batch_of(graph.as_ref(), &entry.tasks);
             node.queue.insert_batch_at(BatchSite::GateDenial, &batch);
         }
@@ -1173,6 +1350,9 @@ impl Simulator {
                 .insert(req, SimStealResolution::Abandoned);
             node.steal_timeouts += 1;
             node.victim_timeouts[p.victim.idx()] += 1;
+            if self.cfg.steal_domains == StealDomains::Hierarchical {
+                node.escalation.on_miss();
+            }
             if self.migrate.victim_select == VictimSelect::Targeted {
                 node.victim_sel
                     .record(p.victim.idx(), VictimOutcome::TimedOut, None);
@@ -1197,6 +1377,7 @@ impl Simulator {
             );
         }
         if !dead_victim && p.attempt < THIEF_RETRY_BUDGET {
+            let tier = self.cfg.topology.tier_of(node_id.idx(), p.victim.idx());
             let new_req = {
                 let node = &mut self.nodes[node_id.idx()];
                 let new_req = steal_req_id(node_id.0, node.next_req);
@@ -1210,6 +1391,7 @@ impl Simulator {
                 );
                 node.steal_retries += 1;
                 node.steal.requests_sent += 1;
+                node.tier_steal_requests[tier] += 1;
                 new_req
             };
             self.send_steal_msg(
@@ -1222,7 +1404,7 @@ impl Simulator {
                     req: new_req,
                 },
             );
-            self.arm_steal_timeout(node_id, new_req, p.attempt + 1);
+            self.arm_steal_timeout(node_id, p.victim, new_req, p.attempt + 1);
         } else {
             // Crashed victim, or the whole retry budget spent without a
             // single reply: quarantine it permanently. This is the fix
@@ -1298,7 +1480,7 @@ impl Simulator {
             (e.reply.clone(), e.reply_bytes)
         };
         self.send_steal_msg(victim_id, thief, FaultClass::Reply, bytes, reply);
-        self.arm_ack_timeout(victim_id, req, attempt + 1);
+        self.arm_ack_timeout(victim_id, thief, req, attempt + 1);
     }
 
     /// The crash instant: the node falls silent. Its queued events are
@@ -1312,9 +1494,13 @@ impl Simulator {
         }
         self.dead[node_id.idx()] = true;
         self.recovery.nodes_crashed += 1;
+        // Suspicion must outlast a steal round trip to *any* victim, so
+        // the detector keys off the topology's slowest pairwise link
+        // (the base link verbatim when flat).
+        let worst = self.cfg.topology.worst_link(self.nodes.len(), self.cfg.link);
         let detect = suspicion_timeout_us(
-            self.cfg.link.latency_us,
-            self.cfg.link.bw_bytes_per_us,
+            worst.latency_us,
+            worst.bw_bytes_per_us,
             self.migrate.migrate_overhead_us,
             self.migrate.poll_interval_us,
         );
@@ -1356,6 +1542,7 @@ impl Simulator {
         let mut executing: Vec<TaskDesc> = self.nodes[d].executing.drain().collect();
         executing.sort_unstable();
         ready.extend(executing);
+        self.nodes[d].queued_class = [0; TaskClass::COUNT];
         self.nodes[d].executing_local_succ = 0;
         self.nodes[d].idle_workers = self.cfg.workers_per_node;
         // The dead victim's transfer ledger: a grant its thief provably
@@ -1399,6 +1586,9 @@ impl Simulator {
                 if !absorbed {
                     let node = &mut self.nodes[i];
                     node.ledger_reclaims += 1;
+                    for t in &entry.tasks {
+                        node.queued_class[t.class.idx()] += 1;
+                    }
                     let batch = TaskMeta::batch_of(graph.as_ref(), &entry.tasks);
                     node.queue.insert_batch_at(BatchSite::GateDenial, &batch);
                     reclaimed = true;
@@ -1416,9 +1606,11 @@ impl Simulator {
         self.nodes[d].inflight_steals = 0;
         if !ready.is_empty() {
             let batch = TaskMeta::batch_of(graph.as_ref(), &ready);
-            self.nodes[target.idx()]
-                .queue
-                .insert_batch_at(BatchSite::Other, &batch);
+            let node = &mut self.nodes[target.idx()];
+            for t in &ready {
+                node.queued_class[t.class.idx()] += 1;
+            }
+            node.queue.insert_batch_at(BatchSite::Other, &batch);
         }
         // Partial activation state replays as `satisfied` activations at
         // the survivor's tracker (its lazy in-degree init reproduces the
@@ -1456,6 +1648,7 @@ impl Simulator {
             let meta = TaskMeta::of(self.graph.as_ref(), root);
             let node = &mut self.nodes[owner.idx()];
             node.tracker.mark_root(root);
+            node.queued_class[root.class.idx()] += 1;
             node.queue.insert_meta(root, self.graph.priority(root), meta);
         }
         let node_count = self.nodes.len();
@@ -1635,6 +1828,9 @@ impl Simulator {
                     victim_empties: n.victim_empties,
                     victim_timeouts: n.victim_timeouts,
                     victim_quarantined: n.victim_quarantined,
+                    tier_steal_requests: n.tier_steal_requests,
+                    tier_steal_grants: n.tier_steal_grants,
+                    tier_steal_bytes: n.tier_steal_bytes,
                     steal_timeouts: n.steal_timeouts,
                     steal_retries: n.steal_retries,
                     ledger_reclaims: n.ledger_reclaims,
@@ -1682,17 +1878,11 @@ mod tests {
     ) -> RunReport {
         Simulator::new(
             graph,
-            SimConfig {
-                workers_per_node: workers,
-                link: LinkModel::cluster(),
-                seed,
-                max_events: 50_000_000,
-                record_polls: true,
-                sched,
-                batch_activations: true,
-                pool_floor: POOL_FLOOR,
-                ..Default::default()
-            },
+            SimConfig::default()
+                .with_workers_per_node(workers)
+                .with_seed(seed)
+                .with_max_events(50_000_000)
+                .with_sched(sched),
             CostModel::default_calibrated(),
             migrate,
             20,
@@ -1727,19 +1917,14 @@ mod tests {
         for victim in [VictimPolicy::Half, VictimPolicy::Chunk(20), VictimPolicy::Single] {
             for thief in [ThiefPolicy::ReadyOnly, ThiefPolicy::ReadySuccessors] {
                 for gate in [false, true] {
-                    let mc = MigrateConfig {
-                        enabled: true,
-                        thief,
-                        victim,
-                        use_waiting_time: gate,
-                        poll_interval_us: 50.0,
-                        max_inflight: 1,
-                        migrate_overhead_us: 150.0,
-                        exec_ewma: gate,
-                        exec_per_class: gate,
-                        share_estimates: gate,
-                        victim_select: VictimSelect::Uniform,
-                    };
+                    let mc = MigrateConfig::default()
+                        .with_thief(thief)
+                        .with_victim(victim)
+                        .with_use_waiting_time(gate)
+                        .with_poll_interval_us(50.0)
+                        .with_exec_ewma(gate)
+                        .with_exec_per_class(gate)
+                        .with_share_estimates(gate);
                     let r = sim(chol(10, 4), mc, 7, 2);
                     assert_eq!(
                         r.tasks_total_executed(),
@@ -1763,10 +1948,7 @@ mod tests {
             max_depth: 24,
         }));
         let size = g.tree_size(10_000_000);
-        let mc = MigrateConfig {
-            poll_interval_us: 20.0,
-            ..MigrateConfig::default()
-        };
+        let mc = MigrateConfig::default().with_poll_interval_us(20.0);
         let r = sim(g, mc, 3, 4);
         assert_eq!(r.tasks_total_executed(), size);
         // Everything starts at node 0: stealing is the only way any other
@@ -1828,10 +2010,7 @@ mod tests {
             max_depth: 18,
         }));
         let size = g.tree_size(10_000_000);
-        let mc = MigrateConfig {
-            poll_interval_us: 20.0,
-            ..MigrateConfig::default()
-        };
+        let mc = MigrateConfig::default().with_poll_interval_us(20.0);
         let r = sim_with(g, mc, 3, 4, SchedBackend::Sharded);
         assert_eq!(r.tasks_total_executed(), size);
         assert!(r.total_steals().successful_steals > 0);
@@ -1870,11 +2049,9 @@ mod tests {
                 max_depth: 24,
             }))
         };
-        let mc = MigrateConfig {
-            poll_interval_us: 20.0,
-            migrate_overhead_us: 1e9, // migration always loses the gate
-            ..MigrateConfig::default()
-        };
+        let mc = MigrateConfig::default()
+            .with_poll_interval_us(20.0)
+            .with_migrate_overhead_us(1e9); // migration always loses the gate
         for sched in SchedBackend::ALL {
             let g = mk_graph();
             let size = g.tree_size(10_000_000);
@@ -1933,12 +2110,10 @@ mod tests {
                 nodes: 4,
                 max_depth: 24,
             }));
-            let mc = MigrateConfig {
-                poll_interval_us: 20.0,
-                use_waiting_time: false, // no denial reinserts
-                victim: crate::migrate::VictimPolicy::Chunk(4),
-                ..MigrateConfig::default()
-            };
+            let mc = MigrateConfig::default()
+                .with_poll_interval_us(20.0)
+                .with_use_waiting_time(false) // no denial reinserts
+                .with_victim(crate::migrate::VictimPolicy::Chunk(4));
             let r = sim_with(g, mc, 3, 4, sched);
             let steals = r.total_steals();
             assert!(steals.successful_steals > 0, "{sched:?}");
@@ -1974,17 +2149,13 @@ mod tests {
             let run = |batch: bool| {
                 Simulator::new(
                     chol(10, 3),
-                    SimConfig {
-                        workers_per_node: 4,
-                        link: LinkModel::cluster(),
-                        seed: 9,
-                        max_events: 50_000_000,
-                        record_polls: false,
-                        sched,
-                        batch_activations: batch,
-                        pool_floor: POOL_FLOOR,
-                        ..Default::default()
-                    },
+                    SimConfig::default()
+                        .with_workers_per_node(4)
+                        .with_seed(9)
+                        .with_max_events(50_000_000)
+                        .with_record_polls(false)
+                        .with_sched(sched)
+                        .with_batch_activations(batch),
                     CostModel::default_calibrated(),
                     MigrateConfig::disabled(),
                     20,
@@ -2020,10 +2191,7 @@ mod tests {
         for sched in SchedBackend::ALL {
             let g = chol(12, 8);
             let total = g.total_tasks().unwrap();
-            let mc = MigrateConfig {
-                exec_per_class: true,
-                ..MigrateConfig::default()
-            };
+            let mc = MigrateConfig::default().with_exec_per_class(true);
             let a = sim_with(g, mc, 11, 4, sched);
             assert_eq!(a.tasks_total_executed(), total, "{sched:?}");
             let est = a.class_est_us_max();
@@ -2047,10 +2215,7 @@ mod tests {
         for sched in SchedBackend::ALL {
             let g = chol(10, 3);
             let total = g.total_tasks().unwrap();
-            let mc = MigrateConfig {
-                exec_ewma: true,
-                ..MigrateConfig::default()
-            };
+            let mc = MigrateConfig::default().with_exec_ewma(true);
             let a = sim_with(g.clone(), mc, 11, 4, sched);
             assert_eq!(a.tasks_total_executed(), total, "{sched:?}");
             let b = sim_with(chol(10, 3), mc, 11, 4, sched);
@@ -2078,29 +2243,23 @@ mod tests {
             max_depth: 24,
         }));
         let size = g.tree_size(10_000_000);
-        let mc = MigrateConfig {
-            poll_interval_us: 20.0,
-            migrate_overhead_us: 1.0, // overhead floor alone is never certain
-            ..MigrateConfig::default()
-        };
+        let mc = MigrateConfig::default()
+            .with_poll_interval_us(20.0)
+            .with_migrate_overhead_us(1.0); // overhead floor alone is never certain
         let r = Simulator::new(
             g,
-            SimConfig {
-                workers_per_node: 4,
+            SimConfig::default()
+                .with_workers_per_node(4)
                 // 1e-5 B/µs: the 64 B descriptor alone costs 6.4 s on
                 // the wire — beyond any waiting time this run reaches.
-                link: LinkModel {
+                .with_link(LinkModel {
                     latency_us: 1.0,
                     bw_bytes_per_us: 1e-5,
-                },
-                seed: 3,
-                max_events: 50_000_000,
-                record_polls: false,
-                sched: SchedBackend::Sharded,
-                batch_activations: true,
-                pool_floor: POOL_FLOOR,
-                ..Default::default()
-            },
+                })
+                .with_seed(3)
+                .with_max_events(50_000_000)
+                .with_record_polls(false)
+                .with_sched(SchedBackend::Sharded),
             CostModel::default_calibrated(),
             mc,
             0,
@@ -2177,29 +2336,22 @@ mod tests {
             ..CostModel::default_calibrated()
         };
         let run = |share: bool| {
-            let mc = MigrateConfig {
-                poll_interval_us: 5.0,
-                victim: crate::migrate::VictimPolicy::Chunk(4),
-                exec_per_class: true,
-                share_estimates: share,
-                ..MigrateConfig::default()
-            };
+            let mc = MigrateConfig::default()
+                .with_poll_interval_us(5.0)
+                .with_victim(crate::migrate::VictimPolicy::Chunk(4))
+                .with_exec_per_class(true)
+                .with_share_estimates(share);
             Simulator::new(
                 mk_graph(),
-                SimConfig {
-                    workers_per_node: 1,
-                    link: LinkModel {
+                SimConfig::default()
+                    .with_workers_per_node(1)
+                    .with_link(LinkModel {
                         latency_us: 1.0,
                         bw_bytes_per_us: 1000.0,
-                    },
-                    seed: 3,
-                    max_events: 10_000_000,
-                    record_polls: false,
-                    sched: SchedBackend::Central,
-                    batch_activations: true,
-                    pool_floor: POOL_FLOOR,
-                    ..Default::default()
-                },
+                    })
+                    .with_seed(3)
+                    .with_max_events(10_000_000)
+                    .with_record_polls(false),
                 cost.clone(),
                 mc,
                 150,
@@ -2257,12 +2409,10 @@ mod tests {
             }))
         };
         for select in [VictimSelect::Uniform, VictimSelect::Targeted] {
-            let mc = MigrateConfig {
-                poll_interval_us: 20.0,
-                share_estimates: true,
-                victim_select: select,
-                ..MigrateConfig::default()
-            };
+            let mc = MigrateConfig::default()
+                .with_poll_interval_us(20.0)
+                .with_share_estimates(true)
+                .with_victim_select(select);
             let g = mk_graph();
             let size = g.tree_size(10_000_000);
             let a = sim(g, mc, 3, 4);
@@ -2306,10 +2456,7 @@ mod tests {
     #[test]
     fn uniform_mode_matches_explicit_default() {
         let a = sim(chol(10, 4), MigrateConfig::default(), 7, 2);
-        let explicit = MigrateConfig {
-            victim_select: VictimSelect::Uniform,
-            ..MigrateConfig::default()
-        };
+        let explicit = MigrateConfig::default().with_victim_select(VictimSelect::Uniform);
         let b = sim(chol(10, 4), explicit, 7, 2);
         assert_eq!(a.makespan_us, b.makespan_us);
         assert_eq!(a.events, b.events);
@@ -2329,13 +2476,11 @@ mod tests {
         let run = |faults: FaultPlan| {
             Simulator::new(
                 chol(10, 4),
-                SimConfig {
-                    workers_per_node: 2,
-                    seed: 7,
-                    max_events: 50_000_000,
-                    faults,
-                    ..Default::default()
-                },
+                SimConfig::default()
+                    .with_workers_per_node(2)
+                    .with_seed(7)
+                    .with_max_events(50_000_000)
+                    .with_faults(faults),
                 CostModel::default_calibrated(),
                 MigrateConfig::default(),
                 20,
@@ -2393,19 +2538,14 @@ mod tests {
         let run = || {
             Simulator::new(
                 mk_graph(),
-                SimConfig {
-                    workers_per_node: 4,
-                    seed: 3,
-                    max_events: 50_000_000,
-                    record_polls: false,
-                    faults,
-                    ..Default::default()
-                },
+                SimConfig::default()
+                    .with_workers_per_node(4)
+                    .with_seed(3)
+                    .with_max_events(50_000_000)
+                    .with_record_polls(false)
+                    .with_faults(faults),
                 CostModel::default_calibrated(),
-                MigrateConfig {
-                    poll_interval_us: 20.0,
-                    ..MigrateConfig::default()
-                },
+                MigrateConfig::default().with_poll_interval_us(20.0),
                 20,
             )
             .run()
@@ -2461,19 +2601,14 @@ mod tests {
         let size = g.tree_size(10_000_000);
         let r = Simulator::new(
             g,
-            SimConfig {
-                workers_per_node: 4,
-                seed: 3,
-                max_events: 50_000_000,
-                record_polls: false,
-                faults: "slow-node=1,slow-until-us=20000,stall".parse().unwrap(),
-                ..Default::default()
-            },
+            SimConfig::default()
+                .with_workers_per_node(4)
+                .with_seed(3)
+                .with_max_events(50_000_000)
+                .with_record_polls(false)
+                .with_faults("slow-node=1,slow-until-us=20000,stall".parse().unwrap()),
             CostModel::default_calibrated(),
-            MigrateConfig {
-                poll_interval_us: 20.0,
-                ..MigrateConfig::default()
-            },
+            MigrateConfig::default().with_poll_interval_us(20.0),
             20,
         )
         .run();
@@ -2494,20 +2629,15 @@ mod tests {
             let run = |faults: FaultPlan| {
                 Simulator::new(
                     chol(12, 8),
-                    SimConfig {
-                        workers_per_node: 4,
-                        seed: 3,
-                        max_events: 50_000_000,
-                        record_polls: false,
-                        sched,
-                        faults,
-                        ..Default::default()
-                    },
+                    SimConfig::default()
+                        .with_workers_per_node(4)
+                        .with_seed(3)
+                        .with_max_events(50_000_000)
+                        .with_record_polls(false)
+                        .with_sched(sched)
+                        .with_faults(faults),
                     CostModel::default_calibrated(),
-                    MigrateConfig {
-                        poll_interval_us: 20.0,
-                        ..MigrateConfig::default()
-                    },
+                    MigrateConfig::default().with_poll_interval_us(20.0),
                     20,
                 )
                 .run()
@@ -2569,19 +2699,14 @@ mod tests {
         let size = g.tree_size(10_000_000);
         let r = Simulator::new(
             g,
-            SimConfig {
-                workers_per_node: 4,
-                seed: 3,
-                max_events: 50_000_000,
-                record_polls: false,
-                faults: "slow-node=1,slow-from-us=2000,stall".parse().unwrap(),
-                ..Default::default()
-            },
+            SimConfig::default()
+                .with_workers_per_node(4)
+                .with_seed(3)
+                .with_max_events(50_000_000)
+                .with_record_polls(false)
+                .with_faults("slow-node=1,slow-from-us=2000,stall".parse().unwrap()),
             CostModel::default_calibrated(),
-            MigrateConfig {
-                poll_interval_us: 20.0,
-                ..MigrateConfig::default()
-            },
+            MigrateConfig::default().with_poll_interval_us(20.0),
             20,
         )
         .run();
@@ -2596,5 +2721,157 @@ mod tests {
         let series = r.potential_series(r.makespan_us / 5.0);
         assert!(!series.is_empty());
         assert!(series.iter().all(|e| *e >= 0.0 && e.is_finite()));
+    }
+
+    /// The tentpole's default-off contract: passing `--topology flat`
+    /// and `--steal-domains flat` explicitly must be *byte-identical*
+    /// to a config that never mentions either — same event count, same
+    /// wire traffic, same makespan — because the flat topology returns
+    /// the base link verbatim and flat domains never consult the
+    /// escalation state.
+    #[test]
+    fn flat_topology_and_domains_are_byte_identical_to_default() {
+        let a = sim(chol(10, 4), MigrateConfig::default(), 7, 2);
+        let b = Simulator::new(
+            chol(10, 4),
+            SimConfig::default()
+                .with_workers_per_node(2)
+                .with_seed(7)
+                .with_max_events(50_000_000)
+                .with_topology("flat".parse().unwrap())
+                .with_steal_domains(StealDomains::Flat),
+            CostModel::default_calibrated(),
+            MigrateConfig::default(),
+            20,
+        )
+        .run();
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.deliver_events, b.deliver_events);
+        assert_eq!(
+            a.total_steals().successful_steals,
+            b.total_steals().successful_steals
+        );
+        // On a flat topology every remote steal is cluster-distance:
+        // the socket and rack tiers never see a request.
+        for n in a.nodes.iter().chain(&b.nodes) {
+            assert_eq!(n.tier_steal_requests[0] + n.tier_steal_requests[1], 0);
+            assert_eq!(n.tier_steal_requests[2], n.steal.requests_sent);
+        }
+    }
+
+    /// Hierarchical steal domains on a 2-tier topology: thieves exhaust
+    /// their socket before escalating, so at equal seeds the cross-tier
+    /// steal-request traffic drops below the flat-domain run's — the
+    /// PR's acceptance criterion — while every task still executes
+    /// exactly once, the per-tier counters sum to the existing steal
+    /// stats, and the run stays deterministic.
+    #[test]
+    fn hierarchical_domains_cut_cross_tier_steal_traffic() {
+        let topo = Topology::two_tier(
+            4,
+            LinkModel {
+                latency_us: 1.0,
+                bw_bytes_per_us: 40_000.0,
+            },
+            LinkModel {
+                latency_us: 20.0,
+                bw_bytes_per_us: 2_500.0,
+            },
+        );
+        let run = |domains: StealDomains| {
+            Simulator::new(
+                chol(14, 8),
+                SimConfig::default()
+                    .with_workers_per_node(2)
+                    .with_seed(7)
+                    .with_max_events(50_000_000)
+                    .with_record_polls(false)
+                    .with_topology(topo)
+                    .with_steal_domains(domains),
+                CostModel::default_calibrated(),
+                MigrateConfig::default(),
+                20,
+            )
+            .run()
+        };
+        let total = chol(14, 8).total_tasks().unwrap();
+        let flat = run(StealDomains::Flat);
+        let hier = run(StealDomains::Hierarchical);
+        assert_eq!(flat.tasks_total_executed(), total);
+        assert_eq!(hier.tasks_total_executed(), total);
+        for r in [&flat, &hier] {
+            for (ix, n) in r.nodes.iter().enumerate() {
+                assert_eq!(
+                    n.tier_steal_requests.iter().sum::<u64>(),
+                    n.steal.requests_sent,
+                    "node {ix}: tier requests partition requests_sent"
+                );
+                assert_eq!(
+                    n.tier_steal_grants.iter().sum::<u64>(),
+                    n.steal.successful_steals,
+                    "node {ix}: tier grants partition successful steals"
+                );
+            }
+        }
+        assert!(
+            flat.cross_tier_steal_requests() > 0,
+            "flat domains must leak cross-socket requests for the comparison to mean anything"
+        );
+        assert!(
+            hier.cross_tier_steal_requests() < flat.cross_tier_steal_requests(),
+            "hierarchical must cut cross-tier requests: hier {} vs flat {}",
+            hier.cross_tier_steal_requests(),
+            flat.cross_tier_steal_requests()
+        );
+        // Near-tier traffic dominates once thieves prefer their socket.
+        let near = hier.tier_steal_totals()[0].0;
+        assert!(
+            near > hier.cross_tier_steal_requests(),
+            "near-tier requests ({near}) must dominate cross-tier ({})",
+            hier.cross_tier_steal_requests()
+        );
+        // Determinism of the new mode.
+        let again = run(StealDomains::Hierarchical);
+        assert_eq!(hier.makespan_us, again.makespan_us);
+        assert_eq!(hier.events, again.events);
+    }
+
+    #[test]
+    fn builder_setters_equal_exhaustive_literal() {
+        // The one place a full SimConfig literal is allowed to live:
+        // the builders' own equivalence check.
+        let topo: Topology = "socket=2,socket-lat-us=1,socket-bw=1000".parse().unwrap();
+        let faults: FaultPlan = "drop=0.1,delay=2x".parse().unwrap();
+        let link = LinkModel {
+            latency_us: 2.0,
+            bw_bytes_per_us: 500.0,
+        };
+        let built = SimConfig::default()
+            .with_workers_per_node(3)
+            .with_link(link)
+            .with_seed(9)
+            .with_max_events(123)
+            .with_record_polls(false)
+            .with_sched(SchedBackend::Sharded)
+            .with_batch_activations(false)
+            .with_pool_floor(7)
+            .with_faults(faults)
+            .with_topology(topo)
+            .with_steal_domains(StealDomains::Hierarchical);
+        let literal = SimConfig {
+            workers_per_node: 3,
+            link,
+            seed: 9,
+            max_events: 123,
+            record_polls: false,
+            sched: SchedBackend::Sharded,
+            batch_activations: false,
+            pool_floor: 7,
+            faults,
+            topology: topo,
+            steal_domains: StealDomains::Hierarchical,
+        };
+        assert_eq!(built, literal);
     }
 }

@@ -1,0 +1,549 @@
+//! Cluster topology model (`--topology`) and hierarchical steal domains
+//! (`--steal-domains`).
+//!
+//! A [`Topology`] groups nodes into nested tiers — node → socket → rack
+//! → cluster — and resolves, for any *pair* of nodes, the [`LinkModel`]
+//! of the tightest tier that contains both. It is the single source of
+//! per-pair link parameters for every consumer that used to read one
+//! node-wide latency/bandwidth pair: the threaded wire model
+//! (`comm::Network`), the DES wire scheduling (`sim::Simulator`), the
+//! steal/suspicion timeout formulas (`migrate::protocol`) and the
+//! victim selector's round-trip price (`migrate::VictimSelector`) —
+//! closing the per-victim-link follow-up PR 6 deferred.
+//!
+//! The `flat` default has no tier structure and no link overrides:
+//! [`Topology::link_between`] returns the base link *verbatim* (the
+//! same `LinkModel` value, not a recomputation), so a flat run is
+//! byte-identical to a build without this module.
+//!
+//! [`StealDomains::Hierarchical`] makes thieves exhaust their nearest
+//! tier before escalating outward: a per-thief [`EscalationState`]
+//! starts at the lowest tier that contains a peer and widens one tier
+//! after [`TIER_ATTEMPT_BUDGET`] consecutive failed steal attempts
+//! (denials or timeouts); any granted steal resets it to the nearest
+//! tier. Both runtimes drive the same state machine, so the DES and
+//! the threaded runtime cannot diverge on escalation behaviour.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::comm::LinkModel;
+
+/// Tier indices: 0 = socket, 1 = rack, 2 = cluster. The cluster tier
+/// always exists (it is "everyone else"), so escalation terminates.
+pub const TIER_COUNT: usize = 3;
+
+/// Human names for the tiers, indexed by [`Topology::tier_of`]'s
+/// result — used by report JSON keys and the figure output.
+pub const TIER_NAMES: [&str; TIER_COUNT] = ["socket", "rack", "cluster"];
+
+/// Consecutive failed steal attempts (denial or timeout) a thief
+/// tolerates at its current tier before widening the steal domain by
+/// one tier (`--steal-domains hierarchical`). Two misses ≈ one full
+/// retry round under the protocol's per-victim retry budget without
+/// letting a single unlucky denial leak traffic across a tier.
+pub const TIER_ATTEMPT_BUDGET: u32 = 2;
+
+/// Sentinel for "inherit this parameter from the base link".
+const INHERIT: f64 = -1.0;
+
+/// Nested tier model with per-tier link parameters.
+///
+/// Spec grammar (comma-separated `key=value`, `--topology`):
+///
+/// ```text
+/// flat                        no tiers, base link everywhere (default)
+/// socket=N                    nodes per socket (0 = tier absent)
+/// rack=N                      nodes per rack (0 = tier absent; when a
+///                             socket tier is present, N must be a
+///                             multiple of the socket size so tiers nest)
+/// socket-lat-us=L, socket-bw=B    intra-socket link (µs, bytes/µs)
+/// rack-lat-us=L,   rack-bw=B      intra-rack (cross-socket) link
+/// cluster-lat-us=L, cluster-bw=B  cross-rack link
+/// ```
+///
+/// Unset link parameters inherit the run's base `--latency-us`/`--bw`
+/// link, so `socket=4,socket-lat-us=1,socket-bw=40000` models a fast
+/// intra-socket path with everything else at cluster defaults.
+/// `topo.label().parse()` round-trips (property-tested alongside the
+/// policy labels in `tests/invariants.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Topology {
+    /// Nodes per socket; 0 = socket tier absent.
+    pub socket_size: u32,
+    /// Nodes per rack; 0 = rack tier absent.
+    pub rack_size: u32,
+    /// Per-tier latency overrides (µs); negative = inherit base link.
+    pub socket_lat_us: f64,
+    pub rack_lat_us: f64,
+    pub cluster_lat_us: f64,
+    /// Per-tier bandwidth overrides (bytes/µs); negative = inherit.
+    pub socket_bw: f64,
+    pub rack_bw: f64,
+    pub cluster_bw: f64,
+}
+
+impl Default for Topology {
+    /// `flat`: no tier structure, no overrides — every pair resolves to
+    /// the base link verbatim.
+    fn default() -> Self {
+        Topology {
+            socket_size: 0,
+            rack_size: 0,
+            socket_lat_us: INHERIT,
+            rack_lat_us: INHERIT,
+            cluster_lat_us: INHERIT,
+            socket_bw: INHERIT,
+            rack_bw: INHERIT,
+            cluster_bw: INHERIT,
+        }
+    }
+}
+
+impl Topology {
+    /// The flat (default) topology.
+    pub fn flat() -> Topology {
+        Topology::default()
+    }
+
+    /// A 2-tier convenience used by tests, the smoke runs and the
+    /// topology figure: sockets of `socket_size` nodes with a fast
+    /// intra-socket link, everything else on the (slower) cluster link.
+    pub fn two_tier(
+        socket_size: u32,
+        socket: LinkModel,
+        cluster: LinkModel,
+    ) -> Topology {
+        Topology {
+            socket_size,
+            socket_lat_us: socket.latency_us,
+            socket_bw: socket.bw_bytes_per_us,
+            cluster_lat_us: cluster.latency_us,
+            cluster_bw: cluster.bw_bytes_per_us,
+            ..Topology::default()
+        }
+    }
+
+    /// No tiers and no overrides: [`Topology::link_between`] is the
+    /// identity on the base link and hierarchical stealing degenerates
+    /// to one cluster-wide domain.
+    pub fn is_flat(&self) -> bool {
+        *self == Topology::default()
+    }
+
+    /// The tightest tier containing both nodes: 0 = same socket,
+    /// 1 = same rack, 2 = cluster. A node shares its own socket with
+    /// itself. Absent tiers (size 0) never match, so with no tier
+    /// structure every remote pair is cluster-distance.
+    pub fn tier_of(&self, a: usize, b: usize) -> usize {
+        let same = |size: u32| size > 0 && a / size as usize == b / size as usize;
+        if a == b || same(self.socket_size) {
+            0
+        } else if same(self.rack_size) {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// The link model of one tier, inheriting unset parameters from
+    /// `base`.
+    pub fn tier_link(&self, tier: usize, base: LinkModel) -> LinkModel {
+        let (lat, bw) = match tier {
+            0 => (self.socket_lat_us, self.socket_bw),
+            1 => (self.rack_lat_us, self.rack_bw),
+            _ => (self.cluster_lat_us, self.cluster_bw),
+        };
+        LinkModel {
+            latency_us: if lat >= 0.0 { lat } else { base.latency_us },
+            bw_bytes_per_us: if bw > 0.0 { bw } else { base.bw_bytes_per_us },
+        }
+    }
+
+    /// Per-pair link resolution — the module's reason to exist. Flat
+    /// returns `base` verbatim (bit-for-bit), which is what keeps the
+    /// default byte-identical to the pre-topology runtime.
+    pub fn link_between(&self, a: usize, b: usize, base: LinkModel) -> LinkModel {
+        if self.is_flat() {
+            return base;
+        }
+        self.tier_link(self.tier_of(a, b), base)
+    }
+
+    /// The slowest link any pair in an `n`-node run can see — what the
+    /// crash detector's suspicion timeout must cover, since suspicion
+    /// must outlast a steal round trip to *any* victim.
+    pub fn worst_link(&self, n: usize, base: LinkModel) -> LinkModel {
+        if self.is_flat() || n < 2 {
+            return base;
+        }
+        let mut worst = self.tier_link(self.tier_of(0, 1), base);
+        for peer in 1..n {
+            let l = self.tier_link(self.tier_of(0, peer), base);
+            if l.latency_us > worst.latency_us
+                || (l.latency_us == worst.latency_us && l.bw_bytes_per_us < worst.bw_bytes_per_us)
+            {
+                worst = l;
+            }
+        }
+        worst
+    }
+
+    /// Is `peer` inside `me`'s steal domain at escalation tier `tier`?
+    pub fn in_domain(&self, me: usize, peer: usize, tier: usize) -> bool {
+        me != peer && self.tier_of(me, peer) <= tier
+    }
+
+    /// The peers of `me` (out of `n` nodes) within escalation tier
+    /// `tier`, in node-id order.
+    pub fn peers_within(&self, me: usize, n: usize, tier: usize) -> Vec<usize> {
+        (0..n).filter(|&p| self.in_domain(me, p, tier)).collect()
+    }
+
+    /// The lowest tier at which `me` has at least one peer — where a
+    /// hierarchical thief starts. The cluster tier always qualifies
+    /// when any peer exists at all.
+    pub fn start_tier(&self, me: usize, n: usize) -> usize {
+        for tier in 0..TIER_COUNT {
+            if (0..n).any(|p| self.in_domain(me, p, tier)) {
+                return tier;
+            }
+        }
+        TIER_COUNT - 1
+    }
+
+    /// Canonical spec string; `topo.label().parse()` round-trips.
+    pub fn label(&self) -> String {
+        if self.is_flat() {
+            return "flat".to_string();
+        }
+        let mut parts: Vec<String> = Vec::new();
+        if self.socket_size > 0 {
+            parts.push(format!("socket={}", self.socket_size));
+        }
+        if self.rack_size > 0 {
+            parts.push(format!("rack={}", self.rack_size));
+        }
+        for (key, v) in [
+            ("socket-lat-us", self.socket_lat_us),
+            ("socket-bw", self.socket_bw),
+            ("rack-lat-us", self.rack_lat_us),
+            ("rack-bw", self.rack_bw),
+            ("cluster-lat-us", self.cluster_lat_us),
+            ("cluster-bw", self.cluster_bw),
+        ] {
+            if v >= 0.0 {
+                parts.push(format!("{key}={v}"));
+            }
+        }
+        parts.join(",")
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+fn parse_size(key: &str, v: &str) -> Result<u32, String> {
+    v.parse::<u32>()
+        .map_err(|_| format!("--topology: '{key}={v}' is not a node count"))
+}
+
+fn parse_lat(key: &str, v: &str) -> Result<f64, String> {
+    let t: f64 = v
+        .parse()
+        .map_err(|_| format!("--topology: '{key}={v}' is not a latency (µs)"))?;
+    if t < 0.0 {
+        return Err(format!("--topology: '{key}={v}' must be >= 0"));
+    }
+    Ok(t)
+}
+
+fn parse_bw(key: &str, v: &str) -> Result<f64, String> {
+    let b: f64 = v
+        .parse()
+        .map_err(|_| format!("--topology: '{key}={v}' is not a bandwidth (bytes/µs)"))?;
+    if b <= 0.0 {
+        return Err(format!("--topology: '{key}={v}' must be > 0"));
+    }
+    Ok(b)
+}
+
+impl FromStr for Topology {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let spec = s.trim();
+        let mut topo = Topology::default();
+        if spec.is_empty() || spec.eq_ignore_ascii_case("flat") {
+            return Ok(topo);
+        }
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (key, value) = match entry.split_once('=') {
+                Some((k, v)) => (k.trim(), v.trim()),
+                None => (entry, ""),
+            };
+            match key.to_ascii_lowercase().as_str() {
+                "socket" => topo.socket_size = parse_size(key, value)?,
+                "rack" => topo.rack_size = parse_size(key, value)?,
+                "socket-lat-us" => topo.socket_lat_us = parse_lat(key, value)?,
+                "rack-lat-us" => topo.rack_lat_us = parse_lat(key, value)?,
+                "cluster-lat-us" => topo.cluster_lat_us = parse_lat(key, value)?,
+                "socket-bw" => topo.socket_bw = parse_bw(key, value)?,
+                "rack-bw" => topo.rack_bw = parse_bw(key, value)?,
+                "cluster-bw" => topo.cluster_bw = parse_bw(key, value)?,
+                other => return Err(format!("--topology: unknown key '{other}'")),
+            }
+        }
+        if topo.socket_size > 0 && topo.rack_size > 0 && topo.rack_size % topo.socket_size != 0 {
+            return Err(format!(
+                "--topology: rack={} is not a multiple of socket={} (tiers must nest)",
+                topo.rack_size, topo.socket_size
+            ));
+        }
+        if topo.rack_size > 0 && topo.socket_size > 0 && topo.rack_size < topo.socket_size {
+            return Err(format!(
+                "--topology: rack={} is smaller than socket={}",
+                topo.rack_size, topo.socket_size
+            ));
+        }
+        Ok(topo)
+    }
+}
+
+/// How thieves traverse the topology (`--steal-domains`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StealDomains {
+    /// One cluster-wide domain — the paper's behaviour, and byte-
+    /// identical to the pre-topology runtime. The default.
+    #[default]
+    Flat,
+    /// Exhaust the nearest tier before escalating outward
+    /// ([`EscalationState`]); DuctTeip-style hierarchical distribution
+    /// applied to stealing.
+    Hierarchical,
+}
+
+impl StealDomains {
+    /// Canonical CLI spelling; accepted back by the [`FromStr`] parser
+    /// (round-trip property-tested in `tests/invariants.rs`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            StealDomains::Flat => "flat",
+            StealDomains::Hierarchical => "hierarchical",
+        }
+    }
+}
+
+impl fmt::Display for StealDomains {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl FromStr for StealDomains {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Ok(StealDomains::Flat),
+            "hierarchical" | "hier" => Ok(StealDomains::Hierarchical),
+            _ => Err(format!(
+                "unknown steal-domains mode '{s}' (flat | hierarchical)"
+            )),
+        }
+    }
+}
+
+/// Per-thief escalation state (`--steal-domains hierarchical`), the one
+/// state machine both runtimes drive: start at the lowest tier with a
+/// peer, widen one tier after [`TIER_ATTEMPT_BUDGET`] consecutive
+/// misses, snap back on any granted steal.
+#[derive(Clone, Copy, Debug)]
+pub struct EscalationState {
+    /// The thief's nearest populated tier (reset target).
+    base_tier: usize,
+    /// Current escalation tier; candidates are peers within it.
+    tier: usize,
+    /// Consecutive denials/timeouts at the current tier.
+    misses: u32,
+}
+
+impl EscalationState {
+    /// State for thief `me` in an `n`-node run.
+    pub fn new(topo: &Topology, me: usize, n: usize) -> EscalationState {
+        let base = topo.start_tier(me, n);
+        EscalationState {
+            base_tier: base,
+            tier: base,
+            misses: 0,
+        }
+    }
+
+    /// The tier whose peers the thief may currently target.
+    pub fn tier(&self) -> usize {
+        self.tier
+    }
+
+    /// A steal was granted: trust the near tier again.
+    pub fn on_grant(&mut self) {
+        self.tier = self.base_tier;
+        self.misses = 0;
+    }
+
+    /// A steal attempt failed (denial or timeout): after
+    /// [`TIER_ATTEMPT_BUDGET`] consecutive misses, widen the domain by
+    /// one tier (saturating at the cluster tier).
+    pub fn on_miss(&mut self) {
+        self.misses += 1;
+        if self.misses >= TIER_ATTEMPT_BUDGET && self.tier + 1 < TIER_COUNT {
+            self.tier += 1;
+            self.misses = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_is_the_default_and_is_identity() {
+        let t = Topology::default();
+        assert!(t.is_flat());
+        assert_eq!(t.label(), "flat");
+        assert_eq!("flat".parse::<Topology>().unwrap(), t);
+        assert_eq!("".parse::<Topology>().unwrap(), t);
+        // link_between must return the base verbatim (bit-for-bit).
+        let base = LinkModel {
+            latency_us: 7.25,
+            bw_bytes_per_us: 12_345.0,
+        };
+        let l = t.link_between(0, 9, base);
+        assert_eq!(l.latency_us.to_bits(), base.latency_us.to_bits());
+        assert_eq!(l.bw_bytes_per_us.to_bits(), base.bw_bytes_per_us.to_bits());
+        let ideal = LinkModel::ideal();
+        assert!(t.link_between(3, 4, ideal).is_ideal(), "infinity survives");
+    }
+
+    #[test]
+    fn tier_of_nests_socket_rack_cluster() {
+        let t: Topology = "socket=2,rack=4".parse().unwrap();
+        assert_eq!(t.tier_of(0, 0), 0, "self is socket-local");
+        assert_eq!(t.tier_of(0, 1), 0, "same socket");
+        assert_eq!(t.tier_of(0, 2), 1, "same rack, different socket");
+        assert_eq!(t.tier_of(1, 3), 1);
+        assert_eq!(t.tier_of(0, 4), 2, "different rack");
+        assert_eq!(t.tier_of(5, 2), 2);
+        // Rack-only topology: no socket tier for remote peers.
+        let r: Topology = "rack=4".parse().unwrap();
+        assert_eq!(r.tier_of(0, 1), 1);
+        assert_eq!(r.tier_of(0, 5), 2);
+        assert_eq!(r.tier_of(2, 2), 0, "self is always tier 0");
+    }
+
+    #[test]
+    fn link_between_resolves_the_tightest_tier() {
+        let base = LinkModel::cluster(); // 5 µs, 10_000 B/µs
+        let t: Topology =
+            "socket=2,rack=4,socket-lat-us=1,socket-bw=40000,cluster-lat-us=20,cluster-bw=2500"
+                .parse()
+                .unwrap();
+        let s = t.link_between(0, 1, base);
+        assert_eq!((s.latency_us, s.bw_bytes_per_us), (1.0, 40_000.0));
+        // Rack tier has no overrides: inherits the base link.
+        let r = t.link_between(0, 2, base);
+        assert_eq!((r.latency_us, r.bw_bytes_per_us), (5.0, 10_000.0));
+        let c = t.link_between(0, 4, base);
+        assert_eq!((c.latency_us, c.bw_bytes_per_us), (20.0, 2_500.0));
+        // worst_link covers the slowest reachable pair.
+        let w = t.worst_link(8, base);
+        assert_eq!((w.latency_us, w.bw_bytes_per_us), (20.0, 2_500.0));
+        // …but a 2-node run never leaves the socket.
+        let w2 = t.worst_link(2, base);
+        assert_eq!((w2.latency_us, w2.bw_bytes_per_us), (1.0, 40_000.0));
+    }
+
+    #[test]
+    fn label_round_trips() {
+        for spec in [
+            "flat",
+            "socket=4",
+            "socket=4,socket-lat-us=1,socket-bw=40000",
+            "socket=2,rack=8,socket-lat-us=0.5,socket-bw=50000,rack-lat-us=5,rack-bw=10000,cluster-lat-us=20,cluster-bw=2500",
+            "rack=16,rack-lat-us=2,cluster-lat-us=25",
+        ] {
+            let t: Topology = spec.parse().unwrap();
+            let back: Topology = t.label().parse().unwrap();
+            assert_eq!(back, t, "label round-trip for '{spec}' via '{}'", t.label());
+        }
+    }
+
+    #[test]
+    fn parser_rejects_bad_specs() {
+        assert!("socket=x".parse::<Topology>().is_err());
+        assert!("socket-lat-us=-3".parse::<Topology>().is_err());
+        assert!("socket-bw=0".parse::<Topology>().is_err());
+        assert!("bogus=1".parse::<Topology>().is_err());
+        assert!(
+            "socket=3,rack=8".parse::<Topology>().is_err(),
+            "tiers must nest"
+        );
+    }
+
+    #[test]
+    fn steal_domains_labels_round_trip() {
+        assert_eq!(StealDomains::default(), StealDomains::Flat);
+        for d in [StealDomains::Flat, StealDomains::Hierarchical] {
+            assert_eq!(d.label().parse::<StealDomains>().unwrap(), d);
+        }
+        assert_eq!("hier".parse::<StealDomains>().unwrap(), StealDomains::Hierarchical);
+        assert!("ring".parse::<StealDomains>().is_err());
+    }
+
+    #[test]
+    fn domain_membership_and_start_tier() {
+        let t: Topology = "socket=2,rack=4".parse().unwrap();
+        assert_eq!(t.peers_within(0, 8, 0), vec![1]);
+        assert_eq!(t.peers_within(0, 8, 1), vec![1, 2, 3]);
+        assert_eq!(t.peers_within(0, 8, 2), vec![1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(t.start_tier(0, 8), 0);
+        // A node whose socket-mate is out of range starts at the rack.
+        let odd: Topology = "socket=2,rack=4".parse().unwrap();
+        assert_eq!(odd.start_tier(2, 3), 1, "node 3 absent: rack is nearest");
+        // Flat: every peer is cluster-distance.
+        let flat = Topology::flat();
+        assert_eq!(flat.start_tier(0, 8), 2);
+        assert_eq!(flat.peers_within(1, 4, 2), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn escalation_widens_on_budget_and_snaps_back_on_grant() {
+        let t: Topology = "socket=2,rack=4".parse().unwrap();
+        let mut e = EscalationState::new(&t, 0, 8);
+        assert_eq!(e.tier(), 0);
+        e.on_miss();
+        assert_eq!(e.tier(), 0, "one miss is within budget");
+        e.on_miss();
+        assert_eq!(e.tier(), 1, "budget exhausted: widen to the rack");
+        e.on_miss();
+        e.on_miss();
+        assert_eq!(e.tier(), 2, "…then the cluster");
+        e.on_miss();
+        e.on_miss();
+        assert_eq!(e.tier(), 2, "cluster is terminal");
+        e.on_grant();
+        assert_eq!(e.tier(), 0, "a grant resets to the nearest tier");
+        // A thief with no socket mate starts (and resets) at its base.
+        let mut lone = EscalationState::new(&Topology::flat(), 1, 4);
+        assert_eq!(lone.tier(), 2);
+        lone.on_grant();
+        assert_eq!(lone.tier(), 2);
+    }
+}

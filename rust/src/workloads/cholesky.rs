@@ -29,7 +29,7 @@ pub enum TileKind {
 }
 
 /// Workload parameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CholeskyParams {
     /// Tiles per side (the paper's headline config: 200).
     pub tiles: u32,

@@ -22,7 +22,7 @@ use crate::dataflow::ttg::TaskGraph;
 use crate::util::rng::{mix, mix2};
 
 /// UTS parameters (binomial variant).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct UtsParams {
     /// Root branching factor (paper: 120).
     pub b0: u32,

@@ -10,6 +10,7 @@ use parsteal::migrate::{MigrateConfig, ThiefPolicy, VictimPolicy, VictimSelect};
 use parsteal::node::{Cluster, ClusterConfig, NullExecutor, SpinExecutor};
 use parsteal::sched::SchedBackend;
 use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::topology::{StealDomains, Topology};
 use parsteal::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
 
 fn chol(tiles: u32, nodes: u32) -> Arc<CholeskyGraph> {
@@ -31,17 +32,10 @@ fn sim_and_real_agree_on_static_distribution() {
     let g = chol(10, 3);
     let sim = Simulator::new(
         g.clone(),
-        SimConfig {
-            workers_per_node: 2,
-            link: LinkModel::cluster(),
-            seed: 4,
-            max_events: u64::MAX,
-            record_polls: false,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        SimConfig::default()
+            .with_workers_per_node(2)
+            .with_seed(4)
+            .with_record_polls(false),
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
         16,
@@ -49,17 +43,11 @@ fn sim_and_real_agree_on_static_distribution() {
     .run();
     let real = Cluster::run(
         g.clone(),
-        ClusterConfig {
-            workers_per_node: 2,
-            link: LinkModel::ideal(),
-            migrate: MigrateConfig::disabled(),
-            seed: 4,
-            record_polls: false,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        ClusterConfig::default()
+            .with_workers_per_node(2)
+            .with_migrate(MigrateConfig::disabled())
+            .with_seed(4)
+            .with_record_polls(false),
         Arc::new(NullExecutor),
     );
     assert_eq!(sim.tasks_total_executed(), real.tasks_total_executed());
@@ -80,29 +68,16 @@ fn real_runtime_steals_preserve_exactly_once() {
             let g2 = g.clone();
             let r = Cluster::run(
                 g.clone(),
-                ClusterConfig {
-                    workers_per_node: 2,
-                    link: LinkModel::ideal(),
-                    migrate: MigrateConfig {
-                        enabled: true,
-                        thief,
-                        victim,
-                        use_waiting_time: true,
-                        poll_interval_us: 20.0,
-                        max_inflight: 1,
-                        migrate_overhead_us: 150.0,
-                        exec_ewma: false,
-                        exec_per_class: false,
-                        share_estimates: false,
-                        victim_select: VictimSelect::Uniform,
-                    },
-                    seed: 5,
-                    record_polls: false,
-                    sched: SchedBackend::Central,
-                    batch_activations: true,
-                    pool_floor: parsteal::sched::POOL_FLOOR,
-                    faults: Default::default(),
-                },
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_migrate(
+                        MigrateConfig::default()
+                            .with_thief(thief)
+                            .with_victim(victim)
+                            .with_poll_interval_us(20.0),
+                    )
+                    .with_seed(5)
+                    .with_record_polls(false),
                 Arc::new(SpinExecutor::new(cost, 16, move |t| g2.work_units(t)).with_time_scale(0.2)),
             );
             assert_eq!(
@@ -131,20 +106,11 @@ fn real_runtime_uts_dynamic_termination() {
     let g2 = g.clone();
     let r = Cluster::run(
         g.clone(),
-        ClusterConfig {
-            workers_per_node: 2,
-            link: LinkModel::ideal(),
-            migrate: MigrateConfig {
-                poll_interval_us: 20.0,
-                ..Default::default()
-            },
-            seed: 6,
-            record_polls: false,
-            sched: SchedBackend::Central,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        ClusterConfig::default()
+            .with_workers_per_node(2)
+            .with_migrate(MigrateConfig::default().with_poll_interval_us(20.0))
+            .with_seed(6)
+            .with_record_polls(false),
         Arc::new(
             SpinExecutor::new(CostModel::default_calibrated(), 0, move |t| g2.work_units(t))
                 .with_time_scale(0.01),
@@ -162,17 +128,11 @@ fn sharded_backend_sim_and_real_agree() {
     let total = g.total_tasks().unwrap();
     let sim = Simulator::new(
         g.clone(),
-        SimConfig {
-            workers_per_node: 2,
-            link: LinkModel::cluster(),
-            seed: 4,
-            max_events: u64::MAX,
-            record_polls: false,
-            sched: SchedBackend::Sharded,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        SimConfig::default()
+            .with_workers_per_node(2)
+            .with_seed(4)
+            .with_record_polls(false)
+            .with_sched(SchedBackend::Sharded),
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
         16,
@@ -180,17 +140,12 @@ fn sharded_backend_sim_and_real_agree() {
     .run();
     let real = Cluster::run(
         g.clone(),
-        ClusterConfig {
-            workers_per_node: 2,
-            link: LinkModel::ideal(),
-            migrate: MigrateConfig::disabled(),
-            seed: 4,
-            record_polls: false,
-            sched: SchedBackend::Sharded,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        ClusterConfig::default()
+            .with_workers_per_node(2)
+            .with_migrate(MigrateConfig::disabled())
+            .with_seed(4)
+            .with_record_polls(false)
+            .with_sched(SchedBackend::Sharded),
         Arc::new(NullExecutor),
     );
     assert_eq!(sim.tasks_total_executed(), total);
@@ -211,17 +166,11 @@ fn workassist_backend_sim_and_real_agree() {
     let total = g.total_tasks().unwrap();
     let sim = Simulator::new(
         g.clone(),
-        SimConfig {
-            workers_per_node: 2,
-            link: LinkModel::cluster(),
-            seed: 4,
-            max_events: u64::MAX,
-            record_polls: false,
-            sched: SchedBackend::Workassist,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        SimConfig::default()
+            .with_workers_per_node(2)
+            .with_seed(4)
+            .with_record_polls(false)
+            .with_sched(SchedBackend::Workassist),
         CostModel::default_calibrated(),
         MigrateConfig::disabled(),
         16,
@@ -229,17 +178,12 @@ fn workassist_backend_sim_and_real_agree() {
     .run();
     let real = Cluster::run(
         g.clone(),
-        ClusterConfig {
-            workers_per_node: 2,
-            link: LinkModel::ideal(),
-            migrate: MigrateConfig::disabled(),
-            seed: 4,
-            record_polls: false,
-            sched: SchedBackend::Workassist,
-            batch_activations: true,
-            pool_floor: parsteal::sched::POOL_FLOOR,
-            faults: Default::default(),
-        },
+        ClusterConfig::default()
+            .with_workers_per_node(2)
+            .with_migrate(MigrateConfig::disabled())
+            .with_seed(4)
+            .with_record_polls(false)
+            .with_sched(SchedBackend::Workassist),
         Arc::new(NullExecutor),
     );
     assert_eq!(sim.tasks_total_executed(), total);
@@ -276,17 +220,11 @@ fn batched_activations_cut_deliver_events() {
         }));
         Simulator::new(
             g,
-            SimConfig {
-                workers_per_node: 4,
-                link: LinkModel::cluster(),
-                seed: 4,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: batch,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+            SimConfig::default()
+                .with_workers_per_node(4)
+                .with_seed(4)
+                .with_record_polls(false)
+                .with_batch_activations(batch),
             CostModel::default_calibrated(),
             MigrateConfig::disabled(),
             16,
@@ -321,17 +259,11 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
         let total = g.total_tasks().unwrap();
         let sim = Simulator::new(
             g.clone(),
-            SimConfig {
-                workers_per_node: 2,
-                link: LinkModel::cluster(),
-                seed: 8,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: batch,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+            SimConfig::default()
+                .with_workers_per_node(2)
+                .with_seed(8)
+                .with_record_polls(false)
+                .with_batch_activations(batch),
             CostModel::default_calibrated(),
             MigrateConfig::disabled(),
             16,
@@ -339,17 +271,12 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
         .run();
         let real = Cluster::run(
             g.clone(),
-            ClusterConfig {
-                workers_per_node: 2,
-                link: LinkModel::ideal(),
-                migrate: MigrateConfig::disabled(),
-                seed: 8,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: batch,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(MigrateConfig::disabled())
+                .with_seed(8)
+                .with_record_polls(false)
+                .with_batch_activations(batch),
             Arc::new(NullExecutor),
         );
         assert_eq!(sim.tasks_total_executed(), total, "batch={batch}");
@@ -372,12 +299,12 @@ fn batched_and_unbatched_agree_des_vs_threaded() {
 /// DES also observes the denials themselves.
 #[test]
 fn share_estimates_des_and_threaded_agree() {
-    let mk_migrate = |overhead: f64, share: bool| MigrateConfig {
-        poll_interval_us: 20.0,
-        migrate_overhead_us: overhead,
-        exec_per_class: true,
-        share_estimates: share,
-        ..Default::default()
+    let mk_migrate = |overhead: f64, share: bool| {
+        MigrateConfig::default()
+            .with_poll_interval_us(20.0)
+            .with_migrate_overhead_us(overhead)
+            .with_exec_per_class(true)
+            .with_share_estimates(share)
     };
     // All work starts on node 0, so thieves are permanently starving
     // and the victim always has a stealable queue — every request in
@@ -400,17 +327,10 @@ fn share_estimates_des_and_threaded_agree() {
             let size = g.tree_size(10_000_000);
             let sim = Simulator::new(
                 g,
-                SimConfig {
-                    workers_per_node: 2,
-                    link: LinkModel::cluster(),
-                    seed: 4,
-                    max_events: u64::MAX,
-                    record_polls: false,
-                    sched: SchedBackend::Central,
-                    batch_activations: true,
-                    pool_floor: parsteal::sched::POOL_FLOOR,
-                    faults: Default::default(),
-                },
+                SimConfig::default()
+                    .with_workers_per_node(2)
+                    .with_seed(4)
+                    .with_record_polls(false),
                 CostModel::default_calibrated(),
                 mk_migrate(overhead, share),
                 0,
@@ -423,17 +343,11 @@ fn share_estimates_des_and_threaded_agree() {
             let ex = SpinExecutor::new(CostModel::default_calibrated(), 0, |_| 30_000.0);
             let real = Cluster::run(
                 g,
-                ClusterConfig {
-                    workers_per_node: 2,
-                    link: LinkModel::ideal(),
-                    migrate: mk_migrate(overhead, share),
-                    seed: 4,
-                    record_polls: false,
-                    sched: SchedBackend::Central,
-                    batch_activations: true,
-                    pool_floor: parsteal::sched::POOL_FLOOR,
-                    faults: Default::default(),
-                },
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_migrate(mk_migrate(overhead, share))
+                    .with_seed(4)
+                    .with_record_polls(false),
                 Arc::new(ex),
             );
             let tag = format!("share={share} overhead={overhead}");
@@ -499,27 +413,18 @@ fn targeted_victim_selection_des_and_threaded_agree() {
         }))
     };
     for select in [VictimSelect::Uniform, VictimSelect::Targeted] {
-        let mc = MigrateConfig {
-            poll_interval_us: 20.0,
-            share_estimates: true,
-            victim_select: select,
-            ..Default::default()
-        };
+        let mc = MigrateConfig::default()
+            .with_poll_interval_us(20.0)
+            .with_share_estimates(true)
+            .with_victim_select(select);
         let g = mk_uts();
         let size = g.tree_size(10_000_000);
         let sim = Simulator::new(
             g,
-            SimConfig {
-                workers_per_node: 2,
-                link: LinkModel::cluster(),
-                seed: 4,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+            SimConfig::default()
+                .with_workers_per_node(2)
+                .with_seed(4)
+                .with_record_polls(false),
             CostModel::default_calibrated(),
             mc,
             0,
@@ -527,17 +432,11 @@ fn targeted_victim_selection_des_and_threaded_agree() {
         .run();
         let real = Cluster::run(
             mk_uts(),
-            ClusterConfig {
-                workers_per_node: 2,
-                link: LinkModel::ideal(),
-                migrate: mc,
-                seed: 4,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults: Default::default(),
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(mc)
+                .with_seed(4)
+                .with_record_polls(false),
             Arc::new(SpinExecutor::new(
                 CostModel::default_calibrated(),
                 0,
@@ -569,6 +468,101 @@ fn targeted_victim_selection_des_and_threaded_agree() {
     }
 }
 
+/// Hierarchical steal domains on a two-tier topology, DES vs threaded:
+/// both runtimes honour the same `Topology` + `StealDomains` knobs from
+/// the same config surface, both execute every UTS task exactly once
+/// with steals landing, and both keep their per-tier steal ledgers
+/// internally consistent — the tier counters sum to the thief-side
+/// requests sent, and under hierarchical domains the near (socket)
+/// tier is actually exercised before escalation in both runtimes. The
+/// runtimes differ in timing, so the threaded arm checks structure,
+/// not counts equal to the DES.
+#[test]
+fn hierarchical_domains_des_and_threaded_agree() {
+    let topo = Topology::two_tier(
+        2,
+        LinkModel {
+            latency_us: 1.0,
+            bw_bytes_per_us: 20_000.0,
+        },
+        LinkModel {
+            latency_us: 40.0,
+            bw_bytes_per_us: 1_000.0,
+        },
+    );
+    let mk_uts = || {
+        Arc::new(UtsGraph::new(UtsParams {
+            b0: 24,
+            m: 4,
+            q: 0.3,
+            g: 30_000.0,
+            seed: 5,
+            nodes: 4,
+            max_depth: 18,
+        }))
+    };
+    let mc = MigrateConfig::default().with_poll_interval_us(20.0);
+    for domains in [StealDomains::Flat, StealDomains::Hierarchical] {
+        let g = mk_uts();
+        let size = g.tree_size(10_000_000);
+        let sim = Simulator::new(
+            g,
+            SimConfig::default()
+                .with_workers_per_node(2)
+                .with_seed(4)
+                .with_record_polls(false)
+                .with_topology(topo)
+                .with_steal_domains(domains),
+            CostModel::default_calibrated(),
+            mc,
+            0,
+        )
+        .run();
+        let real = Cluster::run(
+            mk_uts(),
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(mc)
+                .with_seed(4)
+                .with_record_polls(false)
+                .with_topology(topo)
+                .with_steal_domains(domains),
+            Arc::new(SpinExecutor::new(
+                CostModel::default_calibrated(),
+                0,
+                |_| 30_000.0,
+            )),
+        );
+        let tag = format!("domains={}", domains.label());
+        assert_eq!(sim.tasks_total_executed(), size, "{tag}: DES exactly once");
+        assert_eq!(
+            real.tasks_total_executed(),
+            size,
+            "{tag}: threaded exactly once"
+        );
+        assert!(sim.total_steals().successful_steals > 0, "{tag}: DES steals");
+        assert!(
+            real.total_steals().successful_steals > 0,
+            "{tag}: threaded steals"
+        );
+        for (report, kind) in [(&sim, "DES"), (&real, "threaded")] {
+            let tiers = report.tier_steal_totals();
+            let tier_req_sum: u64 = tiers.iter().map(|(req, _, _)| req).sum();
+            assert_eq!(
+                tier_req_sum,
+                report.total_steals().requests_sent,
+                "{tag} {kind}: tier ledger covers every request"
+            );
+            if domains == StealDomains::Hierarchical {
+                assert!(
+                    tiers[0].0 > 0,
+                    "{tag} {kind}: hierarchical thieves try their socket first"
+                );
+            }
+        }
+    }
+}
+
 /// Crash-stop agreement between the runtimes on the acceptance
 /// scenario: an 8-node Cholesky losing one of several swept nodes a
 /// third of the way through its (baseline-measured) makespan. Both
@@ -580,24 +574,15 @@ fn targeted_victim_selection_des_and_threaded_agree() {
 fn crash_recovery_des_and_threaded_agree() {
     let g = chol(10, 8);
     let total = g.total_tasks().unwrap();
-    let mc = MigrateConfig {
-        poll_interval_us: 30.0,
-        ..Default::default()
-    };
+    let mc = MigrateConfig::default().with_poll_interval_us(30.0);
     let sim_run = |faults: FaultPlan| {
         Simulator::new(
             g.clone(),
-            SimConfig {
-                workers_per_node: 2,
-                link: LinkModel::cluster(),
-                seed: 4,
-                max_events: u64::MAX,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults,
-            },
+            SimConfig::default()
+                .with_workers_per_node(2)
+                .with_seed(4)
+                .with_record_polls(false)
+                .with_faults(faults),
             CostModel::default_calibrated(),
             mc,
             16,
@@ -612,17 +597,12 @@ fn crash_recovery_des_and_threaded_agree() {
     let real_run = |faults: FaultPlan| {
         Cluster::run(
             g.clone(),
-            ClusterConfig {
-                workers_per_node: 2,
-                link: LinkModel::ideal(),
-                migrate: mc,
-                seed: 4,
-                record_polls: false,
-                sched: SchedBackend::Central,
-                batch_activations: true,
-                pool_floor: parsteal::sched::POOL_FLOOR,
-                faults,
-            },
+            ClusterConfig::default()
+                .with_workers_per_node(2)
+                .with_migrate(mc)
+                .with_seed(4)
+                .with_record_polls(false)
+                .with_faults(faults),
             ex.clone(),
         )
     };

@@ -16,36 +16,38 @@ use parsteal::node::{Cluster, ClusterConfig, NullExecutor};
 use parsteal::prop_assert;
 use parsteal::sched::{SchedBackend, SchedQueue, TaskMeta};
 use parsteal::sim::{CostModel, SimConfig, Simulator};
+use parsteal::topology::{StealDomains, Topology, TIER_COUNT};
 use parsteal::util::prop::{check, Config};
 use parsteal::util::rng::Rng;
 use parsteal::workloads::{CholeskyGraph, CholeskyParams, UtsGraph, UtsParams};
 
 fn random_migrate(rng: &mut Rng) -> MigrateConfig {
-    MigrateConfig {
-        enabled: rng.uniform() < 0.8,
-        thief: if rng.uniform() < 0.5 {
+    // Builder order mirrors the old field order so the RNG draw
+    // sequence (and thus every replayed case) is unchanged.
+    MigrateConfig::default()
+        .with_enabled(rng.uniform() < 0.8)
+        .with_thief(if rng.uniform() < 0.5 {
             ThiefPolicy::ReadyOnly
         } else {
             ThiefPolicy::ReadySuccessors
-        },
-        victim: match rng.below(3) {
+        })
+        .with_victim(match rng.below(3) {
             0 => VictimPolicy::Half,
             1 => VictimPolicy::Chunk(1 + rng.below(30) as usize),
             _ => VictimPolicy::Single,
-        },
-        use_waiting_time: rng.uniform() < 0.5,
-        poll_interval_us: 10.0 + rng.uniform() * 200.0,
-        max_inflight: 1 + rng.below(3) as usize,
-        migrate_overhead_us: rng.uniform() * 300.0,
-        exec_ewma: rng.uniform() < 0.5,
-        exec_per_class: rng.uniform() < 0.5,
-        share_estimates: rng.uniform() < 0.5,
-        victim_select: if rng.uniform() < 0.5 {
+        })
+        .with_use_waiting_time(rng.uniform() < 0.5)
+        .with_poll_interval_us(10.0 + rng.uniform() * 200.0)
+        .with_max_inflight(1 + rng.below(3) as usize)
+        .with_migrate_overhead_us(rng.uniform() * 300.0)
+        .with_exec_ewma(rng.uniform() < 0.5)
+        .with_exec_per_class(rng.uniform() < 0.5)
+        .with_share_estimates(rng.uniform() < 0.5)
+        .with_victim_select(if rng.uniform() < 0.5 {
             VictimSelect::Uniform
         } else {
             VictimSelect::Targeted
-        },
-    }
+        })
 }
 
 /// Uniformly random scheduler backend: every invariant in this file
@@ -80,20 +82,18 @@ fn prop_cholesky_sim_executes_every_task_once() {
             let total = graph.total_tasks().unwrap();
             let report = Simulator::new(
                 graph,
-                SimConfig {
-                    workers_per_node: 1 + rng.below(8) as usize,
-                    link: LinkModel {
+                SimConfig::default()
+                    .with_workers_per_node(1 + rng.below(8) as usize)
+                    .with_link(LinkModel {
                         latency_us: rng.uniform() * 20.0,
                         bw_bytes_per_us: 100.0 + rng.uniform() * 1e4,
-                    },
-                    seed: rng.next_u64(),
-                    max_events: 200_000_000,
-                    record_polls: false,
-                    sched: random_sched(rng),
-                    batch_activations: rng.uniform() < 0.5,
-                    pool_floor: rng.below(4) as usize,
-                    faults: Default::default(),
-                },
+                    })
+                    .with_seed(rng.next_u64())
+                    .with_max_events(200_000_000)
+                    .with_record_polls(false)
+                    .with_sched(random_sched(rng))
+                    .with_batch_activations(rng.uniform() < 0.5)
+                    .with_pool_floor(rng.below(4) as usize),
                 CostModel::default_calibrated(),
                 random_migrate(rng),
                 16,
@@ -137,17 +137,14 @@ fn prop_uts_sim_matches_tree_size() {
             }
             let report = Simulator::new(
                 graph,
-                SimConfig {
-                    workers_per_node: 1 + rng.below(4) as usize,
-                    link: LinkModel::cluster(),
-                    seed: rng.next_u64(),
-                    max_events: 200_000_000,
-                    record_polls: false,
-                    sched: random_sched(rng),
-                    batch_activations: rng.uniform() < 0.5,
-                    pool_floor: rng.below(4) as usize,
-                    faults: Default::default(),
-                },
+                SimConfig::default()
+                    .with_workers_per_node(1 + rng.below(4) as usize)
+                    .with_seed(rng.next_u64())
+                    .with_max_events(200_000_000)
+                    .with_record_polls(false)
+                    .with_sched(random_sched(rng))
+                    .with_batch_activations(rng.uniform() < 0.5)
+                    .with_pool_floor(rng.below(4) as usize),
                 CostModel::default_calibrated(),
                 random_migrate(rng),
                 0,
@@ -524,6 +521,293 @@ fn prop_policy_label_fromstr_round_trip() {
                 "lockless".parse::<SchedBackend>().is_err(),
                 "unknown backend spellings must be rejected"
             );
+            // `--steal-domains` labels round-trip too, including the
+            // short alias the CLI accepts.
+            for domains in [StealDomains::Flat, StealDomains::Hierarchical] {
+                let label = domains.label();
+                let parsed = label
+                    .parse::<StealDomains>()
+                    .map_err(|e| format!("label '{label}' did not parse: {e}"))?;
+                prop_assert!(
+                    parsed == domains,
+                    "label '{label}' round-tripped to {parsed:?}"
+                );
+            }
+            prop_assert!(
+                "hier".parse::<StealDomains>() == Ok(StealDomains::Hierarchical),
+                "'hier' is the accepted short spelling"
+            );
+            prop_assert!(
+                "nested".parse::<StealDomains>().is_err(),
+                "unknown domain spellings must be rejected"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// CLI-surface drift guard for `--topology`: every spec the code can
+/// print must parse back to the same topology, over random tier sizes
+/// and link parameters (mirrors the policy-label round-trip above) —
+/// and the tier map the parsed topology induces is sane: self is
+/// always nearest, tiers are symmetric and in range.
+#[test]
+fn prop_topology_label_round_trips() {
+    check(
+        "topology-label-roundtrip",
+        Config {
+            cases: 120,
+            max_size: 16,
+            seed: 0x7090,
+        },
+        |rng, _| {
+            let mut topo = Topology::flat();
+            if rng.uniform() < 0.8 {
+                let socket = 2 + rng.below(6) as u32;
+                topo.socket_size = socket;
+                if rng.uniform() < 0.5 {
+                    // Nesting constraint: racks are whole sockets.
+                    topo.rack_size = socket * (2 + rng.below(3) as u32);
+                }
+            }
+            if rng.uniform() < 0.7 {
+                topo.socket_lat_us = rng.uniform() * 10.0;
+            }
+            if rng.uniform() < 0.7 {
+                topo.socket_bw = 100.0 + rng.uniform() * 50_000.0;
+            }
+            if rng.uniform() < 0.5 {
+                topo.rack_lat_us = rng.uniform() * 20.0;
+            }
+            if rng.uniform() < 0.5 {
+                topo.rack_bw = 100.0 + rng.uniform() * 20_000.0;
+            }
+            if rng.uniform() < 0.5 {
+                topo.cluster_lat_us = rng.uniform() * 40.0;
+            }
+            if rng.uniform() < 0.5 {
+                topo.cluster_bw = 100.0 + rng.uniform() * 10_000.0;
+            }
+            let label = topo.label();
+            let parsed: Topology = label
+                .parse()
+                .map_err(|e| format!("label '{label}' did not parse: {e}"))?;
+            prop_assert!(
+                parsed == topo,
+                "label '{label}' round-tripped to {parsed:?}, wanted {topo:?}"
+            );
+            prop_assert!(
+                topo.is_flat() == (topo == Topology::flat()),
+                "is_flat must agree with equality against the default"
+            );
+            let n = 2 + rng.below(30) as usize;
+            for a in 0..n {
+                prop_assert!(parsed.tier_of(a, a) == 0, "self must be nearest");
+                for b in 0..n {
+                    let t = parsed.tier_of(a, b);
+                    prop_assert!(t < TIER_COUNT, "tier out of range");
+                    prop_assert!(
+                        t == parsed.tier_of(b, a),
+                        "tier_of must be symmetric ({a},{b})"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The tentpole's pricing contract from the other side: a topology
+/// whose tier links all equal the base link prices every pair exactly
+/// like the flat fabric, so the DES must be byte-identical between the
+/// two — same makespan, same event counts, same steal totals — over
+/// random geometries and policies. (The explicit `--topology flat`
+/// case is pinned by the engine's unit tests.)
+#[test]
+fn prop_uniform_topology_is_byte_identical_to_flat() {
+    check(
+        "uniform-topology-identical",
+        Config {
+            cases: 8,
+            max_size: 10,
+            seed: 0x70F1A7,
+        },
+        |rng, size| {
+            let params = CholeskyParams {
+                tiles: 4 + size as u32,
+                tile_size: 16,
+                nodes: 2 + rng.below(4) as u32,
+                dense_fraction: rng.uniform(),
+                seed: rng.next_u64(),
+                all_dense: false,
+            };
+            let mc = random_migrate(rng);
+            let seed = rng.next_u64();
+            let workers = 1 + rng.below(4) as usize;
+            let base = LinkModel::cluster();
+            let run = |topo: Topology| {
+                Simulator::new(
+                    Arc::new(CholeskyGraph::new(params.clone())),
+                    SimConfig::default()
+                        .with_workers_per_node(workers)
+                        .with_seed(seed)
+                        .with_max_events(200_000_000)
+                        .with_record_polls(false)
+                        .with_topology(topo),
+                    CostModel::default_calibrated(),
+                    mc,
+                    16,
+                )
+                .run()
+            };
+            let flat = run(Topology::flat());
+            let uniform = run(Topology::two_tier(2, base, base));
+            prop_assert!(
+                flat.makespan_us == uniform.makespan_us,
+                "makespan diverged: {} vs {}",
+                flat.makespan_us,
+                uniform.makespan_us
+            );
+            prop_assert!(
+                flat.events == uniform.events
+                    && flat.deliver_events == uniform.deliver_events,
+                "event counts diverged: {}/{} vs {}/{}",
+                flat.events,
+                flat.deliver_events,
+                uniform.events,
+                uniform.deliver_events
+            );
+            let (a, b) = (flat.total_steals(), uniform.total_steals());
+            prop_assert!(
+                a.requests_sent == b.requests_sent
+                    && a.successful_steals == b.successful_steals
+                    && a.tasks_migrated == b.tasks_migrated,
+                "steal totals diverged"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Builder-built configs are exactly their field assignments: random
+/// knob draws pushed through the chainable setters land verbatim in
+/// the public fields of every config type the API redesign touched,
+/// and both RunConfig projections carry the shared knobs through.
+/// (The exhaustive builder-vs-literal equivalences live in each
+/// module's own unit tests — the only literal sites left.)
+#[test]
+fn prop_builders_set_exactly_their_fields() {
+    use parsteal::config::RunConfig;
+    check(
+        "builders-set-fields",
+        Config {
+            cases: 60,
+            max_size: 8,
+            seed: 0xB111D,
+        },
+        |rng, _| {
+            let mc = random_migrate(rng);
+            let workers = 1 + rng.below(64) as usize;
+            let seed = rng.next_u64();
+            let sched = random_sched(rng);
+            let batch = rng.uniform() < 0.5;
+            let floor = rng.below(8) as usize;
+            let link = LinkModel {
+                latency_us: rng.uniform() * 20.0,
+                bw_bytes_per_us: 100.0 + rng.uniform() * 1e4,
+            };
+            let domains = if rng.uniform() < 0.5 {
+                StealDomains::Flat
+            } else {
+                StealDomains::Hierarchical
+            };
+            let topo = Topology::two_tier(2 + rng.below(6) as u32, link, LinkModel::cluster());
+
+            let sim = SimConfig::default()
+                .with_workers_per_node(workers)
+                .with_link(link)
+                .with_seed(seed)
+                .with_sched(sched)
+                .with_batch_activations(batch)
+                .with_pool_floor(floor)
+                .with_topology(topo)
+                .with_steal_domains(domains);
+            prop_assert!(
+                sim.workers_per_node == workers
+                    && sim.link == link
+                    && sim.seed == seed
+                    && sim.sched == sched
+                    && sim.batch_activations == batch
+                    && sim.pool_floor == floor
+                    && sim.topology == topo
+                    && sim.steal_domains == domains,
+                "SimConfig setters must land verbatim"
+            );
+
+            let cl = ClusterConfig::default()
+                .with_workers_per_node(workers)
+                .with_link(link)
+                .with_migrate(mc)
+                .with_seed(seed)
+                .with_sched(sched)
+                .with_batch_activations(batch)
+                .with_pool_floor(floor)
+                .with_topology(topo)
+                .with_steal_domains(domains);
+            prop_assert!(
+                cl.workers_per_node == workers
+                    && cl.link == link
+                    && cl.migrate == mc
+                    && cl.seed == seed
+                    && cl.sched == sched
+                    && cl.batch_activations == batch
+                    && cl.pool_floor == floor
+                    && cl.topology == topo
+                    && cl.steal_domains == domains,
+                "ClusterConfig setters must land verbatim"
+            );
+
+            let rc = RunConfig::default()
+                .with_workers_per_node(workers)
+                .with_link(link)
+                .with_migrate(mc)
+                .with_seed(seed)
+                .with_sched(sched)
+                .with_batch_activations(batch)
+                .with_pool_floor(floor)
+                .with_topology(topo)
+                .with_steal_domains(domains);
+            prop_assert!(
+                rc.workers_per_node == workers
+                    && rc.link == link
+                    && rc.migrate == mc
+                    && rc.seed == seed
+                    && rc.sched == sched
+                    && rc.batch_activations == batch
+                    && rc.pool_floor == floor
+                    && rc.topology == topo
+                    && rc.steal_domains == domains,
+                "RunConfig setters must land verbatim"
+            );
+            let sc = rc.sim_config();
+            prop_assert!(
+                sc.workers_per_node == workers
+                    && sc.link == link
+                    && sc.sched == sched
+                    && sc.topology == topo
+                    && sc.steal_domains == domains,
+                "sim_config must carry the shared knobs"
+            );
+            let cc = rc.cluster_config();
+            prop_assert!(
+                cc.workers_per_node == workers
+                    && cc.link == link
+                    && cc.migrate == mc
+                    && cc.sched == sched
+                    && cc.topology == topo
+                    && cc.steal_domains == domains,
+                "cluster_config must carry the shared knobs"
+            );
             Ok(())
         },
     );
@@ -683,17 +967,15 @@ fn prop_steal_protocol_heals_under_chaos() {
             mc.poll_interval_us = 15.0 + rng.uniform() * 30.0;
             let report = Simulator::new(
                 graph,
-                SimConfig {
-                    workers_per_node: 2 + rng.below(3) as usize,
-                    link: LinkModel::cluster(),
-                    seed: rng.next_u64(),
-                    max_events: 200_000_000,
-                    record_polls: false,
-                    sched: random_sched(rng),
-                    batch_activations: rng.uniform() < 0.5,
-                    pool_floor: rng.below(4) as usize,
-                    faults: plan,
-                },
+                SimConfig::default()
+                    .with_workers_per_node(2 + rng.below(3) as usize)
+                    .with_seed(rng.next_u64())
+                    .with_max_events(200_000_000)
+                    .with_record_polls(false)
+                    .with_sched(random_sched(rng))
+                    .with_batch_activations(rng.uniform() < 0.5)
+                    .with_pool_floor(rng.below(4) as usize)
+                    .with_faults(plan),
                 CostModel::default_calibrated(),
                 mc,
                 0,
@@ -745,20 +1027,13 @@ fn chaos_threaded_runtime_heals_exactly_once() {
             let total = g.total_tasks().unwrap();
             let r = Cluster::run(
                 g,
-                ClusterConfig {
-                    workers_per_node: 2,
-                    link: LinkModel::ideal(),
-                    migrate: MigrateConfig {
-                        poll_interval_us: 20.0,
-                        ..Default::default()
-                    },
-                    seed,
-                    record_polls: false,
-                    sched: backend,
-                    batch_activations: true,
-                    pool_floor: parsteal::sched::POOL_FLOOR,
-                    faults: spec.parse().unwrap(),
-                },
+                ClusterConfig::default()
+                    .with_workers_per_node(2)
+                    .with_migrate(MigrateConfig::default().with_poll_interval_us(20.0))
+                    .with_seed(seed)
+                    .with_record_polls(false)
+                    .with_sched(backend)
+                    .with_faults(spec.parse().unwrap()),
                 Arc::new(NullExecutor),
             );
             assert_eq!(
@@ -801,17 +1076,13 @@ fn prop_disabled_faults_never_perturb_the_des() {
             let run = |faults: FaultPlan| {
                 Simulator::new(
                     Arc::new(CholeskyGraph::new(params.clone())),
-                    SimConfig {
-                        workers_per_node: workers,
-                        link: LinkModel::cluster(),
-                        seed,
-                        max_events: 200_000_000,
-                        record_polls: false,
-                        sched: SchedBackend::Central,
-                        batch_activations: true,
-                        pool_floor: 2,
-                        faults,
-                    },
+                    SimConfig::default()
+                        .with_workers_per_node(workers)
+                        .with_seed(seed)
+                        .with_max_events(200_000_000)
+                        .with_record_polls(false)
+                        .with_pool_floor(2)
+                        .with_faults(faults),
                     CostModel::default_calibrated(),
                     mc,
                     16,
@@ -987,17 +1258,13 @@ fn prop_crash_recovery_exactly_once_among_survivors() {
             let run = || {
                 Simulator::new(
                     graph.clone(),
-                    SimConfig {
-                        workers_per_node: 2,
-                        link: LinkModel::cluster(),
-                        seed,
-                        max_events: 200_000_000,
-                        record_polls: false,
-                        sched: SchedBackend::Central,
-                        batch_activations: true,
-                        pool_floor: 2,
-                        faults: plan,
-                    },
+                    SimConfig::default()
+                        .with_workers_per_node(2)
+                        .with_seed(seed)
+                        .with_max_events(200_000_000)
+                        .with_record_polls(false)
+                        .with_pool_floor(2)
+                        .with_faults(plan),
                     CostModel::default_calibrated(),
                     mc,
                     16,
